@@ -1,0 +1,70 @@
+//! Microbenchmarks of the caching-allocator simulator — the L3 hot path.
+//! Used by EXPERIMENTS.md §Perf (replay throughput target: >= 10 M ops/s).
+
+use rlhf_mem::alloc::CachingAllocator;
+use rlhf_mem::bench::{bench, throughput};
+use rlhf_mem::util::bytes::{GIB, KIB, MIB};
+use rlhf_mem::util::prng::Rng;
+
+fn main() {
+    // 1. alloc/free ping-pong (cache hits).
+    let r = bench("alloc/free cache-hit pairs (x100k)", 1, 10, || {
+        let mut a = CachingAllocator::with_default_config(GIB);
+        for _ in 0..100_000 {
+            let h = a.alloc(64 * KIB).unwrap();
+            a.free(h);
+        }
+    });
+    println!("{}  -> {:.1} M ops/s", r.report(), throughput(&r, 200_000.0) / 1e6);
+
+    // 2. mixed-size steady state.
+    let r = bench("mixed sizes steady-state (x100k)", 1, 5, || {
+        let mut rng = Rng::seeded(7);
+        let mut a = CachingAllocator::with_default_config(8 * GIB);
+        let mut live = Vec::new();
+        for _ in 0..100_000 {
+            if live.is_empty() || rng.bernoulli(0.55) {
+                let sz = match rng.gen_range(4) {
+                    0 => rng.gen_range(4 * KIB) + 1,
+                    1 => rng.gen_range(900 * KIB) + KIB,
+                    2 => rng.gen_range(8 * MIB) + MIB,
+                    _ => rng.gen_range(64 * MIB) + 10 * MIB,
+                };
+                if let Ok(h) = a.alloc(sz) {
+                    live.push(h);
+                }
+            } else {
+                let i = rng.range_usize(0, live.len());
+                a.free(live.swap_remove(i));
+            }
+        }
+        for h in live.drain(..) {
+            a.free(h);
+        }
+    });
+    println!("{}  -> {:.1} M ops/s", r.report(), throughput(&r, 200_000.0) / 1e6);
+
+    // 3. empty_cache on a populated cache.
+    let r = bench("empty_cache (200 cached segments)", 1, 20, || {
+        let mut a = CachingAllocator::with_default_config(64 * GIB);
+        let hs: Vec<_> = (0..200).map(|_| a.alloc(32 * MIB).unwrap()).collect();
+        for h in hs {
+            a.free(h);
+        }
+        a.empty_cache();
+    });
+    println!("{}", r.report());
+
+    // 4. end-to-end scenario replay (the Table-1 inner loop).
+    use rlhf_mem::experiment::{run_trace, RTX3090_HBM};
+    use rlhf_mem::policy::EmptyCachePolicy;
+    use rlhf_mem::rlhf::sim::{build_trace, SimScenario};
+    use rlhf_mem::strategies::StrategyConfig;
+    let scn = SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), EmptyCachePolicy::Never);
+    let trace = build_trace(&scn);
+    let ops = trace.len() as f64;
+    let r = bench("replay DS/OPT all-enabled (3 steps)", 1, 5, || {
+        let _ = run_trace(&trace, RTX3090_HBM);
+    });
+    println!("{}  -> {:.1} M trace-ops/s", r.report(), throughput(&r, ops) / 1e6);
+}

@@ -1,0 +1,36 @@
+//! Bench for §3.3's placement ablation (E7): never / after-both /
+//! after-inference / after-training.
+
+use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::sim::SimScenario;
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::util::bytes::fmt_gib_paper;
+
+fn main() {
+    let mut results = Vec::new();
+    for policy in EmptyCachePolicy::ALL {
+        let mut scn = SimScenario::colossal_gpt2(StrategyConfig::zero3(), policy);
+        scn.steps = 3;
+        let res = run_scenario(&scn, RTX3090_HBM);
+        println!(
+            "{:<16} reserved {:>6} GiB  frag {:>6} GiB  (empty_cache calls: {})",
+            policy.name(),
+            fmt_gib_paper(res.summary.peak_reserved),
+            fmt_gib_paper(res.summary.frag),
+            res.summary.empty_cache_calls
+        );
+        results.push((policy, res.summary));
+    }
+    let get = |p: EmptyCachePolicy| results.iter().find(|(q, _)| *q == p).unwrap().1.clone();
+    let never = get(EmptyCachePolicy::Never);
+    let both = get(EmptyCachePolicy::AfterBoth);
+    let inf = get(EmptyCachePolicy::AfterInference);
+    // §3.3: after-inference ≈ after-both, both better than never.
+    assert!(both.peak_reserved <= never.peak_reserved);
+    assert!(inf.peak_reserved <= never.peak_reserved);
+    let gap = (inf.peak_reserved as f64 - both.peak_reserved as f64).abs()
+        / both.peak_reserved as f64;
+    assert!(gap < 0.15, "after_inference should be within 15% of after_both, gap {gap:.2}");
+    println!("empty_cache_ablation bench complete (orderings hold)");
+}

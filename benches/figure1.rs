@@ -1,0 +1,31 @@
+//! Bench/regeneration harness for **Figure 1** (E1, E9): the memory
+//! timeline of DeepSpeed-Chat/OPT with all strategies enabled; writes the
+//! CSV and asserts the paper's shape (peak in training; frag overhead in
+//! the tens of percent).
+
+use rlhf_mem::bench::bench;
+use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::sim::SimScenario;
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::util::bytes::fmt_bytes;
+
+fn main() {
+    let scn = SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), EmptyCachePolicy::Never);
+    let mut res = None;
+    let timing = bench("figure1 simulate+profile", 1, 5, || {
+        res = Some(run_scenario(&scn, RTX3090_HBM));
+    });
+    println!("{}", timing.report());
+    let res = res.unwrap();
+    let s = &res.summary;
+    println!("peak reserved        : {}", fmt_bytes(s.peak_reserved));
+    println!("reserved w/o frag    : {}", fmt_bytes(s.reserved_wo_frag()));
+    println!("frag overhead        : {} (+{:.0}%)", fmt_bytes(s.fig1_frag()), s.frag_overhead_ratio() * 100.0);
+    println!("peak phase           : {}", s.peak_phase.name());
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/figure1.csv", res.profiler.timeline.to_csv()).unwrap();
+    println!("timeline -> target/bench-results/figure1.csv ({} points)", res.profiler.timeline.points().len());
+    assert!(s.frag_overhead_ratio() > 0.08, "frag overhead must be substantial");
+    println!("figure1 bench complete");
+}

@@ -1,0 +1,46 @@
+//! Bench/regeneration harness for **Table 2** (E5): None vs ZeRO-3 on a
+//! 4xA100-80G node for OPT-1.3b / OPT-6.7b / Llama-2-7b (full fine-tune).
+
+use rlhf_mem::bench::bench;
+use rlhf_mem::experiment::A100_HBM;
+use rlhf_mem::mem::ModelArch;
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::report::paper::{paper_table2, render_rows, StrategyRow};
+use rlhf_mem::rlhf::cost::GpuSpec;
+use rlhf_mem::rlhf::models::RlhfModelSet;
+use rlhf_mem::rlhf::sim::SimScenario;
+use rlhf_mem::strategies::StrategyConfig;
+
+fn main() {
+    for arch_name in ["opt-1.3b", "opt-6.7b", "llama-2-7b"] {
+        let arch = ModelArch::by_name(arch_name).unwrap();
+        let mut rows = Vec::new();
+        for (label, strat) in [
+            ("None", StrategyConfig::none()),
+            ("ZeRO-3", StrategyConfig::zero3()),
+        ] {
+            let mut scn = SimScenario::colossal_opt(strat, EmptyCachePolicy::Never);
+            scn.models = RlhfModelSet {
+                policy_arch: arch.clone(),
+                value_arch: ModelArch::opt_350m(),
+            };
+            scn.framework.prompt_len = 256;
+            scn.framework.gen_len = 256;
+            scn.framework.rollout_batch = 64;
+            scn.framework.infer_micro_batch = 8;
+            scn.framework.train_micro_batch = 4;
+            scn.gpu = GpuSpec::a100_80g();
+            let mut row = None;
+            let timing = bench(&format!("table2 {arch_name}/{label}"), 0, 2, || {
+                row = Some(StrategyRow::measure(label, &scn, A100_HBM));
+            });
+            println!("{}", timing.report());
+            rows.push(row.unwrap());
+        }
+        println!("\n{}", render_rows(&format!("{arch_name} (4xA100-80G)"), &rows));
+    }
+    println!("paper reference:");
+    for (model, strat, v) in paper_table2() {
+        println!("  {model:<12} {strat:<8} {:>5.1} {:>5.1} {:>5.1} | {:>5.1} {:>5.1}", v[0], v[1], v[2], v[3], v[4]);
+    }
+}

@@ -1,0 +1,28 @@
+//! Quickstart: simulate one PPO step of DeepSpeed-Chat/OPT on a 24 GiB
+//! GPU, print the memory summary and the Figure-1-style timeline, then
+//! show the effect of the paper's `empty_cache()` mitigation.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::sim::SimScenario;
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::util::bytes::fmt_bytes;
+
+fn main() {
+    for policy in [EmptyCachePolicy::Never, EmptyCachePolicy::AfterInference] {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), policy);
+        scn.steps = 2;
+        let res = run_scenario(&scn, RTX3090_HBM);
+        let s = &res.summary;
+        println!("== policy: {} ==", policy.name());
+        println!("  peak reserved : {}", fmt_bytes(s.peak_reserved));
+        println!("  fragmentation : {}", fmt_bytes(s.frag));
+        println!("  peak allocated: {}", fmt_bytes(s.peak_allocated));
+        println!("  peak phase    : {}\n", s.peak_phase.name());
+    }
+    let scn = SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), EmptyCachePolicy::Never);
+    let res = run_scenario(&scn, RTX3090_HBM);
+    println!("{}", res.profiler.timeline.ascii_chart(100, 12));
+}

@@ -1,0 +1,44 @@
+//! **End-to-end driver (E10)**: real PPO training of a small transformer
+//! through the full three-layer stack — Rust coordinator -> PJRT -> AOT
+//! HLO from JAX (L2) with the Pallas attention kernel variant available
+//! (L1). Generation, scoring, synthetic preference reward, GAE and the
+//! fused train step all run from Rust; Python is never on this path.
+//!
+//! Run: `make artifacts && cargo run --release --example rlhf_train -- [iters]`
+//! Writes `rlhf_train_curve.csv`; the run is recorded in EXPERIMENTS.md.
+
+use rlhf_mem::rlhf::real::{PpoConfig, RealPpoTrainer};
+use rlhf_mem::runtime::{KernelVariant, RlhfEngine};
+
+fn main() {
+    let iters: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let engine = RlhfEngine::load("artifacts", "opt-nano", KernelVariant::Jnp)
+        .expect("run `make artifacts` first");
+    println!(
+        "opt-nano: {} params, batch {}, seq {} ({} prompt)",
+        engine.manifest.num_params, engine.manifest.batch, engine.manifest.max_seq,
+        engine.manifest.prompt
+    );
+    let mut trainer = RealPpoTrainer::new(engine, PpoConfig::default());
+    for _ in 0..iters {
+        let s = trainer.step().expect("ppo step");
+        if s.iter % 5 == 0 || s.iter <= 3 {
+            println!(
+                "iter {:>4}  reward {:>7.3}  kl {:>7.4}  pg {:>8.4}  vf {:>8.4}  ent {:>6.3}",
+                s.iter, s.mean_reward, s.mean_kl, s.policy_loss, s.value_loss, s.entropy
+            );
+        }
+    }
+    std::fs::write("rlhf_train_curve.csv", trainer.history_csv()).unwrap();
+    let k = trainer.history.len().min(10);
+    let first: f32 = trainer.history[..k].iter().map(|h| h.mean_reward).sum::<f32>() / k as f32;
+    let last: f32 = trainer.history[trainer.history.len() - k..].iter().map(|h| h.mean_reward).sum::<f32>() / k as f32;
+    println!("\nmean reward first-{k}: {first:.3}   last-{k}: {last:.3}");
+    println!("curve -> rlhf_train_curve.csv");
+    if last > first {
+        println!("OK: reward improved (policy aligned to the synthetic preference)");
+    }
+}

@@ -1,0 +1,36 @@
+//! Table-1 regeneration (E2–E4) as a library-API walkthrough: sweep every
+//! memory-management strategy on DeepSpeed-Chat/OPT, print the paper-style
+//! table, and check the paper's §3.2 insights hold.
+//!
+//! Run: `cargo run --release --example strategy_sweep`
+
+use rlhf_mem::experiment::RTX3090_HBM;
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::report::paper::{render_rows, StrategyRow};
+use rlhf_mem::rlhf::sim::SimScenario;
+use rlhf_mem::strategies::StrategyConfig;
+
+fn main() {
+    let mut rows = Vec::new();
+    for (label, strat) in StrategyConfig::table1_deepspeed_rows() {
+        let scn = SimScenario::deepspeed_opt(strat, EmptyCachePolicy::Never);
+        rows.push(StrategyRow::measure(label, &scn, RTX3090_HBM));
+    }
+    println!("{}", render_rows("DeepSpeed-Chat / OPT (simulated 4x24 GiB)", &rows));
+
+    let by = |name: &str| rows.iter().find(|r| r.strategy == name).unwrap();
+    let none = by("None");
+    let z1 = by("ZeRO-1");
+    let z3 = by("ZeRO-3");
+    // §3.2 insights:
+    assert!(z1.original.peak_reserved < none.original.peak_reserved, "ZeRO-1 stably reduces memory");
+    assert!(z3.original.frag > none.original.frag, "ZeRO-3 increases fragmentation");
+    assert!(z3.original.peak_allocated < z1.original.peak_allocated, "ZeRO-3 allocates least");
+    for r in &rows {
+        assert!(
+            r.with_empty_cache.peak_reserved <= r.original.peak_reserved + (1 << 28),
+            "empty_cache must not blow up reserved ({})", r.strategy
+        );
+    }
+    println!("OK: §3.2 orderings hold");
+}

@@ -1,0 +1,184 @@
+"""AOT lowering: JAX functions -> HLO *text* artifacts + a JSON manifest.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts (per architecture, default `opt-nano`):
+  {arch}.score.jnp.hlo.txt      scoring pass (logprobs + values)
+  {arch}.score.pallas.hlo.txt   same, attention via the Pallas kernel
+  {arch}.decode.jnp.hlo.txt     one KV-cache generation step
+  {arch}.train.jnp.hlo.txt      one fused PPO train step (grads + Adam)
+  {arch}.init.npz               initial parameter/optimizer values
+  {arch}.manifest.json          shapes/arg-order contract for the runtime
+
+The Pallas variant exists for the forward paths only: `pallas_call` has no
+automatic VJP, so the train step (which differentiates through attention)
+always uses the jnp oracle path — the tests assert the two forwards are
+numerically identical, so the trained model is the same model.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--arch opt-nano]
+       [--batch 4] [--prompt 32]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def build_artifacts(arch: str, batch: int, prompt: int, out_dir: str,
+                    with_pallas: bool = True, seed: int = 0, lr: float = 1e-3):
+    cfg = M.config_by_name(arch)
+    seq = cfg.max_seq
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    leaves = M.params_to_list(cfg, params)
+    zeros = [jnp.zeros_like(x) for x in leaves]
+    n_leaves = len(leaves)
+
+    os.makedirs(out_dir, exist_ok=True)
+    written = {}
+
+    def emit(name, fn, example_args):
+        lowered = jax.jit(fn).lower(*[spec_of(a) for a in example_args])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{arch}.{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written[name] = os.path.basename(path)
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    tokens = jnp.zeros((batch, seq), dtype=jnp.int32)
+    maskf = jnp.zeros((batch, seq), dtype=jnp.float32)
+    scored = jnp.zeros((batch, seq - 1), dtype=jnp.float32)
+    values = jnp.zeros((batch, seq), dtype=jnp.float32)
+    step = jnp.zeros((), dtype=jnp.float32)
+    token1 = jnp.zeros((batch,), dtype=jnp.int32)
+    pos = jnp.zeros((), dtype=jnp.int32)
+    kv = M.init_kv(cfg, batch)
+
+    # --- score ---
+    def score_jnp(*args):
+        lv = list(args[:n_leaves])
+        t = args[n_leaves]
+        p = M.list_to_params(cfg, lv)
+        return M.score_fn(cfg, p, t, use_pallas=False)
+
+    emit("score.jnp", score_jnp, leaves + [tokens])
+    if with_pallas:
+        def score_pallas(*args):
+            lv = list(args[:n_leaves])
+            t = args[n_leaves]
+            p = M.list_to_params(cfg, lv)
+            return M.score_fn(cfg, p, t, use_pallas=True)
+
+        emit("score.pallas", score_pallas, leaves + [tokens])
+
+    # --- decode ---
+    def decode(*args):
+        lv = list(args[:n_leaves])
+        kv_, tok_, pos_ = args[n_leaves], args[n_leaves + 1], args[n_leaves + 2]
+        p = M.list_to_params(cfg, lv)
+        return M.decode_step(cfg, p, kv_, tok_, pos_)
+
+    emit("decode.jnp", decode, leaves + [kv, token1, pos])
+
+    # --- train ---
+    def train(*args):
+        lv = list(args[:n_leaves])
+        m = list(args[n_leaves:2 * n_leaves])
+        v = list(args[2 * n_leaves:3 * n_leaves])
+        (step_, tokens_, mask_, olp_, ov_, adv_, ret_) = args[3 * n_leaves:]
+        out = M.train_step(cfg, lv, m, v, step_, tokens_, mask_, olp_, ov_,
+                           adv_, ret_, use_pallas=False, lr=lr)
+        new_leaves, new_m, new_v, pg, vf, ent = out
+        return tuple(new_leaves) + tuple(new_m) + tuple(new_v) + (pg, vf, ent)
+
+    emit(
+        "train.jnp",
+        train,
+        leaves + zeros + zeros + [step, tokens, maskf, scored, values, scored, scored],
+    )
+
+    # --- initial values ---
+    order = M.param_order(cfg)
+    np.savez(
+        os.path.join(out_dir, f"{arch}.init.npz"),
+        **{n: np.asarray(x) for n, x in zip(order, leaves)},
+    )
+    print(f"  wrote {arch}.init.npz")
+
+    # --- manifest ---
+    manifest = {
+        "arch": arch,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "ffn": cfg.ffn,
+            "max_seq": cfg.max_seq,
+        },
+        "batch": batch,
+        "prompt": prompt,
+        "num_params": int(sum(int(np.prod(x.shape)) for x in leaves)),
+        "leaves": [
+            {"name": n, "shape": list(x.shape), "dtype": str(x.dtype)}
+            for n, x in zip(order, leaves)
+        ],
+        "kv_shape": list(kv.shape),
+        "artifacts": written,
+        "signatures": {
+            "score": {"args": f"{n_leaves} leaves + tokens[i32 {batch}x{seq}]",
+                      "outs": ["logprobs", "values"]},
+            "decode": {"args": f"{n_leaves} leaves + kv + token[i32 {batch}] + pos[i32]",
+                       "outs": ["logits", "kv"]},
+            "train": {"args": f"3x{n_leaves} leaves + step + tokens + mask + "
+                              "old_logprobs + old_values + advantages + returns",
+                      "outs": f"3x{n_leaves} leaves + pg + vf + ent"},
+        },
+    }
+    with open(os.path.join(out_dir, f"{arch}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {arch}.manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--arch", default="opt-nano")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="skip the (slow-to-trace) pallas score variant")
+    ap.add_argument("--lr", type=float, default=1e-3,
+                    help="Adam learning rate baked into the train artifact")
+    args = ap.parse_args()
+    print(f"AOT-lowering {args.arch} (batch={args.batch}, lr={args.lr})...")
+    build_artifacts(args.arch, args.batch, args.prompt, args.out_dir,
+                    with_pallas=not args.no_pallas, lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

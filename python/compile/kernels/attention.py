@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: fused causal attention with online softmax.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hot spot
+runs on CUDA GPUs; on TPU the same insight (never materialize the [s, s]
+score matrix in main memory) becomes VMEM tiling: Q is blocked `block_q`
+rows at a time, K/V stream through VMEM in `block_k` columns, and a running
+(max, sum, acc) triple implements the online softmax. BlockSpec index maps
+express the HBM->VMEM schedule a CUDA kernel would express with
+threadblocks. MXU-friendly shapes (multiples of 8/128) are chosen by
+`pick_blocks`.
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (same numerics, same
+blocking structure). Real-TPU performance is estimated in DESIGN.md from
+the VMEM footprint + MXU utilization of these block shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def pick_blocks(seq: int, head_dim: int):
+    """Choose (block_q, block_k) for a sequence length.
+
+    Aim: both tiles + accumulator fit comfortably in ~16 MiB VMEM while
+    keeping the MXU busy (≥8 rows, ideally 128-multiples).
+    """
+    def pick(n):
+        for cand in (128, 64, 32, 16, 8):
+            if n % cand == 0:
+                return cand
+        return n
+    bq = pick(seq)
+    bk = pick(seq)
+    # VMEM estimate: q (bq*d) + k,v (bk*d each) + acc (bq*d) + scores (bq*bk),
+    # all fp32 in the worst case.
+    vmem = 4 * (2 * bq * head_dim + 2 * bk * head_dim + bq * bk)
+    assert vmem < 16 * 2**20, f"block choice exceeds VMEM: {vmem}"
+    return bq, bk
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, seq):
+    """One (head, q-block) program: stream K/V blocks, online softmax."""
+    q_block = q_ref[...].astype(jnp.float32) * scale  # [bq, d]
+    bq, d = q_block.shape
+    q_index = pl.program_id(1)  # which q block
+    q_positions = q_index * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    def body(start, carry):
+        acc, m_prev, l_prev = carry
+        k_block = pl.load(k_ref, (pl.dslice(start * block_k, block_k), slice(None)))
+        v_block = pl.load(v_ref, (pl.dslice(start * block_k, block_k), slice(None)))
+        s = q_block @ k_block.astype(jnp.float32).T  # [bq, bk]
+        k_positions = start * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1
+        )
+        causal = q_positions >= k_positions
+        s = jnp.where(causal, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v_block.astype(jnp.float32)
+        return acc, m_cur, l_cur
+
+    n_k_blocks = seq // block_k
+    acc = jnp.zeros((bq, d), dtype=jnp.float32)
+    m0 = jnp.full((bq, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_k_blocks, body, (acc, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def causal_attention(q, k, v, block_q=None, block_k=None):
+    """Fused causal attention. q, k, v: [heads, seq, head_dim]."""
+    h, s, d = q.shape
+    bq_auto, bk_auto = pick_blocks(s, d)
+    bq = block_q or bq_auto
+    bk = block_k or bk_auto
+    assert s % bq == 0 and s % bk == 0, f"{s} % ({bq},{bk})"
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, block_k=bk, seq=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, s // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)
+
+
+def vmem_bytes(seq: int, head_dim: int, block_q=None, block_k=None) -> int:
+    """VMEM footprint estimate for DESIGN.md's §Perf table."""
+    bq_a, bk_a = pick_blocks(seq, head_dim)
+    bq = block_q or bq_a
+    bk = block_k or bk_a
+    return 4 * (2 * bq * head_dim + 2 * bk * head_dim + bq * bk)
+
+
+def mxu_utilization_estimate(seq: int, head_dim: int, block_q=None, block_k=None) -> float:
+    """Fraction of each MXU pass doing useful work (128x128 systolic array):
+    product of dimension fill ratios for the two matmuls of one block step.
+    """
+    bq_a, bk_a = pick_blocks(seq, head_dim)
+    bq = block_q or bq_a
+    bk = block_k or bk_a
+
+    def fill(n):
+        return min(n, 128) / 128.0
+
+    # QK^T: [bq, d] @ [d, bk]; PV: [bq, bk] @ [bk, d].
+    qk = fill(bq) * fill(head_dim) * fill(bk)
+    pv = fill(bq) * fill(bk) * fill(head_dim)
+    return (qk + pv) / 2.0

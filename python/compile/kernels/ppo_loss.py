@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: fused PPO clipped-surrogate + value losses.
+
+Fuses exp/ratio/clip/max and the masked reduction into one VMEM pass per
+[batch, seq] tile instead of materializing five intermediate [b, s] arrays
+(ratio, unclipped, clipped, per-token, masked) in HBM — the same
+"don't round-trip intermediates" insight the attention kernel applies,
+relevant here because the PPO loss runs on every micro-batch of every PPO
+epoch. interpret=True (see attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ppo_kernel(lp_ref, old_ref, adv_ref, mask_ref, num_ref, den_ref, *, clip):
+    lp = lp_ref[...].astype(jnp.float32)
+    old = old_ref[...].astype(jnp.float32)
+    adv = adv_ref[...].astype(jnp.float32)
+    mask = mask_ref[...].astype(jnp.float32)
+    ratio = jnp.exp(lp - old)
+    unclipped = -adv * ratio
+    clipped = -adv * jnp.clip(ratio, 1.0 - clip, 1.0 + clip)
+    per_token = jnp.maximum(unclipped, clipped) * mask
+    num_ref[0, 0] = per_token.sum()
+    den_ref[0, 0] = mask.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("clip",))
+def ppo_loss(logprobs, old_logprobs, advantages, mask, clip=0.2):
+    """Fused PPO policy loss. Inputs [b, s] -> scalar masked mean."""
+    b, s = logprobs.shape
+    kernel = functools.partial(_ppo_kernel, clip=clip)
+    num, den = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((b, s), lambda i: (0, 0))] * 4,
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(logprobs, old_logprobs, advantages, mask)
+    return (num / jnp.maximum(den, 1.0))[0, 0]
+
+
+def _value_kernel(v_ref, ov_ref, ret_ref, mask_ref, num_ref, den_ref, *, clip):
+    v = v_ref[...].astype(jnp.float32)
+    ov = ov_ref[...].astype(jnp.float32)
+    ret = ret_ref[...].astype(jnp.float32)
+    mask = mask_ref[...].astype(jnp.float32)
+    vc = ov + jnp.clip(v - ov, -clip, clip)
+    per_token = jnp.maximum((v - ret) ** 2, (vc - ret) ** 2) * mask
+    num_ref[0, 0] = per_token.sum()
+    den_ref[0, 0] = mask.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("clip",))
+def value_loss(values, old_values, returns, mask, clip=0.2):
+    """Fused clipped value loss. Inputs [b, s] -> scalar."""
+    b, s = values.shape
+    kernel = functools.partial(_value_kernel, clip=clip)
+    num, den = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((b, s), lambda i: (0, 0))] * 4,
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(values, old_values, returns, mask)
+    return 0.5 * (num / jnp.maximum(den, 1.0))[0, 0]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel in this package must
+match its oracle to float tolerance under pytest + hypothesis sweeps
+(python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v, scale=None):
+    """Reference causal attention.
+
+    q, k, v: [heads, seq, head_dim] (single example; vmap for batch).
+    Returns [heads, seq, head_dim].
+    """
+    _, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    logits = jnp.einsum(
+        "hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, :, :], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ppo_loss_ref(logprobs, old_logprobs, advantages, mask, clip=0.2):
+    """Reference PPO clipped-surrogate policy loss (per-token, masked mean).
+
+    All inputs [batch, seq] float32; mask selects response tokens.
+    Returns scalar loss.
+    """
+    ratio = jnp.exp(logprobs - old_logprobs)
+    unclipped = -advantages * ratio
+    clipped = -advantages * jnp.clip(ratio, 1.0 - clip, 1.0 + clip)
+    per_token = jnp.maximum(unclipped, clipped)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (per_token * mask).sum() / denom
+
+
+def value_loss_ref(values, old_values, returns, mask, clip=0.2):
+    """Reference clipped value loss (DeepSpeed-Chat style)."""
+    clipped_values = old_values + jnp.clip(values - old_values, -clip, clip)
+    l1 = (values - returns) ** 2
+    l2 = (clipped_values - returns) ** 2
+    per_token = jnp.maximum(l1, l2)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return 0.5 * (per_token * mask).sum() / denom

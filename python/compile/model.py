@@ -1,0 +1,271 @@
+"""L2: the RLHF model in JAX — an OPT-style pre-LN transformer with a tied
+LM head and a scalar value head (shared actor-critic backbone), its PPO
+train step (loss + grads + Adam, all in one jitted graph), and a KV-cache
+decode step for generation.
+
+Everything here is build-time only: `aot.py` lowers these functions to HLO
+text once; the Rust runtime loads and executes the artifacts. The attention
+hot spot calls the L1 Pallas kernel (`use_pallas=True`) or the jnp oracle
+(`use_pallas=False`) — both lower to plain HLO; numerics are identical
+(tests assert this) and the jnp path is faster under the CPU backend, so it
+is the default for the long end-to-end runs.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import ppo_loss as loss_kernel
+from .kernels import ref as kref
+
+
+class ModelConfig(NamedTuple):
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    ffn: int = 1024
+    max_seq: int = 96
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+def config_by_name(name: str) -> ModelConfig:
+    """Mirrors rust/src/mem/arch.rs presets (seq shortened for CPU speed)."""
+    if name == "opt-nano":
+        return ModelConfig(512, 256, 4, 8, 1024, 96)
+    if name == "opt-tiny":
+        return ModelConfig(8192, 512, 8, 8, 2048, 96)
+    if name == "opt-110m":
+        return ModelConfig(32768, 768, 12, 12, 3072, 96)
+    raise ValueError(f"unknown config {name}")
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize parameters as a flat dict (stable iteration order)."""
+    keys = jax.random.split(key, 4 + 8 * cfg.n_layers)
+    ki = iter(keys)
+    s = 0.02
+    p = {
+        "tok_emb": jax.random.normal(next(ki), (cfg.vocab, cfg.d_model)) * s,
+        "pos_emb": jax.random.normal(next(ki), (cfg.max_seq, cfg.d_model)) * s,
+        "final_ln_w": jnp.ones((cfg.d_model,)),
+        "final_ln_b": jnp.zeros((cfg.d_model,)),
+        "v_head": jax.random.normal(next(ki), (cfg.d_model,)) * s,
+    }
+    for l in range(cfg.n_layers):
+        p[f"l{l}.ln1_w"] = jnp.ones((cfg.d_model,))
+        p[f"l{l}.ln1_b"] = jnp.zeros((cfg.d_model,))
+        p[f"l{l}.wqkv"] = jax.random.normal(next(ki), (cfg.d_model, 3 * cfg.d_model)) * s
+        p[f"l{l}.wo"] = jax.random.normal(next(ki), (cfg.d_model, cfg.d_model)) * s
+        p[f"l{l}.ln2_w"] = jnp.ones((cfg.d_model,))
+        p[f"l{l}.ln2_b"] = jnp.zeros((cfg.d_model,))
+        p[f"l{l}.w1"] = jax.random.normal(next(ki), (cfg.d_model, cfg.ffn)) * s
+        p[f"l{l}.w2"] = jax.random.normal(next(ki), (cfg.ffn, cfg.d_model)) * s
+    return p
+
+
+def param_order(cfg: ModelConfig):
+    """Deterministic leaf order shared with the Rust runtime manifest."""
+    names = ["tok_emb", "pos_emb", "final_ln_w", "final_ln_b", "v_head"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"l{l}.ln1_w", f"l{l}.ln1_b", f"l{l}.wqkv", f"l{l}.wo",
+            f"l{l}.ln2_w", f"l{l}.ln2_b", f"l{l}.w1", f"l{l}.w2",
+        ]
+    return names
+
+
+def params_to_list(cfg, params):
+    return [params[n] for n in param_order(cfg)]
+
+
+def list_to_params(cfg, leaves):
+    return dict(zip(param_order(cfg), leaves))
+
+
+def num_params(cfg: ModelConfig) -> int:
+    key = jax.random.PRNGKey(0)
+    p = init_params(cfg, key)
+    return sum(int(x.size) for x in p.values())
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _ln(x, w, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * w + b
+
+
+def _attention(q, k, v, use_pallas: bool):
+    """q,k,v: [b, h, s, hd] -> [b, h, s, hd], causal."""
+    if use_pallas:
+        return jax.vmap(attn_kernel.causal_attention)(q, k, v)
+    return jax.vmap(kref.causal_attention_ref)(q, k, v)
+
+
+def forward(cfg: ModelConfig, params, tokens, use_pallas=False):
+    """tokens [b, s] int32 -> (logits [b, s, vocab], values [b, s])."""
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s][None, :, :]
+    for l in range(cfg.n_layers):
+        h = _ln(x, params[f"l{l}.ln1_w"], params[f"l{l}.ln1_b"])
+        qkv = h @ params[f"l{l}.wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+        ctx = _attention(heads(q), heads(k), heads(v), use_pallas)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + ctx @ params[f"l{l}.wo"]
+        h = _ln(x, params[f"l{l}.ln2_w"], params[f"l{l}.ln2_b"])
+        x = x + jax.nn.gelu(h @ params[f"l{l}.w1"]) @ params[f"l{l}.w2"]
+    x = _ln(x, params["final_ln_w"], params["final_ln_b"])
+    logits = x @ params["tok_emb"].T  # tied head
+    values = x @ params["v_head"]
+    return logits, values
+
+
+def token_logprobs(logits, tokens):
+    """Per-token logprob of the NEXT token: [b, s] -> [b, s-1]."""
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    return jnp.take_along_axis(lp, tokens[:, 1:, None], axis=-1)[..., 0]
+
+
+def score_fn(cfg: ModelConfig, params, tokens, use_pallas=False):
+    """Scoring pass: (logprobs [b, s-1], values [b, s])."""
+    logits, values = forward(cfg, params, tokens, use_pallas)
+    return token_logprobs(logits, tokens), values
+
+
+# ---------------------------------------------------------------------------
+# Decode step (generation) — fixed-size KV cache, dynamic position
+# ---------------------------------------------------------------------------
+
+def init_kv(cfg: ModelConfig, batch: int):
+    """Zeroed KV cache: one [b, h, max_seq, hd] pair per layer, stacked."""
+    shape = (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    return jnp.zeros(shape, dtype=jnp.float32)
+
+
+def decode_step(cfg: ModelConfig, params, kv, token, pos):
+    """One autoregressive step.
+
+    kv:   [L, 2, b, h, S, hd] running cache
+    token:[b] int32 current input token
+    pos:  [] int32 its position
+    Returns (logits [b, vocab], new kv).
+    """
+    b = token.shape[0]
+    x = params["tok_emb"][token] + params["pos_emb"][pos]
+    x = x[:, None, :]  # [b, 1, d]
+    positions = jnp.arange(cfg.max_seq)
+    attn_mask = (positions <= pos)[None, None, :]  # [1, 1, S]
+    for l in range(cfg.n_layers):
+        h = _ln(x, params[f"l{l}.ln1_w"], params[f"l{l}.ln1_b"])
+        qkv = h @ params[f"l{l}.wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, 1, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)  # [b, h, 1, hd]
+        kv = jax.lax.dynamic_update_slice(
+            kv, k[None, None, :, :, :, :].astype(kv.dtype), (l, 0, 0, 0, pos, 0)
+        )
+        kv = jax.lax.dynamic_update_slice(
+            kv, v[None, None, :, :, :, :].astype(kv.dtype), (l, 1, 0, 0, pos, 0)
+        )
+        keys = kv[l, 0]    # [b, h, S, hd]
+        vals = kv[l, 1]
+        scale = 1.0 / (cfg.head_dim ** 0.5)
+        s_logits = jnp.einsum("bhqd,bhkd->bhqk", q, keys) * scale
+        s_logits = jnp.where(attn_mask[:, :, None, :], s_logits, -1e30)
+        probs = jax.nn.softmax(s_logits, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, vals)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, 1, cfg.d_model)
+        x = x + ctx @ params[f"l{l}.wo"]
+        h = _ln(x, params[f"l{l}.ln2_w"], params[f"l{l}.ln2_b"])
+        x = x + jax.nn.gelu(h @ params[f"l{l}.w1"]) @ params[f"l{l}.w2"]
+    x = _ln(x, params["final_ln_w"], params["final_ln_b"])
+    logits = (x @ params["tok_emb"].T)[:, 0, :]
+    # Keep the value head in the argument list (jax.jit drops unused args,
+    # which would break the runtime's fixed positional calling convention).
+    logits = logits + 0.0 * params["v_head"].sum()
+    return logits, kv
+
+
+# ---------------------------------------------------------------------------
+# PPO train step — loss + grads + Adam fused in one graph
+# ---------------------------------------------------------------------------
+
+def ppo_losses(cfg, params, batch, use_pallas=False, clip=0.2, vf_coef=1.0,
+               ent_coef=0.0):
+    """Combined PPO objective on a shared actor-critic backbone."""
+    tokens, mask, old_logprobs, old_values, advantages, returns = batch
+    logits, values = forward(cfg, params, tokens, use_pallas)
+    logprobs = token_logprobs(logits, tokens)
+    m = mask[:, 1:].astype(jnp.float32)
+    if use_pallas:
+        pg = loss_kernel.ppo_loss(logprobs, old_logprobs, advantages, m, clip=clip)
+        vf = loss_kernel.value_loss(
+            values[:, 1:], old_values[:, 1:], returns, m, clip=clip
+        )
+    else:
+        pg = kref.ppo_loss_ref(logprobs, old_logprobs, advantages, m, clip=clip)
+        vf = kref.value_loss_ref(
+            values[:, 1:], old_values[:, 1:], returns, m, clip=clip
+        )
+    # Entropy bonus (exploration): masked mean token entropy.
+    lp_all = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    ent = -(jnp.exp(lp_all) * lp_all).sum(-1)
+    ent = (ent * m).sum() / jnp.maximum(m.sum(), 1.0)
+    total = pg + vf_coef * vf - ent_coef * ent
+    return total, (pg, vf, ent)
+
+
+def adam_update(param, grad, m, v, step, lr=1e-4, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * grad
+    v = b2 * v + (1 - b2) * grad * grad
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    return param - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def train_step(cfg, leaves, m_leaves, v_leaves, step, tokens, mask,
+               old_logprobs, old_values, advantages, returns,
+               use_pallas=False, lr=1e-4):
+    """One PPO update over flat leaf lists (the AOT entry point).
+
+    Returns (new_leaves, new_m, new_v, policy_loss, value_loss, entropy).
+    """
+    params = list_to_params(cfg, leaves)
+    batch = (tokens, mask, old_logprobs, old_values, advantages, returns)
+
+    def loss_fn(p):
+        total, aux = ppo_losses(cfg, p, batch, use_pallas=use_pallas)
+        return total, aux
+
+    grads, (pg, vf, ent) = jax.grad(loss_fn, has_aux=True)(params)
+    order = param_order(cfg)
+    new_leaves, new_m, new_v = [], [], []
+    for name, leaf, gm, gv in zip(order, leaves, m_leaves, v_leaves):
+        g = grads[name]
+        nl, nm, nv = adam_update(leaf, g, gm, gv, step, lr=lr)
+        new_leaves.append(nl)
+        new_m.append(nm)
+        new_v.append(nv)
+    return new_leaves, new_m, new_v, pg, vf, ent

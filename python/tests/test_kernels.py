@@ -1,0 +1,141 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes and value distributions; assert_allclose against
+the pure-jnp references in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ppo_loss as L
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,s,d", [(1, 8, 16), (2, 32, 16), (4, 64, 32), (8, 128, 32)])
+def test_attention_matches_ref(h, s, d):
+    q, k, v = (rand(i, (h, s, d)) for i in range(3))
+    out = A.causal_attention(q, k, v)
+    ref = R.causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 16, 32, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([0.1, 1.0, 4.0]),
+)
+def test_attention_hypothesis_sweep(h, s, d, seed, scale):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q, k, v = (jax.random.normal(kk, (h, s, d)) * scale for kk in ks)
+    out = A.causal_attention(q, k, v)
+    ref = R.causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)
+
+
+def test_attention_is_causal():
+    # Future tokens must not influence earlier outputs.
+    h, s, d = 2, 16, 8
+    q, k, v = (rand(i, (h, s, d)) for i in range(3))
+    out1 = A.causal_attention(q, k, v)
+    k2 = k.at[:, -1, :].set(999.0)
+    v2 = v.at[:, -1, :].set(-999.0)
+    out2 = A.causal_attention(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(out1[:, -1], out2[:, -1])
+
+
+def test_attention_block_shapes_agree():
+    # Different (block_q, block_k) tilings must give identical numerics.
+    h, s, d = 2, 64, 16
+    q, k, v = (rand(i, (h, s, d)) for i in range(3))
+    base = A.causal_attention(q, k, v, block_q=64, block_k=64)
+    for bq in (8, 16, 32):
+        for bk in (16, 32):
+            out = A.causal_attention(q, k, v, block_q=bq, block_k=bk)
+            np.testing.assert_allclose(out, base, rtol=2e-5, atol=2e-5)
+
+
+def test_vmem_and_mxu_estimates():
+    assert A.vmem_bytes(128, 64) < 16 * 2**20
+    u = A.mxu_utilization_estimate(128, 64)
+    assert 0.0 < u <= 1.0
+    # Bigger blocks fill the MXU better.
+    assert A.mxu_utilization_estimate(128, 64) >= A.mxu_utilization_estimate(8, 8)
+
+
+# ---------------------------------------------------------------------------
+# ppo loss
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([7, 16, 33]),
+    seed=st.integers(0, 2**16),
+)
+def test_ppo_loss_hypothesis(b, s, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    lp = jax.random.normal(ks[0], (b, s)) * 0.1 - 3.0
+    old = lp + jax.random.normal(ks[1], (b, s)) * 0.05
+    adv = jax.random.normal(ks[2], (b, s))
+    mask = (jax.random.uniform(ks[3], (b, s)) > 0.3).astype(jnp.float32)
+    out = L.ppo_loss(lp, old, adv, mask)
+    ref = R.ppo_loss_ref(lp, old, adv, mask)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([7, 16, 33]),
+    seed=st.integers(0, 2**16),
+)
+def test_value_loss_hypothesis(b, s, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    v = jax.random.normal(ks[0], (b, s))
+    ov = v + jax.random.normal(ks[1], (b, s)) * 0.1
+    ret = jax.random.normal(ks[2], (b, s))
+    mask = (jax.random.uniform(ks[3], (b, s)) > 0.3).astype(jnp.float32)
+    out = L.value_loss(v, ov, ret, mask)
+    ref = R.value_loss_ref(v, ov, ret, mask)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_ppo_loss_all_masked_is_finite():
+    z = jnp.zeros((2, 8))
+    out = L.ppo_loss(z, z, z, z)
+    assert np.isfinite(float(out))
+    assert float(out) == 0.0
+
+
+def test_ppo_loss_clip_engages():
+    # Large ratio with negative advantage: clipping must bound the loss.
+    lp = jnp.full((1, 4), 0.0)
+    old = jnp.full((1, 4), -2.0)  # ratio = e^2 ~ 7.4
+    adv = jnp.full((1, 4), -1.0)
+    mask = jnp.ones((1, 4))
+    out = float(L.ppo_loss(lp, old, adv, mask))
+    ref = float(R.ppo_loss_ref(lp, old, adv, mask))
+    assert abs(out - ref) < 1e-5
+    # max(-adv*ratio, -adv*clip) with adv=-1: max(ratio, 1.2) = 7.38...
+    assert out > 7.0

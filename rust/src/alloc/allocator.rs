@@ -1,0 +1,890 @@
+//! The caching allocator — a faithful reimplementation of PyTorch's
+//! `CUDACachingAllocator` algorithm over the simulated driver.
+//!
+//! Semantics implemented (see DESIGN.md §6):
+//! * 512 B request rounding; small (≤1 MiB) vs large pools;
+//! * segment sizing: 2 MiB small buffers, 20 MiB large buffers, exact
+//!   2 MiB-rounded segments for ≥10 MiB requests;
+//! * best-fit from the pool with PyTorch's split rules (remainder ≥512 B
+//!   small / >1 MiB large; `max_split_size` blocks splitting and bounds
+//!   which cached blocks may serve small requests);
+//! * `free` coalesces with free neighbours within the segment;
+//! * driver OOM triggers release of all cached (fully-free) segments and a
+//!   retry before surfacing the error;
+//! * `empty_cache()` returns every fully-free segment to the driver;
+//! * stats + event stream per the paper's Appendix B definitions.
+
+use super::block::{Block, BlockId, BlockSlab, BlockState, NO_BLOCK};
+use super::config::{AllocatorConfig, PoolKind};
+use super::driver::{DriverOom, SegmentId, SimDriver};
+use super::pool::BlockPool;
+use super::stats::{AllocEvent, AllocObserver, AllocStats, PhaseTag, StatSnapshot};
+use std::cell::RefCell;
+use crate::util::fasthash::FastMap;
+use std::rc::Rc;
+
+/// Opaque user handle to a live allocation (a "tensor").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AllocId(pub u64);
+
+/// Error from [`CachingAllocator::alloc`].
+#[derive(Debug, thiserror::Error)]
+pub enum AllocError {
+    #[error("{0}; allocator state: reserved={reserved} allocated={allocated} cached={cached}",
+            reserved = .1.reserved, allocated = .1.allocated, cached = .1.reserved - .1.allocated)]
+    Oom(#[source] DriverOom, StatSnapshot),
+}
+
+type SharedObserver = Rc<RefCell<dyn AllocObserver>>;
+
+/// The allocator. Single-stream (RLHF phases are serialized; see paper
+/// Appendix A), one instance per simulated GPU.
+pub struct CachingAllocator {
+    cfg: AllocatorConfig,
+    driver: SimDriver,
+    slab: BlockSlab,
+    small: BlockPool,
+    large: BlockPool,
+    /// Live user allocations.
+    live: FastMap<u64, BlockId>,
+    next_handle: u64,
+    /// Head block of each live segment (offset 0; stable across split and
+    /// coalesce because merges fold into the earlier block).
+    seg_heads: FastMap<SegmentId, BlockId>,
+    stats: AllocStats,
+    phase: PhaseTag,
+    observer: Option<SharedObserver>,
+}
+
+impl CachingAllocator {
+    pub fn new(capacity: u64, cfg: AllocatorConfig) -> Self {
+        let driver = SimDriver::new(capacity, cfg.cost.clone());
+        CachingAllocator {
+            cfg,
+            driver,
+            slab: BlockSlab::new(),
+            small: BlockPool::new(),
+            large: BlockPool::new(),
+            live: FastMap::default(),
+            next_handle: 1,
+            seg_heads: FastMap::default(),
+            stats: AllocStats::default(),
+            phase: 0,
+            observer: None,
+        }
+    }
+
+    pub fn with_default_config(capacity: u64) -> Self {
+        Self::new(capacity, AllocatorConfig::default())
+    }
+
+    /// Attach an event observer (the memory profiler).
+    pub fn set_observer(&mut self, obs: SharedObserver) {
+        self.observer = Some(obs);
+    }
+
+    /// Detach the observer (releases the profiler's Rc).
+    pub fn clear_observer(&mut self) {
+        self.observer = None;
+    }
+
+    /// Tag subsequent driver segments / events with an RLHF phase id.
+    pub fn set_phase(&mut self, phase: PhaseTag) {
+        self.phase = phase;
+    }
+
+    pub fn phase(&self) -> PhaseTag {
+        self.phase
+    }
+
+    pub fn stats(&self) -> &AllocStats {
+        self.stats_refresh()
+    }
+
+    fn stats_refresh(&self) -> &AllocStats {
+        // time_us is owned partly by the driver; merge lazily via snapshot().
+        &self.stats
+    }
+
+    pub fn config(&self) -> &AllocatorConfig {
+        &self.cfg
+    }
+
+    pub fn reserved(&self) -> u64 {
+        self.driver.reserved()
+    }
+
+    pub fn allocated(&self) -> u64 {
+        self.stats.allocated
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.driver.capacity()
+    }
+
+    /// Total simulated time consumed by allocator + driver, microseconds.
+    pub fn time_us(&self) -> f64 {
+        self.stats.time_us + self.driver.time_us
+    }
+
+    pub fn snapshot(&self) -> StatSnapshot {
+        StatSnapshot {
+            reserved: self.driver.reserved(),
+            allocated: self.stats.allocated,
+            requested: self.stats.requested,
+            time_us: self.time_us(),
+            phase: self.phase,
+        }
+    }
+
+    fn emit(&mut self, ev: AllocEvent) {
+        if let Some(obs) = &self.observer {
+            let snap = self.snapshot();
+            obs.borrow_mut().on_event(&ev, &snap);
+        }
+    }
+
+    fn pool(&mut self, kind: PoolKind) -> &mut BlockPool {
+        match kind {
+            PoolKind::Small => &mut self.small,
+            PoolKind::Large => &mut self.large,
+        }
+    }
+
+    pub fn pool_cached_bytes(&self, kind: PoolKind) -> u64 {
+        match kind {
+            PoolKind::Small => self.small.cached_bytes(),
+            PoolKind::Large => self.large.cached_bytes(),
+        }
+    }
+
+    /// Allocate `requested` bytes; returns a handle for later [`Self::free`].
+    pub fn alloc(&mut self, requested: u64) -> Result<AllocId, AllocError> {
+        assert!(requested > 0, "alloc(0)");
+        let rounded = self.cfg.round_size(requested);
+        let pool_kind = self.cfg.pool_for(rounded);
+
+        // 1. Try the cache.
+        let found = self.find_cached(rounded, pool_kind);
+        let (block_id, cache_hit) = match found {
+            Some(id) => (id, true),
+            None => {
+                // 2. Go to the driver, with PyTorch's OOM-retry cascade.
+                let seg_block = self.alloc_segment(rounded, pool_kind)?;
+                (seg_block, false)
+            }
+        };
+
+        // 3. Split if profitable.
+        let block_id = self.maybe_split(block_id, rounded, pool_kind);
+
+        // 4. Mark allocated, register handle.
+        {
+            let b = self.slab.get_mut(block_id);
+            debug_assert_eq!(b.state, BlockState::Free);
+            b.state = BlockState::Allocated;
+            b.requested = requested;
+        }
+        let size = self.slab.get(block_id).size;
+        self.stats.num_allocs += 1;
+        if cache_hit {
+            self.stats.num_cache_hits += 1;
+        }
+        self.stats.time_us += self.cfg.cost.cache_hit_us;
+        self.stats.requested += requested;
+        // Sync peaks only now, when both counters reflect the completed op
+        // (alloc_segment may have raised reserved mid-flight).
+        let allocated = self.stats.allocated + size;
+        self.stats.sync(self.driver.reserved(), allocated);
+
+        let handle = AllocId(self.next_handle);
+        self.next_handle += 1;
+        self.live.insert(handle.0, block_id);
+
+        self.emit(AllocEvent::Alloc {
+            requested,
+            rounded,
+            cache_hit,
+        });
+        Ok(handle)
+    }
+
+    /// Look up a suitable cached block and detach it from its pool.
+    fn find_cached(&mut self, rounded: u64, pool_kind: PoolKind) -> Option<BlockId> {
+        let max_split = self.cfg.max_split_size;
+        let (size, id) = {
+            let pool = self.pool(pool_kind);
+            match (pool_kind, max_split) {
+                // PyTorch: with max_split_size set, a "small" (< max_split)
+                // request must not nibble an oversized block; oversized
+                // blocks are reserved for oversized requests (close-fit
+                // allowed, no split).
+                (PoolKind::Large, Some(max)) if rounded < max => {
+                    pool.best_fit_bounded(rounded, max)
+                }
+                _ => pool.best_fit(rounded),
+            }
+        }?;
+        self.pool(pool_kind).remove(size, id);
+        Some(id)
+    }
+
+    /// cudaMalloc a fresh segment sized for `rounded`, creating its head
+    /// block (free, covering the whole segment). Runs the OOM cascade.
+    fn alloc_segment(&mut self, rounded: u64, pool_kind: PoolKind) -> Result<BlockId, AllocError> {
+        let seg_size = self.cfg.segment_size_for(rounded);
+        // Paper Appendix B: fragmentation is sampled at a cudaMalloc only
+        // when the miss is *fragmentation-caused* — the request's own pool
+        // holds enough cached bytes to cover it, yet no contiguous block
+        // fits. A malloc whose pool simply lacks the bytes is legitimate
+        // capacity growth and contributes no fragmentation (a small-pool
+        // request can never be served from large-pool cache, so cross-pool
+        // bytes don't make its miss a fragmentation event).
+        let cached_free = self.driver.reserved() - self.stats.allocated;
+        let pool_cached = match pool_kind {
+            PoolKind::Small => self.small.cached_bytes(),
+            PoolKind::Large => self.large.cached_bytes(),
+        };
+        let frag_sample = if pool_cached >= rounded { cached_free } else { 0 };
+
+        let seg = match self.driver.cuda_malloc(seg_size) {
+            Ok(s) => s,
+            Err(_) => {
+                // Retry 1: release all cached fully-free segments.
+                let released = self.release_cached_segments();
+                self.emit(AllocEvent::OomRetry {
+                    released_bytes: released,
+                });
+                match self.driver.cuda_malloc(seg_size) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        return Err(AllocError::Oom(e, self.snapshot()));
+                    }
+                }
+            }
+        };
+
+        // Record the paper's fragmentation sample: reserved − allocated at
+        // the instant the allocator had to go to the driver.
+        self.stats.last_frag_sample = frag_sample;
+        if frag_sample > self.stats.max_frag_sample {
+            self.stats.max_frag_sample = frag_sample;
+        }
+        self.stats.num_cuda_mallocs += 1;
+        // Keep `reserved` fresh for event snapshots. Reserved only ever
+        // rises here, so the peak and its fragmentation are recorded here:
+        // `frag_at_peak_reserved` is the fragmentation-caused sample at the
+        // cudaMalloc that set the reserved peak (Figure 1's yellow gap).
+        self.stats.reserved = self.driver.reserved();
+        if self.stats.reserved > self.stats.peak_reserved {
+            self.stats.peak_reserved = self.stats.reserved;
+            self.stats.frag_at_peak_reserved = frag_sample;
+        }
+
+        let block = Block {
+            segment: seg,
+            pool: pool_kind,
+            offset: 0,
+            size: seg_size,
+            requested: 0,
+            state: BlockState::Free,
+            prev: NO_BLOCK,
+            next: NO_BLOCK,
+            origin_phase: self.phase,
+            live: true,
+        };
+        let id = self.slab.insert(block);
+        self.seg_heads.insert(seg, id);
+        self.emit(AllocEvent::CudaMalloc {
+            segment_bytes: seg_size,
+            rounded,
+            frag_sample,
+        });
+        Ok(id)
+    }
+
+    /// Split `block_id` down to `rounded` if the split rules allow, putting
+    /// the remainder in the pool. Returns the (possibly unchanged) block to
+    /// hand out.
+    fn maybe_split(&mut self, block_id: BlockId, rounded: u64, pool_kind: PoolKind) -> BlockId {
+        let (size, offset, seg, next, origin_phase) = {
+            let b = self.slab.get(block_id);
+            (b.size, b.offset, b.segment, b.next, b.origin_phase)
+        };
+        debug_assert!(size >= rounded);
+        if !self.cfg.should_split(size, rounded, pool_kind) {
+            return block_id;
+        }
+        // Carve [offset, offset+rounded) for the caller; remainder becomes
+        // a new free block linked after it.
+        let rem = Block {
+            segment: seg,
+            pool: pool_kind,
+            offset: offset + rounded,
+            size: size - rounded,
+            requested: 0,
+            state: BlockState::Free,
+            prev: block_id.0,
+            next,
+            origin_phase,
+            live: true,
+        };
+        let rem_id = self.slab.insert(rem);
+        if next != NO_BLOCK {
+            self.slab.get_mut(BlockId(next)).prev = rem_id.0;
+        }
+        {
+            let b = self.slab.get_mut(block_id);
+            b.size = rounded;
+            b.next = rem_id.0;
+        }
+        let rem_size = size - rounded;
+        self.pool(pool_kind).insert(rem_size, rem_id);
+        block_id
+    }
+
+    /// Free a live allocation: coalesce with free neighbours and cache it.
+    pub fn free(&mut self, handle: AllocId) {
+        let block_id = self
+            .live
+            .remove(&handle.0)
+            .unwrap_or_else(|| panic!("free of unknown handle {handle:?}"));
+        let (size, requested, pool_kind) = {
+            let b = self.slab.get_mut(block_id);
+            debug_assert_eq!(b.state, BlockState::Allocated);
+            b.state = BlockState::Free;
+            let r = b.requested;
+            b.requested = 0;
+            (b.size, r, b.pool)
+        };
+        self.stats.num_frees += 1;
+        self.stats.time_us += self.cfg.cost.pool_free_us;
+        self.stats.requested -= requested;
+        let allocated = self.stats.allocated - size;
+        self.stats.sync(self.driver.reserved(), allocated);
+
+        let merged = self.coalesce(block_id, pool_kind);
+        let merged_size = self.slab.get(merged).size;
+        self.pool(pool_kind).insert(merged_size, merged);
+
+        self.emit(AllocEvent::Free { size });
+    }
+
+    /// Merge `block_id` (free, not pooled) with free neighbours. Neighbours
+    /// are detached from the pool; the merge always folds into the
+    /// earliest block so segment heads stay stable. Returns the survivor.
+    fn coalesce(&mut self, block_id: BlockId, pool_kind: PoolKind) -> BlockId {
+        let mut cur = block_id;
+
+        // Fold into previous if free.
+        let prev = self.slab.get(cur).prev;
+        if prev != NO_BLOCK {
+            let prev_id = BlockId(prev);
+            if self.slab.get(prev_id).state == BlockState::Free {
+                let prev_size = self.slab.get(prev_id).size;
+                self.pool(pool_kind).remove(prev_size, prev_id);
+                let (cur_size, cur_next) = {
+                    let c = self.slab.get(cur);
+                    (c.size, c.next)
+                };
+                {
+                    let p = self.slab.get_mut(prev_id);
+                    p.size += cur_size;
+                    p.next = cur_next;
+                }
+                if cur_next != NO_BLOCK {
+                    self.slab.get_mut(BlockId(cur_next)).prev = prev_id.0;
+                }
+                self.slab.remove(cur);
+                cur = prev_id;
+            }
+        }
+
+        // Fold next into current if free.
+        let next = self.slab.get(cur).next;
+        if next != NO_BLOCK {
+            let next_id = BlockId(next);
+            if self.slab.get(next_id).state == BlockState::Free {
+                let next_size = self.slab.get(next_id).size;
+                self.pool(pool_kind).remove(next_size, next_id);
+                let next_next = self.slab.get(next_id).next;
+                {
+                    let c = self.slab.get_mut(cur);
+                    c.size += next_size;
+                    c.next = next_next;
+                }
+                if next_next != NO_BLOCK {
+                    self.slab.get_mut(BlockId(next_next)).prev = cur.0;
+                }
+                self.slab.remove(next_id);
+            }
+        }
+        cur
+    }
+
+    /// Release every fully-free segment back to the driver. Returns bytes
+    /// released. (`empty_cache()` = this + the event + fixed latency.)
+    fn release_cached_segments(&mut self) -> u64 {
+        let mut released = 0u64;
+        let mut released_segments = 0u64;
+        for pool_kind in [PoolKind::Small, PoolKind::Large] {
+            // Collect candidates first (can't mutate while iterating).
+            let candidates: Vec<(u64, BlockId)> = self
+                .pool(pool_kind)
+                .iter()
+                .copied()
+                .collect();
+            for (size, id) in candidates {
+                let (seg, offset) = {
+                    let b = self.slab.get(id);
+                    (b.segment, b.offset)
+                };
+                let seg_size = self.driver.segment_size(seg);
+                // Fully-free segment == single free block spanning it.
+                if offset == 0 && size == seg_size {
+                    self.pool(pool_kind).remove(size, id);
+                    self.slab.remove(id);
+                    self.seg_heads.remove(&seg);
+                    self.driver.cuda_free(seg);
+                    self.stats.num_cuda_frees += 1;
+                    released += seg_size;
+                    released_segments += 1;
+                    self.emit(AllocEvent::CudaFree {
+                        segment_bytes: seg_size,
+                    });
+                }
+            }
+        }
+        if released > 0 {
+            self.stats.sync(self.driver.reserved(), self.stats.allocated);
+        }
+        let _ = released_segments;
+        released
+    }
+
+    /// The paper's mitigation: `torch.cuda.empty_cache()`.
+    pub fn empty_cache(&mut self) -> u64 {
+        self.stats.num_empty_cache += 1;
+        self.stats.time_us += self.cfg.cost.empty_cache_base_us;
+        let before_segments = self.driver.live_segments() as u64;
+        let released = self.release_cached_segments();
+        let segs = before_segments - self.driver.live_segments() as u64;
+        self.emit(AllocEvent::EmptyCache {
+            segments: segs,
+            bytes: released,
+        });
+        released
+    }
+
+    /// Number of live (user-visible) allocations.
+    pub fn live_allocs(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn live_segments(&self) -> usize {
+        self.driver.live_segments()
+    }
+
+    /// Exhaustive invariant check — O(everything); tests and property tests
+    /// call this after every operation.
+    pub fn validate(&self) -> Result<(), String> {
+        // 1. Per-segment chains must tile the segment exactly.
+        let mut total_alloc = 0u64;
+        let mut total_free = 0u64;
+        let mut seg_bytes = 0u64;
+        let mut free_blocks: Vec<(u64, BlockId)> = Vec::new();
+        for (&seg, &head) in &self.seg_heads {
+            let seg_size = self.driver.segment_size(seg);
+            seg_bytes += seg_size;
+            let mut cursor = head;
+            let mut expect_offset = 0u64;
+            let mut prev_state: Option<BlockState> = None;
+            let mut prev_id = NO_BLOCK;
+            loop {
+                let b = self.slab.get(cursor);
+                if b.segment != seg {
+                    return Err(format!("block {cursor:?} in wrong segment"));
+                }
+                if b.offset != expect_offset {
+                    return Err(format!(
+                        "segment {seg:?}: expected offset {expect_offset}, got {}",
+                        b.offset
+                    ));
+                }
+                if b.prev != prev_id {
+                    return Err(format!("block {cursor:?} has broken prev link"));
+                }
+                if b.state == BlockState::Free
+                    && prev_state == Some(BlockState::Free)
+                {
+                    return Err(format!(
+                        "segment {seg:?}: adjacent free blocks (coalescing broken)"
+                    ));
+                }
+                match b.state {
+                    BlockState::Allocated => total_alloc += b.size,
+                    BlockState::Free => {
+                        total_free += b.size;
+                        free_blocks.push((b.size, cursor));
+                    }
+                }
+                expect_offset += b.size;
+                prev_state = Some(b.state);
+                prev_id = cursor.0;
+                if b.next == NO_BLOCK {
+                    break;
+                }
+                cursor = BlockId(b.next);
+            }
+            if expect_offset != seg_size {
+                return Err(format!(
+                    "segment {seg:?}: chain covers {expect_offset} of {seg_size} bytes"
+                ));
+            }
+        }
+        // 2. Byte accounting.
+        if seg_bytes != self.driver.reserved() {
+            return Err(format!(
+                "segment bytes {seg_bytes} != driver reserved {}",
+                self.driver.reserved()
+            ));
+        }
+        if total_alloc != self.stats.allocated {
+            return Err(format!(
+                "chain allocated {total_alloc} != stats.allocated {}",
+                self.stats.allocated
+            ));
+        }
+        if total_alloc + total_free != seg_bytes {
+            return Err("allocated + free != reserved".to_string());
+        }
+        // 3. Pools hold exactly the free blocks.
+        let pooled: u64 = self.small.cached_bytes() + self.large.cached_bytes();
+        if pooled != total_free {
+            return Err(format!(
+                "pool bytes {pooled} != chain free bytes {total_free}"
+            ));
+        }
+        let pool_count = self.small.len() + self.large.len();
+        if pool_count != free_blocks.len() {
+            return Err(format!(
+                "pool count {pool_count} != free block count {}",
+                free_blocks.len()
+            ));
+        }
+        // 4. Live handle map points at allocated blocks.
+        for (&h, &bid) in &self.live {
+            let b = self.slab.get(bid);
+            if b.state != BlockState::Allocated {
+                return Err(format!("handle {h} points at non-allocated block"));
+            }
+        }
+        // 5. Slab live count = chain blocks.
+        if self.slab.len_live() != free_blocks.len() + self.live.len() {
+            return Err(format!(
+                "slab live {} != free {} + allocated {}",
+                self.slab.len_live(),
+                free_blocks.len(),
+                self.live.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Iterate (size, origin_phase) of live segments — used by the profiler
+    /// for phase attribution of reserved memory.
+    pub fn segments_by_phase(&self) -> Vec<(u64, PhaseTag)> {
+        self.seg_heads
+            .iter()
+            .map(|(&seg, &head)| {
+                (
+                    self.driver.segment_size(seg),
+                    self.slab.get(head).origin_phase,
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{GIB, KIB, MIB};
+
+    fn alloc(cap: u64) -> CachingAllocator {
+        CachingAllocator::with_default_config(cap)
+    }
+
+    #[test]
+    fn small_alloc_creates_2mib_segment() {
+        let mut a = alloc(GIB);
+        let h = a.alloc(100).unwrap();
+        assert_eq!(a.reserved(), 2 * MIB);
+        assert_eq!(a.allocated(), 512); // rounded
+        assert_eq!(a.stats().num_cuda_mallocs, 1);
+        a.validate().unwrap();
+        a.free(h);
+        // Cached, not returned to driver.
+        assert_eq!(a.reserved(), 2 * MIB);
+        assert_eq!(a.allocated(), 0);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn second_small_alloc_reuses_segment() {
+        let mut a = alloc(GIB);
+        let _h1 = a.alloc(100 * KIB).unwrap();
+        let _h2 = a.alloc(100 * KIB).unwrap();
+        // Both fit in the single 2 MiB small segment.
+        assert_eq!(a.reserved(), 2 * MIB);
+        assert_eq!(a.stats().num_cuda_mallocs, 1);
+        assert_eq!(a.stats().num_cache_hits, 1);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn medium_alloc_gets_20mib_buffer() {
+        let mut a = alloc(GIB);
+        let _h = a.alloc(3 * MIB).unwrap();
+        assert_eq!(a.reserved(), 20 * MIB);
+        assert_eq!(a.allocated(), 3 * MIB);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn huge_alloc_gets_exact_rounded_segment() {
+        let mut a = alloc(GIB);
+        let _h = a.alloc(33 * MIB).unwrap();
+        assert_eq!(a.reserved(), 34 * MIB);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn free_then_alloc_same_size_is_cache_hit() {
+        let mut a = alloc(GIB);
+        let h = a.alloc(5 * MIB).unwrap();
+        a.free(h);
+        let mallocs_before = a.stats().num_cuda_mallocs;
+        let _h2 = a.alloc(5 * MIB).unwrap();
+        assert_eq!(a.stats().num_cuda_mallocs, mallocs_before);
+        assert_eq!(a.stats().num_cache_hits, 1);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn coalesce_three_way() {
+        let mut a = alloc(GIB);
+        // Three 4 MiB blocks carved from one 20 MiB segment.
+        let h1 = a.alloc(4 * MIB).unwrap();
+        let h2 = a.alloc(4 * MIB).unwrap();
+        let h3 = a.alloc(4 * MIB).unwrap();
+        assert_eq!(a.reserved(), 20 * MIB);
+        a.free(h1);
+        a.free(h3);
+        a.validate().unwrap();
+        // Freeing the middle merges all three + trailing remainder.
+        a.free(h2);
+        a.validate().unwrap();
+        // Now the segment is fully free: exactly one pooled block.
+        assert_eq!(a.pool_cached_bytes(PoolKind::Large), 20 * MIB);
+        let released = a.empty_cache();
+        assert_eq!(released, 20 * MIB);
+        assert_eq!(a.reserved(), 0);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_cache_keeps_partially_used_segments() {
+        let mut a = alloc(GIB);
+        let h1 = a.alloc(4 * MIB).unwrap();
+        let h2 = a.alloc(4 * MIB).unwrap();
+        a.free(h1);
+        let released = a.empty_cache();
+        assert_eq!(released, 0, "segment still has a live block");
+        assert_eq!(a.reserved(), 20 * MIB);
+        a.free(h2);
+        assert_eq!(a.empty_cache(), 20 * MIB);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn oom_retry_releases_cache() {
+        let mut a = alloc(64 * MIB);
+        let h = a.alloc(40 * MIB).unwrap();
+        a.free(h); // 40 MiB cached
+        // 60 MiB doesn't fit alongside the cached 40 MiB, but the retry
+        // path releases the cache and succeeds.
+        let h2 = a.alloc(60 * MIB).unwrap();
+        assert_eq!(a.reserved(), 60 * MIB);
+        a.validate().unwrap();
+        a.free(h2);
+    }
+
+    #[test]
+    fn true_oom_errors() {
+        let mut a = alloc(32 * MIB);
+        let _h = a.alloc(30 * MIB).unwrap();
+        let err = a.alloc(10 * MIB).unwrap_err();
+        let AllocError::Oom(_, snap) = err;
+        assert_eq!(snap.allocated, 30 * MIB);
+    }
+
+    #[test]
+    fn fragmentation_sample_records_gap() {
+        // Two discontiguous cached 16 MiB segments cannot serve one 30 MiB
+        // request even though 32 MiB is cached: a fragmentation-caused
+        // cudaMalloc (paper Appendix B), sampled as the cached 32 MiB.
+        let mut a = alloc(GIB);
+        let h1 = a.alloc(15 * MIB).unwrap();
+        let h2 = a.alloc(15 * MIB).unwrap();
+        a.free(h1);
+        a.free(h2);
+        assert_eq!(a.reserved(), 32 * MIB);
+        let _h3 = a.alloc(30 * MIB).unwrap();
+        assert_eq!(a.stats().max_frag_sample, 32 * MIB);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn capacity_miss_is_not_fragmentation() {
+        // A cudaMalloc with insufficient cached bytes is capacity growth,
+        // not fragmentation: the sample must be zero.
+        let mut a = alloc(GIB);
+        let h = a.alloc(15 * MIB).unwrap();
+        a.free(h); // 16 MiB cached
+        let _big = a.alloc(64 * MIB).unwrap(); // 16 < 64: capacity miss
+        assert_eq!(a.stats().max_frag_sample, 0);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn split_leaves_remainder_in_pool() {
+        let mut a = alloc(GIB);
+        let _h = a.alloc(2 * MIB).unwrap(); // 20 MiB segment, 18 MiB remainder
+        assert_eq!(a.pool_cached_bytes(PoolKind::Large), 18 * MIB);
+        let _h2 = a.alloc(17 * MIB).unwrap(); // served from remainder
+        assert_eq!(a.stats().num_cuda_mallocs, 1);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn large_pool_no_tiny_split_remainder() {
+        // Splitting a large block must leave >1 MiB remainders only.
+        let mut a = alloc(GIB);
+        let _h = a.alloc(19 * MIB + 512 * KIB).unwrap();
+        // Remainder would be 512 KiB (< 1 MiB): no split, whole 20 MiB used.
+        assert_eq!(a.allocated(), 20 * MIB);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn max_split_size_reserves_oversized_blocks() {
+        let mut cfg = AllocatorConfig::default();
+        cfg.max_split_size = Some(32 * MIB);
+        let mut a = CachingAllocator::new(GIB, cfg);
+        let h = a.alloc(64 * MIB).unwrap();
+        a.free(h); // 64 MiB oversized block cached
+        // A 2 MiB request must NOT nibble the 64 MiB block.
+        let _h2 = a.alloc(2 * MIB).unwrap();
+        assert_eq!(a.stats().num_cuda_mallocs, 2);
+        // But a 60 MiB request may use it (close fit, no split).
+        let _h3 = a.alloc(60 * MIB).unwrap();
+        assert_eq!(a.stats().num_cuda_mallocs, 2);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn phase_tagging_on_segments() {
+        let mut a = alloc(GIB);
+        a.set_phase(3);
+        let _h = a.alloc(5 * MIB).unwrap();
+        a.set_phase(7);
+        let _h2 = a.alloc(30 * MIB).unwrap();
+        let mut phases: Vec<u16> = a.segments_by_phase().iter().map(|&(_, p)| p).collect();
+        phases.sort();
+        assert_eq!(phases, vec![3, 7]);
+    }
+
+    #[test]
+    fn handles_are_unique_and_freeable_once() {
+        let mut a = alloc(GIB);
+        let h1 = a.alloc(1 * MIB).unwrap();
+        let h2 = a.alloc(1 * MIB).unwrap();
+        assert_ne!(h1, h2);
+        a.free(h1);
+        a.free(h2);
+        assert_eq!(a.live_allocs(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "free of unknown handle")]
+    fn double_free_panics() {
+        let mut a = alloc(GIB);
+        let h = a.alloc(1 * MIB).unwrap();
+        a.free(h);
+        a.free(h);
+    }
+
+    #[test]
+    fn requested_tracks_internal_fragmentation() {
+        let mut a = alloc(GIB);
+        let _h = a.alloc(100).unwrap(); // rounds to 512
+        let snap = a.snapshot();
+        assert_eq!(snap.requested, 100);
+        assert_eq!(snap.allocated, 512);
+    }
+
+    #[test]
+    fn peak_frag_at_reserved_peak() {
+        // Two cached 16 MiB segments; a 30 MiB request sets a new reserved
+        // peak via a fragmentation-caused malloc -> frag-at-peak = 32 MiB.
+        let mut a = alloc(GIB);
+        let h1 = a.alloc(15 * MIB).unwrap();
+        let h2 = a.alloc(15 * MIB).unwrap();
+        a.free(h1);
+        a.free(h2);
+        let _h3 = a.alloc(30 * MIB).unwrap();
+        let s = a.stats();
+        assert_eq!(s.peak_reserved, 62 * MIB);
+        assert_eq!(s.frag_at_peak_reserved, 32 * MIB);
+    }
+
+    #[test]
+    fn stress_mixed_sizes_validate() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::seeded(0xC0FFEE);
+        let mut a = alloc(4 * GIB);
+        let mut live: Vec<AllocId> = Vec::new();
+        for step in 0..5_000 {
+            if live.is_empty() || rng.bernoulli(0.6) {
+                let class = rng.gen_range(4);
+                let sz = match class {
+                    0 => rng.gen_range(4 * KIB) + 1,
+                    1 => rng.gen_range(900 * KIB) + KIB,
+                    2 => rng.gen_range(8 * MIB) + MIB,
+                    _ => rng.gen_range(64 * MIB) + 10 * MIB,
+                };
+                if let Ok(h) = a.alloc(sz) {
+                    live.push(h);
+                }
+            } else {
+                let i = rng.range_usize(0, live.len());
+                let h = live.swap_remove(i);
+                a.free(h);
+            }
+            if step % 500 == 0 {
+                a.validate().unwrap();
+            }
+            if step % 1000 == 999 {
+                a.empty_cache();
+                a.validate().unwrap();
+            }
+        }
+        for h in live {
+            a.free(h);
+        }
+        a.empty_cache();
+        assert_eq!(a.reserved(), 0);
+        a.validate().unwrap();
+    }
+}

@@ -1,0 +1,167 @@
+//! Block storage for the caching allocator.
+//!
+//! Blocks live in a slab (`Vec<Block>` indexed by `BlockId`) — no per-block
+//! heap allocation on the hot path. Each driver segment is carved into a
+//! doubly-linked chain of blocks ordered by offset; splitting and
+//! coalescing rewire the chain.
+
+use super::config::PoolKind;
+use super::driver::SegmentId;
+
+/// Index into the block slab.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+pub const NO_BLOCK: u32 = u32::MAX;
+
+/// Allocation state of a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockState {
+    Free,
+    Allocated,
+}
+
+/// One contiguous range within a segment.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub segment: SegmentId,
+    pub pool: PoolKind,
+    pub offset: u64,
+    pub size: u64,
+    /// Bytes the caller actually asked for (≤ size); used for internal-
+    /// fragmentation accounting. Zero while free.
+    pub requested: u64,
+    pub state: BlockState,
+    /// Chain links within the segment (offset order). `NO_BLOCK` = none.
+    pub prev: u32,
+    pub next: u32,
+    /// Epoch/phase tag of the *allocation that created the segment* —
+    /// used by the profiler to attribute reserved memory to RLHF phases.
+    pub origin_phase: u16,
+    /// Slab slot generation to catch stale ids in debug builds.
+    pub live: bool,
+}
+
+/// Slab of blocks with free-slot recycling.
+#[derive(Debug, Default, Clone)]
+pub struct BlockSlab {
+    blocks: Vec<Block>,
+    free_slots: Vec<u32>,
+}
+
+impl BlockSlab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, block: Block) -> BlockId {
+        debug_assert!(block.live);
+        match self.free_slots.pop() {
+            Some(slot) => {
+                self.blocks[slot as usize] = block;
+                BlockId(slot)
+            }
+            None => {
+                self.blocks.push(block);
+                BlockId((self.blocks.len() - 1) as u32)
+            }
+        }
+    }
+
+    pub fn remove(&mut self, id: BlockId) {
+        let b = &mut self.blocks[id.0 as usize];
+        debug_assert!(b.live, "remove of dead block {id:?}");
+        b.live = false;
+        self.free_slots.push(id.0);
+    }
+
+    #[inline]
+    pub fn get(&self, id: BlockId) -> &Block {
+        let b = &self.blocks[id.0 as usize];
+        debug_assert!(b.live, "access to dead block {id:?}");
+        b
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: BlockId) -> &mut Block {
+        let b = &mut self.blocks[id.0 as usize];
+        debug_assert!(b.live, "access to dead block {id:?}");
+        b
+    }
+
+    pub fn len_live(&self) -> usize {
+        self.blocks.len() - self.free_slots.len()
+    }
+
+    /// Iterate live blocks (diagnostics / invariant checks only — O(slab)).
+    pub fn iter_live(&self) -> impl Iterator<Item = (BlockId, &Block)> {
+        self.blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.live)
+            .map(|(i, b)| (BlockId(i as u32), b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk(offset: u64, size: u64) -> Block {
+        Block {
+            segment: SegmentId(0),
+            pool: PoolKind::Small,
+            offset,
+            size,
+            requested: 0,
+            state: BlockState::Free,
+            prev: NO_BLOCK,
+            next: NO_BLOCK,
+            origin_phase: 0,
+            live: true,
+        }
+    }
+
+    #[test]
+    fn insert_get_remove() {
+        let mut slab = BlockSlab::new();
+        let a = slab.insert(blk(0, 512));
+        let b = slab.insert(blk(512, 1024));
+        assert_eq!(slab.get(a).size, 512);
+        assert_eq!(slab.get(b).offset, 512);
+        assert_eq!(slab.len_live(), 2);
+        slab.remove(a);
+        assert_eq!(slab.len_live(), 1);
+    }
+
+    #[test]
+    fn slot_recycling() {
+        let mut slab = BlockSlab::new();
+        let a = slab.insert(blk(0, 512));
+        slab.remove(a);
+        let b = slab.insert(blk(0, 256));
+        assert_eq!(a.0, b.0, "slot should be recycled");
+        assert_eq!(slab.get(b).size, 256);
+    }
+
+    #[test]
+    fn iter_live_skips_dead() {
+        let mut slab = BlockSlab::new();
+        let a = slab.insert(blk(0, 512));
+        let _b = slab.insert(blk(512, 512));
+        slab.remove(a);
+        let live: Vec<_> = slab.iter_live().collect();
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].1.offset, 512);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic]
+    fn stale_access_panics_in_debug() {
+        let mut slab = BlockSlab::new();
+        let a = slab.insert(blk(0, 512));
+        slab.remove(a);
+        let _ = slab.get(a);
+    }
+}

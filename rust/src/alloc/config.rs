@@ -1,0 +1,204 @@
+//! Configuration for the caching-allocator simulator.
+//!
+//! Defaults mirror PyTorch's `CUDACachingAllocator` constants:
+//! `kMinBlockSize = 512`, `kSmallSize = 1 MiB`, `kSmallBuffer = 2 MiB`,
+//! `kLargeBuffer = 20 MiB`, `kMinLargeAlloc = 10 MiB`, `kRoundLarge = 2 MiB`,
+//! and an optional `max_split_size` (PyTorch's
+//! `PYTORCH_CUDA_ALLOC_CONF=max_split_size_mb`).
+
+use crate::util::bytes::MIB;
+
+/// Latency model for driver / allocator operations, in microseconds.
+///
+/// The absolute values follow published microbenchmarks of CUDA driver
+/// calls (cudaMalloc ≈ 0.2–1 ms depending on size, cudaFree ≈ 0.1 ms plus
+/// an implicit synchronization). Only *ratios* matter for the paper's
+/// "+2% end-to-end time" claim (E8), and those are insensitive to ±2×
+/// changes in these constants (see `benches/empty_cache_overhead.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Fixed cost of one `cudaMalloc` call.
+    pub cuda_malloc_base_us: f64,
+    /// Additional cost of `cudaMalloc` per GiB requested (page mapping).
+    pub cuda_malloc_per_gib_us: f64,
+    /// Fixed cost of one `cudaFree` call (includes implicit sync).
+    pub cuda_free_us: f64,
+    /// Cost of an allocation served from the cached pool.
+    pub cache_hit_us: f64,
+    /// Cost of returning a block to the pool.
+    pub pool_free_us: f64,
+    /// Fixed cost of an `empty_cache()` call on top of the per-segment
+    /// `cudaFree`s it issues.
+    pub empty_cache_base_us: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            cuda_malloc_base_us: 250.0,
+            cuda_malloc_per_gib_us: 180.0,
+            cuda_free_us: 110.0,
+            cache_hit_us: 1.6,
+            pool_free_us: 0.9,
+            empty_cache_base_us: 40.0,
+        }
+    }
+}
+
+/// Allocator tunables (PyTorch constants by default).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocatorConfig {
+    /// All requests are rounded up to a multiple of this (512 B).
+    pub min_block_size: u64,
+    /// Requests ≤ this go to the small pool (1 MiB).
+    pub small_size: u64,
+    /// Segment size for small-pool cudaMallocs (2 MiB).
+    pub small_buffer: u64,
+    /// Segment size for "medium" large-pool requests (20 MiB).
+    pub large_buffer: u64,
+    /// Requests ≥ this get their own rounded segment (10 MiB).
+    pub min_large_alloc: u64,
+    /// Rounding granularity for big segments (2 MiB).
+    pub round_large: u64,
+    /// Blocks larger than this are never split (None = unlimited, the
+    /// PyTorch default).
+    pub max_split_size: Option<u64>,
+    /// Remainder threshold for splitting a large-pool block: PyTorch keeps
+    /// the remainder only if it exceeds `kSmallSize` (1 MiB).
+    pub large_split_remainder: u64,
+    /// Latency model.
+    pub cost: CostModel,
+}
+
+impl Default for AllocatorConfig {
+    fn default() -> Self {
+        AllocatorConfig {
+            min_block_size: 512,
+            small_size: MIB,
+            small_buffer: 2 * MIB,
+            large_buffer: 20 * MIB,
+            min_large_alloc: 10 * MIB,
+            round_large: 2 * MIB,
+            max_split_size: None,
+            large_split_remainder: MIB,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+impl AllocatorConfig {
+    /// PyTorch's `round_size`: everything is a multiple of 512 B.
+    pub fn round_size(&self, size: u64) -> u64 {
+        if size < self.min_block_size {
+            self.min_block_size
+        } else {
+            size.div_ceil(self.min_block_size) * self.min_block_size
+        }
+    }
+
+    /// Which pool serves a (rounded) request.
+    pub fn pool_for(&self, rounded: u64) -> PoolKind {
+        if rounded <= self.small_size {
+            PoolKind::Small
+        } else {
+            PoolKind::Large
+        }
+    }
+
+    /// PyTorch's `get_allocation_size`: size of the segment cudaMalloc'd
+    /// when the pool cannot serve a (rounded) request.
+    pub fn segment_size_for(&self, rounded: u64) -> u64 {
+        if rounded <= self.small_size {
+            self.small_buffer
+        } else if rounded < self.min_large_alloc {
+            self.large_buffer
+        } else {
+            rounded.div_ceil(self.round_large) * self.round_large
+        }
+    }
+
+    /// PyTorch's `should_split` predicate.
+    pub fn should_split(&self, block_size: u64, requested: u64, pool: PoolKind) -> bool {
+        if let Some(max) = self.max_split_size {
+            if block_size > max {
+                return false;
+            }
+        }
+        let remaining = block_size - requested;
+        match pool {
+            PoolKind::Small => remaining >= self.min_block_size,
+            PoolKind::Large => remaining > self.large_split_remainder,
+        }
+    }
+}
+
+/// The two block pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PoolKind {
+    Small,
+    Large,
+}
+
+impl PoolKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolKind::Small => "small",
+            PoolKind::Large => "large",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{KIB, MIB};
+
+    #[test]
+    fn round_size_matches_pytorch() {
+        let c = AllocatorConfig::default();
+        assert_eq!(c.round_size(1), 512);
+        assert_eq!(c.round_size(512), 512);
+        assert_eq!(c.round_size(513), 1024);
+        assert_eq!(c.round_size(1000), 1024);
+        assert_eq!(c.round_size(MIB), MIB);
+    }
+
+    #[test]
+    fn pool_selection() {
+        let c = AllocatorConfig::default();
+        assert_eq!(c.pool_for(512), PoolKind::Small);
+        assert_eq!(c.pool_for(MIB), PoolKind::Small);
+        assert_eq!(c.pool_for(MIB + 512), PoolKind::Large);
+    }
+
+    #[test]
+    fn segment_sizing_matches_pytorch() {
+        let c = AllocatorConfig::default();
+        // small request -> 2 MiB segment
+        assert_eq!(c.segment_size_for(512), 2 * MIB);
+        assert_eq!(c.segment_size_for(MIB), 2 * MIB);
+        // 1 MiB < r < 10 MiB -> 20 MiB segment
+        assert_eq!(c.segment_size_for(MIB + 512), 20 * MIB);
+        assert_eq!(c.segment_size_for(9 * MIB), 20 * MIB);
+        // >= 10 MiB -> round to 2 MiB
+        assert_eq!(c.segment_size_for(10 * MIB), 10 * MIB);
+        assert_eq!(c.segment_size_for(10 * MIB + 1), 12 * MIB);
+        assert_eq!(c.segment_size_for(33 * MIB), 34 * MIB);
+    }
+
+    #[test]
+    fn split_predicates() {
+        let c = AllocatorConfig::default();
+        // Small pool: remainder >= 512 B.
+        assert!(c.should_split(2 * KIB, KIB, PoolKind::Small));
+        assert!(!c.should_split(KIB + 256, KIB, PoolKind::Small));
+        // Large pool: remainder must exceed 1 MiB.
+        assert!(c.should_split(20 * MIB, 2 * MIB, PoolKind::Large));
+        assert!(!c.should_split(2 * MIB + 512, 2 * MIB, PoolKind::Large));
+        // max_split_size blocks splitting of huge blocks.
+        let mut c2 = c.clone();
+        c2.max_split_size = Some(32 * MIB);
+        assert!(!c2.should_split(64 * MIB, 2 * MIB, PoolKind::Large));
+        assert!(c2.should_split(32 * MIB, 2 * MIB, PoolKind::Large));
+    }
+}

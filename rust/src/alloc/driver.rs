@@ -1,0 +1,193 @@
+//! Simulated CUDA driver: segment-granular device memory with a fixed
+//! capacity, the substrate under the caching allocator.
+//!
+//! The real driver hands out device pointers; fragmentation *inside the
+//! paper* is allocator-level (reserved vs allocated), not VA-level, so the
+//! driver only needs capacity accounting, OOM behaviour, and latency. Each
+//! `cuda_malloc` returns a [`SegmentId`]; the allocator owns the block
+//! structure within segments.
+
+use super::config::CostModel;
+use crate::util::bytes::fmt_bytes;
+
+/// Identifier of one driver-level allocation (one `cudaMalloc`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SegmentId(pub u32);
+
+/// Error returned when the device cannot satisfy a `cudaMalloc`.
+#[derive(Debug, Clone, thiserror::Error)]
+#[error(
+    "CUDA out of memory: tried to allocate {} ({requested} bytes); \
+     device capacity {} with {} already reserved",
+    fmt_bytes(*.requested), fmt_bytes(*.capacity), fmt_bytes(*.reserved)
+)]
+pub struct DriverOom {
+    pub requested: u64,
+    pub capacity: u64,
+    pub reserved: u64,
+}
+
+/// The simulated device + driver.
+#[derive(Debug, Clone)]
+pub struct SimDriver {
+    capacity: u64,
+    reserved: u64,
+    segments: Vec<Option<u64>>, // SegmentId -> size (None = freed)
+    free_slots: Vec<u32>,
+    pub num_mallocs: u64,
+    pub num_frees: u64,
+    /// Simulated wall-clock consumed by driver calls, microseconds.
+    pub time_us: f64,
+    cost: CostModel,
+}
+
+impl SimDriver {
+    pub fn new(capacity: u64, cost: CostModel) -> Self {
+        SimDriver {
+            capacity,
+            reserved: 0,
+            segments: Vec::new(),
+            free_slots: Vec::new(),
+            num_mallocs: 0,
+            num_frees: 0,
+            time_us: 0.0,
+            cost,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Total bytes currently held by live segments (= "reserved" memory in
+    /// PyTorch terms, since only the caching allocator calls the driver).
+    pub fn reserved(&self) -> u64 {
+        self.reserved
+    }
+
+    pub fn free_capacity(&self) -> u64 {
+        self.capacity - self.reserved
+    }
+
+    /// `cudaMalloc`: claim `size` bytes or report OOM.
+    pub fn cuda_malloc(&mut self, size: u64) -> Result<SegmentId, DriverOom> {
+        assert!(size > 0, "cuda_malloc(0)");
+        if self.reserved + size > self.capacity {
+            return Err(DriverOom {
+                requested: size,
+                capacity: self.capacity,
+                reserved: self.reserved,
+            });
+        }
+        self.reserved += size;
+        self.num_mallocs += 1;
+        self.time_us += self.cost.cuda_malloc_base_us
+            + self.cost.cuda_malloc_per_gib_us * (size as f64 / (1u64 << 30) as f64);
+        let id = match self.free_slots.pop() {
+            Some(slot) => {
+                self.segments[slot as usize] = Some(size);
+                SegmentId(slot)
+            }
+            None => {
+                self.segments.push(Some(size));
+                SegmentId((self.segments.len() - 1) as u32)
+            }
+        };
+        Ok(id)
+    }
+
+    /// `cudaFree`: release a segment back to the device.
+    pub fn cuda_free(&mut self, id: SegmentId) {
+        let size = self.segments[id.0 as usize]
+            .take()
+            .expect("double cuda_free");
+        self.reserved -= size;
+        self.num_frees += 1;
+        self.free_slots.push(id.0);
+        self.time_us += self.cost.cuda_free_us;
+    }
+
+    pub fn segment_size(&self, id: SegmentId) -> u64 {
+        self.segments[id.0 as usize].expect("segment freed")
+    }
+
+    pub fn live_segments(&self) -> usize {
+        self.segments.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{GIB, MIB};
+
+    fn driver(cap: u64) -> SimDriver {
+        SimDriver::new(cap, CostModel::default())
+    }
+
+    #[test]
+    fn malloc_free_accounting() {
+        let mut d = driver(GIB);
+        let a = d.cuda_malloc(100 * MIB).unwrap();
+        let b = d.cuda_malloc(200 * MIB).unwrap();
+        assert_eq!(d.reserved(), 300 * MIB);
+        assert_eq!(d.live_segments(), 2);
+        d.cuda_free(a);
+        assert_eq!(d.reserved(), 200 * MIB);
+        assert_eq!(d.segment_size(b), 200 * MIB);
+        d.cuda_free(b);
+        assert_eq!(d.reserved(), 0);
+        assert_eq!(d.num_mallocs, 2);
+        assert_eq!(d.num_frees, 2);
+    }
+
+    #[test]
+    fn oom_at_capacity() {
+        let mut d = driver(GIB);
+        let _a = d.cuda_malloc(GIB).unwrap();
+        let err = d.cuda_malloc(1).unwrap_err();
+        assert_eq!(err.reserved, GIB);
+        assert_eq!(err.capacity, GIB);
+        assert_eq!(err.requested, 1);
+    }
+
+    #[test]
+    fn oom_recovers_after_free() {
+        let mut d = driver(GIB);
+        let a = d.cuda_malloc(900 * MIB).unwrap();
+        assert!(d.cuda_malloc(200 * MIB).is_err());
+        d.cuda_free(a);
+        assert!(d.cuda_malloc(200 * MIB).is_ok());
+    }
+
+    #[test]
+    fn slot_reuse() {
+        let mut d = driver(GIB);
+        let a = d.cuda_malloc(MIB).unwrap();
+        d.cuda_free(a);
+        let b = d.cuda_malloc(2 * MIB).unwrap();
+        // Slot recycled, accounting correct.
+        assert_eq!(a.0, b.0);
+        assert_eq!(d.reserved(), 2 * MIB);
+    }
+
+    #[test]
+    #[should_panic(expected = "double cuda_free")]
+    fn double_free_panics() {
+        let mut d = driver(GIB);
+        let a = d.cuda_malloc(MIB).unwrap();
+        d.cuda_free(a);
+        d.cuda_free(a);
+    }
+
+    #[test]
+    fn time_model_advances() {
+        let mut d = driver(GIB);
+        let t0 = d.time_us;
+        let a = d.cuda_malloc(512 * MIB).unwrap();
+        assert!(d.time_us > t0);
+        let t1 = d.time_us;
+        d.cuda_free(a);
+        assert!(d.time_us > t1);
+    }
+}

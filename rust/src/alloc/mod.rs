@@ -1,0 +1,16 @@
+//! Caching-allocator simulator: a faithful reimplementation of PyTorch's
+//! CUDA caching allocator over a simulated driver. This is the substrate on
+//! which the paper's fragmentation phenomenon *emerges* (nothing here is
+//! RLHF-specific). See DESIGN.md §6.
+
+pub mod allocator;
+pub mod block;
+pub mod config;
+pub mod driver;
+pub mod pool;
+pub mod stats;
+
+pub use allocator::{AllocError, AllocId, CachingAllocator};
+pub use config::{AllocatorConfig, CostModel, PoolKind};
+pub use driver::{DriverOom, SegmentId, SimDriver};
+pub use stats::{AllocEvent, AllocObserver, AllocStats, NullObserver, PhaseTag, StatSnapshot};

@@ -1,0 +1,126 @@
+//! Free-block pools: size-ordered sets supporting best-fit lookup, keyed
+//! `(size, BlockId)` exactly like PyTorch's `BlockComparator`.
+
+use super::block::BlockId;
+use std::collections::BTreeSet;
+use std::ops::Bound;
+
+/// One pool (small or large) of cached free blocks.
+#[derive(Debug, Default, Clone)]
+pub struct BlockPool {
+    set: BTreeSet<(u64, BlockId)>,
+    /// Total bytes cached in this pool (Σ sizes of free blocks).
+    cached_bytes: u64,
+}
+
+impl BlockPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, size: u64, id: BlockId) {
+        let fresh = self.set.insert((size, id));
+        debug_assert!(fresh, "block {id:?} already pooled");
+        self.cached_bytes += size;
+    }
+
+    pub fn remove(&mut self, size: u64, id: BlockId) {
+        let was = self.set.remove(&(size, id));
+        debug_assert!(was, "block {id:?} not in pool");
+        self.cached_bytes -= size;
+    }
+
+    /// Best fit: the smallest cached block with `size >= want`.
+    pub fn best_fit(&self, want: u64) -> Option<(u64, BlockId)> {
+        self.set
+            .range((Bound::Included((want, BlockId(0))), Bound::Unbounded))
+            .next()
+            .copied()
+    }
+
+    /// Best fit bounded above: PyTorch with `max_split_size` set refuses
+    /// to serve a request < max_split_size from an *oversized* (>
+    /// max_split_size) block unless the fit is close (within kLargeBuffer).
+    /// We expose the bound so the allocator can express that rule.
+    pub fn best_fit_bounded(&self, want: u64, max: u64) -> Option<(u64, BlockId)> {
+        self.best_fit(want).filter(|(sz, _)| *sz <= max)
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    pub fn cached_bytes(&self) -> u64 {
+        self.cached_bytes
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(u64, BlockId)> {
+        self.set.iter()
+    }
+
+    /// Drain every entry (used by empty_cache / OOM recovery paths, which
+    /// re-examine blocks segment-by-segment).
+    pub fn drain_all(&mut self) -> Vec<(u64, BlockId)> {
+        self.cached_bytes = 0;
+        std::mem::take(&mut self.set).into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_fit_picks_smallest_sufficient() {
+        let mut p = BlockPool::new();
+        p.insert(512, BlockId(1));
+        p.insert(2048, BlockId(2));
+        p.insert(4096, BlockId(3));
+        assert_eq!(p.best_fit(1024), Some((2048, BlockId(2))));
+        assert_eq!(p.best_fit(2048), Some((2048, BlockId(2))));
+        assert_eq!(p.best_fit(4097), None);
+        assert_eq!(p.cached_bytes(), 512 + 2048 + 4096);
+    }
+
+    #[test]
+    fn ties_broken_by_block_id() {
+        let mut p = BlockPool::new();
+        p.insert(1024, BlockId(9));
+        p.insert(1024, BlockId(3));
+        assert_eq!(p.best_fit(100), Some((1024, BlockId(3))));
+    }
+
+    #[test]
+    fn remove_updates_bytes() {
+        let mut p = BlockPool::new();
+        p.insert(1024, BlockId(1));
+        p.insert(512, BlockId(2));
+        p.remove(1024, BlockId(1));
+        assert_eq!(p.cached_bytes(), 512);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.best_fit(600), None);
+    }
+
+    #[test]
+    fn bounded_fit() {
+        let mut p = BlockPool::new();
+        p.insert(64 << 20, BlockId(1)); // 64 MiB oversized block
+        assert!(p.best_fit_bounded(1 << 20, 32 << 20).is_none());
+        assert!(p.best_fit_bounded(1 << 20, 64 << 20).is_some());
+    }
+
+    #[test]
+    fn drain_resets() {
+        let mut p = BlockPool::new();
+        p.insert(512, BlockId(1));
+        p.insert(1024, BlockId(2));
+        let drained = p.drain_all();
+        assert_eq!(drained.len(), 2);
+        assert!(p.is_empty());
+        assert_eq!(p.cached_bytes(), 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Allocator statistics and event stream.
+//!
+//! Definitions follow the paper (Appendix B) and PyTorch:
+//! * **reserved** — bytes held from the driver (Σ live segments);
+//! * **allocated** — bytes in live (allocated-state) blocks;
+//! * **fragmentation** — sampled *at each `cudaMalloc`* as
+//!   `reserved − allocated` at that instant: "the difference between
+//!   reserved and allocated memory when the allocator cannot satisfy the
+//!   requested size due to non-contiguous freed objects".
+//!
+//! The peak-tracking distinguishes `peak_reserved` and the fragmentation
+//! observed *at the time of the reserved peak* — exactly what Figure 1's
+//! red/yellow crosses mark.
+
+/// Phase tag attached to events (the profiler maps these to RLHF phases;
+/// the allocator itself only stores an opaque `u16`).
+pub type PhaseTag = u16;
+
+/// An observable allocator event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AllocEvent {
+    /// A request was served (either from cache or a fresh segment).
+    Alloc {
+        requested: u64,
+        rounded: u64,
+        cache_hit: bool,
+    },
+    /// A block was returned to the pool.
+    Free { size: u64 },
+    /// The allocator went to the driver.
+    CudaMalloc {
+        segment_bytes: u64,
+        /// The rounded request that forced this segment.
+        rounded: u64,
+        /// Fragmentation-caused sample (Appendix B): the cached free bytes
+        /// at this instant if they would have covered the request, else 0.
+        frag_sample: u64,
+    },
+    /// A segment was returned to the driver (empty_cache or OOM retry).
+    CudaFree { segment_bytes: u64 },
+    /// `empty_cache()` released this many segments / bytes.
+    EmptyCache { segments: u64, bytes: u64 },
+    /// OOM-retry path released cached segments before retrying.
+    OomRetry { released_bytes: u64 },
+}
+
+/// Point-in-time state attached to each event delivery.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StatSnapshot {
+    pub reserved: u64,
+    pub allocated: u64,
+    pub requested: u64,
+    /// Simulated time, microseconds, including driver latency.
+    pub time_us: f64,
+    pub phase: PhaseTag,
+}
+
+impl StatSnapshot {
+    /// Cached-but-unused bytes right now.
+    pub fn cached_free(&self) -> u64 {
+        self.reserved - self.allocated
+    }
+}
+
+/// Observer of the allocator's event stream (the profiler implements this).
+pub trait AllocObserver {
+    fn on_event(&mut self, event: &AllocEvent, state: &StatSnapshot);
+}
+
+/// No-op observer.
+pub struct NullObserver;
+impl AllocObserver for NullObserver {
+    fn on_event(&mut self, _event: &AllocEvent, _state: &StatSnapshot) {}
+}
+
+/// Aggregate counters maintained by the allocator itself (cheap, always on).
+#[derive(Debug, Clone, Default)]
+pub struct AllocStats {
+    pub reserved: u64,
+    pub allocated: u64,
+    /// Σ caller-requested bytes of live blocks (≤ allocated; the gap is
+    /// internal fragmentation from 512 B rounding).
+    pub requested: u64,
+    pub peak_reserved: u64,
+    pub peak_allocated: u64,
+    /// Fragmentation sample (reserved − allocated) recorded at the most
+    /// recent cudaMalloc.
+    pub last_frag_sample: u64,
+    /// Max fragmentation sample seen at any cudaMalloc — the paper's
+    /// "Frag." column.
+    pub max_frag_sample: u64,
+    /// reserved − allocated at the moment `peak_reserved` was set: the
+    /// fragmentation overhead at the peak (Figure 1's yellow gap).
+    pub frag_at_peak_reserved: u64,
+    pub num_allocs: u64,
+    pub num_frees: u64,
+    pub num_cache_hits: u64,
+    pub num_cuda_mallocs: u64,
+    pub num_cuda_frees: u64,
+    pub num_empty_cache: u64,
+    /// Simulated allocator+driver time, microseconds.
+    pub time_us: f64,
+}
+
+impl AllocStats {
+    /// Update both counters. `peak_reserved` / `frag_at_peak_reserved` are
+    /// maintained by the allocator at cudaMalloc time (reserved only rises
+    /// there, and the paper's fragmentation metric is defined at that
+    /// event); this only tracks the allocated peak.
+    pub fn sync(&mut self, reserved: u64, allocated: u64) {
+        self.reserved = reserved;
+        self.allocated = allocated;
+        if allocated > self.peak_allocated {
+            self.peak_allocated = allocated;
+        }
+        if reserved > self.peak_reserved {
+            // Only reachable from the allocator's cudaMalloc path, which
+            // records the fragmentation sample itself before syncing.
+            self.peak_reserved = reserved;
+        }
+    }
+
+    /// The paper's "memory fragmentation overhead": peak reserved minus
+    /// what the peak would have been without the fragmentation present at
+    /// that moment.
+    pub fn frag_overhead(&self) -> u64 {
+        self.frag_at_peak_reserved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracking() {
+        let mut s = AllocStats::default();
+        s.sync(150, 100);
+        assert_eq!(s.peak_reserved, 150);
+        // Lower reserved does not move the peak.
+        s.sync(120, 100);
+        assert_eq!(s.peak_reserved, 150);
+        s.sync(200, 180);
+        assert_eq!(s.peak_reserved, 200);
+        assert_eq!(s.peak_allocated, 180);
+    }
+
+    #[test]
+    fn snapshot_cached_free() {
+        let snap = StatSnapshot {
+            reserved: 100,
+            allocated: 70,
+            ..Default::default()
+        };
+        assert_eq!(snap.cached_free(), 30);
+    }
+}

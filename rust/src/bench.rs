@@ -1,0 +1,71 @@
+//! Mini benchmark harness (no `criterion` offline): warmup + timed
+//! iterations with summary statistics, plus helpers to print paper-style
+//! result blocks and dump JSON for EXPERIMENTS.md.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub summary: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>10.3} ms/iter (median {:.3}, p95 {:.3}, n={})",
+            self.name,
+            s.mean * 1e3,
+            s.median * 1e3,
+            s.p95 * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples),
+        iters,
+    }
+}
+
+/// Throughput helper: ops per second given per-iter op count.
+pub fn throughput(result: &BenchResult, ops_per_iter: f64) -> f64 {
+    ops_per_iter / result.summary.median
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let mut count = 0u64;
+        let r = bench("spin", 1, 5, || {
+            for i in 0..10_000u64 {
+                count = count.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.report().contains("spin"));
+        assert!(throughput(&r, 10_000.0) > 0.0);
+    }
+}

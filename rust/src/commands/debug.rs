@@ -1,0 +1,61 @@
+//! `rlhf-mem debug` — calibration lens: ideal residency composition at the
+//! peak, per-phase ideal peaks, and the fragmentation samples near the
+//! reserved peak.
+
+use rlhf_mem::experiment::{run_trace, RTX3090_HBM};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::sim::{build_trace, SimScenario};
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::trace::analysis::{peak_composition, phase_peaks};
+use rlhf_mem::util::bytes::fmt_bytes;
+use rlhf_mem::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<(), String> {
+    let strat = match args.get_or("strategy", "none") {
+        "none" => StrategyConfig::none(),
+        "zero1" => StrategyConfig::zero1(),
+        "zero2" => StrategyConfig::zero2(),
+        "zero3" => StrategyConfig::zero3(),
+        "offload" => StrategyConfig::zero3_offload(),
+        "ckpt" => StrategyConfig::checkpointing(),
+        "all" => StrategyConfig::all_enabled(),
+        other => return Err(format!("unknown strategy {other}")),
+    };
+    let policy = if args.bool_flag("ec") { EmptyCachePolicy::AfterBoth } else { EmptyCachePolicy::Never };
+    let mut scn = SimScenario::deepspeed_opt(strat, policy);
+    scn.steps = args.get_u64("steps", 2)?;
+    if args.get_or("framework", "ds").starts_with("c") {
+        scn.framework = rlhf_mem::frameworks::FrameworkProfile::colossal_chat();
+        if args.get_or("model", "opt") == "gpt2" {
+            scn.models = rlhf_mem::rlhf::models::RlhfModelSet::gpt2();
+        }
+    }
+    let trace = build_trace(&scn);
+
+    let comp = peak_composition(&trace);
+    println!("== ideal residency peak: {} in {} ==", fmt_bytes(comp.total), comp.phase.name());
+    for (tag, bytes) in &comp.by_tag {
+        if *bytes > 0 {
+            println!("  {:<18} {}", tag.name(), fmt_bytes(*bytes));
+        }
+    }
+    println!("\n== per-phase ideal peaks ==");
+    for (phase, bytes) in phase_peaks(&trace) {
+        println!("  {:<18} {}", phase.name(), fmt_bytes(bytes));
+    }
+
+    let res = run_trace(&trace, RTX3090_HBM);
+    let s = &res.summary;
+    println!("\n== allocator view ==");
+    println!("  peak reserved {}   frag-at-peak {}   peak allocated {}   peak phase {}",
+        fmt_bytes(s.peak_reserved), fmt_bytes(s.frag_at_peak), fmt_bytes(s.peak_allocated), s.peak_phase.name());
+    println!("  cudaMallocs {}   frag (max sample) {}", s.cuda_mallocs, fmt_bytes(s.frag));
+    // Top fragmentation samples.
+    let mut samples = res.profiler.frag_samples.clone();
+    samples.sort_by_key(|x| std::cmp::Reverse(x.frag));
+    println!("\n== top frag samples (phase, frag, request) ==");
+    for s in samples.iter().take(12) {
+        println!("  {:<18} frag {:<12} req {}", s.phase.name(), fmt_bytes(s.frag), fmt_bytes(s.requested));
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! CLI subcommand implementations.
+
+pub mod ablation;
+pub mod debug;
+pub mod genablation;
+pub mod profile;
+pub mod figure1;
+pub mod overhead;
+pub mod phases;
+pub mod quickstart;
+pub mod table1;
+pub mod table2;
+pub mod train;

@@ -1,0 +1,46 @@
+//! `rlhf-mem overhead` — §3.3 (E8): memory saved vs end-to-end time cost of
+//! empty_cache() across the paper's bold Table-1 rows.
+
+use rlhf_mem::experiment::RTX3090_HBM;
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::report::paper::measure_row_full;
+use rlhf_mem::report::table::TextTable;
+use rlhf_mem::rlhf::sim::SimScenario;
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::util::cli::Args;
+use rlhf_mem::util::stats::geomean;
+
+pub fn run(args: &Args) -> Result<(), String> {
+    let steps = args.get_u64("steps", 3)?;
+    let mut t = TextTable::new(&["Row", "Mem saved %", "Time overhead %"]);
+    let mut savings = Vec::new();
+    let mut overheads = Vec::new();
+    let rows: Vec<(&str, SimScenario)> = vec![
+        ("DS/OPT ZeRO-3", SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never)),
+        ("DS/OPT ZeRO-3+Offload", SimScenario::deepspeed_opt(StrategyConfig::zero3_offload(), EmptyCachePolicy::Never)),
+        ("DS/OPT All", SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), EmptyCachePolicy::Never)),
+        ("CC/OPT Ckpt", SimScenario::colossal_opt(StrategyConfig::checkpointing(), EmptyCachePolicy::Never)),
+        ("CC/GPT2 None", SimScenario::colossal_gpt2(StrategyConfig::none(), EmptyCachePolicy::Never)),
+        ("CC/GPT2 ZeRO-3", SimScenario::colossal_gpt2(StrategyConfig::zero3(), EmptyCachePolicy::Never)),
+    ];
+    for (label, mut scn) in rows {
+        scn.steps = steps;
+        let (row, orig, ec) = measure_row_full(label, &scn, RTX3090_HBM);
+        let saved = 1.0 - row.with_empty_cache.peak_reserved as f64 / row.original.peak_reserved as f64;
+        let overhead = ec.summary.total_time_us / orig.summary.total_time_us - 1.0;
+        savings.push(f64::max(1.0 - saved, 1e-9));
+        overheads.push(f64::max(1.0 + overhead, 1e-9));
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", saved * 100.0),
+            format!("{:.2}", overhead * 100.0),
+        ]);
+    }
+    println!("§3.3 empty_cache cost/benefit — {steps} steps");
+    println!("{}", t.render());
+    let mem = (1.0 - geomean(&savings)) * 100.0;
+    let time = (geomean(&overheads) - 1.0) * 100.0;
+    println!("geomean memory saved: {mem:.1}%   (paper: ~25% on bold rows)");
+    println!("geomean time overhead: {time:.2}% (paper: ~2%)");
+    Ok(())
+}

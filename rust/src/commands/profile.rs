@@ -1,0 +1,49 @@
+//! `rlhf-mem profile <config.json>` — run a user-defined experiment from a
+//! JSON config (see `config/mod.rs` for the schema) and print the profile.
+
+use rlhf_mem::config::ExperimentConfig;
+use rlhf_mem::experiment::run_scenario;
+use rlhf_mem::util::bytes::fmt_bytes;
+use rlhf_mem::util::cli::Args;
+use rlhf_mem::util::json::Json;
+
+pub fn run(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .ok_or("usage: rlhf-mem profile <config.json>")?;
+    let cfg = ExperimentConfig::from_file(path)?;
+    let res = run_scenario(&cfg.scenario, cfg.capacity);
+    let s = &res.summary;
+    println!(
+        "{} / {} + {} / {} / world {}",
+        cfg.scenario.framework.kind.name(),
+        cfg.scenario.models.policy_arch.name,
+        cfg.scenario.models.value_arch.name,
+        cfg.scenario.strategy.label(),
+        cfg.scenario.world
+    );
+    println!("  peak reserved : {}", fmt_bytes(s.peak_reserved));
+    println!("  fragmentation : {}", fmt_bytes(s.frag));
+    println!("  peak allocated: {}", fmt_bytes(s.peak_allocated));
+    println!("  peak phase    : {}", s.peak_phase.name());
+    println!("  sim time      : {:.2} s", s.total_time_us / 1e6);
+    if s.oom {
+        println!("  !! OOM — the workload does not fit the configured device");
+    }
+    if args.bool_flag("chart") {
+        println!("\n{}", res.profiler.timeline.ascii_chart(100, 14));
+    }
+    if let Some(out) = args.flag("json") {
+        let doc = Json::obj(vec![
+            ("reserved", Json::from(s.peak_reserved)),
+            ("frag", Json::from(s.frag)),
+            ("allocated", Json::from(s.peak_allocated)),
+            ("peak_phase", Json::str(s.peak_phase.name())),
+            ("oom", Json::from(s.oom)),
+        ]);
+        std::fs::write(out, doc.to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}

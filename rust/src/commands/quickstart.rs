@@ -1,0 +1,26 @@
+//! `rlhf-mem quickstart` — a fast smoke run: one PPO step of the
+//! DeepSpeed-Chat/OPT scenario with the profiler attached, printing the
+//! summary and a small timeline chart.
+
+use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::sim::SimScenario;
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::util::bytes::fmt_bytes;
+use rlhf_mem::util::cli::Args;
+
+pub fn run(_args: &Args) -> Result<(), String> {
+    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), EmptyCachePolicy::Never);
+    scn.steps = 1;
+    let res = run_scenario(&scn, RTX3090_HBM);
+    let s = &res.summary;
+    println!("DeepSpeed-Chat / OPT / All-Enabled — 1 PPO step on a simulated 24 GiB GPU");
+    println!("  peak reserved : {}", fmt_bytes(s.peak_reserved));
+    println!("  fragmentation : {} ({:.0}% overhead)", fmt_bytes(s.frag), s.frag_overhead_ratio() * 100.0);
+    println!("  peak allocated: {}", fmt_bytes(s.peak_allocated));
+    println!("  peak phase    : {}", s.peak_phase.name());
+    println!("  cudaMallocs   : {}", s.cuda_mallocs);
+    println!("  sim time      : {:.2} s", s.total_time_us / 1e6);
+    println!("\n{}", res.profiler.timeline.ascii_chart(100, 14));
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! `rlhf-mem table1` — regenerate Table 1: the strategy sweep over
+//! DeepSpeed-Chat/OPT, ColossalChat/OPT and ColossalChat/GPT-2, with and
+//! without `empty_cache()`.
+
+use rlhf_mem::experiment::RTX3090_HBM;
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::report::paper::{paper_table1, render_rows, StrategyRow};
+use rlhf_mem::rlhf::sim::SimScenario;
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::util::cli::Args;
+use rlhf_mem::util::json::Json;
+
+pub fn run(args: &Args) -> Result<(), String> {
+    let steps = args.get_u64("steps", 3)?;
+    let which = args.get_or("framework", "all").to_string();
+    let compare = args.bool_flag("compare-paper");
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    let blocks: Vec<(&str, &str, Box<dyn Fn(StrategyConfig) -> SimScenario>)> = vec![
+        (
+            "DeepSpeed-Chat",
+            "OPT",
+            Box::new(move |s| {
+                let mut scn = SimScenario::deepspeed_opt(s, EmptyCachePolicy::Never);
+                scn.steps = steps;
+                scn
+            }),
+        ),
+        (
+            "ColossalChat",
+            "OPT",
+            Box::new(move |s| {
+                let mut scn = SimScenario::colossal_opt(s, EmptyCachePolicy::Never);
+                scn.steps = steps;
+                scn
+            }),
+        ),
+        (
+            "ColossalChat",
+            "GPT-2",
+            Box::new(move |s| {
+                let mut scn = SimScenario::colossal_gpt2(s, EmptyCachePolicy::Never);
+                scn.steps = steps;
+                scn
+            }),
+        ),
+    ];
+
+    for (fw, model, mk) in &blocks {
+        if which != "all" {
+            let short = if *fw == "DeepSpeed-Chat" { "ds" } else { "cc" };
+            if which != short && which != *fw {
+                continue;
+            }
+        }
+        let rows_spec = if *fw == "DeepSpeed-Chat" {
+            StrategyConfig::table1_deepspeed_rows()
+        } else {
+            StrategyConfig::table1_colossal_rows()
+        };
+        let mut rows = Vec::new();
+        for (label, strat) in rows_spec {
+            let scn = mk(strat);
+            let row = StrategyRow::measure(label, &scn, RTX3090_HBM);
+            json_rows.push(row_json(fw, model, &row));
+            rows.push(row);
+        }
+        println!("{}", render_rows(&format!("{fw} / {model}"), &rows));
+        if compare {
+            print_paper_block(fw, model);
+        }
+    }
+
+    if let Some(path) = args.flag("json") {
+        let doc = Json::obj(vec![("table1", Json::Arr(json_rows))]);
+        std::fs::write(path, doc.to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn row_json(fw: &str, model: &str, row: &StrategyRow) -> Json {
+    Json::obj(vec![
+        ("framework", Json::str(fw)),
+        ("model", Json::str(model)),
+        ("strategy", Json::str(row.strategy.clone())),
+        ("reserved", Json::from(row.original.peak_reserved)),
+        ("frag", Json::from(row.original.frag)),
+        ("allocated", Json::from(row.original.peak_allocated)),
+        (
+            "ec_reserved",
+            Json::from(row.with_empty_cache.peak_reserved),
+        ),
+        ("ec_frag", Json::from(row.with_empty_cache.frag)),
+        ("peak_phase", Json::str(row.original.peak_phase.name())),
+        ("oom", Json::from(row.original.oom)),
+    ])
+}
+
+fn print_paper_block(fw: &str, model: &str) {
+    println!("  paper reference ({fw}/{model}):");
+    for (pfw, pmodel, strat, v) in paper_table1() {
+        if pfw == fw && pmodel == model {
+            println!(
+                "    {strat:<28} {:>5.1} {:>5.1} {:>5.1} | {:>5.1} {:>5.1}",
+                v[0], v[1], v[2], v[3], v[4]
+            );
+        }
+    }
+    println!();
+}

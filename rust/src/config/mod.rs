@@ -1,0 +1,209 @@
+//! Experiment configuration: JSON files → [`SimScenario`], so users can
+//! define custom sweeps without recompiling (`rlhf-mem profile cfg.json`).
+//!
+//! Example:
+//! ```json
+//! {
+//!   "framework": "deepspeed-chat",
+//!   "policy_model": "opt-1.3b",
+//!   "value_model": "opt-350m",
+//!   "strategy": {"zero": 3, "cpu_offload": true, "grad_checkpoint": false,
+//!                 "lora_r": 128},
+//!   "world": 4,
+//!   "gpu": "rtx3090",
+//!   "capacity_gib": 24,
+//!   "steps": 3,
+//!   "empty_cache": "after_inference",
+//!   "rollout_batch": 2, "prompt_len": 256, "gen_len": 256
+//! }
+//! ```
+
+use crate::frameworks::{FrameworkKind, FrameworkProfile};
+use crate::mem::{LoraSpec, LoraTargets, ModelArch};
+use crate::policy::EmptyCachePolicy;
+use crate::rlhf::cost::GpuSpec;
+use crate::rlhf::models::RlhfModelSet;
+use crate::rlhf::sim::{ScenarioMode, SimScenario};
+use crate::strategies::{StrategyConfig, ZeroStage};
+use crate::util::bytes::GIB;
+use crate::util::json::{parse, Json};
+
+/// A fully-resolved experiment: the scenario plus device capacity.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub scenario: SimScenario,
+    pub capacity: u64,
+}
+
+impl ExperimentConfig {
+    pub fn from_file(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json_text(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn from_json_text(text: &str) -> Result<ExperimentConfig, String> {
+        let j = parse(text)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
+        // Framework + its profile defaults.
+        let fw_name = j.get("framework").and_then(|v| v.as_str()).unwrap_or("deepspeed-chat");
+        let kind = FrameworkKind::by_name(fw_name)
+            .ok_or_else(|| format!("unknown framework '{fw_name}'"))?;
+        let mut framework = FrameworkProfile::by_kind(kind);
+        if let Some(v) = j.get("rollout_batch").and_then(|v| v.as_u64()) {
+            framework.rollout_batch = v;
+        }
+        if let Some(v) = j.get("infer_micro_batch").and_then(|v| v.as_u64()) {
+            framework.infer_micro_batch = v;
+        }
+        if let Some(v) = j.get("train_micro_batch").and_then(|v| v.as_u64()) {
+            framework.train_micro_batch = v;
+        }
+        if let Some(v) = j.get("prompt_len").and_then(|v| v.as_u64()) {
+            framework.prompt_len = v;
+        }
+        if let Some(v) = j.get("gen_len").and_then(|v| v.as_u64()) {
+            framework.gen_len = v;
+        }
+
+        // Models.
+        let policy_name = j.get("policy_model").and_then(|v| v.as_str()).unwrap_or("opt-1.3b");
+        let value_name = j.get("value_model").and_then(|v| v.as_str()).unwrap_or("opt-350m");
+        let policy_arch = ModelArch::by_name(policy_name)
+            .ok_or_else(|| format!("unknown model '{policy_name}'"))?;
+        let value_arch = ModelArch::by_name(value_name)
+            .ok_or_else(|| format!("unknown model '{value_name}'"))?;
+
+        // Strategy.
+        let strategy = match j.get("strategy") {
+            None => StrategyConfig::none(),
+            Some(s) => {
+                let zero = s.get("zero").and_then(|v| v.as_u64()).unwrap_or(0);
+                let zero = ZeroStage::from_stage(zero as u8)
+                    .ok_or_else(|| format!("bad zero stage {zero}"))?;
+                let lora = match s.get("lora_r").and_then(|v| v.as_u64()) {
+                    Some(0) | None => None,
+                    Some(r) => Some(LoraSpec {
+                        r,
+                        targets: LoraTargets::AllLinear,
+                    }),
+                };
+                StrategyConfig {
+                    zero,
+                    cpu_offload: s.get("cpu_offload").and_then(|v| v.as_bool()).unwrap_or(false),
+                    grad_checkpoint: s
+                        .get("grad_checkpoint")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                    lora,
+                }
+            }
+        };
+
+        let policy_name = j.get("empty_cache").and_then(|v| v.as_str()).unwrap_or("never");
+        let policy = EmptyCachePolicy::by_name(policy_name)
+            .ok_or_else(|| format!("unknown empty_cache policy '{policy_name}'"))?;
+
+        let gpu = match j.get("gpu").and_then(|v| v.as_str()).unwrap_or("rtx3090") {
+            "rtx3090" => GpuSpec::rtx3090(),
+            "a100" | "a100-80g" => GpuSpec::a100_80g(),
+            other => return Err(format!("unknown gpu '{other}'")),
+        };
+        let capacity = j
+            .get("capacity_gib")
+            .and_then(|v| v.as_u64())
+            .unwrap_or(24)
+            * GIB;
+
+        let mode = match j.get("mode").and_then(|v| v.as_str()).unwrap_or("full") {
+            "full" => ScenarioMode::Full,
+            "train_both" => ScenarioMode::TrainBothPrecollected,
+            "train_actor" => ScenarioMode::TrainActorOnly,
+            other => return Err(format!("unknown mode '{other}'")),
+        };
+
+        let scenario = SimScenario {
+            framework,
+            models: RlhfModelSet {
+                policy_arch,
+                value_arch,
+            },
+            strategy,
+            world: j.get("world").and_then(|v| v.as_u64()).unwrap_or(4),
+            policy,
+            steps: j.get("steps").and_then(|v| v.as_u64()).unwrap_or(3),
+            mode,
+            gpu,
+            seed: j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0x5EED),
+            len_jitter: j
+                .get("len_jitter")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(kind == FrameworkKind::ColossalChat),
+        };
+        Ok(ExperimentConfig { scenario, capacity })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{
+              "framework": "colossalchat",
+              "policy_model": "gpt2-xl",
+              "value_model": "gpt2-medium",
+              "strategy": {"zero": 3, "cpu_offload": true, "lora_r": 128},
+              "world": 8,
+              "capacity_gib": 80,
+              "gpu": "a100",
+              "steps": 2,
+              "empty_cache": "after_inference",
+              "rollout_batch": 16
+            }"#,
+        )
+        .unwrap();
+        let s = &cfg.scenario;
+        assert_eq!(s.models.policy_arch.name, "gpt2-xl");
+        assert_eq!(s.world, 8);
+        assert_eq!(s.strategy.zero, ZeroStage::Z3);
+        assert!(s.strategy.cpu_offload);
+        assert_eq!(s.framework.rollout_batch, 16);
+        assert_eq!(s.policy, EmptyCachePolicy::AfterInference);
+        assert_eq!(cfg.capacity, 80 * GIB);
+        assert!(s.len_jitter, "colossal defaults to ragged lengths");
+    }
+
+    #[test]
+    fn minimal_config_uses_defaults() {
+        let cfg = ExperimentConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.scenario.models.policy_arch.name, "opt-1.3b");
+        assert_eq!(cfg.scenario.world, 4);
+        assert_eq!(cfg.capacity, 24 * GIB);
+        assert!(!cfg.scenario.len_jitter, "deepspeed pads");
+    }
+
+    #[test]
+    fn rejects_unknown_values() {
+        assert!(ExperimentConfig::from_json_text(r#"{"framework": "x"}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"policy_model": "x"}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"strategy": {"zero": 9}}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"empty_cache": "x"}"#).is_err());
+        assert!(ExperimentConfig::from_json_text("not json").is_err());
+    }
+
+    #[test]
+    fn config_runs_end_to_end() {
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{"policy_model": "opt-350m", "value_model": "opt-350m", "steps": 1}"#,
+        )
+        .unwrap();
+        let res = crate::experiment::run_scenario(&cfg.scenario, cfg.capacity);
+        assert!(!res.summary.oom);
+        assert!(res.summary.peak_reserved > 0);
+    }
+}

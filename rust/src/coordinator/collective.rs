@@ -1,0 +1,45 @@
+//! Ring-collective cost/byte accounting (all-gather, reduce-scatter,
+//! all-reduce, broadcast) used by the cost model and the node scheduler.
+
+/// Bytes each rank RECEIVES over the wire for a ring collective moving a
+/// `total`-byte tensor across `world` ranks.
+pub fn ring_wire_bytes(total: u64, world: u64) -> u64 {
+    if world <= 1 {
+        return 0;
+    }
+    total / world * (world - 1)
+}
+
+/// All-reduce = reduce-scatter + all-gather (2x the wire volume).
+pub fn allreduce_wire_bytes(total: u64, world: u64) -> u64 {
+    2 * ring_wire_bytes(total, world)
+}
+
+/// Time for a ring collective at `link_bw` bytes/s with per-hop latency.
+pub fn ring_time_us(total: u64, world: u64, link_bw: f64, hop_latency_us: f64) -> f64 {
+    if world <= 1 {
+        return 0.0;
+    }
+    let wire = ring_wire_bytes(total, world) as f64;
+    wire / link_bw * 1e6 + hop_latency_us * (world - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_volume() {
+        assert_eq!(ring_wire_bytes(1000, 1), 0);
+        assert_eq!(ring_wire_bytes(1000, 4), 750);
+        assert_eq!(allreduce_wire_bytes(1000, 4), 1500);
+    }
+
+    #[test]
+    fn time_scales() {
+        let t4 = ring_time_us(1 << 30, 4, 12e9, 5.0);
+        let t8 = ring_time_us(1 << 30, 8, 12e9, 5.0);
+        assert!(t8 > t4);
+        assert_eq!(ring_time_us(1 << 30, 1, 12e9, 5.0), 0.0);
+    }
+}

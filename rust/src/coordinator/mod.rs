@@ -1,0 +1,8 @@
+//! Multi-GPU coordination: collectives accounting, ZeRO partition maps,
+//! and the lockstep simulated node.
+
+pub mod collective;
+pub mod node;
+pub mod partition;
+
+pub use node::{run_node, NodeResult};

@@ -1,0 +1,69 @@
+//! Simulated multi-GPU node: N ranks in lockstep data parallelism, each
+//! with its own allocator + profiler. RLHF data parallelism is symmetric
+//! (every rank runs the same phases on same-shaped shards), so each rank
+//! replays the same op stream; the node verifies cross-rank symmetry and
+//! reports per-rank and aggregate statistics.
+
+use crate::experiment::{run_trace, ExperimentResult};
+use crate::profiler::ProfileSummary;
+use crate::rlhf::sim::{build_trace, SimScenario};
+
+/// Per-node results.
+pub struct NodeResult {
+    pub ranks: Vec<ExperimentResult>,
+}
+
+impl NodeResult {
+    pub fn rank0(&self) -> &ProfileSummary {
+        &self.ranks[0].summary
+    }
+
+    /// All ranks must report identical peaks (symmetric DP).
+    pub fn check_symmetry(&self) -> Result<(), String> {
+        let r0 = &self.ranks[0].summary;
+        for (i, r) in self.ranks.iter().enumerate().skip(1) {
+            if r.summary.peak_reserved != r0.peak_reserved
+                || r.summary.peak_allocated != r0.peak_allocated
+            {
+                return Err(format!(
+                    "rank {i} diverged: {:?} vs {:?}",
+                    (r.summary.peak_reserved, r.summary.peak_allocated),
+                    (r0.peak_reserved, r0.peak_allocated)
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Node-wide peak reserved (Σ ranks).
+    pub fn total_peak_reserved(&self) -> u64 {
+        self.ranks.iter().map(|r| r.summary.peak_reserved).sum()
+    }
+}
+
+/// Run `scn` on all `scn.world` ranks of a simulated node.
+pub fn run_node(scn: &SimScenario, per_gpu_capacity: u64) -> NodeResult {
+    let trace = build_trace(scn);
+    let ranks = (0..scn.world)
+        .map(|_| run_trace(&trace, per_gpu_capacity))
+        .collect();
+    NodeResult { ranks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::RTX3090_HBM;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+
+    #[test]
+    fn four_rank_node_is_symmetric() {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+        scn.steps = 1;
+        let node = run_node(&scn, RTX3090_HBM);
+        assert_eq!(node.ranks.len(), 4);
+        node.check_symmetry().unwrap();
+        assert_eq!(node.total_peak_reserved(), 4 * node.rank0().peak_reserved);
+    }
+}

@@ -1,0 +1,90 @@
+//! ZeRO partition bookkeeping: which byte range of each flat tensor every
+//! rank owns. Invariants (coverage, disjointness) are property-tested.
+
+/// Byte range [start, end) of one rank's shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub rank: u64,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Shard {
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Even partition of `total` bytes across `world` ranks (DeepSpeed flat
+/// buffer style: ceil-divided, last rank may be short).
+pub fn partition(total: u64, world: u64) -> Vec<Shard> {
+    assert!(world > 0);
+    let per = total.div_ceil(world);
+    (0..world)
+        .map(|rank| {
+            let start = (per * rank).min(total);
+            let end = (per * (rank + 1)).min(total);
+            Shard { rank, start, end }
+        })
+        .collect()
+}
+
+/// The rank owning byte offset `off`.
+pub fn owner_of(total: u64, world: u64, off: u64) -> u64 {
+    assert!(off < total);
+    let per = total.div_ceil(world);
+    off / per
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn covers_and_disjoint() {
+        let shards = partition(1000, 4);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0].start, 0);
+        assert_eq!(shards.last().unwrap().end, 1000);
+        for w in shards.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn property_coverage_random() {
+        // In-repo property test (no proptest offline): random totals and
+        // world sizes; shards must tile [0, total) exactly and owner_of
+        // must agree with the shard table.
+        let mut rng = Rng::seeded(42);
+        for _ in 0..500 {
+            let total = rng.gen_range(1_000_000) + 1;
+            let world = rng.gen_range(16) + 1;
+            let shards = partition(total, world);
+            let mut covered = 0;
+            for s in &shards {
+                assert!(s.start <= s.end);
+                covered += s.len();
+            }
+            assert_eq!(covered, total, "total {total} world {world}");
+            for _ in 0..20 {
+                let off = rng.gen_range(total);
+                let owner = owner_of(total, world, off);
+                let s = &shards[owner as usize];
+                assert!(s.start <= off && off < s.end);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let shards = partition(3, 8);
+        let covered: u64 = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(covered, 3);
+        assert_eq!(partition(0, 4).iter().map(|s| s.len()).sum::<u64>(), 0);
+    }
+}

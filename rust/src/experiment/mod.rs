@@ -1,0 +1,110 @@
+//! Experiment runner: scenario → trace → allocator+profiler → summary.
+//! This is the API every bench, example and CLI subcommand calls.
+
+use crate::alloc::CachingAllocator;
+use crate::profiler::{MemoryProfiler, ProfileSummary};
+use crate::rlhf::sim::{build_trace, SimScenario};
+use crate::trace::{replay, PhaseKind, PhaseSink, ReplayResult};
+use crate::util::bytes::GIB;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Adapter so an `Rc<RefCell<MemoryProfiler>>` can serve as both the
+/// allocator observer and the replay phase sink.
+pub struct ProfilerSink(pub Rc<RefCell<MemoryProfiler>>);
+
+impl PhaseSink for ProfilerSink {
+    fn on_phase(&mut self, p: PhaseKind, a: &CachingAllocator, c: f64) {
+        self.0.borrow_mut().on_phase(p, a, c);
+    }
+    fn on_step_end(&mut self, s: u64, a: &CachingAllocator, c: f64) {
+        self.0.borrow_mut().on_step_end(s, a, c);
+    }
+}
+
+/// Result of one profiled run.
+pub struct ExperimentResult {
+    pub summary: ProfileSummary,
+    pub profiler: MemoryProfiler,
+    pub replay: ReplayResult,
+    pub final_reserved: u64,
+    pub final_allocated: u64,
+}
+
+/// GPU capacities of the paper's two testbeds.
+pub const RTX3090_HBM: u64 = 24 * GIB;
+pub const A100_HBM: u64 = 80 * GIB;
+
+/// Run one scenario on a device of `capacity` bytes and collect the
+/// profile. Replay continues to completion or first OOM.
+pub fn run_scenario(scn: &SimScenario, capacity: u64) -> ExperimentResult {
+    let trace = build_trace(scn);
+    run_trace(&trace, capacity)
+}
+
+/// Run a pre-built trace (used by benches that sweep policies over the
+/// same workload).
+pub fn run_trace(trace: &crate::trace::Trace, capacity: u64) -> ExperimentResult {
+    let prof = Rc::new(RefCell::new(MemoryProfiler::new()));
+    let mut alloc = CachingAllocator::with_default_config(capacity);
+    alloc.set_observer(prof.clone());
+    let replay_res = {
+        let mut sink = ProfilerSink(prof.clone());
+        replay(trace, &mut alloc, &mut sink)
+    };
+    debug_assert!(alloc.validate().is_ok(), "{:?}", alloc.validate());
+    let final_reserved = alloc.reserved();
+    let final_allocated = alloc.allocated();
+    // Detach the observer by dropping the allocator; unwrap the profiler.
+    alloc.clear_observer();
+    let profiler = Rc::try_unwrap(prof)
+        .ok()
+        .expect("profiler still shared")
+        .into_inner();
+    let summary = ProfileSummary::collect(&profiler, &alloc, &replay_res);
+    ExperimentResult {
+        summary,
+        profiler,
+        replay: replay_res,
+        final_reserved,
+        final_allocated,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+
+    #[test]
+    fn deepspeed_none_row_runs() {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 2;
+        let res = run_scenario(&scn, RTX3090_HBM);
+        assert!(!res.summary.oom, "must fit in 24 GiB: {:?}", res.summary);
+        // Peak must be in the GiB range (sanity).
+        assert!(res.summary.peak_reserved > 8 * GIB);
+        assert!(res.summary.peak_reserved < 24 * GIB);
+        assert!(res.summary.peak_allocated <= res.summary.peak_reserved);
+        assert!(res.profiler.timeline.points().len() > 50);
+    }
+
+    #[test]
+    fn empty_cache_policy_reduces_peak_reserved() {
+        let mk = |policy| {
+            let mut scn = SimScenario::deepspeed_opt(StrategyConfig::zero3(), policy);
+            scn.steps = 2;
+            run_scenario(&scn, RTX3090_HBM).summary
+        };
+        let never = mk(EmptyCachePolicy::Never);
+        let both = mk(EmptyCachePolicy::AfterBoth);
+        assert!(
+            both.frag < never.frag || both.peak_reserved <= never.peak_reserved,
+            "empty_cache must not increase frag: never={:?} both={:?}",
+            (never.peak_reserved, never.frag),
+            (both.peak_reserved, both.frag)
+        );
+        assert!(both.empty_cache_calls > 0);
+    }
+}

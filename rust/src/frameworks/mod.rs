@@ -1,0 +1,177 @@
+//! Framework profiles: what differs between DeepSpeed-Chat and
+//! ColossalChat as far as memory behaviour is concerned — phase structure,
+//! batching defaults, generation implementation, and quirks like
+//! ColossalChat offloading the inference models to the CPU while the actor
+//! and critic train (paper §3, "Workload and Setting").
+
+use crate::strategies::{StrategyConfig, ZeroStage};
+
+/// Which RLHF framework's behaviour to reproduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameworkKind {
+    DeepSpeedChat,
+    ColossalChat,
+}
+
+impl FrameworkKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameworkKind::DeepSpeedChat => "DeepSpeed-Chat",
+            FrameworkKind::ColossalChat => "ColossalChat",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s {
+            "deepspeed-chat" | "deepspeed" | "ds" => Some(Self::DeepSpeedChat),
+            "colossal-chat" | "colossalchat" | "colossal" | "cc" => Some(Self::ColossalChat),
+            _ => None,
+        }
+    }
+}
+
+/// How `generate()` manages logits (paper Appendix B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GenerationImpl {
+    /// HuggingFace-style: per-step `[b, vocab]` logits, dynamic KV concat.
+    HuggingFace,
+    /// The original ColossalChat implementation the paper replaced: keeps
+    /// the full `[b, s, vocab]` logits of every step ("exceptionally
+    /// high" memory).
+    ColossalOriginal,
+}
+
+/// A framework's memory-relevant configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameworkProfile {
+    pub kind: FrameworkKind,
+    /// Rollout (experience) batch per GPU.
+    pub rollout_batch: u64,
+    /// Micro-batch used for the four inference evaluations.
+    pub infer_micro_batch: u64,
+    /// Micro-batch used for actor/critic training.
+    pub train_micro_batch: u64,
+    pub prompt_len: u64,
+    pub gen_len: u64,
+    pub generation: GenerationImpl,
+    /// ColossalChat: move reference+reward replicas to host during the
+    /// training phases (re-uploaded next experience phase).
+    pub offload_inference_models_during_training: bool,
+    /// PPO epochs over each experience batch.
+    pub ppo_epochs: u64,
+    /// DeepSpeed-Chat hybrid engine: a fused inference-specialized copy of
+    /// the actor's weights lives alongside the training copy (except under
+    /// ZeRO-3, where generation materializes it transiently from gathers).
+    pub hybrid_engine: bool,
+}
+
+impl FrameworkProfile {
+    /// DeepSpeed-Chat defaults (paper: batch size 2; seqs 256 prompt +
+    /// 256 generated).
+    pub fn deepspeed_chat() -> Self {
+        FrameworkProfile {
+            kind: FrameworkKind::DeepSpeedChat,
+            rollout_batch: 2,
+            infer_micro_batch: 2,
+            train_micro_batch: 2,
+            prompt_len: 256,
+            gen_len: 256,
+            generation: GenerationImpl::HuggingFace,
+            offload_inference_models_during_training: false,
+            ppo_epochs: 1,
+            hybrid_engine: true,
+        }
+    }
+
+    /// ColossalChat (paper: batch size 32; it offloads inference models
+    /// during training; generation replaced with HF's per Appendix B).
+    /// The rollout of 32 is consumed in micro-batches — 8 for inference
+    /// scoring, 2 for training — matching a 24 GB budget at OPT-1.3b the
+    /// way the upstream defaults do.
+    pub fn colossal_chat() -> Self {
+        FrameworkProfile {
+            kind: FrameworkKind::ColossalChat,
+            rollout_batch: 32,
+            infer_micro_batch: 8,
+            train_micro_batch: 2,
+            prompt_len: 128,
+            gen_len: 128,
+            generation: GenerationImpl::HuggingFace,
+            offload_inference_models_during_training: true,
+            ppo_epochs: 1,
+            hybrid_engine: false,
+        }
+    }
+
+    pub fn by_kind(kind: FrameworkKind) -> Self {
+        match kind {
+            FrameworkKind::DeepSpeedChat => Self::deepspeed_chat(),
+            FrameworkKind::ColossalChat => Self::colossal_chat(),
+        }
+    }
+
+    pub fn total_seq(&self) -> u64 {
+        self.prompt_len + self.gen_len
+    }
+
+    /// Number of inference micro-batches per rollout.
+    pub fn infer_chunks(&self) -> u64 {
+        self.rollout_batch.div_ceil(self.infer_micro_batch)
+    }
+
+    /// Number of training micro-batches per rollout.
+    pub fn train_chunks(&self) -> u64 {
+        self.rollout_batch.div_ceil(self.train_micro_batch)
+    }
+
+    /// Does this framework support the strategy? (ColossalChat has no
+    /// ZeRO-1, and the paper reports its all-enabled OPT run failing in
+    /// gradient synchronization.)
+    pub fn supports(&self, strategy: &StrategyConfig) -> bool {
+        match self.kind {
+            FrameworkKind::DeepSpeedChat => true,
+            FrameworkKind::ColossalChat => strategy.zero != ZeroStage::Z1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        assert_eq!(
+            FrameworkKind::by_name("deepspeed-chat"),
+            Some(FrameworkKind::DeepSpeedChat)
+        );
+        assert_eq!(
+            FrameworkKind::by_name("colossalchat"),
+            Some(FrameworkKind::ColossalChat)
+        );
+        assert_eq!(FrameworkKind::by_name("x"), None);
+    }
+
+    #[test]
+    fn paper_batch_settings() {
+        let ds = FrameworkProfile::deepspeed_chat();
+        assert_eq!(ds.rollout_batch, 2);
+        assert_eq!(ds.total_seq(), 512);
+        assert!(!ds.offload_inference_models_during_training);
+
+        let cc = FrameworkProfile::colossal_chat();
+        assert_eq!(cc.rollout_batch, 32);
+        assert!(cc.offload_inference_models_during_training);
+        assert_eq!(cc.infer_chunks(), 4);
+        assert_eq!(cc.train_chunks(), 16);
+    }
+
+    #[test]
+    fn colossal_rejects_zero1() {
+        let cc = FrameworkProfile::colossal_chat();
+        assert!(!cc.supports(&StrategyConfig::zero1()));
+        assert!(cc.supports(&StrategyConfig::zero3()));
+        let ds = FrameworkProfile::deepspeed_chat();
+        assert!(ds.supports(&StrategyConfig::zero1()));
+    }
+}

@@ -1,0 +1,35 @@
+//! # rlhf-mem
+//!
+//! A three-layer (Rust coordinator + JAX model + Pallas kernels, AOT via
+//! PJRT) reproduction of *"Understanding and Alleviating Memory Consumption
+//! in RLHF for LLMs"* (Zhou et al., 2024).
+//!
+//! The library has two halves that share one RLHF PPO engine:
+//!
+//! * a **memory-study half** — a faithful simulator of PyTorch's CUDA
+//!   caching allocator ([`alloc`]), byte-accurate model memory sizing
+//!   ([`mem`]), memory-management strategies as allocation-plan transforms
+//!   ([`strategies`]), framework profiles ([`frameworks`]), the profiler
+//!   ([`profiler`]) and the paper's `empty_cache()` mitigation
+//!   ([`policy`]) — which regenerates every table and figure in the paper;
+//! * a **real-compute half** — a PJRT runtime ([`runtime`]) that loads
+//!   AOT-compiled JAX/Pallas artifacts and trains a small transformer with
+//!   real PPO end-to-end ([`rlhf`]), proving all layers compose.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod alloc;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod experiment;
+pub mod frameworks;
+pub mod mem;
+pub mod policy;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod rlhf;
+pub mod strategies;
+pub mod trace;
+pub mod util;

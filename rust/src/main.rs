@@ -1,0 +1,63 @@
+//! `rlhf-mem` — CLI launcher for the RLHF memory study and the real
+//! end-to-end PPO trainer.
+//!
+//! Subcommands regenerate each paper artifact (see DESIGN.md §5).
+
+use rlhf_mem::util::cli::Args;
+
+mod commands;
+
+const USAGE: &str = "\
+rlhf-mem — reproduction of 'Understanding and Alleviating Memory Consumption in RLHF for LLMs'
+
+USAGE: rlhf-mem <subcommand> [--flags]
+
+SUBCOMMANDS:
+  table1       Regenerate Table 1 (strategy sweep, both frameworks/models)
+  table2       Regenerate Table 2 (A100 node, larger models)
+  figure1      Regenerate Figure 1 (memory timeline; --csv FILE, --assert)
+  phases       §3.1 three-scenario comparison (full / train-both / actor-only)
+  ablation     §3.3 empty_cache placement ablation
+  overhead     §3.3 end-to-end time overhead of empty_cache
+  train        Real end-to-end PPO on a small model via PJRT artifacts
+  quickstart   Tiny profiled RLHF run (fast smoke)
+  profile      Run a user-defined experiment from a JSON config
+  gen-ablation Appendix-B generation() implementation comparison
+  debug        Calibration lens: peak composition + frag samples
+
+COMMON FLAGS:
+  --steps N          PPO steps to simulate (default 3)
+  --framework X      deepspeed-chat | colossalchat
+  --json FILE        also write machine-readable results
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("table1") => commands::table1::run(&args),
+        Some("table2") => commands::table2::run(&args),
+        Some("figure1") => commands::figure1::run(&args),
+        Some("phases") => commands::phases::run(&args),
+        Some("ablation") => commands::ablation::run(&args),
+        Some("overhead") => commands::overhead::run(&args),
+        Some("train") => commands::train::run(&args),
+        Some("quickstart") => commands::quickstart::run(&args),
+        Some("debug") => commands::debug::run(&args),
+        Some("profile") => commands::profile::run(&args),
+        Some("gen-ablation") => commands::genablation::run(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            Err("bad subcommand".to_string())
+        }
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e: String| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}

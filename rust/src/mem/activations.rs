@@ -1,0 +1,207 @@
+//! Activation memory model: the per-tensor transient/saved allocations a
+//! PyTorch transformer makes during forward and backward, parametrized on
+//! (batch, seq). These lists are what the trace generators replay, so their
+//! granularity and sizes mirror the real op-by-op allocation pattern.
+
+use super::arch::{DType, ModelArch};
+
+/// A transient or saved activation tensor.
+#[derive(Debug, Clone)]
+pub struct ActTensor {
+    pub label: &'static str,
+    pub bytes: u64,
+}
+
+/// Shape context for one forward/backward.
+#[derive(Debug, Clone, Copy)]
+pub struct SeqShape {
+    pub batch: u64,
+    pub seq: u64,
+}
+
+/// Activation model for one architecture.
+#[derive(Debug, Clone)]
+pub struct ActivationModel {
+    pub arch: ModelArch,
+    pub dtype: DType,
+}
+
+impl ActivationModel {
+    pub fn new(arch: &ModelArch, dtype: DType) -> Self {
+        ActivationModel {
+            arch: arch.clone(),
+            dtype: dtype.clone(),
+        }
+    }
+
+    fn e(&self) -> u64 {
+        self.dtype.bytes()
+    }
+
+    /// `[b, s, d]` hidden-state tensor.
+    pub fn hidden_bytes(&self, sh: SeqShape) -> u64 {
+        sh.batch * sh.seq * self.arch.d_model * self.e()
+    }
+
+    /// `[b, s, vocab]` logits tensor (fp32 in HF generation/softmax paths).
+    pub fn logits_bytes(&self, sh: SeqShape) -> u64 {
+        sh.batch * sh.seq * self.arch.vocab * 4
+    }
+
+    /// `[b, vocab]` single-position logits (decode step).
+    pub fn step_logits_bytes(&self, batch: u64) -> u64 {
+        batch * self.arch.vocab * 4
+    }
+
+    /// Transient tensors allocated while computing ONE layer's forward.
+    /// In inference these are freed as soon as the layer output exists.
+    pub fn layer_transients(&self, sh: SeqShape) -> Vec<ActTensor> {
+        let a = &self.arch;
+        let bsd = sh.batch * sh.seq * a.d_model * self.e();
+        let bsf = sh.batch * sh.seq * a.ffn_dim * self.e();
+        let score = sh.batch * a.n_heads * sh.seq * sh.seq * self.e();
+        // HF transformers computes the attention softmax in fp32 under
+        // autocast (then casts back), so one fp32-sized score workspace is
+        // live per layer regardless of the training dtype.
+        let score_f32 = sh.batch * a.n_heads * sh.seq * sh.seq * 4;
+        vec![
+            ActTensor { label: "ln1_out", bytes: bsd },
+            ActTensor { label: "q", bytes: bsd },
+            ActTensor { label: "k", bytes: bsd },
+            ActTensor { label: "v", bytes: bsd },
+            ActTensor { label: "attn_scores", bytes: score },
+            ActTensor { label: "softmax_f32", bytes: score_f32 },
+            ActTensor { label: "attn_probs", bytes: score },
+            ActTensor { label: "attn_ctx", bytes: bsd },
+            ActTensor { label: "attn_out", bytes: bsd },
+            ActTensor { label: "ln2_out", bytes: bsd },
+            ActTensor { label: "fc1_out", bytes: bsf },
+            ActTensor { label: "act_fn_out", bytes: bsf },
+            ActTensor { label: "fc2_out", bytes: bsd },
+            ActTensor { label: "residual_out", bytes: bsd },
+        ]
+    }
+
+    /// Tensors SAVED for backward per layer (autograd graph inputs).
+    /// Without gradient checkpointing every layer keeps these until its
+    /// backward runs.
+    pub fn layer_saved(&self, sh: SeqShape) -> Vec<ActTensor> {
+        let a = &self.arch;
+        let bsd = sh.batch * sh.seq * a.d_model * self.e();
+        let bsf = sh.batch * sh.seq * a.ffn_dim * self.e();
+        let score = sh.batch * a.n_heads * sh.seq * sh.seq * self.e();
+        vec![
+            ActTensor { label: "saved_input", bytes: bsd },
+            ActTensor { label: "saved_ln1", bytes: bsd },
+            ActTensor { label: "saved_q", bytes: bsd },
+            ActTensor { label: "saved_k", bytes: bsd },
+            ActTensor { label: "saved_v", bytes: bsd },
+            ActTensor { label: "saved_attn_probs", bytes: score },
+            ActTensor { label: "saved_attn_ctx", bytes: bsd },
+            ActTensor { label: "saved_ln2", bytes: bsd },
+            ActTensor { label: "saved_fc1", bytes: bsf },
+            ActTensor { label: "saved_act", bytes: bsf },
+        ]
+    }
+
+    /// With gradient checkpointing only the layer *input* is saved; the
+    /// rest is recomputed (re-allocating [`Self::layer_saved`]) during
+    /// backward.
+    pub fn layer_checkpoint(&self, sh: SeqShape) -> Vec<ActTensor> {
+        vec![ActTensor {
+            label: "ckpt_input",
+            bytes: self.hidden_bytes(sh),
+        }]
+    }
+
+    /// Transient workspaces of one layer's BACKWARD (grad wrt activations;
+    /// freed as the backward sweep proceeds).
+    pub fn layer_backward_transients(&self, sh: SeqShape) -> Vec<ActTensor> {
+        let a = &self.arch;
+        let bsd = sh.batch * sh.seq * a.d_model * self.e();
+        let bsf = sh.batch * sh.seq * a.ffn_dim * self.e();
+        let score = sh.batch * a.n_heads * sh.seq * sh.seq * self.e();
+        let score_f32 = sh.batch * a.n_heads * sh.seq * sh.seq * 4;
+        vec![
+            ActTensor { label: "d_fc2", bytes: bsd },
+            ActTensor { label: "d_act", bytes: bsf },
+            ActTensor { label: "d_fc1", bytes: bsf },
+            ActTensor { label: "d_ln2", bytes: bsd },
+            ActTensor { label: "d_attn_out", bytes: bsd },
+            ActTensor { label: "d_softmax_f32", bytes: score_f32 },
+            ActTensor { label: "d_attn_probs", bytes: score },
+            ActTensor { label: "d_qkv", bytes: 3 * bsd },
+            ActTensor { label: "d_ln1", bytes: bsd },
+            ActTensor { label: "d_input", bytes: bsd },
+        ]
+    }
+
+    /// Peak resident activation bytes of a full no-checkpoint training
+    /// forward (all layers saved + logits), a closed-form sanity bound used
+    /// in tests and DESIGN.md's capacity math.
+    pub fn train_forward_resident(&self, sh: SeqShape) -> u64 {
+        let per_layer: u64 = self.layer_saved(sh).iter().map(|t| t.bytes).sum();
+        per_layer * self.arch.n_layers + self.logits_bytes(sh) + self.hidden_bytes(sh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{GIB, MIB};
+
+    fn model() -> ActivationModel {
+        ActivationModel::new(&ModelArch::opt_1_3b(), DType::F16)
+    }
+
+    #[test]
+    fn hidden_and_logits_sizes() {
+        let m = model();
+        let sh = SeqShape { batch: 2, seq: 512 };
+        // 2*512*2048*2 = 4 MiB
+        assert_eq!(m.hidden_bytes(sh), 4 * MIB);
+        // 2*512*50272*4 ≈ 196 MiB
+        assert_eq!(m.logits_bytes(sh), 2 * 512 * 50272 * 4);
+    }
+
+    #[test]
+    fn saved_less_than_transients() {
+        let m = model();
+        let sh = SeqShape { batch: 2, seq: 512 };
+        let trans: u64 = m.layer_transients(sh).iter().map(|t| t.bytes).sum();
+        let saved: u64 = m.layer_saved(sh).iter().map(|t| t.bytes).sum();
+        assert!(saved < trans);
+        assert!(saved > 0);
+    }
+
+    #[test]
+    fn checkpoint_saves_input_only() {
+        let m = model();
+        let sh = SeqShape { batch: 2, seq: 512 };
+        let ckpt = m.layer_checkpoint(sh);
+        assert_eq!(ckpt.len(), 1);
+        assert_eq!(ckpt[0].bytes, m.hidden_bytes(sh));
+        let saved: u64 = m.layer_saved(sh).iter().map(|t| t.bytes).sum();
+        assert!(ckpt[0].bytes * 5 < saved, "checkpointing must save a lot");
+    }
+
+    #[test]
+    fn quadratic_attention_term_scales() {
+        let m = model();
+        let s1 = SeqShape { batch: 1, seq: 256 };
+        let s2 = SeqShape { batch: 1, seq: 512 };
+        let score1 = m.layer_transients(s1).iter().find(|t| t.label == "attn_scores").unwrap().bytes;
+        let score2 = m.layer_transients(s2).iter().find(|t| t.label == "attn_scores").unwrap().bytes;
+        assert_eq!(score2, score1 * 4, "scores grow with s^2");
+    }
+
+    #[test]
+    fn resident_bound_plausible_for_paper_config() {
+        // OPT-1.3b, bs=2, seq=512, fp16, no checkpointing: resident
+        // activations should land in the single-digit-GiB range.
+        let m = model();
+        let sh = SeqShape { batch: 2, seq: 512 };
+        let r = m.train_forward_resident(sh);
+        assert!((GIB / 2..8 * GIB).contains(&r), "resident {r}");
+    }
+}

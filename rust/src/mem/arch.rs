@@ -1,0 +1,287 @@
+//! Transformer architecture descriptions and the exact hyperparameters of
+//! every model the paper evaluates (OPT-350m/1.3b/6.7b, GPT2-medium/xl,
+//! Llama-2-7b) plus the small configs used for real end-to-end training.
+//!
+//! The allocator only ever sees byte counts, so reproducing the paper's
+//! allocation traces reduces to sizing the real architectures exactly.
+
+/// Element type of a tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F16,
+    BF16,
+    F32,
+    I32,
+    I64,
+}
+
+impl DType {
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::F16 | DType::BF16 => 2,
+            DType::F32 | DType::I32 => 4,
+            DType::I64 => 8,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+        }
+    }
+}
+
+/// Architectural family — drives the parameter inventory layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArchFamily {
+    /// OPT: learned positions (offset 2), ReLU MLP, tied LM head, biases.
+    Opt,
+    /// GPT-2: learned positions, fused c_attn, GELU MLP, tied head, biases.
+    Gpt2,
+    /// Llama-2: RoPE (no position table), SwiGLU MLP (3 mats), RMSNorm
+    /// (no biases anywhere), untied LM head.
+    Llama,
+}
+
+/// A concrete transformer configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArch {
+    pub name: String,
+    pub family: ArchFamily,
+    pub n_layers: u64,
+    pub d_model: u64,
+    pub n_heads: u64,
+    pub ffn_dim: u64,
+    pub vocab: u64,
+    pub max_pos: u64,
+    /// OPT-350m quirk: token embeddings live in a smaller projected space
+    /// (`word_embed_proj_dim = 512`) with in/out projection matrices.
+    pub embed_proj_dim: Option<u64>,
+}
+
+impl ModelArch {
+    pub fn head_dim(&self) -> u64 {
+        self.d_model / self.n_heads
+    }
+
+    // ---- The paper's models (exact published hyperparameters) ----
+
+    /// OPT-350m (critic/reward in the paper's DeepSpeed-Chat + ColossalChat
+    /// OPT setting).
+    pub fn opt_350m() -> Self {
+        ModelArch {
+            name: "opt-350m".into(),
+            family: ArchFamily::Opt,
+            n_layers: 24,
+            d_model: 1024,
+            n_heads: 16,
+            ffn_dim: 4096,
+            vocab: 50272,
+            max_pos: 2048,
+            embed_proj_dim: Some(512),
+        }
+    }
+
+    /// OPT-1.3b (actor/reference).
+    pub fn opt_1_3b() -> Self {
+        ModelArch {
+            name: "opt-1.3b".into(),
+            family: ArchFamily::Opt,
+            n_layers: 24,
+            d_model: 2048,
+            n_heads: 32,
+            ffn_dim: 8192,
+            vocab: 50272,
+            max_pos: 2048,
+            embed_proj_dim: None,
+        }
+    }
+
+    /// OPT-6.7b (Table 2).
+    pub fn opt_6_7b() -> Self {
+        ModelArch {
+            name: "opt-6.7b".into(),
+            family: ArchFamily::Opt,
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            ffn_dim: 16384,
+            vocab: 50272,
+            max_pos: 2048,
+            embed_proj_dim: None,
+        }
+    }
+
+    /// GPT2-medium (critic/reward in the ColossalChat GPT-2 setting).
+    pub fn gpt2_medium() -> Self {
+        ModelArch {
+            name: "gpt2-medium".into(),
+            family: ArchFamily::Gpt2,
+            n_layers: 24,
+            d_model: 1024,
+            n_heads: 16,
+            ffn_dim: 4096,
+            vocab: 50257,
+            max_pos: 1024,
+            embed_proj_dim: None,
+        }
+    }
+
+    /// GPT2-xl (actor/reference in the ColossalChat GPT-2 setting).
+    pub fn gpt2_xl() -> Self {
+        ModelArch {
+            name: "gpt2-xl".into(),
+            family: ArchFamily::Gpt2,
+            n_layers: 48,
+            d_model: 1600,
+            n_heads: 25,
+            ffn_dim: 6400,
+            vocab: 50257,
+            max_pos: 1024,
+            embed_proj_dim: None,
+        }
+    }
+
+    /// Llama-2-7b (Table 2).
+    pub fn llama2_7b() -> Self {
+        ModelArch {
+            name: "llama-2-7b".into(),
+            family: ArchFamily::Llama,
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            ffn_dim: 11008,
+            vocab: 32000,
+            max_pos: 4096,
+            embed_proj_dim: None,
+        }
+    }
+
+    // ---- Small configs for the real end-to-end PPO runs (E10) ----
+
+    /// ~3.4M params: smoke-test scale.
+    pub fn opt_nano() -> Self {
+        ModelArch {
+            name: "opt-nano".into(),
+            family: ArchFamily::Opt,
+            n_layers: 4,
+            d_model: 256,
+            n_heads: 8,
+            ffn_dim: 1024,
+            vocab: 512,
+            max_pos: 256,
+            embed_proj_dim: None,
+        }
+    }
+
+    /// ~29M params: the few-hundred-step training-curve config.
+    pub fn opt_tiny() -> Self {
+        ModelArch {
+            name: "opt-tiny".into(),
+            family: ArchFamily::Opt,
+            n_layers: 8,
+            d_model: 512,
+            n_heads: 8,
+            ffn_dim: 2048,
+            vocab: 8192,
+            max_pos: 512,
+            embed_proj_dim: None,
+        }
+    }
+
+    /// ~110M params: the short at-scale proof run.
+    pub fn opt_110m() -> Self {
+        ModelArch {
+            name: "opt-110m".into(),
+            family: ArchFamily::Opt,
+            n_layers: 12,
+            d_model: 768,
+            n_heads: 12,
+            ffn_dim: 3072,
+            vocab: 32768,
+            max_pos: 512,
+            embed_proj_dim: None,
+        }
+    }
+
+    /// Look up a preset by name (CLI / config files).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "opt-350m" => Some(Self::opt_350m()),
+            "opt-1.3b" => Some(Self::opt_1_3b()),
+            "opt-6.7b" => Some(Self::opt_6_7b()),
+            "gpt2-medium" => Some(Self::gpt2_medium()),
+            "gpt2-xl" => Some(Self::gpt2_xl()),
+            "llama-2-7b" => Some(Self::llama2_7b()),
+            "opt-nano" => Some(Self::opt_nano()),
+            "opt-tiny" => Some(Self::opt_tiny()),
+            "opt-110m" => Some(Self::opt_110m()),
+            _ => None,
+        }
+    }
+
+    pub fn presets() -> Vec<&'static str> {
+        vec![
+            "opt-350m",
+            "opt-1.3b",
+            "opt-6.7b",
+            "gpt2-medium",
+            "gpt2-xl",
+            "llama-2-7b",
+            "opt-nano",
+            "opt-tiny",
+            "opt-110m",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::params::ParamInventory;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ModelArch::presets() {
+            let arch = ModelArch::by_name(name).unwrap();
+            assert_eq!(arch.name, name);
+            assert_eq!(arch.d_model % arch.n_heads, 0, "{name}: head dim");
+        }
+        assert!(ModelArch::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn published_param_counts() {
+        // Totals must match the published model cards within 2%.
+        let cases = [
+            (ModelArch::opt_350m(), 331e6),
+            (ModelArch::opt_1_3b(), 1.316e9),
+            (ModelArch::opt_6_7b(), 6.658e9),
+            (ModelArch::gpt2_medium(), 355e6),
+            (ModelArch::gpt2_xl(), 1.558e9),
+            (ModelArch::llama2_7b(), 6.738e9),
+        ];
+        for (arch, expected) in cases {
+            let total = ParamInventory::build(&arch).total_params() as f64;
+            let rel = (total - expected).abs() / expected;
+            assert!(
+                rel < 0.02,
+                "{}: got {total:.3e}, expected {expected:.3e} (rel {rel:.3})",
+                arch.name
+            );
+        }
+    }
+
+    #[test]
+    fn small_configs_scale() {
+        let nano = ParamInventory::build(&ModelArch::opt_nano()).total_params();
+        let tiny = ParamInventory::build(&ModelArch::opt_tiny()).total_params();
+        let m110 = ParamInventory::build(&ModelArch::opt_110m()).total_params();
+        assert!((2e6..6e6).contains(&(nano as f64)), "nano {nano}");
+        assert!((20e6..40e6).contains(&(tiny as f64)), "tiny {tiny}");
+        assert!((90e6..130e6).contains(&(m110 as f64)), "110m {m110}");
+    }
+}

@@ -1,0 +1,78 @@
+//! KV-cache sizing for autoregressive generation.
+//!
+//! Two implementations are modeled, matching the paper's Appendix B:
+//!
+//! * **HuggingFace dynamic cache** — each decode step *concatenates*: for
+//!   every layer, allocate new K/V tensors of length `s+1`, copy, free the
+//!   old ones. This is the per-step odd-size alloc/free churn that seeds
+//!   inference-phase fragmentation.
+//! * **Original ColossalChat generation** — additionally keeps the
+//!   full-sequence logits of every step (`[b, s, vocab]` grows each step),
+//!   which the paper found "exceptionally high" and replaced with HF's.
+
+use super::arch::{DType, ModelArch};
+
+/// KV-cache size calculator.
+#[derive(Debug, Clone)]
+pub struct KvCacheModel {
+    pub arch: ModelArch,
+    pub dtype: DType,
+}
+
+impl KvCacheModel {
+    pub fn new(arch: &ModelArch, dtype: DType) -> Self {
+        KvCacheModel {
+            arch: arch.clone(),
+            dtype,
+        }
+    }
+
+    /// Bytes of ONE layer's K (or V) tensor for `batch` sequences of
+    /// length `seq`: `[b, n_heads, seq, head_dim]`.
+    pub fn layer_kv_bytes(&self, batch: u64, seq: u64) -> u64 {
+        batch * self.arch.n_heads * seq * self.arch.head_dim() * self.dtype.bytes()
+    }
+
+    /// Total cache bytes across all layers (K and V) at length `seq`.
+    pub fn total_bytes(&self, batch: u64, seq: u64) -> u64 {
+        2 * self.arch.n_layers * self.layer_kv_bytes(batch, seq)
+    }
+
+    /// Peak transient bytes of one decode-step concat for one layer:
+    /// old (len s) and new (len s+1) K and V coexist during the copy.
+    pub fn concat_step_peak(&self, batch: u64, seq: u64) -> u64 {
+        2 * (self.layer_kv_bytes(batch, seq) + self.layer_kv_bytes(batch, seq + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MIB;
+
+    #[test]
+    fn opt_1_3b_cache_sizes() {
+        let m = KvCacheModel::new(&ModelArch::opt_1_3b(), DType::F16);
+        // One layer, b=2, s=512: 2*32*512*64*2 = 4 MiB per K tensor.
+        assert_eq!(m.layer_kv_bytes(2, 512), 4 * MIB);
+        // Full cache: 2 (K+V) * 24 layers * 4 MiB = 192 MiB.
+        assert_eq!(m.total_bytes(2, 512), 192 * MIB);
+    }
+
+    #[test]
+    fn cache_grows_linearly() {
+        let m = KvCacheModel::new(&ModelArch::opt_350m(), DType::F16);
+        assert_eq!(m.total_bytes(2, 512), 2 * m.total_bytes(2, 256));
+    }
+
+    #[test]
+    fn concat_needs_both_generations() {
+        let m = KvCacheModel::new(&ModelArch::opt_1_3b(), DType::F16);
+        let peak = m.concat_step_peak(2, 100);
+        assert!(peak > 2 * m.layer_kv_bytes(2, 100));
+        assert_eq!(
+            peak,
+            2 * (m.layer_kv_bytes(2, 100) + m.layer_kv_bytes(2, 101))
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! LoRA adapter sizing (Hu et al., 2021). The paper sets the LoRA dimension
+//! to 128 for both frameworks; DeepSpeed-Chat's default `lora_module_name =
+//! "decoder.layers."` attaches adapters to every linear in each decoder
+//! layer (attention projections *and* MLP matrices), which is what
+//! [`LoraTargets::AllLinear`] reproduces.
+
+use super::params::{ParamInventory, ParamKind, TensorSpec};
+
+/// Which linears receive adapters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoraTargets {
+    /// Attention q/k/v/o only (the original paper's default).
+    AttnOnly,
+    /// Every per-layer linear (DeepSpeed-Chat's `decoder.layers.` match).
+    AllLinear,
+}
+
+/// LoRA configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoraSpec {
+    pub r: u64,
+    pub targets: LoraTargets,
+}
+
+impl LoraSpec {
+    pub fn paper_default() -> Self {
+        LoraSpec {
+            r: 128,
+            targets: LoraTargets::AllLinear,
+        }
+    }
+}
+
+/// Is this base tensor adapted under `spec`?
+pub fn is_target(t: &TensorSpec, spec: LoraSpec) -> bool {
+    if t.layer.is_none() {
+        return false;
+    }
+    match spec.targets {
+        LoraTargets::AttnOnly => t.kind == ParamKind::AttnProj,
+        LoraTargets::AllLinear => matches!(t.kind, ParamKind::AttnProj | ParamKind::Mlp),
+    }
+}
+
+/// Infer (in, out) dims of a weight from its numel and the arch dims. The
+/// inventory stores flat numel; LoRA A/B sizing needs the factorization,
+/// which is recoverable because every target is one of the known shapes.
+fn factorize(t: &TensorSpec, inv: &ParamInventory) -> (u64, u64) {
+    let d = inv.arch.d_model;
+    let ffn = inv.arch.ffn_dim;
+    let n = t.numel;
+    if n == d * d {
+        (d, d)
+    } else if n == d * 3 * d {
+        (d, 3 * d) // GPT-2 fused c_attn
+    } else if n == d * ffn {
+        (d, ffn)
+    } else if n == ffn * d {
+        (ffn, d)
+    } else {
+        panic!("unexpected LoRA target shape: {} ({n})", t.name)
+    }
+}
+
+/// The adapter tensors (`A: [r, in]`, `B: [out, r]`) for one model.
+pub fn lora_tensors(inv: &ParamInventory, spec: LoraSpec) -> Vec<TensorSpec> {
+    let mut out = Vec::new();
+    for t in inv.tensors.iter().filter(|t| is_target(t, spec)) {
+        let (d_in, d_out) = factorize(t, inv);
+        out.push(TensorSpec {
+            name: format!("{}.lora_A", t.name),
+            numel: spec.r * d_in,
+            kind: t.kind,
+            layer: t.layer,
+        });
+        out.push(TensorSpec {
+            name: format!("{}.lora_B", t.name),
+            numel: d_out * spec.r,
+            kind: t.kind,
+            layer: t.layer,
+        });
+    }
+    out
+}
+
+/// Total trainable parameters under LoRA.
+pub fn lora_params(inv: &ParamInventory, spec: LoraSpec) -> u64 {
+    lora_tensors(inv, spec).iter().map(|t| t.numel).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::ModelArch;
+
+    #[test]
+    fn opt_1_3b_lora_counts() {
+        let inv = ParamInventory::build(&ModelArch::opt_1_3b());
+        let spec = LoraSpec::paper_default();
+        let tensors = lora_tensors(&inv, spec);
+        // 24 layers x (4 attn + 2 mlp) targets x 2 (A, B).
+        assert_eq!(tensors.len(), 24 * 6 * 2);
+        let total = lora_params(&inv, spec);
+        // attn: 4 * (128*2048 + 2048*128) = 4 * 524288
+        // mlp: (128*2048 + 8192*128) + (128*8192 + 2048*128)
+        let per_layer = 4 * (128 * 2048 * 2) + 2 * (128 * 2048 + 128 * 8192);
+        assert_eq!(total, 24 * per_layer);
+        // ~ 113M trainable: LoRA at r=128 is a sizeable adapter.
+        assert!((90e6..130e6).contains(&(total as f64)));
+    }
+
+    #[test]
+    fn attn_only_is_smaller() {
+        let inv = ParamInventory::build(&ModelArch::opt_1_3b());
+        let all = lora_params(&inv, LoraSpec::paper_default());
+        let attn = lora_params(
+            &inv,
+            LoraSpec {
+                r: 128,
+                targets: LoraTargets::AttnOnly,
+            },
+        );
+        assert!(attn < all);
+        assert_eq!(attn, 24 * 4 * 2 * 128 * 2048);
+    }
+
+    #[test]
+    fn gpt2_fused_attn_factorizes() {
+        let inv = ParamInventory::build(&ModelArch::gpt2_xl());
+        let spec = LoraSpec::paper_default();
+        // Must not panic on the fused [d, 3d] c_attn shape.
+        let total = lora_params(&inv, spec);
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn embeddings_never_targeted() {
+        let inv = ParamInventory::build(&ModelArch::opt_350m());
+        for t in lora_tensors(&inv, LoraSpec::paper_default()) {
+            assert!(t.layer.is_some());
+            assert!(t.name.contains("lora_"));
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Byte-accurate model memory sizing: architectures, parameter inventories,
+//! activation/KV-cache/optimizer/LoRA models. Pure size calculators — the
+//! trace layer turns these into allocation sequences.
+
+pub mod activations;
+pub mod arch;
+pub mod kvcache;
+pub mod lora;
+pub mod optimizer;
+pub mod params;
+
+pub use activations::{ActTensor, ActivationModel, SeqShape};
+pub use arch::{ArchFamily, DType, ModelArch};
+pub use kvcache::KvCacheModel;
+pub use lora::{LoraSpec, LoraTargets};
+pub use optimizer::{adam_state_tensors, AdamConfig};
+pub use params::{ParamInventory, ParamKind, TensorSpec};

@@ -1,0 +1,90 @@
+//! Optimizer-state sizing: DeepSpeed-style mixed-precision Adam.
+//!
+//! For every *trainable* fp16 parameter tensor, the optimizer holds three
+//! fp32 tensors: the master copy, the first moment `m`, and the second
+//! moment `v` — 12 extra bytes per parameter on top of the 2-byte weight
+//! and 2-byte gradient (ZeRO's "K = 12" in Rajbhandari et al.).
+
+use super::arch::DType;
+use super::params::TensorSpec;
+
+/// One optimizer-state tensor.
+#[derive(Debug, Clone)]
+pub struct OptStateTensor {
+    pub name: String,
+    pub bytes: u64,
+}
+
+/// Which pieces of Adam state exist (frameworks differ on master copies
+/// when training is already fp32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdamConfig {
+    /// Keep an fp32 master copy of each fp16 weight (mixed precision).
+    pub fp32_master: bool,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { fp32_master: true }
+    }
+}
+
+/// Build the optimizer-state inventory for a set of trainable tensors.
+pub fn adam_state_tensors(trainable: &[&TensorSpec], cfg: AdamConfig) -> Vec<OptStateTensor> {
+    let mut out = Vec::with_capacity(trainable.len() * 3);
+    for t in trainable {
+        let fp32 = t.numel * DType::F32.bytes();
+        out.push(OptStateTensor {
+            name: format!("{}.exp_avg", t.name),
+            bytes: fp32,
+        });
+        out.push(OptStateTensor {
+            name: format!("{}.exp_avg_sq", t.name),
+            bytes: fp32,
+        });
+        if cfg.fp32_master {
+            out.push(OptStateTensor {
+                name: format!("{}.master", t.name),
+                bytes: fp32,
+            });
+        }
+    }
+    out
+}
+
+/// Total Adam bytes for `n` trainable params (12 or 8 bytes per param).
+pub fn adam_bytes_per_param(cfg: AdamConfig) -> u64 {
+    if cfg.fp32_master {
+        12
+    } else {
+        8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::ModelArch;
+    use crate::mem::params::ParamInventory;
+
+    #[test]
+    fn twelve_bytes_per_param_with_master() {
+        let inv = ParamInventory::build(&ModelArch::opt_350m());
+        let trainable: Vec<&TensorSpec> = inv.tensors.iter().collect();
+        let states = adam_state_tensors(&trainable, AdamConfig::default());
+        let total: u64 = states.iter().map(|s| s.bytes).sum();
+        assert_eq!(total, inv.total_params() * 12);
+        assert_eq!(states.len(), trainable.len() * 3);
+    }
+
+    #[test]
+    fn eight_bytes_without_master() {
+        let inv = ParamInventory::build(&ModelArch::opt_350m());
+        let trainable: Vec<&TensorSpec> = inv.tensors.iter().collect();
+        let cfg = AdamConfig { fp32_master: false };
+        let states = adam_state_tensors(&trainable, cfg);
+        let total: u64 = states.iter().map(|s| s.bytes).sum();
+        assert_eq!(total, inv.total_params() * 8);
+        assert_eq!(adam_bytes_per_param(cfg), 8);
+    }
+}

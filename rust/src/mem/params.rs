@@ -1,0 +1,244 @@
+//! Parameter inventories: the exact per-tensor shapes of each architecture.
+//!
+//! The inventory is what the trace generators iterate to emit per-tensor
+//! allocations (model load, gradients, ZeRO gathers), so tensor granularity
+//! matters: one entry per weight/bias tensor, exactly as PyTorch would
+//! allocate them.
+
+use super::arch::{ArchFamily, DType, ModelArch};
+
+/// Where a tensor sits in the network — lets strategies treat embedding /
+/// per-layer / head tensors differently (e.g. LoRA targets projections).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    Embedding,
+    /// Attention projection (q/k/v/o or fused c_attn).
+    AttnProj,
+    /// MLP matrix.
+    Mlp,
+    /// LayerNorm / RMSNorm weight or bias.
+    Norm,
+    /// Bias vector of a projection.
+    Bias,
+    /// Final LM head (untied) or value head.
+    Head,
+}
+
+/// One parameter tensor.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub numel: u64,
+    pub kind: ParamKind,
+    /// Layer index, or None for non-layer tensors (embeddings, final norm).
+    pub layer: Option<u64>,
+}
+
+impl TensorSpec {
+    pub fn bytes(&self, dtype: DType) -> u64 {
+        self.numel * dtype.bytes()
+    }
+}
+
+/// The full parameter inventory of one model.
+#[derive(Debug, Clone)]
+pub struct ParamInventory {
+    pub arch: ModelArch,
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl ParamInventory {
+    pub fn build(arch: &ModelArch) -> Self {
+        let mut t = Vec::new();
+        let d = arch.d_model;
+        let ffn = arch.ffn_dim;
+        let push = |t: &mut Vec<TensorSpec>, name: String, numel: u64, kind: ParamKind, layer: Option<u64>| {
+            t.push(TensorSpec {
+                name,
+                numel,
+                kind,
+                layer,
+            })
+        };
+
+        match arch.family {
+            ArchFamily::Opt => {
+                let emb_dim = arch.embed_proj_dim.unwrap_or(d);
+                push(&mut t, "embed_tokens".into(), arch.vocab * emb_dim, ParamKind::Embedding, None);
+                // OPT's learned positions have a +2 offset in the table.
+                push(&mut t, "embed_positions".into(), (arch.max_pos + 2) * d, ParamKind::Embedding, None);
+                if let Some(p) = arch.embed_proj_dim {
+                    push(&mut t, "project_in".into(), p * d, ParamKind::Embedding, None);
+                    push(&mut t, "project_out".into(), d * p, ParamKind::Embedding, None);
+                }
+                for l in 0..arch.n_layers {
+                    for proj in ["q_proj", "k_proj", "v_proj", "out_proj"] {
+                        push(&mut t, format!("layers.{l}.self_attn.{proj}.weight"), d * d, ParamKind::AttnProj, Some(l));
+                        push(&mut t, format!("layers.{l}.self_attn.{proj}.bias"), d, ParamKind::Bias, Some(l));
+                    }
+                    push(&mut t, format!("layers.{l}.self_attn_layer_norm.weight"), d, ParamKind::Norm, Some(l));
+                    push(&mut t, format!("layers.{l}.self_attn_layer_norm.bias"), d, ParamKind::Norm, Some(l));
+                    push(&mut t, format!("layers.{l}.fc1.weight"), d * ffn, ParamKind::Mlp, Some(l));
+                    push(&mut t, format!("layers.{l}.fc1.bias"), ffn, ParamKind::Bias, Some(l));
+                    push(&mut t, format!("layers.{l}.fc2.weight"), ffn * d, ParamKind::Mlp, Some(l));
+                    push(&mut t, format!("layers.{l}.fc2.bias"), d, ParamKind::Bias, Some(l));
+                    push(&mut t, format!("layers.{l}.final_layer_norm.weight"), d, ParamKind::Norm, Some(l));
+                    push(&mut t, format!("layers.{l}.final_layer_norm.bias"), d, ParamKind::Norm, Some(l));
+                }
+                push(&mut t, "final_layer_norm.weight".into(), d, ParamKind::Norm, None);
+                push(&mut t, "final_layer_norm.bias".into(), d, ParamKind::Norm, None);
+                // LM head tied with embed_tokens: no extra tensor.
+            }
+            ArchFamily::Gpt2 => {
+                push(&mut t, "wte".into(), arch.vocab * d, ParamKind::Embedding, None);
+                push(&mut t, "wpe".into(), arch.max_pos * d, ParamKind::Embedding, None);
+                for l in 0..arch.n_layers {
+                    push(&mut t, format!("h.{l}.ln_1.weight"), d, ParamKind::Norm, Some(l));
+                    push(&mut t, format!("h.{l}.ln_1.bias"), d, ParamKind::Norm, Some(l));
+                    push(&mut t, format!("h.{l}.attn.c_attn.weight"), d * 3 * d, ParamKind::AttnProj, Some(l));
+                    push(&mut t, format!("h.{l}.attn.c_attn.bias"), 3 * d, ParamKind::Bias, Some(l));
+                    push(&mut t, format!("h.{l}.attn.c_proj.weight"), d * d, ParamKind::AttnProj, Some(l));
+                    push(&mut t, format!("h.{l}.attn.c_proj.bias"), d, ParamKind::Bias, Some(l));
+                    push(&mut t, format!("h.{l}.ln_2.weight"), d, ParamKind::Norm, Some(l));
+                    push(&mut t, format!("h.{l}.ln_2.bias"), d, ParamKind::Norm, Some(l));
+                    push(&mut t, format!("h.{l}.mlp.c_fc.weight"), d * ffn, ParamKind::Mlp, Some(l));
+                    push(&mut t, format!("h.{l}.mlp.c_fc.bias"), ffn, ParamKind::Bias, Some(l));
+                    push(&mut t, format!("h.{l}.mlp.c_proj.weight"), ffn * d, ParamKind::Mlp, Some(l));
+                    push(&mut t, format!("h.{l}.mlp.c_proj.bias"), d, ParamKind::Bias, Some(l));
+                }
+                push(&mut t, "ln_f.weight".into(), d, ParamKind::Norm, None);
+                push(&mut t, "ln_f.bias".into(), d, ParamKind::Norm, None);
+            }
+            ArchFamily::Llama => {
+                push(&mut t, "embed_tokens".into(), arch.vocab * d, ParamKind::Embedding, None);
+                for l in 0..arch.n_layers {
+                    for proj in ["q_proj", "k_proj", "v_proj", "o_proj"] {
+                        push(&mut t, format!("layers.{l}.self_attn.{proj}.weight"), d * d, ParamKind::AttnProj, Some(l));
+                    }
+                    push(&mut t, format!("layers.{l}.mlp.gate_proj.weight"), d * ffn, ParamKind::Mlp, Some(l));
+                    push(&mut t, format!("layers.{l}.mlp.up_proj.weight"), d * ffn, ParamKind::Mlp, Some(l));
+                    push(&mut t, format!("layers.{l}.mlp.down_proj.weight"), ffn * d, ParamKind::Mlp, Some(l));
+                    push(&mut t, format!("layers.{l}.input_layernorm.weight"), d, ParamKind::Norm, Some(l));
+                    push(&mut t, format!("layers.{l}.post_attention_layernorm.weight"), d, ParamKind::Norm, Some(l));
+                }
+                push(&mut t, "norm.weight".into(), d, ParamKind::Norm, None);
+                push(&mut t, "lm_head".into(), arch.vocab * d, ParamKind::Head, None);
+            }
+        }
+
+        ParamInventory {
+            arch: arch.clone(),
+            tensors: t,
+        }
+    }
+
+    /// Inventory of a critic/reward variant: backbone + scalar value head
+    /// (`v_head: [d_model, 1]`), as DeepSpeed-Chat and ColossalChat build
+    /// them.
+    pub fn build_with_value_head(arch: &ModelArch) -> Self {
+        let mut inv = Self::build(arch);
+        inv.tensors.push(TensorSpec {
+            name: "v_head".into(),
+            numel: arch.d_model,
+            kind: ParamKind::Head,
+            layer: None,
+        });
+        inv
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.tensors.iter().map(|t| t.numel).sum()
+    }
+
+    pub fn total_bytes(&self, dtype: DType) -> u64 {
+        self.tensors.iter().map(|t| t.bytes(dtype)).sum()
+    }
+
+    /// Tensors of one layer (for ZeRO-3 per-layer gather sizing).
+    pub fn layer_tensors(&self, layer: u64) -> impl Iterator<Item = &TensorSpec> {
+        self.tensors.iter().filter(move |t| t.layer == Some(layer))
+    }
+
+    /// Total bytes of one layer's parameters.
+    pub fn layer_bytes(&self, layer: u64, dtype: DType) -> u64 {
+        self.layer_tensors(layer).map(|t| t.bytes(dtype)).sum()
+    }
+
+    /// Non-layer (embedding/head/final-norm) tensors.
+    pub fn global_tensors(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.tensors.iter().filter(|t| t.layer.is_none())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::GIB;
+
+    #[test]
+    fn opt_1_3b_layer_structure() {
+        let inv = ParamInventory::build(&ModelArch::opt_1_3b());
+        // 24 layers x 16 tensors (4 attn w+b, 2 LNs w+b, 2 MLP w+b) + 2
+        // embeddings + final norm w+b.
+        assert_eq!(inv.tensors.len(), 24 * 16 + 4);
+        // Every layer has identical byte size.
+        let l0 = inv.layer_bytes(0, DType::F16);
+        for l in 1..24 {
+            assert_eq!(inv.layer_bytes(l, DType::F16), l0);
+        }
+        // 1.3b in fp16 ~ 2.6 GB.
+        let total = inv.total_bytes(DType::F16);
+        assert!((2 * GIB..3 * GIB).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn value_head_variant() {
+        let base = ParamInventory::build(&ModelArch::opt_350m());
+        let critic = ParamInventory::build_with_value_head(&ModelArch::opt_350m());
+        assert_eq!(critic.tensors.len(), base.tensors.len() + 1);
+        assert_eq!(critic.total_params(), base.total_params() + 1024);
+    }
+
+    #[test]
+    fn llama_has_untied_head_and_no_biases() {
+        let inv = ParamInventory::build(&ModelArch::llama2_7b());
+        assert!(inv.tensors.iter().any(|t| t.name == "lm_head"));
+        assert!(inv
+            .tensors
+            .iter()
+            .all(|t| t.kind != ParamKind::Bias));
+    }
+
+    #[test]
+    fn gpt2_fused_qkv() {
+        let inv = ParamInventory::build(&ModelArch::gpt2_medium());
+        let c_attn = inv
+            .tensors
+            .iter()
+            .find(|t| t.name == "h.0.attn.c_attn.weight")
+            .unwrap();
+        assert_eq!(c_attn.numel, 1024 * 3072);
+    }
+
+    #[test]
+    fn opt_350m_embed_projection() {
+        let inv = ParamInventory::build(&ModelArch::opt_350m());
+        let emb = inv
+            .tensors
+            .iter()
+            .find(|t| t.name == "embed_tokens")
+            .unwrap();
+        assert_eq!(emb.numel, 50272 * 512);
+        assert!(inv.tensors.iter().any(|t| t.name == "project_in"));
+    }
+
+    #[test]
+    fn global_plus_layers_cover_everything() {
+        let inv = ParamInventory::build(&ModelArch::opt_1_3b());
+        let global: u64 = inv.global_tensors().map(|t| t.numel).sum();
+        let layered: u64 = (0..24)
+            .map(|l| inv.layer_tensors(l).map(|t| t.numel).sum::<u64>())
+            .sum();
+        assert_eq!(global + layered, inv.total_params());
+    }
+}

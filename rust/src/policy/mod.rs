@@ -1,0 +1,84 @@
+//! `empty_cache()` placement policies — the paper's §3.3 mitigation and its
+//! ablation: after each inference and training phase, after inferences
+//! only, after training only, or never.
+
+use crate::trace::PhaseKind;
+
+/// When to invoke `empty_cache()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmptyCachePolicy {
+    /// Baseline: never (PyTorch default behaviour).
+    Never,
+    /// After every inference *and* training phase (the paper's headline).
+    AfterBoth,
+    /// Only after inference phases (§3.3: "almost as effective").
+    AfterInference,
+    /// Only after training phases (§3.3: "not very effective").
+    AfterTraining,
+}
+
+impl EmptyCachePolicy {
+    /// Should the trainer insert `empty_cache()` right after `phase` ends?
+    pub fn applies_after(self, phase: PhaseKind) -> bool {
+        match self {
+            EmptyCachePolicy::Never => false,
+            EmptyCachePolicy::AfterBoth => phase.is_inference() || phase.is_training(),
+            EmptyCachePolicy::AfterInference => phase.is_inference(),
+            EmptyCachePolicy::AfterTraining => phase.is_training(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EmptyCachePolicy::Never => "never",
+            EmptyCachePolicy::AfterBoth => "after_both",
+            EmptyCachePolicy::AfterInference => "after_inference",
+            EmptyCachePolicy::AfterTraining => "after_training",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s {
+            "never" => Some(Self::Never),
+            "after_both" => Some(Self::AfterBoth),
+            "after_inference" => Some(Self::AfterInference),
+            "after_training" => Some(Self::AfterTraining),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [EmptyCachePolicy; 4] = [
+        EmptyCachePolicy::Never,
+        EmptyCachePolicy::AfterBoth,
+        EmptyCachePolicy::AfterInference,
+        EmptyCachePolicy::AfterTraining,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_rules() {
+        use PhaseKind::*;
+        assert!(EmptyCachePolicy::AfterBoth.applies_after(Generation));
+        assert!(EmptyCachePolicy::AfterBoth.applies_after(TrainActor));
+        assert!(!EmptyCachePolicy::AfterBoth.applies_after(Init));
+        assert!(EmptyCachePolicy::AfterInference.applies_after(InferReward));
+        assert!(!EmptyCachePolicy::AfterInference.applies_after(TrainCritic));
+        assert!(EmptyCachePolicy::AfterTraining.applies_after(TrainCritic));
+        assert!(!EmptyCachePolicy::AfterTraining.applies_after(Generation));
+        for p in PhaseKind::ALL {
+            assert!(!EmptyCachePolicy::Never.applies_after(p));
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for p in EmptyCachePolicy::ALL {
+            assert_eq!(EmptyCachePolicy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(EmptyCachePolicy::by_name("bogus"), None);
+    }
+}

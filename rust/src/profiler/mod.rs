@@ -1,0 +1,243 @@
+//! Memory profiler (paper Appendix B): observes the allocator's event
+//! stream and reconstructs everything the paper reports — the
+//! reserved/allocated timeline of Figure 1, the fragmentation samples taken
+//! at each `cudaMalloc`, per-phase peaks, and the peak-reserved /
+//! "reserved w/o fragmentation" pair.
+
+pub mod summary;
+pub mod timeline;
+
+pub use summary::ProfileSummary;
+pub use timeline::{Timeline, TimelinePoint};
+
+use crate::alloc::{AllocEvent, AllocObserver, CachingAllocator, StatSnapshot};
+use crate::trace::{PhaseKind, PhaseSink};
+use std::collections::HashMap;
+
+/// One fragmentation sample (taken at a cudaMalloc).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FragSample {
+    pub time_us: f64,
+    pub frag: u64,
+    /// The rounded request that forced the cudaMalloc.
+    pub requested: u64,
+    pub phase: PhaseKind,
+}
+
+/// Peak statistics of one phase kind.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhasePeak {
+    pub reserved: u64,
+    pub allocated: u64,
+    pub visits: u64,
+}
+
+/// The profiler. Attach with [`CachingAllocator::set_observer`] (via
+/// `Rc<RefCell<...>>`) and as the replay's [`PhaseSink`].
+#[derive(Debug)]
+pub struct MemoryProfiler {
+    pub timeline: Timeline,
+    pub frag_samples: Vec<FragSample>,
+    pub phase_peaks: HashMap<PhaseKind, PhasePeak>,
+    /// Phase during which the global reserved peak was set.
+    pub peak_phase: PhaseKind,
+    peak_reserved_seen: u64,
+    current_phase: PhaseKind,
+    /// Compute time from the replay (advanced by PhaseSink callbacks).
+    compute_us: f64,
+    /// Total bytes released by empty_cache calls.
+    pub empty_cache_released: u64,
+    pub empty_cache_calls: u64,
+    /// cudaMalloc count observed (segments mapped).
+    pub cuda_mallocs: u64,
+}
+
+impl MemoryProfiler {
+    pub fn new() -> Self {
+        MemoryProfiler {
+            timeline: Timeline::new(),
+            frag_samples: Vec::new(),
+            phase_peaks: HashMap::new(),
+            peak_phase: PhaseKind::Init,
+            peak_reserved_seen: 0,
+            current_phase: PhaseKind::Init,
+            compute_us: 0.0,
+            empty_cache_released: 0,
+            empty_cache_calls: 0,
+            cuda_mallocs: 0,
+        }
+    }
+
+    fn now_us(&self, state: &StatSnapshot) -> f64 {
+        state.time_us + self.compute_us
+    }
+
+    fn track_peaks(&mut self, state: &StatSnapshot) {
+        let peak = self
+            .phase_peaks
+            .entry(self.current_phase)
+            .or_default();
+        peak.reserved = peak.reserved.max(state.reserved);
+        peak.allocated = peak.allocated.max(state.allocated);
+        if state.reserved > self.peak_reserved_seen {
+            self.peak_reserved_seen = state.reserved;
+            self.peak_phase = self.current_phase;
+        }
+    }
+
+    pub fn current_phase(&self) -> PhaseKind {
+        self.current_phase
+    }
+}
+
+impl Default for MemoryProfiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AllocObserver for MemoryProfiler {
+    fn on_event(&mut self, event: &AllocEvent, state: &StatSnapshot) {
+        let t = self.now_us(state);
+        match event {
+            AllocEvent::CudaMalloc { frag_sample, rounded, .. } => {
+                self.cuda_mallocs += 1;
+                self.frag_samples.push(FragSample {
+                    time_us: t,
+                    frag: *frag_sample,
+                    requested: *rounded,
+                    phase: self.current_phase,
+                });
+            }
+            AllocEvent::EmptyCache { bytes, .. } => {
+                self.empty_cache_calls += 1;
+                self.empty_cache_released += bytes;
+            }
+            _ => {}
+        }
+        self.timeline
+            .push(t, state.reserved, state.allocated, self.current_phase);
+        self.track_peaks(state);
+    }
+}
+
+impl PhaseSink for MemoryProfiler {
+    fn on_phase(&mut self, phase: PhaseKind, alloc: &CachingAllocator, compute_us: f64) {
+        self.compute_us = compute_us;
+        self.current_phase = phase;
+        let snap = alloc.snapshot();
+        let t = self.now_us(&snap);
+        self.timeline.mark_phase(t, phase);
+        self.timeline
+            .push(t, snap.reserved, snap.allocated, phase);
+    }
+
+    fn on_step_end(&mut self, step: u64, alloc: &CachingAllocator, compute_us: f64) {
+        self.compute_us = compute_us;
+        let snap = alloc.snapshot();
+        self.timeline.mark_step(self.now_us(&snap), step);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::CachingAllocator;
+    use crate::trace::{replay, Tag, TraceBuilder};
+    use crate::util::bytes::{GIB, MIB};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn run_profiled(build: impl FnOnce(&mut TraceBuilder)) -> (MemoryProfiler, CachingAllocator) {
+        let mut b = TraceBuilder::new();
+        build(&mut b);
+        let trace = b.finish();
+        let prof = Rc::new(RefCell::new(MemoryProfiler::new()));
+        let mut alloc = CachingAllocator::with_default_config(4 * GIB);
+        alloc.set_observer(prof.clone());
+        {
+            let mut sink = ProfilerSink(prof.clone());
+            replay(&trace, &mut alloc, &mut sink);
+        }
+        alloc.validate().unwrap();
+        alloc.clear_observer();
+        let prof = Rc::try_unwrap(prof).ok().unwrap().into_inner();
+        (prof, alloc)
+    }
+
+    /// Adapter: Rc<RefCell<MemoryProfiler>> as a PhaseSink.
+    pub struct ProfilerSink(pub Rc<RefCell<MemoryProfiler>>);
+    impl PhaseSink for ProfilerSink {
+        fn on_phase(&mut self, p: PhaseKind, a: &CachingAllocator, c: f64) {
+            self.0.borrow_mut().on_phase(p, a, c);
+        }
+        fn on_step_end(&mut self, s: u64, a: &CachingAllocator, c: f64) {
+            self.0.borrow_mut().on_step_end(s, a, c);
+        }
+    }
+
+    #[test]
+    fn tracks_phase_peaks() {
+        let (prof, _alloc) = run_profiled(|b| {
+            b.phase(PhaseKind::Generation);
+            b.transient([100 * MIB], Tag::KvCache);
+            b.phase(PhaseKind::TrainActor);
+            b.transient([300 * MIB], Tag::Grad);
+        });
+        let gen = prof.phase_peaks[&PhaseKind::Generation];
+        let train = prof.phase_peaks[&PhaseKind::TrainActor];
+        assert!(gen.allocated >= 100 * MIB);
+        assert!(train.allocated >= 300 * MIB);
+        assert_eq!(prof.peak_phase, PhaseKind::TrainActor);
+    }
+
+    #[test]
+    fn frag_samples_tagged_with_phase() {
+        let (prof, _alloc) = run_profiled(|b| {
+            b.phase(PhaseKind::Generation);
+            // Two discontiguous cached 16 MiB segments from generation...
+            let h1 = b.alloc(15 * MIB, Tag::KvCache);
+            let h2 = b.alloc(15 * MIB, Tag::KvCache);
+            b.free(h1);
+            b.free(h2);
+            b.phase(PhaseKind::TrainActor);
+            // ...cannot serve training's 30 MiB request: frag-caused malloc.
+            let _g = b.alloc(30 * MIB, Tag::Grad);
+        });
+        let train_sample = prof
+            .frag_samples
+            .iter()
+            .find(|s| s.phase == PhaseKind::TrainActor)
+            .unwrap();
+        assert_eq!(train_sample.frag, 32 * MIB);
+    }
+
+    #[test]
+    fn empty_cache_accounting() {
+        let (prof, alloc) = run_profiled(|b| {
+            b.phase(PhaseKind::Generation);
+            let h = b.alloc(30 * MIB, Tag::KvCache);
+            b.free(h);
+            b.empty_cache();
+        });
+        assert_eq!(prof.empty_cache_calls, 1);
+        assert_eq!(prof.empty_cache_released, 30 * MIB);
+        assert_eq!(alloc.reserved(), 0);
+    }
+
+    #[test]
+    fn timeline_nonempty_and_monotone() {
+        let (prof, _alloc) = run_profiled(|b| {
+            b.phase(PhaseKind::Generation);
+            for _ in 0..10 {
+                // Above the timeline's 16 MiB decimation resolution.
+                b.transient([50 * MIB], Tag::Activation);
+            }
+        });
+        let pts = prof.timeline.points();
+        assert!(pts.len() >= 10, "{}", pts.len());
+        for w in pts.windows(2) {
+            assert!(w[1].time_us >= w[0].time_us);
+        }
+    }
+}

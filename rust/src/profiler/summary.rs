@@ -1,0 +1,125 @@
+//! Profile summary: the numbers one paper-table cell needs.
+
+use super::MemoryProfiler;
+use crate::alloc::CachingAllocator;
+use crate::trace::{PhaseKind, ReplayResult};
+use crate::util::bytes::fmt_gib_paper;
+
+/// Everything Table 1/2 and Figure 1's annotations report for one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileSummary {
+    /// Peak reserved bytes ("Reserved" column).
+    pub peak_reserved: u64,
+    /// The paper's "Frag." column: the largest fragmentation-caused sample
+    /// observed at any cudaMalloc (Appendix B definition).
+    pub frag: u64,
+    /// Peak allocated bytes ("Allocated" column).
+    pub peak_allocated: u64,
+    /// Fragmentation sample at the cudaMalloc that set the reserved peak —
+    /// Figure 1's gap between the red and yellow crosses.
+    pub frag_at_peak: u64,
+    /// Phase during which the reserved peak occurred (§3.2's GPT-2
+    /// diagnosis hinges on this).
+    pub peak_phase: PhaseKind,
+    /// Simulated end-to-end time: compute + allocator + driver, µs.
+    pub total_time_us: f64,
+    /// Allocator+driver share of that time, µs.
+    pub allocator_time_us: f64,
+    pub empty_cache_calls: u64,
+    pub empty_cache_released: u64,
+    pub cuda_mallocs: u64,
+    /// Replay hit OOM (the paper's frameworks would have crashed).
+    pub oom: bool,
+}
+
+impl ProfileSummary {
+    pub fn collect(
+        prof: &MemoryProfiler,
+        alloc: &CachingAllocator,
+        replay: &ReplayResult,
+    ) -> ProfileSummary {
+        let stats = alloc.stats();
+        ProfileSummary {
+            peak_reserved: stats.peak_reserved,
+            frag: stats.max_frag_sample,
+            peak_allocated: stats.peak_allocated,
+            frag_at_peak: stats.frag_at_peak_reserved,
+            peak_phase: prof.peak_phase,
+            total_time_us: replay.compute_us + alloc.time_us(),
+            allocator_time_us: alloc.time_us(),
+            empty_cache_calls: prof.empty_cache_calls,
+            empty_cache_released: prof.empty_cache_released,
+            cuda_mallocs: prof.cuda_mallocs,
+            oom: !replay.ok(),
+        }
+    }
+
+    /// "Reserved w/o fragmentation" (Figure 1's dotted yellow line at the
+    /// peak). Uses the broader of the two fragmentation views so the line
+    /// reflects the junk present around the peak, as the paper plots it.
+    pub fn fig1_frag(&self) -> u64 {
+        self.frag_at_peak.max(self.frag.min(self.peak_reserved))
+    }
+
+    pub fn reserved_wo_frag(&self) -> u64 {
+        self.peak_reserved - self.fig1_frag()
+    }
+
+    /// Fragmentation overhead ratio (the paper's "+46%").
+    pub fn frag_overhead_ratio(&self) -> f64 {
+        let f = self.fig1_frag();
+        if self.peak_reserved == f {
+            return 0.0;
+        }
+        f as f64 / (self.peak_reserved - f) as f64
+    }
+
+    /// Paper-style row: `Reserved | Frag | Allocated` in GiB strings.
+    pub fn paper_cells(&self) -> [String; 3] {
+        [
+            fmt_gib_paper(self.peak_reserved),
+            fmt_gib_paper(self.frag),
+            fmt_gib_paper(self.peak_allocated),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::GIB;
+
+    fn mk(reserved: u64, frag: u64, alloc: u64) -> ProfileSummary {
+        ProfileSummary {
+            peak_reserved: reserved,
+            frag,
+            peak_allocated: alloc,
+            frag_at_peak: frag,
+            peak_phase: PhaseKind::TrainActor,
+            total_time_us: 1e6,
+            allocator_time_us: 1e4,
+            empty_cache_calls: 0,
+            empty_cache_released: 0,
+            cuda_mallocs: 10,
+            oom: false,
+        }
+    }
+
+    #[test]
+    fn derived_quantities() {
+        // Figure 1's numbers: 6.2 GiB frag on ~13.4 GiB base = +46%.
+        let s = mk(19_593 * (1 << 20), 6_349 * (1 << 20), 5 * GIB + (1 << 29));
+        assert_eq!(s.reserved_wo_frag(), (19_593 - 6_349) * (1 << 20));
+        let ratio = s.frag_overhead_ratio();
+        assert!((0.45..0.52).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn paper_cells_format() {
+        let s = mk(18 * GIB + 820 * (1 << 20), 20 * (1 << 20), 18 * GIB);
+        let cells = s.paper_cells();
+        assert_eq!(cells[0], "18.8");
+        assert_eq!(cells[1], "<0.1");
+        assert_eq!(cells[2], "18.0");
+    }
+}

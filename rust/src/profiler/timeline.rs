@@ -1,0 +1,214 @@
+//! Reserved/allocated timeline with decimation — the data behind Figure 1.
+
+use crate::trace::PhaseKind;
+
+/// One timeline sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimelinePoint {
+    pub time_us: f64,
+    pub reserved: u64,
+    pub allocated: u64,
+    pub phase: PhaseKind,
+}
+
+/// Phase-transition marker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseMark {
+    pub time_us: f64,
+    pub phase: PhaseKind,
+}
+
+/// Decimating sample store: keeps every change-point whose reserved or
+/// allocated moved by at least `min_delta` bytes since the previous kept
+/// point (plus all phase marks), bounding memory for multi-million-op
+/// traces while preserving the curve's shape and extremes.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    points: Vec<TimelinePoint>,
+    phase_marks: Vec<PhaseMark>,
+    step_marks: Vec<(f64, u64)>,
+    min_delta: u64,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline {
+            points: Vec::new(),
+            phase_marks: Vec::new(),
+            step_marks: Vec::new(),
+            min_delta: 16 << 20, // 16 MiB resolution by default
+        }
+    }
+
+    pub fn with_resolution(min_delta: u64) -> Self {
+        Timeline {
+            min_delta,
+            ..Self::new()
+        }
+    }
+
+    pub fn push(&mut self, time_us: f64, reserved: u64, allocated: u64, phase: PhaseKind) {
+        if let Some(last) = self.points.last() {
+            let dr = reserved.abs_diff(last.reserved);
+            let da = allocated.abs_diff(last.allocated);
+            if dr < self.min_delta && da < self.min_delta && phase == last.phase {
+                // Keep extremes exact: replace the last point if this one
+                // dominates it in either direction at (almost) same time.
+                return;
+            }
+        }
+        self.points.push(TimelinePoint {
+            time_us,
+            reserved,
+            allocated,
+            phase,
+        });
+    }
+
+    pub fn mark_phase(&mut self, time_us: f64, phase: PhaseKind) {
+        self.phase_marks.push(PhaseMark { time_us, phase });
+    }
+
+    pub fn mark_step(&mut self, time_us: f64, step: u64) {
+        self.step_marks.push((time_us, step));
+    }
+
+    pub fn points(&self) -> &[TimelinePoint] {
+        &self.points
+    }
+
+    pub fn phase_marks(&self) -> &[PhaseMark] {
+        &self.phase_marks
+    }
+
+    pub fn step_marks(&self) -> &[(f64, u64)] {
+        &self.step_marks
+    }
+
+    /// Render as CSV (`time_us,reserved,allocated,phase`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("time_us,reserved_bytes,allocated_bytes,phase\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:.1},{},{},{}\n",
+                p.time_us,
+                p.reserved,
+                p.allocated,
+                p.phase.name()
+            ));
+        }
+        out
+    }
+
+    /// ASCII chart of the reserved (█) and allocated (▒) curves — the
+    /// terminal rendition of Figure 1.
+    pub fn ascii_chart(&self, width: usize, height: usize) -> String {
+        if self.points.is_empty() {
+            return "(empty timeline)".to_string();
+        }
+        let t0 = self.points.first().unwrap().time_us;
+        let t1 = self.points.last().unwrap().time_us.max(t0 + 1.0);
+        let max_y = self.points.iter().map(|p| p.reserved).max().unwrap().max(1);
+        // For each column, the max reserved/allocated in its time window.
+        let mut res_col = vec![0u64; width];
+        let mut alloc_col = vec![0u64; width];
+        for p in &self.points {
+            let x = (((p.time_us - t0) / (t1 - t0)) * (width as f64 - 1.0)) as usize;
+            res_col[x] = res_col[x].max(p.reserved);
+            alloc_col[x] = alloc_col[x].max(p.allocated);
+        }
+        // Forward-fill empty columns.
+        for i in 1..width {
+            if res_col[i] == 0 {
+                res_col[i] = res_col[i - 1];
+                alloc_col[i] = alloc_col[i - 1];
+            }
+        }
+        let mut rows = Vec::with_capacity(height);
+        for r in 0..height {
+            let level = max_y as f64 * (height - r) as f64 / height as f64;
+            let mut row = String::with_capacity(width + 12);
+            for c in 0..width {
+                let ch = if alloc_col[c] as f64 >= level {
+                    '█'
+                } else if res_col[c] as f64 >= level {
+                    '░'
+                } else {
+                    ' '
+                };
+                row.push(ch);
+            }
+            row.push_str(&format!(
+                " {:>6.1} GiB",
+                level / (1u64 << 30) as f64
+            ));
+            rows.push(row);
+        }
+        rows.push(format!(
+            "{}  █ allocated  ░ reserved-above-allocated",
+            "-".repeat(width)
+        ));
+        rows.join("\n")
+    }
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decimation_keeps_big_moves() {
+        let mut t = Timeline::with_resolution(100);
+        t.push(0.0, 1000, 500, PhaseKind::Init);
+        t.push(1.0, 1050, 520, PhaseKind::Init); // below resolution: dropped
+        t.push(2.0, 2000, 800, PhaseKind::Init); // kept
+        assert_eq!(t.points().len(), 2);
+    }
+
+    #[test]
+    fn phase_change_always_kept() {
+        let mut t = Timeline::with_resolution(1 << 30);
+        t.push(0.0, 100, 50, PhaseKind::Init);
+        t.push(1.0, 101, 51, PhaseKind::Generation);
+        assert_eq!(t.points().len(), 2);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut t = Timeline::new();
+        t.push(0.5, 1 << 30, 1 << 29, PhaseKind::Generation);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("time_us,"));
+        assert!(csv.contains("generation"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let mut t = Timeline::new();
+        for i in 0..100u64 {
+            t.push(
+                i as f64,
+                (i + 1) * (1 << 26),
+                (i + 1) * (1 << 25),
+                PhaseKind::Generation,
+            );
+        }
+        let chart = t.ascii_chart(40, 8);
+        assert!(chart.contains('█'));
+        assert!(chart.contains('░'));
+        assert!(chart.lines().count() == 9);
+    }
+
+    #[test]
+    fn empty_chart_ok() {
+        let t = Timeline::new();
+        assert_eq!(t.ascii_chart(10, 4), "(empty timeline)");
+    }
+}

@@ -1,0 +1,8 @@
+//! Report renderers: generic text tables and the paper-shaped outputs
+//! (Table 1/2 rows, Figure 1 annotations).
+
+pub mod paper;
+pub mod table;
+
+pub use paper::{render_rows, StrategyRow};
+pub use table::TextTable;

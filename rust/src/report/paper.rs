@@ -1,0 +1,160 @@
+//! Paper-shaped reports: Table 1, Table 2 and Figure 1 regeneration
+//! helpers, including the paper's published values for side-by-side
+//! comparison in EXPERIMENTS.md.
+
+use super::table::TextTable;
+use crate::experiment::{run_scenario, ExperimentResult};
+use crate::policy::EmptyCachePolicy;
+use crate::profiler::ProfileSummary;
+use crate::rlhf::sim::SimScenario;
+use crate::util::bytes::fmt_gib_paper;
+
+/// One rendered row of Table 1/2: the strategy label plus the six cells
+/// (original reserved/frag/allocated, empty_cache reserved/frag).
+#[derive(Debug, Clone)]
+pub struct StrategyRow {
+    pub strategy: String,
+    pub original: ProfileSummary,
+    pub with_empty_cache: ProfileSummary,
+}
+
+impl StrategyRow {
+    /// Measure one row: the scenario runs twice, once with the policy the
+    /// scenario carries (normally `Never`) and once with `AfterBoth`.
+    pub fn measure(label: &str, scn: &SimScenario, capacity: u64) -> StrategyRow {
+        let original = run_scenario(scn, capacity);
+        let mut ec = scn.clone();
+        ec.policy = EmptyCachePolicy::AfterBoth;
+        let with_ec = run_scenario(&ec, capacity);
+        StrategyRow {
+            strategy: label.to_string(),
+            original: original.summary,
+            with_empty_cache: with_ec.summary,
+        }
+    }
+
+    pub fn cells(&self) -> Vec<String> {
+        let mut v = vec![self.strategy.clone()];
+        v.extend(self.original.paper_cells());
+        v.push(fmt_gib_paper(self.with_empty_cache.peak_reserved));
+        v.push(fmt_gib_paper(self.with_empty_cache.frag));
+        if self.original.oom || self.with_empty_cache.oom {
+            v[1] = format!("{} (OOM)", v[1]);
+        }
+        v
+    }
+}
+
+/// Assemble rows into the paper's table layout.
+pub fn render_rows(title: &str, rows: &[StrategyRow]) -> String {
+    let mut t = TextTable::new(&[
+        "Strategy",
+        "Reserved",
+        "Frag.",
+        "Allocated",
+        "EC Reserved",
+        "EC Frag.",
+    ]);
+    for r in rows {
+        t.row(r.cells());
+    }
+    format!("== {title} ==\n{}", t.render())
+}
+
+/// The paper's published Table 1 values (GiB) for comparison output:
+/// (framework, model, strategy) -> [reserved, frag, allocated, ec_reserved,
+/// ec_frag].
+pub fn paper_table1() -> Vec<(&'static str, &'static str, &'static str, [f64; 5])> {
+    vec![
+        ("DeepSpeed-Chat", "OPT", "None", [18.8, 0.2, 18.2, 19.4, 0.05]),
+        ("DeepSpeed-Chat", "OPT", "ZeRO-1", [15.6, 0.1, 14.4, 15.9, 0.1]),
+        ("DeepSpeed-Chat", "OPT", "ZeRO-2", [14.5, 0.6, 12.8, 14.3, 0.05]),
+        ("DeepSpeed-Chat", "OPT", "ZeRO-3", [17.3, 3.7, 12.0, 13.7, 0.3]),
+        ("DeepSpeed-Chat", "OPT", "ZeRO-3 + CPU Offloading", [15.4, 4.0, 9.8, 11.7, 0.3]),
+        ("DeepSpeed-Chat", "OPT", "Gradient Checkpointing", [15.4, 0.6, 14.8, 15.4, 0.1]),
+        ("DeepSpeed-Chat", "OPT", "All Enabled", [11.8, 6.2, 5.4, 5.9, 0.1]),
+        ("ColossalChat", "OPT", "None", [17.5, 0.2, 17.0, 17.8, 0.4]),
+        ("ColossalChat", "OPT", "ZeRO-3", [16.5, 0.5, 15.6, 16.4, 0.4]),
+        ("ColossalChat", "OPT", "ZeRO-3 + CPU Offloading", [13.1, 0.4, 12.3, 13.1, 0.2]),
+        ("ColossalChat", "OPT", "Gradient Checkpointng", [14.8, 0.7, 12.1, 12.5, 0.1]),
+        ("ColossalChat", "GPT-2", "None", [22.9, 6.9, 14.0, 15.0, 0.1]),
+        ("ColossalChat", "GPT-2", "ZeRO-3", [22.1, 7.6, 13.2, 16.6, 0.2]),
+        ("ColossalChat", "GPT-2", "ZeRO-3 + CPU Offloading", [15.0, 2.6, 10.3, 11.5, 0.1]),
+        ("ColossalChat", "GPT-2", "Gradient Checkpointing", [22.9, 6.9, 14.0, 15.0, 0.1]),
+        ("ColossalChat", "GPT-2", "All Enabled", [15.0, 2.6, 10.3, 11.5, 0.1]),
+    ]
+}
+
+/// The paper's published Table 2 values (A100 node).
+pub fn paper_table2() -> Vec<(&'static str, &'static str, [f64; 5])> {
+    vec![
+        ("OPT-1.3b", "None", [46.4, 2.4, 43.5, 45.5, 0.3]),
+        ("OPT-1.3b", "ZeRO-3", [46.4, 2.9, 43.2, 45.0, 0.3]),
+        ("OPT-6.7b", "None", [53.4, 9.2, 31.4, 44.3, 0.1]),
+        ("OPT-6.7b", "ZeRO-3", [55.3, 20.6, 25.6, 50.3, 0.8]),
+        ("Llama-2-7b", "None", [56.2, 8.8, 39.2, 44.9, 0.2]),
+        ("Llama-2-7b", "ZeRO-3", [60.5, 13.4, 32.3, 54.5, 1.7]),
+    ]
+}
+
+/// Convenience used by benches: run + return both variants' results.
+pub fn measure_row_full(
+    label: &str,
+    scn: &SimScenario,
+    capacity: u64,
+) -> (StrategyRow, ExperimentResult, ExperimentResult) {
+    let original = run_scenario(scn, capacity);
+    let mut ec = scn.clone();
+    ec.policy = EmptyCachePolicy::AfterBoth;
+    let with_ec = run_scenario(&ec, capacity);
+    let row = StrategyRow {
+        strategy: label.to_string(),
+        original: original.summary.clone(),
+        with_empty_cache: with_ec.summary.clone(),
+    };
+    (row, original, with_ec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_values_complete() {
+        assert_eq!(paper_table1().len(), 16);
+        assert_eq!(paper_table2().len(), 6);
+        for (_, _, _, v) in paper_table1() {
+            assert!(v[0] > 0.0 && v[0] < 24.0, "3090 rows within 24 GiB");
+        }
+        for (_, _, v) in paper_table2() {
+            assert!(v[0] > 24.0 && v[0] < 80.0, "A100 rows within 80 GiB");
+        }
+    }
+
+    #[test]
+    fn render_rows_shape() {
+        use crate::trace::PhaseKind;
+        let s = ProfileSummary {
+            peak_reserved: 18 << 30,
+            frag: 1 << 29,
+            peak_allocated: 17 << 30,
+            frag_at_peak: 1 << 29,
+            peak_phase: PhaseKind::TrainActor,
+            total_time_us: 1.0,
+            allocator_time_us: 0.1,
+            empty_cache_calls: 0,
+            empty_cache_released: 0,
+            cuda_mallocs: 5,
+            oom: false,
+        };
+        let row = StrategyRow {
+            strategy: "None".into(),
+            original: s.clone(),
+            with_empty_cache: s,
+        };
+        let out = render_rows("test", &[row]);
+        assert!(out.contains("Strategy"));
+        assert!(out.contains("None"));
+        assert!(out.contains("18.0"));
+    }
+}

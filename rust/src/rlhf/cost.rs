@@ -1,0 +1,150 @@
+//! Compute-time cost model for RLHF phases.
+//!
+//! The paper's time claim (E8: `empty_cache()` adds ~2% end-to-end) is a
+//! *ratio* of allocator/driver latency to compute latency, so phase
+//! durations need to be right to within a factor of ~2, not exact. The
+//! model is the standard roofline: matmul-bound phases at an effective
+//! throughput, decode at weight-streaming bandwidth, ZeRO collectives at
+//! interconnect bandwidth.
+
+use crate::mem::{DType, ParamInventory};
+
+/// Hardware envelope of one simulated GPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    /// Effective (MFU-adjusted) half-precision throughput, FLOP/s.
+    pub flops: f64,
+    /// Effective HBM bandwidth, B/s.
+    pub hbm_bw: f64,
+    /// Inter-GPU (PCIe/NVLink) bandwidth per rank, B/s.
+    pub link_bw: f64,
+}
+
+impl GpuSpec {
+    /// RTX 3090 @ ~30% MFU: 71 TFLOPS fp16 -> 21 effective; 936 GB/s HBM
+    /// @75%; PCIe 4.0 x16 ~12 GB/s effective.
+    pub fn rtx3090() -> Self {
+        GpuSpec {
+            flops: 21e12,
+            hbm_bw: 700e9,
+            link_bw: 12e9,
+        }
+    }
+
+    /// A100-80G @ ~35% MFU: 312 TFLOPS bf16 -> 109 effective; 2 TB/s HBM
+    /// @75%; NVLink ~200 GB/s effective.
+    pub fn a100_80g() -> Self {
+        GpuSpec {
+            flops: 109e12,
+            hbm_bw: 1.5e12,
+            link_bw: 200e9,
+        }
+    }
+}
+
+/// Phase-duration calculator for one model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub gpu: GpuSpec,
+    /// Total parameters of the model under evaluation.
+    pub params: f64,
+    /// Bytes of the fp16 replica (for decode weight-streaming).
+    pub param_bytes: f64,
+}
+
+impl CostModel {
+    pub fn for_inventory(inv: &ParamInventory, gpu: GpuSpec) -> Self {
+        CostModel {
+            gpu,
+            params: inv.total_params() as f64,
+            param_bytes: inv.total_bytes(DType::F16) as f64,
+        }
+    }
+
+    /// Microseconds for a full-sequence forward over `tokens` tokens
+    /// (prefill / scoring passes): 2·P FLOPs per token, compute-bound.
+    pub fn forward_us(&self, tokens: u64) -> f64 {
+        2.0 * self.params * tokens as f64 / self.gpu.flops * 1e6
+    }
+
+    /// Microseconds for ONE autoregressive decode step at batch `b`:
+    /// memory-bound on streaming the weights once, plus the (small)
+    /// per-token matmul work.
+    pub fn decode_step_us(&self, batch: u64) -> f64 {
+        let bw_bound = self.param_bytes / self.gpu.hbm_bw * 1e6;
+        let flop_bound = 2.0 * self.params * batch as f64 / self.gpu.flops * 1e6;
+        bw_bound.max(flop_bound)
+    }
+
+    /// Microseconds for a training step over `tokens` tokens: fwd + bwd ≈
+    /// 3× forward FLOPs (6·P per token).
+    pub fn train_us(&self, tokens: u64) -> f64 {
+        6.0 * self.params * tokens as f64 / self.gpu.flops * 1e6
+    }
+
+    /// Microseconds for an all-gather of `bytes` across `world` ranks
+    /// (ring: each rank receives bytes·(w−1)/w).
+    pub fn allgather_us(&self, bytes: u64, world: u64) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        bytes as f64 * (world - 1) as f64 / world as f64 / self.gpu.link_bw * 1e6
+    }
+
+    /// Reduce-scatter cost (same wire volume as all-gather).
+    pub fn reduce_scatter_us(&self, bytes: u64, world: u64) -> f64 {
+        self.allgather_us(bytes, world)
+    }
+
+    /// Host transfer (offload staging) cost.
+    pub fn host_copy_us(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.gpu.link_bw * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::ModelArch;
+
+    fn opt13b() -> CostModel {
+        let inv = ParamInventory::build(&ModelArch::opt_1_3b());
+        CostModel::for_inventory(&inv, GpuSpec::rtx3090())
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound_at_small_batch() {
+        let c = opt13b();
+        // 2.6 GB / 700 GB/s ≈ 3.7 ms.
+        let us = c.decode_step_us(2);
+        assert!((2_000.0..6_000.0).contains(&us), "{us}");
+        // Large batch flips to compute bound.
+        assert!(c.decode_step_us(4096) > c.decode_step_us(2));
+    }
+
+    #[test]
+    fn train_is_3x_forward() {
+        let c = opt13b();
+        assert!((c.train_us(1024) / c.forward_us(1024) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generation_dominates_step_time() {
+        // Sanity for the paper's phase structure: 256 decode steps at bs=2
+        // dwarf one 512-token forward.
+        let c = opt13b();
+        let gen = 256.0 * c.decode_step_us(2);
+        let eval = c.forward_us(2 * 512);
+        assert!(gen > 3.0 * eval, "gen {gen} vs eval {eval}");
+    }
+
+    #[test]
+    fn allgather_scales_with_world() {
+        let c = opt13b();
+        let one = c.allgather_us(1 << 30, 1);
+        assert_eq!(one, 0.0);
+        let four = c.allgather_us(1 << 30, 4);
+        let eight = c.allgather_us(1 << 30, 8);
+        assert!(four > 0.0 && eight > four);
+    }
+}

@@ -1,0 +1,12 @@
+//! The RLHF PPO engine: the four-model cast, the phase-level allocation
+//! simulator used by the memory study, the compute-time cost model, and
+//! (via `runtime/`) the real small-scale PPO training loop.
+
+pub mod cost;
+pub mod models;
+pub mod real;
+pub mod sim;
+
+pub use cost::{CostModel, GpuSpec};
+pub use models::{RlhfModelSet, Role};
+pub use sim::{build_trace, ScenarioMode, SimScenario};

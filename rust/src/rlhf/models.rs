@@ -1,0 +1,132 @@
+//! The four-model cast of RLHF stage 3 (paper §2.1): actor + frozen
+//! reference sharing one architecture, critic + frozen reward sharing
+//! another (critic/reward carry a scalar value head).
+
+use crate::mem::{ModelArch, ParamInventory};
+
+/// Role of a model in the PPO stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// The policy being trained (initialized from the SFT reference).
+    Actor,
+    /// Frozen SFT model for the KL penalty.
+    Reference,
+    /// Trained value function (initialized from the reward model).
+    Critic,
+    /// Frozen reward model.
+    Reward,
+}
+
+impl Role {
+    pub const ALL: [Role; 4] = [Role::Actor, Role::Reference, Role::Critic, Role::Reward];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Actor => "actor",
+            Role::Reference => "reference",
+            Role::Critic => "critic",
+            Role::Reward => "reward",
+        }
+    }
+
+    pub fn is_trainable(self) -> bool {
+        matches!(self, Role::Actor | Role::Critic)
+    }
+
+    pub fn has_value_head(self) -> bool {
+        matches!(self, Role::Critic | Role::Reward)
+    }
+}
+
+/// The model pairing of one experiment.
+#[derive(Debug, Clone)]
+pub struct RlhfModelSet {
+    /// Actor & reference architecture.
+    pub policy_arch: ModelArch,
+    /// Critic & reward architecture.
+    pub value_arch: ModelArch,
+}
+
+impl RlhfModelSet {
+    /// Paper's OPT setting: actor/ref OPT-1.3b, critic/reward OPT-350m.
+    pub fn opt() -> Self {
+        RlhfModelSet {
+            policy_arch: ModelArch::opt_1_3b(),
+            value_arch: ModelArch::opt_350m(),
+        }
+    }
+
+    /// Paper's GPT-2 setting: actor/ref GPT2-xl, critic/reward GPT2-medium.
+    pub fn gpt2() -> Self {
+        RlhfModelSet {
+            policy_arch: ModelArch::gpt2_xl(),
+            value_arch: ModelArch::gpt2_medium(),
+        }
+    }
+
+    /// Table-2 settings: same arch for both pairs scaled up.
+    pub fn uniform(arch: ModelArch) -> Self {
+        RlhfModelSet {
+            policy_arch: arch.clone(),
+            value_arch: arch,
+        }
+    }
+
+    /// Tiny set for real end-to-end training.
+    pub fn nano() -> Self {
+        RlhfModelSet {
+            policy_arch: ModelArch::opt_nano(),
+            value_arch: ModelArch::opt_nano(),
+        }
+    }
+
+    pub fn arch_for(&self, role: Role) -> &ModelArch {
+        match role {
+            Role::Actor | Role::Reference => &self.policy_arch,
+            Role::Critic | Role::Reward => &self.value_arch,
+        }
+    }
+
+    /// Parameter inventory for a role (value head included where present).
+    pub fn inventory_for(&self, role: Role) -> ParamInventory {
+        let arch = self.arch_for(role);
+        if role.has_value_head() {
+            ParamInventory::build_with_value_head(arch)
+        } else {
+            ParamInventory::build(arch)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roles() {
+        assert!(Role::Actor.is_trainable());
+        assert!(!Role::Reference.is_trainable());
+        assert!(Role::Critic.has_value_head());
+        assert!(!Role::Actor.has_value_head());
+        assert_eq!(Role::ALL.len(), 4);
+    }
+
+    #[test]
+    fn opt_set_shapes() {
+        let set = RlhfModelSet::opt();
+        assert_eq!(set.arch_for(Role::Actor).name, "opt-1.3b");
+        assert_eq!(set.arch_for(Role::Reference).name, "opt-1.3b");
+        assert_eq!(set.arch_for(Role::Reward).name, "opt-350m");
+        // Critic has one more tensor (v_head) than reward-arch baseline.
+        let critic = set.inventory_for(Role::Critic);
+        assert!(critic.tensors.iter().any(|t| t.name == "v_head"));
+        let actor = set.inventory_for(Role::Actor);
+        assert!(!actor.tensors.iter().any(|t| t.name == "v_head"));
+    }
+
+    #[test]
+    fn uniform_set_for_table2() {
+        let set = RlhfModelSet::uniform(ModelArch::llama2_7b());
+        assert_eq!(set.policy_arch.name, set.value_arch.name);
+    }
+}

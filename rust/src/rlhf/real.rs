@@ -1,0 +1,255 @@
+//! Real end-to-end PPO training (E10): the full RLHF loop — generation,
+//! scoring, synthetic reward, GAE, PPO update — running through the PJRT
+//! engine on AOT-compiled JAX/Pallas artifacts. No Python anywhere on this
+//! path.
+
+use crate::runtime::engine::RlhfEngine;
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// Reward configuration: the synthetic preference signal. A response token
+/// `t` is "preferred" iff `t % reward_mod == reward_res`; the sequence
+/// reward is `2·(preferred fraction) − 1`, so an aligned policy approaches
+/// +1. KL against the frozen reference keeps the policy from collapsing.
+#[derive(Debug, Clone)]
+pub struct PpoConfig {
+    pub reward_mod: i32,
+    pub reward_res: i32,
+    pub kl_beta: f32,
+    pub gamma: f32,
+    pub lam: f32,
+    pub temperature: f32,
+    pub seed: u64,
+    /// Recycle the PJRT client every N iterations (see
+    /// `RlhfEngine::recycle`); 0 disables.
+    pub recycle_every: u64,
+}
+
+impl Default for PpoConfig {
+    fn default() -> Self {
+        PpoConfig {
+            reward_mod: 7,
+            reward_res: 3,
+            kl_beta: 0.05,
+            gamma: 1.0,
+            lam: 0.95,
+            temperature: 1.0,
+            seed: 0x0DD5EED,
+            recycle_every: 4,
+        }
+    }
+}
+
+/// One PPO iteration's metrics.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter: u64,
+    pub mean_reward: f32,
+    pub mean_kl: f32,
+    pub policy_loss: f32,
+    pub value_loss: f32,
+    pub entropy: f32,
+    pub gen_seconds: f64,
+    pub train_seconds: f64,
+}
+
+/// The real trainer.
+pub struct RealPpoTrainer {
+    pub engine: RlhfEngine,
+    pub cfg: PpoConfig,
+    rng: Rng,
+    pub history: Vec<IterStats>,
+}
+
+impl RealPpoTrainer {
+    pub fn new(engine: RlhfEngine, cfg: PpoConfig) -> Self {
+        let rng = Rng::seeded(cfg.seed);
+        RealPpoTrainer {
+            engine,
+            cfg,
+            rng,
+            history: Vec::new(),
+        }
+    }
+
+    /// Synthetic prompt: a short Markov-ish token chain (seeded), mirroring
+    /// an instruction prefix.
+    fn sample_prompt(&mut self, len: usize, vocab: i32) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut t = self.rng.gen_range(vocab as u64) as i32;
+        for _ in 0..len {
+            out.push(t);
+            // biased walk through the vocab
+            t = (t * 31 + 17 + self.rng.gen_range(11) as i32) % vocab;
+        }
+        out
+    }
+
+    fn sample_token(&mut self, logits: &[f32], temperature: f32) -> i32 {
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<f64> = logits
+            .iter()
+            .map(|&l| (((l - max) / temperature) as f64).exp())
+            .collect();
+        let sum: f64 = probs.iter().sum();
+        for p in &mut probs {
+            *p /= sum;
+        }
+        self.rng.weighted_index(&probs) as i32
+    }
+
+    /// Sequence-level reward: preferred-token fraction of the response.
+    pub fn reward(&self, response: &[i32]) -> f32 {
+        if response.is_empty() {
+            return 0.0;
+        }
+        let hits = response
+            .iter()
+            .filter(|&&t| t % self.cfg.reward_mod == self.cfg.reward_res)
+            .count();
+        2.0 * hits as f32 / response.len() as f32 - 1.0
+    }
+
+    /// Run one PPO iteration: rollout -> score -> GAE -> update.
+    pub fn step(&mut self) -> Result<IterStats> {
+        let b = self.engine.manifest.batch;
+        let s = self.engine.manifest.max_seq;
+        let prompt = self.engine.manifest.prompt;
+        let vocab = self.engine.manifest.vocab as i32;
+        let iter = self.history.len() as u64 + 1;
+        if self.cfg.recycle_every > 0 && iter > 1 && (iter - 1) % self.cfg.recycle_every == 0 {
+            self.engine.recycle()?;
+        }
+
+        // ---- Generation (decode loop with KV cache) ----
+        let t_gen = std::time::Instant::now();
+        let mut tokens = vec![0i32; b * s];
+        for bi in 0..b {
+            let p = self.sample_prompt(prompt, vocab);
+            tokens[bi * s..bi * s + prompt].copy_from_slice(&p);
+        }
+        let mut kv = self.engine.init_kv()?;
+        // Feed the prompt; then sample the response.
+        for pos in 0..s - 1 {
+            let col: Vec<i32> = (0..b).map(|bi| tokens[bi * s + pos]).collect();
+            let (logits, kv_new) = self.engine.decode(&kv, &col, pos as i32)?;
+            kv = kv_new;
+            if pos + 1 >= prompt {
+                for bi in 0..b {
+                    let row = &logits[bi * vocab as usize..(bi + 1) * vocab as usize];
+                    tokens[bi * s + pos + 1] = self.sample_token(row, self.cfg.temperature);
+                }
+            }
+        }
+        let gen_seconds = t_gen.elapsed().as_secs_f64();
+
+        // ---- Scoring ----
+        let (old_lp, old_values) = self.engine.score(&self.engine.params, &tokens)?;
+        let (ref_lp, _) = self.engine.score(&self.engine.ref_params, &tokens)?;
+
+        // ---- Rewards + GAE ----
+        let sp = s - 1; // prediction positions
+        let mut mask = vec![0f32; b * s];
+        for bi in 0..b {
+            for j in prompt..s {
+                mask[bi * s + j] = 1.0;
+            }
+        }
+        let mut rewards = vec![0f32; b * sp];
+        let mut mean_reward = 0.0;
+        let mut mean_kl = 0.0;
+        for bi in 0..b {
+            let response = &tokens[bi * s + prompt..bi * s + s];
+            let r = self.reward(response);
+            mean_reward += r / b as f32;
+            for i in (prompt - 1)..sp {
+                let kl = old_lp[bi * sp + i] - ref_lp[bi * sp + i];
+                mean_kl += kl / (b * (sp - prompt + 1)) as f32;
+                // Dense per-token preference (prediction i emits token i+1)
+                // plus the KL penalty — the dense shaping is what lets a
+                // 3 M-param policy align within tens of PPO iterations.
+                let tok = tokens[bi * s + i + 1];
+                let pref = if tok % self.cfg.reward_mod == self.cfg.reward_res {
+                    1.0
+                } else {
+                    -1.0
+                };
+                rewards[bi * sp + i] = pref / (s - prompt) as f32 - self.cfg.kl_beta * kl;
+            }
+            rewards[bi * sp + sp - 1] += r; // terminal sequence-level bonus
+        }
+
+        // GAE over response positions; values[:, i] is the value at context i.
+        let mut advantages = vec![0f32; b * sp];
+        let mut returns = vec![0f32; b * sp];
+        for bi in 0..b {
+            let mut last_gae = 0f32;
+            for i in (prompt - 1..sp).rev() {
+                let v_i = old_values[bi * s + i];
+                let v_next = if i + 1 < s { old_values[bi * s + i + 1] } else { 0.0 };
+                let next_nonterminal = if i == sp - 1 { 0.0 } else { 1.0 };
+                let delta =
+                    rewards[bi * sp + i] + self.cfg.gamma * v_next * next_nonterminal - v_i;
+                last_gae = delta + self.cfg.gamma * self.cfg.lam * next_nonterminal * last_gae;
+                advantages[bi * sp + i] = last_gae;
+                returns[bi * sp + i] = last_gae + v_i;
+            }
+        }
+        // Advantage whitening over masked entries.
+        let masked: Vec<f32> = (0..b * sp)
+            .filter(|idx| {
+                let i = idx % sp;
+                i >= prompt - 1
+            })
+            .map(|idx| advantages[idx])
+            .collect();
+        let mean = masked.iter().sum::<f32>() / masked.len() as f32;
+        let var = masked.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>()
+            / masked.len() as f32;
+        let std = var.sqrt().max(1e-6);
+        for idx in 0..b * sp {
+            if idx % sp >= prompt - 1 {
+                advantages[idx] = (advantages[idx] - mean) / std;
+            }
+        }
+
+        // ---- PPO update ----
+        let t_train = std::time::Instant::now();
+        let (pg, vf, ent) = self.engine.train(
+            &tokens,
+            &mask,
+            &old_lp,
+            &old_values,
+            &advantages,
+            &returns,
+        )?;
+        let train_seconds = t_train.elapsed().as_secs_f64();
+
+        let stats = IterStats {
+            iter,
+            mean_reward,
+            mean_kl,
+            policy_loss: pg,
+            value_loss: vf,
+            entropy: ent,
+            gen_seconds,
+            train_seconds,
+        };
+        self.history.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// CSV of the training curve (EXPERIMENTS.md E10).
+    pub fn history_csv(&self) -> String {
+        let mut out =
+            String::from("iter,mean_reward,mean_kl,policy_loss,value_loss,entropy,gen_s,train_s\n");
+        for h in &self.history {
+            out.push_str(&format!(
+                "{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.2},{:.2}\n",
+                h.iter, h.mean_reward, h.mean_kl, h.policy_loss, h.value_loss, h.entropy,
+                h.gen_seconds, h.train_seconds
+            ));
+        }
+        out
+    }
+}

@@ -1,0 +1,1206 @@
+//! The RLHF stage-3 allocation-trace generator — the heart of the memory
+//! study.
+//!
+//! For a given framework profile, model set, strategy configuration and
+//! `empty_cache` policy, [`build_trace`] emits the op stream one simulated
+//! GPU (rank 0 of `world`) observes across PPO steps:
+//!
+//! ```text
+//! Init ── [ Generation → InferActor → InferReference → InferReward →
+//!           InferCritic → TrainActor → TrainCritic → (step end) ]*
+//! ```
+//!
+//! Nothing here hardcodes memory *outcomes*; strategies only change which
+//! allocations are emitted (partitioned storage, gather/staging transients,
+//! checkpointed saves...). Fragmentation and reserved/allocated curves
+//! emerge when the trace replays through the allocator.
+
+use crate::frameworks::{FrameworkProfile, GenerationImpl};
+use crate::mem::{
+    adam_state_tensors, lora::lora_tensors, ActivationModel, AdamConfig, DType, KvCacheModel,
+    ParamInventory, SeqShape, TensorSpec,
+};
+use crate::policy::EmptyCachePolicy;
+use crate::rlhf::cost::{CostModel, GpuSpec};
+use crate::rlhf::models::{RlhfModelSet, Role};
+use crate::strategies::{zero, StrategyConfig};
+use crate::trace::{PhaseKind, Tag, Trace, TraceBuilder, TraceHandle};
+use crate::util::prng::Rng;
+
+/// Which parts of the pipeline run (paper §3.1's three scenarios, E6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioMode {
+    /// Inference + training (the normal pipeline).
+    Full,
+    /// Train actor and critic on pre-collected experience.
+    TrainBothPrecollected,
+    /// Train only the actor on pre-collected experience.
+    TrainActorOnly,
+}
+
+/// One simulated experiment (a row of Table 1 / Table 2).
+#[derive(Debug, Clone)]
+pub struct SimScenario {
+    pub framework: FrameworkProfile,
+    pub models: RlhfModelSet,
+    pub strategy: StrategyConfig,
+    pub world: u64,
+    pub policy: EmptyCachePolicy,
+    pub steps: u64,
+    pub mode: ScenarioMode,
+    pub gpu: GpuSpec,
+    /// Seed for response-length sampling.
+    pub seed: u64,
+    /// Model variable-length responses (EOS stopping): each step's actual
+    /// generated length is sampled in [gen_len/2, gen_len]. Real RLHF
+    /// rollouts vary like this, and the resulting size drift across steps
+    /// is a major source of cache-reuse failure (fragmentation).
+    pub len_jitter: bool,
+}
+
+impl SimScenario {
+    /// DeepSpeed-Chat/OPT, the Figure-1 configuration.
+    pub fn deepspeed_opt(strategy: StrategyConfig, policy: EmptyCachePolicy) -> Self {
+        SimScenario {
+            framework: FrameworkProfile::deepspeed_chat(),
+            models: RlhfModelSet::opt(),
+            strategy,
+            world: 4,
+            policy,
+            steps: 3,
+            mode: ScenarioMode::Full,
+            gpu: GpuSpec::rtx3090(),
+            seed: 0x5EED,
+            // DeepSpeed-Chat pads prompts and answers to the configured
+            // maxima, so tensor sizes repeat exactly across steps.
+            len_jitter: false,
+        }
+    }
+
+    /// ColossalChat/OPT.
+    pub fn colossal_opt(strategy: StrategyConfig, policy: EmptyCachePolicy) -> Self {
+        SimScenario {
+            framework: FrameworkProfile::colossal_chat(),
+            models: RlhfModelSet::opt(),
+            strategy,
+            world: 4,
+            policy,
+            steps: 3,
+            mode: ScenarioMode::Full,
+            gpu: GpuSpec::rtx3090(),
+            seed: 0x5EED,
+            len_jitter: true,
+        }
+    }
+
+    /// ColossalChat/GPT-2.
+    pub fn colossal_gpt2(strategy: StrategyConfig, policy: EmptyCachePolicy) -> Self {
+        SimScenario {
+            framework: FrameworkProfile::colossal_chat(),
+            models: RlhfModelSet::gpt2(),
+            strategy,
+            policy,
+            ..Self::colossal_opt(strategy, policy)
+        }
+    }
+}
+
+/// Per-model simulated state on this rank.
+struct SimModel {
+    #[allow(dead_code)] // diagnostic field (kept for Debug dumps)
+    role: Role,
+    inv: ParamInventory,
+    act: ActivationModel,
+    kv: KvCacheModel,
+    cost: CostModel,
+    /// Trainable tensors (LoRA adapters + value head, or everything if
+    /// LoRA is off).
+    trainable: Vec<TensorSpec>,
+    /// Persistent handles.
+    param_handles: Vec<TraceHandle>,
+    adapter_handles: Vec<TraceHandle>,
+    opt_handles: Vec<TraceHandle>,
+    grad_handles: Vec<TraceHandle>,
+    /// Whether the fp16 replica currently sits on the GPU (ColossalChat
+    /// offloads ref/reward to host during training).
+    resident: bool,
+}
+
+impl SimModel {
+    fn build(role: Role, scn: &SimScenario) -> SimModel {
+        let inv = scn.models.inventory_for(role);
+        let act = ActivationModel::new(scn.models.arch_for(role), DType::F16);
+        let kv = KvCacheModel::new(scn.models.arch_for(role), DType::F16);
+        let cost = CostModel::for_inventory(&inv, scn.gpu);
+        // DeepSpeed-Chat's reference scripts set `actor_lora_dim 128` but
+        // leave `critic_lora_dim 0`: the critic is fully fine-tuned. This
+        // is what makes ZeRO-1's optimizer partitioning worth ~4 GB in
+        // Table 1 (the critic's full Adam state dwarfs the actor's LoRA
+        // state).
+        let trainable: Vec<TensorSpec> = if !role.is_trainable() {
+            vec![]
+        } else if role == Role::Actor {
+            match scn.strategy.lora {
+                Some(spec) => lora_tensors(&inv, spec),
+                None => inv.tensors.clone(),
+            }
+        } else {
+            inv.tensors.clone()
+        };
+        SimModel {
+            role,
+            inv,
+            act,
+            kv,
+            cost,
+            trainable,
+            param_handles: vec![],
+            adapter_handles: vec![],
+            opt_handles: vec![],
+            grad_handles: vec![],
+            resident: false,
+        }
+    }
+
+    fn trainable_bytes_f16(&self) -> u64 {
+        self.trainable.iter().map(|t| t.bytes(DType::F16)).sum()
+    }
+}
+
+/// Experience tensors shared across phases within one PPO step.
+#[derive(Default)]
+struct Experience {
+    handles: Vec<TraceHandle>,
+}
+
+/// DeepSpeed `stage3_max_live_parameters` ring: gathered fp16 layer copies
+/// stay live until the cap is exceeded, then the oldest are released.
+struct GatherRing {
+    cap: u64,
+    live: std::collections::VecDeque<(TraceHandle, u64)>,
+    live_bytes: u64,
+}
+
+impl GatherRing {
+    fn new(cap: u64) -> Self {
+        GatherRing {
+            cap,
+            live: std::collections::VecDeque::new(),
+            live_bytes: 0,
+        }
+    }
+
+    fn push(&mut self, b: &mut TraceBuilder, bytes: u64) {
+        let h = b.alloc(bytes, Tag::CommBuffer);
+        self.live.push_back((h, bytes));
+        self.live_bytes += bytes;
+        while self.live_bytes > self.cap && self.live.len() > 1 {
+            let (old, ob) = self.live.pop_front().unwrap();
+            b.free(old);
+            self.live_bytes -= ob;
+        }
+    }
+
+    fn drain(&mut self, b: &mut TraceBuilder) {
+        while let Some((h, ob)) = self.live.pop_front() {
+            b.free(h);
+            self.live_bytes -= ob;
+        }
+    }
+}
+
+/// DeepSpeed stage-3 prefetch: parameters are all-gathered in buckets of
+/// `stage3_prefetch_bucket_size` bytes whose boundaries cut across tensor
+/// and layer edges — so the gather sizes vary bucket to bucket, and their
+/// lifetimes interleave with activations. That size diversity is what
+/// shreds the large pool (paper §3.2's ZeRO-3 fragmentation).
+struct GatherStream {
+    /// Bucket sizes in gather order.
+    buckets: Vec<u64>,
+    /// Cumulative parameter bytes needed *through* each layer index.
+    needed_through: Vec<u64>,
+    next_bucket: usize,
+    gathered: u64,
+}
+
+impl GatherStream {
+    fn new(inv: &ParamInventory, reverse: bool, bucket_bytes: u64) -> GatherStream {
+        let n_layers = inv.arch.n_layers as usize;
+        // The bucket cut is fixed at engine init (DeepSpeed's param-group
+        // coalescing), so forward and backward use the SAME bucket sizes —
+        // backward just consumes them in reverse. That identity is what
+        // lets a backward gather reuse the cache its forward twin left.
+        let globals: u64 = inv.global_tensors().map(|t| t.bytes(DType::F16)).sum();
+        let mut tensor_bytes: Vec<u64> = vec![globals];
+        for l in 0..n_layers as u64 {
+            for t in inv.layer_tensors(l) {
+                tensor_bytes.push(t.bytes(DType::F16));
+            }
+        }
+        let mut buckets = Vec::new();
+        let mut acc = 0u64;
+        for b in &tensor_bytes {
+            acc += b;
+            if acc >= bucket_bytes {
+                buckets.push(acc);
+                acc = 0;
+            }
+        }
+        if acc > 0 {
+            buckets.push(acc);
+        }
+        // Per-traversal-step requirements.
+        let layer_bytes: Vec<u64> = (0..n_layers as u64)
+            .map(|l| inv.layer_bytes(l, DType::F16))
+            .collect();
+        let mut needed_through = Vec::with_capacity(n_layers);
+        if reverse {
+            buckets.reverse();
+            let mut cum = 0u64;
+            for l in (0..n_layers).rev() {
+                cum += layer_bytes[l];
+                needed_through.push(cum);
+            }
+        } else {
+            let mut cum = globals;
+            for l in 0..n_layers {
+                cum += layer_bytes[l];
+                needed_through.push(cum);
+            }
+        }
+        GatherStream {
+            buckets,
+            needed_through,
+            next_bucket: 0,
+            gathered: 0,
+        }
+    }
+
+    /// Gather enough buckets (into `ring`) to cover layer index `i` of the
+    /// traversal. Returns bytes newly gathered (for the time model).
+    fn advance(&mut self, i: usize, ring: &mut GatherRing, b: &mut TraceBuilder) -> u64 {
+        let needed = self.needed_through[i];
+        let mut newly = 0;
+        while self.gathered < needed && self.next_bucket < self.buckets.len() {
+            let bytes = self.buckets[self.next_bucket];
+            ring.push(b, bytes);
+            self.gathered += bytes;
+            newly += bytes;
+            self.next_bucket += 1;
+        }
+        newly
+    }
+}
+
+/// The emitter.
+struct Emitter<'a> {
+    scn: &'a SimScenario,
+    b: TraceBuilder,
+    actor: SimModel,
+    reference: SimModel,
+    critic: SimModel,
+    reward: SimModel,
+    exp: Experience,
+    rng: Rng,
+    /// This step's actual generated length (≤ framework gen_len).
+    cur_gen_len: u64,
+}
+
+/// Build the rank-0 allocation trace of `scn`.
+pub fn build_trace(scn: &SimScenario) -> Trace {
+    assert!(
+        scn.framework.supports(&scn.strategy),
+        "{} does not support {:?}",
+        scn.framework.kind.name(),
+        scn.strategy
+    );
+    let mut e = Emitter {
+        scn,
+        b: TraceBuilder::new(),
+        actor: SimModel::build(Role::Actor, scn),
+        reference: SimModel::build(Role::Reference, scn),
+        critic: SimModel::build(Role::Critic, scn),
+        reward: SimModel::build(Role::Reward, scn),
+        exp: Experience::default(),
+        rng: Rng::seeded(scn.seed),
+        cur_gen_len: scn.framework.gen_len,
+    };
+    e.run();
+    e.b.finish()
+}
+
+impl<'a> Emitter<'a> {
+    fn run(&mut self) {
+        self.init();
+        for step in 1..=self.scn.steps {
+            // Variable-length responses: the batch's max generated length
+            // this step (EOS stopping), which every downstream tensor
+            // inherits.
+            self.cur_gen_len = if self.scn.len_jitter {
+                let g = self.scn.framework.gen_len;
+                let lo = (g / 2).max(1);
+                lo + self.rng.gen_range(g - lo + 1)
+            } else {
+                self.scn.framework.gen_len
+            };
+            match self.scn.mode {
+                ScenarioMode::Full => {
+                    self.generation();
+                    self.infer_phase(PhaseKind::InferActor);
+                    self.infer_phase(PhaseKind::InferReference);
+                    self.infer_phase(PhaseKind::InferReward);
+                    self.infer_phase(PhaseKind::InferCritic);
+                    self.advantages();
+                    self.train_phase(PhaseKind::TrainActor);
+                    self.train_phase(PhaseKind::TrainCritic);
+                }
+                ScenarioMode::TrainBothPrecollected => {
+                    self.precollected_experience();
+                    self.train_phase(PhaseKind::TrainActor);
+                    self.train_phase(PhaseKind::TrainCritic);
+                }
+                ScenarioMode::TrainActorOnly => {
+                    self.precollected_experience();
+                    self.train_phase(PhaseKind::TrainActor);
+                }
+            }
+            self.free_experience();
+            self.b.step_end(step);
+        }
+    }
+
+    fn end_phase(&mut self, phase: PhaseKind) {
+        if self.scn.policy.applies_after(phase) {
+            self.b.empty_cache();
+        }
+    }
+
+    // ---------------- Init ----------------
+
+    fn init(&mut self) {
+        self.b.phase(PhaseKind::Init);
+        let world = self.scn.world;
+        let z = self.scn.strategy.zero;
+        let offload = self.scn.strategy.cpu_offload;
+
+        for role in Role::ALL {
+            let m = self.model_mut(role);
+            // fp16 replica: per-tensor; partitioned under ZeRO-3 — but only
+            // for the *training engines* (actor, critic). DeepSpeed-Chat's
+            // and ColossalChat's reference scripts leave the frozen
+            // reference/reward replicas unsharded regardless of the actor's
+            // ZeRO stage.
+            let partition = z.partitions_params() && role.is_trainable();
+            let sizes: Vec<u64> = m
+                .inv
+                .tensors
+                .iter()
+                .map(|t| {
+                    let full = t.bytes(DType::F16);
+                    if partition {
+                        zero::partitioned_bytes(full, world)
+                    } else {
+                        full
+                    }
+                })
+                .collect();
+            let handles = self.b.alloc_group(sizes, Tag::Param);
+            let m = self.model_mut(role);
+            m.param_handles = handles;
+            m.resident = true;
+
+            // LoRA adapters (dense; only the actor carries them).
+            let adapter_sizes: Vec<u64> = if role == Role::Actor && self.scn.strategy.lora.is_some()
+            {
+                self.model(role)
+                    .trainable
+                    .iter()
+                    .map(|t| t.bytes(DType::F16))
+                    .collect()
+            } else {
+                vec![]
+            };
+            if !adapter_sizes.is_empty() {
+                let hs = self.b.alloc_group(adapter_sizes, Tag::Param);
+                self.model_mut(role).adapter_handles = hs;
+            }
+
+            // Optimizer states (trainable models; on host when offloaded).
+            if role.is_trainable() && !offload {
+                let trainable_refs: Vec<&TensorSpec> =
+                    self.model(role).trainable.iter().collect();
+                let states = adam_state_tensors(&trainable_refs, AdamConfig::default());
+                let sizes: Vec<u64> = states
+                    .iter()
+                    .map(|s| {
+                        if z.partitions_optimizer() {
+                            zero::partitioned_bytes(s.bytes, world)
+                        } else {
+                            s.bytes
+                        }
+                    })
+                    .collect();
+                let hs = self.b.alloc_group(sizes, Tag::OptState);
+                self.model_mut(role).opt_handles = hs;
+            }
+
+            // DeepSpeed pre-allocates its communication machinery once at
+            // engine init (the `__ipg_buffer` reduce bucket; the pinned
+            // staging pair for offload) — these persist across steps rather
+            // than churning per micro-batch.
+            if role.is_trainable() {
+                if z.partitions_gradients() {
+                    let gb = self.model(role).trainable_bytes_f16();
+                    let bucket = gb.min(zero::defaults::REDUCE_BUCKET_BYTES).max(16);
+                    let h = self.b.alloc(bucket, Tag::CommBuffer);
+                    self.model_mut(role).opt_handles.push(h);
+                }
+                if offload {
+                    let gb = self.model(role).trainable_bytes_f16();
+                    let cfg = crate::strategies::offload::OffloadConfig::default();
+                    let chunk = gb.min(cfg.staging_bytes).max(16);
+                    for _ in 0..cfg.live_buffers() {
+                        let h = self.b.alloc(chunk, Tag::Staging);
+                        self.model_mut(role).opt_handles.push(h);
+                    }
+                }
+            }
+        }
+
+        // DeepSpeed-Chat hybrid engine: fused inference containers hold a
+        // second copy of the actor weights (ZeRO-3 materializes them from
+        // gathers at generation time instead).
+        if self.scn.framework.hybrid_engine && !z.partitions_params() {
+            let layers = self.actor.inv.arch.n_layers;
+            let mut sizes: Vec<u64> = Vec::new();
+            for l in 0..layers {
+                sizes.push(self.actor.inv.layer_bytes(l, DType::F16));
+            }
+            let hs = self.b.alloc_group(sizes, Tag::Param);
+            self.actor.opt_handles.extend(hs); // lifetime = engine lifetime
+        }
+    }
+
+    // ---------------- Experience generation ----------------
+
+    fn generation(&mut self) {
+        self.b.phase(PhaseKind::Generation);
+        let fw = &self.scn.framework;
+        let world = self.scn.world;
+        let z3 = self.scn.strategy.zero.partitions_params();
+
+        // DeepSpeed hybrid-engine style: under ZeRO-3 the actor's full
+        // parameters are gathered once for the whole generation phase.
+        let mut gathered: Vec<TraceHandle> = vec![];
+        if z3 {
+            let arch_layers = self.actor.inv.arch.n_layers;
+            let mut sizes: Vec<u64> = Vec::new();
+            let global: u64 = self
+                .actor
+                .inv
+                .global_tensors()
+                .map(|t| t.bytes(DType::F16))
+                .sum();
+            sizes.push(global);
+            for l in 0..arch_layers {
+                sizes.push(self.actor.inv.layer_bytes(l, DType::F16));
+            }
+            let total: u64 = sizes.iter().sum();
+            gathered = self.b.alloc_group(sizes, Tag::CommBuffer);
+            let us = self.actor.cost.allgather_us(total, world);
+            self.b.compute(us);
+        }
+
+        let chunks = fw.infer_chunks();
+        let mb = fw.infer_micro_batch.min(fw.rollout_batch);
+        let gen_len = self.cur_gen_len;
+        for _chunk in 0..chunks {
+            self.generate_chunk(mb, gen_len);
+        }
+
+        if z3 {
+            self.b.free_all(gathered);
+        }
+
+        // The generated sequences + attention masks persist as experience.
+        let fw = &self.scn.framework;
+        let seq_bytes = fw.rollout_batch * (fw.prompt_len + self.cur_gen_len) * DType::I64.bytes();
+        let seqs = self.b.alloc(seq_bytes, Tag::Experience);
+        let mask = self.b.alloc(seq_bytes, Tag::Experience);
+        self.exp.handles.push(seqs);
+        self.exp.handles.push(mask);
+
+        self.end_phase(PhaseKind::Generation);
+    }
+
+    /// One generation micro-batch: prefill + autoregressive decode with a
+    /// HuggingFace-style dynamic KV cache (per-step concat churn).
+    fn generate_chunk(&mut self, mb: u64, gen_len: u64) {
+        let fw = self.scn.framework.clone();
+        let n_layers = self.actor.inv.arch.n_layers;
+        let prompt = SeqShape {
+            batch: mb,
+            seq: fw.prompt_len,
+        };
+
+        // Prefill: per-layer transients + initial KV tensors.
+        let mut kv_handles: Vec<(TraceHandle, TraceHandle)> = Vec::with_capacity(n_layers as usize);
+        for _l in 0..n_layers {
+            let transients: Vec<u64> = self
+                .actor
+                .act
+                .layer_transients(prompt)
+                .iter()
+                .map(|t| t.bytes)
+                .collect();
+            self.b.transient(transients, Tag::Activation);
+            let kb = self.actor.kv.layer_kv_bytes(mb, fw.prompt_len);
+            let k = self.b.alloc(kb, Tag::KvCache);
+            let v = self.b.alloc(kb, Tag::KvCache);
+            kv_handles.push((k, v));
+        }
+        self.b
+            .compute(self.actor.cost.forward_us(mb * fw.prompt_len));
+        // Prefill logits (full prompt) — sampled then dropped.
+        let prefill_logits = self.b.alloc(
+            self.actor.act.logits_bytes(prompt),
+            Tag::Logits,
+        );
+        self.b.free(prefill_logits);
+
+        // Decode loop.
+        let mut colossal_logits: Option<TraceHandle> = None;
+        for t in 0..gen_len {
+            let cur = fw.prompt_len + t;
+            for l in 0..n_layers as usize {
+                // Per-step per-layer workspace: fused qkv/ctx temporaries
+                // plus the [mb, h, 1, cur] attention row.
+                let d = self.actor.inv.arch.d_model;
+                let h = self.actor.inv.arch.n_heads;
+                let qkv_ws = 3 * mb * d * DType::F16.bytes();
+                let score_ws = mb * h * (cur + 1) * DType::F16.bytes();
+                self.b.transient([qkv_ws, score_ws], Tag::Activation);
+
+                // KV concat: allocate len+1 tensors, free the old pair.
+                let new_bytes = self.actor.kv.layer_kv_bytes(mb, cur + 1);
+                let nk = self.b.alloc(new_bytes, Tag::KvCache);
+                let nv = self.b.alloc(new_bytes, Tag::KvCache);
+                let (ok, ov) = kv_handles[l];
+                self.b.free(ok);
+                self.b.free(ov);
+                kv_handles[l] = (nk, nv);
+            }
+            match fw.generation {
+                GenerationImpl::HuggingFace => {
+                    // [mb, vocab] fp32 step logits.
+                    let lb = self.actor.act.step_logits_bytes(mb);
+                    self.b.transient([lb], Tag::Logits);
+                }
+                GenerationImpl::ColossalOriginal => {
+                    // Keeps cumulative [mb, cur+1, vocab] logits each step.
+                    let lb = mb * (cur + 1) * self.actor.inv.arch.vocab * 4;
+                    let nh = self.b.alloc(lb, Tag::Logits);
+                    if let Some(old) = colossal_logits.take() {
+                        self.b.free(old);
+                    }
+                    colossal_logits = Some(nh);
+                }
+            }
+            self.b.compute(self.actor.cost.decode_step_us(mb));
+        }
+        if let Some(h) = colossal_logits {
+            self.b.free(h);
+        }
+        // Free the final KV cache.
+        for (k, v) in kv_handles {
+            self.b.free(k);
+            self.b.free(v);
+        }
+    }
+
+    // ---------------- Scoring inferences ----------------
+
+    fn infer_phase(&mut self, phase: PhaseKind) {
+        self.b.phase(phase);
+        let role = match phase {
+            PhaseKind::InferActor => Role::Actor,
+            PhaseKind::InferReference => Role::Reference,
+            PhaseKind::InferReward => Role::Reward,
+            PhaseKind::InferCritic => Role::Critic,
+            _ => unreachable!("not an inference phase"),
+        };
+        // ColossalChat re-uploads host-offloaded inference models when the
+        // experience phase needs them.
+        if !self.model(role).resident {
+            self.upload_model(role);
+        }
+
+        let fw = self.scn.framework.clone();
+        let mb = fw.infer_micro_batch.min(fw.rollout_batch);
+        let sh = SeqShape {
+            batch: mb,
+            seq: fw.prompt_len + self.cur_gen_len,
+        };
+        let chunks = fw.infer_chunks();
+        let per_gpu_rollout = fw.rollout_batch;
+
+        for _c in 0..chunks {
+            // Head outputs are produced while the last gathered params are
+            // still live (module hooks release them after the forward), so
+            // their allocation precedes the gather-ring drain.
+            let head: Vec<u64> = match role {
+                Role::Actor | Role::Reference => {
+                    let lb = self.model(role).act.logits_bytes(sh);
+                    vec![lb, lb] // logits + log-softmax workspace
+                }
+                Role::Reward | Role::Critic => vec![mb * sh.seq * 4],
+            };
+            self.forward_layers(role, sh, &head);
+            let us = self.model(role).cost.forward_us(mb * sh.seq);
+            self.b.compute(us);
+        }
+
+        // Persisted experience from this phase.
+        let s = fw.prompt_len + self.cur_gen_len;
+        let keep = match role {
+            Role::Actor => vec![per_gpu_rollout * s * 4],      // old logprobs
+            Role::Reference => vec![per_gpu_rollout * s * 4],  // ref logprobs
+            Role::Reward => vec![per_gpu_rollout * 4],         // sequence rewards
+            Role::Critic => vec![per_gpu_rollout * s * 4],     // values
+        };
+        let hs = self.b.alloc_group(keep, Tag::Experience);
+        self.exp.handles.extend(hs);
+
+        self.end_phase(phase);
+    }
+
+    /// Advantage/return computation (GAE) on experience tensors.
+    fn advantages(&mut self) {
+        let fw = &self.scn.framework;
+        let s = fw.prompt_len + self.cur_gen_len;
+        let b = fw.rollout_batch;
+        let sizes = vec![b * s * 4, b * s * 4]; // advantages, returns
+        let hs = self.b.alloc_group(sizes, Tag::Experience);
+        self.exp.handles.extend(hs);
+    }
+
+    /// E6 pre-collected experience (loaded instead of generated).
+    fn precollected_experience(&mut self) {
+        let fw = &self.scn.framework;
+        let s = fw.total_seq();
+        let b = fw.rollout_batch;
+        let sizes = vec![
+            b * s * DType::I64.bytes(), // sequences
+            b * s * DType::I64.bytes(), // mask
+            b * s * 4,                  // old logprobs
+            b * s * 4,                  // ref logprobs
+            b * 4,                      // rewards
+            b * s * 4,                  // values
+            b * s * 4,                  // advantages
+            b * s * 4,                  // returns
+        ];
+        let hs = self.b.alloc_group(sizes, Tag::Experience);
+        self.exp.handles.extend(hs);
+    }
+
+    fn free_experience(&mut self) {
+        let hs = std::mem::take(&mut self.exp.handles);
+        self.b.free_all(hs);
+    }
+
+    // ---------------- Training ----------------
+
+    fn train_phase(&mut self, phase: PhaseKind) {
+        self.b.phase(phase);
+        let role = match phase {
+            PhaseKind::TrainActor => Role::Actor,
+            PhaseKind::TrainCritic => Role::Critic,
+            _ => unreachable!("not a training phase"),
+        };
+
+        // ColossalChat: move the frozen scorers off-GPU while training.
+        if phase == PhaseKind::TrainActor
+            && self.scn.framework.offload_inference_models_during_training
+            && self.scn.mode == ScenarioMode::Full
+        {
+            self.offload_model(Role::Reference);
+            self.offload_model(Role::Reward);
+        }
+
+        let fw = self.scn.framework.clone();
+        let mb = fw.train_micro_batch.min(fw.rollout_batch);
+        let sh = SeqShape {
+            batch: mb,
+            seq: fw.prompt_len + self.cur_gen_len,
+        };
+        let world = self.scn.world;
+        let z = self.scn.strategy.zero;
+
+        // ZeRO-2/3 partitioned gradient storage (freed after the step).
+        let mut part_grads: Vec<TraceHandle> = vec![];
+        if z.partitions_gradients() {
+            let gb = self.model(role).trainable_bytes_f16();
+            part_grads.push(
+                self.b
+                    .alloc(zero::partitioned_bytes(gb, world).max(16), Tag::Grad),
+            );
+        }
+
+        for _epoch in 0..fw.ppo_epochs {
+            for _chunk in 0..fw.train_chunks() {
+                self.train_micro_step(role, sh, &mut vec![]);
+            }
+        }
+
+        self.optimizer_step(role);
+        self.b.free_all(part_grads);
+        // zero_grad(set_to_none=True): drop dense grads after the step.
+        let ghs = std::mem::take(&mut self.model_mut(role).grad_handles);
+        self.b.free_all(ghs);
+
+        self.end_phase(phase);
+    }
+
+    /// One training micro-batch: forward (saving activations), loss,
+    /// backward (consuming them), gradient production.
+    fn train_micro_step(&mut self, role: Role, sh: SeqShape, _unused: &mut Vec<TraceHandle>) {
+        let z = self.scn.strategy.zero;
+        let world = self.scn.world;
+        let ckpt = self.scn.strategy.grad_checkpoint;
+        let n_layers = self.model(role).inv.arch.n_layers;
+
+        // ---- Forward ----
+        let mut saved: Vec<Vec<TraceHandle>> = Vec::with_capacity(n_layers as usize);
+        let mut ring = GatherRing::new(zero::defaults::MAX_LIVE_GATHERED_BYTES);
+        let mut stream = GatherStream::new(
+            &self.model(role).inv,
+            false,
+            zero::defaults::PREFETCH_BUCKET_BYTES,
+        );
+        let mut fwd_us = 0.0;
+        for l in 0..n_layers {
+            if z.partitions_params() {
+                // Prefetch-bucketed all-gather; gathered copies stay live up
+                // to `stage3_max_live_parameters`, interleaving with the
+                // saved activations below.
+                let newly = stream.advance(l as usize, &mut ring, &mut self.b);
+                fwd_us += self.model(role).cost.allgather_us(newly, world);
+            }
+            let m = self.model(role);
+            let sizes: Vec<u64> = if ckpt {
+                m.act.layer_checkpoint(sh).iter().map(|t| t.bytes).collect()
+            } else {
+                m.act.layer_saved(sh).iter().map(|t| t.bytes).collect()
+            };
+            // Transient part of the layer fwd (not saved).
+            let extra: Vec<u64> = m
+                .act
+                .layer_transients(sh)
+                .iter()
+                .take(3)
+                .map(|t| t.bytes)
+                .collect();
+            self.b.transient(extra, Tag::Activation);
+            let hs = self.b.alloc_group(sizes, Tag::SavedActivation);
+            saved.push(hs);
+        }
+        fwd_us += self.model(role).cost.forward_us(sh.batch * sh.seq);
+        self.b.compute(fwd_us);
+
+        // ---- Head + loss (before the gathered params are released) ----
+        let mut head_saved: Vec<TraceHandle> = vec![];
+        match role {
+            Role::Actor => {
+                let lb = self.model(role).act.logits_bytes(sh);
+                head_saved.push(self.b.alloc(lb, Tag::SavedActivation));
+                // logprobs, ratio, clipped surrogate, KL penalty temps.
+                let t = sh.batch * sh.seq * 4;
+                self.b.transient([lb, t, t, t, t], Tag::Workspace);
+            }
+            Role::Critic => {
+                let t = sh.batch * sh.seq * 4;
+                // values, clipped values, value-loss temps.
+                self.b.transient([t, t, t], Tag::Workspace);
+            }
+            _ => unreachable!(),
+        }
+        ring.drain(&mut self.b);
+        self.b.free_all(head_saved);
+
+        // ---- Backward (reverse layer order, reversed gather stream) ----
+        let mut bwd_us = 0.0;
+        let mut ring = GatherRing::new(zero::defaults::MAX_LIVE_GATHERED_BYTES);
+        let mut stream = GatherStream::new(
+            &self.model(role).inv,
+            true,
+            zero::defaults::PREFETCH_BUCKET_BYTES,
+        );
+        for (i, _l) in (0..n_layers).rev().enumerate() {
+            if z.partitions_params() {
+                let newly = stream.advance(i, &mut ring, &mut self.b);
+                bwd_us += self.model(role).cost.allgather_us(newly, world);
+            }
+            let l = n_layers - 1 - i as u64;
+            let m = self.model(role);
+            if ckpt {
+                // Recompute the layer: transient re-materialization.
+                let recompute: Vec<u64> = m.act.layer_saved(sh).iter().map(|t| t.bytes).collect();
+                self.b.transient(recompute, Tag::Activation);
+            }
+            let bwd: Vec<u64> = self
+                .model(role)
+                .act
+                .layer_backward_transients(sh)
+                .iter()
+                .map(|t| t.bytes)
+                .collect();
+            self.b.transient(bwd, Tag::Activation);
+
+            // Dense per-tensor grads for this layer's trainable params
+            // (ZeRO-0/1 keep them; ZeRO-2/3 reduce into the partition).
+            if !self.scn.strategy.zero.partitions_gradients() {
+                let first_chunk = self.model(role).grad_handles.is_empty() && l == n_layers - 1;
+                if first_chunk || self.layer_grads_missing(role) {
+                    let sizes: Vec<u64> = self
+                        .model(role)
+                        .trainable
+                        .iter()
+                        .filter(|t| t.layer == Some(l))
+                        .map(|t| t.bytes(DType::F16))
+                        .collect();
+                    if !sizes.is_empty() {
+                        let hs = self.b.alloc_group(sizes, Tag::Grad);
+                        self.model_mut(role).grad_handles.extend(hs);
+                    }
+                }
+            }
+
+            // Free this layer's saved activations (consumed by backward).
+            let hs = saved.pop().unwrap();
+            self.b.free_all(hs);
+        }
+        ring.drain(&mut self.b);
+
+        // Non-layer trainable grads (value head) once per phase.
+        if !self.scn.strategy.zero.partitions_gradients() {
+            let sizes: Vec<u64> = self
+                .model(role)
+                .trainable
+                .iter()
+                .filter(|t| t.layer.is_none())
+                .map(|t| t.bytes(DType::F16))
+                .collect();
+            let missing = self.layer_grads_missing(role);
+            if !sizes.is_empty() && missing {
+                let hs = self.b.alloc_group(sizes, Tag::Grad);
+                self.model_mut(role).grad_handles.extend(hs);
+            }
+        }
+
+        // ZeRO-2/3: reduce-scatter this chunk's gradients through the
+        // persistent ipg bucket (allocated at Init) — time cost only.
+        if self.scn.strategy.zero.partitions_gradients() {
+            let gb = self.model(role).trainable_bytes_f16();
+            for bucket in zero::reduce_buckets(gb, zero::defaults::REDUCE_BUCKET_BYTES) {
+                bwd_us += self.model(role).cost.reduce_scatter_us(bucket, world);
+            }
+        }
+
+        bwd_us += 2.0 * self.model(role).cost.forward_us(sh.batch * sh.seq);
+        self.b.compute(bwd_us);
+    }
+
+    /// Have this role's dense grads not been allocated yet this phase?
+    fn layer_grads_missing(&self, role: Role) -> bool {
+        self.model(role).grad_handles.len() < self.model(role).trainable.len()
+    }
+
+    fn optimizer_step(&mut self, role: Role) {
+        let world = self.scn.world;
+        if self.scn.strategy.cpu_offload {
+            // Grads stream down / params stream up through the persistent
+            // pinned staging pair allocated at Init — time cost only.
+            let gb = self.model(role).trainable_bytes_f16();
+            let per_rank = if self.scn.strategy.zero.partitions_gradients() {
+                zero::partitioned_bytes(gb, world)
+            } else {
+                gb
+            };
+            let us = 2.0 * self.model(role).cost.host_copy_us(per_rank);
+            self.b.compute(us);
+        } else {
+            // FP16_Optimizer converts fp16 gradients to fp32 *per tensor*
+            // before fused Adam runs (transient, LIFO-freed).
+            let part = self.scn.strategy.zero.partitions_optimizer();
+            let sizes: Vec<u64> = self
+                .model(role)
+                .trainable
+                .iter()
+                .map(|t| {
+                    let fp32 = t.numel * 4;
+                    let b = if part {
+                        zero::partitioned_bytes(fp32, world)
+                    } else {
+                        fp32
+                    };
+                    b.max(512)
+                })
+                .collect();
+            for chunk in sizes.chunks(16) {
+                self.b.transient(chunk.to_vec(), Tag::Workspace);
+            }
+        }
+    }
+
+    // ---------------- ColossalChat host offload of scorers ----------------
+
+    fn offload_model(&mut self, role: Role) {
+        if !self.model(role).resident {
+            return;
+        }
+        let hs = std::mem::take(&mut self.model_mut(role).param_handles);
+        let bytes: u64 = 0;
+        let _ = bytes;
+        self.b.free_all(hs);
+        self.model_mut(role).resident = false;
+        let total = self.model(role).inv.total_bytes(DType::F16);
+        let us = self.model(role).cost.host_copy_us(total);
+        self.b.compute(us);
+    }
+
+    fn upload_model(&mut self, role: Role) {
+        // Only frozen scorers are host-offloaded, and those are unsharded.
+        let sizes: Vec<u64> = self
+            .model(role)
+            .inv
+            .tensors
+            .iter()
+            .map(|t| t.bytes(DType::F16))
+            .collect();
+        let hs = self.b.alloc_group(sizes, Tag::Param);
+        let m = self.model_mut(role);
+        m.param_handles = hs;
+        m.resident = true;
+        let total = self.model(role).inv.total_bytes(DType::F16);
+        let us = self.model(role).cost.host_copy_us(total);
+        self.b.compute(us);
+    }
+
+    // ---------------- helpers ----------------
+
+    fn model(&self, role: Role) -> &SimModel {
+        match role {
+            Role::Actor => &self.actor,
+            Role::Reference => &self.reference,
+            Role::Critic => &self.critic,
+            Role::Reward => &self.reward,
+        }
+    }
+
+    fn model_mut(&mut self, role: Role) -> &mut SimModel {
+        match role {
+            Role::Actor => &mut self.actor,
+            Role::Reference => &mut self.reference,
+            Role::Critic => &mut self.critic,
+            Role::Reward => &mut self.reward,
+        }
+    }
+
+    /// Forward through all layers without saving (inference).
+    /// `head_sizes` are the LM/value-head tensors allocated (transiently)
+    /// before the gathered parameters are released.
+    fn forward_layers(&mut self, role: Role, sh: SeqShape, head_sizes: &[u64]) {
+        // Only the sharded training engines (actor/critic) need gathers;
+        // the frozen scorers hold full replicas.
+        let z3 = self.scn.strategy.zero.partitions_params() && role.is_trainable();
+        let world = self.scn.world;
+        let n_layers = self.model(role).inv.arch.n_layers;
+        let mut ring = GatherRing::new(zero::defaults::MAX_LIVE_GATHERED_BYTES);
+        let mut stream = GatherStream::new(
+            &self.model(role).inv,
+            false,
+            zero::defaults::PREFETCH_BUCKET_BYTES,
+        );
+        let mut us = 0.0;
+        for l in 0..n_layers {
+            if z3 {
+                let newly = stream.advance(l as usize, &mut ring, &mut self.b);
+                us += self.model(role).cost.allgather_us(newly, world);
+            }
+            let sizes: Vec<u64> = self
+                .model(role)
+                .act
+                .layer_transients(sh)
+                .iter()
+                .map(|t| t.bytes)
+                .collect();
+            self.b.transient(sizes, Tag::Activation);
+            let hb = self.model(role).act.hidden_bytes(sh);
+            let hs = self.b.alloc(hb, Tag::Activation);
+            self.b.free(hs);
+        }
+        self.b.transient(head_sizes.to_vec(), Tag::Logits);
+        ring.drain(&mut self.b);
+        self.b.compute(us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+
+    fn small_scn(strategy: StrategyConfig) -> SimScenario {
+        let mut s = SimScenario::deepspeed_opt(strategy, EmptyCachePolicy::Never);
+        s.steps = 1;
+        s
+    }
+
+    #[test]
+    fn trace_is_balanced_modulo_persistents() {
+        let scn = small_scn(StrategyConfig::none());
+        let trace = build_trace(&scn);
+        // Persistent model/optimizer state legitimately outlives the trace;
+        // everything else must balance.
+        let leaked = trace.check_balanced().unwrap();
+        // params (4 models) + adapters (2) + opt (2 models) remain.
+        assert!(!leaked.is_empty());
+        assert!(trace.len() > 10_000, "trace too short: {}", trace.len());
+    }
+
+    #[test]
+    fn zero3_emits_comm_buffers() {
+        use crate::trace::TraceOp;
+        let trace = build_trace(&small_scn(StrategyConfig::zero3()));
+        let gathers = trace
+            .ops
+            .iter()
+            .filter(|op| matches!(op, TraceOp::Alloc { tag: Tag::CommBuffer, .. }))
+            .count();
+        assert!(gathers > 50, "expected many gathers, got {gathers}");
+        let none = build_trace(&small_scn(StrategyConfig::none()));
+        let gathers_none = none
+            .ops
+            .iter()
+            .filter(|op| matches!(op, TraceOp::Alloc { tag: Tag::CommBuffer, .. }))
+            .count();
+        assert_eq!(gathers_none, 0);
+    }
+
+    #[test]
+    fn checkpointing_reduces_saved_bytes() {
+        use crate::trace::TraceOp;
+        let saved = |t: &Trace| -> u64 {
+            t.ops
+                .iter()
+                .filter_map(|op| match op {
+                    TraceOp::Alloc {
+                        tag: Tag::SavedActivation,
+                        bytes,
+                        ..
+                    } => Some(*bytes),
+                    _ => None,
+                })
+                .sum()
+        };
+        let base = saved(&build_trace(&small_scn(StrategyConfig::none())));
+        let ckpt = saved(&build_trace(&small_scn(StrategyConfig::checkpointing())));
+        assert!(
+            ckpt * 4 < base,
+            "checkpointing should slash saved activations: {ckpt} vs {base}"
+        );
+    }
+
+    #[test]
+    fn offload_removes_opt_state_and_adds_staging() {
+        use crate::trace::TraceOp;
+        let count_tag = |t: &Trace, want: Tag| -> usize {
+            t.ops
+                .iter()
+                .filter(|op| matches!(op, TraceOp::Alloc { tag, .. } if *tag == want))
+                .count()
+        };
+        let off = build_trace(&small_scn(StrategyConfig::zero3_offload()));
+        assert_eq!(count_tag(&off, Tag::OptState), 0);
+        assert!(count_tag(&off, Tag::Staging) > 0);
+        let on = build_trace(&small_scn(StrategyConfig::zero3()));
+        assert!(count_tag(&on, Tag::OptState) > 0);
+        assert_eq!(count_tag(&on, Tag::Staging), 0);
+    }
+
+    #[test]
+    fn policy_inserts_empty_cache() {
+        use crate::trace::TraceOp;
+        let count_ec = |t: &Trace| t.ops.iter().filter(|op| matches!(op, TraceOp::EmptyCache)).count();
+        let mut scn = small_scn(StrategyConfig::none());
+        assert_eq!(count_ec(&build_trace(&scn)), 0);
+        scn.policy = EmptyCachePolicy::AfterBoth;
+        // 5 inference + 2 training phases per step.
+        assert_eq!(count_ec(&build_trace(&scn)), 7);
+        scn.policy = EmptyCachePolicy::AfterInference;
+        assert_eq!(count_ec(&build_trace(&scn)), 5);
+        scn.policy = EmptyCachePolicy::AfterTraining;
+        assert_eq!(count_ec(&build_trace(&scn)), 2);
+    }
+
+    #[test]
+    fn scenario_modes_shrink_pipeline() {
+        use crate::trace::TraceOp;
+        let phases = |t: &Trace| -> Vec<PhaseKind> {
+            t.ops
+                .iter()
+                .filter_map(|op| match op {
+                    TraceOp::Phase(p) => Some(*p),
+                    _ => None,
+                })
+                .collect()
+        };
+        let mut scn = small_scn(StrategyConfig::none());
+        scn.mode = ScenarioMode::TrainActorOnly;
+        let ps = phases(&build_trace(&scn));
+        assert!(ps.contains(&PhaseKind::TrainActor));
+        assert!(!ps.contains(&PhaseKind::Generation));
+        assert!(!ps.contains(&PhaseKind::TrainCritic));
+
+        scn.mode = ScenarioMode::TrainBothPrecollected;
+        let ps = phases(&build_trace(&scn));
+        assert!(ps.contains(&PhaseKind::TrainCritic));
+        assert!(!ps.contains(&PhaseKind::InferReward));
+    }
+
+    #[test]
+    fn colossal_offloads_scorers_during_training() {
+        use crate::trace::TraceOp;
+        let scn = SimScenario::colossal_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        let trace = build_trace(&scn);
+        // Params are freed (offload) and re-allocated (upload) mid-trace:
+        // count Param allocations beyond Init's 4 models + adapters.
+        let param_allocs = trace
+            .ops
+            .iter()
+            .filter(|op| matches!(op, TraceOp::Alloc { tag: Tag::Param, .. }))
+            .count();
+        let ds = build_trace(&SimScenario::deepspeed_opt(
+            StrategyConfig::none(),
+            EmptyCachePolicy::Never,
+        ));
+        let ds_param_allocs = ds
+            .ops
+            .iter()
+            .filter(|op| matches!(op, TraceOp::Alloc { tag: Tag::Param, .. }))
+            .count();
+        // ColossalChat re-uploads ref+reward each of 3 steps... with steps=3
+        // in the preset; both presets share steps, so colossal must exceed.
+        assert!(param_allocs > ds_param_allocs);
+    }
+
+    #[test]
+    fn multi_step_trace_scales_linearly() {
+        let mut scn = small_scn(StrategyConfig::none());
+        let one = build_trace(&scn).len();
+        scn.steps = 3;
+        let three = build_trace(&scn).len();
+        assert!(three > 2 * one && three < 4 * one, "one={one} three={three}");
+    }
+}

@@ -1,0 +1,219 @@
+//! The PJRT engine: loads the AOT HLO artifacts and exposes typed
+//! score/decode/train calls over flat `Literal` parameter lists.
+//!
+//! This is the only place Python's output is consumed; after `make
+//! artifacts` the binary is self-contained.
+
+use super::manifest::Manifest;
+use super::npz;
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Which artifact family to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// XLA-fused jnp path (fast on CPU; default for long runs).
+    Jnp,
+    /// Pallas interpret path (numerics-identical; exercised by tests).
+    Pallas,
+}
+
+impl KernelVariant {
+    fn score_name(self) -> &'static str {
+        match self {
+            KernelVariant::Jnp => "score.jnp",
+            KernelVariant::Pallas => "score.pallas",
+        }
+    }
+}
+
+/// Loaded engine with mutable actor state.
+pub struct RlhfEngine {
+    #[allow(dead_code)]
+    client: PjRtClient,
+    dir: String,
+    variant: KernelVariant,
+    pub manifest: Manifest,
+    score_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    train_exe: PjRtLoadedExecutable,
+    /// Actor parameters (flat leaf order).
+    pub params: Vec<Literal>,
+    /// Frozen reference copy (KL baseline).
+    pub ref_params: Vec<Literal>,
+    m: Vec<Literal>,
+    v: Vec<Literal>,
+    pub train_steps_done: u64,
+}
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+impl RlhfEngine {
+    /// Load artifacts for `arch` from `dir` and compile all executables.
+    pub fn load(dir: &str, arch: &str, variant: KernelVariant) -> Result<RlhfEngine> {
+        let manifest = Manifest::load(&format!("{dir}/{arch}.manifest.json"))?;
+        let client = PjRtClient::cpu()?;
+
+        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
+            let file = manifest
+                .artifact_file(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let path = format!("{dir}/{file}");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+
+        let score_exe = compile(variant.score_name())?;
+        let decode_exe = compile("decode.jnp")?;
+        let train_exe = compile("train.jnp")?;
+
+        // Initial parameters.
+        let arrays = npz::load_npz(&format!("{dir}/{arch}.init.npz"))?;
+        let mut params = Vec::with_capacity(manifest.leaves.len());
+        let mut ref_params = Vec::with_capacity(manifest.leaves.len());
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for leaf in &manifest.leaves {
+            let arr = arrays
+                .get(&leaf.name)
+                .ok_or_else(|| anyhow!("leaf {} missing from init.npz", leaf.name))?;
+            if arr.numel() != leaf.numel() {
+                bail!("leaf {} shape mismatch", leaf.name);
+            }
+            params.push(lit_f32(&arr.data, &leaf.shape)?);
+            ref_params.push(lit_f32(&arr.data, &leaf.shape)?);
+            let zeros = vec![0f32; leaf.numel()];
+            m.push(lit_f32(&zeros, &leaf.shape)?);
+            v.push(lit_f32(&zeros, &leaf.shape)?);
+        }
+
+        Ok(RlhfEngine {
+            client,
+            dir: dir.to_string(),
+            variant,
+            manifest,
+            score_exe,
+            decode_exe,
+            train_exe,
+            params,
+            ref_params,
+            m,
+            v,
+            train_steps_done: 0,
+        })
+    }
+
+    /// Rebuild the PJRT client + executables, keeping all model state.
+    ///
+    /// The image's xla_extension 0.5.1 CPU client accumulates per-execution
+    /// bookkeeping that makes call latency grow with the total number of
+    /// executions; recycling the client every few hundred calls keeps the
+    /// long end-to-end runs at steady throughput (EXPERIMENTS.md §Perf).
+    pub fn recycle(&mut self) -> Result<()> {
+        let fresh = Self::load(&self.dir, &self.manifest.arch, self.variant)?;
+        self.client = fresh.client;
+        self.score_exe = fresh.score_exe;
+        self.decode_exe = fresh.decode_exe;
+        self.train_exe = fresh.train_exe;
+        Ok(())
+    }
+
+    fn run(
+        exe: &PjRtLoadedExecutable,
+        args: &[&Literal],
+        expect_outputs: usize,
+    ) -> Result<Vec<Literal>> {
+        let result = exe.execute::<&Literal>(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != expect_outputs {
+            bail!("expected {expect_outputs} outputs, got {}", outs.len());
+        }
+        Ok(outs)
+    }
+
+    /// Scoring pass with arbitrary parameters (actor or reference):
+    /// returns (logprobs [b, s-1], values [b, s]) flattened.
+    pub fn score(&self, with_params: &[Literal], tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (b, s) = (self.manifest.batch, self.manifest.max_seq);
+        assert_eq!(tokens.len(), b * s);
+        let tok = lit_i32(tokens, &[b, s])?;
+        let mut args: Vec<&Literal> = with_params.iter().collect();
+        args.push(&tok);
+        let outs = Self::run(&self.score_exe, &args, 2)?;
+        Ok((outs[0].to_vec::<f32>()?, outs[1].to_vec::<f32>()?))
+    }
+
+    /// Zeroed KV cache literal.
+    pub fn init_kv(&self) -> Result<Literal> {
+        let numel: usize = self.manifest.kv_shape.iter().product();
+        lit_f32(&vec![0f32; numel], &self.manifest.kv_shape)
+    }
+
+    /// One decode step: (logits [b, vocab], new kv).
+    pub fn decode(&self, kv: &Literal, token: &[i32], pos: i32) -> Result<(Vec<f32>, Literal)> {
+        let b = self.manifest.batch;
+        assert_eq!(token.len(), b);
+        let tok = lit_i32(token, &[b])?;
+        let pos_lit = Literal::scalar(pos);
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(kv);
+        args.push(&tok);
+        args.push(&pos_lit);
+        let mut outs = Self::run(&self.decode_exe, &args, 2)?;
+        let kv_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().to_vec::<f32>()?;
+        Ok((logits, kv_new))
+    }
+
+    /// One PPO train step; updates the actor in place. Returns
+    /// (policy_loss, value_loss, entropy).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &mut self,
+        tokens: &[i32],
+        mask: &[f32],
+        old_logprobs: &[f32],
+        old_values: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+    ) -> Result<(f32, f32, f32)> {
+        let (b, s) = (self.manifest.batch, self.manifest.max_seq);
+        let n = self.manifest.leaves.len();
+        assert_eq!(tokens.len(), b * s);
+        assert_eq!(old_logprobs.len(), b * (s - 1));
+        self.train_steps_done += 1;
+        let step = Literal::scalar(self.train_steps_done as f32);
+        let tok = lit_i32(tokens, &[b, s])?;
+        let mask_l = lit_f32(mask, &[b, s])?;
+        let olp = lit_f32(old_logprobs, &[b, s - 1])?;
+        let ov = lit_f32(old_values, &[b, s])?;
+        let adv = lit_f32(advantages, &[b, s - 1])?;
+        let ret = lit_f32(returns, &[b, s - 1])?;
+
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * n + 7);
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.extend([&step, &tok, &mask_l, &olp, &ov, &adv, &ret]);
+
+        let mut outs = Self::run(&self.train_exe, &args, 3 * n + 3)?;
+        let ent = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let vf = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let pg = outs.pop().unwrap().to_vec::<f32>()?[0];
+        self.v = outs.split_off(2 * n);
+        self.m = outs.split_off(n);
+        self.params = outs;
+        Ok((pg, vf, ent))
+    }
+}

@@ -1,0 +1,147 @@
+//! Artifact manifest: the shapes/arg-order contract `python/compile/aot.py`
+//! writes and the engine obeys.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl LeafSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub arch: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub prompt: usize,
+    pub num_params: u64,
+    pub leaves: Vec<LeafSpec>,
+    pub kv_shape: Vec<usize>,
+    /// artifact name -> file name
+    pub artifacts: Vec<(String, String)>,
+}
+
+impl Manifest {
+    pub fn load(path: &str) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let j = parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        Self::from_json(&j).map_err(|e| anyhow!("{path}: {e}"))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest, String> {
+        let cfg = j.req("config")?;
+        let leaves = j
+            .req_arr("leaves")?
+            .iter()
+            .map(|l| {
+                Ok(LeafSpec {
+                    name: l.req_str("name")?.to_string(),
+                    shape: l
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                        .collect::<Result<Vec<_>, _>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let artifacts = match j.req("artifacts")? {
+            Json::Obj(kvs) => kvs
+                .iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.clone(),
+                        v.as_str().ok_or("artifact not a string")?.to_string(),
+                    ))
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+            _ => return Err("artifacts not an object".into()),
+        };
+        Ok(Manifest {
+            arch: j.req_str("arch")?.to_string(),
+            vocab: cfg.req_u64("vocab")? as usize,
+            d_model: cfg.req_u64("d_model")? as usize,
+            n_layers: cfg.req_u64("n_layers")? as usize,
+            n_heads: cfg.req_u64("n_heads")? as usize,
+            max_seq: cfg.req_u64("max_seq")? as usize,
+            batch: j.req_u64("batch")? as usize,
+            prompt: j.req_u64("prompt")? as usize,
+            num_params: j.req_u64("num_params")?,
+            leaves,
+            kv_shape: j
+                .req_arr("kv_shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or("bad kv dim".to_string()))
+                .collect::<Result<Vec<_>, _>>()?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact_file(&self, name: &str) -> Option<&str> {
+        self.artifacts
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn total_leaf_elems(&self) -> usize {
+        self.leaves.iter().map(|l| l.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "arch": "opt-nano",
+      "config": {"vocab": 512, "d_model": 256, "n_layers": 4, "n_heads": 8,
+                 "ffn": 1024, "max_seq": 96},
+      "batch": 4, "prompt": 32, "num_params": 3407616,
+      "leaves": [{"name": "tok_emb", "shape": [512, 256], "dtype": "float32"}],
+      "kv_shape": [4, 2, 4, 8, 96, 32],
+      "artifacts": {"score.jnp": "opt-nano.score.jnp.hlo.txt"},
+      "signatures": {}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.arch, "opt-nano");
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.leaves[0].numel(), 512 * 256);
+        assert_eq!(m.kv_shape.len(), 6);
+        assert_eq!(
+            m.artifact_file("score.jnp"),
+            Some("opt-nano.score.jnp.hlo.txt")
+        );
+        assert_eq!(m.artifact_file("missing"), None);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/opt-nano.manifest.json"
+        );
+        if std::path::Path::new(path).exists() {
+            let m = Manifest::load(path).unwrap();
+            assert_eq!(m.arch, "opt-nano");
+            assert!(m.num_params > 1_000_000);
+            assert_eq!(m.total_leaf_elems() as u64, m.num_params);
+        }
+    }
+}

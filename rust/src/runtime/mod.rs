@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT HLO artifacts, hold model state, execute
+//! score/decode/train from the Rust hot path (Python never runs here).
+
+pub mod engine;
+pub mod manifest;
+pub mod npz;
+
+pub use engine::{KernelVariant, RlhfEngine};
+pub use manifest::Manifest;

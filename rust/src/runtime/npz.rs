@@ -1,0 +1,152 @@
+//! Minimal `.npz`/`.npy` reader for the initial-parameter archive emitted
+//! by `python/compile/aot.py`. Supports the subset numpy writes for plain
+//! C-contiguous float32/int32 arrays (format version 1.0).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Read;
+
+/// One loaded array.
+#[derive(Debug, Clone)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NpyArray {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parse one `.npy` byte stream (f32 little-endian, C order).
+pub fn parse_npy(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        bail!("not an npy file");
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = if major == 1 {
+        (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10)
+    } else {
+        (
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            12,
+        )
+    };
+    let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])
+        .context("npy header not utf-8")?;
+    if !header.contains("'descr': '<f4'") && !header.contains("'descr': '|f4'") {
+        bail!("unsupported npy dtype (want <f4): {header}");
+    }
+    if header.contains("'fortran_order': True") {
+        bail!("fortran-order npy not supported");
+    }
+    let shape = parse_shape(header)?;
+    let numel: usize = shape.iter().product();
+    let payload = &bytes[header_start + header_len..];
+    if payload.len() < numel * 4 {
+        bail!("npy payload too short: {} < {}", payload.len(), numel * 4);
+    }
+    let mut data = Vec::with_capacity(numel);
+    for chunk in payload[..numel * 4].chunks_exact(4) {
+        data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(NpyArray { shape, data })
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let start = header.find("'shape':").context("no shape")? + 8;
+    let open = header[start..].find('(').context("no (")? + start;
+    let close = header[open..].find(')').context("no )")? + open;
+    let inner = &header[open + 1..close];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let t = part.trim();
+        if !t.is_empty() {
+            out.push(t.parse::<usize>().with_context(|| format!("bad dim {t}"))?);
+        }
+    }
+    Ok(out)
+}
+
+/// Load every array in an `.npz` (zip of `.npy` members).
+pub fn load_npz(path: &str) -> Result<HashMap<String, NpyArray>> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+    let mut zip = zip::ZipArchive::new(file).context("read npz zip")?;
+    let mut out = HashMap::new();
+    for i in 0..zip.len() {
+        let mut member = zip.by_index(i)?;
+        let name = member
+            .name()
+            .trim_end_matches(".npy")
+            .to_string();
+        let mut bytes = Vec::with_capacity(member.size() as usize);
+        member.read_to_end(&mut bytes)?;
+        out.insert(name, parse_npy(&bytes)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn npy_bytes(shape_str: &str, values: &[f32]) -> Vec<u8> {
+        let header = format!(
+            "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+        );
+        let mut header = header.into_bytes();
+        // Pad so (magic+len+header) % 64 == 0 like numpy does; end with \n.
+        let base = 10 + header.len() + 1;
+        let pad = (64 - base % 64) % 64;
+        header.extend(std::iter::repeat(b' ').take(pad));
+        header.push(b'\n');
+        let mut out = Vec::new();
+        out.extend_from_slice(b"\x93NUMPY\x01\x00");
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(&header);
+        for v in values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parse_simple_npy() {
+        let bytes = npy_bytes("(2, 3)", &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let arr = parse_npy(&bytes).unwrap();
+        assert_eq!(arr.shape, vec![2, 3]);
+        assert_eq!(arr.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn parse_scalar_and_1d() {
+        let arr = parse_npy(&npy_bytes("()", &[7.5])).unwrap();
+        assert_eq!(arr.shape, Vec::<usize>::new());
+        assert_eq!(arr.data, vec![7.5]);
+        let arr = parse_npy(&npy_bytes("(4,)", &[1.0, 2.0, 3.0, 4.0])).unwrap();
+        assert_eq!(arr.shape, vec![4]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_npy(b"not numpy").is_err());
+        // Truncated payload.
+        let mut bytes = npy_bytes("(10,)", &[1.0]);
+        bytes.truncate(bytes.len());
+        assert!(parse_npy(&bytes).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_npz_if_present() {
+        // Integration against the real AOT output when artifacts exist.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/opt-nano.init.npz");
+        if std::path::Path::new(path).exists() {
+            let arrays = load_npz(path).unwrap();
+            assert!(arrays.contains_key("tok_emb"));
+            let emb = &arrays["tok_emb"];
+            assert_eq!(emb.shape, vec![512, 256]);
+            assert_eq!(emb.numel(), emb.data.len());
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Memory-management strategies (§2.2 of the paper): ZeRO stages 1–3, CPU
+//! offloading, gradient checkpointing, and LoRA.
+//!
+//! A strategy here is *not* a lookup table of memory savings — it is a
+//! transformation of the allocation behaviour of the RLHF phase generators
+//! (`rlhf::phases`). This module defines the configuration surface plus the
+//! partitioning/bucketing arithmetic the generators consult; the actual op
+//! streams are emitted by the generators.
+
+pub mod offload;
+pub mod zero;
+
+pub use zero::ZeroStage;
+
+use crate::mem::LoraSpec;
+
+/// The strategy knobs of one experiment row (paper Table 1 "Strategy").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StrategyConfig {
+    pub zero: ZeroStage,
+    /// ZeRO-Offload: optimizer states (+ their update) live in host memory;
+    /// the GPU sees only transient staging buffers during the step.
+    pub cpu_offload: bool,
+    /// Gradient (activation) checkpointing.
+    pub grad_checkpoint: bool,
+    /// LoRA adapters (the paper sets r=128 everywhere).
+    pub lora: Option<LoraSpec>,
+}
+
+impl StrategyConfig {
+    /// Paper row "None" (LoRA is still on — the paper applies it globally).
+    pub fn none() -> Self {
+        StrategyConfig {
+            zero: ZeroStage::Z0,
+            cpu_offload: false,
+            grad_checkpoint: false,
+            lora: Some(LoraSpec::paper_default()),
+        }
+    }
+
+    pub fn zero1() -> Self {
+        StrategyConfig {
+            zero: ZeroStage::Z1,
+            ..Self::none()
+        }
+    }
+
+    pub fn zero2() -> Self {
+        StrategyConfig {
+            zero: ZeroStage::Z2,
+            ..Self::none()
+        }
+    }
+
+    pub fn zero3() -> Self {
+        StrategyConfig {
+            zero: ZeroStage::Z3,
+            ..Self::none()
+        }
+    }
+
+    pub fn zero3_offload() -> Self {
+        StrategyConfig {
+            zero: ZeroStage::Z3,
+            cpu_offload: true,
+            ..Self::none()
+        }
+    }
+
+    pub fn checkpointing() -> Self {
+        StrategyConfig {
+            grad_checkpoint: true,
+            ..Self::none()
+        }
+    }
+
+    /// Paper row "All Enabled": ZeRO-3 + CPU offloading + checkpointing.
+    pub fn all_enabled() -> Self {
+        StrategyConfig {
+            zero: ZeroStage::Z3,
+            cpu_offload: true,
+            grad_checkpoint: true,
+            ..Self::none()
+        }
+    }
+
+    /// The paper's Table-1 DeepSpeed-Chat sweep, in row order.
+    pub fn table1_deepspeed_rows() -> Vec<(&'static str, StrategyConfig)> {
+        vec![
+            ("None", Self::none()),
+            ("ZeRO-1", Self::zero1()),
+            ("ZeRO-2", Self::zero2()),
+            ("ZeRO-3", Self::zero3()),
+            ("ZeRO-3 + CPU Offloading", Self::zero3_offload()),
+            ("Gradient Checkpointing", Self::checkpointing()),
+            ("All Enabled", Self::all_enabled()),
+        ]
+    }
+
+    /// The ColossalChat sweep (no ZeRO-1 support; "All Enabled" fails in
+    /// gradient sync upstream, so the paper's table ends at ZeRO-3+offload
+    /// and checkpointing — except GPT-2 which has an All row).
+    pub fn table1_colossal_rows() -> Vec<(&'static str, StrategyConfig)> {
+        vec![
+            ("None", Self::none()),
+            ("ZeRO-3", Self::zero3()),
+            ("ZeRO-3 + CPU Offloading", Self::zero3_offload()),
+            ("Gradient Checkpointing", Self::checkpointing()),
+            ("All Enabled", Self::all_enabled()),
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        match self.zero {
+            ZeroStage::Z0 => {}
+            z => parts.push(format!("ZeRO-{}", z.stage())),
+        }
+        if self.cpu_offload {
+            parts.push("Offload".into());
+        }
+        if self.grad_checkpoint {
+            parts.push("Ckpt".into());
+        }
+        if parts.is_empty() {
+            "None".into()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_expected_knobs() {
+        assert_eq!(StrategyConfig::none().zero, ZeroStage::Z0);
+        assert!(StrategyConfig::none().lora.is_some());
+        assert!(StrategyConfig::all_enabled().cpu_offload);
+        assert!(StrategyConfig::all_enabled().grad_checkpoint);
+        assert_eq!(StrategyConfig::all_enabled().zero, ZeroStage::Z3);
+    }
+
+    #[test]
+    fn table1_rows_match_paper_layout() {
+        let ds = StrategyConfig::table1_deepspeed_rows();
+        assert_eq!(ds.len(), 7);
+        assert_eq!(ds[0].0, "None");
+        assert_eq!(ds[6].0, "All Enabled");
+        let cc = StrategyConfig::table1_colossal_rows();
+        assert!(cc.iter().all(|(n, _)| *n != "ZeRO-1"), "ColossalChat has no ZeRO-1");
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(StrategyConfig::none().label(), "None");
+        assert_eq!(StrategyConfig::zero3_offload().label(), "ZeRO-3+Offload");
+        assert_eq!(StrategyConfig::all_enabled().label(), "ZeRO-3+Offload+Ckpt");
+    }
+}

@@ -1,0 +1,76 @@
+//! CPU-offloading arithmetic (ZeRO-Offload, Ren et al., ATC'21).
+//!
+//! With optimizer offload the Adam states and the update computation live
+//! in host memory; the GPU's involvement in the optimizer step reduces to
+//! streaming gradient/parameter buckets through *staging buffers* — the
+//! transient allocations this module sizes. ColossalChat additionally
+//! offloads the *inference models* (reference + reward) to the CPU during
+//! the training phases, moving their whole fp16 replicas off-GPU.
+
+/// Staging-buffer configuration for host<->device streaming.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OffloadConfig {
+    /// Size of one GPU-side staging buffer for grad-down / param-up
+    /// streaming (DeepSpeed pins ~the reduce bucket; we default to 100 M
+    /// fp16 elements = 200 MB).
+    pub staging_bytes: u64,
+    /// Double buffering (compute/copy overlap) — two staging buffers live
+    /// at once.
+    pub double_buffer: bool,
+}
+
+impl Default for OffloadConfig {
+    fn default() -> Self {
+        OffloadConfig {
+            staging_bytes: 200_000_000,
+            double_buffer: true,
+        }
+    }
+}
+
+impl OffloadConfig {
+    /// The sequence of staging-buffer sizes needed to stream `total` bytes.
+    pub fn staging_chunks(&self, total: u64) -> Vec<u64> {
+        if total == 0 {
+            return vec![];
+        }
+        let n = total / self.staging_bytes;
+        let mut out = vec![self.staging_bytes; n as usize];
+        let rem = total - n * self.staging_bytes;
+        if rem > 0 {
+            out.push(rem);
+        }
+        out
+    }
+
+    /// Number of staging buffers resident at once.
+    pub fn live_buffers(&self) -> u64 {
+        if self.double_buffer {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_total() {
+        let cfg = OffloadConfig {
+            staging_bytes: 100,
+            double_buffer: false,
+        };
+        let chunks = cfg.staging_chunks(250);
+        assert_eq!(chunks, vec![100, 100, 50]);
+        assert!(cfg.staging_chunks(0).is_empty());
+        assert_eq!(cfg.live_buffers(), 1);
+    }
+
+    #[test]
+    fn default_double_buffers() {
+        assert_eq!(OffloadConfig::default().live_buffers(), 2);
+    }
+}

@@ -1,0 +1,137 @@
+//! ZeRO partitioning arithmetic (Rajbhandari et al., SC'20).
+//!
+//! * **Stage 1** partitions optimizer states across the data-parallel
+//!   world; * **Stage 2** adds gradients (reduce-scattered in buckets);
+//! * **Stage 3** adds parameters (per-layer all-gathered on demand).
+//!
+//! The bucket/gather sizes below are DeepSpeed's defaults, because the
+//! transient buffers they imply are exactly the allocations that seed
+//! ZeRO-3's fragmentation (paper §3.2).
+
+/// ZeRO stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ZeroStage {
+    Z0,
+    Z1,
+    Z2,
+    Z3,
+}
+
+impl ZeroStage {
+    pub fn stage(self) -> u8 {
+        match self {
+            ZeroStage::Z0 => 0,
+            ZeroStage::Z1 => 1,
+            ZeroStage::Z2 => 2,
+            ZeroStage::Z3 => 3,
+        }
+    }
+
+    pub fn from_stage(n: u8) -> Option<Self> {
+        match n {
+            0 => Some(ZeroStage::Z0),
+            1 => Some(ZeroStage::Z1),
+            2 => Some(ZeroStage::Z2),
+            3 => Some(ZeroStage::Z3),
+            _ => None,
+        }
+    }
+
+    pub fn partitions_optimizer(self) -> bool {
+        self >= ZeroStage::Z1
+    }
+    pub fn partitions_gradients(self) -> bool {
+        self >= ZeroStage::Z2
+    }
+    pub fn partitions_params(self) -> bool {
+        self >= ZeroStage::Z3
+    }
+}
+
+/// DeepSpeed defaults (bytes).
+pub mod defaults {
+    /// `reduce_bucket_size` (elements) × 2 B fp16 — the transient gradient
+    /// reduce-scatter bucket.
+    pub const REDUCE_BUCKET_BYTES: u64 = 500_000_000 * 2 / 2; // 5e8 elems fp16
+    /// `allgather_bucket_size`: ZeRO-3 parameter all-gather granularity.
+    pub const ALLGATHER_BUCKET_BYTES: u64 = 500_000_000 * 2 / 2;
+    /// `stage3_prefetch_bucket_size` ~ 5e7 elements.
+    pub const PREFETCH_BUCKET_BYTES: u64 = 50_000_000 * 2;
+    /// `stage3_max_live_parameters` = 1e9 params: gathered fp16 copies are
+    /// kept resident until this many bytes are live, then the oldest are
+    /// released — the ring that interleaves gather lifetimes with
+    /// activations and shreds the large pool (paper §3.2).
+    pub const MAX_LIVE_GATHERED_BYTES: u64 = 1_000_000_000 * 2;
+}
+
+/// Per-rank share of a partitioned tensor: ceil(bytes / world), with each
+/// rank padded to an even element boundary like DeepSpeed's flat buffers.
+pub fn partitioned_bytes(total: u64, world: u64) -> u64 {
+    assert!(world > 0);
+    let per = total.div_ceil(world);
+    // Pad to 16 B so flat partitions stay aligned.
+    per.div_ceil(16) * 16
+}
+
+/// Sizes of the transient reduce-scatter buckets covering `grad_bytes` of
+/// gradients (ZeRO-2/3 backward).
+pub fn reduce_buckets(grad_bytes: u64, bucket: u64) -> Vec<u64> {
+    split_buckets(grad_bytes, bucket)
+}
+
+/// Sizes of the transient all-gather buffers covering `param_bytes`
+/// (ZeRO-3 forward/backward). Each buffer materializes the *full* tensor
+/// group on every rank.
+pub fn gather_buffers(param_bytes: u64, bucket: u64) -> Vec<u64> {
+    split_buckets(param_bytes, bucket)
+}
+
+fn split_buckets(total: u64, bucket: u64) -> Vec<u64> {
+    assert!(bucket > 0);
+    if total == 0 {
+        return vec![];
+    }
+    let n = total / bucket;
+    let mut out = vec![bucket; n as usize];
+    let rem = total - n * bucket;
+    if rem > 0 {
+        out.push(rem);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MIB;
+
+    #[test]
+    fn stage_predicates() {
+        assert!(!ZeroStage::Z0.partitions_optimizer());
+        assert!(ZeroStage::Z1.partitions_optimizer());
+        assert!(!ZeroStage::Z1.partitions_gradients());
+        assert!(ZeroStage::Z2.partitions_gradients());
+        assert!(!ZeroStage::Z2.partitions_params());
+        assert!(ZeroStage::Z3.partitions_params());
+        assert_eq!(ZeroStage::from_stage(3), Some(ZeroStage::Z3));
+        assert_eq!(ZeroStage::from_stage(4), None);
+    }
+
+    #[test]
+    fn partition_rounds_up_and_aligns() {
+        assert_eq!(partitioned_bytes(100, 4), 32); // 25 -> pad 32
+        assert_eq!(partitioned_bytes(1024, 4), 256);
+        assert_eq!(partitioned_bytes(1, 4), 16);
+        // Sum over ranks covers the total.
+        assert!(partitioned_bytes(1000, 3) * 3 >= 1000);
+    }
+
+    #[test]
+    fn buckets_cover_exactly() {
+        let bs = reduce_buckets(25 * MIB, 10 * MIB);
+        assert_eq!(bs, vec![10 * MIB, 10 * MIB, 5 * MIB]);
+        assert_eq!(bs.iter().sum::<u64>(), 25 * MIB);
+        assert!(reduce_buckets(0, MIB).is_empty());
+        assert_eq!(gather_buffers(MIB, 10 * MIB), vec![MIB]);
+    }
+}

@@ -1,0 +1,115 @@
+//! Pure-trace analysis: live-byte accounting per tag, peak composition —
+//! the debugging lens for calibrating the phase generators against the
+//! paper's numbers (no allocator involved; this is ideal residency).
+
+use super::op::{PhaseKind, Tag, Trace, TraceOp};
+use std::collections::HashMap;
+
+/// Composition of live bytes at the moment total residency peaked.
+#[derive(Debug, Clone)]
+pub struct PeakComposition {
+    pub total: u64,
+    pub phase: PhaseKind,
+    pub by_tag: Vec<(Tag, u64)>,
+}
+
+/// Walk the trace tracking ideal (un-fragmented) residency.
+pub fn peak_composition(trace: &Trace) -> PeakComposition {
+    let mut live: HashMap<u64, (u64, Tag)> = HashMap::new();
+    let mut by_tag: HashMap<Tag, u64> = HashMap::new();
+    let mut total = 0u64;
+    let mut phase = PhaseKind::Init;
+    let mut best = PeakComposition {
+        total: 0,
+        phase,
+        by_tag: vec![],
+    };
+    for op in &trace.ops {
+        match op {
+            TraceOp::Alloc { handle, bytes, tag } => {
+                live.insert(handle.0, (*bytes, *tag));
+                *by_tag.entry(*tag).or_default() += bytes;
+                total += bytes;
+                if total > best.total {
+                    best.total = total;
+                    best.phase = phase;
+                    let mut v: Vec<(Tag, u64)> =
+                        by_tag.iter().map(|(t, b)| (*t, *b)).collect();
+                    v.sort_by_key(|(_, b)| std::cmp::Reverse(*b));
+                    best.by_tag = v;
+                }
+            }
+            TraceOp::Free { handle } => {
+                let (bytes, tag) = live.remove(&handle.0).expect("free of dead handle");
+                *by_tag.get_mut(&tag).unwrap() -= bytes;
+                total -= bytes;
+            }
+            TraceOp::Phase(p) => phase = *p,
+            _ => {}
+        }
+    }
+    best
+}
+
+/// Per-phase ideal peak residency.
+pub fn phase_peaks(trace: &Trace) -> Vec<(PhaseKind, u64)> {
+    let mut live: HashMap<u64, u64> = HashMap::new();
+    let mut total = 0u64;
+    let mut phase = PhaseKind::Init;
+    let mut peaks: HashMap<PhaseKind, u64> = HashMap::new();
+    for op in &trace.ops {
+        match op {
+            TraceOp::Alloc { handle, bytes, .. } => {
+                live.insert(handle.0, *bytes);
+                total += bytes;
+                let e = peaks.entry(phase).or_default();
+                *e = (*e).max(total);
+            }
+            TraceOp::Free { handle } => {
+                total -= live.remove(&handle.0).expect("dead handle");
+            }
+            TraceOp::Phase(p) => phase = *p,
+            _ => {}
+        }
+    }
+    let mut v: Vec<(PhaseKind, u64)> = peaks.into_iter().collect();
+    v.sort_by_key(|(p, _)| p.tag());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceBuilder;
+
+    #[test]
+    fn composition_finds_peak() {
+        let mut b = TraceBuilder::new();
+        b.phase(PhaseKind::Generation);
+        let h1 = b.alloc(100, Tag::Param);
+        b.phase(PhaseKind::TrainActor);
+        let h2 = b.alloc(300, Tag::Grad);
+        b.free(h2);
+        b.free(h1);
+        let trace = b.finish();
+        let c = peak_composition(&trace);
+        assert_eq!(c.total, 400);
+        assert_eq!(c.phase, PhaseKind::TrainActor);
+        assert_eq!(c.by_tag[0], (Tag::Grad, 300));
+        assert_eq!(c.by_tag[1], (Tag::Param, 100));
+    }
+
+    #[test]
+    fn phase_peaks_per_phase() {
+        let mut b = TraceBuilder::new();
+        b.phase(PhaseKind::Generation);
+        b.transient([500], Tag::KvCache);
+        b.phase(PhaseKind::TrainActor);
+        b.transient([200], Tag::Grad);
+        let peaks = phase_peaks(&b.finish());
+        let gen = peaks.iter().find(|(p, _)| *p == PhaseKind::Generation).unwrap();
+        let tr = peaks.iter().find(|(p, _)| *p == PhaseKind::TrainActor).unwrap();
+        assert_eq!(gen.1, 500);
+        assert_eq!(tr.1, 200);
+    }
+}

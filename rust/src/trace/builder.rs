@@ -1,0 +1,128 @@
+//! Trace builder: the API phase generators write against.
+
+use super::op::{PhaseKind, Tag, Trace, TraceHandle, TraceOp};
+
+/// Records an op stream with automatic handle management.
+#[derive(Debug, Default)]
+pub struct TraceBuilder {
+    trace: Trace,
+    next_handle: u64,
+}
+
+impl TraceBuilder {
+    pub fn new() -> Self {
+        TraceBuilder {
+            trace: Trace::default(),
+            next_handle: 1,
+        }
+    }
+
+    pub fn alloc(&mut self, bytes: u64, tag: Tag) -> TraceHandle {
+        assert!(bytes > 0, "alloc(0) in trace (tag {:?})", tag);
+        let h = TraceHandle(self.next_handle);
+        self.next_handle += 1;
+        self.trace.ops.push(TraceOp::Alloc {
+            handle: h,
+            bytes,
+            tag,
+        });
+        h
+    }
+
+    pub fn free(&mut self, h: TraceHandle) {
+        self.trace.ops.push(TraceOp::Free { handle: h });
+    }
+
+    pub fn free_all(&mut self, hs: impl IntoIterator<Item = TraceHandle>) {
+        for h in hs {
+            self.free(h);
+        }
+    }
+
+    pub fn phase(&mut self, kind: PhaseKind) {
+        self.trace.ops.push(TraceOp::Phase(kind));
+    }
+
+    pub fn empty_cache(&mut self) {
+        self.trace.ops.push(TraceOp::EmptyCache);
+    }
+
+    pub fn compute(&mut self, us: f64) {
+        if us > 0.0 {
+            self.trace.ops.push(TraceOp::Compute { us });
+        }
+    }
+
+    pub fn step_end(&mut self, step: u64) {
+        self.trace.ops.push(TraceOp::StepEnd { step });
+    }
+
+    /// Allocate a list of (bytes) with one tag; returns the handles.
+    pub fn alloc_group(&mut self, sizes: impl IntoIterator<Item = u64>, tag: Tag) -> Vec<TraceHandle> {
+        sizes.into_iter().map(|b| self.alloc(b, tag)).collect()
+    }
+
+    /// Transient scope: allocate the sizes, run nothing, free them in
+    /// reverse order (LIFO, matching PyTorch temp-tensor lifetimes).
+    pub fn transient(&mut self, sizes: impl IntoIterator<Item = u64>, tag: Tag) {
+        let hs = self.alloc_group(sizes, tag);
+        for h in hs.into_iter().rev() {
+            self.free(h);
+        }
+    }
+
+    pub fn finish(self) -> Trace {
+        self.trace
+    }
+
+    pub fn ops_len(&self) -> usize {
+        self.trace.ops.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_produces_balanced_trace() {
+        let mut b = TraceBuilder::new();
+        b.phase(PhaseKind::Generation);
+        let p = b.alloc(1024, Tag::Param);
+        b.transient([512, 2048], Tag::Activation);
+        b.free(p);
+        b.empty_cache();
+        let t = b.finish();
+        assert_eq!(t.check_balanced().unwrap(), vec![]);
+        assert_eq!(t.len(), 8);
+    }
+
+    #[test]
+    fn transient_is_lifo() {
+        let mut b = TraceBuilder::new();
+        b.transient([1, 2], Tag::Workspace);
+        let t = b.finish();
+        match (&t.ops[2], &t.ops[3]) {
+            (TraceOp::Free { handle: h1 }, TraceOp::Free { handle: h2 }) => {
+                assert!(h1.0 > h2.0, "LIFO free order");
+            }
+            _ => panic!("expected frees"),
+        }
+    }
+
+    #[test]
+    fn handles_unique() {
+        let mut b = TraceBuilder::new();
+        let h1 = b.alloc(1, Tag::Param);
+        let h2 = b.alloc(1, Tag::Param);
+        assert_ne!(h1, h2);
+    }
+
+    #[test]
+    fn zero_compute_elided() {
+        let mut b = TraceBuilder::new();
+        b.compute(0.0);
+        b.compute(5.0);
+        assert_eq!(b.finish().len(), 1);
+    }
+}

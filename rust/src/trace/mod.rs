@@ -1,0 +1,12 @@
+//! Allocation-trace IR: ops, phases, builder, and replay. The RLHF phase
+//! generators (rlhf/) emit these streams; strategies and framework profiles
+//! only change which ops are emitted.
+
+pub mod analysis;
+pub mod builder;
+pub mod op;
+pub mod replay;
+
+pub use builder::TraceBuilder;
+pub use op::{PhaseKind, Tag, Trace, TraceHandle, TraceOp};
+pub use replay::{replay, NullPhaseSink, PhaseSink, ReplayOom, ReplayResult};

@@ -1,0 +1,287 @@
+//! Allocation-trace IR: the op stream RLHF phase generators emit and the
+//! allocator replays. Everything the memory study measures is a function of
+//! these streams — strategies and framework profiles only change the ops.
+
+/// Semantic label of an allocation (attribution + diagnostics; the
+/// allocator itself is label-agnostic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tag {
+    /// Model weights (resident).
+    Param,
+    /// Gradient tensor.
+    Grad,
+    /// Optimizer state (Adam m/v/master).
+    OptState,
+    /// Transient forward activation.
+    Activation,
+    /// Activation saved for backward (resident until its backward).
+    SavedActivation,
+    /// KV-cache tensor.
+    KvCache,
+    /// Logits.
+    Logits,
+    /// Collective-communication buffer (ZeRO gather/scatter).
+    CommBuffer,
+    /// Host-transfer staging buffer (CPU offload).
+    Staging,
+    /// Generic workspace / temporary.
+    Workspace,
+    /// Stored experience batch (prompts, responses, logprobs, values...).
+    Experience,
+}
+
+impl Tag {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tag::Param => "param",
+            Tag::Grad => "grad",
+            Tag::OptState => "opt_state",
+            Tag::Activation => "activation",
+            Tag::SavedActivation => "saved_activation",
+            Tag::KvCache => "kv_cache",
+            Tag::Logits => "logits",
+            Tag::CommBuffer => "comm_buffer",
+            Tag::Staging => "staging",
+            Tag::Workspace => "workspace",
+            Tag::Experience => "experience",
+        }
+    }
+}
+
+/// RLHF pipeline phase (the paper's task structure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PhaseKind {
+    /// Weight loading / engine setup.
+    Init,
+    /// Actor autoregressive generation (experience collection).
+    Generation,
+    /// Forward of the actor over the full sequences (old logprobs).
+    InferActor,
+    /// Forward of the frozen reference model (KL baseline).
+    InferReference,
+    /// Forward of the reward model (sequence return).
+    InferReward,
+    /// Forward of the critic (value estimates).
+    InferCritic,
+    /// Actor PPO update (fwd + bwd + step).
+    TrainActor,
+    /// Critic value-loss update (fwd + bwd + step).
+    TrainCritic,
+    /// Between steps.
+    Idle,
+}
+
+impl PhaseKind {
+    pub const ALL: [PhaseKind; 9] = [
+        PhaseKind::Init,
+        PhaseKind::Generation,
+        PhaseKind::InferActor,
+        PhaseKind::InferReference,
+        PhaseKind::InferReward,
+        PhaseKind::InferCritic,
+        PhaseKind::TrainActor,
+        PhaseKind::TrainCritic,
+        PhaseKind::Idle,
+    ];
+
+    pub fn tag(self) -> u16 {
+        PhaseKind::ALL.iter().position(|p| *p == self).unwrap() as u16
+    }
+
+    pub fn from_tag(tag: u16) -> PhaseKind {
+        PhaseKind::ALL[tag as usize]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PhaseKind::Init => "init",
+            PhaseKind::Generation => "generation",
+            PhaseKind::InferActor => "infer_actor",
+            PhaseKind::InferReference => "infer_reference",
+            PhaseKind::InferReward => "infer_reward",
+            PhaseKind::InferCritic => "infer_critic",
+            PhaseKind::TrainActor => "train_actor",
+            PhaseKind::TrainCritic => "train_critic",
+            PhaseKind::Idle => "idle",
+        }
+    }
+
+    /// Is this one of the paper's "inference phases"?
+    pub fn is_inference(self) -> bool {
+        matches!(
+            self,
+            PhaseKind::Generation
+                | PhaseKind::InferActor
+                | PhaseKind::InferReference
+                | PhaseKind::InferReward
+                | PhaseKind::InferCritic
+        )
+    }
+
+    /// Is this one of the paper's "training phases"?
+    pub fn is_training(self) -> bool {
+        matches!(self, PhaseKind::TrainActor | PhaseKind::TrainCritic)
+    }
+}
+
+/// Handle within a trace (maps to an allocator handle at replay).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceHandle(pub u64);
+
+/// One trace operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceOp {
+    Alloc {
+        handle: TraceHandle,
+        bytes: u64,
+        tag: Tag,
+    },
+    Free {
+        handle: TraceHandle,
+    },
+    /// The paper's mitigation point.
+    EmptyCache,
+    /// Phase transition.
+    Phase(PhaseKind),
+    /// Advance simulated compute time (kernel execution between allocs).
+    Compute {
+        us: f64,
+    },
+    /// One PPO step boundary (timeline x-axis marker).
+    StepEnd {
+        step: u64,
+    },
+}
+
+/// A recorded allocation trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Sanity check: every Free refers to a previously allocated, not yet
+    /// freed handle; returns the set of leaked (never freed) handles.
+    pub fn check_balanced(&self) -> Result<Vec<TraceHandle>, String> {
+        use std::collections::HashSet;
+        let mut live: HashSet<u64> = HashSet::new();
+        for (i, op) in self.ops.iter().enumerate() {
+            match op {
+                TraceOp::Alloc { handle, bytes, .. } => {
+                    if *bytes == 0 {
+                        return Err(format!("op {i}: zero-byte alloc"));
+                    }
+                    if !live.insert(handle.0) {
+                        return Err(format!("op {i}: handle {} reallocated", handle.0));
+                    }
+                }
+                TraceOp::Free { handle } => {
+                    if !live.remove(&handle.0) {
+                        return Err(format!("op {i}: free of dead handle {}", handle.0));
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut leaked: Vec<TraceHandle> = live.into_iter().map(TraceHandle).collect();
+        leaked.sort_by_key(|h| h.0);
+        Ok(leaked)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_tag_roundtrip() {
+        for p in PhaseKind::ALL {
+            assert_eq!(PhaseKind::from_tag(p.tag()), p);
+        }
+    }
+
+    #[test]
+    fn phase_classification() {
+        assert!(PhaseKind::Generation.is_inference());
+        assert!(PhaseKind::InferReward.is_inference());
+        assert!(PhaseKind::TrainActor.is_training());
+        assert!(!PhaseKind::TrainActor.is_inference());
+        assert!(!PhaseKind::Init.is_inference());
+        assert!(!PhaseKind::Idle.is_training());
+    }
+
+    #[test]
+    fn balanced_trace_ok() {
+        let t = Trace {
+            ops: vec![
+                TraceOp::Alloc {
+                    handle: TraceHandle(1),
+                    bytes: 100,
+                    tag: Tag::Param,
+                },
+                TraceOp::Free {
+                    handle: TraceHandle(1),
+                },
+            ],
+        };
+        assert_eq!(t.check_balanced().unwrap(), vec![]);
+    }
+
+    #[test]
+    fn leak_detected() {
+        let t = Trace {
+            ops: vec![TraceOp::Alloc {
+                handle: TraceHandle(7),
+                bytes: 100,
+                tag: Tag::Param,
+            }],
+        };
+        assert_eq!(t.check_balanced().unwrap(), vec![TraceHandle(7)]);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let t = Trace {
+            ops: vec![
+                TraceOp::Alloc {
+                    handle: TraceHandle(1),
+                    bytes: 100,
+                    tag: Tag::Param,
+                },
+                TraceOp::Free {
+                    handle: TraceHandle(1),
+                },
+                TraceOp::Free {
+                    handle: TraceHandle(1),
+                },
+            ],
+        };
+        assert!(t.check_balanced().is_err());
+    }
+
+    #[test]
+    fn handle_reuse_rejected() {
+        let t = Trace {
+            ops: vec![
+                TraceOp::Alloc {
+                    handle: TraceHandle(1),
+                    bytes: 100,
+                    tag: Tag::Param,
+                },
+                TraceOp::Alloc {
+                    handle: TraceHandle(1),
+                    bytes: 200,
+                    tag: Tag::Grad,
+                },
+            ],
+        };
+        assert!(t.check_balanced().is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Replay a recorded trace through a [`CachingAllocator`].
+
+use super::op::{PhaseKind, Trace, TraceOp};
+use crate::alloc::{AllocError, AllocId, CachingAllocator};
+use crate::util::fasthash::FastMap;
+
+/// Where/why a replay stopped early.
+#[derive(Debug)]
+pub struct ReplayOom {
+    pub op_index: usize,
+    pub phase: PhaseKind,
+    pub step: u64,
+    pub error: AllocError,
+}
+
+/// Replay outcome.
+#[derive(Debug)]
+pub struct ReplayResult {
+    pub ops_executed: usize,
+    /// Simulated compute time added by `Compute` ops, microseconds (the
+    /// allocator separately accumulates its own latency).
+    pub compute_us: f64,
+    pub steps_completed: u64,
+    pub oom: Option<ReplayOom>,
+}
+
+impl ReplayResult {
+    pub fn ok(&self) -> bool {
+        self.oom.is_none()
+    }
+}
+
+/// Sink for phase transitions during replay (the profiler implements this
+/// to draw Figure 1's phase bands; tests use closures).
+pub trait PhaseSink {
+    fn on_phase(&mut self, phase: PhaseKind, alloc: &CachingAllocator, compute_us: f64);
+    fn on_step_end(&mut self, step: u64, alloc: &CachingAllocator, compute_us: f64) {
+        let _ = (step, alloc, compute_us);
+    }
+}
+
+/// No-op sink.
+pub struct NullPhaseSink;
+impl PhaseSink for NullPhaseSink {
+    fn on_phase(&mut self, _: PhaseKind, _: &CachingAllocator, _: f64) {}
+}
+
+/// Replay `trace` into `alloc`. On OOM the replay stops (the paper's
+/// frameworks crash there; we report instead) and the partial stats remain
+/// in the allocator.
+pub fn replay(trace: &Trace, alloc: &mut CachingAllocator, sink: &mut dyn PhaseSink) -> ReplayResult {
+    let mut handles: FastMap<u64, AllocId> = FastMap::default();
+    let mut compute_us = 0.0f64;
+    let mut phase = PhaseKind::Init;
+    let mut step = 0u64;
+
+    for (i, op) in trace.ops.iter().enumerate() {
+        match op {
+            TraceOp::Alloc { handle, bytes, .. } => match alloc.alloc(*bytes) {
+                Ok(id) => {
+                    handles.insert(handle.0, id);
+                }
+                Err(e) => {
+                    return ReplayResult {
+                        ops_executed: i,
+                        compute_us,
+                        steps_completed: step,
+                        oom: Some(ReplayOom {
+                            op_index: i,
+                            phase,
+                            step,
+                            error: e,
+                        }),
+                    };
+                }
+            },
+            TraceOp::Free { handle } => {
+                let id = handles
+                    .remove(&handle.0)
+                    .unwrap_or_else(|| panic!("replay: free of unknown handle {}", handle.0));
+                alloc.free(id);
+            }
+            TraceOp::EmptyCache => {
+                alloc.empty_cache();
+            }
+            TraceOp::Phase(kind) => {
+                phase = *kind;
+                alloc.set_phase(kind.tag());
+                sink.on_phase(*kind, alloc, compute_us);
+            }
+            TraceOp::Compute { us } => {
+                compute_us += us;
+            }
+            TraceOp::StepEnd { step: s } => {
+                step = *s;
+                sink.on_step_end(*s, alloc, compute_us);
+            }
+        }
+    }
+    ReplayResult {
+        ops_executed: trace.ops.len(),
+        compute_us,
+        steps_completed: step,
+        oom: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::builder::TraceBuilder;
+    use crate::trace::op::Tag;
+    use crate::util::bytes::{GIB, MIB};
+
+    #[test]
+    fn replay_drives_allocator() {
+        let mut b = TraceBuilder::new();
+        b.phase(PhaseKind::Generation);
+        let h = b.alloc(5 * MIB, Tag::KvCache);
+        b.transient([2 * MIB, 3 * MIB], Tag::Activation);
+        b.free(h);
+        b.empty_cache();
+        b.step_end(1);
+        let trace = b.finish();
+
+        let mut alloc = CachingAllocator::with_default_config(GIB);
+        let res = replay(&trace, &mut alloc, &mut NullPhaseSink);
+        assert!(res.ok());
+        assert_eq!(res.steps_completed, 1);
+        assert_eq!(alloc.reserved(), 0, "empty_cache released everything");
+        assert!(alloc.stats().peak_reserved >= 10 * MIB);
+        alloc.validate().unwrap();
+    }
+
+    #[test]
+    fn replay_reports_oom_with_context() {
+        let mut b = TraceBuilder::new();
+        b.phase(PhaseKind::TrainActor);
+        b.alloc(2 * GIB, Tag::Grad);
+        let trace = b.finish();
+        let mut alloc = CachingAllocator::with_default_config(GIB);
+        let res = replay(&trace, &mut alloc, &mut NullPhaseSink);
+        let oom = res.oom.expect("must OOM");
+        assert_eq!(oom.phase, PhaseKind::TrainActor);
+        assert_eq!(oom.op_index, 1);
+    }
+
+    #[test]
+    fn phase_sink_sees_transitions() {
+        struct Collect(Vec<PhaseKind>);
+        impl PhaseSink for Collect {
+            fn on_phase(&mut self, p: PhaseKind, _: &CachingAllocator, _: f64) {
+                self.0.push(p);
+            }
+        }
+        let mut b = TraceBuilder::new();
+        b.phase(PhaseKind::Generation);
+        b.phase(PhaseKind::TrainActor);
+        let trace = b.finish();
+        let mut alloc = CachingAllocator::with_default_config(GIB);
+        let mut sink = Collect(Vec::new());
+        replay(&trace, &mut alloc, &mut sink);
+        assert_eq!(sink.0, vec![PhaseKind::Generation, PhaseKind::TrainActor]);
+    }
+
+    #[test]
+    fn compute_time_accumulates() {
+        let mut b = TraceBuilder::new();
+        b.compute(100.0);
+        b.compute(50.0);
+        let trace = b.finish();
+        let mut alloc = CachingAllocator::with_default_config(GIB);
+        let res = replay(&trace, &mut alloc, &mut NullPhaseSink);
+        assert_eq!(res.compute_us, 150.0);
+    }
+}

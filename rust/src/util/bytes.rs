@@ -1,0 +1,132 @@
+//! Byte-size constants, rounding helpers and human-readable formatting.
+//!
+//! All memory quantities in the library are `u64` byte counts. The paper
+//! reports GB figures that are really GiB (PyTorch's convention), so
+//! [`fmt_gib`] is what the report layer uses.
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// Round `n` up to a multiple of `align` (power-of-two not required).
+#[inline]
+pub fn round_up(n: u64, align: u64) -> u64 {
+    debug_assert!(align > 0);
+    n.div_ceil(align) * align
+}
+
+/// Round `n` down to a multiple of `align`.
+#[inline]
+pub fn round_down(n: u64, align: u64) -> u64 {
+    debug_assert!(align > 0);
+    (n / align) * align
+}
+
+/// Format as GiB with one decimal, matching the paper's tables ("18.8").
+pub fn fmt_gib(bytes: u64) -> String {
+    format!("{:.1}", bytes as f64 / GIB as f64)
+}
+
+/// Format as GiB, but render values under 0.05 GiB the way the paper does
+/// ("< 0.1") so rendered tables are directly comparable.
+pub fn fmt_gib_paper(bytes: u64) -> String {
+    let g = bytes as f64 / GIB as f64;
+    if g > 0.0 && g < 0.05 {
+        "<0.1".to_string()
+    } else {
+        format!("{g:.1}")
+    }
+}
+
+/// Human-readable adaptive formatting for logs ("1.50 GiB", "312.0 MiB").
+pub fn fmt_bytes(bytes: u64) -> String {
+    if bytes >= GIB {
+        format!("{:.2} GiB", bytes as f64 / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.1} MiB", bytes as f64 / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.1} KiB", bytes as f64 / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Parse "24GiB", "512MiB", "2048" (bytes), "1.5GiB" forms used by configs.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let lower = s.to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = lower.strip_suffix("gib") {
+        (p, GIB)
+    } else if let Some(p) = lower.strip_suffix("gb") {
+        (p, GIB)
+    } else if let Some(p) = lower.strip_suffix("mib") {
+        (p, MIB)
+    } else if let Some(p) = lower.strip_suffix("mb") {
+        (p, MIB)
+    } else if let Some(p) = lower.strip_suffix("kib") {
+        (p, KIB)
+    } else if let Some(p) = lower.strip_suffix("kb") {
+        (p, KIB)
+    } else if let Some(p) = lower.strip_suffix('b') {
+        (p, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    let num = num.trim();
+    let val: f64 = num
+        .parse()
+        .map_err(|e| format!("bad byte size '{s}': {e}"))?;
+    if val < 0.0 {
+        return Err(format!("negative byte size '{s}'"));
+    }
+    Ok((val * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 512), 0);
+        assert_eq!(round_up(1, 512), 512);
+        assert_eq!(round_up(512, 512), 512);
+        assert_eq!(round_up(513, 512), 1024);
+        assert_eq!(round_up(3 * MIB + 1, 2 * MIB), 4 * MIB);
+    }
+
+    #[test]
+    fn round_down_basics() {
+        assert_eq!(round_down(1023, 512), 512);
+        assert_eq!(round_down(512, 512), 512);
+        assert_eq!(round_down(511, 512), 0);
+    }
+
+    #[test]
+    fn gib_formatting() {
+        assert_eq!(fmt_gib(18 * GIB + 820 * MIB), "18.8");
+        assert_eq!(fmt_gib_paper(10 * MIB), "<0.1");
+        assert_eq!(fmt_gib_paper(0), "0.0");
+        assert_eq!(fmt_gib_paper(6 * GIB + 200 * MIB), "6.2");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(parse_bytes("24GiB").unwrap(), 24 * GIB);
+        assert_eq!(parse_bytes("24gb").unwrap(), 24 * GIB);
+        assert_eq!(parse_bytes("1.5GiB").unwrap(), GIB + 512 * MIB);
+        assert_eq!(parse_bytes("512 MiB").unwrap(), 512 * MIB);
+        assert_eq!(parse_bytes("2048").unwrap(), 2048);
+        assert_eq!(parse_bytes("100b").unwrap(), 100);
+        assert!(parse_bytes("x").is_err());
+        assert!(parse_bytes("-1gb").is_err());
+    }
+
+    #[test]
+    fn fmt_bytes_adaptive() {
+        assert_eq!(fmt_bytes(100), "100 B");
+        assert_eq!(fmt_bytes(2 * KIB), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * MIB + 512 * KIB), "3.5 MiB");
+        assert_eq!(fmt_bytes(GIB + GIB / 2), "1.50 GiB");
+    }
+}

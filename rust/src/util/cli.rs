@@ -1,0 +1,152 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports the subset the launcher needs: a subcommand, `--flag`,
+//! `--key value` / `--key=value`, and positional arguments, with generated
+//! usage text and typed accessors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut it = raw.into_iter().peekable();
+        let mut subcommand = None;
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        // First non-flag token is the subcommand.
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` if next token isn't a flag; else boolean.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if subcommand.is_none() {
+                subcommand = Some(tok);
+            } else {
+                positional.push(tok);
+            }
+        }
+        Args {
+            subcommand,
+            flags,
+            positional,
+        }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// Boolean flag: present without value, or `--x=true/false`.
+    pub fn bool_flag(&self, name: &str) -> bool {
+        match self.flag(name) {
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => true,
+            None => false,
+        }
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} expects an integer: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(name, default as u64).map(|v| v as usize)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} expects a number: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = args("table1 --framework deepspeed-chat --gpus=4 --assert");
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.flag("framework"), Some("deepspeed-chat"));
+        assert_eq!(a.get_u64("gpus", 1).unwrap(), 4);
+        assert!(a.bool_flag("assert"));
+        assert!(!a.bool_flag("missing"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = args("profile config.json extra");
+        assert_eq!(a.subcommand.as_deref(), Some("profile"));
+        assert_eq!(a.positional, vec!["config.json", "extra"]);
+    }
+
+    #[test]
+    fn equals_and_separate_forms_match() {
+        let a = args("x --k=v");
+        let b = args("x --k v");
+        assert_eq!(a.flag("k"), b.flag("k"));
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = args("x --verbose --n 3");
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.get_u64("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = args("x --n abc");
+        assert!(a.get_u64("n", 0).is_err());
+        assert!(a.get_f64("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn explicit_false() {
+        let a = args("x --feature=false");
+        assert!(!a.bool_flag("feature"));
+    }
+}

@@ -1,0 +1,9 @@
+//! In-repo substitutes for crates unavailable in the offline environment
+//! (`rand`, `serde_json`, `clap`, plus small numeric helpers).
+
+pub mod bytes;
+pub mod fasthash;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;

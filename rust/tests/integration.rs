@@ -1,0 +1,208 @@
+//! Integration tests across the full memory-study stack: scenario → trace
+//! → allocator → profiler, for every framework/strategy combination the
+//! paper evaluates, plus property-style invariant sweeps.
+
+use rlhf_mem::alloc::CachingAllocator;
+use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::sim::{build_trace, ScenarioMode, SimScenario};
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::trace::{replay, NullPhaseSink};
+use rlhf_mem::util::bytes::GIB;
+use rlhf_mem::util::prng::Rng;
+
+fn all_strategies() -> Vec<StrategyConfig> {
+    vec![
+        StrategyConfig::none(),
+        StrategyConfig::zero1(),
+        StrategyConfig::zero2(),
+        StrategyConfig::zero3(),
+        StrategyConfig::zero3_offload(),
+        StrategyConfig::checkpointing(),
+        StrategyConfig::all_enabled(),
+    ]
+}
+
+#[test]
+fn every_ds_strategy_fits_24gib_and_validates() {
+    for strat in all_strategies() {
+        let mut scn = SimScenario::deepspeed_opt(strat, EmptyCachePolicy::Never);
+        scn.steps = 1;
+        let trace = build_trace(&scn);
+        let mut alloc = CachingAllocator::with_default_config(RTX3090_HBM);
+        let res = replay(&trace, &mut alloc, &mut NullPhaseSink);
+        assert!(res.ok(), "{strat:?} OOMed: {:?}", res.oom);
+        alloc.validate().unwrap_or_else(|e| panic!("{strat:?}: {e}"));
+    }
+}
+
+#[test]
+fn every_colossal_strategy_validates() {
+    for strat in StrategyConfig::table1_colossal_rows().into_iter().map(|(_, s)| s) {
+        for scn in [
+            SimScenario::colossal_opt(strat, EmptyCachePolicy::Never),
+            SimScenario::colossal_gpt2(strat, EmptyCachePolicy::Never),
+        ] {
+            let mut scn = scn;
+            scn.steps = 1;
+            let trace = build_trace(&scn);
+            let mut alloc = CachingAllocator::with_default_config(RTX3090_HBM);
+            let res = replay(&trace, &mut alloc, &mut NullPhaseSink);
+            assert!(res.ok(), "{strat:?} OOMed");
+            alloc.validate().unwrap();
+        }
+    }
+}
+
+#[test]
+fn traces_are_balanced_after_teardown() {
+    // Leaked handles must be exactly the persistent engine state (params,
+    // adapters, optimizer, comm machinery) — nothing from per-step work.
+    use rlhf_mem::trace::TraceOp;
+    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::zero2(), EmptyCachePolicy::Never);
+    scn.steps = 2;
+    let trace = build_trace(&scn);
+    let leaked = trace.check_balanced().unwrap();
+    // Count Init-phase allocs: every leak must have been allocated before
+    // the first Generation phase marker.
+    let mut init_handles = std::collections::HashSet::new();
+    for op in &trace.ops {
+        match op {
+            TraceOp::Phase(p) if *p != rlhf_mem::trace::PhaseKind::Init => break,
+            TraceOp::Alloc { handle, .. } => {
+                init_handles.insert(handle.0);
+            }
+            _ => {}
+        }
+    }
+    for h in &leaked {
+        assert!(
+            init_handles.contains(&h.0),
+            "leaked handle {h:?} was not allocated in Init"
+        );
+    }
+}
+
+#[test]
+fn paper_insight_zero3_raises_fragmentation() {
+    let frag = |strat| {
+        let mut scn = SimScenario::deepspeed_opt(strat, EmptyCachePolicy::Never);
+        scn.steps = 2;
+        run_scenario(&scn, RTX3090_HBM).summary.frag
+    };
+    let none = frag(StrategyConfig::none());
+    let z3 = frag(StrategyConfig::zero3());
+    assert!(
+        z3 > none,
+        "ZeRO-3 must raise fragmentation: {z3} vs {none}"
+    );
+}
+
+#[test]
+fn paper_insight_zero1_stably_reduces_memory() {
+    let reserved = |strat| {
+        let mut scn = SimScenario::deepspeed_opt(strat, EmptyCachePolicy::Never);
+        scn.steps = 2;
+        run_scenario(&scn, RTX3090_HBM).summary.peak_reserved
+    };
+    assert!(reserved(StrategyConfig::zero1()) < reserved(StrategyConfig::none()));
+}
+
+#[test]
+fn paper_insight_gpt2_checkpointing_no_effect() {
+    // §3.2: ColossalChat/GPT-2 peaks during inference, so checkpointing
+    // barely moves the peak.
+    let mut base = SimScenario::colossal_gpt2(StrategyConfig::none(), EmptyCachePolicy::Never);
+    base.steps = 2;
+    let none = run_scenario(&base, RTX3090_HBM).summary;
+    let mut ck = SimScenario::colossal_gpt2(StrategyConfig::checkpointing(), EmptyCachePolicy::Never);
+    ck.steps = 2;
+    let ckpt = run_scenario(&ck, RTX3090_HBM).summary;
+    let delta = (none.peak_reserved as f64 - ckpt.peak_reserved as f64).abs()
+        / none.peak_reserved as f64;
+    assert!(delta < 0.05, "checkpointing moved GPT-2 peak by {delta:.3}");
+}
+
+#[test]
+fn paper_insight_empty_cache_cuts_fragmentation() {
+    let mut never = SimScenario::colossal_gpt2(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+    never.steps = 3;
+    let mut ec = never.clone();
+    ec.policy = EmptyCachePolicy::AfterBoth;
+    let a = run_scenario(&never, RTX3090_HBM).summary;
+    let b = run_scenario(&ec, RTX3090_HBM).summary;
+    assert!(b.frag < a.frag, "empty_cache must cut fragmentation: {} vs {}", b.frag, a.frag);
+    assert!(b.peak_reserved <= a.peak_reserved);
+}
+
+#[test]
+fn scenario_modes_ordering() {
+    // §3.1: full > train-both > actor-only in reserved memory.
+    let run = |mode| {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), EmptyCachePolicy::Never);
+        scn.steps = 2;
+        scn.mode = mode;
+        run_scenario(&scn, RTX3090_HBM).summary.peak_reserved
+    };
+    let full = run(ScenarioMode::Full);
+    let both = run(ScenarioMode::TrainBothPrecollected);
+    let actor = run(ScenarioMode::TrainActorOnly);
+    assert!(full >= both, "{full} vs {both}");
+    assert!(both >= actor, "{both} vs {actor}");
+}
+
+#[test]
+fn property_random_traces_never_break_allocator() {
+    // Property sweep: random mixed workloads with interleaved empty_cache
+    // must preserve every allocator invariant and end balanced.
+    let mut rng = Rng::seeded(0xFEED);
+    for case in 0..30 {
+        let mut alloc = CachingAllocator::with_default_config(2 * GIB);
+        let mut live = Vec::new();
+        let ops = 2_000;
+        for _ in 0..ops {
+            match rng.gen_range(10) {
+                0..=5 => {
+                    let sz = match rng.gen_range(3) {
+                        0 => rng.gen_range(512 * 1024) + 1,
+                        1 => rng.gen_range(8 << 20) + (1 << 20),
+                        _ => rng.gen_range(64 << 20) + (10 << 20),
+                    };
+                    if let Ok(h) = alloc.alloc(sz) {
+                        live.push(h);
+                    }
+                }
+                6..=8 => {
+                    if !live.is_empty() {
+                        let i = rng.range_usize(0, live.len());
+                        alloc.free(live.swap_remove(i));
+                    }
+                }
+                _ => {
+                    alloc.empty_cache();
+                }
+            }
+        }
+        alloc.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        for h in live.drain(..) {
+            alloc.free(h);
+        }
+        alloc.empty_cache();
+        assert_eq!(alloc.reserved(), 0, "case {case} leaked reserved memory");
+        alloc.validate().unwrap();
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let mk = || {
+        let mut scn = SimScenario::colossal_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 2;
+        run_scenario(&scn, RTX3090_HBM).summary
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.peak_reserved, b.peak_reserved);
+    assert_eq!(a.frag, b.frag);
+    assert_eq!(a.peak_allocated, b.peak_allocated);
+}
