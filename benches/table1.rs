@@ -1,50 +1,42 @@
-//! Bench/regeneration harness for **Table 1** (E2–E4): the full strategy
-//! sweep over both frameworks and both model pairs, printing the paper's
-//! rows and timing each scenario's simulation.
+//! Bench/regeneration harness for **Table 1** (E2–E4) on the sweep
+//! engine: the full strategy sweep over both frameworks and both model
+//! pairs (grid from `rlhf_mem::sweep::presets`, shared with the CLI),
+//! timed serially (`jobs=1`) and on the worker pool, printing the
+//! paper's rows plus the parallel speedup.
 
 use rlhf_mem::bench::bench;
-use rlhf_mem::experiment::RTX3090_HBM;
-use rlhf_mem::policy::EmptyCachePolicy;
-use rlhf_mem::report::paper::{render_rows, StrategyRow};
-use rlhf_mem::rlhf::sim::SimScenario;
-use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::report::paper::render_rows;
+use rlhf_mem::sweep::{presets, SweepRunner};
 
 fn main() {
-    let mut all_rows = Vec::new();
-    for (title, rows_spec, mk) in [
-        (
-            "DeepSpeed-Chat / OPT",
-            StrategyConfig::table1_deepspeed_rows(),
-            (|s| SimScenario::deepspeed_opt(s, EmptyCachePolicy::Never))
-                as fn(StrategyConfig) -> SimScenario,
-        ),
-        (
-            "ColossalChat / OPT",
-            StrategyConfig::table1_colossal_rows(),
-            |s| SimScenario::colossal_opt(s, EmptyCachePolicy::Never),
-        ),
-        (
-            "ColossalChat / GPT-2",
-            StrategyConfig::table1_colossal_rows(),
-            |s| SimScenario::colossal_gpt2(s, EmptyCachePolicy::Never),
-        ),
-    ] {
-        let mut rows = Vec::new();
-        for (label, strat) in rows_spec {
-            let scn = mk(strat);
-            let mut row = None;
-            let timing = bench(&format!("{title} / {label}"), 0, 3, || {
-                row = Some(StrategyRow::measure(label, &scn, RTX3090_HBM));
-            });
-            println!("{}", timing.report());
-            rows.push(row.unwrap());
-        }
-        println!("\n{}", render_rows(title, &rows));
-        all_rows.extend(rows);
+    let cells = presets::table1_cells(3).expect("table1 grid");
+    let n = cells.len();
+    let jobs = SweepRunner::default_jobs().min(8);
+    println!("table1 sweep: {n} cells, pool of {jobs} workers\n");
+
+    let mut serial = None;
+    let t1 = bench("table1 sweep --jobs 1", 0, 2, || {
+        serial = Some(SweepRunner::new(1).run(cells.clone()));
+    });
+    println!("{}", t1.report());
+
+    let mut pooled = None;
+    let tn = bench(&format!("table1 sweep --jobs {jobs}"), 0, 2, || {
+        pooled = Some(SweepRunner::new(jobs).run(cells.clone()));
+    });
+    println!("{}", tn.report());
+    let speedup = t1.summary.median / tn.summary.median;
+    println!("parallel speedup: {speedup:.2}x on {jobs} workers\n");
+
+    let (serial, pooled) = (serial.unwrap(), pooled.unwrap());
+    assert_eq!(
+        serial.jsonl(),
+        pooled.jsonl(),
+        "per-cell results must be byte-identical whatever the job count"
+    );
+
+    for (fw, model, rows) in pooled.strategy_rows() {
+        println!("{}", render_rows(&format!("{fw} / {model}"), &rows));
     }
-    // Shape assertions (who wins, not absolute numbers): ZeRO-3's
-    // fragmentation must exceed None's within each framework block.
-    let frag = |label: &str, idx: usize| all_rows[idx].original.frag as f64 / (1u64 << 30) as f64;
-    let _ = frag;
-    println!("table1 bench complete: {} rows", all_rows.len());
+    println!("table1 bench complete: {n} cells, speedup {speedup:.2}x");
 }

@@ -1,46 +1,39 @@
-//! Bench/regeneration harness for **Table 2** (E5): None vs ZeRO-3 on a
-//! 4xA100-80G node for OPT-1.3b / OPT-6.7b / Llama-2-7b (full fine-tune).
+//! Bench/regeneration harness for **Table 2** (E5) on the sweep engine:
+//! None vs ZeRO-3 on a 4xA100-80G node for OPT-1.3b / OPT-6.7b /
+//! Llama-2-7b (grid from `rlhf_mem::sweep::presets`, shared with the
+//! CLI), timed serially and on the worker pool.
 
 use rlhf_mem::bench::bench;
-use rlhf_mem::experiment::A100_HBM;
-use rlhf_mem::mem::ModelArch;
-use rlhf_mem::policy::EmptyCachePolicy;
-use rlhf_mem::report::paper::{paper_table2, render_rows, StrategyRow};
-use rlhf_mem::rlhf::cost::GpuSpec;
-use rlhf_mem::rlhf::models::RlhfModelSet;
-use rlhf_mem::rlhf::sim::SimScenario;
-use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::report::paper::{paper_table2, render_rows};
+use rlhf_mem::sweep::{presets, SweepRunner};
 
 fn main() {
-    for arch_name in ["opt-1.3b", "opt-6.7b", "llama-2-7b"] {
-        let arch = ModelArch::by_name(arch_name).unwrap();
-        let mut rows = Vec::new();
-        for (label, strat) in [
-            ("None", StrategyConfig::none()),
-            ("ZeRO-3", StrategyConfig::zero3()),
-        ] {
-            let mut scn = SimScenario::colossal_opt(strat, EmptyCachePolicy::Never);
-            scn.models = RlhfModelSet {
-                policy_arch: arch.clone(),
-                value_arch: ModelArch::opt_350m(),
-            };
-            scn.framework.prompt_len = 256;
-            scn.framework.gen_len = 256;
-            scn.framework.rollout_batch = 64;
-            scn.framework.infer_micro_batch = 8;
-            scn.framework.train_micro_batch = 4;
-            scn.gpu = GpuSpec::a100_80g();
-            let mut row = None;
-            let timing = bench(&format!("table2 {arch_name}/{label}"), 0, 2, || {
-                row = Some(StrategyRow::measure(label, &scn, A100_HBM));
-            });
-            println!("{}", timing.report());
-            rows.push(row.unwrap());
-        }
-        println!("\n{}", render_rows(&format!("{arch_name} (4xA100-80G)"), &rows));
+    let cells = presets::table2_cells(3).expect("table2 grid");
+    let jobs = SweepRunner::default_jobs().min(8);
+    println!("table2 sweep: {} cells, pool of {jobs} workers\n", cells.len());
+
+    let t1 = bench("table2 sweep --jobs 1", 0, 2, || {
+        SweepRunner::new(1).run(cells.clone());
+    });
+    println!("{}", t1.report());
+    let mut pooled = None;
+    let tn = bench(&format!("table2 sweep --jobs {jobs}"), 0, 2, || {
+        pooled = Some(SweepRunner::new(jobs).run(cells.clone()));
+    });
+    println!("{}", tn.report());
+    println!(
+        "parallel speedup: {:.2}x on {jobs} workers\n",
+        t1.summary.median / tn.summary.median
+    );
+
+    for (_fw, model, rows) in pooled.unwrap().strategy_rows() {
+        println!("{}", render_rows(&format!("{model} (4xA100-80G)"), &rows));
     }
     println!("paper reference:");
     for (model, strat, v) in paper_table2() {
-        println!("  {model:<12} {strat:<8} {:>5.1} {:>5.1} {:>5.1} | {:>5.1} {:>5.1}", v[0], v[1], v[2], v[3], v[4]);
+        println!(
+            "  {model:<12} {strat:<8} {:>5.1} {:>5.1} {:>5.1} | {:>5.1} {:>5.1}",
+            v[0], v[1], v[2], v[3], v[4]
+        );
     }
 }

@@ -1,22 +1,30 @@
-//! Table-1 regeneration (E2–E4) as a library-API walkthrough: sweep every
-//! memory-management strategy on DeepSpeed-Chat/OPT, print the paper-style
-//! table, and check the paper's §3.2 insights hold.
+//! Table-1 regeneration (E2–E4) as a library-API walkthrough, now on the
+//! sweep engine: define the DeepSpeed-Chat/OPT strategy grid, run it on a
+//! worker pool, print the paper-style table, and check the paper's §3.2
+//! insights hold.
 //!
 //! Run: `cargo run --release --example strategy_sweep`
 
-use rlhf_mem::experiment::RTX3090_HBM;
 use rlhf_mem::policy::EmptyCachePolicy;
-use rlhf_mem::report::paper::{render_rows, StrategyRow};
-use rlhf_mem::rlhf::sim::SimScenario;
 use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::sweep::{SweepGrid, SweepRunner};
 
 fn main() {
-    let mut rows = Vec::new();
-    for (label, strat) in StrategyConfig::table1_deepspeed_rows() {
-        let scn = SimScenario::deepspeed_opt(strat, EmptyCachePolicy::Never);
-        rows.push(StrategyRow::measure(label, &scn, RTX3090_HBM));
-    }
-    println!("{}", render_rows("DeepSpeed-Chat / OPT (simulated 4x24 GiB)", &rows));
+    let cells = SweepGrid::new() // defaults: DeepSpeed-Chat / OPT / 24 GiB
+        .strategies(StrategyConfig::table1_deepspeed_rows())
+        .policies([EmptyCachePolicy::Never, EmptyCachePolicy::AfterBoth])
+        .build()
+        .expect("grid");
+    println!("grid: {} cells", cells.len());
+
+    let report = SweepRunner::new(SweepRunner::default_jobs()).run(cells);
+    let blocks = report.strategy_rows();
+    let (_, _, rows) = &blocks[0];
+    println!(
+        "{}",
+        rlhf_mem::report::paper::render_rows("DeepSpeed-Chat / OPT (simulated 4x24 GiB)", rows)
+    );
+    println!("({})", report.summary_line());
 
     let by = |name: &str| rows.iter().find(|r| r.strategy == name).unwrap();
     let none = by("None");
@@ -26,7 +34,7 @@ fn main() {
     assert!(z1.original.peak_reserved < none.original.peak_reserved, "ZeRO-1 stably reduces memory");
     assert!(z3.original.frag > none.original.frag, "ZeRO-3 increases fragmentation");
     assert!(z3.original.peak_allocated < z1.original.peak_allocated, "ZeRO-3 allocates least");
-    for r in &rows {
+    for r in rows {
         assert!(
             r.with_empty_cache.peak_reserved <= r.original.peak_reserved + (1 << 28),
             "empty_cache must not blow up reserved ({})", r.strategy

@@ -18,27 +18,48 @@ use super::block::{Block, BlockId, BlockSlab, BlockState, NO_BLOCK};
 use super::config::{AllocatorConfig, PoolKind};
 use super::driver::{DriverOom, SegmentId, SimDriver};
 use super::pool::BlockPool;
-use super::stats::{AllocEvent, AllocObserver, AllocStats, PhaseTag, StatSnapshot};
-use std::cell::RefCell;
+use super::stats::{AllocEvent, AllocStats, PhaseTag, StatSnapshot};
 use crate::util::fasthash::FastMap;
-use std::rc::Rc;
 
 /// Opaque user handle to a live allocation (a "tensor").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct AllocId(pub u64);
 
 /// Error from [`CachingAllocator::alloc`].
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum AllocError {
-    #[error("{0}; allocator state: reserved={reserved} allocated={allocated} cached={cached}",
-            reserved = .1.reserved, allocated = .1.allocated, cached = .1.reserved - .1.allocated)]
-    Oom(#[source] DriverOom, StatSnapshot),
+    Oom(DriverOom, StatSnapshot),
 }
 
-type SharedObserver = Rc<RefCell<dyn AllocObserver>>;
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let AllocError::Oom(oom, snap) = self;
+        write!(
+            f,
+            "{oom}; allocator state: reserved={} allocated={} cached={}",
+            snap.reserved,
+            snap.allocated,
+            snap.reserved - snap.allocated
+        )
+    }
+}
+
+impl std::error::Error for AllocError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        let AllocError::Oom(oom, _) = self;
+        Some(oom)
+    }
+}
 
 /// The allocator. Single-stream (RLHF phases are serialized; see paper
 /// Appendix A), one instance per simulated GPU.
+///
+/// The allocator is a plain `Send` value: instead of pushing events into a
+/// shared observer, it appends them (with a [`StatSnapshot`] taken at emit
+/// time) to an internal log when [`Self::set_event_recording`] is on. The
+/// replay loop drains that log after every op and forwards it to the
+/// profiler — which is what lets the sweep engine hand one allocator +
+/// profiler pair to each worker thread.
 pub struct CachingAllocator {
     cfg: AllocatorConfig,
     driver: SimDriver,
@@ -53,7 +74,8 @@ pub struct CachingAllocator {
     seg_heads: FastMap<SegmentId, BlockId>,
     stats: AllocStats,
     phase: PhaseTag,
-    observer: Option<SharedObserver>,
+    record_events: bool,
+    events: Vec<(AllocEvent, StatSnapshot)>,
 }
 
 impl CachingAllocator {
@@ -70,7 +92,8 @@ impl CachingAllocator {
             seg_heads: FastMap::default(),
             stats: AllocStats::default(),
             phase: 0,
-            observer: None,
+            record_events: false,
+            events: Vec::new(),
         }
     }
 
@@ -78,14 +101,17 @@ impl CachingAllocator {
         Self::new(capacity, AllocatorConfig::default())
     }
 
-    /// Attach an event observer (the memory profiler).
-    pub fn set_observer(&mut self, obs: SharedObserver) {
-        self.observer = Some(obs);
+    /// Turn the event log on or off. While on, every operation appends its
+    /// [`AllocEvent`]s (with point-in-time snapshots) to an internal buffer
+    /// that [`Self::drain_events_into`] empties.
+    pub fn set_event_recording(&mut self, on: bool) {
+        self.record_events = on;
     }
 
-    /// Detach the observer (releases the profiler's Rc).
-    pub fn clear_observer(&mut self) {
-        self.observer = None;
+    /// Move all buffered events into `out` (appending), leaving the
+    /// internal buffer empty but with its capacity retained.
+    pub fn drain_events_into(&mut self, out: &mut Vec<(AllocEvent, StatSnapshot)>) {
+        out.append(&mut self.events);
     }
 
     /// Tag subsequent driver segments / events with an RLHF phase id.
@@ -138,9 +164,9 @@ impl CachingAllocator {
     }
 
     fn emit(&mut self, ev: AllocEvent) {
-        if let Some(obs) = &self.observer {
+        if self.record_events {
             let snap = self.snapshot();
-            obs.borrow_mut().on_event(&ev, &snap);
+            self.events.push((ev, snap));
         }
     }
 
@@ -847,6 +873,37 @@ mod tests {
         let s = a.stats();
         assert_eq!(s.peak_reserved, 62 * MIB);
         assert_eq!(s.frag_at_peak_reserved, 32 * MIB);
+    }
+
+    #[test]
+    fn allocator_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<CachingAllocator>();
+    }
+
+    #[test]
+    fn event_log_records_and_drains() {
+        let mut a = alloc(GIB);
+        let h = a.alloc(5 * MIB).unwrap(); // CudaMalloc + Alloc
+        a.free(h); // Free
+        let mut out = Vec::new();
+        a.drain_events_into(&mut out);
+        assert!(out.is_empty(), "recording off: no events");
+
+        a.set_event_recording(true);
+        let h = a.alloc(5 * MIB).unwrap(); // cache hit: Alloc only
+        a.free(h);
+        a.empty_cache();
+        a.drain_events_into(&mut out);
+        let kinds: Vec<&AllocEvent> = out.iter().map(|(e, _)| e).collect();
+        assert!(matches!(kinds[0], AllocEvent::Alloc { cache_hit: true, .. }));
+        assert!(matches!(kinds[1], AllocEvent::Free { .. }));
+        assert!(kinds.iter().any(|e| matches!(e, AllocEvent::EmptyCache { .. })));
+        // Snapshots are point-in-time: the Alloc snapshot sees the bytes.
+        assert_eq!(out[0].1.allocated, 5 * MIB);
+        let mut again = Vec::new();
+        a.drain_events_into(&mut again);
+        assert!(again.is_empty(), "drained");
     }
 
     #[test]

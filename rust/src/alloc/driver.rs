@@ -15,17 +15,28 @@ use crate::util::bytes::fmt_bytes;
 pub struct SegmentId(pub u32);
 
 /// Error returned when the device cannot satisfy a `cudaMalloc`.
-#[derive(Debug, Clone, thiserror::Error)]
-#[error(
-    "CUDA out of memory: tried to allocate {} ({requested} bytes); \
-     device capacity {} with {} already reserved",
-    fmt_bytes(*.requested), fmt_bytes(*.capacity), fmt_bytes(*.reserved)
-)]
+#[derive(Debug, Clone)]
 pub struct DriverOom {
     pub requested: u64,
     pub capacity: u64,
     pub reserved: u64,
 }
+
+impl std::fmt::Display for DriverOom {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CUDA out of memory: tried to allocate {} ({} bytes); \
+             device capacity {} with {} already reserved",
+            fmt_bytes(self.requested),
+            self.requested,
+            fmt_bytes(self.capacity),
+            fmt_bytes(self.reserved)
+        )
+    }
+}
+
+impl std::error::Error for DriverOom {}
 
 /// The simulated device + driver.
 #[derive(Debug, Clone)]

@@ -62,7 +62,10 @@ impl StatSnapshot {
     }
 }
 
-/// Observer of the allocator's event stream (the profiler implements this).
+/// Observer of the allocator's event stream (the profiler implements
+/// this). Events are buffered inside the allocator while
+/// `set_event_recording(true)` is on; the replay loop drains them and
+/// forwards each pair to its sink, which typically delegates here.
 pub trait AllocObserver {
     fn on_event(&mut self, event: &AllocEvent, state: &StatSnapshot);
 }

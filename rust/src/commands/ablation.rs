@@ -1,24 +1,31 @@
 //! `rlhf-mem ablation` — §3.3 (E7): empty_cache() placement ablation:
 //! never / after both / after inference only / after training only.
+//!
+//! A four-cell grid (one per [`EmptyCachePolicy`]) run through the sweep
+//! engine; `--jobs` parallelizes the four runs.
 
-use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::report::table::TextTable;
-use rlhf_mem::rlhf::sim::SimScenario;
 use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::sweep::{SweepGrid, SweepRunner};
 use rlhf_mem::util::bytes::fmt_gib_paper;
 use rlhf_mem::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<(), String> {
     let steps = args.get_u64("steps", 3)?;
+    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
+    let cells = SweepGrid::new()
+        .strategies([("All Enabled", StrategyConfig::all_enabled())])
+        .policies(EmptyCachePolicy::ALL)
+        .steps(steps)
+        .build()?;
+    let report = SweepRunner::new(jobs).run(cells);
+
     let mut t = TextTable::new(&["Policy", "Reserved", "Frag.", "Allocated", "empty_cache calls"]);
-    for policy in EmptyCachePolicy::ALL {
-        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), policy);
-        scn.steps = steps;
-        let res = run_scenario(&scn, RTX3090_HBM);
-        let s = res.summary;
+    for cell in &report.cells {
+        let s = &cell.summary;
         t.row(vec![
-            policy.name().to_string(),
+            cell.policy.to_string(),
             fmt_gib_paper(s.peak_reserved),
             fmt_gib_paper(s.frag),
             fmt_gib_paper(s.peak_allocated),
@@ -28,5 +35,6 @@ pub fn run(args: &Args) -> Result<(), String> {
     println!("§3.3 placement ablation — DeepSpeed-Chat/OPT, all strategies, {steps} steps (GiB)");
     println!("{}", t.render());
     println!("Expectation (paper): after_inference ≈ after_both ≪ never; after_training ≈ never.");
+    println!("({})", report.summary_line());
     Ok(())
 }

@@ -11,16 +11,9 @@ use rlhf_mem::util::bytes::fmt_bytes;
 use rlhf_mem::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<(), String> {
-    let strat = match args.get_or("strategy", "none") {
-        "none" => StrategyConfig::none(),
-        "zero1" => StrategyConfig::zero1(),
-        "zero2" => StrategyConfig::zero2(),
-        "zero3" => StrategyConfig::zero3(),
-        "offload" => StrategyConfig::zero3_offload(),
-        "ckpt" => StrategyConfig::checkpointing(),
-        "all" => StrategyConfig::all_enabled(),
-        other => return Err(format!("unknown strategy {other}")),
-    };
+    let strat_name = args.get_or("strategy", "none");
+    let (_, strat) = StrategyConfig::by_name(strat_name)
+        .ok_or_else(|| format!("unknown strategy {strat_name}"))?;
     let policy = if args.bool_flag("ec") { EmptyCachePolicy::AfterBoth } else { EmptyCachePolicy::Never };
     let mut scn = SimScenario::deepspeed_opt(strat, policy);
     scn.steps = args.get_u64("steps", 2)?;

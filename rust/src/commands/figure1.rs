@@ -2,23 +2,31 @@
 //! DeepSpeed-Chat/OPT with all strategies enabled, annotated with the
 //! reserved peak (red cross), the fragmentation there, and the
 //! "reserved w/o fragmentation" level (yellow cross).
+//!
+//! A one-cell sweep with profile capture on: the engine hands back the
+//! full [`rlhf_mem::profiler::MemoryProfiler`] so the timeline chart and
+//! CSV render exactly as the serial path did.
 
-use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
 use rlhf_mem::policy::EmptyCachePolicy;
-use rlhf_mem::rlhf::sim::SimScenario;
 use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::sweep::{SweepGrid, SweepRunner};
 use rlhf_mem::util::bytes::fmt_bytes;
 use rlhf_mem::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<(), String> {
     let steps = args.get_u64("steps", 3)?;
-    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), EmptyCachePolicy::Never);
-    scn.steps = steps;
-    let res = run_scenario(&scn, RTX3090_HBM);
-    let s = &res.summary;
+    let cells = SweepGrid::new()
+        .strategies([("All Enabled", StrategyConfig::all_enabled())])
+        .policies([EmptyCachePolicy::Never])
+        .steps(steps)
+        .build()?;
+    let report = SweepRunner::new(1).capture_profiles(true).run(cells);
+    let cell = &report.cells[0];
+    let s = &cell.summary;
+    let profiler = cell.profiler.as_ref().expect("profile capture enabled");
 
     println!("Figure 1 — DeepSpeed-Chat/OPT, ZeRO-3 + offload + checkpointing, {steps} PPO steps");
-    println!("{}", res.profiler.timeline.ascii_chart(110, 16));
+    println!("{}", profiler.timeline.ascii_chart(110, 16));
     println!();
     println!("  peak reserved (red cross)        : {}", fmt_bytes(s.peak_reserved));
     println!("  reserved w/o frag (yellow cross) : {}", fmt_bytes(s.reserved_wo_frag()));
@@ -26,7 +34,7 @@ pub fn run(args: &Args) -> Result<(), String> {
     println!("  phase of the peak                : {}", s.peak_phase.name());
 
     if let Some(path) = args.flag("csv") {
-        std::fs::write(path, res.profiler.timeline.to_csv()).map_err(|e| e.to_string())?;
+        std::fs::write(path, profiler.timeline.to_csv()).map_err(|e| e.to_string())?;
         println!("  timeline csv -> {path}");
     }
 

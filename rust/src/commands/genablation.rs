@@ -2,20 +2,26 @@
 //! `generation()` keeps the cumulative [b, s, vocab] logits each step and
 //! was "exceptionally high" in memory; the paper replaced it with
 //! HuggingFace's implementation. This regenerates that comparison.
+//!
+//! The two generation variants aren't a cartesian axis, so they enter the
+//! grid as explicit [`rlhf_mem::sweep::SweepGrid::push_scenario`] cells;
+//! profile capture keeps the per-phase peaks the comparison needs.
 
-use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
 use rlhf_mem::frameworks::GenerationImpl;
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::report::table::TextTable;
 use rlhf_mem::rlhf::sim::SimScenario;
 use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::sweep::{SweepGrid, SweepRunner};
 use rlhf_mem::util::bytes::fmt_gib_paper;
 use rlhf_mem::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<(), String> {
     let steps = args.get_u64("steps", 2)?;
-    let mut t = TextTable::new(&["generation()", "Reserved", "Frag.", "Allocated", "Gen-phase peak"]);
-    let mut peaks = Vec::new();
+    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
+
+    // Empty the cartesian axes: only the pushed variants run.
+    let mut grid = SweepGrid::new().strategies(Vec::<(&str, StrategyConfig)>::new());
     for (label, imp) in [
         ("HuggingFace (paper's fix)", GenerationImpl::HuggingFace),
         ("ColossalChat original", GenerationImpl::ColossalOriginal),
@@ -23,19 +29,25 @@ pub fn run(args: &Args) -> Result<(), String> {
         let mut scn = SimScenario::colossal_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
         scn.framework.generation = imp;
         scn.steps = steps;
-        let res = run_scenario(&scn, RTX3090_HBM);
-        let gen_peak = res
+        grid = grid.push_scenario("ColossalChat", "OPT", label, scn);
+    }
+    let report = SweepRunner::new(jobs).capture_profiles(true).run(grid.build()?);
+
+    let mut t = TextTable::new(&["generation()", "Reserved", "Frag.", "Allocated", "Gen-phase peak"]);
+    let mut peaks = Vec::new();
+    for cell in &report.cells {
+        let gen_peak = cell
             .profiler
-            .phase_peaks
-            .get(&rlhf_mem::trace::PhaseKind::Generation)
+            .as_ref()
+            .and_then(|p| p.phase_peaks.get(&rlhf_mem::trace::PhaseKind::Generation))
             .map(|p| p.allocated)
             .unwrap_or(0);
         peaks.push(gen_peak);
         t.row(vec![
-            label.to_string(),
-            fmt_gib_paper(res.summary.peak_reserved),
-            fmt_gib_paper(res.summary.frag),
-            fmt_gib_paper(res.summary.peak_allocated),
+            cell.strategy.clone(),
+            fmt_gib_paper(cell.summary.peak_reserved),
+            fmt_gib_paper(cell.summary.frag),
+            fmt_gib_paper(cell.summary.peak_allocated),
             fmt_gib_paper(gen_peak),
         ]);
     }

@@ -1,4 +1,7 @@
-//! CLI subcommand implementations.
+//! CLI subcommand implementations. The paper commands are thin grid
+//! definitions over [`rlhf_mem::sweep`]; `sweep` exposes user-defined
+//! grids; `train` (behind the `pjrt` feature) drives the real-compute
+//! half.
 
 pub mod ablation;
 pub mod debug;
@@ -8,6 +11,8 @@ pub mod figure1;
 pub mod overhead;
 pub mod phases;
 pub mod quickstart;
+pub mod sweep;
 pub mod table1;
 pub mod table2;
+#[cfg(feature = "pjrt")]
 pub mod train;

@@ -1,0 +1,127 @@
+//! `rlhf-mem sweep` — user-defined scenario grids over the parallel sweep
+//! engine.
+//!
+//! ```text
+//! rlhf-mem sweep --frameworks ds,cc --strategies none,zero3,all \
+//!                --policies never,after_both --steps 2 --jobs 8 \
+//!                --jsonl sweep.jsonl
+//! ```
+//!
+//! Axes default to DeepSpeed-Chat / OPT / `none,zero3` / `never` /
+//! `full` (two cells); every flag below widens one axis. Cells are
+//! filtered by `--include`/`--exclude` substring matches on the
+//! `framework/model/strategy/mode/policy` key.
+
+use rlhf_mem::frameworks::FrameworkKind;
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::cost::GpuSpec;
+use rlhf_mem::rlhf::sim::ScenarioMode;
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::sweep::{model_set_by_name, SeedPolicy, SweepGrid, SweepRunner};
+use rlhf_mem::util::bytes::GIB;
+use rlhf_mem::util::cli::Args;
+
+pub const SWEEP_USAGE: &str = "\
+rlhf-mem sweep — run a user-defined scenario grid on a worker pool
+
+FLAGS (comma-separated lists):
+  --frameworks ds,cc             frameworks (default ds)
+  --models opt,gpt2,nano         model pairs (default opt)
+  --strategies none,zero1,zero2,zero3,offload,ckpt,all   (default none,zero3)
+  --policies never,after_both,after_inference,after_training (default never)
+  --modes full,train_both,train_actor                    (default full)
+  --steps N        PPO steps per cell (default 3)
+  --world N        data-parallel ranks (default 4)
+  --capacity-gib N simulated HBM per GPU (default 24)
+  --gpu rtx3090|a100             time-model GPU (default rtx3090)
+  --jobs N         worker threads (default: all cores)
+  --seed N         base seed (default 0x5EED)
+  --per-cell-seeds derive a distinct deterministic seed per cell
+  --include SUB[,SUB]  keep only cells whose key contains a SUB
+  --exclude SUB[,SUB]  drop cells whose key contains a SUB
+  --jsonl FILE     write per-cell JSON-lines (index-ordered)
+";
+
+fn split(s: &str) -> impl Iterator<Item = &str> {
+    s.split(',').map(str::trim).filter(|x| !x.is_empty())
+}
+
+pub fn run(args: &Args) -> Result<(), String> {
+    if args.bool_flag("help") {
+        println!("{SWEEP_USAGE}");
+        return Ok(());
+    }
+    let mut grid = SweepGrid::new();
+
+    let fws: Vec<FrameworkKind> = split(args.get_or("frameworks", "ds"))
+        .map(|n| FrameworkKind::by_name(n).ok_or_else(|| format!("unknown framework '{n}'")))
+        .collect::<Result<_, _>>()?;
+    grid = grid.frameworks(fws);
+
+    let models: Vec<(String, _)> = split(args.get_or("models", "opt"))
+        .map(|n| model_set_by_name(n).ok_or_else(|| format!("unknown model set '{n}'")))
+        .collect::<Result<_, _>>()?;
+    grid = grid.model_sets(models);
+
+    let strategies: Vec<(&'static str, StrategyConfig)> =
+        split(args.get_or("strategies", "none,zero3"))
+            .map(|n| StrategyConfig::by_name(n).ok_or_else(|| format!("unknown strategy '{n}'")))
+            .collect::<Result<_, _>>()?;
+    grid = grid.strategies(strategies);
+
+    let policies: Vec<EmptyCachePolicy> = split(args.get_or("policies", "never"))
+        .map(|n| EmptyCachePolicy::by_name(n).ok_or_else(|| format!("unknown policy '{n}'")))
+        .collect::<Result<_, _>>()?;
+    grid = grid.policies(policies);
+
+    let modes: Vec<ScenarioMode> = split(args.get_or("modes", "full"))
+        .map(|n| ScenarioMode::by_name(n).ok_or_else(|| format!("unknown mode '{n}'")))
+        .collect::<Result<_, _>>()?;
+    grid = grid.modes(modes);
+
+    grid = grid
+        .steps(args.get_u64("steps", 3)?)
+        .world(args.get_u64("world", 4)?)
+        .capacity(args.get_u64("capacity-gib", 24)? * GIB);
+
+    grid = match args.get_or("gpu", "rtx3090") {
+        "rtx3090" => grid.gpu(GpuSpec::rtx3090()),
+        "a100" | "a100-80g" => grid.gpu(GpuSpec::a100_80g()),
+        other => return Err(format!("unknown gpu '{other}'")),
+    };
+
+    let seed = args.get_u64("seed", 0x5EED)?;
+    grid = grid.seeds(if args.bool_flag("per-cell-seeds") {
+        SeedPolicy::PerCell(seed)
+    } else {
+        SeedPolicy::Fixed(seed)
+    });
+
+    if let Some(pats) = args.flag("include") {
+        for p in split(pats) {
+            grid = grid.include(p);
+        }
+    }
+    if let Some(pats) = args.flag("exclude") {
+        for p in split(pats) {
+            grid = grid.exclude(p);
+        }
+    }
+
+    let cells = grid.build()?;
+    if cells.is_empty() {
+        return Err("grid is empty (axes × filters selected no cells)".to_string());
+    }
+    println!("sweep: {} cells", cells.len());
+
+    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
+    let report = SweepRunner::new(jobs).run(cells);
+
+    println!("{}", report.to_table().render());
+    println!("({})", report.summary_line());
+    if let Some(path) = args.flag("jsonl") {
+        std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

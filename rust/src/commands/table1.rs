@@ -1,79 +1,51 @@
-//! `rlhf-mem table1` — regenerate Table 1: the strategy sweep over
-//! DeepSpeed-Chat/OPT, ColossalChat/OPT and ColossalChat/GPT-2, with and
-//! without `empty_cache()`.
+//! `rlhf-mem table1` — regenerate Table 1 through the sweep engine: the
+//! strategy sweep over DeepSpeed-Chat/OPT, ColossalChat/OPT and
+//! ColossalChat/GPT-2, each row measured with and without `empty_cache()`.
+//!
+//! The grid itself lives in [`rlhf_mem::sweep::presets::table1_cells`]
+//! (shared with `benches/table1.rs`); this command filters it by
+//! `--framework`, runs one [`SweepRunner`] pass (`--jobs N`, default all
+//! cores), and groups the cells back into paper rows.
 
-use rlhf_mem::experiment::RTX3090_HBM;
-use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::frameworks::FrameworkKind;
 use rlhf_mem::report::paper::{paper_table1, render_rows, StrategyRow};
-use rlhf_mem::rlhf::sim::SimScenario;
-use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::sweep::{presets, SweepRunner};
 use rlhf_mem::util::cli::Args;
 use rlhf_mem::util::json::Json;
 
 pub fn run(args: &Args) -> Result<(), String> {
     let steps = args.get_u64("steps", 3)?;
     let which = args.get_or("framework", "all").to_string();
+    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
     let compare = args.bool_flag("compare-paper");
+
+    let mut cells = presets::table1_cells(steps)?;
+    if which != "all" {
+        let kind = FrameworkKind::by_name(&which)
+            .ok_or_else(|| format!("unknown framework '{which}'"))?;
+        cells.retain(|c| c.framework == kind.name());
+    }
+    let report = SweepRunner::new(jobs).run(cells);
+
     let mut json_rows: Vec<Json> = Vec::new();
-
-    let blocks: Vec<(&str, &str, Box<dyn Fn(StrategyConfig) -> SimScenario>)> = vec![
-        (
-            "DeepSpeed-Chat",
-            "OPT",
-            Box::new(move |s| {
-                let mut scn = SimScenario::deepspeed_opt(s, EmptyCachePolicy::Never);
-                scn.steps = steps;
-                scn
-            }),
-        ),
-        (
-            "ColossalChat",
-            "OPT",
-            Box::new(move |s| {
-                let mut scn = SimScenario::colossal_opt(s, EmptyCachePolicy::Never);
-                scn.steps = steps;
-                scn
-            }),
-        ),
-        (
-            "ColossalChat",
-            "GPT-2",
-            Box::new(move |s| {
-                let mut scn = SimScenario::colossal_gpt2(s, EmptyCachePolicy::Never);
-                scn.steps = steps;
-                scn
-            }),
-        ),
-    ];
-
-    for (fw, model, mk) in &blocks {
-        if which != "all" {
-            let short = if *fw == "DeepSpeed-Chat" { "ds" } else { "cc" };
-            if which != short && which != *fw {
-                continue;
-            }
-        }
-        let rows_spec = if *fw == "DeepSpeed-Chat" {
-            StrategyConfig::table1_deepspeed_rows()
-        } else {
-            StrategyConfig::table1_colossal_rows()
-        };
-        let mut rows = Vec::new();
-        for (label, strat) in rows_spec {
-            let scn = mk(strat);
-            let row = StrategyRow::measure(label, &scn, RTX3090_HBM);
-            json_rows.push(row_json(fw, model, &row));
-            rows.push(row);
+    for (fw, model, rows) in report.strategy_rows() {
+        for row in &rows {
+            json_rows.push(row_json(&fw, &model, row));
         }
         println!("{}", render_rows(&format!("{fw} / {model}"), &rows));
         if compare {
-            print_paper_block(fw, model);
+            print_paper_block(&fw, &model);
         }
     }
+    println!("({})", report.summary_line());
 
     if let Some(path) = args.flag("json") {
         let doc = Json::obj(vec![("table1", Json::Arr(json_rows))]);
         std::fs::write(path, doc.to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.flag("jsonl") {
+        std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
     Ok(())

@@ -1,59 +1,41 @@
-//! `rlhf-mem table2` — Appendix C Table 2: None vs ZeRO-3 on a 4×A100-80G
-//! node for OPT-1.3b, OPT-6.7b and Llama-2-7b (ColossalChat, LoRA off —
-//! the larger models are fully fine-tuned there, which is why allocated
-//! memory is much higher than Table 1).
+//! `rlhf-mem table2` — Appendix C Table 2 through the sweep engine: None
+//! vs ZeRO-3 on a 4×A100-80G node for OPT-1.3b, OPT-6.7b and Llama-2-7b
+//! (ColossalChat; the larger models are fully fine-tuned, which is why
+//! allocated memory is much higher than Table 1). The grid lives in
+//! [`rlhf_mem::sweep::presets::table2_cells`] (shared with
+//! `benches/table2.rs`); one runner pass executes all twelve cells across
+//! `--jobs` workers.
 
-use rlhf_mem::experiment::A100_HBM;
-use rlhf_mem::mem::ModelArch;
-use rlhf_mem::policy::EmptyCachePolicy;
-use rlhf_mem::report::paper::{render_rows, StrategyRow};
-use rlhf_mem::rlhf::cost::GpuSpec;
-use rlhf_mem::rlhf::models::RlhfModelSet;
-use rlhf_mem::rlhf::sim::SimScenario;
-use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::report::paper::render_rows;
+use rlhf_mem::sweep::{presets, SweepRunner};
 use rlhf_mem::util::cli::Args;
 use rlhf_mem::util::json::Json;
 
 pub fn run(args: &Args) -> Result<(), String> {
     let steps = args.get_u64("steps", 3)?;
+    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
+    let report = SweepRunner::new(jobs).run(presets::table2_cells(steps)?);
+
     let mut json_rows: Vec<Json> = Vec::new();
-    for arch_name in ["opt-1.3b", "opt-6.7b", "llama-2-7b"] {
-        let arch = ModelArch::by_name(arch_name).unwrap();
-        let mut rows = Vec::new();
-        for (label, strat) in [
-            ("None", StrategyConfig::none()),
-            ("ZeRO-3", StrategyConfig::zero3()),
-        ] {
-            let mut scn =
-                SimScenario::colossal_opt(strat, EmptyCachePolicy::Never);
-            // Table 2 pairs each larger policy with the OPT-350m scorer
-            // pair (as in Table 1) and runs the A100-scale workload:
-            // longer sequences and a larger rollout than the 24 GiB box.
-            scn.models = RlhfModelSet {
-                policy_arch: arch.clone(),
-                value_arch: ModelArch::opt_350m(),
-            };
-            scn.framework.prompt_len = 256;
-            scn.framework.gen_len = 256;
-            scn.framework.rollout_batch = 64;
-            scn.framework.infer_micro_batch = 8;
-            scn.framework.train_micro_batch = 4;
-            scn.steps = steps;
-            scn.gpu = GpuSpec::a100_80g();
-            let row = StrategyRow::measure(label, &scn, A100_HBM);
+    for (_fw, model, rows) in report.strategy_rows() {
+        for row in &rows {
             json_rows.push(Json::obj(vec![
-                ("model", Json::str(arch_name)),
-                ("strategy", Json::str(label)),
+                ("model", Json::str(model.clone())),
+                ("strategy", Json::str(row.strategy.clone())),
                 ("reserved", Json::from(row.original.peak_reserved)),
                 ("frag", Json::from(row.original.frag)),
                 ("allocated", Json::from(row.original.peak_allocated)),
                 ("ec_reserved", Json::from(row.with_empty_cache.peak_reserved)),
                 ("ec_frag", Json::from(row.with_empty_cache.frag)),
             ]));
-            rows.push(row);
         }
-        println!("{}", render_rows(&format!("ColossalChat / {arch_name} (4xA100-80G)"), &rows));
+        println!(
+            "{}",
+            render_rows(&format!("ColossalChat / {model} (4xA100-80G)"), &rows)
+        );
     }
+    println!("({})", report.summary_line());
+
     if let Some(path) = args.flag("json") {
         let doc = Json::obj(vec![("table2", Json::Arr(json_rows))]);
         std::fs::write(path, doc.to_string_pretty()).map_err(|e| e.to_string())?;

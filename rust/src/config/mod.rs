@@ -117,12 +117,9 @@ impl ExperimentConfig {
             .unwrap_or(24)
             * GIB;
 
-        let mode = match j.get("mode").and_then(|v| v.as_str()).unwrap_or("full") {
-            "full" => ScenarioMode::Full,
-            "train_both" => ScenarioMode::TrainBothPrecollected,
-            "train_actor" => ScenarioMode::TrainActorOnly,
-            other => return Err(format!("unknown mode '{other}'")),
-        };
+        let mode_name = j.get("mode").and_then(|v| v.as_str()).unwrap_or("full");
+        let mode = ScenarioMode::by_name(mode_name)
+            .ok_or_else(|| format!("unknown mode '{mode_name}'"))?;
 
         let scenario = SimScenario {
             framework,

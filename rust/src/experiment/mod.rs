@@ -1,26 +1,19 @@
 //! Experiment runner: scenario → trace → allocator+profiler → summary.
-//! This is the API every bench, example and CLI subcommand calls.
+//! This is the API every bench, example and CLI subcommand calls — either
+//! directly for one-off runs, or through [`crate::sweep`] which shards many
+//! of these runs across a worker pool.
+//!
+//! Each run owns its whole pipeline: the profiler is a plain value passed
+//! to [`replay()`] as the phase/event sink, and the allocator logs events
+//! internally instead of holding a shared observer. Everything is `Send`,
+//! so `run_scenario` can execute on any worker thread with zero shared
+//! state between concurrent runs.
 
 use crate::alloc::CachingAllocator;
 use crate::profiler::{MemoryProfiler, ProfileSummary};
 use crate::rlhf::sim::{build_trace, SimScenario};
-use crate::trace::{replay, PhaseKind, PhaseSink, ReplayResult};
+use crate::trace::{replay, ReplayResult};
 use crate::util::bytes::GIB;
-use std::cell::RefCell;
-use std::rc::Rc;
-
-/// Adapter so an `Rc<RefCell<MemoryProfiler>>` can serve as both the
-/// allocator observer and the replay phase sink.
-pub struct ProfilerSink(pub Rc<RefCell<MemoryProfiler>>);
-
-impl PhaseSink for ProfilerSink {
-    fn on_phase(&mut self, p: PhaseKind, a: &CachingAllocator, c: f64) {
-        self.0.borrow_mut().on_phase(p, a, c);
-    }
-    fn on_step_end(&mut self, s: u64, a: &CachingAllocator, c: f64) {
-        self.0.borrow_mut().on_step_end(s, a, c);
-    }
-}
 
 /// Result of one profiled run.
 pub struct ExperimentResult {
@@ -45,22 +38,12 @@ pub fn run_scenario(scn: &SimScenario, capacity: u64) -> ExperimentResult {
 /// Run a pre-built trace (used by benches that sweep policies over the
 /// same workload).
 pub fn run_trace(trace: &crate::trace::Trace, capacity: u64) -> ExperimentResult {
-    let prof = Rc::new(RefCell::new(MemoryProfiler::new()));
+    let mut profiler = MemoryProfiler::new();
     let mut alloc = CachingAllocator::with_default_config(capacity);
-    alloc.set_observer(prof.clone());
-    let replay_res = {
-        let mut sink = ProfilerSink(prof.clone());
-        replay(trace, &mut alloc, &mut sink)
-    };
+    let replay_res = replay(trace, &mut alloc, &mut profiler);
     debug_assert!(alloc.validate().is_ok(), "{:?}", alloc.validate());
     let final_reserved = alloc.reserved();
     let final_allocated = alloc.allocated();
-    // Detach the observer by dropping the allocator; unwrap the profiler.
-    alloc.clear_observer();
-    let profiler = Rc::try_unwrap(prof)
-        .ok()
-        .expect("profiler still shared")
-        .into_inner();
     let summary = ProfileSummary::collect(&profiler, &alloc, &replay_res);
     ExperimentResult {
         summary,
@@ -76,6 +59,12 @@ mod tests {
     use super::*;
     use crate::policy::EmptyCachePolicy;
     use crate::strategies::StrategyConfig;
+
+    #[test]
+    fn experiment_result_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<ExperimentResult>();
+    }
 
     #[test]
     fn deepspeed_none_row_runs() {

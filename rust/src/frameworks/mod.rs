@@ -21,8 +21,10 @@ impl FrameworkKind {
         }
     }
 
+    /// Case-insensitive lookup; accepts the short CLI forms (`ds`, `cc`)
+    /// and the display names (`DeepSpeed-Chat`, `ColossalChat`).
     pub fn by_name(s: &str) -> Option<Self> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "deepspeed-chat" | "deepspeed" | "ds" => Some(Self::DeepSpeedChat),
             "colossal-chat" | "colossalchat" | "colossal" | "cc" => Some(Self::ColossalChat),
             _ => None,
@@ -149,6 +151,10 @@ mod tests {
             FrameworkKind::by_name("colossalchat"),
             Some(FrameworkKind::ColossalChat)
         );
+        // Display names round-trip (what `table1 --framework` passes).
+        for kind in [FrameworkKind::DeepSpeedChat, FrameworkKind::ColossalChat] {
+            assert_eq!(FrameworkKind::by_name(kind.name()), Some(kind));
+        }
         assert_eq!(FrameworkKind::by_name("x"), None);
     }
 

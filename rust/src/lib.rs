@@ -12,9 +12,14 @@
 //!   ([`strategies`]), framework profiles ([`frameworks`]), the profiler
 //!   ([`profiler`]) and the paper's `empty_cache()` mitigation
 //!   ([`policy`]) — which regenerates every table and figure in the paper;
-//! * a **real-compute half** — a PJRT runtime ([`runtime`]) that loads
+//! * a **real-compute half** — a PJRT runtime (`runtime`, behind the
+//!   `pjrt` cargo feature since it needs the `xla` FFI crate) that loads
 //!   AOT-compiled JAX/Pallas artifacts and trains a small transformer with
 //!   real PPO end-to-end ([`rlhf`]), proving all layers compose.
+//!
+//! Both halves are driven through the [`experiment`] runner; the
+//! [`sweep`] engine shards many experiments across a worker pool, and is
+//! what regenerates every paper table N-core fast.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
@@ -28,8 +33,10 @@ pub mod mem;
 pub mod policy;
 pub mod profiler;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod rlhf;
 pub mod strategies;
+pub mod sweep;
 pub mod trace;
 pub mod util;

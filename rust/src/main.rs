@@ -19,7 +19,8 @@ SUBCOMMANDS:
   phases       §3.1 three-scenario comparison (full / train-both / actor-only)
   ablation     §3.3 empty_cache placement ablation
   overhead     §3.3 end-to-end time overhead of empty_cache
-  train        Real end-to-end PPO on a small model via PJRT artifacts
+  sweep        Run a user-defined scenario grid (see `sweep --help`)
+  train        Real end-to-end PPO via PJRT artifacts (needs --features pjrt)
   quickstart   Tiny profiled RLHF run (fast smoke)
   profile      Run a user-defined experiment from a JSON config
   gen-ablation Appendix-B generation() implementation comparison
@@ -28,6 +29,7 @@ SUBCOMMANDS:
 COMMON FLAGS:
   --steps N          PPO steps to simulate (default 3)
   --framework X      deepspeed-chat | colossalchat
+  --jobs N           sweep worker threads (default: all cores)
   --json FILE        also write machine-readable results
 ";
 
@@ -40,7 +42,8 @@ fn main() {
         Some("phases") => commands::phases::run(&args),
         Some("ablation") => commands::ablation::run(&args),
         Some("overhead") => commands::overhead::run(&args),
-        Some("train") => commands::train::run(&args),
+        Some("sweep") => commands::sweep::run(&args),
+        Some("train") => run_train(&args),
         Some("quickstart") => commands::quickstart::run(&args),
         Some("debug") => commands::debug::run(&args),
         Some("profile") => commands::profile::run(&args),
@@ -60,4 +63,17 @@ fn main() {
         1
     });
     std::process::exit(code);
+}
+
+#[cfg(feature = "pjrt")]
+fn run_train(args: &Args) -> Result<(), String> {
+    commands::train::run(args)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_train(_args: &Args) -> Result<(), String> {
+    Err("the 'train' subcommand needs the PJRT/XLA runtime: rebuild with \
+         `cargo build --features pjrt` (requires the xla crate and AOT \
+         artifacts; see DESIGN.md §2)"
+        .to_string())
 }

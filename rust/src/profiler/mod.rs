@@ -32,8 +32,11 @@ pub struct PhasePeak {
     pub visits: u64,
 }
 
-/// The profiler. Attach with [`CachingAllocator::set_observer`] (via
-/// `Rc<RefCell<...>>`) and as the replay's [`PhaseSink`].
+/// The profiler. Pass it to [`replay`](crate::trace::replay()) as the [`PhaseSink`]:
+/// replay drains the allocator's event log after every op and feeds it
+/// through [`PhaseSink::on_alloc_event`], so one owned profiler per run is
+/// all the plumbing there is (the profiler is `Send`, one per sweep
+/// worker).
 #[derive(Debug)]
 pub struct MemoryProfiler {
     pub timeline: Timeline,
@@ -122,6 +125,10 @@ impl AllocObserver for MemoryProfiler {
 }
 
 impl PhaseSink for MemoryProfiler {
+    fn on_alloc_event(&mut self, event: &AllocEvent, state: &StatSnapshot) {
+        self.on_event(event, state);
+    }
+
     fn on_phase(&mut self, phase: PhaseKind, alloc: &CachingAllocator, compute_us: f64) {
         self.compute_us = compute_us;
         self.current_phase = phase;
@@ -145,35 +152,16 @@ mod tests {
     use crate::alloc::CachingAllocator;
     use crate::trace::{replay, Tag, TraceBuilder};
     use crate::util::bytes::{GIB, MIB};
-    use std::cell::RefCell;
-    use std::rc::Rc;
 
     fn run_profiled(build: impl FnOnce(&mut TraceBuilder)) -> (MemoryProfiler, CachingAllocator) {
         let mut b = TraceBuilder::new();
         build(&mut b);
         let trace = b.finish();
-        let prof = Rc::new(RefCell::new(MemoryProfiler::new()));
+        let mut prof = MemoryProfiler::new();
         let mut alloc = CachingAllocator::with_default_config(4 * GIB);
-        alloc.set_observer(prof.clone());
-        {
-            let mut sink = ProfilerSink(prof.clone());
-            replay(&trace, &mut alloc, &mut sink);
-        }
+        replay(&trace, &mut alloc, &mut prof);
         alloc.validate().unwrap();
-        alloc.clear_observer();
-        let prof = Rc::try_unwrap(prof).ok().unwrap().into_inner();
         (prof, alloc)
-    }
-
-    /// Adapter: Rc<RefCell<MemoryProfiler>> as a PhaseSink.
-    pub struct ProfilerSink(pub Rc<RefCell<MemoryProfiler>>);
-    impl PhaseSink for ProfilerSink {
-        fn on_phase(&mut self, p: PhaseKind, a: &CachingAllocator, c: f64) {
-            self.0.borrow_mut().on_phase(p, a, c);
-        }
-        fn on_step_end(&mut self, s: u64, a: &CachingAllocator, c: f64) {
-            self.0.borrow_mut().on_step_end(s, a, c);
-        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod cost;
 pub mod models;
+#[cfg(feature = "pjrt")]
 pub mod real;
 pub mod sim;
 

@@ -38,6 +38,27 @@ pub enum ScenarioMode {
     TrainActorOnly,
 }
 
+impl ScenarioMode {
+    pub const ALL: [ScenarioMode; 3] = [
+        ScenarioMode::Full,
+        ScenarioMode::TrainBothPrecollected,
+        ScenarioMode::TrainActorOnly,
+    ];
+
+    /// Stable name used in sweep-cell keys, JSON reports and configs.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioMode::Full => "full",
+            ScenarioMode::TrainBothPrecollected => "train_both",
+            ScenarioMode::TrainActorOnly => "train_actor",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|m| m.name() == s)
+    }
+}
+
 /// One simulated experiment (a row of Table 1 / Table 2).
 #[derive(Debug, Clone)]
 pub struct SimScenario {

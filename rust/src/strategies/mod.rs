@@ -110,6 +110,24 @@ impl StrategyConfig {
         ]
     }
 
+    /// Preset lookup by CLI short name: `none`, `zero1`, `zero2`, `zero3`,
+    /// `offload` (ZeRO-3 + CPU offload), `ckpt` (gradient checkpointing),
+    /// `all` (everything on). Returns the preset and its paper-row label.
+    pub fn by_name(name: &str) -> Option<(&'static str, StrategyConfig)> {
+        match name {
+            "none" => Some(("None", Self::none())),
+            "zero1" => Some(("ZeRO-1", Self::zero1())),
+            "zero2" => Some(("ZeRO-2", Self::zero2())),
+            "zero3" => Some(("ZeRO-3", Self::zero3())),
+            "offload" | "zero3_offload" => {
+                Some(("ZeRO-3 + CPU Offloading", Self::zero3_offload()))
+            }
+            "ckpt" | "checkpointing" => Some(("Gradient Checkpointing", Self::checkpointing())),
+            "all" => Some(("All Enabled", Self::all_enabled())),
+            _ => None,
+        }
+    }
+
     pub fn label(&self) -> String {
         let mut parts = Vec::new();
         match self.zero {
@@ -151,6 +169,19 @@ mod tests {
         assert_eq!(ds[6].0, "All Enabled");
         let cc = StrategyConfig::table1_colossal_rows();
         assert!(cc.iter().all(|(n, _)| *n != "ZeRO-1"), "ColossalChat has no ZeRO-1");
+    }
+
+    #[test]
+    fn by_name_covers_every_table1_row() {
+        for (label, strat) in StrategyConfig::table1_deepspeed_rows() {
+            let found = [
+                "none", "zero1", "zero2", "zero3", "offload", "ckpt", "all",
+            ]
+            .iter()
+            .find_map(|n| StrategyConfig::by_name(n).filter(|(l, _)| *l == label));
+            assert_eq!(found.map(|(_, s)| s), Some(strat), "{label}");
+        }
+        assert!(StrategyConfig::by_name("bogus").is_none());
     }
 
     #[test]

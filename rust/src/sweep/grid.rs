@@ -1,0 +1,418 @@
+//! Grid construction: enumerate framework × model-set × strategy ×
+//! scenario-mode × `empty_cache`-policy combinations into a flat list of
+//! [`SweepCell`]s with deterministic per-cell seeds.
+
+use crate::experiment::RTX3090_HBM;
+use crate::frameworks::{FrameworkKind, FrameworkProfile};
+use crate::policy::EmptyCachePolicy;
+use crate::rlhf::cost::GpuSpec;
+use crate::rlhf::models::RlhfModelSet;
+use crate::rlhf::sim::{ScenarioMode, SimScenario};
+use crate::strategies::StrategyConfig;
+use std::sync::Arc;
+
+/// How the grid assigns the response-length-sampling seed to each cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeedPolicy {
+    /// Every cell uses the same seed — what the paper presets do, so a
+    /// grid run reproduces the serial Table-1/2 numbers exactly.
+    Fixed(u64),
+    /// Each cell derives a distinct seed from the base and its key, stable
+    /// across runs and independent of worker scheduling.
+    PerCell(u64),
+}
+
+/// One fully-resolved experiment of a sweep: everything a worker needs to
+/// run it, plus the labels the report prints.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// `framework/model/strategy/mode/policy` — the stable identity used
+    /// by filters, seeds and reports.
+    pub key: String,
+    pub framework: String,
+    pub model: String,
+    pub strategy: String,
+    pub mode: ScenarioMode,
+    pub policy: EmptyCachePolicy,
+    pub scenario: SimScenario,
+    /// Device capacity in bytes for this cell's simulated GPU.
+    pub capacity: u64,
+}
+
+type Customizer = Arc<dyn Fn(&mut SimScenario) + Send + Sync>;
+
+/// Builder for a sweep: configure axes, filters and per-cell seeding, then
+/// [`SweepGrid::build`] the cartesian product into [`SweepCell`]s.
+///
+/// Defaults mirror the paper's RTX-3090 testbed: DeepSpeed-Chat, the
+/// OPT-1.3b/350m model pair, strategy "None", policy `Never`, the full
+/// pipeline, 3 PPO steps on a world of 4, 24 GiB capacity, and the
+/// presets' fixed seed `0x5EED`.
+#[derive(Clone)]
+pub struct SweepGrid {
+    frameworks: Vec<FrameworkKind>,
+    model_sets: Vec<(String, RlhfModelSet)>,
+    strategies: Vec<(String, StrategyConfig)>,
+    policies: Vec<EmptyCachePolicy>,
+    modes: Vec<ScenarioMode>,
+    steps: u64,
+    world: u64,
+    capacity: u64,
+    gpu: GpuSpec,
+    seed: SeedPolicy,
+    include: Vec<String>,
+    exclude: Vec<String>,
+    customize: Option<Customizer>,
+    extra: Vec<SweepCell>,
+    skip_unsupported: bool,
+}
+
+impl Default for SweepGrid {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepGrid {
+    pub fn new() -> SweepGrid {
+        SweepGrid {
+            frameworks: vec![FrameworkKind::DeepSpeedChat],
+            model_sets: vec![("OPT".to_string(), RlhfModelSet::opt())],
+            strategies: vec![("None".to_string(), StrategyConfig::none())],
+            policies: vec![EmptyCachePolicy::Never],
+            modes: vec![ScenarioMode::Full],
+            steps: 3,
+            world: 4,
+            capacity: RTX3090_HBM,
+            gpu: GpuSpec::rtx3090(),
+            seed: SeedPolicy::Fixed(0x5EED),
+            include: Vec::new(),
+            exclude: Vec::new(),
+            customize: None,
+            extra: Vec::new(),
+            skip_unsupported: true,
+        }
+    }
+
+    pub fn frameworks(mut self, fws: impl IntoIterator<Item = FrameworkKind>) -> Self {
+        self.frameworks = fws.into_iter().collect();
+        self
+    }
+
+    /// Model pairs with display labels, e.g. `("OPT", RlhfModelSet::opt())`.
+    pub fn model_sets(
+        mut self,
+        sets: impl IntoIterator<Item = (impl Into<String>, RlhfModelSet)>,
+    ) -> Self {
+        self.model_sets = sets.into_iter().map(|(l, m)| (l.into(), m)).collect();
+        self
+    }
+
+    /// Strategy rows with display labels, in paper-table order.
+    pub fn strategies(
+        mut self,
+        rows: impl IntoIterator<Item = (impl Into<String>, StrategyConfig)>,
+    ) -> Self {
+        self.strategies = rows.into_iter().map(|(l, s)| (l.into(), s)).collect();
+        self
+    }
+
+    pub fn policies(mut self, ps: impl IntoIterator<Item = EmptyCachePolicy>) -> Self {
+        self.policies = ps.into_iter().collect();
+        self
+    }
+
+    pub fn modes(mut self, ms: impl IntoIterator<Item = ScenarioMode>) -> Self {
+        self.modes = ms.into_iter().collect();
+        self
+    }
+
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn world(mut self, world: u64) -> Self {
+        self.world = world;
+        self
+    }
+
+    /// Simulated device capacity in bytes (e.g. [`crate::experiment::A100_HBM`]).
+    pub fn capacity(mut self, bytes: u64) -> Self {
+        self.capacity = bytes;
+        self
+    }
+
+    pub fn gpu(mut self, gpu: GpuSpec) -> Self {
+        self.gpu = gpu;
+        self
+    }
+
+    pub fn seeds(mut self, policy: SeedPolicy) -> Self {
+        self.seed = policy;
+        self
+    }
+
+    /// Keep only cells whose key contains any of these substrings.
+    pub fn include(mut self, pat: impl Into<String>) -> Self {
+        self.include.push(pat.into());
+        self
+    }
+
+    /// Drop cells whose key contains any of these substrings.
+    pub fn exclude(mut self, pat: impl Into<String>) -> Self {
+        self.exclude.push(pat.into());
+        self
+    }
+
+    /// Post-process every cell's scenario (e.g. Table 2's longer
+    /// sequences). Runs after the cell is materialized; filters act on
+    /// the cell key, which is already fixed at that point.
+    pub fn customize(mut self, f: impl Fn(&mut SimScenario) + Send + Sync + 'static) -> Self {
+        self.customize = Some(Arc::new(f));
+        self
+    }
+
+    /// Error (instead of silently skipping) when a framework does not
+    /// support a strategy in the grid.
+    pub fn strict(mut self) -> Self {
+        self.skip_unsupported = false;
+        self
+    }
+
+    /// Append one explicit cell outside the cartesian axes (e.g. the
+    /// Appendix-B `generation()` variants). The scenario is taken as-is;
+    /// the key is derived from the labels plus the scenario's mode/policy,
+    /// and the cell runs at the grid's [`Self::capacity`] (resolved at
+    /// [`Self::build`] time, so setter order doesn't matter).
+    pub fn push_scenario(
+        mut self,
+        framework: impl Into<String>,
+        model: impl Into<String>,
+        strategy: impl Into<String>,
+        scenario: SimScenario,
+    ) -> Self {
+        let (framework, model, strategy) = (framework.into(), model.into(), strategy.into());
+        let key = format!(
+            "{}/{}/{}/{}/{}",
+            framework,
+            model,
+            strategy,
+            scenario.mode.name(),
+            scenario.policy.name()
+        );
+        self.extra.push(SweepCell {
+            key,
+            framework,
+            model,
+            strategy,
+            mode: scenario.mode,
+            policy: scenario.policy,
+            capacity: self.capacity,
+            scenario,
+        });
+        self
+    }
+
+    fn passes_filters(&self, key: &str) -> bool {
+        if !self.include.is_empty() && !self.include.iter().any(|p| key.contains(p.as_str())) {
+            return false;
+        }
+        !self.exclude.iter().any(|p| key.contains(p.as_str()))
+    }
+
+    /// Enumerate the grid into cells (framework → model → strategy → mode
+    /// → policy order, then explicit [`Self::push_scenario`] cells).
+    pub fn build(&self) -> Result<Vec<SweepCell>, String> {
+        let mut cells: Vec<SweepCell> = Vec::new();
+        for kind in &self.frameworks {
+            let profile = FrameworkProfile::by_kind(*kind);
+            for (mlabel, models) in &self.model_sets {
+                for (slabel, strategy) in &self.strategies {
+                    if !profile.supports(strategy) {
+                        if self.skip_unsupported {
+                            continue;
+                        }
+                        return Err(format!(
+                            "{} does not support strategy '{slabel}'",
+                            kind.name()
+                        ));
+                    }
+                    for mode in &self.modes {
+                        for policy in &self.policies {
+                            let key = format!(
+                                "{}/{}/{}/{}/{}",
+                                kind.name(),
+                                mlabel,
+                                slabel,
+                                mode.name(),
+                                policy.name()
+                            );
+                            if !self.passes_filters(&key) {
+                                continue;
+                            }
+                            let mut scenario = SimScenario {
+                                framework: profile.clone(),
+                                models: models.clone(),
+                                strategy: *strategy,
+                                world: self.world,
+                                policy: *policy,
+                                steps: self.steps,
+                                mode: *mode,
+                                gpu: self.gpu,
+                                seed: match self.seed {
+                                    SeedPolicy::Fixed(s) => s,
+                                    SeedPolicy::PerCell(base) => derive_seed(base, &key),
+                                },
+                                len_jitter: *kind == FrameworkKind::ColossalChat,
+                            };
+                            if let Some(f) = &self.customize {
+                                f(&mut scenario);
+                            }
+                            cells.push(SweepCell {
+                                key,
+                                framework: kind.name().to_string(),
+                                model: mlabel.clone(),
+                                strategy: slabel.clone(),
+                                mode: *mode,
+                                policy: *policy,
+                                scenario,
+                                capacity: self.capacity,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        cells.extend(
+            self.extra
+                .iter()
+                .filter(|c| self.passes_filters(&c.key))
+                .map(|c| SweepCell {
+                    capacity: self.capacity,
+                    ..c.clone()
+                }),
+        );
+        Ok(cells)
+    }
+}
+
+/// A named model set for CLI use: `opt` (OPT-1.3b policy / 350m value),
+/// `gpt2` (GPT-2-XL / medium), `nano` (the real-compute test pair).
+pub fn model_set_by_name(name: &str) -> Option<(String, RlhfModelSet)> {
+    match name {
+        "opt" => Some(("OPT".to_string(), RlhfModelSet::opt())),
+        "gpt2" | "gpt-2" => Some(("GPT-2".to_string(), RlhfModelSet::gpt2())),
+        "nano" => Some(("nano".to_string(), RlhfModelSet::nano())),
+        _ => None,
+    }
+}
+
+/// Derive a per-cell seed: mix the base with a hash of the cell key
+/// through a SplitMix64 finalizer. Stable across runs and platforms;
+/// independent of enumeration or scheduling order.
+fn derive_seed(base: u64, key: &str) -> u64 {
+    use std::hash::Hasher;
+    let mut h = crate::util::fasthash::FastHasher::default();
+    h.write(key.as_bytes());
+    let mut z = (base ^ h.finish()).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_count_and_order() {
+        let grid = SweepGrid::new()
+            .strategies([
+                ("None", StrategyConfig::none()),
+                ("ZeRO-3", StrategyConfig::zero3()),
+            ])
+            .policies([EmptyCachePolicy::Never, EmptyCachePolicy::AfterBoth]);
+        let cells = grid.build().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].key, "DeepSpeed-Chat/OPT/None/full/never");
+        assert_eq!(cells[1].key, "DeepSpeed-Chat/OPT/None/full/after_both");
+        assert_eq!(cells[3].key, "DeepSpeed-Chat/OPT/ZeRO-3/full/after_both");
+        // Presets reproduced: fixed seed, jitter off for DeepSpeed.
+        assert_eq!(cells[0].scenario.seed, 0x5EED);
+        assert!(!cells[0].scenario.len_jitter);
+    }
+
+    #[test]
+    fn colossal_skips_zero1_unless_strict() {
+        let grid = SweepGrid::new()
+            .frameworks([FrameworkKind::ColossalChat])
+            .strategies([
+                ("ZeRO-1", StrategyConfig::zero1()),
+                ("ZeRO-3", StrategyConfig::zero3()),
+            ]);
+        let cells = grid.build().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert!(cells[0].key.contains("ZeRO-3"));
+        assert!(cells[0].scenario.len_jitter, "colossal presets jitter");
+        assert!(grid.clone().strict().build().is_err());
+    }
+
+    #[test]
+    fn include_exclude_filter_keys() {
+        let grid = SweepGrid::new()
+            .strategies([
+                ("None", StrategyConfig::none()),
+                ("ZeRO-2", StrategyConfig::zero2()),
+                ("ZeRO-3", StrategyConfig::zero3()),
+            ])
+            .include("ZeRO")
+            .exclude("ZeRO-2");
+        let cells = grid.build().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert!(cells[0].key.contains("ZeRO-3"));
+    }
+
+    #[test]
+    fn per_cell_seeds_are_stable_and_distinct() {
+        let grid = SweepGrid::new()
+            .strategies([
+                ("None", StrategyConfig::none()),
+                ("ZeRO-3", StrategyConfig::zero3()),
+            ])
+            .seeds(SeedPolicy::PerCell(42));
+        let a = grid.build().unwrap();
+        let b = grid.build().unwrap();
+        let seeds: Vec<u64> = a.iter().map(|c| c.scenario.seed).collect();
+        assert_eq!(seeds, b.iter().map(|c| c.scenario.seed).collect::<Vec<_>>());
+        assert_ne!(seeds[0], seeds[1], "distinct keys get distinct seeds");
+    }
+
+    #[test]
+    fn customize_applies_to_every_cell() {
+        let cells = SweepGrid::new()
+            .customize(|scn| scn.framework.prompt_len = 64)
+            .build()
+            .unwrap();
+        assert!(cells.iter().all(|c| c.scenario.framework.prompt_len == 64));
+    }
+
+    #[test]
+    fn push_scenario_appends_custom_cell() {
+        let scn = SimScenario::colossal_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        let cells = SweepGrid::new()
+            .strategies([("None", StrategyConfig::none())])
+            .push_scenario("ColossalChat", "OPT", "custom-gen", scn)
+            .build()
+            .unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[1].key, "ColossalChat/OPT/custom-gen/full/never");
+    }
+
+    #[test]
+    fn model_sets_by_name() {
+        assert!(model_set_by_name("opt").is_some());
+        assert!(model_set_by_name("gpt2").is_some());
+        assert!(model_set_by_name("nope").is_none());
+    }
+}

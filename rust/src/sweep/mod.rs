@@ -1,0 +1,55 @@
+//! Parallel experiment sweep engine.
+//!
+//! The paper's contribution *is* a sweep — memory behaviour across
+//! frameworks × strategies × models × `empty_cache` policies (Tables 1–2,
+//! Figure 1) — so the experiment layer exposes exactly that shape:
+//!
+//! * [`SweepGrid`] enumerates the cartesian product of the axes (with
+//!   include/exclude filters, per-cell deterministic seeds, and a
+//!   `customize` hook for off-grid tweaks) into [`SweepCell`]s;
+//! * [`SweepRunner`] shards the cells across a pool of worker threads —
+//!   each worker owns its own allocator + profiler, so per-cell numbers
+//!   are bit-identical whatever `--jobs` is;
+//! * [`SweepReport`] aggregates: deterministic JSON-lines, a generic
+//!   [`crate::report::table::TextTable`], and the paper's
+//!   framework/model-blocked [`crate::report::paper::StrategyRow`] layout.
+//!
+//! Every paper command (`table1`, `table2`, `figure1`, `ablation`,
+//! `gen-ablation`) is a thin grid definition over this engine, and the
+//! `sweep` subcommand exposes user-defined grids from the CLI.
+//!
+//! # Example: a 2×2 grid, run on two workers
+//!
+//! ```
+//! use rlhf_mem::policy::EmptyCachePolicy;
+//! use rlhf_mem::strategies::StrategyConfig;
+//! use rlhf_mem::sweep::{SweepGrid, SweepRunner};
+//!
+//! let cells = SweepGrid::new() // defaults: DeepSpeed-Chat / OPT / 24 GiB
+//!     .strategies([
+//!         ("None", StrategyConfig::none()),
+//!         ("ZeRO-3", StrategyConfig::zero3()),
+//!     ])
+//!     .policies([EmptyCachePolicy::Never, EmptyCachePolicy::AfterBoth])
+//!     .steps(1)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(cells.len(), 4); // 2 strategies × 2 policies
+//!
+//! let report = SweepRunner::new(2).run(cells);
+//! assert_eq!(report.cells.len(), 4);
+//! // Paper-shaped rows: the after_both cells fill the empty_cache half.
+//! let blocks = report.strategy_rows();
+//! let rows = &blocks[0].2;
+//! assert_eq!(rows.len(), 2);
+//! assert!(rows[0].with_empty_cache.empty_cache_calls > 0);
+//! ```
+
+pub mod grid;
+pub mod presets;
+pub mod report;
+pub mod runner;
+
+pub use grid::{model_set_by_name, SeedPolicy, SweepCell, SweepGrid};
+pub use report::SweepReport;
+pub use runner::{CellResult, SweepRunner};

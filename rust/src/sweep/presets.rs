@@ -1,0 +1,109 @@
+//! The paper's canonical grids, shared by the CLI commands and the bench
+//! harnesses so a row added to a table exists in exactly one place.
+
+use super::grid::{SweepCell, SweepGrid};
+use crate::experiment::A100_HBM;
+use crate::frameworks::FrameworkKind;
+use crate::mem::ModelArch;
+use crate::policy::EmptyCachePolicy;
+use crate::rlhf::cost::GpuSpec;
+use crate::rlhf::models::RlhfModelSet;
+use crate::strategies::StrategyConfig;
+
+/// Table 1's three framework/model blocks (each row measured with and
+/// without `empty_cache()`), as one flat cell list.
+pub fn table1_cells(steps: u64) -> Result<Vec<SweepCell>, String> {
+    let blocks: [(FrameworkKind, &str, RlhfModelSet, Vec<(&str, StrategyConfig)>); 3] = [
+        (
+            FrameworkKind::DeepSpeedChat,
+            "OPT",
+            RlhfModelSet::opt(),
+            StrategyConfig::table1_deepspeed_rows(),
+        ),
+        (
+            FrameworkKind::ColossalChat,
+            "OPT",
+            RlhfModelSet::opt(),
+            StrategyConfig::table1_colossal_rows(),
+        ),
+        (
+            FrameworkKind::ColossalChat,
+            "GPT-2",
+            RlhfModelSet::gpt2(),
+            StrategyConfig::table1_colossal_rows(),
+        ),
+    ];
+    let mut cells = Vec::new();
+    for (kind, model, models, rows) in blocks {
+        cells.extend(
+            SweepGrid::new()
+                .frameworks([kind])
+                .model_sets([(model, models)])
+                .strategies(rows)
+                .policies([EmptyCachePolicy::Never, EmptyCachePolicy::AfterBoth])
+                .steps(steps)
+                .build()?,
+        );
+    }
+    Ok(cells)
+}
+
+/// Table 2's grid: None vs ZeRO-3 on a 4×A100-80G node for OPT-1.3b,
+/// OPT-6.7b and Llama-2-7b, each paired with the OPT-350m scorer, under
+/// the A100-scale workload (longer sequences, larger rollout than the
+/// 24 GiB box).
+pub fn table2_cells(steps: u64) -> Result<Vec<SweepCell>, String> {
+    let mut cells = Vec::new();
+    for arch_name in ["opt-1.3b", "opt-6.7b", "llama-2-7b"] {
+        let arch = ModelArch::by_name(arch_name).expect("table2 preset arch");
+        let models = RlhfModelSet {
+            policy_arch: arch,
+            value_arch: ModelArch::opt_350m(),
+        };
+        cells.extend(
+            SweepGrid::new()
+                .frameworks([FrameworkKind::ColossalChat])
+                .model_sets([(arch_name, models)])
+                .strategies([
+                    ("None", StrategyConfig::none()),
+                    ("ZeRO-3", StrategyConfig::zero3()),
+                ])
+                .policies([EmptyCachePolicy::Never, EmptyCachePolicy::AfterBoth])
+                .steps(steps)
+                .capacity(A100_HBM)
+                .gpu(GpuSpec::a100_80g())
+                .customize(|scn| {
+                    scn.framework.prompt_len = 256;
+                    scn.framework.gen_len = 256;
+                    scn.framework.rollout_batch = 64;
+                    scn.framework.infer_micro_batch = 8;
+                    scn.framework.train_micro_batch = 4;
+                })
+                .build()?,
+        );
+    }
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_grid_shape() {
+        let cells = table1_cells(1).unwrap();
+        // (7 DS rows + 5 CC rows + 5 CC/GPT-2 rows) × 2 policies.
+        assert_eq!(cells.len(), 34);
+        assert!(cells[0].key.starts_with("DeepSpeed-Chat/OPT/None"));
+        assert!(cells.iter().all(|c| c.scenario.steps == 1));
+    }
+
+    #[test]
+    fn table2_grid_shape() {
+        let cells = table2_cells(2).unwrap();
+        // 3 models × 2 strategies × 2 policies.
+        assert_eq!(cells.len(), 12);
+        assert!(cells.iter().all(|c| c.capacity == A100_HBM));
+        assert!(cells.iter().all(|c| c.scenario.framework.rollout_batch == 64));
+    }
+}

@@ -1,0 +1,164 @@
+//! Sweep aggregation: JSON-lines dumps, a generic cell table, and the
+//! paper-shaped [`StrategyRow`] grouping that `table1`/`table2` render.
+
+use super::runner::CellResult;
+use crate::report::paper::StrategyRow;
+use crate::report::table::TextTable;
+use crate::util::bytes::fmt_gib_paper;
+
+/// All cell results of one sweep, in input (grid enumeration) order.
+pub struct SweepReport {
+    pub cells: Vec<CellResult>,
+    /// Wall-clock of the whole sweep, seconds.
+    pub wall_seconds: f64,
+    /// Worker count the sweep actually used.
+    pub jobs: usize,
+}
+
+impl SweepReport {
+    /// Deterministic JSON-lines dump: one line per cell, index order.
+    /// Byte-identical for the same grid whatever `jobs` was.
+    pub fn jsonl(&self) -> String {
+        let mut out = String::new();
+        for c in &self.cells {
+            out.push_str(&c.jsonl_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Generic aggregated table (GiB columns, [`TextTable`]-compatible):
+    /// one row per cell.
+    pub fn to_table(&self) -> TextTable {
+        let mut t = TextTable::new(&[
+            "Cell",
+            "Reserved",
+            "Frag.",
+            "Allocated",
+            "Peak phase",
+            "EC calls",
+            "OOM",
+        ]);
+        for c in &self.cells {
+            let s = &c.summary;
+            t.row(vec![
+                c.key.clone(),
+                fmt_gib_paper(s.peak_reserved),
+                fmt_gib_paper(s.frag),
+                fmt_gib_paper(s.peak_allocated),
+                s.peak_phase.name().to_string(),
+                s.empty_cache_calls.to_string(),
+                if s.oom { "yes" } else { "" }.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Group cells into the paper's table layout: one block per
+    /// `(framework, model)` in first-seen order, one [`StrategyRow`] per
+    /// strategy (per scenario mode — non-`full` modes get the mode
+    /// appended to the row label so multi-mode grids don't collapse).
+    /// A cell with policy `never` fills the row's "original" half,
+    /// `after_both` the "+ empty_cache" half; a row missing one half
+    /// mirrors the other (so `never`-only grids still render).
+    pub fn strategy_rows(&self) -> Vec<(String, String, Vec<StrategyRow>)> {
+        let mut blocks: Vec<(String, String, Vec<StrategyRow>)> = Vec::new();
+        for cell in &self.cells {
+            let bi = match blocks
+                .iter()
+                .position(|(f, m, _)| *f == cell.framework && *m == cell.model)
+            {
+                Some(i) => i,
+                None => {
+                    blocks.push((cell.framework.clone(), cell.model.clone(), Vec::new()));
+                    blocks.len() - 1
+                }
+            };
+            let row_label = if cell.mode == "full" {
+                cell.strategy.clone()
+            } else {
+                format!("{} [{}]", cell.strategy, cell.mode)
+            };
+            let rows = &mut blocks[bi].2;
+            let ri = match rows.iter().position(|r| r.strategy == row_label) {
+                Some(i) => i,
+                None => {
+                    rows.push(StrategyRow {
+                        strategy: row_label,
+                        original: cell.summary.clone(),
+                        with_empty_cache: cell.summary.clone(),
+                    });
+                    rows.len() - 1
+                }
+            };
+            match cell.policy {
+                "never" => rows[ri].original = cell.summary.clone(),
+                "after_both" => rows[ri].with_empty_cache = cell.summary.clone(),
+                // Other placements don't map onto the two-column layout;
+                // they still seeded the row when it was created above.
+                _ => {}
+            }
+        }
+        blocks
+    }
+
+    /// Look a cell up by its grid key.
+    pub fn get(&self, key: &str) -> Option<&CellResult> {
+        self.cells.iter().find(|c| c.key == key)
+    }
+
+    /// One-line run summary for CLI output.
+    pub fn summary_line(&self) -> String {
+        let ooms = self.cells.iter().filter(|c| c.summary.oom).count();
+        format!(
+            "{} cells in {:.2}s on {} worker{} ({} OOM)",
+            self.cells.len(),
+            self.wall_seconds,
+            self.jobs,
+            if self.jobs == 1 { "" } else { "s" },
+            ooms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+    use crate::sweep::{SweepGrid, SweepRunner};
+
+    #[test]
+    fn strategy_rows_pair_policies_per_block() {
+        let cells = SweepGrid::new()
+            .strategies([
+                ("None", StrategyConfig::none()),
+                ("ZeRO-3", StrategyConfig::zero3()),
+            ])
+            .policies([EmptyCachePolicy::Never, EmptyCachePolicy::AfterBoth])
+            .steps(1)
+            .build()
+            .unwrap();
+        let report = SweepRunner::new(2).run(cells);
+        let blocks = report.strategy_rows();
+        assert_eq!(blocks.len(), 1);
+        let (fw, model, rows) = &blocks[0];
+        assert_eq!(fw, "DeepSpeed-Chat");
+        assert_eq!(model, "OPT");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].strategy, "None");
+        // The paired halves are distinct runs: empty_cache fired only in
+        // the after_both half.
+        assert_eq!(rows[0].original.empty_cache_calls, 0);
+        assert!(rows[0].with_empty_cache.empty_cache_calls > 0);
+    }
+
+    #[test]
+    fn table_and_jsonl_cover_every_cell() {
+        let cells = SweepGrid::new().steps(1).build().unwrap();
+        let report = SweepRunner::new(1).run(cells);
+        assert_eq!(report.to_table().rows.len(), report.cells.len());
+        assert_eq!(report.jsonl().lines().count(), report.cells.len());
+        assert!(report.get("DeepSpeed-Chat/OPT/None/full/never").is_some());
+        assert!(report.summary_line().contains("1 cell"));
+    }
+}

@@ -1,0 +1,242 @@
+//! Worker-pool execution of a sweep.
+//!
+//! Each worker thread pulls cell indices off a shared atomic counter and
+//! runs the whole pipeline for that cell — trace build, its *own*
+//! [`crate::alloc::CachingAllocator`] and [`MemoryProfiler`] — so there is
+//! no shared mutable state between cells and the per-cell numbers are
+//! bit-identical whatever `jobs` is. Only the optional JSON-lines stream
+//! and the result slots sit behind mutexes.
+
+use super::grid::SweepCell;
+use super::report::SweepReport;
+use crate::experiment::{run_scenario, ExperimentResult};
+use crate::profiler::{MemoryProfiler, ProfileSummary};
+use crate::util::json::Json;
+use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The outcome of one cell: its identity labels plus the profile summary
+/// (and, when [`SweepRunner::capture_profiles`] is on, the full profiler
+/// with timeline and per-phase peaks).
+#[derive(Debug)]
+pub struct CellResult {
+    /// Position of the cell in the input list (stable across `jobs`).
+    pub index: usize,
+    pub key: String,
+    pub framework: String,
+    pub model: String,
+    pub strategy: String,
+    pub mode: &'static str,
+    pub policy: &'static str,
+    pub seed: u64,
+    pub summary: ProfileSummary,
+    pub profiler: Option<MemoryProfiler>,
+}
+
+impl CellResult {
+    /// The cell's JSON object (a pure function of the summary, so the
+    /// line is byte-identical regardless of worker count or scheduling).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::from(self.index)),
+            ("key", Json::str(self.key.clone())),
+            ("framework", Json::str(self.framework.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            ("mode", Json::str(self.mode)),
+            ("policy", Json::str(self.policy)),
+            ("seed", Json::from(self.seed)),
+            ("reserved", Json::from(self.summary.peak_reserved)),
+            ("frag", Json::from(self.summary.frag)),
+            ("allocated", Json::from(self.summary.peak_allocated)),
+            ("frag_at_peak", Json::from(self.summary.frag_at_peak)),
+            ("peak_phase", Json::str(self.summary.peak_phase.name())),
+            ("empty_cache_calls", Json::from(self.summary.empty_cache_calls)),
+            ("cuda_mallocs", Json::from(self.summary.cuda_mallocs)),
+            ("total_time_us", Json::from(self.summary.total_time_us)),
+            ("oom", Json::from(self.summary.oom)),
+        ])
+    }
+
+    /// One JSON-lines record (no trailing newline).
+    pub fn jsonl_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// Shards sweep cells across a pool of `jobs` worker threads.
+pub struct SweepRunner {
+    jobs: usize,
+    capture_profiles: bool,
+    stream: Option<Box<dyn Write + Send>>,
+}
+
+impl SweepRunner {
+    /// A runner with `jobs` worker threads (clamped to ≥ 1).
+    pub fn new(jobs: usize) -> SweepRunner {
+        SweepRunner {
+            jobs: jobs.max(1),
+            capture_profiles: false,
+            stream: None,
+        }
+    }
+
+    /// Number of workers to default to on this machine.
+    pub fn default_jobs() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    /// Keep each cell's full [`MemoryProfiler`] (timeline, phase peaks,
+    /// frag samples) in its [`CellResult`]. Off by default — summaries are
+    /// two orders of magnitude smaller.
+    pub fn capture_profiles(mut self, on: bool) -> Self {
+        self.capture_profiles = on;
+        self
+    }
+
+    /// Stream each cell's JSON line to `w` as it completes. Lines appear
+    /// in *completion* order (nondeterministic with `jobs > 1`); use
+    /// [`SweepReport::jsonl`] for the deterministic, index-ordered dump.
+    pub fn stream_jsonl(mut self, w: Box<dyn Write + Send>) -> Self {
+        self.stream = Some(w);
+        self
+    }
+
+    /// Run every cell and aggregate the report (cells in input order).
+    pub fn run(self, cells: Vec<SweepCell>) -> SweepReport {
+        let started = Instant::now();
+        let n = cells.len();
+        let jobs = self.jobs.min(n.max(1));
+        let capture = self.capture_profiles;
+        let stream = self.stream.map(Mutex::new);
+
+        let mut slots: Vec<Option<CellResult>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let slots = Mutex::new(slots);
+        let next = AtomicUsize::new(0);
+
+        let work = |cursor: &AtomicUsize| loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let result = run_cell(i, &cells[i], capture);
+            if let Some(w) = &stream {
+                let mut w = w.lock().unwrap();
+                let _ = writeln!(w, "{}", result.jsonl_line());
+            }
+            slots.lock().unwrap()[i] = Some(result);
+        };
+
+        if jobs <= 1 {
+            work(&next);
+        } else {
+            std::thread::scope(|s| {
+                for _ in 0..jobs {
+                    s.spawn(|| work(&next));
+                }
+            });
+        }
+
+        let cells_out: Vec<CellResult> = slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("every cell index was claimed by a worker"))
+            .collect();
+        SweepReport {
+            cells: cells_out,
+            wall_seconds: started.elapsed().as_secs_f64(),
+            jobs,
+        }
+    }
+}
+
+fn run_cell(index: usize, cell: &SweepCell, capture: bool) -> CellResult {
+    let ExperimentResult {
+        summary, profiler, ..
+    } = run_scenario(&cell.scenario, cell.capacity);
+    CellResult {
+        index,
+        key: cell.key.clone(),
+        framework: cell.framework.clone(),
+        model: cell.model.clone(),
+        strategy: cell.strategy.clone(),
+        mode: cell.mode.name(),
+        policy: cell.policy.name(),
+        seed: cell.scenario.seed,
+        summary,
+        profiler: if capture { Some(profiler) } else { None },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+    use crate::sweep::SweepGrid;
+
+    fn tiny_cells() -> Vec<SweepCell> {
+        SweepGrid::new()
+            .strategies([
+                ("None", StrategyConfig::none()),
+                ("ZeRO-3", StrategyConfig::zero3()),
+            ])
+            .policies([EmptyCachePolicy::Never, EmptyCachePolicy::AfterBoth])
+            .steps(1)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_byte_for_byte() {
+        let cells = tiny_cells();
+        let serial = SweepRunner::new(1).run(cells.clone());
+        let parallel = SweepRunner::new(4).run(cells);
+        assert_eq!(serial.jsonl(), parallel.jsonl());
+        assert_eq!(serial.cells.len(), 4);
+        // Results come back in input order regardless of scheduling.
+        for (i, c) in parallel.cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    #[test]
+    fn capture_profiles_keeps_timelines() {
+        let mut cells = tiny_cells();
+        cells.truncate(1);
+        let report = SweepRunner::new(1).capture_profiles(true).run(cells.clone());
+        let prof = report.cells[0].profiler.as_ref().expect("profiler kept");
+        assert!(prof.timeline.points().len() > 50);
+        let report = SweepRunner::new(1).run(cells);
+        assert!(report.cells[0].profiler.is_none());
+    }
+
+    #[test]
+    fn stream_receives_one_line_per_cell() {
+        use std::sync::Arc;
+        #[derive(Clone)]
+        struct Shared(Arc<Mutex<Vec<u8>>>);
+        impl Write for Shared {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Shared(Arc::new(Mutex::new(Vec::new())));
+        let report = SweepRunner::new(2)
+            .stream_jsonl(Box::new(buf.clone()))
+            .run(tiny_cells());
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        assert_eq!(text.lines().count(), report.cells.len());
+        assert!(text.lines().all(|l| l.starts_with('{')));
+    }
+}

@@ -1,7 +1,15 @@
 //! Replay a recorded trace through a [`CachingAllocator`].
+//!
+//! Replay owns the event plumbing: it switches the allocator's internal
+//! event log on, drains it after every op, and forwards each
+//! `(event, snapshot)` pair to the [`PhaseSink`] — so a sink (usually the
+//! profiler) sees the exact same stream the old shared-observer design
+//! delivered, but without any `Rc<RefCell<…>>` aliasing. Everything
+//! involved is `Send`, which is what lets the sweep engine run one replay
+//! per worker thread.
 
 use super::op::{PhaseKind, Trace, TraceOp};
-use crate::alloc::{AllocError, AllocId, CachingAllocator};
+use crate::alloc::{AllocError, AllocEvent, AllocId, CachingAllocator, StatSnapshot};
 use crate::util::fasthash::FastMap;
 
 /// Where/why a replay stopped early.
@@ -30,12 +38,17 @@ impl ReplayResult {
     }
 }
 
-/// Sink for phase transitions during replay (the profiler implements this
-/// to draw Figure 1's phase bands; tests use closures).
+/// Sink for replay observations: phase transitions (the profiler draws
+/// Figure 1's phase bands from them), step boundaries, and the allocator's
+/// event stream, which replay drains after every trace op.
 pub trait PhaseSink {
     fn on_phase(&mut self, phase: PhaseKind, alloc: &CachingAllocator, compute_us: f64);
     fn on_step_end(&mut self, step: u64, alloc: &CachingAllocator, compute_us: f64) {
         let _ = (step, alloc, compute_us);
+    }
+    /// One allocator event with the stats snapshot taken when it fired.
+    fn on_alloc_event(&mut self, event: &AllocEvent, state: &StatSnapshot) {
+        let _ = (event, state);
     }
 }
 
@@ -53,6 +66,8 @@ pub fn replay(trace: &Trace, alloc: &mut CachingAllocator, sink: &mut dyn PhaseS
     let mut compute_us = 0.0f64;
     let mut phase = PhaseKind::Init;
     let mut step = 0u64;
+    let mut scratch: Vec<(AllocEvent, StatSnapshot)> = Vec::new();
+    alloc.set_event_recording(true);
 
     for (i, op) in trace.ops.iter().enumerate() {
         match op {
@@ -61,6 +76,10 @@ pub fn replay(trace: &Trace, alloc: &mut CachingAllocator, sink: &mut dyn PhaseS
                     handles.insert(handle.0, id);
                 }
                 Err(e) => {
+                    // Forward the events of the failed op (OOM retries)
+                    // before surfacing the error.
+                    forward_events(alloc, sink, &mut scratch);
+                    alloc.set_event_recording(false);
                     return ReplayResult {
                         ops_executed: i,
                         compute_us,
@@ -96,12 +115,30 @@ pub fn replay(trace: &Trace, alloc: &mut CachingAllocator, sink: &mut dyn PhaseS
                 sink.on_step_end(*s, alloc, compute_us);
             }
         }
+        forward_events(alloc, sink, &mut scratch);
     }
+    // Leave the allocator as we found it: recording off, log empty —
+    // otherwise an allocator reused after replay would buffer events
+    // nobody drains.
+    alloc.set_event_recording(false);
     ReplayResult {
         ops_executed: trace.ops.len(),
         compute_us,
         steps_completed: step,
         oom: None,
+    }
+}
+
+/// Drain the allocator's buffered events into `scratch` and hand each one
+/// to the sink (the scratch vec is reused to avoid per-op allocation).
+fn forward_events(
+    alloc: &mut CachingAllocator,
+    sink: &mut dyn PhaseSink,
+    scratch: &mut Vec<(AllocEvent, StatSnapshot)>,
+) {
+    alloc.drain_events_into(scratch);
+    for (ev, snap) in scratch.drain(..) {
+        sink.on_alloc_event(&ev, &snap);
     }
 }
 
@@ -161,6 +198,31 @@ mod tests {
         let mut sink = Collect(Vec::new());
         replay(&trace, &mut alloc, &mut sink);
         assert_eq!(sink.0, vec![PhaseKind::Generation, PhaseKind::TrainActor]);
+    }
+
+    #[test]
+    fn alloc_events_forwarded_in_order() {
+        struct Collect(Vec<AllocEvent>);
+        impl PhaseSink for Collect {
+            fn on_phase(&mut self, _: PhaseKind, _: &CachingAllocator, _: f64) {}
+            fn on_alloc_event(&mut self, ev: &AllocEvent, _: &StatSnapshot) {
+                self.0.push(ev.clone());
+            }
+        }
+        let mut b = TraceBuilder::new();
+        b.phase(PhaseKind::Generation);
+        let h = b.alloc(5 * MIB, Tag::KvCache);
+        b.free(h);
+        b.empty_cache();
+        let trace = b.finish();
+        let mut alloc = CachingAllocator::with_default_config(GIB);
+        let mut sink = Collect(Vec::new());
+        replay(&trace, &mut alloc, &mut sink);
+        // CudaMalloc + Alloc, then Free, then CudaFree + EmptyCache.
+        assert!(matches!(sink.0[0], AllocEvent::CudaMalloc { .. }));
+        assert!(matches!(sink.0[1], AllocEvent::Alloc { .. }));
+        assert!(matches!(sink.0[2], AllocEvent::Free { .. }));
+        assert!(matches!(sink.0.last(), Some(AllocEvent::EmptyCache { .. })));
     }
 
     #[test]
