@@ -1,0 +1,56 @@
+//! Bench harness for the memory planner: one full `advise` search over
+//! the paper's RTX-3090 budget (every strategy × `empty_cache` placement
+//! × allocator-knob candidate), timed serially and on the worker pool —
+//! same shape as `benches/table1.rs`. Asserts the recommendation output
+//! is byte-identical whatever the job count (the planner's determinism
+//! contract).
+
+use rlhf_mem::bench::bench;
+use rlhf_mem::planner::{plan, Budget};
+use rlhf_mem::sweep::SweepRunner;
+
+fn main() {
+    let budget = Budget::from_json_text(include_str!("../examples/budget_rtx3090.json"))
+        .expect("example budget parses");
+    let candidates = rlhf_mem::planner::space::enumerate(&budget)
+        .expect("space enumerates")
+        .len();
+    let jobs = SweepRunner::default_jobs().min(8);
+    println!("advise search: {candidates} candidates, pool of {jobs} workers\n");
+
+    let mut serial = None;
+    let t1 = bench("advise --jobs 1", 0, 2, || {
+        serial = Some(plan(&budget, 1).expect("plan"));
+    });
+    println!("{}", t1.report());
+
+    let mut pooled = None;
+    let tn = bench(&format!("advise --jobs {jobs}"), 0, 2, || {
+        pooled = Some(plan(&budget, jobs).expect("plan"));
+    });
+    println!("{}", tn.report());
+    let speedup = t1.summary.median / tn.summary.median;
+    println!("parallel speedup: {speedup:.2}x on {jobs} workers\n");
+
+    let (serial, pooled) = (serial.unwrap(), pooled.unwrap());
+    assert_eq!(
+        serial.jsonl(),
+        pooled.jsonl(),
+        "recommendations must be byte-identical whatever the job count"
+    );
+    assert_eq!(
+        serial.best().map(|o| o.candidate.key()),
+        pooled.best().map(|o| o.candidate.key()),
+    );
+
+    println!("{}", pooled.to_table(10).render());
+    println!("== frontier ==\n{}", pooled.frontier_table().render());
+    if let Some(pct) = pooled.empty_cache_frontier_overhead() {
+        println!("empty_cache (stock allocator) on frontier at {pct:+.2}% overhead (paper: ~2%)");
+    } else if let Some(pct) = pooled.any_empty_cache_frontier_overhead() {
+        println!("cheapest empty_cache placement on frontier at {pct:+.2}% overhead");
+    }
+    println!(
+        "planner bench complete: {candidates} candidates, speedup {speedup:.2}x"
+    );
+}

@@ -19,7 +19,16 @@ use super::config::{AllocatorConfig, PoolKind};
 use super::driver::{DriverOom, SegmentId, SimDriver};
 use super::pool::BlockPool;
 use super::stats::{AllocEvent, AllocStats, PhaseTag, StatSnapshot};
+use crate::util::bytes::{round_down, round_up};
 use crate::util::fasthash::FastMap;
+
+/// Index of a pool in per-pool side tables (`[small, large]`).
+fn pool_idx(kind: PoolKind) -> usize {
+    match kind {
+        PoolKind::Small => 0,
+        PoolKind::Large => 1,
+    }
+}
 
 /// Opaque user handle to a live allocation (a "tensor").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -72,6 +81,16 @@ pub struct CachingAllocator {
     /// Head block of each live segment (offset 0; stable across split and
     /// coalesce because merges fold into the earlier block).
     seg_heads: FastMap<SegmentId, BlockId>,
+    /// The per-pool growable segment when `cfg.expandable_segments` is on
+    /// (`[small, large]`); `None` until the pool's first driver miss, and
+    /// cleared again if the segment is fully released.
+    expandable: [Option<SegmentId>; 2],
+    /// Monotone op counter ordering `seg_last_use` (gc aging).
+    tick: u64,
+    /// Tick of the last allocation served from each segment — the
+    /// least-recently-used order `garbage_collection_threshold` reclaims
+    /// in. Only maintained while that knob is set.
+    seg_last_use: FastMap<SegmentId, u64>,
     stats: AllocStats,
     phase: PhaseTag,
     record_events: bool,
@@ -90,6 +109,9 @@ impl CachingAllocator {
             live: FastMap::default(),
             next_handle: 1,
             seg_heads: FastMap::default(),
+            expandable: [None, None],
+            tick: 0,
+            seg_last_use: FastMap::default(),
             stats: AllocStats::default(),
             phase: 0,
             record_events: false,
@@ -195,8 +217,14 @@ impl CachingAllocator {
         let (block_id, cache_hit) = match found {
             Some(id) => (id, true),
             None => {
-                // 2. Go to the driver, with PyTorch's OOM-retry cascade.
-                let seg_block = self.alloc_segment(rounded, pool_kind)?;
+                // 2. Go to the driver, with PyTorch's OOM-retry cascade —
+                // either a discrete segment, or (expandable_segments) the
+                // pool's growable segment's tail.
+                let seg_block = if self.cfg.expandable_segments {
+                    self.grow_expandable(rounded, pool_kind)?
+                } else {
+                    self.alloc_segment(rounded, pool_kind)?
+                };
                 (seg_block, false)
             }
         };
@@ -227,6 +255,12 @@ impl CachingAllocator {
         self.next_handle += 1;
         self.live.insert(handle.0, block_id);
 
+        if self.cfg.garbage_collection_threshold.is_some() {
+            self.tick += 1;
+            let seg = self.slab.get(block_id).segment;
+            self.seg_last_use.insert(seg, self.tick);
+        }
+
         self.emit(AllocEvent::Alloc {
             requested,
             rounded,
@@ -237,7 +271,13 @@ impl CachingAllocator {
 
     /// Look up a suitable cached block and detach it from its pool.
     fn find_cached(&mut self, rounded: u64, pool_kind: PoolKind) -> Option<BlockId> {
-        let max_split = self.cfg.max_split_size;
+        // With expandable segments, the oversized-reservation rule is moot
+        // (blocks merge with the growth frontier instead of stranding), so
+        // max_split only applies to classic discrete segments.
+        let max_split = self
+            .cfg
+            .max_split_size
+            .filter(|_| !self.cfg.expandable_segments);
         let (size, id) = {
             let pool = self.pool(pool_kind);
             match (pool_kind, max_split) {
@@ -256,21 +296,21 @@ impl CachingAllocator {
     }
 
     /// cudaMalloc a fresh segment sized for `rounded`, creating its head
-    /// block (free, covering the whole segment). Runs the OOM cascade.
+    /// block (free, covering the whole segment). Runs the gc pass (when
+    /// `garbage_collection_threshold` is set) and PyTorch's OOM cascade.
     fn alloc_segment(&mut self, rounded: u64, pool_kind: PoolKind) -> Result<BlockId, AllocError> {
         let seg_size = self.cfg.segment_size_for(rounded);
+        self.maybe_gc(seg_size, None);
         // Paper Appendix B: fragmentation is sampled at a cudaMalloc only
         // when the miss is *fragmentation-caused* — the request's own pool
         // holds enough cached bytes to cover it, yet no contiguous block
         // fits. A malloc whose pool simply lacks the bytes is legitimate
         // capacity growth and contributes no fragmentation (a small-pool
         // request can never be served from large-pool cache, so cross-pool
-        // bytes don't make its miss a fragmentation event).
+        // bytes don't make its miss a fragmentation event). Sampled after
+        // the gc pass — the paper defines the sample at the driver call.
         let cached_free = self.driver.reserved() - self.stats.allocated;
-        let pool_cached = match pool_kind {
-            PoolKind::Small => self.small.cached_bytes(),
-            PoolKind::Large => self.large.cached_bytes(),
-        };
+        let pool_cached = self.pool_cached_bytes(pool_kind);
         let frag_sample = if pool_cached >= rounded { cached_free } else { 0 };
 
         let seg = match self.driver.cuda_malloc(seg_size) {
@@ -289,23 +329,7 @@ impl CachingAllocator {
                 }
             }
         };
-
-        // Record the paper's fragmentation sample: reserved − allocated at
-        // the instant the allocator had to go to the driver.
-        self.stats.last_frag_sample = frag_sample;
-        if frag_sample > self.stats.max_frag_sample {
-            self.stats.max_frag_sample = frag_sample;
-        }
-        self.stats.num_cuda_mallocs += 1;
-        // Keep `reserved` fresh for event snapshots. Reserved only ever
-        // rises here, so the peak and its fragmentation are recorded here:
-        // `frag_at_peak_reserved` is the fragmentation-caused sample at the
-        // cudaMalloc that set the reserved peak (Figure 1's yellow gap).
-        self.stats.reserved = self.driver.reserved();
-        if self.stats.reserved > self.stats.peak_reserved {
-            self.stats.peak_reserved = self.stats.reserved;
-            self.stats.frag_at_peak_reserved = frag_sample;
-        }
+        self.note_driver_growth(seg_size, rounded, frag_sample);
 
         let block = Block {
             segment: seg,
@@ -321,12 +345,214 @@ impl CachingAllocator {
         };
         let id = self.slab.insert(block);
         self.seg_heads.insert(seg, id);
+        if self.cfg.garbage_collection_threshold.is_some() {
+            self.tick += 1;
+            self.seg_last_use.insert(seg, self.tick);
+        }
+        Ok(id)
+    }
+
+    /// Bookkeeping shared by every path that maps new driver memory — a
+    /// fresh segment or an expandable grow: the paper's fragmentation
+    /// sample, counters, and peak tracking. Reserved only ever rises here,
+    /// so the peak and its fragmentation are recorded here:
+    /// `frag_at_peak_reserved` is the fragmentation-caused sample at the
+    /// driver call that set the reserved peak (Figure 1's yellow gap).
+    fn note_driver_growth(&mut self, mapped_bytes: u64, rounded: u64, frag_sample: u64) {
+        self.stats.last_frag_sample = frag_sample;
+        if frag_sample > self.stats.max_frag_sample {
+            self.stats.max_frag_sample = frag_sample;
+        }
+        self.stats.num_cuda_mallocs += 1;
+        self.stats.reserved = self.driver.reserved();
+        if self.stats.reserved > self.stats.peak_reserved {
+            self.stats.peak_reserved = self.stats.reserved;
+            self.stats.frag_at_peak_reserved = frag_sample;
+        }
         self.emit(AllocEvent::CudaMalloc {
-            segment_bytes: seg_size,
+            segment_bytes: mapped_bytes,
             rounded,
             frag_sample,
         });
-        Ok(id)
+    }
+
+    /// `expandable_segments` emulation: route a cache miss to the pool's
+    /// single growable segment instead of a fresh cudaMalloc. The chain
+    /// tail is the growth frontier — a trailing free block is extended in
+    /// place, merging old cached space with newly mapped granules, so
+    /// allocation-size drift across PPO steps reuses one address range
+    /// rather than stranding whole segments (the fragmentation mechanism
+    /// §3.2 diagnoses).
+    fn grow_expandable(
+        &mut self,
+        rounded: u64,
+        pool_kind: PoolKind,
+    ) -> Result<BlockId, AllocError> {
+        let idx = pool_idx(pool_kind);
+        let granule = self.cfg.expandable_granule();
+        let mut retried = false;
+        loop {
+            let Some(seg) = self.expandable[idx] else {
+                // First miss of this pool (or its segment was fully
+                // released): open the growable segment via the ordinary
+                // segment path, then register it.
+                let block = self.alloc_segment(rounded, pool_kind)?;
+                self.expandable[idx] = Some(self.slab.get(block).segment);
+                return Ok(block);
+            };
+            // Walk to the chain tail — the growth frontier. O(chain) per
+            // driver miss; misses are orders of magnitude rarer than
+            // pool-served allocs, so this stays off the hot path (a cached
+            // tail pointer would have to survive split/coalesce/shrink —
+            // not worth the bookkeeping until profiles say otherwise).
+            let head = *self.seg_heads.get(&seg).expect("expandable segment head");
+            let mut tail = head;
+            while self.slab.get(tail).next != NO_BLOCK {
+                tail = BlockId(self.slab.get(tail).next);
+            }
+            let (tail_state, tail_size) = {
+                let b = self.slab.get(tail);
+                (b.state, b.size)
+            };
+            let free_tail = if tail_state == BlockState::Free {
+                tail_size
+            } else {
+                0
+            };
+            let need = rounded.saturating_sub(free_tail);
+            if need == 0 {
+                // Defensive: a free tail big enough for the request is
+                // normally served by the cache lookup; serve it directly
+                // if a future lookup rule ever excludes it.
+                self.pool(pool_kind).remove(tail_size, tail);
+                return Ok(tail);
+            }
+            let delta = round_up(need, granule);
+            self.maybe_gc(delta, Some(seg));
+            // Appendix-B fragmentation sample at the driver call (post-gc),
+            // same rule as the discrete-segment path.
+            let cached_free = self.driver.reserved() - self.stats.allocated;
+            let pool_cached = self.pool_cached_bytes(pool_kind);
+            let frag_sample = if pool_cached >= rounded { cached_free } else { 0 };
+            match self.driver.grow_segment(seg, delta) {
+                Ok(()) => {
+                    self.note_driver_growth(delta, rounded, frag_sample);
+                    if tail_state == BlockState::Free {
+                        // Fold the new granules into the free tail.
+                        self.pool(pool_kind).remove(tail_size, tail);
+                        self.slab.get_mut(tail).size = tail_size + delta;
+                        return Ok(tail);
+                    }
+                    // Busy tail: append the new granules as a fresh free
+                    // block at the end of the chain.
+                    let offset = {
+                        let b = self.slab.get(tail);
+                        b.offset + b.size
+                    };
+                    let grown = Block {
+                        segment: seg,
+                        pool: pool_kind,
+                        offset,
+                        size: delta,
+                        requested: 0,
+                        state: BlockState::Free,
+                        prev: tail.0,
+                        next: NO_BLOCK,
+                        origin_phase: self.phase,
+                        live: true,
+                    };
+                    let grown_id = self.slab.insert(grown);
+                    self.slab.get_mut(tail).next = grown_id.0;
+                    return Ok(grown_id);
+                }
+                Err(e) => {
+                    if retried {
+                        return Err(AllocError::Oom(e, self.snapshot()));
+                    }
+                    retried = true;
+                    // Same retry as the segment path: flush the cache —
+                    // which may release or shrink this very segment — and
+                    // re-derive the frontier from scratch.
+                    let released = self.release_cached_segments();
+                    self.emit(AllocEvent::OomRetry {
+                        released_bytes: released,
+                    });
+                }
+            }
+        }
+    }
+
+    /// `garbage_collection_threshold` emulation: when `incoming` more
+    /// bytes from the driver would push reserved memory past
+    /// `threshold × capacity`, reclaim cached fully-free segments,
+    /// least-recently-used first, until back under the threshold (or
+    /// nothing reclaimable remains). Runs at malloc time, *before* the
+    /// driver call — PyTorch's placement. `keep` protects the segment the
+    /// caller is about to grow.
+    fn maybe_gc(&mut self, incoming: u64, keep: Option<SegmentId>) {
+        let Some(threshold) = self.cfg.garbage_collection_threshold else {
+            return;
+        };
+        let target = (threshold * self.driver.capacity() as f64) as u64;
+        if self.driver.reserved() + incoming <= target {
+            return;
+        }
+        // Candidate = fully-free segment: its head block is free and spans
+        // the whole segment (single-block chain).
+        let mut candidates: Vec<(u64, u32, BlockId, u64, PoolKind)> = Vec::new();
+        for (&seg, &head) in &self.seg_heads {
+            if keep == Some(seg) {
+                continue;
+            }
+            let b = self.slab.get(head);
+            if b.state == BlockState::Free && b.next == NO_BLOCK {
+                let age = self.seg_last_use.get(&seg).copied().unwrap_or(0);
+                candidates.push((age, seg.0, head, b.size, b.pool));
+            }
+        }
+        candidates.sort_unstable_by_key(|&(age, seg, ..)| (age, seg));
+        let mut released = 0u64;
+        let mut segments = 0u64;
+        for (_, seg_raw, head, size, pool_kind) in candidates {
+            if self.driver.reserved() + incoming <= target {
+                break;
+            }
+            self.release_full_segment(SegmentId(seg_raw), head, size, pool_kind);
+            released += size;
+            segments += 1;
+        }
+        if segments > 0 {
+            self.stats.num_gc_passes += 1;
+            self.stats.gc_reclaimed += released;
+            self.stats.sync(self.driver.reserved(), self.stats.allocated);
+            self.emit(AllocEvent::GcReclaim {
+                segments,
+                bytes: released,
+            });
+        }
+    }
+
+    /// Release one fully-free segment (a single free block spanning it)
+    /// back to the driver, unregistering every side table that knows
+    /// about it.
+    fn release_full_segment(
+        &mut self,
+        seg: SegmentId,
+        head: BlockId,
+        size: u64,
+        pool_kind: PoolKind,
+    ) {
+        self.pool(pool_kind).remove(size, head);
+        self.slab.remove(head);
+        self.seg_heads.remove(&seg);
+        self.seg_last_use.remove(&seg);
+        for slot in self.expandable.iter_mut() {
+            if *slot == Some(seg) {
+                *slot = None;
+            }
+        }
+        self.driver.cuda_free(seg);
+        self.stats.num_cuda_frees += 1;
     }
 
     /// Split `block_id` down to `rounded` if the split rules allow, putting
@@ -448,11 +674,12 @@ impl CachingAllocator {
         cur
     }
 
-    /// Release every fully-free segment back to the driver. Returns bytes
-    /// released. (`empty_cache()` = this + the event + fixed latency.)
+    /// Release every fully-free segment back to the driver, and — with
+    /// `expandable_segments` — unmap trailing free granules of still-used
+    /// growable segments. Returns bytes released. (`empty_cache()` = this
+    /// + the event + fixed latency.)
     fn release_cached_segments(&mut self) -> u64 {
         let mut released = 0u64;
-        let mut released_segments = 0u64;
         for pool_kind in [PoolKind::Small, PoolKind::Large] {
             // Collect candidates first (can't mutate while iterating).
             let candidates: Vec<(u64, BlockId)> = self
@@ -468,23 +695,67 @@ impl CachingAllocator {
                 let seg_size = self.driver.segment_size(seg);
                 // Fully-free segment == single free block spanning it.
                 if offset == 0 && size == seg_size {
-                    self.pool(pool_kind).remove(size, id);
-                    self.slab.remove(id);
-                    self.seg_heads.remove(&seg);
-                    self.driver.cuda_free(seg);
-                    self.stats.num_cuda_frees += 1;
+                    self.release_full_segment(seg, id, size, pool_kind);
                     released += seg_size;
-                    released_segments += 1;
                     self.emit(AllocEvent::CudaFree {
                         segment_bytes: seg_size,
                     });
                 }
             }
         }
+        if self.cfg.expandable_segments {
+            released += self.shrink_expandable_tails();
+        }
         if released > 0 {
             self.stats.sync(self.driver.reserved(), self.stats.allocated);
         }
-        let _ = released_segments;
+        released
+    }
+
+    /// Unmap trailing free granules of each still-used expandable segment
+    /// (`cuMemUnmap` — what `empty_cache()` does under
+    /// `expandable_segments`). A fully-free growable segment was already
+    /// released whole by the segment loop, so only partial tails remain.
+    fn shrink_expandable_tails(&mut self) -> u64 {
+        let granule = self.cfg.expandable_granule();
+        let mut released = 0u64;
+        for slot in self.expandable {
+            let Some(seg) = slot else {
+                continue;
+            };
+            let head = *self.seg_heads.get(&seg).expect("expandable segment head");
+            let mut tail = head;
+            while self.slab.get(tail).next != NO_BLOCK {
+                tail = BlockId(self.slab.get(tail).next);
+            }
+            let (state, size, offset, prev, pool_kind) = {
+                let b = self.slab.get(tail);
+                (b.state, b.size, b.offset, b.prev, b.pool)
+            };
+            if state != BlockState::Free || offset == 0 {
+                // Busy tail, or a fully-free segment (released above).
+                continue;
+            }
+            let cut = round_down(size, granule);
+            if cut == 0 {
+                continue;
+            }
+            self.pool(pool_kind).remove(size, tail);
+            if cut == size {
+                // The tail block unmaps entirely; its predecessor becomes
+                // the new chain tail (it exists — offset > 0 — and is
+                // allocated, else coalescing would have merged them).
+                self.slab.get_mut(BlockId(prev)).next = NO_BLOCK;
+                self.slab.remove(tail);
+            } else {
+                self.slab.get_mut(tail).size = size - cut;
+                self.pool(pool_kind).insert(size - cut, tail);
+            }
+            self.driver.shrink_segment(seg, cut);
+            self.stats.shrunk_bytes += cut;
+            self.emit(AllocEvent::SegmentShrink { bytes: cut });
+            released += cut;
+        }
         released
     }
 
@@ -613,6 +884,36 @@ impl CachingAllocator {
                 free_blocks.len(),
                 self.live.len()
             ));
+        }
+        // 6. Knob sanity: config values, and the structural invariants the
+        // expandable-segments / gc-threshold emulations maintain.
+        self.cfg.check()?;
+        if self.cfg.garbage_collection_threshold.is_none() && self.stats.num_gc_passes != 0 {
+            return Err("gc pass recorded without garbage_collection_threshold".to_string());
+        }
+        if self.cfg.expandable_segments {
+            // Each pool owns at most one segment, and it is the registered
+            // growable one.
+            for (&seg, &head) in &self.seg_heads {
+                let pool = self.slab.get(head).pool;
+                if self.expandable[pool_idx(pool)] != Some(seg) {
+                    return Err(format!(
+                        "segment {seg:?} is not the registered expandable segment of the {} pool",
+                        pool.name()
+                    ));
+                }
+            }
+            for (idx, slot) in self.expandable.iter().enumerate() {
+                if let Some(seg) = slot {
+                    if !self.seg_heads.contains_key(seg) {
+                        return Err(format!(
+                            "expandable slot {idx} points at dead segment {seg:?}"
+                        ));
+                    }
+                }
+            }
+        } else if self.expandable.iter().any(|s| s.is_some()) {
+            return Err("expandable segment registered without the knob".to_string());
         }
         Ok(())
     }
@@ -805,8 +1106,10 @@ mod tests {
 
     #[test]
     fn max_split_size_reserves_oversized_blocks() {
-        let mut cfg = AllocatorConfig::default();
-        cfg.max_split_size = Some(32 * MIB);
+        let cfg = AllocatorConfig {
+            max_split_size: Some(32 * MIB),
+            ..AllocatorConfig::default()
+        };
         let mut a = CachingAllocator::new(GIB, cfg);
         let h = a.alloc(64 * MIB).unwrap();
         a.free(h); // 64 MiB oversized block cached
@@ -828,14 +1131,14 @@ mod tests {
         let _h2 = a.alloc(30 * MIB).unwrap();
         let mut phases: Vec<u16> = a.segments_by_phase().iter().map(|&(_, p)| p).collect();
         phases.sort();
-        assert_eq!(phases, vec![3, 7]);
+        assert_eq!(phases, [3, 7]);
     }
 
     #[test]
     fn handles_are_unique_and_freeable_once() {
         let mut a = alloc(GIB);
-        let h1 = a.alloc(1 * MIB).unwrap();
-        let h2 = a.alloc(1 * MIB).unwrap();
+        let h1 = a.alloc(MIB).unwrap();
+        let h2 = a.alloc(MIB).unwrap();
         assert_ne!(h1, h2);
         a.free(h1);
         a.free(h2);
@@ -846,9 +1149,217 @@ mod tests {
     #[should_panic(expected = "free of unknown handle")]
     fn double_free_panics() {
         let mut a = alloc(GIB);
-        let h = a.alloc(1 * MIB).unwrap();
+        let h = a.alloc(MIB).unwrap();
         a.free(h);
         a.free(h);
+    }
+
+    fn expandable(cap: u64) -> CachingAllocator {
+        let cfg = AllocatorConfig {
+            expandable_segments: true,
+            ..AllocatorConfig::default()
+        };
+        CachingAllocator::new(cap, cfg)
+    }
+
+    #[test]
+    fn expandable_grows_one_segment_per_pool() {
+        let mut a = expandable(GIB);
+        let _h1 = a.alloc(15 * MIB).unwrap(); // opens the large segment (16 MiB)
+        let _h2 = a.alloc(30 * MIB).unwrap(); // grows it instead of a new one
+        assert_eq!(a.live_segments(), 1);
+        assert_eq!(a.reserved(), 46 * MIB);
+        let _s = a.alloc(100).unwrap(); // small pool opens its own segment
+        assert_eq!(a.live_segments(), 2);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn expandable_reuses_freed_tail_across_size_drift() {
+        // The §3.2 failure mode: a 15 MiB tensor freed, then a 30 MiB one
+        // requested. Classic segments strand the 16 MiB segment and map 30
+        // more (46 MiB reserved); an expandable segment folds the freed
+        // tail into 14 MiB of growth — 30 MiB reserved, zero stranding.
+        let mut a = expandable(GIB);
+        let h = a.alloc(15 * MIB).unwrap();
+        a.free(h);
+        let _h2 = a.alloc(30 * MIB).unwrap();
+        assert_eq!(a.reserved(), 30 * MIB);
+        assert_eq!(a.live_segments(), 1);
+        assert_eq!(a.stats().max_frag_sample, 0, "no stranded cache");
+        a.validate().unwrap();
+
+        // Classic allocator on the same ops strands the first segment.
+        let mut c = alloc(GIB);
+        let h = c.alloc(15 * MIB).unwrap();
+        c.free(h);
+        let _h2 = c.alloc(30 * MIB).unwrap();
+        assert_eq!(c.reserved(), 46 * MIB);
+    }
+
+    #[test]
+    fn expandable_empty_cache_shrinks_trailing_granules() {
+        let mut a = expandable(GIB);
+        let h1 = a.alloc(4 * MIB).unwrap(); // 20 MiB initial segment
+        let h2 = a.alloc(4 * MIB).unwrap(); // served from the free tail
+        assert_eq!(a.reserved(), 20 * MIB);
+        a.free(h2);
+        // Tail (16 MiB free behind h1) unmaps; h1's 4 MiB stay.
+        let released = a.empty_cache();
+        assert_eq!(released, 16 * MIB);
+        assert_eq!(a.reserved(), 4 * MIB);
+        assert_eq!(a.live_segments(), 1);
+        assert_eq!(a.stats().shrunk_bytes, 16 * MIB);
+        a.validate().unwrap();
+        a.free(h1);
+        assert_eq!(a.empty_cache(), 4 * MIB);
+        assert_eq!(a.reserved(), 0);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn expandable_segment_reopens_after_full_release() {
+        let mut a = expandable(GIB);
+        let h = a.alloc(12 * MIB).unwrap();
+        a.free(h);
+        assert_eq!(a.empty_cache(), 12 * MIB);
+        assert_eq!(a.live_segments(), 0);
+        a.validate().unwrap();
+        let _h2 = a.alloc(5 * MIB).unwrap();
+        assert_eq!(a.live_segments(), 1);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn expandable_tight_capacity_grows_in_place() {
+        // 64 MiB device: the freed 40 MiB tail merges with 20 MiB of
+        // growth, so the 60 MiB request fits with no release at all (the
+        // classic allocator needs the OOM-retry cudaFree here).
+        let mut a = expandable(64 * MIB);
+        let h = a.alloc(40 * MIB).unwrap();
+        a.free(h);
+        let h2 = a.alloc(60 * MIB).unwrap();
+        assert_eq!(a.reserved(), 60 * MIB);
+        assert_eq!(a.live_segments(), 1);
+        assert_eq!(a.stats().num_cuda_frees, 0, "no retry needed");
+        a.validate().unwrap();
+        a.free(h2);
+    }
+
+    #[test]
+    fn expandable_oom_retry_releases_and_rederives() {
+        // 64 MiB device. Fill the small pool's growable segment to 10 MiB
+        // and cache it all; keep 4 MiB live in the large segment (20 MiB
+        // mapped). A 52 MiB request then needs the retry: release the
+        // fully-free small segment, unmap the large segment's 16 MiB free
+        // tail, and re-derive the growth frontier.
+        let mut a = expandable(64 * MIB);
+        let smalls: Vec<AllocId> = (0..10).map(|_| a.alloc(MIB).unwrap()).collect();
+        let h1 = a.alloc(4 * MIB).unwrap();
+        for s in smalls {
+            a.free(s);
+        }
+        assert_eq!(a.reserved(), 30 * MIB); // 10 small + 20 large
+        let h2 = a.alloc(52 * MIB).unwrap();
+        assert_eq!(a.reserved(), 56 * MIB); // 4 live + 52 grown
+        assert_eq!(a.live_segments(), 1, "small segment released");
+        assert_eq!(a.stats().num_cuda_frees, 1);
+        assert_eq!(a.stats().shrunk_bytes, 16 * MIB);
+        a.validate().unwrap();
+        a.free(h1);
+        a.free(h2);
+        a.empty_cache();
+        assert_eq!(a.reserved(), 0);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn expandable_neutralizes_max_split_reservation() {
+        let cfg = AllocatorConfig {
+            expandable_segments: true,
+            max_split_size: Some(32 * MIB),
+            ..AllocatorConfig::default()
+        };
+        let mut a = CachingAllocator::new(GIB, cfg);
+        let h = a.alloc(64 * MIB).unwrap();
+        a.free(h);
+        // Classic max_split reserves the 64 MiB block for oversized
+        // requests; with expandable segments the block is just cache.
+        let _h2 = a.alloc(2 * MIB).unwrap();
+        assert_eq!(a.stats().num_cuda_mallocs, 1, "served from cache");
+        a.validate().unwrap();
+    }
+
+    fn gc_alloc(cap: u64, threshold: f64) -> CachingAllocator {
+        let cfg = AllocatorConfig {
+            garbage_collection_threshold: Some(threshold),
+            ..AllocatorConfig::default()
+        };
+        CachingAllocator::new(cap, cfg)
+    }
+
+    #[test]
+    fn gc_threshold_reclaims_before_driver_growth() {
+        // 64 MiB device, threshold 0.5 (= 32 MiB target): a cached 20 MiB
+        // segment is reclaimed before the 30 MiB malloc, so reserved never
+        // climbs to the 50 MiB the default allocator would hold.
+        let mut a = gc_alloc(64 * MIB, 0.5);
+        let h = a.alloc(20 * MIB).unwrap();
+        a.free(h);
+        let _h2 = a.alloc(30 * MIB).unwrap();
+        assert_eq!(a.reserved(), 30 * MIB);
+        assert_eq!(a.stats().num_gc_passes, 1);
+        assert_eq!(a.stats().gc_reclaimed, 20 * MIB);
+        a.validate().unwrap();
+
+        let mut c = alloc(64 * MIB);
+        let h = c.alloc(20 * MIB).unwrap();
+        c.free(h);
+        let _h2 = c.alloc(30 * MIB).unwrap();
+        assert_eq!(c.reserved(), 50 * MIB, "default keeps the cold cache");
+    }
+
+    #[test]
+    fn gc_reclaims_least_recently_used_first() {
+        // target = 0.625 × 128 MiB = 80 MiB.
+        let mut a = gc_alloc(128 * MIB, 0.625);
+        let a1 = a.alloc(20 * MIB).unwrap(); // segment A, tick 1
+        let b1 = a.alloc(30 * MIB).unwrap(); // segment B, tick 2
+        a.free(a1);
+        let a2 = a.alloc(20 * MIB).unwrap(); // segment A again, tick 3
+        a.free(a2);
+        a.free(b1);
+        // 50 MiB cached + 40 incoming > 80: reclaim B (older) only.
+        let _c = a.alloc(40 * MIB).unwrap();
+        assert_eq!(a.stats().num_gc_passes, 1);
+        assert_eq!(a.stats().gc_reclaimed, 30 * MIB, "B freed, A kept");
+        assert_eq!(a.reserved(), 60 * MIB);
+        assert_eq!(a.pool_cached_bytes(PoolKind::Large), 20 * MIB);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn gc_and_expandable_compose() {
+        let cfg = AllocatorConfig {
+            expandable_segments: true,
+            garbage_collection_threshold: Some(0.8),
+            ..AllocatorConfig::default()
+        };
+        let mut a = CachingAllocator::new(256 * MIB, cfg);
+        let mut live = Vec::new();
+        for i in 1..=20u64 {
+            live.push(a.alloc(i * MIB).unwrap());
+            if i % 3 == 0 {
+                a.free(live.swap_remove(0));
+            }
+            a.validate().unwrap();
+        }
+        for h in live {
+            a.free(h);
+        }
+        a.empty_cache();
+        assert_eq!(a.reserved(), 0);
+        a.validate().unwrap();
     }
 
     #[test]

@@ -3,8 +3,12 @@
 //! Defaults mirror PyTorch's `CUDACachingAllocator` constants:
 //! `kMinBlockSize = 512`, `kSmallSize = 1 MiB`, `kSmallBuffer = 2 MiB`,
 //! `kLargeBuffer = 20 MiB`, `kMinLargeAlloc = 10 MiB`, `kRoundLarge = 2 MiB`,
-//! and an optional `max_split_size` (PyTorch's
-//! `PYTORCH_CUDA_ALLOC_CONF=max_split_size_mb`).
+//! plus the three `PYTORCH_CUDA_ALLOC_CONF` mitigation knobs the planner
+//! searches over: `max_split_size` (`max_split_size_mb`),
+//! [`AllocatorConfig::expandable_segments`] and
+//! [`AllocatorConfig::garbage_collection_threshold`]. All three are
+//! *algorithmic* emulations inside [`super::CachingAllocator`] — they change
+//! how malloc/free behave, never what numbers come out (DESIGN.md §6, §10).
 
 use crate::util::bytes::MIB;
 
@@ -30,6 +34,13 @@ pub struct CostModel {
     /// Fixed cost of an `empty_cache()` call on top of the per-segment
     /// `cudaFree`s it issues.
     pub empty_cache_base_us: f64,
+    /// Fixed cost of growing an expandable segment (`cuMemCreate` +
+    /// `cuMemMap` of new granules — no fresh VA reservation, no implicit
+    /// sync, so cheaper than a full `cudaMalloc`).
+    pub segment_grow_base_us: f64,
+    /// Fixed cost of unmapping trailing granules of an expandable segment
+    /// (`cuMemUnmap` + `cuMemRelease`).
+    pub segment_unmap_us: f64,
 }
 
 impl Default for CostModel {
@@ -41,6 +52,8 @@ impl Default for CostModel {
             cache_hit_us: 1.6,
             pool_free_us: 0.9,
             empty_cache_base_us: 40.0,
+            segment_grow_base_us: 60.0,
+            segment_unmap_us: 70.0,
         }
     }
 }
@@ -66,6 +79,21 @@ pub struct AllocatorConfig {
     /// Remainder threshold for splitting a large-pool block: PyTorch keeps
     /// the remainder only if it exceeds `kSmallSize` (1 MiB).
     pub large_split_remainder: u64,
+    /// PyTorch's `expandable_segments:True`: instead of cudaMalloc'ing a
+    /// discrete segment per cache miss, each pool owns at most one segment
+    /// whose tail grows by physical granules (`cuMemMap`); a miss extends
+    /// the tail, merging with a trailing free block, so differently-sized
+    /// retries reuse the same address range instead of stranding old
+    /// segments. `empty_cache()` additionally unmaps trailing free
+    /// granules of a still-used segment.
+    pub expandable_segments: bool,
+    /// PyTorch's `garbage_collection_threshold` (a fraction of device
+    /// capacity in `(0, 1]`): when a cache miss would push reserved memory
+    /// past `threshold × capacity`, the allocator first reclaims cached
+    /// fully-free segments — least-recently-used first — before going to
+    /// the driver, avoiding both the OOM-retry sync and unbounded cache
+    /// growth.
+    pub garbage_collection_threshold: Option<f64>,
     /// Latency model.
     pub cost: CostModel,
 }
@@ -81,6 +109,8 @@ impl Default for AllocatorConfig {
             round_large: 2 * MIB,
             max_split_size: None,
             large_split_remainder: MIB,
+            expandable_segments: false,
+            garbage_collection_threshold: None,
             cost: CostModel::default(),
         }
     }
@@ -117,10 +147,62 @@ impl AllocatorConfig {
         }
     }
 
-    /// PyTorch's `should_split` predicate.
+    /// Physical mapping granule for expandable segments (PyTorch maps
+    /// 2 MiB handles; we reuse `round_large` so segment sizes stay
+    /// granule-aligned).
+    pub fn expandable_granule(&self) -> u64 {
+        self.round_large
+    }
+
+    /// Short stable label naming the non-default knobs, used in sweep-cell
+    /// keys and planner reports ("default", "max_split:128MiB",
+    /// "expandable+gc:0.80", ...).
+    pub fn knob_label(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(max) = self.max_split_size {
+            parts.push(format!("max_split:{}MiB", max / MIB));
+        }
+        if self.expandable_segments {
+            parts.push("expandable".to_string());
+        }
+        if let Some(t) = self.garbage_collection_threshold {
+            parts.push(format!("gc:{t:.2}"));
+        }
+        if parts.is_empty() {
+            "default".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+
+    /// Knob sanity (called from [`super::CachingAllocator::validate`]).
+    pub fn check(&self) -> Result<(), String> {
+        if let Some(t) = self.garbage_collection_threshold {
+            if t.is_nan() || t <= 0.0 || t > 1.0 {
+                return Err(format!(
+                    "garbage_collection_threshold {t} outside (0, 1]"
+                ));
+            }
+        }
+        if let Some(max) = self.max_split_size {
+            if max < self.large_buffer {
+                return Err(format!(
+                    "max_split_size {max} below large_buffer {}",
+                    self.large_buffer
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// PyTorch's `should_split` predicate. The `max_split_size` no-split
+    /// rule only governs classic discrete segments: with
+    /// `expandable_segments` the oversized blocks it protects against
+    /// merge back into the growth frontier instead of stranding, so the
+    /// two knobs don't stack.
     pub fn should_split(&self, block_size: u64, requested: u64, pool: PoolKind) -> bool {
         if let Some(max) = self.max_split_size {
-            if block_size > max {
+            if !self.expandable_segments && block_size > max {
                 return false;
             }
         }
@@ -187,6 +269,39 @@ mod tests {
     }
 
     #[test]
+    fn knob_labels_are_stable() {
+        let mut c = AllocatorConfig::default();
+        assert_eq!(c.knob_label(), "default");
+        c.max_split_size = Some(128 * MIB);
+        assert_eq!(c.knob_label(), "max_split:128MiB");
+        c.max_split_size = None;
+        c.expandable_segments = true;
+        assert_eq!(c.knob_label(), "expandable");
+        c.garbage_collection_threshold = Some(0.8);
+        assert_eq!(c.knob_label(), "expandable+gc:0.80");
+    }
+
+    #[test]
+    fn check_rejects_bad_knobs() {
+        let mut c = AllocatorConfig::default();
+        assert!(c.check().is_ok());
+        c.garbage_collection_threshold = Some(0.0);
+        assert!(c.check().is_err());
+        c.garbage_collection_threshold = Some(1.5);
+        assert!(c.check().is_err());
+        c.garbage_collection_threshold = Some(0.75);
+        assert!(c.check().is_ok());
+        c.max_split_size = Some(MIB);
+        assert!(c.check().is_err(), "below kLargeBuffer");
+    }
+
+    #[test]
+    fn expandable_granule_matches_round_large() {
+        let c = AllocatorConfig::default();
+        assert_eq!(c.expandable_granule(), 2 * MIB);
+    }
+
+    #[test]
     fn split_predicates() {
         let c = AllocatorConfig::default();
         // Small pool: remainder >= 512 B.
@@ -200,5 +315,8 @@ mod tests {
         c2.max_split_size = Some(32 * MIB);
         assert!(!c2.should_split(64 * MIB, 2 * MIB, PoolKind::Large));
         assert!(c2.should_split(32 * MIB, 2 * MIB, PoolKind::Large));
+        // ...unless expandable segments neutralize the rule.
+        c2.expandable_segments = true;
+        assert!(c2.should_split(64 * MIB, 2 * MIB, PoolKind::Large));
     }
 }

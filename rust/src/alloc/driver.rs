@@ -47,6 +47,10 @@ pub struct SimDriver {
     free_slots: Vec<u32>,
     pub num_mallocs: u64,
     pub num_frees: u64,
+    /// `cuMemMap` growths of expandable segments.
+    pub num_grows: u64,
+    /// `cuMemUnmap` shrinks of expandable segments.
+    pub num_shrinks: u64,
     /// Simulated wall-clock consumed by driver calls, microseconds.
     pub time_us: f64,
     cost: CostModel,
@@ -61,6 +65,8 @@ impl SimDriver {
             free_slots: Vec::new(),
             num_mallocs: 0,
             num_frees: 0,
+            num_grows: 0,
+            num_shrinks: 0,
             time_us: 0.0,
             cost,
         }
@@ -116,6 +122,48 @@ impl SimDriver {
         self.num_frees += 1;
         self.free_slots.push(id.0);
         self.time_us += self.cost.cuda_free_us;
+    }
+
+    /// Grow an expandable segment by `delta` bytes (`cuMemMap` of fresh
+    /// physical granules at the tail). Capacity-checked like a malloc but
+    /// cheaper: no new VA reservation, no implicit synchronization.
+    pub fn grow_segment(&mut self, id: SegmentId, delta: u64) -> Result<(), DriverOom> {
+        assert!(delta > 0, "grow_segment(0)");
+        if self.reserved + delta > self.capacity {
+            return Err(DriverOom {
+                requested: delta,
+                capacity: self.capacity,
+                reserved: self.reserved,
+            });
+        }
+        let size = self.segments[id.0 as usize]
+            .as_mut()
+            .expect("grow of freed segment");
+        *size += delta;
+        self.reserved += delta;
+        self.num_grows += 1;
+        self.time_us += self.cost.segment_grow_base_us
+            + self.cost.cuda_malloc_per_gib_us * (delta as f64 / (1u64 << 30) as f64);
+        Ok(())
+    }
+
+    /// Unmap `delta` trailing bytes of an expandable segment
+    /// (`cuMemUnmap`). The segment must stay nonempty — a fully-free
+    /// expandable segment is released through [`Self::cuda_free`] instead.
+    pub fn shrink_segment(&mut self, id: SegmentId, delta: u64) {
+        let size = self.segments[id.0 as usize]
+            .as_mut()
+            .expect("shrink of freed segment");
+        assert!(
+            delta > 0 && delta < *size,
+            "shrink_segment must leave a nonempty segment ({} of {})",
+            delta,
+            *size
+        );
+        *size -= delta;
+        self.reserved -= delta;
+        self.num_shrinks += 1;
+        self.time_us += self.cost.segment_unmap_us;
     }
 
     pub fn segment_size(&self, id: SegmentId) -> u64 {
@@ -189,6 +237,40 @@ mod tests {
         let a = d.cuda_malloc(MIB).unwrap();
         d.cuda_free(a);
         d.cuda_free(a);
+    }
+
+    #[test]
+    fn grow_and_shrink_accounting() {
+        let mut d = driver(GIB);
+        let a = d.cuda_malloc(20 * MIB).unwrap();
+        d.grow_segment(a, 6 * MIB).unwrap();
+        assert_eq!(d.segment_size(a), 26 * MIB);
+        assert_eq!(d.reserved(), 26 * MIB);
+        assert_eq!(d.num_grows, 1);
+        d.shrink_segment(a, 4 * MIB);
+        assert_eq!(d.segment_size(a), 22 * MIB);
+        assert_eq!(d.reserved(), 22 * MIB);
+        assert_eq!(d.num_shrinks, 1);
+        d.cuda_free(a);
+        assert_eq!(d.reserved(), 0);
+    }
+
+    #[test]
+    fn grow_respects_capacity() {
+        let mut d = driver(64 * MIB);
+        let a = d.cuda_malloc(60 * MIB).unwrap();
+        let err = d.grow_segment(a, 8 * MIB).unwrap_err();
+        assert_eq!(err.requested, 8 * MIB);
+        assert_eq!(d.segment_size(a), 60 * MIB, "failed grow leaves size");
+        assert!(d.grow_segment(a, 4 * MIB).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "nonempty segment")]
+    fn shrink_to_zero_panics() {
+        let mut d = driver(GIB);
+        let a = d.cuda_malloc(2 * MIB).unwrap();
+        d.shrink_segment(a, 2 * MIB);
     }
 
     #[test]

@@ -42,6 +42,12 @@ pub enum AllocEvent {
     EmptyCache { segments: u64, bytes: u64 },
     /// OOM-retry path released cached segments before retrying.
     OomRetry { released_bytes: u64 },
+    /// A `garbage_collection_threshold` pass reclaimed cached fully-free
+    /// segments at malloc time (before the driver was asked for more).
+    GcReclaim { segments: u64, bytes: u64 },
+    /// Trailing free granules of an expandable segment were unmapped
+    /// (`empty_cache` / OOM retry with `expandable_segments` on).
+    SegmentShrink { bytes: u64 },
 }
 
 /// Point-in-time state attached to each event delivery.
@@ -101,6 +107,12 @@ pub struct AllocStats {
     pub num_cuda_mallocs: u64,
     pub num_cuda_frees: u64,
     pub num_empty_cache: u64,
+    /// `garbage_collection_threshold` passes that reclaimed ≥ 1 segment.
+    pub num_gc_passes: u64,
+    /// Total bytes reclaimed by gc passes.
+    pub gc_reclaimed: u64,
+    /// Total trailing bytes unmapped from expandable segments.
+    pub shrunk_bytes: u64,
     /// Simulated allocator+driver time, microseconds.
     pub time_us: f64,
 }

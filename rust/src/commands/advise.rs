@@ -1,0 +1,100 @@
+//! `rlhf-mem advise` — the memory-configuration advisor: search the
+//! mitigation space for a budget and print a ranked recommendation plus
+//! the memory-vs-time Pareto frontier.
+//!
+//! ```text
+//! rlhf-mem advise --budget examples/budget_rtx3090.json --jobs 4
+//! ```
+//!
+//! Exits non-zero when nothing in the space fits the budget — the
+//! advisor's honest answer is then "buy a bigger GPU or shrink the
+//! model", and scripts can branch on it.
+
+use rlhf_mem::planner::{plan, Budget};
+use rlhf_mem::sweep::SweepRunner;
+use rlhf_mem::util::bytes::fmt_gib_paper;
+use rlhf_mem::util::cli::Args;
+
+pub const ADVISE_USAGE: &str = "\
+rlhf-mem advise — search strategy × empty_cache × allocator-knob space for
+the cheapest configuration that fits a GPU budget
+
+FLAGS:
+  --budget FILE    JSON budget spec (default: the paper's RTX-3090 testbed;
+                   see examples/budget_rtx3090.json for every field)
+  --jobs N         worker threads (default: all cores)
+  --top N          recommendations to print (default 10)
+  --jsonl FILE     write one deterministic JSON line per candidate
+  --json FILE      write the full report as one JSON document
+";
+
+pub fn run(args: &Args) -> Result<(), String> {
+    if args.bool_flag("help") {
+        println!("{ADVISE_USAGE}");
+        return Ok(());
+    }
+    let budget = match args.flag("budget") {
+        Some(path) => Budget::from_file(path)?,
+        None => Budget::rtx3090_table1(),
+    };
+    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
+    let top = args.get_usize("top", 10)?;
+
+    println!(
+        "advise: budget '{}' — {} GiB, ≤{}% overhead, {} / {}",
+        budget.name,
+        fmt_gib_paper(budget.capacity),
+        budget.max_overhead_pct,
+        budget.framework.name(),
+        budget.models.policy_arch.name,
+    );
+    let report = plan(&budget, jobs)?;
+
+    println!("\n== top recommendations ==");
+    println!("{}", report.to_table(top).render());
+    println!("== memory-vs-time frontier ==");
+    println!("{}", report.frontier_table().render());
+
+    match report.best() {
+        Some(best) => println!(
+            "recommendation: {} — {} GiB reserved{}",
+            best.candidate.key(),
+            fmt_gib_paper(best.summary.peak_reserved),
+            match best.overhead_pct {
+                Some(p) => format!(", {p:+.1}% modeled time overhead"),
+                None => String::new(),
+            },
+        ),
+        None => {
+            println!("({})", report.summary_line());
+            return Err(format!(
+                "no configuration fits the '{}' budget ({} GiB, ≤{}% overhead)",
+                budget.name,
+                fmt_gib_paper(budget.capacity),
+                budget.max_overhead_pct
+            ));
+        }
+    }
+    if let Some(pct) = report.empty_cache_frontier_overhead() {
+        println!(
+            "paper anchor: empty_cache at phase boundaries (stock allocator) is on \
+             the frontier at {pct:+.1}% overhead (paper §3.3 claims ≈ +2%)"
+        );
+    } else if let Some(pct) = report.any_empty_cache_frontier_overhead() {
+        println!(
+            "frontier: cheapest empty_cache placement (with allocator knobs) costs \
+             {pct:+.1}% vs its un-mitigated baseline"
+        );
+    }
+    println!("({})", report.summary_line());
+
+    if let Some(path) = args.flag("jsonl") {
+        std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.flag("json") {
+        std::fs::write(path, report.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -4,6 +4,7 @@
 //! half.
 
 pub mod ablation;
+pub mod advise;
 pub mod debug;
 pub mod genablation;
 pub mod profile;

@@ -6,18 +6,32 @@
 //! (shared with `benches/table1.rs`); this command filters it by
 //! `--framework`, runs one [`SweepRunner`] pass (`--jobs N`, default all
 //! cores), and groups the cells back into paper rows.
+//!
+//! `--compare-paper` additionally prints the published values and **exits
+//! non-zero** when any reserved-scale cell deviates more than
+//! `--tolerance-gib` (default 2.0) from them — a CI-usable regression
+//! gate on the reproduction.
 
 use rlhf_mem::frameworks::FrameworkKind;
-use rlhf_mem::report::paper::{paper_table1, render_rows, StrategyRow};
+use rlhf_mem::report::paper::{
+    gate_paper_deviation, paper_table1, render_rows, track_worst_deviation, StrategyRow,
+};
 use rlhf_mem::sweep::{presets, SweepRunner};
 use rlhf_mem::util::cli::Args;
 use rlhf_mem::util::json::Json;
+
+/// Default `--tolerance-gib` for `--compare-paper`: the gate trips when
+/// any reserved-scale cell drifts more than this from the published
+/// table (generous enough for modeling noise, tight enough to catch a
+/// broken allocator or trace generator).
+pub const DEFAULT_TOLERANCE_GIB: f64 = 2.0;
 
 pub fn run(args: &Args) -> Result<(), String> {
     let steps = args.get_u64("steps", 3)?;
     let which = args.get_or("framework", "all").to_string();
     let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
     let compare = args.bool_flag("compare-paper");
+    let tolerance = args.get_f64("tolerance-gib", DEFAULT_TOLERANCE_GIB)?;
 
     let mut cells = presets::table1_cells(steps)?;
     if which != "all" {
@@ -28,9 +42,20 @@ pub fn run(args: &Args) -> Result<(), String> {
     let report = SweepRunner::new(jobs).run(cells);
 
     let mut json_rows: Vec<Json> = Vec::new();
+    let mut worst = (0.0f64, "-".to_string());
+    let mut matched = 0usize;
     for (fw, model, rows) in report.strategy_rows() {
         for row in &rows {
             json_rows.push(row_json(&fw, &model, row));
+            if compare {
+                for (pfw, pmodel, strat, v) in paper_table1() {
+                    if pfw == fw && pmodel == model && strat == row.strategy {
+                        let label = format!("{fw}/{model}/{strat}");
+                        track_worst_deviation(&mut worst, &v, row, &label);
+                        matched += 1;
+                    }
+                }
+            }
         }
         println!("{}", render_rows(&format!("{fw} / {model}"), &rows));
         if compare {
@@ -38,6 +63,9 @@ pub fn run(args: &Args) -> Result<(), String> {
         }
     }
     println!("({})", report.summary_line());
+    if compare {
+        gate_paper_deviation("Table 1", &worst, matched, tolerance)?;
+    }
 
     if let Some(path) = args.flag("json") {
         let doc = Json::obj(vec![("table1", Json::Arr(json_rows))]);

@@ -5,8 +5,14 @@
 //! [`rlhf_mem::sweep::presets::table2_cells`] (shared with
 //! `benches/table2.rs`); one runner pass executes all twelve cells across
 //! `--jobs` workers.
+//!
+//! `--compare-paper` prints the published values and **exits non-zero**
+//! when any reserved-scale cell deviates more than `--tolerance-gib`
+//! (default 2.0) from them — same CI regression gate as `table1`.
 
-use rlhf_mem::report::paper::render_rows;
+use rlhf_mem::report::paper::{
+    gate_paper_deviation, paper_table2, render_rows, track_worst_deviation,
+};
 use rlhf_mem::sweep::{presets, SweepRunner};
 use rlhf_mem::util::cli::Args;
 use rlhf_mem::util::json::Json;
@@ -14,9 +20,13 @@ use rlhf_mem::util::json::Json;
 pub fn run(args: &Args) -> Result<(), String> {
     let steps = args.get_u64("steps", 3)?;
     let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
+    let compare = args.bool_flag("compare-paper");
+    let tolerance = args.get_f64("tolerance-gib", super::table1::DEFAULT_TOLERANCE_GIB)?;
     let report = SweepRunner::new(jobs).run(presets::table2_cells(steps)?);
 
     let mut json_rows: Vec<Json> = Vec::new();
+    let mut worst = (0.0f64, "-".to_string());
+    let mut matched = 0usize;
     for (_fw, model, rows) in report.strategy_rows() {
         for row in &rows {
             json_rows.push(Json::obj(vec![
@@ -28,13 +38,36 @@ pub fn run(args: &Args) -> Result<(), String> {
                 ("ec_reserved", Json::from(row.with_empty_cache.peak_reserved)),
                 ("ec_frag", Json::from(row.with_empty_cache.frag)),
             ]));
+            if compare {
+                for (pmodel, strat, v) in paper_table2() {
+                    if pmodel.eq_ignore_ascii_case(&model) && strat == row.strategy {
+                        track_worst_deviation(&mut worst, &v, row, &format!("{model}/{strat}"));
+                        matched += 1;
+                    }
+                }
+            }
         }
         println!(
             "{}",
             render_rows(&format!("ColossalChat / {model} (4xA100-80G)"), &rows)
         );
+        if compare {
+            println!("  paper reference ({model}):");
+            for (pmodel, strat, v) in paper_table2() {
+                if pmodel.eq_ignore_ascii_case(&model) {
+                    println!(
+                        "    {strat:<28} {:>5.1} {:>5.1} {:>5.1} | {:>5.1} {:>5.1}",
+                        v[0], v[1], v[2], v[3], v[4]
+                    );
+                }
+            }
+            println!();
+        }
     }
     println!("({})", report.summary_line());
+    if compare {
+        gate_paper_deviation("Table 2", &worst, matched, tolerance)?;
+    }
 
     if let Some(path) = args.flag("json") {
         let doc = Json::obj(vec![("table2", Json::Arr(json_rows))]);

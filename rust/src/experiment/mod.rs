@@ -9,7 +9,7 @@
 //! so `run_scenario` can execute on any worker thread with zero shared
 //! state between concurrent runs.
 
-use crate::alloc::CachingAllocator;
+use crate::alloc::{AllocatorConfig, CachingAllocator};
 use crate::profiler::{MemoryProfiler, ProfileSummary};
 use crate::rlhf::sim::{build_trace, SimScenario};
 use crate::trace::{replay, ReplayResult};
@@ -31,15 +31,36 @@ pub const A100_HBM: u64 = 80 * GIB;
 /// Run one scenario on a device of `capacity` bytes and collect the
 /// profile. Replay continues to completion or first OOM.
 pub fn run_scenario(scn: &SimScenario, capacity: u64) -> ExperimentResult {
+    run_scenario_with(scn, capacity, &AllocatorConfig::default())
+}
+
+/// [`run_scenario`] with explicit allocator tunables — how the sweep
+/// engine's allocator axis and the planner's `PYTORCH_CUDA_ALLOC_CONF`
+/// candidates (`max_split_size`, `expandable_segments`,
+/// `garbage_collection_threshold`) reach the simulator.
+pub fn run_scenario_with(
+    scn: &SimScenario,
+    capacity: u64,
+    alloc_cfg: &AllocatorConfig,
+) -> ExperimentResult {
     let trace = build_trace(scn);
-    run_trace(&trace, capacity)
+    run_trace_with(&trace, capacity, alloc_cfg)
 }
 
 /// Run a pre-built trace (used by benches that sweep policies over the
 /// same workload).
 pub fn run_trace(trace: &crate::trace::Trace, capacity: u64) -> ExperimentResult {
+    run_trace_with(trace, capacity, &AllocatorConfig::default())
+}
+
+/// [`run_trace`] with explicit allocator tunables.
+pub fn run_trace_with(
+    trace: &crate::trace::Trace,
+    capacity: u64,
+    alloc_cfg: &AllocatorConfig,
+) -> ExperimentResult {
     let mut profiler = MemoryProfiler::new();
-    let mut alloc = CachingAllocator::with_default_config(capacity);
+    let mut alloc = CachingAllocator::new(capacity, alloc_cfg.clone());
     let replay_res = replay(trace, &mut alloc, &mut profiler);
     debug_assert!(alloc.validate().is_ok(), "{:?}", alloc.validate());
     let final_reserved = alloc.reserved();
@@ -77,6 +98,25 @@ mod tests {
         assert!(res.summary.peak_reserved < 24 * GIB);
         assert!(res.summary.peak_allocated <= res.summary.peak_reserved);
         assert!(res.profiler.timeline.points().len() > 50);
+    }
+
+    #[test]
+    fn allocator_knobs_thread_through() {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 1;
+        let cfg = AllocatorConfig {
+            expandable_segments: true,
+            garbage_collection_threshold: Some(0.9),
+            ..AllocatorConfig::default()
+        };
+        let res = run_scenario_with(&scn, RTX3090_HBM, &cfg);
+        assert!(!res.summary.oom, "{:?}", res.summary);
+        assert!(res.summary.peak_reserved > 4 * GIB);
+        assert!(res.summary.peak_reserved < 24 * GIB);
+        // Same scenario, default knobs: the default path is unchanged.
+        let base = run_scenario(&scn, RTX3090_HBM);
+        let base2 = run_trace(&crate::rlhf::sim::build_trace(&scn), RTX3090_HBM);
+        assert_eq!(base.summary, base2.summary);
     }
 
     #[test]

@@ -19,7 +19,10 @@
 //!
 //! Both halves are driven through the [`experiment`] runner; the
 //! [`sweep`] engine shards many experiments across a worker pool, and is
-//! what regenerates every paper table N-core fast.
+//! what regenerates every paper table N-core fast. On top of the sweep
+//! engine, the [`planner`] searches the whole mitigation space — strategy
+//! × `empty_cache` placement × allocator knobs — for the cheapest
+//! configuration that fits a user's GPU budget (`rlhf-mem advise`).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
@@ -30,6 +33,7 @@ pub mod coordinator;
 pub mod experiment;
 pub mod frameworks;
 pub mod mem;
+pub mod planner;
 pub mod policy;
 pub mod profiler;
 pub mod report;

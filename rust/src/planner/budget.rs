@@ -1,0 +1,277 @@
+//! The planner's input: a [`Budget`] describing the user's device and
+//! tolerance — "this much HBM, at most this much extra time; what should I
+//! configure?". Parsed from the JSON spec `rlhf-mem advise --budget FILE`
+//! takes (see `examples/budget_rtx3090.json`):
+//!
+//! ```json
+//! {
+//!   "name": "rtx3090-table1",
+//!   "capacity_gib": 24,
+//!   "max_overhead_pct": 5.0,
+//!   "framework": "deepspeed-chat",
+//!   "policy_model": "opt-1.3b",
+//!   "value_model": "opt-350m",
+//!   "world": 4,
+//!   "steps": 2,
+//!   "seed": 24301,
+//!   "gpu": "rtx3090",
+//!   "strategies": ["none", "zero3"],
+//!   "allocators": ["default", "expandable"]
+//! }
+//! ```
+//!
+//! `strategies` / `allocators` optionally narrow the mitigation space (by
+//! the short names [`crate::strategies::StrategyConfig::by_name`] accepts
+//! and the labels of [`super::space::allocator_candidates`]); omitted, the
+//! full space is searched.
+
+use crate::frameworks::FrameworkKind;
+use crate::mem::ModelArch;
+use crate::rlhf::cost::GpuSpec;
+use crate::rlhf::models::RlhfModelSet;
+use crate::util::bytes::GIB;
+use crate::util::json::{parse, Json};
+
+/// A device + tolerance envelope the planner searches within.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    /// Display name (report headers, JSONL).
+    pub name: String,
+    /// Device HBM in bytes; a candidate is feasible only if it completes
+    /// without OOM and its peak reserved fits.
+    pub capacity: u64,
+    /// Maximum tolerated mitigation time overhead, percent, relative to
+    /// the same strategy with no mitigation (policy `never`, default
+    /// allocator) — the paper's apples-to-apples "+2%" axis.
+    pub max_overhead_pct: f64,
+    pub framework: FrameworkKind,
+    pub models: RlhfModelSet,
+    pub world: u64,
+    pub steps: u64,
+    pub seed: u64,
+    pub gpu: GpuSpec,
+    /// Optional strategy short-names restricting the search.
+    pub strategies: Option<Vec<String>>,
+    /// Optional allocator-candidate labels restricting the search.
+    pub allocators: Option<Vec<String>>,
+}
+
+impl Budget {
+    /// The paper's Table-1 RTX-3090 testbed as a budget: 24 GiB,
+    /// DeepSpeed-Chat, the OPT-1.3b/350m pair, ≤ 5% tolerated overhead —
+    /// the sanity anchor `rlhf-mem advise` reproduces the §3.3 conclusion
+    /// on.
+    pub fn rtx3090_table1() -> Budget {
+        Budget {
+            name: "rtx3090-table1".to_string(),
+            capacity: 24 * GIB,
+            max_overhead_pct: 5.0,
+            framework: FrameworkKind::DeepSpeedChat,
+            models: RlhfModelSet::opt(),
+            world: 4,
+            steps: 2,
+            seed: 0x5EED,
+            gpu: GpuSpec::rtx3090(),
+            strategies: None,
+            allocators: None,
+        }
+    }
+
+    pub fn from_file(path: &str) -> Result<Budget, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json_text(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Budget, String> {
+        Self::from_json(&parse(text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Budget, String> {
+        // A typo'd field name must not silently fall back to defaults
+        // (same fail-loud principle as the typed-field checks below).
+        const KNOWN: [&str; 12] = [
+            "name",
+            "capacity_gib",
+            "max_overhead_pct",
+            "framework",
+            "policy_model",
+            "value_model",
+            "world",
+            "steps",
+            "seed",
+            "gpu",
+            "strategies",
+            "allocators",
+        ];
+        if let Json::Obj(kvs) = j {
+            for (k, _) in kvs {
+                if !KNOWN.contains(&k.as_str()) {
+                    return Err(format!(
+                        "unknown budget field '{k}' (known fields: {})",
+                        KNOWN.join(", ")
+                    ));
+                }
+            }
+        } else {
+            return Err("budget must be a JSON object".to_string());
+        }
+
+        let fw_name = j
+            .get("framework")
+            .and_then(|v| v.as_str())
+            .unwrap_or("deepspeed-chat");
+        let framework = FrameworkKind::by_name(fw_name)
+            .ok_or_else(|| format!("unknown framework '{fw_name}'"))?;
+
+        let policy_name = j
+            .get("policy_model")
+            .and_then(|v| v.as_str())
+            .unwrap_or("opt-1.3b");
+        let value_name = j
+            .get("value_model")
+            .and_then(|v| v.as_str())
+            .unwrap_or("opt-350m");
+        let policy_arch = ModelArch::by_name(policy_name)
+            .ok_or_else(|| format!("unknown model '{policy_name}'"))?;
+        let value_arch = ModelArch::by_name(value_name)
+            .ok_or_else(|| format!("unknown model '{value_name}'"))?;
+
+        let gpu = match j.get("gpu").and_then(|v| v.as_str()).unwrap_or("rtx3090") {
+            "rtx3090" => GpuSpec::rtx3090(),
+            "a100" | "a100-80g" => GpuSpec::a100_80g(),
+            other => return Err(format!("unknown gpu '{other}'")),
+        };
+
+        let max_overhead_pct = j
+            .get("max_overhead_pct")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(5.0);
+        if max_overhead_pct.is_nan() || max_overhead_pct < 0.0 {
+            return Err(format!("bad max_overhead_pct {max_overhead_pct}"));
+        }
+
+        // A present-but-mistyped field must error, never silently fall back
+        // to the default — a budget planned for the wrong capacity would
+        // recommend configurations that OOM on the real device.
+        let opt_u64 = |key: &str| -> Result<Option<u64>, String> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_u64()
+                    .map(Some)
+                    .ok_or_else(|| format!("'{key}' must be a non-negative integer")),
+            }
+        };
+
+        let name_list = |key: &str| -> Result<Option<Vec<String>>, String> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| format!("'{key}' must be an array of strings"))?;
+                    let names = arr
+                        .iter()
+                        .map(|x| {
+                            x.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| format!("'{key}' entries must be strings"))
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    if names.is_empty() {
+                        return Err(format!("'{key}' must not be empty"));
+                    }
+                    Ok(Some(names))
+                }
+            }
+        };
+
+        Ok(Budget {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("custom")
+                .to_string(),
+            capacity: opt_u64("capacity_gib")?.unwrap_or(24) * GIB,
+            max_overhead_pct,
+            framework,
+            models: RlhfModelSet {
+                policy_arch,
+                value_arch,
+            },
+            world: opt_u64("world")?.unwrap_or(4),
+            steps: opt_u64("steps")?.unwrap_or(2),
+            seed: opt_u64("seed")?.unwrap_or(0x5EED),
+            gpu,
+            strategies: name_list("strategies")?,
+            allocators: name_list("allocators")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_budget_parses() {
+        let b = Budget::from_json_text(
+            r#"{
+              "name": "my-box",
+              "capacity_gib": 48,
+              "max_overhead_pct": 3.5,
+              "framework": "colossalchat",
+              "policy_model": "gpt2-xl",
+              "value_model": "gpt2-medium",
+              "world": 8,
+              "steps": 1,
+              "seed": 7,
+              "gpu": "a100",
+              "strategies": ["none", "zero3"],
+              "allocators": ["default", "expandable"]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(b.name, "my-box");
+        assert_eq!(b.capacity, 48 * GIB);
+        assert_eq!(b.max_overhead_pct, 3.5);
+        assert_eq!(b.framework, FrameworkKind::ColossalChat);
+        assert_eq!(b.models.policy_arch.name, "gpt2-xl");
+        assert_eq!(b.world, 8);
+        assert_eq!(b.seed, 7);
+        assert_eq!(b.strategies.as_deref().unwrap().len(), 2);
+        assert_eq!(b.allocators.as_deref().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn minimal_budget_matches_paper_testbed() {
+        let b = Budget::from_json_text("{}").unwrap();
+        let anchor = Budget::rtx3090_table1();
+        assert_eq!(b.capacity, anchor.capacity);
+        assert_eq!(b.framework, anchor.framework);
+        assert_eq!(b.models.policy_arch.name, anchor.models.policy_arch.name);
+        assert_eq!(b.steps, anchor.steps);
+        assert_eq!(b.seed, anchor.seed);
+        assert!(b.strategies.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_budgets() {
+        assert!(Budget::from_json_text(r#"{"framework": "x"}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"policy_model": "x"}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"gpu": "x"}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"max_overhead_pct": -1}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"strategies": []}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"strategies": [1]}"#).is_err());
+        assert!(Budget::from_json_text("nope").is_err());
+        // Mistyped numeric fields error instead of silently defaulting —
+        // planning for the wrong capacity would be worse than failing.
+        assert!(Budget::from_json_text(r#"{"capacity_gib": 10.5}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"capacity_gib": "24"}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"steps": true}"#).is_err());
+        // ...and so do typo'd field names and non-object documents.
+        assert!(Budget::from_json_text(r#"{"capacity": 48}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"capacity_gb": 48}"#).is_err());
+        assert!(Budget::from_json_text("[1, 2]").is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! Dominance pruning: the memory-vs-time Pareto frontier over evaluated
+//! candidates. A configuration is *dominated* when another feasible one
+//! uses no more memory **and** no more time, strictly less of at least
+//! one — there is never a reason to pick it.
+
+/// One evaluated point: `(peak_reserved_bytes, total_time_us, feasible)`.
+pub type Point = (u64, f64, bool);
+
+/// Mark the Pareto-optimal points: `true` at index `i` iff point `i` is
+/// feasible and no other feasible point dominates it. Infeasible points
+/// are never on the frontier and never dominate. O(n²), fine for the
+/// few-hundred-candidate spaces the planner searches.
+pub fn pareto_frontier(points: &[Point]) -> Vec<bool> {
+    let mut on = vec![false; points.len()];
+    for (i, &(r_i, t_i, ok_i)) in points.iter().enumerate() {
+        if !ok_i {
+            continue;
+        }
+        let dominated = points.iter().enumerate().any(|(j, &(r_j, t_j, ok_j))| {
+            j != i && ok_j && r_j <= r_i && t_j <= t_i && (r_j < r_i || t_j < t_i)
+        });
+        on[i] = !dominated;
+    }
+    on
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strict_dominance_prunes() {
+        // (memory, time): b dominates c (less of both); a and b trade off.
+        let pts = [(10, 1.0, true), (5, 2.0, true), (8, 3.0, true)];
+        assert_eq!(pareto_frontier(&pts), [true, true, false]);
+    }
+
+    #[test]
+    fn ties_on_one_axis() {
+        // Same memory, faster wins; the slower twin is dominated.
+        let pts = [(10, 1.0, true), (10, 2.0, true)];
+        assert_eq!(pareto_frontier(&pts), [true, false]);
+        // Exact duplicates: neither strictly better — both survive.
+        let dup = [(10, 1.0, true), (10, 1.0, true)];
+        assert_eq!(pareto_frontier(&dup), [true, true]);
+    }
+
+    #[test]
+    fn infeasible_points_neither_appear_nor_dominate() {
+        let pts = [(1, 0.5, false), (10, 1.0, true)];
+        assert_eq!(pareto_frontier(&pts), [false, true]);
+        assert!(pareto_frontier(&[]).is_empty());
+    }
+}

@@ -1,0 +1,428 @@
+//! The memory planner — a mitigation-space search engine answering the
+//! user-facing question the paper's tables only sample: *"what is the
+//! cheapest configuration that fits my GPU, and what does it cost me in
+//! time?"*
+//!
+//! Given a [`Budget`] (device capacity, tolerated time overhead, workload),
+//! the planner enumerates the mitigation space — strategy presets
+//! (ZeRO-1/2/3, offload, checkpointing, each carrying the paper's global
+//! LoRA default) × [`EmptyCachePolicy`] placements × allocator knobs
+//! (`max_split_size`, `expandable_segments`,
+//! `garbage_collection_threshold`) — runs every candidate through the
+//! [`crate::sweep::SweepRunner`] worker pool, prunes dominated
+//! configurations, and emits a ranked recommendation with a
+//! memory-vs-time Pareto frontier.
+//!
+//! Determinism contract: same budget + seed ⇒ byte-identical
+//! [`PlanReport::jsonl`] for any worker count (the same invariant
+//! `rust/tests/sweep_determinism.rs` enforces for grids;
+//! `rust/tests/planner_determinism.rs` enforces it here).
+//!
+//! # Example: advise a narrowed space
+//!
+//! ```
+//! use rlhf_mem::planner::{plan, Budget};
+//!
+//! let mut budget = Budget::rtx3090_table1();
+//! budget.steps = 1;
+//! budget.strategies = Some(vec!["none".into()]);
+//! budget.allocators = Some(vec!["default".into(), "expandable".into()]);
+//! let report = plan(&budget, 2).unwrap();
+//! assert_eq!(report.outcomes.len(), 8); // 1 strategy × 4 policies × 2 allocs
+//! let best = report.best().expect("something fits 24 GiB");
+//! assert!(best.feasible);
+//! // The un-mitigated baseline is its own reference: zero overhead.
+//! assert_eq!(report.outcomes[0].overhead_pct, Some(0.0));
+//! ```
+
+pub mod budget;
+pub mod frontier;
+pub mod space;
+
+pub use budget::Budget;
+pub use space::{allocator_candidates, Candidate};
+
+use crate::policy::EmptyCachePolicy;
+use crate::profiler::ProfileSummary;
+use crate::report::table::TextTable;
+use crate::sweep::{SweepReport, SweepRunner};
+use crate::util::bytes::fmt_gib_paper;
+use crate::util::json::Json;
+
+/// One candidate's verdict.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub candidate: Candidate,
+    pub summary: ProfileSummary,
+    /// Completed without OOM and peak reserved fits the budget.
+    pub feasible: bool,
+    /// Mitigation time overhead, percent, vs the same strategy
+    /// un-mitigated (policy `never`, default allocator) — the paper's
+    /// "+2%" axis. `None` when that baseline is absent from the space or
+    /// itself OOMed (overhead is then unmeasurable).
+    pub overhead_pct: Option<f64>,
+    /// On the memory-vs-time Pareto frontier of feasible candidates.
+    pub on_frontier: bool,
+    /// 1-based position among recommended configurations (feasible and
+    /// within the budget's overhead tolerance), cheapest-memory first.
+    pub rank: Option<usize>,
+}
+
+/// The planner's output: every candidate's verdict plus the ranking.
+#[derive(Debug)]
+pub struct PlanReport {
+    pub budget: Budget,
+    /// One outcome per candidate, in enumeration order.
+    pub outcomes: Vec<PlanOutcome>,
+    /// Wall-clock of the underlying sweep, seconds (not part of any
+    /// deterministic output).
+    pub wall_seconds: f64,
+    pub jobs: usize,
+}
+
+/// Search the mitigation space for `budget` on `jobs` workers.
+pub fn plan(budget: &Budget, jobs: usize) -> Result<PlanReport, String> {
+    let candidates = space::enumerate(budget)?;
+    let cells = space::to_cells(budget, &candidates);
+    let sweep = SweepRunner::new(jobs).run(cells);
+    Ok(analyze(budget.clone(), candidates, sweep))
+}
+
+/// Pure, serial post-processing of the sweep results — everything that
+/// makes the report deterministic regardless of worker scheduling.
+fn analyze(budget: Budget, candidates: Vec<Candidate>, sweep: SweepReport) -> PlanReport {
+    debug_assert_eq!(candidates.len(), sweep.cells.len());
+    let summaries: Vec<ProfileSummary> = sweep.cells.iter().map(|c| c.summary.clone()).collect();
+    let feasible: Vec<bool> = summaries
+        .iter()
+        .map(|s| !s.oom && s.peak_reserved <= budget.capacity)
+        .collect();
+
+    // Per-strategy un-mitigated baseline time (policy `never`, default
+    // allocator, run to completion).
+    let baseline_time = |strategy_label: &str| -> Option<f64> {
+        candidates
+            .iter()
+            .position(|c| {
+                c.strategy_label == strategy_label
+                    && c.policy == EmptyCachePolicy::Never
+                    && c.alloc_label == "default"
+            })
+            .filter(|&i| !summaries[i].oom)
+            .map(|i| summaries[i].total_time_us)
+    };
+    let overhead: Vec<Option<f64>> = candidates
+        .iter()
+        .zip(&summaries)
+        .map(|(c, s)| {
+            baseline_time(&c.strategy_label)
+                .map(|base| (s.total_time_us - base) / base * 100.0)
+        })
+        .collect();
+
+    let points: Vec<frontier::Point> = summaries
+        .iter()
+        .zip(&feasible)
+        .map(|(s, &ok)| (s.peak_reserved, s.total_time_us, ok))
+        .collect();
+    let on_frontier = frontier::pareto_frontier(&points);
+
+    // Recommendation order: feasible, within the overhead tolerance,
+    // cheapest peak reserved first (time, then index break ties).
+    let mut recommended: Vec<usize> = (0..candidates.len())
+        .filter(|&i| {
+            feasible[i]
+                && match overhead[i] {
+                    Some(o) => o <= budget.max_overhead_pct,
+                    None => true, // unmeasurable overhead can't exceed a cap
+                }
+        })
+        .collect();
+    recommended.sort_by(|&a, &b| {
+        summaries[a]
+            .peak_reserved
+            .cmp(&summaries[b].peak_reserved)
+            .then(summaries[a].total_time_us.total_cmp(&summaries[b].total_time_us))
+            .then(a.cmp(&b))
+    });
+    let mut rank: Vec<Option<usize>> = vec![None; candidates.len()];
+    for (pos, &i) in recommended.iter().enumerate() {
+        rank[i] = Some(pos + 1);
+    }
+
+    let outcomes = candidates
+        .into_iter()
+        .enumerate()
+        .map(|(i, candidate)| PlanOutcome {
+            candidate,
+            summary: summaries[i].clone(),
+            feasible: feasible[i],
+            overhead_pct: overhead[i],
+            on_frontier: on_frontier[i],
+            rank: rank[i],
+        })
+        .collect();
+    PlanReport {
+        budget,
+        outcomes,
+        wall_seconds: sweep.wall_seconds,
+        jobs: sweep.jobs,
+    }
+}
+
+impl PlanReport {
+    /// Recommended outcomes (feasible, within tolerance), best first.
+    pub fn recommended(&self) -> Vec<&PlanOutcome> {
+        let mut v: Vec<&PlanOutcome> = self.outcomes.iter().filter(|o| o.rank.is_some()).collect();
+        v.sort_by_key(|o| o.rank);
+        v
+    }
+
+    /// The single best configuration, if anything fits.
+    pub fn best(&self) -> Option<&PlanOutcome> {
+        self.outcomes.iter().find(|o| o.rank == Some(1))
+    }
+
+    /// The memory-vs-time Pareto frontier, cheapest memory first.
+    pub fn frontier(&self) -> Vec<&PlanOutcome> {
+        let mut v: Vec<&PlanOutcome> = self.outcomes.iter().filter(|o| o.on_frontier).collect();
+        v.sort_by(|a, b| {
+            a.summary
+                .peak_reserved
+                .cmp(&b.summary.peak_reserved)
+                .then(a.summary.total_time_us.total_cmp(&b.summary.total_time_us))
+                .then(a.candidate.index.cmp(&b.candidate.index))
+        });
+        v
+    }
+
+    /// The paper's §3.3 sanity anchor: the smallest measured overhead of a
+    /// phase-boundary `empty_cache` placement **with the stock allocator**
+    /// on the frontier (`None` if no such configuration survived pruning).
+    /// Restricted to `alloc_label == "default"` so the number measures
+    /// what the paper measured — `empty_cache` alone, not conflated with
+    /// expandable/gc allocator savings. For the Table-1 RTX-3090 budget
+    /// this should be ≈ 2%.
+    pub fn empty_cache_frontier_overhead(&self) -> Option<f64> {
+        self.min_frontier_empty_cache_overhead(true)
+    }
+
+    /// Like [`Self::empty_cache_frontier_overhead`], but over every
+    /// allocator candidate — what the full search space actually puts on
+    /// the frontier (an `empty_cache` placement combined with allocator
+    /// knobs can even come out faster than the stock baseline).
+    pub fn any_empty_cache_frontier_overhead(&self) -> Option<f64> {
+        self.min_frontier_empty_cache_overhead(false)
+    }
+
+    fn min_frontier_empty_cache_overhead(&self, default_alloc_only: bool) -> Option<f64> {
+        self.outcomes
+            .iter()
+            .filter(|o| {
+                o.on_frontier
+                    && o.candidate.policy != EmptyCachePolicy::Never
+                    && (!default_alloc_only || o.candidate.alloc_label == "default")
+            })
+            .filter_map(|o| o.overhead_pct)
+            .min_by(f64::total_cmp)
+    }
+
+    /// Deterministic JSON-lines dump: one line per candidate, enumeration
+    /// order. Byte-identical for the same budget whatever `jobs` was.
+    pub fn jsonl(&self) -> String {
+        let mut out = String::new();
+        for o in &self.outcomes {
+            out.push_str(&o.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// One `--json` document: budget echo + outcomes + the winner.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("budget", Json::str(self.budget.name.clone())),
+            ("capacity", Json::from(self.budget.capacity)),
+            ("max_overhead_pct", Json::from(self.budget.max_overhead_pct)),
+            (
+                "recommendation",
+                match self.best() {
+                    Some(o) => Json::str(o.candidate.key()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "outcomes",
+                Json::Arr(self.outcomes.iter().map(|o| o.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Ranked table of the top `top` recommendations.
+    pub fn to_table(&self, top: usize) -> TextTable {
+        let mut t = TextTable::new(&[
+            "Rank", "Strategy", "Policy", "Allocator", "Reserved", "Frag.", "Overhead", "Frontier",
+        ]);
+        for o in self.recommended().into_iter().take(top) {
+            t.row(outcome_row(o, o.rank.map(|r| r.to_string()).unwrap_or_default()));
+        }
+        t
+    }
+
+    /// The whole frontier as a table (rank column shows the position in
+    /// the ranking when the point is also recommended).
+    pub fn frontier_table(&self) -> TextTable {
+        let mut t = TextTable::new(&[
+            "Rank", "Strategy", "Policy", "Allocator", "Reserved", "Frag.", "Overhead", "Frontier",
+        ]);
+        for o in self.frontier() {
+            let rank = o.rank.map(|r| r.to_string()).unwrap_or_else(|| "-".into());
+            t.row(outcome_row(o, rank));
+        }
+        t
+    }
+
+    /// One-line run summary for CLI output.
+    pub fn summary_line(&self) -> String {
+        let feasible = self.outcomes.iter().filter(|o| o.feasible).count();
+        format!(
+            "{} candidates ({} feasible, {} on frontier) in {:.2}s on {} worker{}",
+            self.outcomes.len(),
+            feasible,
+            self.outcomes.iter().filter(|o| o.on_frontier).count(),
+            self.wall_seconds,
+            self.jobs,
+            if self.jobs == 1 { "" } else { "s" },
+        )
+    }
+}
+
+fn outcome_row(o: &PlanOutcome, rank: String) -> Vec<String> {
+    vec![
+        rank,
+        o.candidate.strategy_label.clone(),
+        o.candidate.policy.name().to_string(),
+        o.candidate.alloc_label.clone(),
+        fmt_gib_paper(o.summary.peak_reserved),
+        fmt_gib_paper(o.summary.frag),
+        match o.overhead_pct {
+            Some(p) => format!("{p:+.1}%"),
+            None => "n/a".to_string(),
+        },
+        if o.on_frontier { "*" } else { "" }.to_string(),
+    ]
+}
+
+impl PlanOutcome {
+    /// The outcome's JSON object — a pure function of deterministic
+    /// per-candidate data (never wall-clock or worker count).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::from(self.candidate.index)),
+            ("key", Json::str(self.candidate.key())),
+            ("strategy", Json::str(self.candidate.strategy_label.clone())),
+            ("policy", Json::str(self.candidate.policy.name())),
+            ("alloc", Json::str(self.candidate.alloc_label.clone())),
+            ("reserved", Json::from(self.summary.peak_reserved)),
+            ("frag", Json::from(self.summary.frag)),
+            ("allocated", Json::from(self.summary.peak_allocated)),
+            ("time_us", Json::from(self.summary.total_time_us)),
+            (
+                "overhead_pct",
+                match self.overhead_pct {
+                    Some(p) => Json::from(p),
+                    None => Json::Null,
+                },
+            ),
+            ("feasible", Json::from(self.feasible)),
+            ("frontier", Json::from(self.on_frontier)),
+            (
+                "rank",
+                match self.rank {
+                    Some(r) => Json::from(r),
+                    None => Json::Null,
+                },
+            ),
+            ("oom", Json::from(self.summary.oom)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_budget() -> Budget {
+        let mut b = Budget::rtx3090_table1();
+        b.steps = 1;
+        b.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
+        b.allocators = Some(vec!["default".to_string(), "expandable".to_string()]);
+        b
+    }
+
+    #[test]
+    fn plan_produces_one_outcome_per_candidate() {
+        let budget = tiny_budget();
+        let report = plan(&budget, 2).unwrap();
+        assert_eq!(report.outcomes.len(), 2 * 4 * 2);
+        assert_eq!(report.jsonl().lines().count(), report.outcomes.len());
+        for (i, o) in report.outcomes.iter().enumerate() {
+            assert_eq!(o.candidate.index, i);
+        }
+    }
+
+    #[test]
+    fn baselines_have_zero_overhead_and_ranking_is_consistent() {
+        let report = plan(&tiny_budget(), 2).unwrap();
+        for o in &report.outcomes {
+            if o.candidate.policy == EmptyCachePolicy::Never
+                && o.candidate.alloc_label == "default"
+                && !o.summary.oom
+            {
+                assert_eq!(o.overhead_pct, Some(0.0), "{}", o.candidate.key());
+            }
+        }
+        let rec = report.recommended();
+        assert!(!rec.is_empty(), "the paper's testbed fits 24 GiB");
+        // Ranking is by peak reserved, ascending.
+        for w in rec.windows(2) {
+            assert!(w[0].summary.peak_reserved <= w[1].summary.peak_reserved);
+        }
+        assert_eq!(report.best().unwrap().rank, Some(1));
+        // Every recommended outcome is feasible and within tolerance.
+        for o in rec {
+            assert!(o.feasible);
+            if let Some(p) = o.overhead_pct {
+                assert!(p <= report.budget.max_overhead_pct);
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_is_internally_nondominated() {
+        let report = plan(&tiny_budget(), 2).unwrap();
+        let frontier = report.frontier();
+        assert!(!frontier.is_empty());
+        for a in &frontier {
+            for b in &frontier {
+                if a.candidate.index == b.candidate.index {
+                    continue;
+                }
+                let strictly_worse = b.summary.peak_reserved <= a.summary.peak_reserved
+                    && b.summary.total_time_us <= a.summary.total_time_us
+                    && (b.summary.peak_reserved < a.summary.peak_reserved
+                        || b.summary.total_time_us < a.summary.total_time_us);
+                assert!(!strictly_worse, "frontier point dominated");
+            }
+        }
+    }
+
+    #[test]
+    fn same_budget_reproduces_itself() {
+        let budget = tiny_budget();
+        let a = plan(&budget, 1).unwrap();
+        let b = plan(&budget, 3).unwrap();
+        assert_eq!(a.jsonl(), b.jsonl());
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+}

@@ -1,0 +1,236 @@
+//! The mitigation space: every configuration the planner considers for a
+//! budget — strategy presets the framework supports × `empty_cache`
+//! placements × allocator-knob candidates — enumerated in a fixed,
+//! deterministic order and lowered to [`SweepCell`]s for the worker pool.
+
+use super::budget::Budget;
+use crate::alloc::AllocatorConfig;
+use crate::frameworks::FrameworkProfile;
+use crate::policy::EmptyCachePolicy;
+use crate::rlhf::sim::{ScenarioMode, SimScenario};
+use crate::strategies::StrategyConfig;
+use crate::sweep::SweepCell;
+use crate::util::bytes::MIB;
+
+/// One point of the mitigation space.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Position in enumeration order — the stable identity rankings and
+    /// JSONL lines are keyed by.
+    pub index: usize,
+    pub strategy_label: String,
+    pub strategy: StrategyConfig,
+    pub policy: EmptyCachePolicy,
+    pub alloc_label: String,
+    pub alloc_cfg: AllocatorConfig,
+}
+
+impl Candidate {
+    /// `strategy/policy/alloc` — unique within one plan.
+    pub fn key(&self) -> String {
+        format!(
+            "{}/{}/{}",
+            self.strategy_label,
+            self.policy.name(),
+            self.alloc_label
+        )
+    }
+}
+
+/// The allocator-knob candidates the planner searches: the PyTorch
+/// default, `max_split_size_mb:128`, `expandable_segments`,
+/// `garbage_collection_threshold:0.8`, and the expandable+gc combination.
+/// Labels are what budget `allocators` lists select by.
+pub fn allocator_candidates() -> Vec<(String, AllocatorConfig)> {
+    let base = AllocatorConfig::default();
+    let max_split = AllocatorConfig {
+        max_split_size: Some(128 * MIB),
+        ..base.clone()
+    };
+    let expandable = AllocatorConfig {
+        expandable_segments: true,
+        ..base.clone()
+    };
+    let gc = AllocatorConfig {
+        garbage_collection_threshold: Some(0.8),
+        ..base.clone()
+    };
+    let expandable_gc = AllocatorConfig {
+        expandable_segments: true,
+        garbage_collection_threshold: Some(0.8),
+        ..base.clone()
+    };
+    [base, max_split, expandable, gc, expandable_gc]
+        .into_iter()
+        .map(|c| (c.knob_label(), c))
+        .collect()
+}
+
+/// Enumerate the space for `budget` in deterministic order (strategy →
+/// policy → allocator), honouring its optional `strategies`/`allocators`
+/// restrictions and skipping strategies the framework cannot run.
+pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
+    let profile = FrameworkProfile::by_kind(budget.framework);
+
+    let strategy_rows: Vec<(String, StrategyConfig)> = match &budget.strategies {
+        Some(names) => names
+            .iter()
+            .map(|n| {
+                StrategyConfig::by_name(n)
+                    .map(|(label, s)| (label.to_string(), s))
+                    .ok_or_else(|| format!("unknown strategy '{n}'"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => StrategyConfig::table1_deepspeed_rows()
+            .into_iter()
+            .map(|(label, s)| (label.to_string(), s))
+            .collect(),
+    };
+
+    let all_allocs = allocator_candidates();
+    let allocs: Vec<(String, AllocatorConfig)> = match &budget.allocators {
+        Some(names) => names
+            .iter()
+            .map(|n| {
+                all_allocs
+                    .iter()
+                    .find(|(label, _)| label == n)
+                    .cloned()
+                    .ok_or_else(|| {
+                        let known: Vec<&str> =
+                            all_allocs.iter().map(|(l, _)| l.as_str()).collect();
+                        format!("unknown allocator '{n}' (known: {})", known.join(", "))
+                    })
+            })
+            .collect::<Result<_, _>>()?,
+        None => all_allocs,
+    };
+
+    let mut out = Vec::new();
+    for (slabel, strategy) in &strategy_rows {
+        if !profile.supports(strategy) {
+            continue;
+        }
+        for policy in EmptyCachePolicy::ALL {
+            for (alabel, acfg) in &allocs {
+                out.push(Candidate {
+                    index: out.len(),
+                    strategy_label: slabel.clone(),
+                    strategy: *strategy,
+                    policy,
+                    alloc_label: alabel.clone(),
+                    alloc_cfg: acfg.clone(),
+                });
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(format!(
+            "mitigation space is empty for framework {}",
+            budget.framework.name()
+        ));
+    }
+    Ok(out)
+}
+
+/// Lower candidates to [`SweepCell`]s for [`crate::sweep::SweepRunner`].
+/// Every cell shares the budget's seed (the search compares mitigations on
+/// the *same* workload) and runs at the budget's capacity.
+pub fn to_cells(budget: &Budget, candidates: &[Candidate]) -> Vec<SweepCell> {
+    let profile = FrameworkProfile::by_kind(budget.framework);
+    let len_jitter = budget.framework == crate::frameworks::FrameworkKind::ColossalChat;
+    candidates
+        .iter()
+        .map(|c| {
+            let scenario = SimScenario {
+                framework: profile.clone(),
+                models: budget.models.clone(),
+                strategy: c.strategy,
+                world: budget.world,
+                policy: c.policy,
+                steps: budget.steps,
+                mode: ScenarioMode::Full,
+                gpu: budget.gpu,
+                seed: budget.seed,
+                len_jitter,
+            };
+            SweepCell {
+                key: format!("advise/{}", c.key()),
+                framework: budget.framework.name().to_string(),
+                model: budget.models.policy_arch.name.clone(),
+                strategy: c.strategy_label.clone(),
+                mode: ScenarioMode::Full,
+                policy: c.policy,
+                alloc_label: c.alloc_label.clone(),
+                alloc_cfg: c.alloc_cfg.clone(),
+                scenario,
+                capacity: budget.capacity,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::FrameworkKind;
+
+    #[test]
+    fn allocator_candidates_are_labelled_and_distinct() {
+        let cands = allocator_candidates();
+        assert_eq!(cands.len(), 5);
+        assert_eq!(cands[0].0, "default");
+        let labels: Vec<&str> = cands.iter().map(|(l, _)| l.as_str()).collect();
+        let mut dedup = labels.clone();
+        dedup.dedup();
+        assert_eq!(labels, dedup, "labels unique");
+        assert!(labels.contains(&"expandable"));
+        assert!(labels.contains(&"gc:0.80"));
+        assert!(labels.contains(&"max_split:128MiB"));
+    }
+
+    #[test]
+    fn full_space_shape_for_deepspeed() {
+        let budget = Budget::rtx3090_table1();
+        let cands = enumerate(&budget).unwrap();
+        // 7 strategies × 4 policies × 5 allocator configs.
+        assert_eq!(cands.len(), 7 * 4 * 5);
+        assert_eq!(cands[0].key(), "None/never/default");
+        for (i, c) in cands.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    #[test]
+    fn colossal_drops_unsupported_zero1() {
+        let mut budget = Budget::rtx3090_table1();
+        budget.framework = FrameworkKind::ColossalChat;
+        let cands = enumerate(&budget).unwrap();
+        assert_eq!(cands.len(), 6 * 4 * 5, "ZeRO-1 filtered out");
+        assert!(cands.iter().all(|c| c.strategy_label != "ZeRO-1"));
+    }
+
+    #[test]
+    fn budget_restrictions_narrow_the_space() {
+        let mut budget = Budget::rtx3090_table1();
+        budget.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
+        budget.allocators = Some(vec!["default".to_string(), "expandable".to_string()]);
+        let cands = enumerate(&budget).unwrap();
+        assert_eq!(cands.len(), 2 * 4 * 2);
+        budget.strategies = Some(vec!["bogus".to_string()]);
+        assert!(enumerate(&budget).is_err());
+    }
+
+    #[test]
+    fn cells_share_seed_and_capacity() {
+        let mut budget = Budget::rtx3090_table1();
+        budget.strategies = Some(vec!["none".to_string()]);
+        let cands = enumerate(&budget).unwrap();
+        let cells = to_cells(&budget, &cands);
+        assert_eq!(cells.len(), cands.len());
+        assert!(cells.iter().all(|c| c.scenario.seed == budget.seed));
+        assert!(cells.iter().all(|c| c.capacity == budget.capacity));
+        assert_eq!(cells[0].key, "advise/None/never/default");
+        assert!(!cells[0].scenario.len_jitter, "deepspeed pads");
+    }
+}

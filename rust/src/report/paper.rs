@@ -7,7 +7,7 @@ use crate::experiment::{run_scenario, ExperimentResult};
 use crate::policy::EmptyCachePolicy;
 use crate::profiler::ProfileSummary;
 use crate::rlhf::sim::SimScenario;
-use crate::util::bytes::fmt_gib_paper;
+use crate::util::bytes::{fmt_gib_paper, GIB};
 
 /// One rendered row of Table 1/2: the strategy label plus the six cells
 /// (original reserved/frag/allocated, empty_cache reserved/frag).
@@ -97,6 +97,72 @@ pub fn paper_table2() -> Vec<(&'static str, &'static str, [f64; 5])> {
     ]
 }
 
+/// Deviation of one measured row from the paper's published values, in
+/// GiB: the maximum absolute difference over the capacity-scale columns —
+/// reserved, allocated, and empty-cache reserved (`paper` columns 0, 2,
+/// 3). The two fragmentation columns are excluded: they are an order of
+/// magnitude smaller and noisier, so they would drown the gate in false
+/// alarms without protecting anything the reserved columns don't.
+///
+/// This is what `table1`/`table2 --compare-paper --tolerance-gib T` gate
+/// on: max deviation over every matched row > T ⇒ non-zero exit, so CI
+/// can use the comparison as a regression guard.
+pub fn row_deviation_gib(paper: &[f64; 5], row: &StrategyRow) -> f64 {
+    let sim = [
+        row.original.peak_reserved as f64 / GIB as f64,
+        row.original.frag as f64 / GIB as f64,
+        row.original.peak_allocated as f64 / GIB as f64,
+        row.with_empty_cache.peak_reserved as f64 / GIB as f64,
+        row.with_empty_cache.frag as f64 / GIB as f64,
+    ];
+    [0usize, 2, 3]
+        .into_iter()
+        .map(|i| (sim[i] - paper[i]).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Fold a row's deviation into a running `(worst, label)` maximum.
+pub fn track_worst_deviation(
+    worst: &mut (f64, String),
+    paper: &[f64; 5],
+    row: &StrategyRow,
+    label: &str,
+) {
+    let dev = row_deviation_gib(paper, row);
+    if dev > worst.0 {
+        *worst = (dev, label.to_string());
+    }
+}
+
+/// The shared `--compare-paper` gate: print the worst deviation, then fail
+/// when nothing matched the published `table` (a gate that matched zero
+/// rows is a broken gate, not a green one — label drift must fail loudly)
+/// or when the worst deviation exceeds `tolerance` GiB.
+pub fn gate_paper_deviation(
+    table: &str,
+    worst: &(f64, String),
+    matched: usize,
+    tolerance: f64,
+) -> Result<(), String> {
+    println!(
+        "paper deviation: worst {:.2} GiB at {} over {matched} rows (tolerance {:.2} GiB)",
+        worst.0, worst.1, tolerance
+    );
+    if matched == 0 {
+        return Err(format!(
+            "compare-paper matched no rows against the published {table} (row labels drifted?)"
+        ));
+    }
+    if worst.0 > tolerance {
+        return Err(format!(
+            "deviation from published {table} exceeds tolerance: \
+             {:.2} GiB at {} > {:.2} GiB (--tolerance-gib to adjust)",
+            worst.0, worst.1, tolerance
+        ));
+    }
+    Ok(())
+}
+
 /// Convenience used by benches: run + return both variants' results.
 pub fn measure_row_full(
     label: &str,
@@ -129,6 +195,62 @@ mod tests {
         for (_, _, v) in paper_table2() {
             assert!(v[0] > 24.0 && v[0] < 80.0, "A100 rows within 80 GiB");
         }
+    }
+
+    #[test]
+    fn deviation_measures_reserved_scale_columns_only() {
+        use crate::trace::PhaseKind;
+        let mk = |reserved_gib: f64, frag_gib: f64, alloc_gib: f64| ProfileSummary {
+            peak_reserved: (reserved_gib * GIB as f64) as u64,
+            frag: (frag_gib * GIB as f64) as u64,
+            peak_allocated: (alloc_gib * GIB as f64) as u64,
+            frag_at_peak: 0,
+            peak_phase: PhaseKind::TrainActor,
+            total_time_us: 1.0,
+            allocator_time_us: 0.1,
+            empty_cache_calls: 0,
+            empty_cache_released: 0,
+            cuda_mallocs: 1,
+            oom: false,
+        };
+        let paper = [18.8, 0.2, 18.2, 19.4, 0.05];
+        // Exact match: zero deviation.
+        let row = StrategyRow {
+            strategy: "None".into(),
+            original: mk(18.8, 0.2, 18.2),
+            with_empty_cache: mk(19.4, 0.05, 18.2),
+        };
+        assert!(row_deviation_gib(&paper, &row) < 1e-6);
+        // A 1.5 GiB reserved miss registers...
+        let row2 = StrategyRow {
+            strategy: "None".into(),
+            original: mk(20.3, 0.2, 18.2),
+            with_empty_cache: mk(19.4, 0.05, 18.2),
+        };
+        let dev = row_deviation_gib(&paper, &row2);
+        assert!((dev - 1.5).abs() < 1e-6, "{dev}");
+        // ...while a fragmentation-column miss alone does not gate.
+        let row3 = StrategyRow {
+            strategy: "None".into(),
+            original: mk(18.8, 3.0, 18.2),
+            with_empty_cache: mk(19.4, 0.05, 18.2),
+        };
+        assert!(row_deviation_gib(&paper, &row3) < 1e-6);
+        // track_worst_deviation keeps the max.
+        let mut worst = (0.0, String::new());
+        track_worst_deviation(&mut worst, &paper, &row, "exact");
+        track_worst_deviation(&mut worst, &paper, &row2, "off");
+        assert_eq!(worst.1, "off");
+        assert!((worst.0 - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gate_trips_on_zero_matches_and_excess_deviation() {
+        let ok = (0.5, "row".to_string());
+        assert!(gate_paper_deviation("Table 1", &ok, 3, 2.0).is_ok());
+        assert!(gate_paper_deviation("Table 1", &ok, 0, 2.0).is_err());
+        let bad = (2.5, "worst/row".to_string());
+        assert!(gate_paper_deviation("Table 2", &bad, 3, 2.0).is_err());
     }
 
     #[test]

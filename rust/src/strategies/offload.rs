@@ -64,7 +64,7 @@ mod tests {
             double_buffer: false,
         };
         let chunks = cfg.staging_chunks(250);
-        assert_eq!(chunks, vec![100, 100, 50]);
+        assert_eq!(chunks, [100, 100, 50]);
         assert!(cfg.staging_chunks(0).is_empty());
         assert_eq!(cfg.live_buffers(), 1);
     }

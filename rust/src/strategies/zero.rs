@@ -129,9 +129,9 @@ mod tests {
     #[test]
     fn buckets_cover_exactly() {
         let bs = reduce_buckets(25 * MIB, 10 * MIB);
-        assert_eq!(bs, vec![10 * MIB, 10 * MIB, 5 * MIB]);
+        assert_eq!(bs, [10 * MIB, 10 * MIB, 5 * MIB]);
         assert_eq!(bs.iter().sum::<u64>(), 25 * MIB);
         assert!(reduce_buckets(0, MIB).is_empty());
-        assert_eq!(gather_buffers(MIB, 10 * MIB), vec![MIB]);
+        assert_eq!(gather_buffers(MIB, 10 * MIB), [MIB]);
     }
 }

@@ -1,7 +1,8 @@
 //! Grid construction: enumerate framework × model-set × strategy ×
-//! scenario-mode × `empty_cache`-policy combinations into a flat list of
-//! [`SweepCell`]s with deterministic per-cell seeds.
+//! scenario-mode × `empty_cache`-policy × allocator-config combinations
+//! into a flat list of [`SweepCell`]s with deterministic per-cell seeds.
 
+use crate::alloc::AllocatorConfig;
 use crate::experiment::RTX3090_HBM;
 use crate::frameworks::{FrameworkKind, FrameworkProfile};
 use crate::policy::EmptyCachePolicy;
@@ -27,13 +28,19 @@ pub enum SeedPolicy {
 #[derive(Debug, Clone)]
 pub struct SweepCell {
     /// `framework/model/strategy/mode/policy` — the stable identity used
-    /// by filters, seeds and reports.
+    /// by filters, seeds and reports. Grids with a non-default allocator
+    /// axis append `/alloc_label` as a sixth component.
     pub key: String,
     pub framework: String,
     pub model: String,
     pub strategy: String,
     pub mode: ScenarioMode,
     pub policy: EmptyCachePolicy,
+    /// Display label of the allocator configuration ("default" unless the
+    /// grid's allocator axis says otherwise).
+    pub alloc_label: String,
+    /// Allocator tunables for this cell's simulated GPU.
+    pub alloc_cfg: AllocatorConfig,
     pub scenario: SimScenario,
     /// Device capacity in bytes for this cell's simulated GPU.
     pub capacity: u64,
@@ -54,6 +61,7 @@ pub struct SweepGrid {
     model_sets: Vec<(String, RlhfModelSet)>,
     strategies: Vec<(String, StrategyConfig)>,
     policies: Vec<EmptyCachePolicy>,
+    allocators: Vec<(String, AllocatorConfig)>,
     modes: Vec<ScenarioMode>,
     steps: u64,
     world: u64,
@@ -80,6 +88,7 @@ impl SweepGrid {
             model_sets: vec![("OPT".to_string(), RlhfModelSet::opt())],
             strategies: vec![("None".to_string(), StrategyConfig::none())],
             policies: vec![EmptyCachePolicy::Never],
+            allocators: vec![("default".to_string(), AllocatorConfig::default())],
             modes: vec![ScenarioMode::Full],
             steps: 3,
             world: 4,
@@ -119,6 +128,18 @@ impl SweepGrid {
 
     pub fn policies(mut self, ps: impl IntoIterator<Item = EmptyCachePolicy>) -> Self {
         self.policies = ps.into_iter().collect();
+        self
+    }
+
+    /// Allocator-config axis (`PYTORCH_CUDA_ALLOC_CONF` emulations) with
+    /// display labels. Labels other than `"default"` are appended to the
+    /// cell key as a sixth `/`-component, so single-config grids keep the
+    /// legacy five-part keys the paper presets and tests rely on.
+    pub fn allocator_configs(
+        mut self,
+        cfgs: impl IntoIterator<Item = (impl Into<String>, AllocatorConfig)>,
+    ) -> Self {
+        self.allocators = cfgs.into_iter().map(|(l, c)| (l.into(), c)).collect();
         self
     }
 
@@ -208,6 +229,8 @@ impl SweepGrid {
             strategy,
             mode: scenario.mode,
             policy: scenario.policy,
+            alloc_label: "default".to_string(),
+            alloc_cfg: AllocatorConfig::default(),
             capacity: self.capacity,
             scenario,
         });
@@ -240,45 +263,64 @@ impl SweepGrid {
                     }
                     for mode in &self.modes {
                         for policy in &self.policies {
-                            let key = format!(
-                                "{}/{}/{}/{}/{}",
-                                kind.name(),
-                                mlabel,
-                                slabel,
-                                mode.name(),
-                                policy.name()
-                            );
-                            if !self.passes_filters(&key) {
-                                continue;
+                            for (alabel, acfg) in &self.allocators {
+                                let scenario_key = format!(
+                                    "{}/{}/{}/{}/{}",
+                                    kind.name(),
+                                    mlabel,
+                                    slabel,
+                                    mode.name(),
+                                    policy.name()
+                                );
+                                let mut key = scenario_key.clone();
+                                if alabel != "default" {
+                                    key.push('/');
+                                    key.push_str(alabel);
+                                }
+                                if !self.passes_filters(&key) {
+                                    continue;
+                                }
+                                let mut scenario = SimScenario {
+                                    framework: profile.clone(),
+                                    models: models.clone(),
+                                    strategy: *strategy,
+                                    world: self.world,
+                                    policy: *policy,
+                                    steps: self.steps,
+                                    mode: *mode,
+                                    gpu: self.gpu,
+                                    seed: match self.seed {
+                                        SeedPolicy::Fixed(s) => s,
+                                        // Seeded from the *scenario* key
+                                        // (without the allocator suffix):
+                                        // the knob doesn't change trace
+                                        // generation, so cells differing
+                                        // only in allocator config must
+                                        // replay the identical workload —
+                                        // else the measured knob delta is
+                                        // confounded by seed noise.
+                                        SeedPolicy::PerCell(base) => {
+                                            derive_seed(base, &scenario_key)
+                                        }
+                                    },
+                                    len_jitter: *kind == FrameworkKind::ColossalChat,
+                                };
+                                if let Some(f) = &self.customize {
+                                    f(&mut scenario);
+                                }
+                                cells.push(SweepCell {
+                                    key,
+                                    framework: kind.name().to_string(),
+                                    model: mlabel.clone(),
+                                    strategy: slabel.clone(),
+                                    mode: *mode,
+                                    policy: *policy,
+                                    alloc_label: alabel.clone(),
+                                    alloc_cfg: acfg.clone(),
+                                    scenario,
+                                    capacity: self.capacity,
+                                });
                             }
-                            let mut scenario = SimScenario {
-                                framework: profile.clone(),
-                                models: models.clone(),
-                                strategy: *strategy,
-                                world: self.world,
-                                policy: *policy,
-                                steps: self.steps,
-                                mode: *mode,
-                                gpu: self.gpu,
-                                seed: match self.seed {
-                                    SeedPolicy::Fixed(s) => s,
-                                    SeedPolicy::PerCell(base) => derive_seed(base, &key),
-                                },
-                                len_jitter: *kind == FrameworkKind::ColossalChat,
-                            };
-                            if let Some(f) = &self.customize {
-                                f(&mut scenario);
-                            }
-                            cells.push(SweepCell {
-                                key,
-                                framework: kind.name().to_string(),
-                                model: mlabel.clone(),
-                                strategy: slabel.clone(),
-                                mode: *mode,
-                                policy: *policy,
-                                scenario,
-                                capacity: self.capacity,
-                            });
                         }
                     }
                 }
@@ -386,6 +428,60 @@ mod tests {
         let seeds: Vec<u64> = a.iter().map(|c| c.scenario.seed).collect();
         assert_eq!(seeds, b.iter().map(|c| c.scenario.seed).collect::<Vec<_>>());
         assert_ne!(seeds[0], seeds[1], "distinct keys get distinct seeds");
+    }
+
+    #[test]
+    fn allocator_axis_suffixes_non_default_keys() {
+        let expandable = AllocatorConfig {
+            expandable_segments: true,
+            ..AllocatorConfig::default()
+        };
+        let cells = SweepGrid::new()
+            .allocator_configs([
+                ("default", AllocatorConfig::default()),
+                ("expandable", expandable.clone()),
+            ])
+            .build()
+            .unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].key, "DeepSpeed-Chat/OPT/None/full/never");
+        assert_eq!(cells[1].key, "DeepSpeed-Chat/OPT/None/full/never/expandable");
+        assert_eq!(cells[0].alloc_label, "default");
+        assert!(!cells[0].alloc_cfg.expandable_segments);
+        assert!(cells[1].alloc_cfg.expandable_segments);
+        // The axis participates in filters like every key component.
+        let only = SweepGrid::new()
+            .allocator_configs([
+                ("default", AllocatorConfig::default()),
+                ("expandable", expandable),
+            ])
+            .include("expandable")
+            .build()
+            .unwrap();
+        assert_eq!(only.len(), 1);
+        assert_eq!(only[0].alloc_label, "expandable");
+    }
+
+    #[test]
+    fn per_cell_seeds_ignore_the_allocator_suffix() {
+        // Cells differing only in allocator config replay the identical
+        // workload — the knob's effect must not be confounded by seeds.
+        let cells = SweepGrid::new()
+            .allocator_configs([
+                ("default", AllocatorConfig::default()),
+                (
+                    "expandable",
+                    AllocatorConfig {
+                        expandable_segments: true,
+                        ..AllocatorConfig::default()
+                    },
+                ),
+            ])
+            .seeds(SeedPolicy::PerCell(42))
+            .build()
+            .unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].scenario.seed, cells[1].scenario.seed);
     }
 
     #[test]

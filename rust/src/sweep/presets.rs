@@ -13,7 +13,7 @@ use crate::strategies::StrategyConfig;
 /// Table 1's three framework/model blocks (each row measured with and
 /// without `empty_cache()`), as one flat cell list.
 pub fn table1_cells(steps: u64) -> Result<Vec<SweepCell>, String> {
-    let blocks: [(FrameworkKind, &str, RlhfModelSet, Vec<(&str, StrategyConfig)>); 3] = [
+    let blocks = [
         (
             FrameworkKind::DeepSpeedChat,
             "OPT",

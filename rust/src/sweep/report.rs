@@ -57,7 +57,9 @@ impl SweepReport {
     /// Group cells into the paper's table layout: one block per
     /// `(framework, model)` in first-seen order, one [`StrategyRow`] per
     /// strategy (per scenario mode — non-`full` modes get the mode
-    /// appended to the row label so multi-mode grids don't collapse).
+    /// appended to the row label so multi-mode grids don't collapse, and
+    /// non-default allocator configs likewise get their label appended so
+    /// an allocator axis doesn't overwrite the stock rows).
     /// A cell with policy `never` fills the row's "original" half,
     /// `after_both` the "+ empty_cache" half; a row missing one half
     /// mirrors the other (so `never`-only grids still render).
@@ -74,11 +76,14 @@ impl SweepReport {
                     blocks.len() - 1
                 }
             };
-            let row_label = if cell.mode == "full" {
+            let mut row_label = if cell.mode == "full" {
                 cell.strategy.clone()
             } else {
                 format!("{} [{}]", cell.strategy, cell.mode)
             };
+            if cell.alloc != "default" {
+                row_label = format!("{} [{}]", row_label, cell.alloc);
+            }
             let rows = &mut blocks[bi].2;
             let ri = match rows.iter().position(|r| r.strategy == row_label) {
                 Some(i) => i,
@@ -123,6 +128,7 @@ impl SweepReport {
 
 #[cfg(test)]
 mod tests {
+    use crate::alloc::AllocatorConfig;
     use crate::policy::EmptyCachePolicy;
     use crate::strategies::StrategyConfig;
     use crate::sweep::{SweepGrid, SweepRunner};
@@ -150,6 +156,31 @@ mod tests {
         // the after_both half.
         assert_eq!(rows[0].original.empty_cache_calls, 0);
         assert!(rows[0].with_empty_cache.empty_cache_calls > 0);
+    }
+
+    #[test]
+    fn allocator_axis_gets_its_own_rows() {
+        let cells = SweepGrid::new()
+            .allocator_configs([
+                ("default", AllocatorConfig::default()),
+                (
+                    "expandable",
+                    AllocatorConfig {
+                        expandable_segments: true,
+                        ..AllocatorConfig::default()
+                    },
+                ),
+            ])
+            .steps(1)
+            .build()
+            .unwrap();
+        let report = SweepRunner::new(2).run(cells);
+        let blocks = report.strategy_rows();
+        assert_eq!(blocks.len(), 1);
+        let rows = &blocks[0].2;
+        assert_eq!(rows.len(), 2, "allocator variants must not collapse");
+        assert_eq!(rows[0].strategy, "None");
+        assert_eq!(rows[1].strategy, "None [expandable]");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use super::grid::SweepCell;
 use super::report::SweepReport;
-use crate::experiment::{run_scenario, ExperimentResult};
+use crate::experiment::{run_scenario_with, ExperimentResult};
 use crate::profiler::{MemoryProfiler, ProfileSummary};
 use crate::util::json::Json;
 use std::io::Write;
@@ -30,6 +30,9 @@ pub struct CellResult {
     pub strategy: String,
     pub mode: &'static str,
     pub policy: &'static str,
+    /// Allocator-config label of the cell ("default" unless the grid's
+    /// allocator axis set one).
+    pub alloc: String,
     pub seed: u64,
     pub summary: ProfileSummary,
     pub profiler: Option<MemoryProfiler>,
@@ -47,6 +50,7 @@ impl CellResult {
             ("strategy", Json::str(self.strategy.clone())),
             ("mode", Json::str(self.mode)),
             ("policy", Json::str(self.policy)),
+            ("alloc", Json::str(self.alloc.clone())),
             ("seed", Json::from(self.seed)),
             ("reserved", Json::from(self.summary.peak_reserved)),
             ("frag", Json::from(self.summary.frag)),
@@ -159,7 +163,7 @@ impl SweepRunner {
 fn run_cell(index: usize, cell: &SweepCell, capture: bool) -> CellResult {
     let ExperimentResult {
         summary, profiler, ..
-    } = run_scenario(&cell.scenario, cell.capacity);
+    } = run_scenario_with(&cell.scenario, cell.capacity, &cell.alloc_cfg);
     CellResult {
         index,
         key: cell.key.clone(),
@@ -168,6 +172,7 @@ fn run_cell(index: usize, cell: &SweepCell, capture: bool) -> CellResult {
         strategy: cell.strategy.clone(),
         mode: cell.mode.name(),
         policy: cell.policy.name(),
+        alloc: cell.alloc_label.clone(),
         seed: cell.scenario.seed,
         summary,
         profiler: if capture { Some(profiler) } else { None },

@@ -98,14 +98,8 @@ impl Json {
         Json::Num(n.into())
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        write_json(self, &mut s, None, 0);
-        s
-    }
-
-    /// Serialize with 2-space indentation.
+    /// Serialize with 2-space indentation. (Compact serialization is
+    /// `Display`/`ToString`: `json.to_string()`.)
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         write_json(self, &mut s, Some(2), 0);
@@ -115,7 +109,9 @@ impl Json {
 
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.to_string())
+        let mut s = String::new();
+        write_json(self, &mut s, None, 0);
+        f.write_str(&s)
     }
 }
 
@@ -531,7 +527,7 @@ mod tests {
         let v = parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
         if let Json::Obj(kvs) = &v {
             let keys: Vec<&str> = kvs.iter().map(|(k, _)| k.as_str()).collect();
-            assert_eq!(keys, vec!["z", "a", "m"]);
+            assert_eq!(keys, ["z", "a", "m"]);
         } else {
             panic!("not an object");
         }

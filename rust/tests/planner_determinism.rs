@@ -1,0 +1,101 @@
+//! Planner integration tests: the golden determinism contract (`advise`
+//! with `--jobs 1` vs `--jobs 4` is byte-identical) and the paper's §3.3
+//! sanity anchor (for the Table-1 RTX-3090 budget, phase-boundary
+//! `empty_cache` sits on the memory-vs-time frontier at ≈ 2% modeled
+//! overhead).
+
+use rlhf_mem::planner::{plan, Budget};
+use rlhf_mem::policy::EmptyCachePolicy;
+
+fn narrowed_budget() -> Budget {
+    let mut b = Budget::rtx3090_table1();
+    b.steps = 1;
+    b.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
+    b.allocators = Some(vec![
+        "default".to_string(),
+        "expandable".to_string(),
+        "gc:0.80".to_string(),
+    ]);
+    b
+}
+
+#[test]
+fn advise_jobs1_and_jobs4_are_byte_identical() {
+    let budget = narrowed_budget();
+    let serial = plan(&budget, 1).unwrap();
+    let pooled = plan(&budget, 4).unwrap();
+    assert_eq!(
+        serial.jsonl(),
+        pooled.jsonl(),
+        "recommendation JSONL must not depend on the worker count"
+    );
+    assert_eq!(
+        serial.to_json().to_string_pretty(),
+        pooled.to_json().to_string_pretty(),
+        "the full report document must not depend on the worker count"
+    );
+    assert_eq!(
+        serial.best().map(|o| o.candidate.key()),
+        pooled.best().map(|o| o.candidate.key()),
+    );
+    assert_eq!(pooled.jobs, 4);
+}
+
+#[test]
+fn advise_reproduces_itself_across_runs() {
+    let budget = narrowed_budget();
+    let a = plan(&budget, 3).unwrap();
+    let b = plan(&budget, 3).unwrap();
+    assert_eq!(a.jsonl(), b.jsonl());
+}
+
+#[test]
+fn example_budget_file_round_trips_through_the_planner() {
+    let mut budget =
+        Budget::from_file("examples/budget_rtx3090.json").expect("example budget parses");
+    assert_eq!(budget.name, "rtx3090-table1");
+    assert_eq!(budget.seed, 0x5EED);
+    // Narrow the space to keep the test fast; the full-space run is the
+    // `advise` command / benches/planner.rs.
+    budget.steps = 1;
+    budget.strategies = Some(vec!["none".to_string()]);
+    budget.allocators = Some(vec!["default".to_string()]);
+    let report = plan(&budget, 2).unwrap();
+    assert_eq!(report.outcomes.len(), 4);
+    assert!(report.best().is_some(), "the paper's testbed fits 24 GiB");
+}
+
+#[test]
+fn paper_anchor_empty_cache_on_frontier_within_two_percent() {
+    // The paper's own conclusion, reproduced by the search: with the
+    // Table-1 RTX-3090 budget and the paper's mitigation space (the stock
+    // allocator — the paper predates the planner's extra knobs), placing
+    // empty_cache() at phase boundaries is Pareto-optimal and costs ≈ 2%
+    // modeled time.
+    let mut budget = Budget::rtx3090_table1();
+    budget.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
+    budget.allocators = Some(vec!["default".to_string()]);
+    let report = plan(&budget, 4).unwrap();
+
+    let pct = report
+        .empty_cache_frontier_overhead()
+        .expect("an empty_cache placement survives frontier pruning");
+    assert!(
+        (-0.5..=3.0).contains(&pct),
+        "phase-boundary empty_cache overhead {pct:.2}% out of the paper's ~2% band"
+    );
+
+    // And it must genuinely reduce peak reserved vs the un-mitigated
+    // baseline of its strategy somewhere in the space.
+    let improved = report.outcomes.iter().any(|o| {
+        o.candidate.policy != EmptyCachePolicy::Never && {
+            let base = report.outcomes.iter().find(|b| {
+                b.candidate.strategy_label == o.candidate.strategy_label
+                    && b.candidate.policy == EmptyCachePolicy::Never
+                    && b.candidate.alloc_label == "default"
+            });
+            base.is_some_and(|b| o.summary.peak_reserved < b.summary.peak_reserved)
+        }
+    });
+    assert!(improved, "empty_cache must lower peak reserved somewhere");
+}
