@@ -10,7 +10,7 @@
 //! advisor's honest answer is then "buy a bigger GPU or shrink the
 //! model", and scripts can branch on it.
 
-use rlhf_mem::planner::{plan, Budget};
+use rlhf_mem::planner::{plan, plan_cluster, Budget};
 use rlhf_mem::sweep::SweepRunner;
 use rlhf_mem::util::bytes::fmt_gib_paper;
 use rlhf_mem::util::cli::Args;
@@ -22,6 +22,9 @@ the cheapest configuration that fits a GPU budget
 FLAGS:
   --budget FILE    JSON budget spec (default: the paper's RTX-3090 testbed;
                    see examples/budget_rtx3090.json for every field)
+  --cluster        search placement plan × strategy × world-size instead
+                   (feasible = every GPU of the plan fits the budget;
+                   ranked on the max-per-GPU-memory vs step-time frontier)
   --jobs N         worker threads (default: all cores)
   --top N          recommendations to print (default 10)
   --jsonl FILE     write one deterministic JSON line per candidate
@@ -39,6 +42,10 @@ pub fn run(args: &Args) -> Result<(), String> {
     };
     let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
     let top = args.get_usize("top", 10)?;
+
+    if args.bool_flag("cluster") {
+        return run_cluster(args, &budget, jobs, top);
+    }
 
     println!(
         "advise: budget '{}' — {} GiB, ≤{}% overhead, {} / {}",
@@ -85,6 +92,51 @@ pub fn run(args: &Args) -> Result<(), String> {
             "frontier: cheapest empty_cache placement (with allocator knobs) costs \
              {pct:+.1}% vs its un-mitigated baseline"
         );
+    }
+    println!("({})", report.summary_line());
+
+    if let Some(path) = args.flag("jsonl") {
+        std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.flag("json") {
+        std::fs::write(path, report.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `advise --cluster`: placement × strategy × world-size search.
+fn run_cluster(args: &Args, budget: &Budget, jobs: usize, top: usize) -> Result<(), String> {
+    println!(
+        "advise --cluster: budget '{}' — {} GiB per GPU, {} / {}",
+        budget.name,
+        fmt_gib_paper(budget.capacity),
+        budget.framework.name(),
+        budget.models.policy_arch.name,
+    );
+    let report = plan_cluster(budget, jobs)?;
+
+    println!("\n== top placements ==");
+    println!("{}", report.to_table(top).render());
+    println!("== max-per-GPU-memory vs step-time frontier ==");
+    println!("{}", report.frontier_table().render());
+
+    match report.best() {
+        Some(best) => println!(
+            "recommendation: {} — {} GiB on the most loaded GPU, {:.1} ms/step",
+            best.candidate.key(),
+            fmt_gib_paper(best.run.max_peak_reserved()),
+            best.run.step_time_us / 1000.0,
+        ),
+        None => {
+            println!("({})", report.summary_line());
+            return Err(format!(
+                "no placement fits the '{}' budget ({} GiB per GPU)",
+                budget.name,
+                fmt_gib_paper(budget.capacity)
+            ));
+        }
     }
     println!("({})", report.summary_line());
 

@@ -1,0 +1,188 @@
+//! `rlhf-mem cluster` — the multi-GPU placement simulator: run a
+//! placement × strategy sweep over a simulated node and report per-GPU
+//! peaks plus the modeled PPO step time of every configuration.
+//!
+//! ```text
+//! rlhf-mem cluster --gpus 2,4 --plans colocated,time-shared,dedicated \
+//!                  --strategies none,zero3 --steps 2 --jobs 8 \
+//!                  --jsonl cluster.jsonl
+//! ```
+//!
+//! Every GPU of every configuration replays its own trace as one cell of
+//! the sweep worker pool; aggregation is serial, so the JSONL output is
+//! byte-identical for any `--jobs`.
+
+use rlhf_mem::coordinator::schedule::{cluster_key, run_configs, ClusterConfig};
+use rlhf_mem::coordinator::{ClusterRun, PlacementPlan};
+use rlhf_mem::frameworks::{FrameworkKind, FrameworkProfile};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::report::cluster as render;
+use rlhf_mem::rlhf::cost::GpuSpec;
+use rlhf_mem::rlhf::models::RoleSet;
+use rlhf_mem::rlhf::sim::{ScenarioMode, SimScenario};
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::sweep::{model_set_by_name, SweepRunner};
+use rlhf_mem::util::bytes::GIB;
+use rlhf_mem::util::cli::Args;
+use rlhf_mem::util::json::Json;
+
+pub const CLUSTER_USAGE: &str = "\
+rlhf-mem cluster — simulate RLHF model placement over a multi-GPU node:
+per-GPU peak reserved + modeled step time per placement plan
+
+FLAGS (comma-separated lists):
+  --gpus 2,4                     node sizes to sweep (each >= 2; default 2,4)
+  --plans colocated,time-shared,dedicated   placement presets (default all)
+  --strategies none,zero1,zero2,zero3,offload,ckpt,all   (default none,zero3)
+  --framework ds|cc              framework profile (default ds)
+  --models opt|gpt2|nano         model pair (default opt)
+  --steps N        PPO steps per configuration (default 2)
+  --capacity-gib N simulated HBM per GPU (default 24)
+  --gpu rtx3090|a100             time-model GPU (default rtx3090)
+  --seed N         response-length seed (default 0x5EED)
+  --jobs N         worker threads (default: all cores)
+  --detail         also print the per-GPU breakdown table
+  --jsonl FILE     one deterministic JSON line per configuration
+  --json FILE      the whole report as one JSON array
+";
+
+fn split(s: &str) -> impl Iterator<Item = &str> {
+    s.split(',').map(str::trim).filter(|x| !x.is_empty())
+}
+
+pub fn run(args: &Args) -> Result<(), String> {
+    if args.bool_flag("help") {
+        println!("{CLUSTER_USAGE}");
+        return Ok(());
+    }
+
+    let worlds: Vec<u64> = split(args.get_or("gpus", "2,4"))
+        .map(|n| {
+            n.parse::<u64>()
+                .map_err(|_| format!("bad --gpus entry '{n}'"))
+                .and_then(|w| {
+                    if w >= 2 {
+                        Ok(w)
+                    } else {
+                        Err(format!("--gpus entries must be >= 2 (got {w})"))
+                    }
+                })
+        })
+        .collect::<Result<_, _>>()?;
+
+    let plan_names: Vec<&str> =
+        split(args.get_or("plans", "colocated,time-shared,dedicated")).collect();
+
+    let strategies: Vec<(&'static str, StrategyConfig)> =
+        split(args.get_or("strategies", "none,zero3"))
+            .map(|n| StrategyConfig::by_name(n).ok_or_else(|| format!("unknown strategy '{n}'")))
+            .collect::<Result<_, _>>()?;
+
+    let fw_name = args.get_or("framework", "ds");
+    let kind = FrameworkKind::by_name(fw_name)
+        .ok_or_else(|| format!("unknown framework '{fw_name}'"))?;
+    let profile = FrameworkProfile::by_kind(kind);
+
+    let model_name = args.get_or("models", "opt");
+    let (_mlabel, models) =
+        model_set_by_name(model_name).ok_or_else(|| format!("unknown model set '{model_name}'"))?;
+
+    let gpu = match args.get_or("gpu", "rtx3090") {
+        "rtx3090" => GpuSpec::rtx3090(),
+        "a100" | "a100-80g" => GpuSpec::a100_80g(),
+        other => return Err(format!("unknown gpu '{other}'")),
+    };
+    let steps = args.get_u64("steps", 2)?;
+    let capacity = args.get_u64("capacity-gib", 24)? * GIB;
+    let seed = args.get_u64("seed", 0x5EED)?;
+
+    // Enumerate configurations (world -> plan -> strategy); the shared
+    // coordinator engine lowers each GPU to a sweep cell and aggregates.
+    let mut configs: Vec<ClusterConfig> = Vec::new();
+    for &world in &worlds {
+        for plan_name in &plan_names {
+            let plan = PlacementPlan::by_name(plan_name, world)?;
+            for (label, strategy) in &strategies {
+                if !profile.supports(strategy) {
+                    continue;
+                }
+                let base = SimScenario {
+                    framework: profile.clone(),
+                    models: models.clone(),
+                    strategy: *strategy,
+                    world,
+                    policy: EmptyCachePolicy::Never,
+                    steps,
+                    mode: ScenarioMode::Full,
+                    gpu,
+                    seed,
+                    len_jitter: kind == FrameworkKind::ColossalChat,
+                    roles: RoleSet::ALL,
+                    time_shared: RoleSet::EMPTY,
+                    rank: 0,
+                };
+                configs.push(ClusterConfig {
+                    key: cluster_key(world, &plan.name, label),
+                    strategy_label: label.to_string(),
+                    plan: plan.clone(),
+                    base,
+                });
+            }
+        }
+    }
+    if configs.is_empty() {
+        return Err("cluster sweep is empty (no supported plan x strategy)".to_string());
+    }
+    let traces: u64 = configs.iter().map(|c| c.plan.gpus()).sum();
+    println!(
+        "cluster: {} configurations ({} GPU traces)",
+        configs.len(),
+        traces
+    );
+
+    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
+    let batch = run_configs(&configs, capacity, jobs)?;
+    let runs: Vec<(String, ClusterRun)> = configs
+        .iter()
+        .map(|c| c.key.clone())
+        .zip(batch.runs)
+        .collect();
+
+    println!("{}", render::summary_table(&runs).render());
+    if args.bool_flag("detail") {
+        println!("== per-GPU breakdown ==");
+        println!("{}", render::gpu_table(&runs).render());
+    }
+    let ooms = runs.iter().filter(|(_, r)| r.oom()).count();
+    println!(
+        "({} configurations, {} GPU traces in {:.2}s on {} worker{}, {} OOM)",
+        runs.len(),
+        batch.cells,
+        batch.wall_seconds,
+        batch.jobs,
+        if batch.jobs == 1 { "" } else { "s" },
+        ooms
+    );
+
+    if let Some(path) = args.flag("jsonl") {
+        std::fs::write(path, render::jsonl(&runs)).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.flag("json") {
+        let doc = Json::Arr(
+            runs.iter()
+                .map(|(key, run)| {
+                    let mut fields: Vec<(String, Json)> =
+                        vec![("key".to_string(), Json::str(key.clone()))];
+                    if let Json::Obj(kvs) = run.to_json() {
+                        fields.extend(kvs);
+                    }
+                    Json::Obj(fields)
+                })
+                .collect(),
+        );
+        std::fs::write(path, doc.to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

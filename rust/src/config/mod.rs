@@ -138,6 +138,9 @@ impl ExperimentConfig {
                 .get("len_jitter")
                 .and_then(|v| v.as_bool())
                 .unwrap_or(kind == FrameworkKind::ColossalChat),
+            roles: crate::rlhf::models::RoleSet::ALL,
+            time_shared: crate::rlhf::models::RoleSet::EMPTY,
+            rank: 0,
         };
         Ok(ExperimentConfig { scenario, capacity })
     }

@@ -1,13 +1,21 @@
 //! Ring-collective cost/byte accounting (all-gather, reduce-scatter,
-//! all-reduce, broadcast) used by the cost model and the node scheduler.
+//! all-reduce, broadcast) and point-to-point transfers, used by the cost
+//! model and the cluster scheduler.
 
 /// Bytes each rank RECEIVES over the wire for a ring collective moving a
 /// `total`-byte tensor across `world` ranks.
+///
+/// Ceil-chunked accounting: the tensor is cut into `world` chunks of
+/// `ceil(total / world)` bytes (the last chunk may be short) and every
+/// rank forwards one chunk per hop for `world - 1` hops. Truncating
+/// division here would undercount non-divisible tensors and report zero
+/// wire bytes whenever `total < world` — a ring still moves every byte of
+/// a small tensor through every rank.
 pub fn ring_wire_bytes(total: u64, world: u64) -> u64 {
-    if world <= 1 {
+    if world <= 1 || total == 0 {
         return 0;
     }
-    total / world * (world - 1)
+    total.div_ceil(world) * (world - 1)
 }
 
 /// All-reduce = reduce-scatter + all-gather (2x the wire volume).
@@ -24,6 +32,16 @@ pub fn ring_time_us(total: u64, world: u64, link_bw: f64, hop_latency_us: f64) -
     wire / link_bw * 1e6 + hop_latency_us * (world - 1) as f64
 }
 
+/// Time for a point-to-point transfer of `bytes` at `link_bw` bytes/s plus
+/// a launch latency — how the cluster scheduler charges experience
+/// shipping between GPUs that host different RLHF models.
+pub fn p2p_time_us(bytes: u64, link_bw: f64, latency_us: f64) -> f64 {
+    if bytes == 0 {
+        return 0.0;
+    }
+    bytes as f64 / link_bw * 1e6 + latency_us
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -36,10 +54,44 @@ mod tests {
     }
 
     #[test]
+    fn small_tensors_still_move_bytes() {
+        // total < world: truncating division would say 0 — the ring still
+        // forwards the (single-chunk) tensor world-1 times.
+        assert_eq!(ring_wire_bytes(3, 8), 7);
+        assert_eq!(ring_wire_bytes(1, 2), 1);
+        // Non-divisible totals round the chunk up.
+        assert_eq!(ring_wire_bytes(1000, 3), 334 * 2);
+        assert_eq!(ring_wire_bytes(7, 4), 2 * 3);
+    }
+
+    #[test]
+    fn wire_bytes_positive_for_any_nonempty_tensor() {
+        for total in [1u64, 2, 3, 15, 16, 17, 1000, 1_000_003] {
+            for world in 2u64..=16 {
+                let wire = ring_wire_bytes(total, world);
+                assert!(wire > 0, "total {total} world {world}");
+                // Ceil chunks never undercount the exact per-rank volume.
+                let exact = total as f64 * (world - 1) as f64 / world as f64;
+                assert!(wire as f64 >= exact, "total {total} world {world}");
+            }
+        }
+        assert_eq!(ring_wire_bytes(0, 8), 0);
+    }
+
+    #[test]
     fn time_scales() {
         let t4 = ring_time_us(1 << 30, 4, 12e9, 5.0);
         let t8 = ring_time_us(1 << 30, 8, 12e9, 5.0);
         assert!(t8 > t4);
         assert_eq!(ring_time_us(1 << 30, 1, 12e9, 5.0), 0.0);
+        // Even a 1-byte collective takes hop latency.
+        assert!(ring_time_us(1, 4, 12e9, 5.0) >= 15.0);
+    }
+
+    #[test]
+    fn p2p_time_is_bandwidth_plus_latency() {
+        assert_eq!(p2p_time_us(0, 12e9, 5.0), 0.0);
+        let t = p2p_time_us(12_000_000_000, 12e9, 5.0);
+        assert!((t - 1_000_005.0).abs() < 1e-6, "{t}");
     }
 }

@@ -1,8 +1,14 @@
 //! Multi-GPU coordination: collectives accounting, ZeRO partition maps,
-//! and the lockstep simulated node.
+//! the lockstep simulated node, and the cluster placement simulator
+//! (placement plans + the step-time scheduler behind `rlhf-mem cluster`
+//! and `advise --cluster`).
 
 pub mod collective;
 pub mod node;
 pub mod partition;
+pub mod placement;
+pub mod schedule;
 
 pub use node::{run_node, NodeResult};
+pub use placement::PlacementPlan;
+pub use schedule::{ClusterRun, GpuLoad};

@@ -1,0 +1,233 @@
+//! Cluster placement plans: which of the four RLHF models lives on which
+//! GPU, and whether colocated frozen scorers are phase-time-shared
+//! (swapped to host between the experience and training phases, the
+//! Hydra-style fusion of "Efficient RLHF", Santacroce et al. 2023).
+//!
+//! A plan is a per-GPU [`RoleSet`] assignment plus a per-GPU time-shared
+//! subset. [`PlacementPlan::scenario_for_gpu`] specializes a base
+//! [`SimScenario`] for one GPU — role subset, DP world/rank — so every
+//! GPU of the plan emits its *own* trace through
+//! [`crate::rlhf::sim::build_trace`].
+
+use crate::rlhf::models::{Role, RoleSet};
+use crate::rlhf::sim::SimScenario;
+
+/// How the four RLHF models are spread over a node's GPUs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlacementPlan {
+    /// Stable preset name (`colocated`, `time-shared`, `dedicated`).
+    pub name: String,
+    /// Per-GPU hosted model sets (length = GPU count).
+    pub hosted: Vec<RoleSet>,
+    /// Per-GPU subset of frozen scorers swapped to host during training.
+    pub time_shared: Vec<RoleSet>,
+}
+
+impl PlacementPlan {
+    /// The paper's baseline: every GPU holds a full data-parallel replica
+    /// of all four models.
+    pub fn colocated(gpus: u64) -> PlacementPlan {
+        PlacementPlan {
+            name: "colocated".to_string(),
+            hosted: vec![RoleSet::ALL; gpus as usize],
+            time_shared: vec![RoleSet::EMPTY; gpus as usize],
+        }
+    }
+
+    /// Full replicas, but the frozen reference + reward models are swapped
+    /// to host memory for the whole training span of every step.
+    pub fn time_shared(gpus: u64) -> PlacementPlan {
+        PlacementPlan {
+            name: "time-shared".to_string(),
+            hosted: vec![RoleSet::ALL; gpus as usize],
+            time_shared: vec![RoleSet::of(&[Role::Reference, Role::Reward]); gpus as usize],
+        }
+    }
+
+    /// The training pair (actor + critic) data-parallel over the first
+    /// `gpus - 1` GPUs; the frozen scorers live alone on the last GPU and
+    /// score shipped sequences. Needs at least 2 GPUs.
+    pub fn dedicated(gpus: u64) -> Result<PlacementPlan, String> {
+        if gpus < 2 {
+            return Err(format!("dedicated placement needs >= 2 GPUs (got {gpus})"));
+        }
+        let train = RoleSet::of(&[Role::Actor, Role::Critic]);
+        let scorers = RoleSet::of(&[Role::Reference, Role::Reward]);
+        let mut hosted = vec![train; gpus as usize - 1];
+        hosted.push(scorers);
+        PlacementPlan {
+            name: "dedicated".to_string(),
+            time_shared: vec![RoleSet::EMPTY; hosted.len()],
+            hosted,
+        }
+        .validated()
+    }
+
+    /// Every preset valid at this GPU count, in stable order.
+    pub fn presets(gpus: u64) -> Vec<PlacementPlan> {
+        let mut out = vec![Self::colocated(gpus), Self::time_shared(gpus)];
+        if let Ok(p) = Self::dedicated(gpus) {
+            out.push(p);
+        }
+        out
+    }
+
+    /// Preset lookup by CLI name (`colocated`, `time-shared`/`time_shared`,
+    /// `dedicated`).
+    pub fn by_name(name: &str, gpus: u64) -> Result<PlacementPlan, String> {
+        match name {
+            "colocated" => Ok(Self::colocated(gpus)),
+            "time-shared" | "time_shared" => Ok(Self::time_shared(gpus)),
+            "dedicated" => Self::dedicated(gpus),
+            other => Err(format!(
+                "unknown placement '{other}' (known: colocated, time-shared, dedicated)"
+            )),
+        }
+    }
+
+    pub fn gpus(&self) -> u64 {
+        self.hosted.len() as u64
+    }
+
+    /// Indices of the GPUs forming the training data-parallel group (those
+    /// hosting the actor).
+    pub fn dp_gpus(&self) -> Vec<usize> {
+        (0..self.hosted.len())
+            .filter(|&g| self.hosted[g].contains(Role::Actor))
+            .collect()
+    }
+
+    /// GPUs hosting `role`.
+    pub fn hosts_of(&self, role: Role) -> Vec<usize> {
+        (0..self.hosted.len())
+            .filter(|&g| self.hosted[g].contains(role))
+            .collect()
+    }
+
+    /// Structural invariants: at least one GPU, nothing idle, every model
+    /// hosted somewhere, time-sharing restricted to hosted frozen scorers.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.hosted.is_empty() {
+            return Err("placement plan has no GPUs".to_string());
+        }
+        if self.time_shared.len() != self.hosted.len() {
+            return Err("time_shared/hosted length mismatch".to_string());
+        }
+        for (g, set) in self.hosted.iter().enumerate() {
+            if set.is_empty() {
+                return Err(format!("GPU {g} hosts no model"));
+            }
+        }
+        for role in Role::ALL {
+            if self.hosts_of(role).is_empty() {
+                return Err(format!("no GPU hosts the {} model", role.name()));
+            }
+        }
+        for (g, ts) in self.time_shared.iter().enumerate() {
+            if !ts.is_subset_of(self.hosted[g]) {
+                return Err(format!("GPU {g} time-shares a model it does not host"));
+            }
+            for role in ts.iter() {
+                if role.is_trainable() {
+                    return Err(format!(
+                        "GPU {g} cannot time-share the trainable {} model",
+                        role.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn validated(self) -> Result<PlacementPlan, String> {
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Specialize a base (full-replica, rank-0) scenario for GPU `g`: its
+    /// hosted role subset, its time-shared set, and its position in the
+    /// training DP group (scorer-only GPUs hold unsharded replicas, so
+    /// they run as a world of one). A GPU *outside* the DP group serves
+    /// every DP rank — all `dp` ranks' rollouts fan in to it — so its
+    /// per-step batch scales by the DP group size.
+    pub fn scenario_for_gpu(&self, base: &SimScenario, g: usize) -> SimScenario {
+        let mut s = base.clone();
+        s.roles = self.hosted[g];
+        s.time_shared = self.time_shared[g];
+        let dp = self.dp_gpus();
+        match dp.iter().position(|&x| x == g) {
+            Some(r) => {
+                s.world = dp.len() as u64;
+                s.rank = r as u64;
+            }
+            None => {
+                s.world = 1;
+                s.rank = 0;
+                s.framework.rollout_batch *= dp.len().max(1) as u64;
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+
+    #[test]
+    fn presets_validate_and_cover_every_model() {
+        for gpus in [2u64, 3, 4, 8] {
+            let presets = PlacementPlan::presets(gpus);
+            assert!(presets.len() >= 3, "gpus {gpus}");
+            for p in &presets {
+                p.validate().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+                assert_eq!(p.gpus(), gpus);
+            }
+        }
+    }
+
+    #[test]
+    fn dedicated_splits_training_from_scoring() {
+        let p = PlacementPlan::dedicated(4).unwrap();
+        assert_eq!(p.dp_gpus(), vec![0, 1, 2]);
+        assert_eq!(p.hosts_of(Role::Reward), vec![3]);
+        assert!(!p.hosted[3].contains(Role::Actor));
+        assert!(PlacementPlan::dedicated(1).is_err());
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        for name in ["colocated", "time-shared", "dedicated"] {
+            let p = PlacementPlan::by_name(name, 2).unwrap();
+            assert_eq!(p.name, name);
+        }
+        assert_eq!(PlacementPlan::by_name("time_shared", 2).unwrap().name, "time-shared");
+        assert!(PlacementPlan::by_name("bogus", 2).is_err());
+    }
+
+    #[test]
+    fn scenario_specialization_assigns_dp_ranks() {
+        let base = SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+        let p = PlacementPlan::dedicated(3).unwrap();
+        let s0 = p.scenario_for_gpu(&base, 0);
+        assert_eq!((s0.world, s0.rank), (2, 0));
+        assert!(s0.roles.contains(Role::Actor));
+        assert!(!s0.roles.contains(Role::Reward));
+        let s1 = p.scenario_for_gpu(&base, 1);
+        assert_eq!((s1.world, s1.rank), (2, 1));
+        // The scorer GPU is outside the DP group: unsharded world of one.
+        let s2 = p.scenario_for_gpu(&base, 2);
+        assert_eq!((s2.world, s2.rank), (1, 0));
+        assert!(s2.roles.contains(Role::Reference));
+        assert!(!s2.roles.contains(Role::Critic));
+    }
+
+    #[test]
+    fn time_shared_rejects_trainables() {
+        let mut p = PlacementPlan::colocated(2);
+        p.time_shared[0] = RoleSet::of(&[Role::Actor]);
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,454 @@
+//! Cluster scheduling: lower a [`PlacementPlan`] to one sweep cell per
+//! GPU, then aggregate the per-GPU profiles into a [`ClusterRun`] — the
+//! per-GPU peaks plus a modeled PPO step time that charges every
+//! cross-GPU byte through [`super::collective`].
+//!
+//! The step-time model: GPUs run the phase pipeline in lockstep, so one
+//! step costs the *slowest* GPU's compute, plus point-to-point experience
+//! shipping for models hosted away from the actor, plus the data-parallel
+//! gradient synchronisation the single-GPU traces cannot see (ZeRO-2/3
+//! reduce-scatter is already charged inside each trace; ZeRO-0/1 gradients
+//! all-reduce here).
+
+use super::collective;
+use super::placement::PlacementPlan;
+use crate::alloc::AllocatorConfig;
+use crate::experiment::run_scenario;
+use crate::mem::{lora::lora_tensors, DType};
+use crate::profiler::ProfileSummary;
+use crate::rlhf::models::{Role, RoleSet};
+use crate::rlhf::sim::SimScenario;
+use crate::sweep::{SweepCell, SweepRunner};
+use crate::util::json::Json;
+
+/// Per-hop launch latency charged on ring collectives and P2P copies (µs).
+pub const HOP_LATENCY_US: f64 = 5.0;
+
+/// One GPU's share of a cluster run.
+#[derive(Debug, Clone)]
+pub struct GpuLoad {
+    pub gpu: u64,
+    pub roles: RoleSet,
+    pub peak_reserved: u64,
+    pub peak_allocated: u64,
+    pub frag: u64,
+    /// This GPU's whole-run modeled time (compute + allocator), µs.
+    pub compute_us: f64,
+    pub oom: bool,
+}
+
+/// Aggregated outcome of running one scenario under one placement plan.
+#[derive(Debug, Clone)]
+pub struct ClusterRun {
+    pub plan: PlacementPlan,
+    pub gpus: Vec<GpuLoad>,
+    /// Cross-GPU experience shipping per PPO step, µs.
+    pub p2p_us: f64,
+    /// Data-parallel gradient synchronisation per PPO step, µs.
+    pub collective_us: f64,
+    /// Modeled wall time of one PPO step, µs.
+    pub step_time_us: f64,
+}
+
+impl ClusterRun {
+    /// Peak reserved of the most loaded GPU — the number that must fit
+    /// the per-GPU capacity.
+    pub fn max_peak_reserved(&self) -> u64 {
+        self.gpus.iter().map(|g| g.peak_reserved).max().unwrap_or(0)
+    }
+
+    /// Σ per-GPU peaks — the cluster's total HBM bill.
+    pub fn total_peak_reserved(&self) -> u64 {
+        self.gpus.iter().map(|g| g.peak_reserved).sum()
+    }
+
+    pub fn oom(&self) -> bool {
+        self.gpus.iter().any(|g| g.oom)
+    }
+
+    /// Every GPU completed and fits `per_gpu_capacity`.
+    pub fn fits(&self, per_gpu_capacity: u64) -> bool {
+        !self.oom() && self.max_peak_reserved() <= per_gpu_capacity
+    }
+
+    /// Deterministic JSON object (per-GPU peaks + step-time breakdown; no
+    /// wall-clock, no worker count).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plan", Json::str(self.plan.name.clone())),
+            ("gpus", Json::from(self.plan.gpus())),
+            (
+                "per_gpu",
+                Json::Arr(
+                    self.gpus
+                        .iter()
+                        .map(|g| {
+                            Json::obj(vec![
+                                ("gpu", Json::from(g.gpu)),
+                                ("models", Json::str(g.roles.label())),
+                                ("reserved", Json::from(g.peak_reserved)),
+                                ("allocated", Json::from(g.peak_allocated)),
+                                ("frag", Json::from(g.frag)),
+                                ("compute_us", Json::from(g.compute_us)),
+                                ("oom", Json::from(g.oom)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("max_reserved", Json::from(self.max_peak_reserved())),
+            ("total_reserved", Json::from(self.total_peak_reserved())),
+            ("p2p_us", Json::from(self.p2p_us)),
+            ("collective_us", Json::from(self.collective_us)),
+            ("step_time_us", Json::from(self.step_time_us)),
+            ("oom", Json::from(self.oom())),
+        ])
+    }
+}
+
+/// Lower `plan` over `base` to one [`SweepCell`] per GPU, keyed
+/// `{key_prefix}/gpu{g}` — the unit of work the sweep worker pool runs,
+/// which is what makes `rlhf-mem cluster --jobs N` deterministic for any
+/// `N` (every GPU's trace replays in isolation; aggregation is serial).
+pub fn plan_cells(
+    key_prefix: &str,
+    strategy_label: &str,
+    plan: &PlacementPlan,
+    base: &SimScenario,
+    capacity: u64,
+) -> Vec<SweepCell> {
+    (0..plan.hosted.len())
+        .map(|g| {
+            let scenario = plan.scenario_for_gpu(base, g);
+            SweepCell {
+                key: format!("{key_prefix}/gpu{g}"),
+                framework: base.framework.kind.name().to_string(),
+                model: base.models.policy_arch.name.clone(),
+                strategy: strategy_label.to_string(),
+                mode: base.mode,
+                policy: base.policy,
+                alloc_label: "default".to_string(),
+                alloc_cfg: AllocatorConfig::default(),
+                scenario,
+                capacity,
+            }
+        })
+        .collect()
+}
+
+/// Combine the per-GPU summaries (in GPU order) into a [`ClusterRun`].
+pub fn aggregate(
+    plan: &PlacementPlan,
+    base: &SimScenario,
+    summaries: &[ProfileSummary],
+) -> Result<ClusterRun, String> {
+    plan.validate()?;
+    if summaries.len() != plan.hosted.len() {
+        return Err(format!(
+            "plan '{}' has {} GPUs but {} summaries",
+            plan.name,
+            plan.hosted.len(),
+            summaries.len()
+        ));
+    }
+    let gpus: Vec<GpuLoad> = summaries
+        .iter()
+        .enumerate()
+        .map(|(g, s)| GpuLoad {
+            gpu: g as u64,
+            roles: plan.hosted[g],
+            peak_reserved: s.peak_reserved,
+            peak_allocated: s.peak_allocated,
+            frag: s.frag,
+            compute_us: s.total_time_us,
+            oom: s.oom,
+        })
+        .collect();
+
+    let steps = base.steps.max(1) as f64;
+    let slowest = gpus.iter().map(|g| g.compute_us).fold(0.0, f64::max) / steps;
+    let p2p_us = p2p_us_per_step(plan, base);
+    let collective_us = collective_us_per_step(plan, base);
+    Ok(ClusterRun {
+        plan: plan.clone(),
+        gpus,
+        p2p_us,
+        collective_us,
+        step_time_us: slowest + p2p_us + collective_us,
+    })
+}
+
+/// The stable configuration key (`cluster/w{world}/{plan}/{strategy}`)
+/// shared by `rlhf-mem cluster` JSONL and the planner's
+/// `ClusterCandidate::key`, so the two outputs stay cross-referencable.
+pub fn cluster_key(world: u64, plan_name: &str, strategy_label: &str) -> String {
+    format!("cluster/w{world}/{plan_name}/{strategy_label}")
+}
+
+/// One fully-specified cluster configuration: a keyed placement plan over
+/// a base scenario — the unit both `rlhf-mem cluster` and
+/// `planner::plan_cluster` feed to [`run_configs`].
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub key: String,
+    pub strategy_label: String,
+    pub plan: PlacementPlan,
+    pub base: SimScenario,
+}
+
+/// The outcome of running a batch of configurations through one sweep
+/// pool: per-config runs in input order plus the pool's bookkeeping.
+#[derive(Debug)]
+pub struct ClusterBatch {
+    pub runs: Vec<ClusterRun>,
+    /// GPU traces executed across the batch.
+    pub cells: usize,
+    pub wall_seconds: f64,
+    pub jobs: usize,
+}
+
+/// Run every GPU of every configuration through one [`SweepRunner`] pool
+/// and aggregate per configuration. Cells execute in isolation and
+/// aggregation is serial, so the runs are byte-identical for any `jobs` —
+/// the shared engine behind `rlhf-mem cluster` and `advise --cluster`.
+pub fn run_configs(
+    configs: &[ClusterConfig],
+    capacity: u64,
+    jobs: usize,
+) -> Result<ClusterBatch, String> {
+    let mut cells = Vec::new();
+    let mut slices: Vec<(usize, usize)> = Vec::with_capacity(configs.len());
+    for c in configs {
+        let pc = plan_cells(&c.key, &c.strategy_label, &c.plan, &c.base, capacity);
+        slices.push((cells.len(), pc.len()));
+        cells.extend(pc);
+    }
+    let cell_count = cells.len();
+    let sweep = SweepRunner::new(jobs).run(cells);
+    let mut runs = Vec::with_capacity(configs.len());
+    for (i, c) in configs.iter().enumerate() {
+        let (start, len) = slices[i];
+        let summaries: Vec<ProfileSummary> = sweep.cells[start..start + len]
+            .iter()
+            .map(|r| r.summary.clone())
+            .collect();
+        runs.push(aggregate(&c.plan, &c.base, &summaries)?);
+    }
+    Ok(ClusterBatch {
+        runs,
+        cells: cell_count,
+        wall_seconds: sweep.wall_seconds,
+        jobs: sweep.jobs,
+    })
+}
+
+/// Serial convenience: run every GPU of `plan` and aggregate (the CLI and
+/// planner go through [`run_configs`] + the sweep pool instead).
+pub fn run_plan(
+    plan: &PlacementPlan,
+    base: &SimScenario,
+    per_gpu_capacity: u64,
+) -> Result<ClusterRun, String> {
+    plan.validate()?;
+    let summaries: Vec<ProfileSummary> = (0..plan.hosted.len())
+        .map(|g| {
+            let scn = plan.scenario_for_gpu(base, g);
+            run_scenario(&scn, per_gpu_capacity).summary
+        })
+        .collect();
+    aggregate(plan, base, &summaries)
+}
+
+/// Bytes one PPO step ships between GPUs for every model hosted away from
+/// the actor. Every DP rank's rollout fans in, so the shipped batch is
+/// `rollout_batch × dp`. The sequences + attention mask travel **once per
+/// remote GPU** (reference and reward sharing a scorer GPU share one
+/// copy); each remote model's head outputs travel back, and a remote
+/// critic additionally receives the advantages/returns computed on the
+/// actor's GPUs.
+fn remote_wire_bytes(plan: &PlacementPlan, base: &SimScenario) -> u64 {
+    let fw = &base.framework;
+    let dp = plan.dp_gpus().len().max(1) as u64;
+    let b = fw.rollout_batch * dp;
+    let s = fw.total_seq();
+    let seq_down = 2 * b * s * DType::I64.bytes(); // sequences + mask
+    let actor_gpus = plan.hosts_of(Role::Actor);
+    let mut wire = 0;
+    let mut seq_shipped_to: Vec<usize> = Vec::new();
+    for role in [Role::Reference, Role::Reward, Role::Critic] {
+        let hosts = plan.hosts_of(role);
+        let remote = hosts.iter().all(|g| !actor_gpus.contains(g));
+        if !remote {
+            continue;
+        }
+        for &g in &hosts {
+            if !seq_shipped_to.contains(&g) {
+                seq_shipped_to.push(g);
+                wire += seq_down;
+            }
+        }
+        let outputs_up = match role {
+            Role::Reference => b * s * 4, // ref logprobs
+            Role::Reward => b * 4,        // sequence rewards
+            Role::Critic => b * s * 4,    // values
+            Role::Actor => unreachable!(),
+        };
+        wire += outputs_up;
+        if role == Role::Critic {
+            // Advantages + returns stream back down for the value update.
+            wire += 2 * b * s * 4;
+        }
+    }
+    wire
+}
+
+fn p2p_us_per_step(plan: &PlacementPlan, base: &SimScenario) -> f64 {
+    collective::p2p_time_us(remote_wire_bytes(plan, base), base.gpu.link_bw, HOP_LATENCY_US)
+}
+
+/// Per-step gradient synchronisation across the training DP group. The
+/// single-GPU traces already charge ZeRO-2/3 reduce-scatter; ZeRO-0/1
+/// all-reduce their dense gradients here instead.
+fn collective_us_per_step(plan: &PlacementPlan, base: &SimScenario) -> f64 {
+    let dp = plan.dp_gpus().len() as u64;
+    if dp <= 1 || base.strategy.zero.partitions_gradients() {
+        return 0.0;
+    }
+    let mut us = 0.0;
+    for role in [Role::Actor, Role::Critic] {
+        let grads = trainable_bytes_f16(base, role);
+        // All-reduce = reduce-scatter + all-gather: 2x the ring volume.
+        us += 2.0 * collective::ring_time_us(grads, dp, base.gpu.link_bw, HOP_LATENCY_US);
+    }
+    us
+}
+
+/// fp16 bytes of `role`'s trainable tensors under the scenario's strategy
+/// (mirrors the trace emitter: LoRA shrinks only the actor).
+fn trainable_bytes_f16(base: &SimScenario, role: Role) -> u64 {
+    let inv = base.models.inventory_for(role);
+    let tensors = if role == Role::Actor {
+        match base.strategy.lora {
+            Some(spec) => lora_tensors(&inv, spec),
+            None => inv.tensors.clone(),
+        }
+    } else {
+        inv.tensors.clone()
+    };
+    tensors.iter().map(|t| t.bytes(DType::F16)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::RTX3090_HBM;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+
+    fn base() -> SimScenario {
+        let mut s = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        s.steps = 1;
+        s
+    }
+
+    #[test]
+    fn colocated_plan_loads_every_gpu_evenly() {
+        let plan = PlacementPlan::colocated(2);
+        let run = run_plan(&plan, &base(), RTX3090_HBM).unwrap();
+        assert_eq!(run.gpus.len(), 2);
+        assert!(!run.oom());
+        // Symmetric replicas: identical within shard-remainder noise.
+        let (a, b) = (run.gpus[0].peak_reserved, run.gpus[1].peak_reserved);
+        let spread = a.abs_diff(b) as f64 / a.max(b) as f64;
+        assert!(spread < 0.01, "{a} vs {b}");
+        // No remote model, ZeRO-0 on 2 ranks: gradients all-reduce.
+        assert_eq!(run.p2p_us, 0.0);
+        assert!(run.collective_us > 0.0);
+        assert!(run.step_time_us > 0.0);
+    }
+
+    #[test]
+    fn dedicated_plan_unloads_the_scorer_gpu_and_ships_bytes() {
+        let plan = PlacementPlan::dedicated(2).unwrap();
+        let run = run_plan(&plan, &base(), RTX3090_HBM).unwrap();
+        assert_eq!(run.gpus.len(), 2);
+        // The scorer GPU (frozen models only, no optimizer/training) is
+        // much lighter than the training GPU.
+        assert!(run.gpus[1].peak_reserved < run.gpus[0].peak_reserved);
+        // Remote scorers cost wire time every step.
+        assert!(run.p2p_us > 0.0);
+        assert_eq!(run.max_peak_reserved(), run.gpus[0].peak_reserved);
+        assert_eq!(
+            run.total_peak_reserved(),
+            run.gpus[0].peak_reserved + run.gpus[1].peak_reserved
+        );
+    }
+
+    #[test]
+    fn time_sharing_cuts_the_training_peak_or_matches() {
+        // Phase time-sharing frees the scorer replicas during training, so
+        // its per-GPU peak never exceeds the resident colocated plan's.
+        let colocated = run_plan(&PlacementPlan::colocated(2), &base(), RTX3090_HBM).unwrap();
+        let shared = run_plan(&PlacementPlan::time_shared(2), &base(), RTX3090_HBM).unwrap();
+        // (2% slack: the swap churn can shift segment boundaries a little.)
+        let cap = colocated.max_peak_reserved() + colocated.max_peak_reserved() / 50;
+        assert!(shared.max_peak_reserved() <= cap);
+        // ...and pays for it in swap time.
+        assert!(shared.step_time_us >= colocated.step_time_us * 0.99);
+    }
+
+    #[test]
+    fn aggregate_rejects_mismatched_summary_counts() {
+        let plan = PlacementPlan::colocated(2);
+        assert!(aggregate(&plan, &base(), &[]).is_err());
+    }
+
+    #[test]
+    fn zero2_skips_the_allreduce_charge() {
+        let mut b2 = base();
+        b2.strategy = StrategyConfig::zero2();
+        let run = run_plan(&PlacementPlan::colocated(2), &b2, RTX3090_HBM).unwrap();
+        assert_eq!(run.collective_us, 0.0, "reduce-scatter lives in-trace");
+    }
+
+    #[test]
+    fn plan_cells_key_every_gpu() {
+        let plan = PlacementPlan::dedicated(3).unwrap();
+        let cells = plan_cells("cluster/w3/dedicated/None", "None", &plan, &base(), RTX3090_HBM);
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].key, "cluster/w3/dedicated/None/gpu0");
+        assert_eq!(cells[2].key, "cluster/w3/dedicated/None/gpu2");
+        assert_eq!(cells[0].scenario.world, 2);
+        assert_eq!(cells[1].scenario.rank, 1);
+        assert_eq!(cells[2].scenario.world, 1);
+        // Both DP ranks' rollouts fan in to the scorer GPU.
+        assert_eq!(
+            cells[2].scenario.framework.rollout_batch,
+            2 * base().framework.rollout_batch
+        );
+        assert_eq!(
+            cells[0].scenario.framework.rollout_batch,
+            base().framework.rollout_batch
+        );
+    }
+
+    #[test]
+    fn run_configs_matches_serial_run_plan() {
+        let plan = PlacementPlan::dedicated(2).unwrap();
+        let config = ClusterConfig {
+            key: "cluster/w2/dedicated/None".to_string(),
+            strategy_label: "None".to_string(),
+            plan: plan.clone(),
+            base: base(),
+        };
+        let batch = run_configs(&[config], RTX3090_HBM, 2).unwrap();
+        assert_eq!(batch.runs.len(), 1);
+        assert_eq!(batch.cells, 2);
+        let serial = run_plan(&plan, &base(), RTX3090_HBM).unwrap();
+        assert_eq!(
+            batch.runs[0].to_json().to_string(),
+            serial.to_json().to_string(),
+            "pooled and serial aggregation must agree"
+        );
+    }
+}

@@ -22,7 +22,11 @@
 //! what regenerates every paper table N-core fast. On top of the sweep
 //! engine, the [`planner`] searches the whole mitigation space — strategy
 //! × `empty_cache` placement × allocator knobs — for the cheapest
-//! configuration that fits a user's GPU budget (`rlhf-mem advise`).
+//! configuration that fits a user's GPU budget (`rlhf-mem advise`), and
+//! the [`coordinator`] scales the simulator to a multi-GPU node: cluster
+//! placement plans (colocated / time-shared / dedicated), per-GPU traces
+//! that genuinely differ, and a step-time model charging cross-GPU bytes
+//! through ring/P2P collectives (`rlhf-mem cluster`, `advise --cluster`).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 

@@ -20,8 +20,11 @@ SUBCOMMANDS:
   ablation     §3.3 empty_cache placement ablation
   overhead     §3.3 end-to-end time overhead of empty_cache
   sweep        Run a user-defined scenario grid (see `sweep --help`)
+  cluster      Multi-GPU placement simulator: per-GPU peaks + step time
+               per placement plan (see `cluster --help`)
   advise       Search the mitigation space for the cheapest config that
-               fits a GPU budget (see `advise --help`)
+               fits a GPU budget; --cluster searches placements instead
+               (see `advise --help`)
   train        Real end-to-end PPO via PJRT artifacts (needs --features pjrt)
   quickstart   Tiny profiled RLHF run (fast smoke)
   profile      Run a user-defined experiment from a JSON config
@@ -45,6 +48,7 @@ fn main() {
         Some("ablation") => commands::ablation::run(&args),
         Some("overhead") => commands::overhead::run(&args),
         Some("sweep") => commands::sweep::run(&args),
+        Some("cluster") => commands::cluster::run(&args),
         Some("advise") => commands::advise::run(&args),
         Some("train") => run_train(&args),
         Some("quickstart") => commands::quickstart::run(&args),

@@ -16,14 +16,17 @@
 //!   "seed": 24301,
 //!   "gpu": "rtx3090",
 //!   "strategies": ["none", "zero3"],
-//!   "allocators": ["default", "expandable"]
+//!   "allocators": ["default", "expandable"],
+//!   "worlds": [2, 4]
 //! }
 //! ```
 //!
 //! `strategies` / `allocators` optionally narrow the mitigation space (by
 //! the short names [`crate::strategies::StrategyConfig::by_name`] accepts
 //! and the labels of [`super::space::allocator_candidates`]); omitted, the
-//! full space is searched.
+//! full space is searched. `worlds` lists the cluster sizes `advise
+//! --cluster` searches placements over (each ≥ 2 GPUs; omitted, `{2,
+//! world}`).
 
 use crate::frameworks::FrameworkKind;
 use crate::mem::ModelArch;
@@ -54,6 +57,9 @@ pub struct Budget {
     pub strategies: Option<Vec<String>>,
     /// Optional allocator-candidate labels restricting the search.
     pub allocators: Option<Vec<String>>,
+    /// Cluster sizes (GPU counts ≥ 2) `advise --cluster` searches.
+    /// Omitted, the cluster planner tries `{2, world}`.
+    pub worlds: Option<Vec<u64>>,
 }
 
 impl Budget {
@@ -74,6 +80,7 @@ impl Budget {
             gpu: GpuSpec::rtx3090(),
             strategies: None,
             allocators: None,
+            worlds: None,
         }
     }
 
@@ -89,7 +96,7 @@ impl Budget {
     pub fn from_json(j: &Json) -> Result<Budget, String> {
         // A typo'd field name must not silently fall back to defaults
         // (same fail-loud principle as the typed-field checks below).
-        const KNOWN: [&str; 12] = [
+        const KNOWN: [&str; 13] = [
             "name",
             "capacity_gib",
             "max_overhead_pct",
@@ -102,6 +109,7 @@ impl Budget {
             "gpu",
             "strategies",
             "allocators",
+            "worlds",
         ];
         if let Json::Obj(kvs) = j {
             for (k, _) in kvs {
@@ -186,6 +194,27 @@ impl Budget {
             }
         };
 
+        let worlds = match j.get("worlds") {
+            None => None,
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| "'worlds' must be an array of integers >= 2".to_string())?;
+                let ws = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_u64()
+                            .filter(|&w| w >= 2)
+                            .ok_or_else(|| "'worlds' entries must be integers >= 2".to_string())
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                if ws.is_empty() {
+                    return Err("'worlds' must not be empty".to_string());
+                }
+                Some(ws)
+            }
+        };
+
         Ok(Budget {
             name: j
                 .get("name")
@@ -205,6 +234,7 @@ impl Budget {
             gpu,
             strategies: name_list("strategies")?,
             allocators: name_list("allocators")?,
+            worlds,
         })
     }
 }
@@ -273,5 +303,11 @@ mod tests {
         assert!(Budget::from_json_text(r#"{"capacity": 48}"#).is_err());
         assert!(Budget::from_json_text(r#"{"capacity_gb": 48}"#).is_err());
         assert!(Budget::from_json_text("[1, 2]").is_err());
+        // Cluster worlds: >= 2 GPUs each, non-empty when present.
+        assert!(Budget::from_json_text(r#"{"worlds": []}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"worlds": [1]}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"worlds": ["2"]}"#).is_err());
+        let b = Budget::from_json_text(r#"{"worlds": [2, 4]}"#).unwrap();
+        assert_eq!(b.worlds.as_deref(), Some(&[2u64, 4][..]));
     }
 }

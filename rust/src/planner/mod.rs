@@ -18,6 +18,13 @@
 //! `rust/tests/sweep_determinism.rs` enforces for grids;
 //! `rust/tests/planner_determinism.rs` enforces it here).
 //!
+//! The same engine also answers the *multi-GPU* question (`advise
+//! --cluster`): [`plan_cluster`] searches placement plan × strategy ×
+//! world-size through [`crate::coordinator`], ranks feasible
+//! configurations by their most loaded GPU, and prunes to the
+//! max-per-GPU-memory vs step-time Pareto frontier
+//! (`rust/tests/cluster_determinism.rs` pins its `--jobs` invariance).
+//!
 //! # Example: advise a narrowed space
 //!
 //! ```
@@ -40,8 +47,10 @@ pub mod frontier;
 pub mod space;
 
 pub use budget::Budget;
-pub use space::{allocator_candidates, Candidate};
+pub use space::{allocator_candidates, Candidate, ClusterCandidate};
 
+use crate::coordinator::schedule::{run_configs, ClusterConfig};
+use crate::coordinator::ClusterRun;
 use crate::policy::EmptyCachePolicy;
 use crate::profiler::ProfileSummary;
 use crate::report::table::TextTable;
@@ -348,6 +357,255 @@ impl PlanOutcome {
     }
 }
 
+/// One cluster-placement candidate's verdict.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    pub candidate: ClusterCandidate,
+    pub run: ClusterRun,
+    /// Every GPU completed and the most loaded one fits the budget.
+    pub feasible: bool,
+    /// On the max-per-GPU-memory vs step-time Pareto frontier.
+    pub on_frontier: bool,
+    /// 1-based position among feasible configurations, cheapest most
+    /// loaded GPU first (step time, then index break ties).
+    pub rank: Option<usize>,
+}
+
+impl ClusterOutcome {
+    /// Deterministic per-candidate JSON (enumeration-order identity; no
+    /// wall-clock, no worker count).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::from(self.candidate.index)),
+            ("key", Json::str(self.candidate.key())),
+            ("world", Json::from(self.candidate.world)),
+            ("plan", Json::str(self.candidate.plan.name.clone())),
+            ("strategy", Json::str(self.candidate.strategy_label.clone())),
+            (
+                "per_gpu_reserved",
+                Json::Arr(
+                    self.run
+                        .gpus
+                        .iter()
+                        .map(|g| Json::from(g.peak_reserved))
+                        .collect(),
+                ),
+            ),
+            ("max_reserved", Json::from(self.run.max_peak_reserved())),
+            ("total_reserved", Json::from(self.run.total_peak_reserved())),
+            ("step_time_us", Json::from(self.run.step_time_us)),
+            ("p2p_us", Json::from(self.run.p2p_us)),
+            ("collective_us", Json::from(self.run.collective_us)),
+            ("feasible", Json::from(self.feasible)),
+            ("frontier", Json::from(self.on_frontier)),
+            (
+                "rank",
+                match self.rank {
+                    Some(r) => Json::from(r),
+                    None => Json::Null,
+                },
+            ),
+            ("oom", Json::from(self.run.oom())),
+        ])
+    }
+}
+
+/// Output of the cluster placement search (`advise --cluster`).
+#[derive(Debug)]
+pub struct ClusterReport {
+    pub budget: Budget,
+    /// One outcome per candidate, in enumeration order.
+    pub outcomes: Vec<ClusterOutcome>,
+    pub wall_seconds: f64,
+    pub jobs: usize,
+}
+
+/// Search placement × strategy × world-size for `budget` on `jobs`
+/// workers: every GPU of every candidate runs as its own sweep cell
+/// through the worker pool; aggregation and ranking are serial, so the
+/// report is byte-identical for any `jobs`.
+pub fn plan_cluster(budget: &Budget, jobs: usize) -> Result<ClusterReport, String> {
+    let candidates = space::enumerate_cluster(budget)?;
+    let configs: Vec<ClusterConfig> = candidates
+        .iter()
+        .map(|c| ClusterConfig {
+            key: c.key(),
+            strategy_label: c.strategy_label.clone(),
+            plan: c.plan.clone(),
+            base: space::cluster_base_scenario(budget, c),
+        })
+        .collect();
+    let batch = run_configs(&configs, budget.capacity, jobs)?;
+    Ok(analyze_cluster(
+        budget.clone(),
+        candidates,
+        batch.runs,
+        batch.wall_seconds,
+        batch.jobs,
+    ))
+}
+
+/// Pure, serial post-processing of the cluster runs.
+fn analyze_cluster(
+    budget: Budget,
+    candidates: Vec<ClusterCandidate>,
+    runs: Vec<ClusterRun>,
+    wall_seconds: f64,
+    jobs: usize,
+) -> ClusterReport {
+    debug_assert_eq!(candidates.len(), runs.len());
+    let feasible: Vec<bool> = runs.iter().map(|r| r.fits(budget.capacity)).collect();
+    let points: Vec<frontier::Point> = runs
+        .iter()
+        .zip(&feasible)
+        .map(|(r, &ok)| (r.max_peak_reserved(), r.step_time_us, ok))
+        .collect();
+    let on_frontier = frontier::pareto_frontier(&points);
+
+    let mut recommended: Vec<usize> = (0..candidates.len()).filter(|&i| feasible[i]).collect();
+    recommended.sort_by(|&a, &b| {
+        runs[a]
+            .max_peak_reserved()
+            .cmp(&runs[b].max_peak_reserved())
+            .then(runs[a].step_time_us.total_cmp(&runs[b].step_time_us))
+            .then(a.cmp(&b))
+    });
+    let mut rank: Vec<Option<usize>> = vec![None; candidates.len()];
+    for (pos, &i) in recommended.iter().enumerate() {
+        rank[i] = Some(pos + 1);
+    }
+
+    let outcomes = candidates
+        .into_iter()
+        .zip(runs)
+        .enumerate()
+        .map(|(i, (candidate, run))| ClusterOutcome {
+            candidate,
+            run,
+            feasible: feasible[i],
+            on_frontier: on_frontier[i],
+            rank: rank[i],
+        })
+        .collect();
+    ClusterReport {
+        budget,
+        outcomes,
+        wall_seconds,
+        jobs,
+    }
+}
+
+impl ClusterReport {
+    /// Feasible outcomes, best (lightest most-loaded GPU) first.
+    pub fn recommended(&self) -> Vec<&ClusterOutcome> {
+        let mut v: Vec<&ClusterOutcome> =
+            self.outcomes.iter().filter(|o| o.rank.is_some()).collect();
+        v.sort_by_key(|o| o.rank);
+        v
+    }
+
+    /// The single best placement, if anything fits.
+    pub fn best(&self) -> Option<&ClusterOutcome> {
+        self.outcomes.iter().find(|o| o.rank == Some(1))
+    }
+
+    /// The memory-vs-time Pareto frontier, cheapest memory first.
+    pub fn frontier(&self) -> Vec<&ClusterOutcome> {
+        let mut v: Vec<&ClusterOutcome> =
+            self.outcomes.iter().filter(|o| o.on_frontier).collect();
+        v.sort_by(|a, b| {
+            a.run
+                .max_peak_reserved()
+                .cmp(&b.run.max_peak_reserved())
+                .then(a.run.step_time_us.total_cmp(&b.run.step_time_us))
+                .then(a.candidate.index.cmp(&b.candidate.index))
+        });
+        v
+    }
+
+    /// Deterministic JSON-lines dump: one line per candidate, enumeration
+    /// order. Byte-identical for the same budget whatever `jobs` was.
+    pub fn jsonl(&self) -> String {
+        let mut out = String::new();
+        for o in &self.outcomes {
+            out.push_str(&o.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// One `--json` document: budget echo + outcomes + the winner.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("budget", Json::str(self.budget.name.clone())),
+            ("capacity", Json::from(self.budget.capacity)),
+            (
+                "recommendation",
+                match self.best() {
+                    Some(o) => Json::str(o.candidate.key()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "outcomes",
+                Json::Arr(self.outcomes.iter().map(|o| o.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Ranked table of the top `top` placements.
+    pub fn to_table(&self, top: usize) -> TextTable {
+        let mut t = cluster_table_header();
+        for o in self.recommended().into_iter().take(top) {
+            t.row(cluster_row(o, o.rank.map(|r| r.to_string()).unwrap_or_default()));
+        }
+        t
+    }
+
+    /// The whole frontier as a table.
+    pub fn frontier_table(&self) -> TextTable {
+        let mut t = cluster_table_header();
+        for o in self.frontier() {
+            let rank = o.rank.map(|r| r.to_string()).unwrap_or_else(|| "-".into());
+            t.row(cluster_row(o, rank));
+        }
+        t
+    }
+
+    /// One-line run summary for CLI output.
+    pub fn summary_line(&self) -> String {
+        let feasible = self.outcomes.iter().filter(|o| o.feasible).count();
+        format!(
+            "{} placements ({} feasible, {} on frontier) in {:.2}s on {} worker{}",
+            self.outcomes.len(),
+            feasible,
+            self.outcomes.iter().filter(|o| o.on_frontier).count(),
+            self.wall_seconds,
+            self.jobs,
+            if self.jobs == 1 { "" } else { "s" },
+        )
+    }
+}
+
+fn cluster_table_header() -> TextTable {
+    TextTable::new(&[
+        "Rank", "GPUs", "Placement", "Strategy", "Max GPU", "Total", "Step ms", "Frontier",
+    ])
+}
+
+fn cluster_row(o: &ClusterOutcome, rank: String) -> Vec<String> {
+    vec![
+        rank,
+        o.candidate.world.to_string(),
+        o.candidate.plan.name.clone(),
+        o.candidate.strategy_label.clone(),
+        fmt_gib_paper(o.run.max_peak_reserved()),
+        fmt_gib_paper(o.run.total_peak_reserved()),
+        format!("{:.1}", o.run.step_time_us / 1000.0),
+        if o.on_frontier { "*" } else { "" }.to_string(),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -414,6 +672,29 @@ mod tests {
                         || b.summary.total_time_us < a.summary.total_time_us);
                 assert!(!strictly_worse, "frontier point dominated");
             }
+        }
+    }
+
+    #[test]
+    fn cluster_plan_ranks_feasible_placements() {
+        let mut b = Budget::rtx3090_table1();
+        b.steps = 1;
+        b.strategies = Some(vec!["none".to_string()]);
+        b.worlds = Some(vec![2]);
+        let report = plan_cluster(&b, 2).unwrap();
+        assert_eq!(report.outcomes.len(), 3, "3 plans x 1 strategy");
+        assert_eq!(report.jsonl().lines().count(), 3);
+        let best = report.best().expect("the paper's testbed fits 24 GiB");
+        assert!(best.feasible);
+        // Ranking is by most-loaded-GPU peak, ascending.
+        let rec = report.recommended();
+        assert!(!rec.is_empty());
+        for w in rec.windows(2) {
+            assert!(w[0].run.max_peak_reserved() <= w[1].run.max_peak_reserved());
+        }
+        // Every outcome carries one reserved figure per GPU.
+        for o in &report.outcomes {
+            assert_eq!(o.run.gpus.len() as u64, o.candidate.world);
         }
     }
 

@@ -5,8 +5,11 @@
 
 use super::budget::Budget;
 use crate::alloc::AllocatorConfig;
+use crate::coordinator::schedule::cluster_key;
+use crate::coordinator::PlacementPlan;
 use crate::frameworks::FrameworkProfile;
 use crate::policy::EmptyCachePolicy;
+use crate::rlhf::models::RoleSet;
 use crate::rlhf::sim::{ScenarioMode, SimScenario};
 use crate::strategies::StrategyConfig;
 use crate::sweep::SweepCell;
@@ -66,13 +69,10 @@ pub fn allocator_candidates() -> Vec<(String, AllocatorConfig)> {
         .collect()
 }
 
-/// Enumerate the space for `budget` in deterministic order (strategy →
-/// policy → allocator), honouring its optional `strategies`/`allocators`
-/// restrictions and skipping strategies the framework cannot run.
-pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
-    let profile = FrameworkProfile::by_kind(budget.framework);
-
-    let strategy_rows: Vec<(String, StrategyConfig)> = match &budget.strategies {
+/// The budget's strategy rows: its `strategies` short-names resolved, or
+/// the full Table-1 sweep when unrestricted.
+fn strategy_rows(budget: &Budget) -> Result<Vec<(String, StrategyConfig)>, String> {
+    match &budget.strategies {
         Some(names) => names
             .iter()
             .map(|n| {
@@ -80,12 +80,21 @@ pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
                     .map(|(label, s)| (label.to_string(), s))
                     .ok_or_else(|| format!("unknown strategy '{n}'"))
             })
-            .collect::<Result<_, _>>()?,
-        None => StrategyConfig::table1_deepspeed_rows()
+            .collect::<Result<_, _>>(),
+        None => Ok(StrategyConfig::table1_deepspeed_rows()
             .into_iter()
             .map(|(label, s)| (label.to_string(), s))
-            .collect(),
-    };
+            .collect()),
+    }
+}
+
+/// Enumerate the space for `budget` in deterministic order (strategy →
+/// policy → allocator), honouring its optional `strategies`/`allocators`
+/// restrictions and skipping strategies the framework cannot run.
+pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
+    let profile = FrameworkProfile::by_kind(budget.framework);
+
+    let strategy_rows: Vec<(String, StrategyConfig)> = strategy_rows(budget)?;
 
     let all_allocs = allocator_candidates();
     let allocs: Vec<(String, AllocatorConfig)> = match &budget.allocators {
@@ -153,6 +162,9 @@ pub fn to_cells(budget: &Budget, candidates: &[Candidate]) -> Vec<SweepCell> {
                 gpu: budget.gpu,
                 seed: budget.seed,
                 len_jitter,
+                roles: RoleSet::ALL,
+                time_shared: RoleSet::EMPTY,
+                rank: 0,
             };
             SweepCell {
                 key: format!("advise/{}", c.key()),
@@ -168,6 +180,106 @@ pub fn to_cells(budget: &Budget, candidates: &[Candidate]) -> Vec<SweepCell> {
             }
         })
         .collect()
+}
+
+/// One point of the cluster placement space: a GPU count, a placement
+/// plan, and a strategy — what `advise --cluster` searches.
+#[derive(Debug, Clone)]
+pub struct ClusterCandidate {
+    /// Position in enumeration order (stable identity for JSONL/ranking).
+    pub index: usize,
+    /// GPUs in this configuration.
+    pub world: u64,
+    pub plan: PlacementPlan,
+    pub strategy_label: String,
+    pub strategy: StrategyConfig,
+}
+
+impl ClusterCandidate {
+    /// `cluster/w{world}/{plan}/{strategy}` — unique within one search,
+    /// and identical to the `rlhf-mem cluster` JSONL key for the same
+    /// configuration (both call [`cluster_key`]).
+    pub fn key(&self) -> String {
+        cluster_key(self.world, &self.plan.name, &self.strategy_label)
+    }
+}
+
+/// Enumerate the placement space for `budget` in deterministic order
+/// (world → plan preset → strategy). Worlds come from `budget.worlds`
+/// (default `{2, world}`), each ≥ 2 GPUs.
+pub fn enumerate_cluster(budget: &Budget) -> Result<Vec<ClusterCandidate>, String> {
+    // The cluster search varies placement × strategy × world only; every
+    // cell runs policy `never` on the default allocator. A budget that
+    // restricts `allocators` expects an axis this mode does not search —
+    // fail loud rather than silently dropping the restriction.
+    if budget.allocators.is_some() {
+        return Err(
+            "the cluster search does not vary allocator knobs; remove 'allocators' \
+             from the budget (or run plain `advise`)"
+                .to_string(),
+        );
+    }
+    let profile = FrameworkProfile::by_kind(budget.framework);
+    let rows = strategy_rows(budget)?;
+    let worlds: Vec<u64> = match &budget.worlds {
+        Some(ws) => ws.clone(),
+        None => {
+            let mut ws = vec![2, budget.world.max(2)];
+            ws.sort_unstable();
+            ws.dedup();
+            ws
+        }
+    };
+    for &w in &worlds {
+        if w < 2 {
+            return Err(format!("cluster worlds must be >= 2 GPUs (got {w})"));
+        }
+    }
+
+    let mut out = Vec::new();
+    for &world in &worlds {
+        for plan in PlacementPlan::presets(world) {
+            for (label, strategy) in &rows {
+                if !profile.supports(strategy) {
+                    continue;
+                }
+                out.push(ClusterCandidate {
+                    index: out.len(),
+                    world,
+                    plan: plan.clone(),
+                    strategy_label: label.clone(),
+                    strategy: *strategy,
+                });
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(format!(
+            "cluster placement space is empty for framework {}",
+            budget.framework.name()
+        ));
+    }
+    Ok(out)
+}
+
+/// The full-replica rank-0 base scenario a [`ClusterCandidate`]'s
+/// placement plan specializes per GPU.
+pub fn cluster_base_scenario(budget: &Budget, c: &ClusterCandidate) -> SimScenario {
+    SimScenario {
+        framework: FrameworkProfile::by_kind(budget.framework),
+        models: budget.models.clone(),
+        strategy: c.strategy,
+        world: c.world,
+        policy: EmptyCachePolicy::Never,
+        steps: budget.steps,
+        mode: ScenarioMode::Full,
+        gpu: budget.gpu,
+        seed: budget.seed,
+        len_jitter: budget.framework == crate::frameworks::FrameworkKind::ColossalChat,
+        roles: RoleSet::ALL,
+        time_shared: RoleSet::EMPTY,
+        rank: 0,
+    }
 }
 
 #[cfg(test)]
@@ -219,6 +331,41 @@ mod tests {
         assert_eq!(cands.len(), 2 * 4 * 2);
         budget.strategies = Some(vec!["bogus".to_string()]);
         assert!(enumerate(&budget).is_err());
+    }
+
+    #[test]
+    fn cluster_space_shape_and_keys() {
+        let mut budget = Budget::rtx3090_table1();
+        budget.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
+        let cands = enumerate_cluster(&budget).unwrap();
+        // Worlds {2, 4} × 3 plans × 2 strategies.
+        assert_eq!(cands.len(), 2 * 3 * 2);
+        assert_eq!(cands[0].key(), "cluster/w2/colocated/None");
+        for (i, c) in cands.iter().enumerate() {
+            assert_eq!(c.index, i);
+            c.plan.validate().unwrap();
+        }
+        // Explicit worlds narrow the search; world 1 is rejected.
+        budget.worlds = Some(vec![2]);
+        assert_eq!(enumerate_cluster(&budget).unwrap().len(), 3 * 2);
+        budget.worlds = Some(vec![1]);
+        assert!(enumerate_cluster(&budget).is_err());
+        // An allocator restriction names an axis this mode cannot honour.
+        budget.worlds = Some(vec![2]);
+        budget.allocators = Some(vec!["expandable".to_string()]);
+        assert!(enumerate_cluster(&budget).is_err());
+    }
+
+    #[test]
+    fn cluster_base_scenario_is_a_full_replica() {
+        let mut budget = Budget::rtx3090_table1();
+        budget.strategies = Some(vec!["zero3".to_string()]);
+        let cands = enumerate_cluster(&budget).unwrap();
+        let base = cluster_base_scenario(&budget, &cands[0]);
+        assert_eq!(base.world, cands[0].world);
+        assert_eq!(base.rank, 0);
+        assert_eq!(base.roles, crate::rlhf::models::RoleSet::ALL);
+        assert_eq!(base.seed, budget.seed);
     }
 
     #[test]

@@ -1,0 +1,96 @@
+//! Cluster-report renderers: the per-configuration summary table and the
+//! per-GPU detail table `rlhf-mem cluster` prints, plus the deterministic
+//! JSON-lines dump (one line per configuration, input order).
+
+use crate::coordinator::ClusterRun;
+use crate::report::table::TextTable;
+use crate::util::bytes::fmt_gib_paper;
+use crate::util::json::Json;
+
+/// One row per configuration: the most loaded GPU, the cluster total, and
+/// the step-time breakdown.
+pub fn summary_table(runs: &[(String, ClusterRun)]) -> TextTable {
+    let mut t = TextTable::new(&[
+        "Config", "GPUs", "Max GPU", "Total", "Step ms", "P2P ms", "Coll ms", "OOM",
+    ]);
+    for (key, run) in runs {
+        t.row(vec![
+            key.clone(),
+            run.plan.gpus().to_string(),
+            fmt_gib_paper(run.max_peak_reserved()),
+            fmt_gib_paper(run.total_peak_reserved()),
+            format!("{:.1}", run.step_time_us / 1000.0),
+            format!("{:.1}", run.p2p_us / 1000.0),
+            format!("{:.1}", run.collective_us / 1000.0),
+            if run.oom() { "yes" } else { "" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// One row per (configuration, GPU): which models it hosts and what they
+/// cost it.
+pub fn gpu_table(runs: &[(String, ClusterRun)]) -> TextTable {
+    let mut t = TextTable::new(&["Config", "GPU", "Models", "Reserved", "Frag.", "OOM"]);
+    for (key, run) in runs {
+        for g in &run.gpus {
+            t.row(vec![
+                key.clone(),
+                g.gpu.to_string(),
+                g.roles.label(),
+                fmt_gib_paper(g.peak_reserved),
+                fmt_gib_paper(g.frag),
+                if g.oom { "yes" } else { "" }.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Deterministic JSON-lines: one `{key, ...cluster}` line per
+/// configuration, input order — byte-identical whatever `--jobs` was.
+pub fn jsonl(runs: &[(String, ClusterRun)]) -> String {
+    let mut out = String::new();
+    for (i, (key, run)) in runs.iter().enumerate() {
+        let mut line: Vec<(String, Json)> = vec![
+            ("index".to_string(), Json::from(i)),
+            ("key".to_string(), Json::str(key.clone())),
+        ];
+        if let Json::Obj(fields) = run.to_json() {
+            line.extend(fields);
+        }
+        out.push_str(&Json::Obj(line).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::schedule::run_plan;
+    use crate::coordinator::PlacementPlan;
+    use crate::experiment::RTX3090_HBM;
+    use crate::policy::EmptyCachePolicy;
+    use crate::rlhf::sim::SimScenario;
+    use crate::strategies::StrategyConfig;
+
+    fn one_run() -> Vec<(String, ClusterRun)> {
+        let mut base = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        base.steps = 1;
+        base.world = 2;
+        let run = run_plan(&PlacementPlan::dedicated(2).unwrap(), &base, RTX3090_HBM).unwrap();
+        vec![("cluster/w2/dedicated/None".to_string(), run)]
+    }
+
+    #[test]
+    fn tables_cover_configs_and_gpus() {
+        let runs = one_run();
+        assert_eq!(summary_table(&runs).rows.len(), 1);
+        assert_eq!(gpu_table(&runs).rows.len(), 2);
+        let lines = jsonl(&runs);
+        assert_eq!(lines.lines().count(), 1);
+        assert!(lines.contains("\"key\":\"cluster/w2/dedicated/None\""));
+        assert!(lines.contains("per_gpu"));
+    }
+}

@@ -1,6 +1,8 @@
-//! Report renderers: generic text tables and the paper-shaped outputs
-//! (Table 1/2 rows, Figure 1 annotations).
+//! Report renderers: generic text tables, the paper-shaped outputs
+//! (Table 1/2 rows, Figure 1 annotations), and the cluster placement
+//! tables behind `rlhf-mem cluster`.
 
+pub mod cluster;
 pub mod paper;
 pub mod table;
 

@@ -9,5 +9,5 @@ pub mod real;
 pub mod sim;
 
 pub use cost::{CostModel, GpuSpec};
-pub use models::{RlhfModelSet, Role};
+pub use models::{RlhfModelSet, Role, RoleSet};
 pub use sim::{build_trace, ScenarioMode, SimScenario};

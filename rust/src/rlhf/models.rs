@@ -38,6 +38,65 @@ impl Role {
     }
 }
 
+/// A set of [`Role`]s — which of the four RLHF models a simulated GPU
+/// hosts. The classic symmetric data-parallel replica is [`RoleSet::ALL`];
+/// cluster placement plans assign subsets per GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RoleSet(u8);
+
+impl RoleSet {
+    pub const EMPTY: RoleSet = RoleSet(0);
+    pub const ALL: RoleSet = RoleSet(0b1111);
+
+    fn bit(role: Role) -> u8 {
+        match role {
+            Role::Actor => 1,
+            Role::Reference => 2,
+            Role::Critic => 4,
+            Role::Reward => 8,
+        }
+    }
+
+    /// The set holding exactly `roles`.
+    pub fn of(roles: &[Role]) -> RoleSet {
+        roles.iter().fold(RoleSet::EMPTY, |s, &r| s.with(r))
+    }
+
+    #[must_use]
+    pub fn with(self, role: Role) -> RoleSet {
+        RoleSet(self.0 | Self::bit(role))
+    }
+
+    pub fn contains(self, role: Role) -> bool {
+        self.0 & Self::bit(role) != 0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn len(self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn is_subset_of(self, other: RoleSet) -> bool {
+        self.0 & !other.0 == 0
+    }
+
+    /// Member roles in [`Role::ALL`] order.
+    pub fn iter(self) -> impl Iterator<Item = Role> {
+        Role::ALL.into_iter().filter(move |&r| self.contains(r))
+    }
+
+    /// `actor+critic`-style display label (`-` for the empty set).
+    pub fn label(self) -> String {
+        if self.is_empty() {
+            return "-".to_string();
+        }
+        self.iter().map(Role::name).collect::<Vec<_>>().join("+")
+    }
+}
+
 /// The model pairing of one experiment.
 #[derive(Debug, Clone)]
 pub struct RlhfModelSet {
@@ -122,6 +181,24 @@ mod tests {
         assert!(critic.tensors.iter().any(|t| t.name == "v_head"));
         let actor = set.inventory_for(Role::Actor);
         assert!(!actor.tensors.iter().any(|t| t.name == "v_head"));
+    }
+
+    #[test]
+    fn role_sets() {
+        let scorers = RoleSet::of(&[Role::Reference, Role::Reward]);
+        assert_eq!(scorers.len(), 2);
+        assert!(scorers.contains(Role::Reference));
+        assert!(!scorers.contains(Role::Actor));
+        assert!(scorers.is_subset_of(RoleSet::ALL));
+        assert!(!RoleSet::ALL.is_subset_of(scorers));
+        assert!(RoleSet::EMPTY.is_empty());
+        assert_eq!(RoleSet::ALL.len(), 4);
+        assert_eq!(scorers.label(), "reference+reward");
+        assert_eq!(RoleSet::EMPTY.label(), "-");
+        assert_eq!(
+            RoleSet::ALL.iter().collect::<Vec<_>>(),
+            Role::ALL.to_vec()
+        );
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::mem::{
 };
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::cost::{CostModel, GpuSpec};
-use crate::rlhf::models::{RlhfModelSet, Role};
+use crate::rlhf::models::{RlhfModelSet, Role, RoleSet};
 use crate::strategies::{zero, StrategyConfig};
 use crate::trace::{PhaseKind, Tag, Trace, TraceBuilder, TraceHandle};
 use crate::util::prng::Rng;
@@ -77,6 +77,19 @@ pub struct SimScenario {
     /// rollouts vary like this, and the resulting size drift across steps
     /// is a major source of cache-reuse failure (fragmentation).
     pub len_jitter: bool,
+    /// Which of the four models this GPU hosts. [`RoleSet::ALL`] is the
+    /// classic symmetric data-parallel replica; cluster placement plans
+    /// ([`crate::coordinator::PlacementPlan`]) assign per-GPU subsets, so
+    /// ranks genuinely emit different traces.
+    pub roles: RoleSet,
+    /// Hosted frozen models swapped out to host memory between the
+    /// experience and training phases (Hydra-style phase time-sharing).
+    /// Must be a subset of `roles` containing no trainable role.
+    pub time_shared: RoleSet,
+    /// This GPU's index within the ZeRO data-parallel group of `world`
+    /// ranks. The last rank's flat-buffer shards absorb the partition
+    /// remainder and can be smaller — another way ranks differ.
+    pub rank: u64,
 }
 
 impl SimScenario {
@@ -95,6 +108,9 @@ impl SimScenario {
             // DeepSpeed-Chat pads prompts and answers to the configured
             // maxima, so tensor sizes repeat exactly across steps.
             len_jitter: false,
+            roles: RoleSet::ALL,
+            time_shared: RoleSet::EMPTY,
+            rank: 0,
         }
     }
 
@@ -111,6 +127,9 @@ impl SimScenario {
             gpu: GpuSpec::rtx3090(),
             seed: 0x5EED,
             len_jitter: true,
+            roles: RoleSet::ALL,
+            time_shared: RoleSet::EMPTY,
+            rank: 0,
         }
     }
 
@@ -327,13 +346,25 @@ struct Emitter<'a> {
     cur_gen_len: u64,
 }
 
-/// Build the rank-0 allocation trace of `scn`.
+/// Build the allocation trace one GPU of `scn` observes — rank `scn.rank`
+/// of the `scn.world`-wide data-parallel group, hosting `scn.roles`.
 pub fn build_trace(scn: &SimScenario) -> Trace {
     assert!(
         scn.framework.supports(&scn.strategy),
         "{} does not support {:?}",
         scn.framework.kind.name(),
         scn.strategy
+    );
+    assert!(scn.world >= 1, "world must be >= 1");
+    assert!(
+        scn.rank < scn.world,
+        "rank {} outside world {}",
+        scn.rank,
+        scn.world
+    );
+    assert!(
+        scn.time_shared.is_subset_of(scn.roles),
+        "time-shared roles must be hosted"
     );
     let mut e = Emitter {
         scn,
@@ -366,23 +397,48 @@ impl<'a> Emitter<'a> {
             };
             match self.scn.mode {
                 ScenarioMode::Full => {
-                    self.generation();
-                    self.infer_phase(PhaseKind::InferActor);
-                    self.infer_phase(PhaseKind::InferReference);
-                    self.infer_phase(PhaseKind::InferReward);
-                    self.infer_phase(PhaseKind::InferCritic);
-                    self.advantages();
-                    self.train_phase(PhaseKind::TrainActor);
-                    self.train_phase(PhaseKind::TrainCritic);
+                    // Only the phases whose model this GPU hosts run here;
+                    // a scorer-only GPU instead receives the sequences the
+                    // actor's GPU generated over the wire.
+                    if self.hosts(Role::Actor) {
+                        self.generation();
+                        self.infer_phase(PhaseKind::InferActor);
+                    } else {
+                        self.remote_sequences();
+                    }
+                    if self.hosts(Role::Reference) {
+                        self.infer_phase(PhaseKind::InferReference);
+                    }
+                    if self.hosts(Role::Reward) {
+                        self.infer_phase(PhaseKind::InferReward);
+                    }
+                    if self.hosts(Role::Critic) {
+                        self.infer_phase(PhaseKind::InferCritic);
+                    }
+                    if self.hosts(Role::Actor) || self.hosts(Role::Critic) {
+                        self.advantages();
+                    }
+                    if self.hosts(Role::Actor) {
+                        self.train_phase(PhaseKind::TrainActor);
+                    }
+                    if self.hosts(Role::Critic) {
+                        self.train_phase(PhaseKind::TrainCritic);
+                    }
                 }
                 ScenarioMode::TrainBothPrecollected => {
                     self.precollected_experience();
-                    self.train_phase(PhaseKind::TrainActor);
-                    self.train_phase(PhaseKind::TrainCritic);
+                    if self.hosts(Role::Actor) {
+                        self.train_phase(PhaseKind::TrainActor);
+                    }
+                    if self.hosts(Role::Critic) {
+                        self.train_phase(PhaseKind::TrainCritic);
+                    }
                 }
                 ScenarioMode::TrainActorOnly => {
                     self.precollected_experience();
-                    self.train_phase(PhaseKind::TrainActor);
+                    if self.hosts(Role::Actor) {
+                        self.train_phase(PhaseKind::TrainActor);
+                    }
                 }
             }
             self.free_experience();
@@ -396,6 +452,10 @@ impl<'a> Emitter<'a> {
         }
     }
 
+    fn hosts(&self, role: Role) -> bool {
+        self.scn.roles.contains(role)
+    }
+
     // ---------------- Init ----------------
 
     fn init(&mut self) {
@@ -404,7 +464,13 @@ impl<'a> Emitter<'a> {
         let z = self.scn.strategy.zero;
         let offload = self.scn.strategy.cpu_offload;
 
+        let rank = self.scn.rank;
+
         for role in Role::ALL {
+            // Placement: only the models this GPU hosts get engine state.
+            if !self.scn.roles.contains(role) {
+                continue;
+            }
             let m = self.model_mut(role);
             // fp16 replica: per-tensor; partitioned under ZeRO-3 — but only
             // for the *training engines* (actor, critic). DeepSpeed-Chat's
@@ -419,7 +485,7 @@ impl<'a> Emitter<'a> {
                 .map(|t| {
                     let full = t.bytes(DType::F16);
                     if partition {
-                        zero::partitioned_bytes(full, world)
+                        zero::shard_bytes(full, world, rank)
                     } else {
                         full
                     }
@@ -455,7 +521,7 @@ impl<'a> Emitter<'a> {
                     .iter()
                     .map(|s| {
                         if z.partitions_optimizer() {
-                            zero::partitioned_bytes(s.bytes, world)
+                            zero::shard_bytes(s.bytes, world, rank)
                         } else {
                             s.bytes
                         }
@@ -491,7 +557,10 @@ impl<'a> Emitter<'a> {
         // DeepSpeed-Chat hybrid engine: fused inference containers hold a
         // second copy of the actor weights (ZeRO-3 materializes them from
         // gathers at generation time instead).
-        if self.scn.framework.hybrid_engine && !z.partitions_params() {
+        if self.scn.framework.hybrid_engine
+            && !z.partitions_params()
+            && self.scn.roles.contains(Role::Actor)
+        {
             let layers = self.actor.inv.arch.n_layers;
             let mut sizes: Vec<u64> = Vec::new();
             for l in 0..layers {
@@ -705,6 +774,17 @@ impl<'a> Emitter<'a> {
         self.exp.handles.extend(hs);
     }
 
+    /// Sequences + attention masks received from the actor's GPU — what a
+    /// scorer-only GPU of a placement plan holds instead of generating.
+    /// Lengths follow the same jitter stream as the actor's rank, so every
+    /// GPU of a plan agrees on this step's shapes.
+    fn remote_sequences(&mut self) {
+        let fw = &self.scn.framework;
+        let seq_bytes = fw.rollout_batch * (fw.prompt_len + self.cur_gen_len) * DType::I64.bytes();
+        let hs = self.b.alloc_group([seq_bytes, seq_bytes], Tag::Experience);
+        self.exp.handles.extend(hs);
+    }
+
     /// E6 pre-collected experience (loaded instead of generated).
     fn precollected_experience(&mut self) {
         let fw = &self.scn.framework;
@@ -747,6 +827,18 @@ impl<'a> Emitter<'a> {
             self.offload_model(Role::Reference);
             self.offload_model(Role::Reward);
         }
+        // Placement-plan phase time-sharing: swap the colocated frozen
+        // scorers to host for the whole training span (they re-upload when
+        // the next step's inference phases need them). Runs at whichever
+        // training phase comes first on this GPU; offload_model is
+        // idempotent, so the second phase is a no-op.
+        if self.scn.mode == ScenarioMode::Full && !self.scn.time_shared.is_empty() {
+            for role in [Role::Reference, Role::Reward] {
+                if self.scn.time_shared.contains(role) {
+                    self.offload_model(role);
+                }
+            }
+        }
 
         let fw = self.scn.framework.clone();
         let mb = fw.train_micro_batch.min(fw.rollout_batch);
@@ -763,7 +855,7 @@ impl<'a> Emitter<'a> {
             let gb = self.model(role).trainable_bytes_f16();
             part_grads.push(
                 self.b
-                    .alloc(zero::partitioned_bytes(gb, world).max(16), Tag::Grad),
+                    .alloc(zero::shard_bytes(gb, world, self.scn.rank).max(16), Tag::Grad),
             );
         }
 
@@ -943,7 +1035,7 @@ impl<'a> Emitter<'a> {
             // pinned staging pair allocated at Init — time cost only.
             let gb = self.model(role).trainable_bytes_f16();
             let per_rank = if self.scn.strategy.zero.partitions_gradients() {
-                zero::partitioned_bytes(gb, world)
+                zero::shard_bytes(gb, world, self.scn.rank)
             } else {
                 gb
             };
@@ -953,6 +1045,7 @@ impl<'a> Emitter<'a> {
             // FP16_Optimizer converts fp16 gradients to fp32 *per tensor*
             // before fused Adam runs (transient, LIFO-freed).
             let part = self.scn.strategy.zero.partitions_optimizer();
+            let rank = self.scn.rank;
             let sizes: Vec<u64> = self
                 .model(role)
                 .trainable
@@ -960,7 +1053,7 @@ impl<'a> Emitter<'a> {
                 .map(|t| {
                     let fp32 = t.numel * 4;
                     let b = if part {
-                        zero::partitioned_bytes(fp32, world)
+                        zero::shard_bytes(fp32, world, rank)
                     } else {
                         fp32
                     };
@@ -1214,6 +1307,75 @@ mod tests {
         // ColossalChat re-uploads ref+reward each of 3 steps... with steps=3
         // in the preset; both presets share steps, so colossal must exceed.
         assert!(param_allocs > ds_param_allocs);
+    }
+
+    #[test]
+    fn role_subsets_shrink_the_trace() {
+        use crate::rlhf::models::RoleSet;
+        use crate::trace::TraceOp;
+        let phases = |t: &Trace| -> Vec<PhaseKind> {
+            t.ops
+                .iter()
+                .filter_map(|op| match op {
+                    TraceOp::Phase(p) => Some(*p),
+                    _ => None,
+                })
+                .collect()
+        };
+        let full = build_trace(&small_scn(StrategyConfig::none()));
+        let mut scn = small_scn(StrategyConfig::none());
+        scn.roles = RoleSet::of(&[Role::Reference, Role::Reward]);
+        let scorer = build_trace(&scn);
+        // A scorer-only GPU skips generation and both training phases —
+        // its trace is a fraction of the full replica's.
+        assert!(scorer.len() < full.len() / 2, "{} vs {}", scorer.len(), full.len());
+        let ps = phases(&scorer);
+        assert!(!ps.contains(&PhaseKind::Generation));
+        assert!(!ps.contains(&PhaseKind::TrainActor));
+        assert!(!ps.contains(&PhaseKind::TrainCritic));
+        assert!(ps.contains(&PhaseKind::InferReference));
+        assert!(ps.contains(&PhaseKind::InferReward));
+    }
+
+    #[test]
+    fn time_shared_scorers_cycle_param_allocations() {
+        use crate::rlhf::models::RoleSet;
+        use crate::trace::TraceOp;
+        let count_params = |t: &Trace| {
+            t.ops
+                .iter()
+                .filter(|op| matches!(op, TraceOp::Alloc { tag: Tag::Param, .. }))
+                .count()
+        };
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 2;
+        let resident = count_params(&build_trace(&scn));
+        scn.time_shared = RoleSet::of(&[Role::Reference, Role::Reward]);
+        let shared = count_params(&build_trace(&scn));
+        // Swap-out during training forces a re-upload (fresh Param allocs)
+        // each subsequent step.
+        assert!(shared > resident, "{shared} vs {resident}");
+    }
+
+    #[test]
+    #[should_panic(expected = "outside world")]
+    fn rank_outside_world_panics() {
+        let mut scn = small_scn(StrategyConfig::none());
+        scn.rank = 4; // world is 4: ranks 0..=3
+        build_trace(&scn);
+    }
+
+    #[test]
+    fn per_rank_traces_have_identical_shape() {
+        // Ranks of a symmetric replica differ only in flat-buffer shard
+        // remainders (bytes, inside the 16 B padding) — never in op count.
+        let mut a = small_scn(StrategyConfig::zero3());
+        a.steps = 1;
+        let t0 = build_trace(&a);
+        let mut b = a.clone();
+        b.rank = 3;
+        let t3 = build_trace(&b);
+        assert_eq!(t0.len(), t3.len());
     }
 
     #[test]

@@ -48,13 +48,17 @@ impl ZeroStage {
     }
 }
 
-/// DeepSpeed defaults (bytes).
+/// DeepSpeed defaults (bytes). DeepSpeed's config expresses bucket sizes
+/// in *elements*; everything here is the byte size of those buckets at
+/// fp16 (elements × 2 B) — `tests::bucket_defaults_pin_element_counts`
+/// pins that identity.
 pub mod defaults {
-    /// `reduce_bucket_size` (elements) × 2 B fp16 — the transient gradient
-    /// reduce-scatter bucket.
-    pub const REDUCE_BUCKET_BYTES: u64 = 500_000_000 * 2 / 2; // 5e8 elems fp16
-    /// `allgather_bucket_size`: ZeRO-3 parameter all-gather granularity.
-    pub const ALLGATHER_BUCKET_BYTES: u64 = 500_000_000 * 2 / 2;
+    /// `reduce_bucket_size` (5e8 elements) × 2 B fp16 — the transient
+    /// gradient reduce-scatter bucket.
+    pub const REDUCE_BUCKET_BYTES: u64 = 500_000_000 * 2;
+    /// `allgather_bucket_size` (5e8 elements): ZeRO-3 parameter all-gather
+    /// granularity.
+    pub const ALLGATHER_BUCKET_BYTES: u64 = 500_000_000 * 2;
     /// `stage3_prefetch_bucket_size` ~ 5e7 elements.
     pub const PREFETCH_BUCKET_BYTES: u64 = 50_000_000 * 2;
     /// `stage3_max_live_parameters` = 1e9 params: gathered fp16 copies are
@@ -66,11 +70,27 @@ pub mod defaults {
 
 /// Per-rank share of a partitioned tensor: ceil(bytes / world), with each
 /// rank padded to an even element boundary like DeepSpeed's flat buffers.
+/// This is rank 0's (largest) shard; rank-aware callers should use
+/// [`shard_bytes`], which models the short last-rank remainder.
 pub fn partitioned_bytes(total: u64, world: u64) -> u64 {
     assert!(world > 0);
     let per = total.div_ceil(world);
     // Pad to 16 B so flat partitions stay aligned.
     per.div_ceil(16) * 16
+}
+
+/// Rank `rank`'s share of a partitioned tensor, DeepSpeed flat-buffer
+/// style: the buffer is cut into `world` ceil-divided chunks and the last
+/// rank's shard absorbs the remainder, so it can be shorter than the
+/// others (down to empty, floored here at one 16 B alignment unit so the
+/// trace still carries the rank's stub allocation). `shard_bytes(t, w, 0)`
+/// equals [`partitioned_bytes`] for any non-empty tensor.
+pub fn shard_bytes(total: u64, world: u64, rank: u64) -> u64 {
+    assert!(world > 0 && rank < world, "rank {rank} outside world {world}");
+    let per = total.div_ceil(world);
+    let start = (per * rank).min(total);
+    let end = (per * (rank + 1)).min(total);
+    (end - start).max(1).div_ceil(16) * 16
 }
 
 /// Sizes of the transient reduce-scatter buckets covering `grad_bytes` of
@@ -124,6 +144,53 @@ mod tests {
         assert_eq!(partitioned_bytes(1, 4), 16);
         // Sum over ranks covers the total.
         assert!(partitioned_bytes(1000, 3) * 3 >= 1000);
+    }
+
+    #[test]
+    fn bucket_defaults_pin_element_counts() {
+        // DeepSpeed configures buckets in elements; the byte constants
+        // must be elems × dtype size (fp16 = 2 B), not raw element counts.
+        use crate::mem::DType;
+        assert_eq!(defaults::REDUCE_BUCKET_BYTES, 500_000_000 * DType::F16.bytes());
+        assert_eq!(
+            defaults::ALLGATHER_BUCKET_BYTES,
+            500_000_000 * DType::F16.bytes()
+        );
+        assert_eq!(defaults::PREFETCH_BUCKET_BYTES, 50_000_000 * DType::F16.bytes());
+        assert_eq!(
+            defaults::MAX_LIVE_GATHERED_BYTES,
+            1_000_000_000 * DType::F16.bytes()
+        );
+    }
+
+    #[test]
+    fn shard_bytes_models_the_short_last_rank() {
+        // Divisible: every rank identical, equal to partitioned_bytes.
+        for rank in 0..4 {
+            assert_eq!(shard_bytes(1024, 4, rank), 256);
+        }
+        // Non-divisible: earlier ranks take the ceil chunk, the last rank
+        // absorbs the remainder.
+        assert_eq!(shard_bytes(100, 4, 0), partitioned_bytes(100, 4));
+        assert_eq!(shard_bytes(100, 4, 0), 32); // 25 -> pad 32
+        assert_eq!(shard_bytes(100, 4, 3), 32); // 100 - 3*25 = 25 -> 32
+        assert_eq!(shard_bytes(65, 4, 0), 32); // ceil chunk 17 -> pad 32
+        assert_eq!(shard_bytes(65, 4, 3), 16); // remainder 65 - 3*17 = 14 -> 16
+        // Tiny tensors: trailing ranks get the 16 B stub floor.
+        assert_eq!(shard_bytes(3, 8, 0), 16);
+        assert_eq!(shard_bytes(3, 8, 7), 16);
+        // Shards tile the tensor: unpadded lengths sum to the total.
+        for (total, world) in [(1_000u64, 3u64), (7, 4), (1 << 20, 6)] {
+            let per = total.div_ceil(world);
+            let sum: u64 = (0..world)
+                .map(|r| (per * (r + 1)).min(total) - (per * r).min(total))
+                .sum();
+            assert_eq!(sum, total);
+            for r in 0..world {
+                assert!(shard_bytes(total, world, r) >= 16);
+                assert!(shard_bytes(total, world, r) <= partitioned_bytes(total, world).max(16));
+            }
+        }
     }
 
     #[test]

@@ -304,6 +304,9 @@ impl SweepGrid {
                                         }
                                     },
                                     len_jitter: *kind == FrameworkKind::ColossalChat,
+                                    roles: crate::rlhf::models::RoleSet::ALL,
+                                    time_shared: crate::rlhf::models::RoleSet::EMPTY,
+                                    rank: 0,
                                 };
                                 if let Some(f) = &self.customize {
                                     f(&mut scenario);
