@@ -1,0 +1,45 @@
+//! Trace-generation throughput across the algorithm axis — guards the
+//! PhaseProgram interpreter's hot path. `build_trace` is pure CPU (no
+//! allocator replay), so this measures exactly what the compile +
+//! interpret refactor touched: ops emitted per second per algorithm.
+
+use rlhf_mem::bench::{bench, throughput};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::program::{Algo, PhaseProgram};
+use rlhf_mem::rlhf::sim::{build_trace, SimScenario};
+use rlhf_mem::strategies::StrategyConfig;
+
+fn main() {
+    println!("trace-generation throughput (DeepSpeed-Chat/OPT, ZeRO-3, 2 steps)\n");
+    let mut total_mops = 0.0;
+    for algo in Algo::ALL {
+        let mut scn =
+            SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+        scn.steps = 2;
+        scn.algo = algo;
+        let ops = build_trace(&scn).len();
+        let r = bench(&format!("build_trace {} ({} ops)", algo.name(), ops), 1, 5, || {
+            let t = build_trace(&scn);
+            assert!(!t.is_empty());
+        });
+        println!("{}", r.report());
+        let mops = throughput(&r, ops as f64) / 1e6;
+        println!("    {:>8.2} Mops/s", mops);
+        total_mops += mops;
+    }
+
+    // Compilation alone should be vanishingly cheap next to emission.
+    let scn = SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+    let r = bench("PhaseProgram::compile x1000", 1, 5, || {
+        for _ in 0..1000 {
+            let p = PhaseProgram::compile(&scn);
+            assert!(!p.nodes.is_empty());
+        }
+    });
+    println!("{}", r.report());
+    println!(
+        "\nsim_trace bench complete: {:.2} Mops/s summed across {} algorithms",
+        total_mops,
+        Algo::ALL.len()
+    );
+}

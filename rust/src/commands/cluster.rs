@@ -19,11 +19,12 @@ use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::report::cluster as render;
 use rlhf_mem::rlhf::cost::GpuSpec;
 use rlhf_mem::rlhf::models::RoleSet;
+use rlhf_mem::rlhf::program::Algo;
 use rlhf_mem::rlhf::sim::{ScenarioMode, SimScenario};
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::sweep::{model_set_by_name, SweepRunner};
 use rlhf_mem::util::bytes::GIB;
-use rlhf_mem::util::cli::Args;
+use rlhf_mem::util::cli::{split_list, Args};
 use rlhf_mem::util::json::Json;
 
 pub const CLUSTER_USAGE: &str = "\
@@ -34,6 +35,7 @@ FLAGS (comma-separated lists):
   --gpus 2,4                     node sizes to sweep (each >= 2; default 2,4)
   --plans colocated,time-shared,dedicated   placement presets (default all)
   --strategies none,zero1,zero2,zero3,offload,ckpt,all   (default none,zero3)
+  --algos ppo,grpo,remax,dpo     RLHF algorithms (default ppo)
   --framework ds|cc              framework profile (default ds)
   --models opt|gpt2|nano         model pair (default opt)
   --steps N        PPO steps per configuration (default 2)
@@ -46,17 +48,13 @@ FLAGS (comma-separated lists):
   --json FILE      the whole report as one JSON array
 ";
 
-fn split(s: &str) -> impl Iterator<Item = &str> {
-    s.split(',').map(str::trim).filter(|x| !x.is_empty())
-}
-
 pub fn run(args: &Args) -> Result<(), String> {
     if args.bool_flag("help") {
         println!("{CLUSTER_USAGE}");
         return Ok(());
     }
 
-    let worlds: Vec<u64> = split(args.get_or("gpus", "2,4"))
+    let worlds: Vec<u64> = split_list(args.get_or("gpus", "2,4"))
         .map(|n| {
             n.parse::<u64>()
                 .map_err(|_| format!("bad --gpus entry '{n}'"))
@@ -71,12 +69,14 @@ pub fn run(args: &Args) -> Result<(), String> {
         .collect::<Result<_, _>>()?;
 
     let plan_names: Vec<&str> =
-        split(args.get_or("plans", "colocated,time-shared,dedicated")).collect();
+        split_list(args.get_or("plans", "colocated,time-shared,dedicated")).collect();
 
     let strategies: Vec<(&'static str, StrategyConfig)> =
-        split(args.get_or("strategies", "none,zero3"))
+        split_list(args.get_or("strategies", "none,zero3"))
             .map(|n| StrategyConfig::by_name(n).ok_or_else(|| format!("unknown strategy '{n}'")))
             .collect::<Result<_, _>>()?;
+
+    let algos: Vec<Algo> = Algo::parse_list(args.get_or("algos", "ppo"))?;
 
     let fw_name = args.get_or("framework", "ds");
     let kind = FrameworkKind::by_name(fw_name)
@@ -96,8 +96,9 @@ pub fn run(args: &Args) -> Result<(), String> {
     let capacity = args.get_u64("capacity-gib", 24)? * GIB;
     let seed = args.get_u64("seed", 0x5EED)?;
 
-    // Enumerate configurations (world -> plan -> strategy); the shared
-    // coordinator engine lowers each GPU to a sweep cell and aggregates.
+    // Enumerate configurations (world -> plan -> strategy -> algo); the
+    // shared coordinator engine lowers each GPU to a sweep cell and
+    // aggregates.
     let mut configs: Vec<ClusterConfig> = Vec::new();
     for &world in &worlds {
         for plan_name in &plan_names {
@@ -106,27 +107,30 @@ pub fn run(args: &Args) -> Result<(), String> {
                 if !profile.supports(strategy) {
                     continue;
                 }
-                let base = SimScenario {
-                    framework: profile.clone(),
-                    models: models.clone(),
-                    strategy: *strategy,
-                    world,
-                    policy: EmptyCachePolicy::Never,
-                    steps,
-                    mode: ScenarioMode::Full,
-                    gpu,
-                    seed,
-                    len_jitter: kind == FrameworkKind::ColossalChat,
-                    roles: RoleSet::ALL,
-                    time_shared: RoleSet::EMPTY,
-                    rank: 0,
-                };
-                configs.push(ClusterConfig {
-                    key: cluster_key(world, &plan.name, label),
-                    strategy_label: label.to_string(),
-                    plan: plan.clone(),
-                    base,
-                });
+                for &algo in &algos {
+                    let base = SimScenario {
+                        framework: profile.clone(),
+                        models: models.clone(),
+                        strategy: *strategy,
+                        world,
+                        policy: EmptyCachePolicy::Never,
+                        steps,
+                        mode: ScenarioMode::Full,
+                        algo,
+                        gpu,
+                        seed,
+                        len_jitter: kind.default_len_jitter(),
+                        roles: RoleSet::ALL,
+                        time_shared: RoleSet::EMPTY,
+                        rank: 0,
+                    };
+                    configs.push(ClusterConfig {
+                        key: cluster_key(world, &plan.name, label, algo),
+                        strategy_label: label.to_string(),
+                        plan: plan.clone(),
+                        base,
+                    });
+                }
             }
         }
     }

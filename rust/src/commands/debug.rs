@@ -4,7 +4,8 @@
 
 use rlhf_mem::experiment::{run_trace, RTX3090_HBM};
 use rlhf_mem::policy::EmptyCachePolicy;
-use rlhf_mem::rlhf::sim::{build_trace, SimScenario};
+use rlhf_mem::rlhf::program::{Algo, PhaseProgram};
+use rlhf_mem::rlhf::sim::ScenarioPreset;
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::trace::analysis::{peak_composition, phase_peaks};
 use rlhf_mem::util::bytes::fmt_bytes;
@@ -15,15 +16,22 @@ pub fn run(args: &Args) -> Result<(), String> {
     let (_, strat) = StrategyConfig::by_name(strat_name)
         .ok_or_else(|| format!("unknown strategy {strat_name}"))?;
     let policy = if args.bool_flag("ec") { EmptyCachePolicy::AfterBoth } else { EmptyCachePolicy::Never };
-    let mut scn = SimScenario::deepspeed_opt(strat, policy);
+    // Scenario presets carry the framework/model/jitter triple, so the
+    // calibration lens sees exactly what the sweep cells see.
+    let preset_name = if args.get_or("framework", "ds").starts_with('c') {
+        if args.get_or("model", "opt") == "gpt2" { "colossal-gpt2" } else { "colossal-opt" }
+    } else {
+        "deepspeed-opt"
+    };
+    let mut scn = ScenarioPreset::by_name(preset_name)
+        .expect("preset table covers the debug frameworks")
+        .build(strat, policy);
     scn.steps = args.get_u64("steps", 2)?;
-    if args.get_or("framework", "ds").starts_with("c") {
-        scn.framework = rlhf_mem::frameworks::FrameworkProfile::colossal_chat();
-        if args.get_or("model", "opt") == "gpt2" {
-            scn.models = rlhf_mem::rlhf::models::RlhfModelSet::gpt2();
-        }
-    }
-    let trace = build_trace(&scn);
+    let algo_name = args.get_or("algo", "ppo");
+    scn.algo = Algo::by_name(algo_name)
+        .ok_or_else(|| format!("unknown algo '{algo_name}' (valid: {})", Algo::known_names()))?;
+    let program = PhaseProgram::compile(&scn);
+    let trace = rlhf_mem::rlhf::sim::build_trace(&scn);
 
     let comp = peak_composition(&trace);
     println!("== ideal residency peak: {} in {} ==", fmt_bytes(comp.total), comp.phase.name());
@@ -39,6 +47,15 @@ pub fn run(args: &Args) -> Result<(), String> {
 
     let res = run_trace(&trace, RTX3090_HBM);
     let s = &res.summary;
+    println!("\n== allocator per-phase peaks ({} program order) ==", scn.algo.name());
+    for (phase, peak) in res.profiler.phase_attribution(&program) {
+        println!(
+            "  {:<18} reserved {:<12} allocated {}",
+            phase.name(),
+            fmt_bytes(peak.reserved),
+            fmt_bytes(peak.allocated)
+        );
+    }
     println!("\n== allocator view ==");
     println!("  peak reserved {}   frag-at-peak {}   peak allocated {}   peak phase {}",
         fmt_bytes(s.peak_reserved), fmt_bytes(s.frag_at_peak), fmt_bytes(s.peak_allocated), s.peak_phase.name());

@@ -5,6 +5,7 @@
 
 pub mod ablation;
 pub mod advise;
+pub mod algos;
 pub mod cluster;
 pub mod debug;
 pub mod genablation;

@@ -16,11 +16,12 @@ pub fn run(args: &Args) -> Result<(), String> {
     let res = run_scenario(&cfg.scenario, cfg.capacity);
     let s = &res.summary;
     println!(
-        "{} / {} + {} / {} / world {}",
+        "{} / {} + {} / {} / {} / world {}",
         cfg.scenario.framework.kind.name(),
         cfg.scenario.models.policy_arch.name,
         cfg.scenario.models.value_arch.name,
         cfg.scenario.strategy.label(),
+        cfg.scenario.algo.name(),
         cfg.scenario.world
     );
     println!("  peak reserved : {}", fmt_bytes(s.peak_reserved));

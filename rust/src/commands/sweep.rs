@@ -15,11 +15,12 @@
 use rlhf_mem::frameworks::FrameworkKind;
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::rlhf::cost::GpuSpec;
+use rlhf_mem::rlhf::program::Algo;
 use rlhf_mem::rlhf::sim::ScenarioMode;
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::sweep::{model_set_by_name, SeedPolicy, SweepGrid, SweepRunner};
 use rlhf_mem::util::bytes::GIB;
-use rlhf_mem::util::cli::Args;
+use rlhf_mem::util::cli::{split_list, Args};
 
 pub const SWEEP_USAGE: &str = "\
 rlhf-mem sweep — run a user-defined scenario grid on a worker pool
@@ -30,6 +31,7 @@ FLAGS (comma-separated lists):
   --strategies none,zero1,zero2,zero3,offload,ckpt,all   (default none,zero3)
   --policies never,after_both,after_inference,after_training (default never)
   --modes full,train_both,train_actor                    (default full)
+  --algos ppo,grpo,remax,dpo                             (default ppo)
   --steps N        PPO steps per cell (default 3)
   --world N        data-parallel ranks (default 4)
   --capacity-gib N simulated HBM per GPU (default 24)
@@ -42,10 +44,6 @@ FLAGS (comma-separated lists):
   --jsonl FILE     write per-cell JSON-lines (index-ordered)
 ";
 
-fn split(s: &str) -> impl Iterator<Item = &str> {
-    s.split(',').map(str::trim).filter(|x| !x.is_empty())
-}
-
 pub fn run(args: &Args) -> Result<(), String> {
     if args.bool_flag("help") {
         println!("{SWEEP_USAGE}");
@@ -53,31 +51,37 @@ pub fn run(args: &Args) -> Result<(), String> {
     }
     let mut grid = SweepGrid::new();
 
-    let fws: Vec<FrameworkKind> = split(args.get_or("frameworks", "ds"))
+    let fws: Vec<FrameworkKind> = split_list(args.get_or("frameworks", "ds"))
         .map(|n| FrameworkKind::by_name(n).ok_or_else(|| format!("unknown framework '{n}'")))
         .collect::<Result<_, _>>()?;
     grid = grid.frameworks(fws);
 
-    let models: Vec<(String, _)> = split(args.get_or("models", "opt"))
+    let models: Vec<(String, _)> = split_list(args.get_or("models", "opt"))
         .map(|n| model_set_by_name(n).ok_or_else(|| format!("unknown model set '{n}'")))
         .collect::<Result<_, _>>()?;
     grid = grid.model_sets(models);
 
     let strategies: Vec<(&'static str, StrategyConfig)> =
-        split(args.get_or("strategies", "none,zero3"))
+        split_list(args.get_or("strategies", "none,zero3"))
             .map(|n| StrategyConfig::by_name(n).ok_or_else(|| format!("unknown strategy '{n}'")))
             .collect::<Result<_, _>>()?;
     grid = grid.strategies(strategies);
 
-    let policies: Vec<EmptyCachePolicy> = split(args.get_or("policies", "never"))
+    let policies: Vec<EmptyCachePolicy> = split_list(args.get_or("policies", "never"))
         .map(|n| EmptyCachePolicy::by_name(n).ok_or_else(|| format!("unknown policy '{n}'")))
         .collect::<Result<_, _>>()?;
     grid = grid.policies(policies);
 
-    let modes: Vec<ScenarioMode> = split(args.get_or("modes", "full"))
-        .map(|n| ScenarioMode::by_name(n).ok_or_else(|| format!("unknown mode '{n}'")))
+    let modes: Vec<ScenarioMode> = split_list(args.get_or("modes", "full"))
+        .map(|n| {
+            ScenarioMode::by_name(n).ok_or_else(|| {
+                format!("unknown mode '{n}' (valid: {})", ScenarioMode::known_names())
+            })
+        })
         .collect::<Result<_, _>>()?;
     grid = grid.modes(modes);
+
+    grid = grid.algos(Algo::parse_list(args.get_or("algos", "ppo"))?);
 
     grid = grid
         .steps(args.get_u64("steps", 3)?)
@@ -98,12 +102,12 @@ pub fn run(args: &Args) -> Result<(), String> {
     });
 
     if let Some(pats) = args.flag("include") {
-        for p in split(pats) {
+        for p in split_list(pats) {
             grid = grid.include(p);
         }
     }
     if let Some(pats) = args.flag("exclude") {
-        for p in split(pats) {
+        for p in split_list(pats) {
             grid = grid.exclude(p);
         }
     }

@@ -13,16 +13,23 @@
 //!   "gpu": "rtx3090",
 //!   "capacity_gib": 24,
 //!   "steps": 3,
+//!   "mode": "full",
+//!   "algo": "ppo",
 //!   "empty_cache": "after_inference",
 //!   "rollout_batch": 2, "prompt_len": 256, "gen_len": 256
 //! }
 //! ```
+//!
+//! `mode` selects the §3.1 scenario (`full`, `train_both`,
+//! `train_actor`); `algo` the RLHF algorithm (`ppo`, `grpo`, `remax`,
+//! `dpo`). Unknown names error with the valid list.
 
 use crate::frameworks::{FrameworkKind, FrameworkProfile};
 use crate::mem::{LoraSpec, LoraTargets, ModelArch};
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::cost::GpuSpec;
 use crate::rlhf::models::RlhfModelSet;
+use crate::rlhf::program::Algo;
 use crate::rlhf::sim::{ScenarioMode, SimScenario};
 use crate::strategies::{StrategyConfig, ZeroStage};
 use crate::util::bytes::GIB;
@@ -118,8 +125,20 @@ impl ExperimentConfig {
             * GIB;
 
         let mode_name = j.get("mode").and_then(|v| v.as_str()).unwrap_or("full");
-        let mode = ScenarioMode::by_name(mode_name)
-            .ok_or_else(|| format!("unknown mode '{mode_name}'"))?;
+        let mode = ScenarioMode::by_name(mode_name).ok_or_else(|| {
+            format!(
+                "unknown mode '{mode_name}' (valid: {})",
+                ScenarioMode::known_names()
+            )
+        })?;
+
+        let algo_name = j.get("algo").and_then(|v| v.as_str()).unwrap_or("ppo");
+        let algo = Algo::by_name(algo_name).ok_or_else(|| {
+            format!(
+                "unknown algo '{algo_name}' (valid: {})",
+                Algo::known_names()
+            )
+        })?;
 
         let scenario = SimScenario {
             framework,
@@ -132,12 +151,13 @@ impl ExperimentConfig {
             policy,
             steps: j.get("steps").and_then(|v| v.as_u64()).unwrap_or(3),
             mode,
+            algo,
             gpu,
             seed: j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0x5EED),
             len_jitter: j
                 .get("len_jitter")
                 .and_then(|v| v.as_bool())
-                .unwrap_or(kind == FrameworkKind::ColossalChat),
+                .unwrap_or(kind.default_len_jitter()),
             roles: crate::rlhf::models::RoleSet::ALL,
             time_shared: crate::rlhf::models::RoleSet::EMPTY,
             rank: 0,
@@ -194,6 +214,31 @@ mod tests {
         assert!(ExperimentConfig::from_json_text(r#"{"strategy": {"zero": 9}}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"empty_cache": "x"}"#).is_err());
         assert!(ExperimentConfig::from_json_text("not json").is_err());
+    }
+
+    #[test]
+    fn mode_and_algo_errors_list_valid_names() {
+        let err = ExperimentConfig::from_json_text(r#"{"mode": "warp"}"#).unwrap_err();
+        assert!(err.contains("unknown mode 'warp'"), "{err}");
+        assert!(err.contains("full, train_both, train_actor"), "{err}");
+        let err = ExperimentConfig::from_json_text(r#"{"algo": "sarsa"}"#).unwrap_err();
+        assert!(err.contains("unknown algo 'sarsa'"), "{err}");
+        assert!(err.contains("ppo, grpo, remax, dpo"), "{err}");
+    }
+
+    #[test]
+    fn mode_and_algo_fields_parse() {
+        use crate::rlhf::program::Algo;
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{"mode": "train_actor", "algo": "grpo", "steps": 1}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.mode, ScenarioMode::TrainActorOnly);
+        assert_eq!(cfg.scenario.algo, Algo::Grpo);
+        // Defaults: the paper's full PPO pipeline.
+        let cfg = ExperimentConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.scenario.mode, ScenarioMode::Full);
+        assert_eq!(cfg.scenario.algo, Algo::Ppo);
     }
 
     #[test]

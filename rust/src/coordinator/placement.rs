@@ -107,6 +107,14 @@ impl PlacementPlan {
     /// Structural invariants: at least one GPU, nothing idle, every model
     /// hosted somewhere, time-sharing restricted to hosted frozen scorers.
     pub fn validate(&self) -> Result<(), String> {
+        self.validate_for(RoleSet::ALL)
+    }
+
+    /// [`Self::validate`] against a reduced cast: critic-free algorithms
+    /// ([`crate::rlhf::program::Algo::roles`]) drop models from
+    /// [`Role::ALL`], and a plan is valid for them as long as every
+    /// *required* model is hosted somewhere.
+    pub fn validate_for(&self, required: RoleSet) -> Result<(), String> {
         if self.hosted.is_empty() {
             return Err("placement plan has no GPUs".to_string());
         }
@@ -118,7 +126,7 @@ impl PlacementPlan {
                 return Err(format!("GPU {g} hosts no model"));
             }
         }
-        for role in Role::ALL {
+        for role in required.iter() {
             if self.hosts_of(role).is_empty() {
                 return Err(format!("no GPU hosts the {} model", role.name()));
             }
@@ -222,6 +230,22 @@ mod tests {
         assert_eq!((s2.world, s2.rank), (1, 0));
         assert!(s2.roles.contains(Role::Reference));
         assert!(!s2.roles.contains(Role::Critic));
+    }
+
+    #[test]
+    fn validate_for_reduced_casts() {
+        use crate::rlhf::program::Algo;
+        // A plan missing the critic is invalid for PPO's full cast but
+        // valid for GRPO's critic-free one.
+        let mut p = PlacementPlan::colocated(2);
+        p.hosted = vec![
+            RoleSet::of(&[Role::Actor, Role::Reference]),
+            RoleSet::of(&[Role::Reward]),
+        ];
+        p.time_shared = vec![RoleSet::EMPTY; 2];
+        assert!(p.validate().is_err());
+        assert!(p.validate_for(Algo::Grpo.roles()).is_ok());
+        assert!(p.validate_for(Algo::Dpo.roles()).is_ok());
     }
 
     #[test]

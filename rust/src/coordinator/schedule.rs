@@ -17,6 +17,7 @@ use crate::experiment::run_scenario;
 use crate::mem::{lora::lora_tensors, DType};
 use crate::profiler::ProfileSummary;
 use crate::rlhf::models::{Role, RoleSet};
+use crate::rlhf::program::{Algo, PhaseProgram};
 use crate::rlhf::sim::SimScenario;
 use crate::sweep::{SweepCell, SweepRunner};
 use crate::util::json::Json;
@@ -127,6 +128,7 @@ pub fn plan_cells(
                 strategy: strategy_label.to_string(),
                 mode: base.mode,
                 policy: base.policy,
+                algo: base.algo,
                 alloc_label: "default".to_string(),
                 alloc_cfg: AllocatorConfig::default(),
                 scenario,
@@ -142,7 +144,7 @@ pub fn aggregate(
     base: &SimScenario,
     summaries: &[ProfileSummary],
 ) -> Result<ClusterRun, String> {
-    plan.validate()?;
+    plan.validate_for(base.algo.roles())?;
     if summaries.len() != plan.hosted.len() {
         return Err(format!(
             "plan '{}' has {} GPUs but {} summaries",
@@ -156,7 +158,10 @@ pub fn aggregate(
         .enumerate()
         .map(|(g, s)| GpuLoad {
             gpu: g as u64,
-            roles: plan.hosted[g],
+            // Report the models that actually exist in this run: hosted
+            // roles ∩ the algorithm's cast (a GRPO "actor+critic" GPU
+            // instantiates no critic).
+            roles: plan.hosted[g].intersect(base.algo.roles()),
             peak_reserved: s.peak_reserved,
             peak_allocated: s.peak_allocated,
             frag: s.frag,
@@ -178,11 +183,17 @@ pub fn aggregate(
     })
 }
 
-/// The stable configuration key (`cluster/w{world}/{plan}/{strategy}`)
-/// shared by `rlhf-mem cluster` JSONL and the planner's
-/// `ClusterCandidate::key`, so the two outputs stay cross-referencable.
-pub fn cluster_key(world: u64, plan_name: &str, strategy_label: &str) -> String {
-    format!("cluster/w{world}/{plan_name}/{strategy_label}")
+/// The stable configuration key (`cluster/w{world}/{plan}/{strategy}`,
+/// with `/{algo}` appended for non-PPO algorithms) shared by `rlhf-mem
+/// cluster` JSONL and the planner's `ClusterCandidate::key`, so the two
+/// outputs stay cross-referencable.
+pub fn cluster_key(world: u64, plan_name: &str, strategy_label: &str, algo: Algo) -> String {
+    let mut key = format!("cluster/w{world}/{plan_name}/{strategy_label}");
+    if algo != Algo::Ppo {
+        key.push('/');
+        key.push_str(algo.name());
+    }
+    key
 }
 
 /// One fully-specified cluster configuration: a keyed placement plan over
@@ -249,7 +260,7 @@ pub fn run_plan(
     base: &SimScenario,
     per_gpu_capacity: u64,
 ) -> Result<ClusterRun, String> {
-    plan.validate()?;
+    plan.validate_for(base.algo.roles())?;
     let summaries: Vec<ProfileSummary> = (0..plan.hosted.len())
         .map(|g| {
             let scn = plan.scenario_for_gpu(base, g);
@@ -265,7 +276,10 @@ pub fn run_plan(
 /// remote GPU** (reference and reward sharing a scorer GPU share one
 /// copy); each remote model's head outputs travel back, and a remote
 /// critic additionally receives the advantages/returns computed on the
-/// actor's GPUs.
+/// actor's GPUs. Which scorers exist at all — and which score a second
+/// sequence set (DPO pairs, ReMax's greedy baseline at the reward model)
+/// — comes from the scenario's compiled [`PhaseProgram`]: critic-free
+/// algorithms ship less, paired scorers ship double.
 fn remote_wire_bytes(plan: &PlacementPlan, base: &SimScenario) -> u64 {
     let fw = &base.framework;
     let dp = plan.dp_gpus().len().max(1) as u64;
@@ -273,9 +287,10 @@ fn remote_wire_bytes(plan: &PlacementPlan, base: &SimScenario) -> u64 {
     let s = fw.total_seq();
     let seq_down = 2 * b * s * DType::I64.bytes(); // sequences + mask
     let actor_gpus = plan.hosts_of(Role::Actor);
+    let infers = PhaseProgram::compile(base).scorer_infers();
     let mut wire = 0;
     let mut seq_shipped_to: Vec<usize> = Vec::new();
-    for role in [Role::Reference, Role::Reward, Role::Critic] {
+    for &(role, pairs) in &infers {
         let hosts = plan.hosts_of(role);
         let remote = hosts.iter().all(|g| !actor_gpus.contains(g));
         if !remote {
@@ -284,7 +299,17 @@ fn remote_wire_bytes(plan: &PlacementPlan, base: &SimScenario) -> u64 {
         for &g in &hosts {
             if !seq_shipped_to.contains(&g) {
                 seq_shipped_to.push(g);
-                wire += seq_down;
+                // The sequence set travels once per remote GPU — doubled
+                // when *any* scorer that GPU hosts consumes a second set
+                // (a shared reference+reward scorer GPU under ReMax still
+                // needs the greedy rollout's sequences).
+                let gpu_factor = infers
+                    .iter()
+                    .filter(|(r, _)| plan.hosted[g].contains(*r))
+                    .map(|&(_, p)| if p { 2 } else { 1 })
+                    .max()
+                    .unwrap_or(1);
+                wire += seq_down * gpu_factor;
             }
         }
         let outputs_up = match role {
@@ -293,7 +318,7 @@ fn remote_wire_bytes(plan: &PlacementPlan, base: &SimScenario) -> u64 {
             Role::Critic => b * s * 4,    // values
             Role::Actor => unreachable!(),
         };
-        wire += outputs_up;
+        wire += outputs_up * if pairs { 2 } else { 1 };
         if role == Role::Critic {
             // Advantages + returns stream back down for the value update.
             wire += 2 * b * s * 4;
@@ -308,14 +333,16 @@ fn p2p_us_per_step(plan: &PlacementPlan, base: &SimScenario) -> f64 {
 
 /// Per-step gradient synchronisation across the training DP group. The
 /// single-GPU traces already charge ZeRO-2/3 reduce-scatter; ZeRO-0/1
-/// all-reduce their dense gradients here instead.
+/// all-reduce their dense gradients here instead. The set of training
+/// engines comes from the compiled [`PhaseProgram`] (PPO syncs actor +
+/// critic; critic-free algorithms only the actor).
 fn collective_us_per_step(plan: &PlacementPlan, base: &SimScenario) -> f64 {
     let dp = plan.dp_gpus().len() as u64;
     if dp <= 1 || base.strategy.zero.partitions_gradients() {
         return 0.0;
     }
     let mut us = 0.0;
-    for role in [Role::Actor, Role::Critic] {
+    for role in PhaseProgram::compile(base).train_roles() {
         let grads = trainable_bytes_f16(base, role);
         // All-reduce = reduce-scatter + all-gather: 2x the ring volume.
         us += 2.0 * collective::ring_time_us(grads, dp, base.gpu.link_bw, HOP_LATENCY_US);
@@ -395,6 +422,40 @@ mod tests {
         assert!(shared.max_peak_reserved() <= cap);
         // ...and pays for it in swap time.
         assert!(shared.step_time_us >= colocated.step_time_us * 0.99);
+    }
+
+    #[test]
+    fn cluster_key_appends_non_ppo_algo() {
+        assert_eq!(
+            cluster_key(2, "colocated", "None", Algo::Ppo),
+            "cluster/w2/colocated/None"
+        );
+        assert_eq!(
+            cluster_key(4, "dedicated", "ZeRO-3", Algo::Grpo),
+            "cluster/w4/dedicated/ZeRO-3/grpo"
+        );
+    }
+
+    #[test]
+    fn critic_free_algos_lighten_the_cluster() {
+        // dedicated(3): two training GPUs (DP group) + one scorer GPU, so
+        // the ZeRO-0 gradient all-reduce is visible.
+        let plan = PlacementPlan::dedicated(3).unwrap();
+        let ppo_run = run_plan(&plan, &base(), RTX3090_HBM).unwrap();
+        let mut grpo = base();
+        grpo.algo = Algo::Grpo;
+        let grpo_run = run_plan(&plan, &grpo, RTX3090_HBM).unwrap();
+        // No critic gradients in the all-reduce, and a lighter training
+        // GPU (no critic engine state).
+        assert!(grpo_run.collective_us < ppo_run.collective_us);
+        assert!(grpo_run.gpus[0].peak_reserved < ppo_run.gpus[0].peak_reserved);
+        // DPO's remote reference scores the chosen+rejected pair: double
+        // the sequences down and logprobs up, so despite the smaller cast
+        // it ships *more* per step than PPO's dedicated scorers.
+        let mut dpo = base();
+        dpo.algo = Algo::Dpo;
+        let dpo_run = run_plan(&plan, &dpo, RTX3090_HBM).unwrap();
+        assert!(dpo_run.p2p_us > ppo_run.p2p_us);
     }
 
     #[test]

@@ -30,6 +30,16 @@ impl FrameworkKind {
             _ => None,
         }
     }
+
+    /// Do rollout lengths vary step to step by default? DeepSpeed-Chat
+    /// pads prompts and answers to the configured maxima, so tensor sizes
+    /// repeat exactly; ColossalChat stops at EOS, and the resulting size
+    /// drift is a major source of cache-reuse failure. The single source
+    /// of the jitter default for presets, sweep grids, configs and the
+    /// planner.
+    pub fn default_len_jitter(self) -> bool {
+        self == FrameworkKind::ColossalChat
+    }
 }
 
 /// How `generate()` manages logits (paper Appendix B).
@@ -156,6 +166,8 @@ mod tests {
             assert_eq!(FrameworkKind::by_name(kind.name()), Some(kind));
         }
         assert_eq!(FrameworkKind::by_name("x"), None);
+        assert!(!FrameworkKind::DeepSpeedChat.default_len_jitter());
+        assert!(FrameworkKind::ColossalChat.default_len_jitter());
     }
 
     #[test]

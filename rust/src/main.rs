@@ -20,6 +20,8 @@ SUBCOMMANDS:
   ablation     §3.3 empty_cache placement ablation
   overhead     §3.3 end-to-end time overhead of empty_cache
   sweep        Run a user-defined scenario grid (see `sweep --help`)
+  algos        Compare RLHF algorithms (ppo/grpo/remax/dpo): peak reserved
+               + fragmentation per algorithm, per strategy (see `algos --help`)
   cluster      Multi-GPU placement simulator: per-GPU peaks + step time
                per placement plan (see `cluster --help`)
   advise       Search the mitigation space for the cheapest config that
@@ -48,6 +50,7 @@ fn main() {
         Some("ablation") => commands::ablation::run(&args),
         Some("overhead") => commands::overhead::run(&args),
         Some("sweep") => commands::sweep::run(&args),
+        Some("algos") => commands::algos::run(&args),
         Some("cluster") => commands::cluster::run(&args),
         Some("advise") => commands::advise::run(&args),
         Some("train") => run_train(&args),

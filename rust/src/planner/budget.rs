@@ -17,6 +17,7 @@
 //!   "gpu": "rtx3090",
 //!   "strategies": ["none", "zero3"],
 //!   "allocators": ["default", "expandable"],
+//!   "algos": ["ppo", "grpo"],
 //!   "worlds": [2, 4]
 //! }
 //! ```
@@ -24,7 +25,9 @@
 //! `strategies` / `allocators` optionally narrow the mitigation space (by
 //! the short names [`crate::strategies::StrategyConfig::by_name`] accepts
 //! and the labels of [`super::space::allocator_candidates`]); omitted, the
-//! full space is searched. `worlds` lists the cluster sizes `advise
+//! full space is searched. `algos` widens the search across RLHF
+//! algorithms ([`crate::rlhf::program::Algo`] names; omitted, PPO only —
+//! the paper's pipeline). `worlds` lists the cluster sizes `advise
 //! --cluster` searches placements over (each ≥ 2 GPUs; omitted, `{2,
 //! world}`).
 
@@ -57,6 +60,9 @@ pub struct Budget {
     pub strategies: Option<Vec<String>>,
     /// Optional allocator-candidate labels restricting the search.
     pub allocators: Option<Vec<String>>,
+    /// Optional RLHF algorithm names widening the search across the
+    /// algorithm axis. Omitted, only PPO (the paper's pipeline) runs.
+    pub algos: Option<Vec<String>>,
     /// Cluster sizes (GPU counts ≥ 2) `advise --cluster` searches.
     /// Omitted, the cluster planner tries `{2, world}`.
     pub worlds: Option<Vec<u64>>,
@@ -80,6 +86,7 @@ impl Budget {
             gpu: GpuSpec::rtx3090(),
             strategies: None,
             allocators: None,
+            algos: None,
             worlds: None,
         }
     }
@@ -96,7 +103,7 @@ impl Budget {
     pub fn from_json(j: &Json) -> Result<Budget, String> {
         // A typo'd field name must not silently fall back to defaults
         // (same fail-loud principle as the typed-field checks below).
-        const KNOWN: [&str; 13] = [
+        const KNOWN: [&str; 14] = [
             "name",
             "capacity_gib",
             "max_overhead_pct",
@@ -109,6 +116,7 @@ impl Budget {
             "gpu",
             "strategies",
             "allocators",
+            "algos",
             "worlds",
         ];
         if let Json::Obj(kvs) = j {
@@ -234,6 +242,7 @@ impl Budget {
             gpu,
             strategies: name_list("strategies")?,
             allocators: name_list("allocators")?,
+            algos: name_list("algos")?,
             worlds,
         })
     }
@@ -271,6 +280,10 @@ mod tests {
         assert_eq!(b.seed, 7);
         assert_eq!(b.strategies.as_deref().unwrap().len(), 2);
         assert_eq!(b.allocators.as_deref().unwrap().len(), 2);
+        assert!(b.algos.is_none(), "PPO-only unless widened");
+        let b = Budget::from_json_text(r#"{"algos": ["ppo", "grpo"]}"#).unwrap();
+        assert_eq!(b.algos.as_deref().unwrap().len(), 2);
+        assert!(Budget::from_json_text(r#"{"algos": []}"#).is_err());
     }
 
     #[test]

@@ -107,13 +107,15 @@ fn analyze(budget: Budget, candidates: Vec<Candidate>, sweep: SweepReport) -> Pl
         .map(|s| !s.oom && s.peak_reserved <= budget.capacity)
         .collect();
 
-    // Per-strategy un-mitigated baseline time (policy `never`, default
-    // allocator, run to completion).
-    let baseline_time = |strategy_label: &str| -> Option<f64> {
+    // Per-(algorithm, strategy) un-mitigated baseline time (policy
+    // `never`, default allocator, run to completion) — overheads compare
+    // within one workload, never across algorithms.
+    let baseline_time = |of: &Candidate| -> Option<f64> {
         candidates
             .iter()
             .position(|c| {
-                c.strategy_label == strategy_label
+                c.strategy_label == of.strategy_label
+                    && c.algo == of.algo
                     && c.policy == EmptyCachePolicy::Never
                     && c.alloc_label == "default"
             })
@@ -124,8 +126,7 @@ fn analyze(budget: Budget, candidates: Vec<Candidate>, sweep: SweepReport) -> Pl
         .iter()
         .zip(&summaries)
         .map(|(c, s)| {
-            baseline_time(&c.strategy_label)
-                .map(|base| (s.total_time_us - base) / base * 100.0)
+            baseline_time(c).map(|base| (s.total_time_us - base) / base * 100.0)
         })
         .collect();
 
@@ -270,7 +271,8 @@ impl PlanReport {
     /// Ranked table of the top `top` recommendations.
     pub fn to_table(&self, top: usize) -> TextTable {
         let mut t = TextTable::new(&[
-            "Rank", "Strategy", "Policy", "Allocator", "Reserved", "Frag.", "Overhead", "Frontier",
+            "Rank", "Algo", "Strategy", "Policy", "Allocator", "Reserved", "Frag.", "Overhead",
+            "Frontier",
         ]);
         for o in self.recommended().into_iter().take(top) {
             t.row(outcome_row(o, o.rank.map(|r| r.to_string()).unwrap_or_default()));
@@ -282,7 +284,8 @@ impl PlanReport {
     /// the ranking when the point is also recommended).
     pub fn frontier_table(&self) -> TextTable {
         let mut t = TextTable::new(&[
-            "Rank", "Strategy", "Policy", "Allocator", "Reserved", "Frag.", "Overhead", "Frontier",
+            "Rank", "Algo", "Strategy", "Policy", "Allocator", "Reserved", "Frag.", "Overhead",
+            "Frontier",
         ]);
         for o in self.frontier() {
             let rank = o.rank.map(|r| r.to_string()).unwrap_or_else(|| "-".into());
@@ -309,6 +312,7 @@ impl PlanReport {
 fn outcome_row(o: &PlanOutcome, rank: String) -> Vec<String> {
     vec![
         rank,
+        o.candidate.algo.name().to_string(),
         o.candidate.strategy_label.clone(),
         o.candidate.policy.name().to_string(),
         o.candidate.alloc_label.clone(),
@@ -329,6 +333,7 @@ impl PlanOutcome {
         Json::obj(vec![
             ("index", Json::from(self.candidate.index)),
             ("key", Json::str(self.candidate.key())),
+            ("algo", Json::str(self.candidate.algo.name())),
             ("strategy", Json::str(self.candidate.strategy_label.clone())),
             ("policy", Json::str(self.candidate.policy.name())),
             ("alloc", Json::str(self.candidate.alloc_label.clone())),
@@ -381,6 +386,7 @@ impl ClusterOutcome {
             ("world", Json::from(self.candidate.world)),
             ("plan", Json::str(self.candidate.plan.name.clone())),
             ("strategy", Json::str(self.candidate.strategy_label.clone())),
+            ("algo", Json::str(self.candidate.algo.name())),
             (
                 "per_gpu_reserved",
                 Json::Arr(
@@ -589,7 +595,8 @@ impl ClusterReport {
 
 fn cluster_table_header() -> TextTable {
     TextTable::new(&[
-        "Rank", "GPUs", "Placement", "Strategy", "Max GPU", "Total", "Step ms", "Frontier",
+        "Rank", "GPUs", "Placement", "Strategy", "Algo", "Max GPU", "Total", "Step ms",
+        "Frontier",
     ])
 }
 
@@ -599,6 +606,7 @@ fn cluster_row(o: &ClusterOutcome, rank: String) -> Vec<String> {
         o.candidate.world.to_string(),
         o.candidate.plan.name.clone(),
         o.candidate.strategy_label.clone(),
+        o.candidate.algo.name().to_string(),
         fmt_gib_paper(o.run.max_peak_reserved()),
         fmt_gib_paper(o.run.total_peak_reserved()),
         format!("{:.1}", o.run.step_time_us / 1000.0),

@@ -10,6 +10,7 @@ use crate::coordinator::PlacementPlan;
 use crate::frameworks::FrameworkProfile;
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::models::RoleSet;
+use crate::rlhf::program::Algo;
 use crate::rlhf::sim::{ScenarioMode, SimScenario};
 use crate::strategies::StrategyConfig;
 use crate::sweep::SweepCell;
@@ -21,6 +22,7 @@ pub struct Candidate {
     /// Position in enumeration order — the stable identity rankings and
     /// JSONL lines are keyed by.
     pub index: usize,
+    pub algo: Algo,
     pub strategy_label: String,
     pub strategy: StrategyConfig,
     pub policy: EmptyCachePolicy,
@@ -29,14 +31,19 @@ pub struct Candidate {
 }
 
 impl Candidate {
-    /// `strategy/policy/alloc` — unique within one plan.
+    /// `strategy/policy[/algo]/alloc` — unique within one plan. Non-PPO
+    /// algorithms insert `/algo` before the allocator label, matching the
+    /// [`crate::sweep::SweepCell`] key component order; PPO-only budgets
+    /// keep the legacy three-part keys.
     pub fn key(&self) -> String {
-        format!(
-            "{}/{}/{}",
-            self.strategy_label,
-            self.policy.name(),
-            self.alloc_label
-        )
+        let mut key = format!("{}/{}", self.strategy_label, self.policy.name());
+        if self.algo != Algo::Ppo {
+            key.push('/');
+            key.push_str(self.algo.name());
+        }
+        key.push('/');
+        key.push_str(&self.alloc_label);
+        key
     }
 }
 
@@ -69,6 +76,22 @@ pub fn allocator_candidates() -> Vec<(String, AllocatorConfig)> {
         .collect()
 }
 
+/// The budget's algorithm rows: its `algos` names resolved, or PPO only
+/// (the paper's pipeline) when unrestricted.
+fn algo_rows(budget: &Budget) -> Result<Vec<Algo>, String> {
+    match &budget.algos {
+        Some(names) => names
+            .iter()
+            .map(|n| {
+                Algo::by_name(n).ok_or_else(|| {
+                    format!("unknown algo '{n}' (valid: {})", Algo::known_names())
+                })
+            })
+            .collect(),
+        None => Ok(vec![Algo::Ppo]),
+    }
+}
+
 /// The budget's strategy rows: its `strategies` short-names resolved, or
 /// the full Table-1 sweep when unrestricted.
 fn strategy_rows(budget: &Budget) -> Result<Vec<(String, StrategyConfig)>, String> {
@@ -88,12 +111,14 @@ fn strategy_rows(budget: &Budget) -> Result<Vec<(String, StrategyConfig)>, Strin
     }
 }
 
-/// Enumerate the space for `budget` in deterministic order (strategy →
-/// policy → allocator), honouring its optional `strategies`/`allocators`
-/// restrictions and skipping strategies the framework cannot run.
+/// Enumerate the space for `budget` in deterministic order (algorithm →
+/// strategy → policy → allocator), honouring its optional
+/// `strategies`/`allocators`/`algos` restrictions and skipping strategies
+/// the framework cannot run.
 pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
     let profile = FrameworkProfile::by_kind(budget.framework);
 
+    let algo_rows: Vec<Algo> = algo_rows(budget)?;
     let strategy_rows: Vec<(String, StrategyConfig)> = strategy_rows(budget)?;
 
     let all_allocs = allocator_candidates();
@@ -116,20 +141,23 @@ pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
     };
 
     let mut out = Vec::new();
-    for (slabel, strategy) in &strategy_rows {
-        if !profile.supports(strategy) {
-            continue;
-        }
-        for policy in EmptyCachePolicy::ALL {
-            for (alabel, acfg) in &allocs {
-                out.push(Candidate {
-                    index: out.len(),
-                    strategy_label: slabel.clone(),
-                    strategy: *strategy,
-                    policy,
-                    alloc_label: alabel.clone(),
-                    alloc_cfg: acfg.clone(),
-                });
+    for algo in &algo_rows {
+        for (slabel, strategy) in &strategy_rows {
+            if !profile.supports(strategy) {
+                continue;
+            }
+            for policy in EmptyCachePolicy::ALL {
+                for (alabel, acfg) in &allocs {
+                    out.push(Candidate {
+                        index: out.len(),
+                        algo: *algo,
+                        strategy_label: slabel.clone(),
+                        strategy: *strategy,
+                        policy,
+                        alloc_label: alabel.clone(),
+                        alloc_cfg: acfg.clone(),
+                    });
+                }
             }
         }
     }
@@ -147,7 +175,7 @@ pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
 /// the *same* workload) and runs at the budget's capacity.
 pub fn to_cells(budget: &Budget, candidates: &[Candidate]) -> Vec<SweepCell> {
     let profile = FrameworkProfile::by_kind(budget.framework);
-    let len_jitter = budget.framework == crate::frameworks::FrameworkKind::ColossalChat;
+    let len_jitter = budget.framework.default_len_jitter();
     candidates
         .iter()
         .map(|c| {
@@ -159,6 +187,7 @@ pub fn to_cells(budget: &Budget, candidates: &[Candidate]) -> Vec<SweepCell> {
                 policy: c.policy,
                 steps: budget.steps,
                 mode: ScenarioMode::Full,
+                algo: c.algo,
                 gpu: budget.gpu,
                 seed: budget.seed,
                 len_jitter,
@@ -173,6 +202,7 @@ pub fn to_cells(budget: &Budget, candidates: &[Candidate]) -> Vec<SweepCell> {
                 strategy: c.strategy_label.clone(),
                 mode: ScenarioMode::Full,
                 policy: c.policy,
+                algo: c.algo,
                 alloc_label: c.alloc_label.clone(),
                 alloc_cfg: c.alloc_cfg.clone(),
                 scenario,
@@ -193,20 +223,22 @@ pub struct ClusterCandidate {
     pub plan: PlacementPlan,
     pub strategy_label: String,
     pub strategy: StrategyConfig,
+    pub algo: Algo,
 }
 
 impl ClusterCandidate {
-    /// `cluster/w{world}/{plan}/{strategy}` — unique within one search,
-    /// and identical to the `rlhf-mem cluster` JSONL key for the same
-    /// configuration (both call [`cluster_key`]).
+    /// `cluster/w{world}/{plan}/{strategy}` (plus `/{algo}` for non-PPO)
+    /// — unique within one search, and identical to the `rlhf-mem
+    /// cluster` JSONL key for the same configuration (both call
+    /// [`cluster_key`]).
     pub fn key(&self) -> String {
-        cluster_key(self.world, &self.plan.name, &self.strategy_label)
+        cluster_key(self.world, &self.plan.name, &self.strategy_label, self.algo)
     }
 }
 
 /// Enumerate the placement space for `budget` in deterministic order
-/// (world → plan preset → strategy). Worlds come from `budget.worlds`
-/// (default `{2, world}`), each ≥ 2 GPUs.
+/// (world → plan preset → strategy → algorithm). Worlds come from
+/// `budget.worlds` (default `{2, world}`), each ≥ 2 GPUs.
 pub fn enumerate_cluster(budget: &Budget) -> Result<Vec<ClusterCandidate>, String> {
     // The cluster search varies placement × strategy × world only; every
     // cell runs policy `never` on the default allocator. A budget that
@@ -221,6 +253,7 @@ pub fn enumerate_cluster(budget: &Budget) -> Result<Vec<ClusterCandidate>, Strin
     }
     let profile = FrameworkProfile::by_kind(budget.framework);
     let rows = strategy_rows(budget)?;
+    let algos = algo_rows(budget)?;
     let worlds: Vec<u64> = match &budget.worlds {
         Some(ws) => ws.clone(),
         None => {
@@ -243,13 +276,16 @@ pub fn enumerate_cluster(budget: &Budget) -> Result<Vec<ClusterCandidate>, Strin
                 if !profile.supports(strategy) {
                     continue;
                 }
-                out.push(ClusterCandidate {
-                    index: out.len(),
-                    world,
-                    plan: plan.clone(),
-                    strategy_label: label.clone(),
-                    strategy: *strategy,
-                });
+                for algo in &algos {
+                    out.push(ClusterCandidate {
+                        index: out.len(),
+                        world,
+                        plan: plan.clone(),
+                        strategy_label: label.clone(),
+                        strategy: *strategy,
+                        algo: *algo,
+                    });
+                }
             }
         }
     }
@@ -273,9 +309,10 @@ pub fn cluster_base_scenario(budget: &Budget, c: &ClusterCandidate) -> SimScenar
         policy: EmptyCachePolicy::Never,
         steps: budget.steps,
         mode: ScenarioMode::Full,
+        algo: c.algo,
         gpu: budget.gpu,
         seed: budget.seed,
-        len_jitter: budget.framework == crate::frameworks::FrameworkKind::ColossalChat,
+        len_jitter: budget.framework.default_len_jitter(),
         roles: RoleSet::ALL,
         time_shared: RoleSet::EMPTY,
         rank: 0,
@@ -334,6 +371,28 @@ mod tests {
     }
 
     #[test]
+    fn algo_axis_widens_the_space_and_suffixes_keys() {
+        let mut budget = Budget::rtx3090_table1();
+        budget.strategies = Some(vec!["none".to_string()]);
+        budget.allocators = Some(vec!["default".to_string()]);
+        budget.algos = Some(vec!["ppo".to_string(), "grpo".to_string()]);
+        let cands = enumerate(&budget).unwrap();
+        // 2 algos × 1 strategy × 4 policies × 1 allocator.
+        assert_eq!(cands.len(), 2 * 4);
+        assert_eq!(cands[0].key(), "None/never/default");
+        assert_eq!(cands[4].key(), "None/never/grpo/default");
+        assert_eq!(cands[0].algo, Algo::Ppo);
+        assert_eq!(cands[4].algo, Algo::Grpo);
+        let cells = to_cells(&budget, &cands);
+        assert_eq!(cells[4].scenario.algo, Algo::Grpo);
+        assert_eq!(cells[4].key, "advise/None/never/grpo/default");
+        budget.algos = Some(vec!["sarsa".to_string()]);
+        let err = enumerate(&budget).unwrap_err();
+        assert!(err.contains("unknown algo 'sarsa'"), "{err}");
+        assert!(err.contains("ppo, grpo, remax, dpo"), "{err}");
+    }
+
+    #[test]
     fn cluster_space_shape_and_keys() {
         let mut budget = Budget::rtx3090_table1();
         budget.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
@@ -354,6 +413,15 @@ mod tests {
         budget.worlds = Some(vec![2]);
         budget.allocators = Some(vec!["expandable".to_string()]);
         assert!(enumerate_cluster(&budget).is_err());
+        // The algorithm axis widens the placement search and its keys.
+        budget.allocators = None;
+        budget.algos = Some(vec!["ppo".to_string(), "grpo".to_string()]);
+        let cands = enumerate_cluster(&budget).unwrap();
+        assert_eq!(cands.len(), 3 * 2 * 2);
+        assert_eq!(cands[0].key(), "cluster/w2/colocated/None");
+        assert_eq!(cands[1].key(), "cluster/w2/colocated/None/grpo");
+        let base = cluster_base_scenario(&budget, &cands[1]);
+        assert_eq!(base.algo, Algo::Grpo);
     }
 
     #[test]

@@ -91,6 +91,24 @@ impl MemoryProfiler {
     pub fn current_phase(&self) -> PhaseKind {
         self.current_phase
     }
+
+    /// Per-phase peaks in the order the compiled
+    /// [`PhaseProgram`](crate::rlhf::program::PhaseProgram) runs them
+    /// (`Init` first, then the program's step phases) — attribution driven
+    /// by the same IR the emitter interpreted, so a phase the program
+    /// never scheduled cannot appear, and consumers stop re-deriving the
+    /// pipeline order privately.
+    pub fn phase_attribution(
+        &self,
+        program: &crate::rlhf::program::PhaseProgram,
+    ) -> Vec<(PhaseKind, PhasePeak)> {
+        let mut order = vec![PhaseKind::Init];
+        order.extend(program.step_phases());
+        order
+            .into_iter()
+            .filter_map(|p| self.phase_peaks.get(&p).map(|peak| (p, *peak)))
+            .collect()
+    }
 }
 
 impl Default for MemoryProfiler {
@@ -177,6 +195,25 @@ mod tests {
         assert!(gen.allocated >= 100 * MIB);
         assert!(train.allocated >= 300 * MIB);
         assert_eq!(prof.peak_phase, PhaseKind::TrainActor);
+    }
+
+    #[test]
+    fn phase_attribution_follows_the_program_order() {
+        use crate::experiment::{run_scenario, RTX3090_HBM};
+        use crate::policy::EmptyCachePolicy;
+        use crate::rlhf::program::PhaseProgram;
+        use crate::rlhf::sim::SimScenario;
+        use crate::strategies::StrategyConfig;
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 1;
+        let program = PhaseProgram::compile(&scn);
+        let res = run_scenario(&scn, RTX3090_HBM);
+        let attribution = res.profiler.phase_attribution(&program);
+        let order: Vec<PhaseKind> = attribution.iter().map(|(p, _)| *p).collect();
+        let mut want = vec![PhaseKind::Init];
+        want.extend(program.step_phases());
+        assert_eq!(order, want, "attribution follows the compiled pipeline");
+        assert!(attribution.iter().all(|(_, pk)| pk.reserved > 0));
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Report renderers: generic text tables, the paper-shaped outputs
-//! (Table 1/2 rows, Figure 1 annotations), and the cluster placement
-//! tables behind `rlhf-mem cluster`.
+//! (Table 1/2 rows, Figure 1 annotations), the cluster placement tables
+//! behind `rlhf-mem cluster`, and the per-algorithm comparison behind
+//! `rlhf-mem algos`.
 
+pub mod algos;
 pub mod cluster;
 pub mod paper;
 pub mod table;

@@ -4,10 +4,12 @@
 
 pub mod cost;
 pub mod models;
+pub mod program;
 #[cfg(feature = "pjrt")]
 pub mod real;
 pub mod sim;
 
 pub use cost::{CostModel, GpuSpec};
 pub use models::{RlhfModelSet, Role, RoleSet};
+pub use program::{Algo, PhaseProgram};
 pub use sim::{build_trace, ScenarioMode, SimScenario};

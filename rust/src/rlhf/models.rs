@@ -83,6 +83,12 @@ impl RoleSet {
         self.0 & !other.0 == 0
     }
 
+    /// Roles in both sets (e.g. hosted roles ∩ an algorithm's cast).
+    #[must_use]
+    pub fn intersect(self, other: RoleSet) -> RoleSet {
+        RoleSet(self.0 & other.0)
+    }
+
     /// Member roles in [`Role::ALL`] order.
     pub fn iter(self) -> impl Iterator<Item = Role> {
         Role::ALL.into_iter().filter(move |&r| self.contains(r))
@@ -191,6 +197,11 @@ mod tests {
         assert!(!scorers.contains(Role::Actor));
         assert!(scorers.is_subset_of(RoleSet::ALL));
         assert!(!RoleSet::ALL.is_subset_of(scorers));
+        assert_eq!(RoleSet::ALL.intersect(scorers), scorers);
+        assert_eq!(
+            scorers.intersect(RoleSet::of(&[Role::Actor, Role::Reference])),
+            RoleSet::of(&[Role::Reference])
+        );
         assert!(RoleSet::EMPTY.is_empty());
         assert_eq!(RoleSet::ALL.len(), 4);
         assert_eq!(scorers.label(), "reference+reward");

@@ -1,0 +1,651 @@
+//! The declarative **PhaseProgram IR**: the RLHF phase pipeline as data.
+//!
+//! The paper's central finding is that RLHF memory blowup comes from its
+//! *phase structure* — generation, scoring inferences and training updates
+//! churning differently-shaped allocations through one caching allocator.
+//! This module makes that structure a first-class value: a
+//! [`SimScenario`] *compiles* to an ordered list of [`PhaseNode`]s given
+//! its algorithm, scenario mode and hosted-role placement, and the
+//! emitter in [`crate::rlhf::sim`] is a thin interpreter over the
+//! program. Every other consumer of phase knowledge — the coordinator's
+//! step-time aggregation, the profiler's per-phase attribution, the
+//! trace-invariant checker — reads the same compiled program instead of
+//! re-deriving the pipeline privately.
+//!
+//! Compile pipeline:
+//!
+//! ```text
+//! SimScenario { algo, mode, roles, framework, strategy, ... }
+//!        │ PhaseProgram::compile
+//!        ▼
+//! PhaseProgram { active_roles, nodes: [PhaseNode...] }   (one PPO step)
+//!        │ sim::build_trace_with_program (interpreter)
+//!        ▼
+//! Trace { Init ─ [node₁ … nodeₙ ─ StepEnd]* }
+//! ```
+//!
+//! On top of the IR sits the **algorithm axis** ([`Algo`]): PPO's
+//! four-model cast, GRPO's and ReMax's critic-free variants, and DPO's
+//! reference-only preference pipeline each compile to a different node
+//! list — exactly the axis the memory study sweeps.
+
+use crate::mem::DType;
+use crate::rlhf::models::{Role, RoleSet};
+use crate::rlhf::sim::{ScenarioMode, SimScenario};
+use crate::trace::PhaseKind;
+
+/// Which RLHF algorithm the stage-3 pipeline runs — decides which of the
+/// four models exist and which phases a step schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// PPO with a learned critic — the paper's four-model cast.
+    Ppo,
+    /// Group-relative PPO: no critic model or value update; advantages
+    /// are reward deviations from the rollout group's baseline.
+    Grpo,
+    /// ReMax: no critic; the advantage baseline is the reward of an
+    /// extra *greedy* rollout, so generation churn happens twice.
+    Remax,
+    /// Direct preference optimization: offline preference pairs, the
+    /// frozen reference as the only scorer, one preference-loss update.
+    Dpo,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 4] = [Algo::Ppo, Algo::Grpo, Algo::Remax, Algo::Dpo];
+
+    /// Stable name used in sweep-cell keys, JSON reports and configs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Ppo => "ppo",
+            Algo::Grpo => "grpo",
+            Algo::Remax => "remax",
+            Algo::Dpo => "dpo",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|a| a.name() == s)
+    }
+
+    /// Parse a comma-separated algorithm list (CLI flags), with the
+    /// shared unknown-name error message.
+    pub fn parse_list(s: &str) -> Result<Vec<Algo>, String> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|x| !x.is_empty())
+            .map(|n| {
+                Algo::by_name(n).ok_or_else(|| {
+                    format!("unknown algo '{n}' (valid: {})", Algo::known_names())
+                })
+            })
+            .collect()
+    }
+
+    /// Comma-separated valid names (for CLI/config error messages).
+    pub fn known_names() -> String {
+        Self::ALL
+            .iter()
+            .map(|a| a.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// The model cast this algorithm instantiates. Hosted roles outside
+    /// the cast never allocate engine state.
+    pub fn roles(self) -> RoleSet {
+        match self {
+            Algo::Ppo => RoleSet::ALL,
+            Algo::Grpo | Algo::Remax => {
+                RoleSet::of(&[Role::Actor, Role::Reference, Role::Reward])
+            }
+            Algo::Dpo => RoleSet::of(&[Role::Actor, Role::Reference]),
+        }
+    }
+
+    /// Does the algorithm collect experience by autoregressive rollout
+    /// (vs loading offline preference pairs)?
+    pub fn generates(self) -> bool {
+        self != Algo::Dpo
+    }
+
+    /// The advantage estimator the full pipeline schedules, if any.
+    pub fn advantage(self) -> Option<AdvantageKind> {
+        match self {
+            Algo::Ppo => Some(AdvantageKind::Gae),
+            Algo::Grpo => Some(AdvantageKind::GroupRelative),
+            Algo::Remax => Some(AdvantageKind::GreedyBaseline),
+            Algo::Dpo => None,
+        }
+    }
+
+    /// The actor update's loss shape.
+    pub fn policy_loss(self) -> LossKind {
+        match self {
+            Algo::Dpo => LossKind::Preference,
+            _ => LossKind::PpoClip,
+        }
+    }
+
+    /// Does the pipeline score/train chosen+rejected sequence pairs
+    /// (doubling the effective batch of those phases)?
+    pub fn pairs(self) -> bool {
+        self == Algo::Dpo
+    }
+}
+
+/// Advantage/return computation scheduled between scoring and training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdvantageKind {
+    /// Generalized advantage estimation over critic values: per-token
+    /// advantages *and* returns persist as experience.
+    Gae,
+    /// Group-relative baseline: per-sequence group statistics plus
+    /// per-token advantages (no returns — there is no value target).
+    GroupRelative,
+    /// ReMax greedy baseline: per-token advantages against the greedy
+    /// rollout's rewards (persisted by the doubled reward pass).
+    GreedyBaseline,
+}
+
+/// Loss workspace shape of a training phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    /// Clipped policy surrogate (PPO/GRPO/ReMax): saved logits plus
+    /// logprob/ratio/surrogate/KL temporaries.
+    PpoClip,
+    /// Critic value loss: value/clip/loss temporaries only.
+    ValueLoss,
+    /// DPO preference loss: saved logits over the pair batch plus
+    /// margin/sigmoid temporaries.
+    Preference,
+}
+
+/// One persisted experience tensor of a [`PhaseBody::LoadExperience`]
+/// node, sized against the framework's rollout batch and full sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpTensor {
+    /// Token ids over the full sequence (i64).
+    SeqTokens,
+    /// Attention mask over the full sequence (i64).
+    Mask,
+    /// One f32 per token (logprobs, values, advantages, returns).
+    PerTokenF32,
+    /// One f32 per sequence (scalar rewards).
+    PerSeqF32,
+}
+
+impl ExpTensor {
+    pub fn bytes(self, batch: u64, seq: u64) -> u64 {
+        match self {
+            ExpTensor::SeqTokens | ExpTensor::Mask => batch * seq * DType::I64.bytes(),
+            ExpTensor::PerTokenF32 => batch * seq * 4,
+            ExpTensor::PerSeqF32 => batch * 4,
+        }
+    }
+}
+
+/// What one node of the pipeline does — the tensor lifetimes it implies
+/// (generation KV churn, scoring logits, experience buffers) are realized
+/// by the interpreter in [`crate::rlhf::sim`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PhaseBody {
+    /// Actor autoregressive rollout (prefill + decode KV churn, per-step
+    /// logits, persisted sequences + masks). `greedy_baseline` adds
+    /// ReMax's second argmax rollout and its persisted sequences + mask.
+    Generation { greedy_baseline: bool },
+    /// Sequences + attention masks received from the actor's GPU — what a
+    /// scorer-only GPU of a placement plan holds instead of generating.
+    /// `greedy_baseline` adds ReMax's shipped greedy-rollout set.
+    RemoteSequences { greedy_baseline: bool },
+    /// Experience loaded instead of generated (pre-collected modes, DPO
+    /// preference pairs), sized by the tensor list.
+    LoadExperience { tensors: Vec<ExpTensor> },
+    /// Scoring forward of `role` over the step's sequences; persists that
+    /// role's experience output (logprobs / rewards / values). `pairs`
+    /// doubles the scored batch and the persisted outputs (DPO's
+    /// chosen+rejected halves; ReMax's greedy-baseline rollout at the
+    /// reward model).
+    Infer { role: Role, pairs: bool },
+    /// Advantage/return computation on experience tensors (runs inside
+    /// the enclosing phase — no phase mark of its own).
+    Advantages { kind: AdvantageKind },
+    /// Training update of `role`: forward saving activations, loss,
+    /// backward, optimizer step, plus the ZeRO collective hooks
+    /// (prefetch-bucketed gathers, reduce-scatter charges).
+    Train { role: Role, loss: LossKind, pairs: bool },
+    /// Free the step's experience tensors (no phase mark).
+    FreeExperience,
+}
+
+/// One node of the compiled pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseNode {
+    /// Phase mark emitted when the node starts; `None` for bodies that
+    /// run inside the current phase (advantages, experience bookkeeping).
+    /// Marked nodes are also where the `empty_cache` policy applies.
+    pub kind: Option<PhaseKind>,
+    /// Roles whose hosting this node required at compile time (kept for
+    /// analysis/diagnostics; compilation already filtered unhosted nodes).
+    pub requires: RoleSet,
+    pub body: PhaseBody,
+}
+
+/// One PPO step's phase pipeline, compiled from a [`SimScenario`]'s
+/// algorithm × mode × placement. The trace a scenario emits is
+/// `Init ─ [nodes… ─ StepEnd]*steps`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseProgram {
+    pub algo: Algo,
+    /// The models this GPU instantiates: hosted roles ∩ algorithm cast.
+    pub active_roles: RoleSet,
+    /// Execution order of one step.
+    pub nodes: Vec<PhaseNode>,
+}
+
+impl PhaseProgram {
+    /// Compile `scn`'s pipeline: which phases run on this GPU, in paper
+    /// order, given the algorithm's cast, the scenario mode and the
+    /// hosted-role placement.
+    pub fn compile(scn: &SimScenario) -> PhaseProgram {
+        let algo = scn.algo;
+        let active = scn.roles.intersect(algo.roles());
+        let hosts = |r: Role| active.contains(r);
+        let mark = |kind: PhaseKind, requires: RoleSet, body: PhaseBody| PhaseNode {
+            kind: Some(kind),
+            requires,
+            body,
+        };
+        let silent = |requires: RoleSet, body: PhaseBody| PhaseNode {
+            kind: None,
+            requires,
+            body,
+        };
+
+        let mut nodes: Vec<PhaseNode> = Vec::new();
+        match scn.mode {
+            ScenarioMode::Full => {
+                if !algo.generates() {
+                    // DPO: offline preference pairs replace the rollout.
+                    nodes.push(silent(
+                        RoleSet::EMPTY,
+                        PhaseBody::LoadExperience {
+                            tensors: vec![
+                                ExpTensor::SeqTokens,
+                                ExpTensor::Mask,
+                                ExpTensor::SeqTokens,
+                                ExpTensor::Mask,
+                            ],
+                        },
+                    ));
+                } else if hosts(Role::Actor) {
+                    nodes.push(mark(
+                        PhaseKind::Generation,
+                        RoleSet::of(&[Role::Actor]),
+                        PhaseBody::Generation {
+                            greedy_baseline: algo == Algo::Remax,
+                        },
+                    ));
+                    nodes.push(mark(
+                        PhaseKind::InferActor,
+                        RoleSet::of(&[Role::Actor]),
+                        PhaseBody::Infer {
+                            role: Role::Actor,
+                            pairs: false,
+                        },
+                    ));
+                } else {
+                    nodes.push(silent(
+                        RoleSet::EMPTY,
+                        PhaseBody::RemoteSequences {
+                            greedy_baseline: algo == Algo::Remax,
+                        },
+                    ));
+                }
+                for role in [Role::Reference, Role::Reward, Role::Critic] {
+                    if hosts(role) {
+                        // A second sequence set doubles a scorer's pass:
+                        // DPO's rejected half everywhere, and ReMax's
+                        // greedy-baseline rollout at the reward model
+                        // (whose scores *are* the baseline).
+                        let pairs = match role {
+                            Role::Reward => algo == Algo::Remax,
+                            _ => algo.pairs(),
+                        };
+                        nodes.push(mark(
+                            Self::infer_kind(role),
+                            RoleSet::of(&[role]),
+                            PhaseBody::Infer { role, pairs },
+                        ));
+                    }
+                }
+                if let Some(kind) = algo.advantage() {
+                    if hosts(Role::Actor) || hosts(Role::Critic) {
+                        nodes.push(silent(
+                            RoleSet::of(&[Role::Actor, Role::Critic]),
+                            PhaseBody::Advantages { kind },
+                        ));
+                    }
+                }
+                if hosts(Role::Actor) {
+                    nodes.push(mark(
+                        PhaseKind::TrainActor,
+                        RoleSet::of(&[Role::Actor]),
+                        PhaseBody::Train {
+                            role: Role::Actor,
+                            loss: algo.policy_loss(),
+                            pairs: algo.pairs(),
+                        },
+                    ));
+                }
+                if hosts(Role::Critic) {
+                    nodes.push(mark(
+                        PhaseKind::TrainCritic,
+                        RoleSet::of(&[Role::Critic]),
+                        PhaseBody::Train {
+                            role: Role::Critic,
+                            loss: LossKind::ValueLoss,
+                            pairs: false,
+                        },
+                    ));
+                }
+            }
+            ScenarioMode::TrainBothPrecollected | ScenarioMode::TrainActorOnly => {
+                nodes.push(silent(
+                    RoleSet::EMPTY,
+                    PhaseBody::LoadExperience {
+                        tensors: precollected_tensors(algo),
+                    },
+                ));
+                if hosts(Role::Actor) {
+                    nodes.push(mark(
+                        PhaseKind::TrainActor,
+                        RoleSet::of(&[Role::Actor]),
+                        PhaseBody::Train {
+                            role: Role::Actor,
+                            loss: algo.policy_loss(),
+                            pairs: algo.pairs(),
+                        },
+                    ));
+                }
+                if scn.mode == ScenarioMode::TrainBothPrecollected && hosts(Role::Critic) {
+                    nodes.push(mark(
+                        PhaseKind::TrainCritic,
+                        RoleSet::of(&[Role::Critic]),
+                        PhaseBody::Train {
+                            role: Role::Critic,
+                            loss: LossKind::ValueLoss,
+                            pairs: false,
+                        },
+                    ));
+                }
+            }
+        }
+        nodes.push(silent(RoleSet::EMPTY, PhaseBody::FreeExperience));
+        PhaseProgram {
+            algo,
+            active_roles: active,
+            nodes,
+        }
+    }
+
+    /// The scoring phase mark of a role.
+    pub fn infer_kind(role: Role) -> PhaseKind {
+        match role {
+            Role::Actor => PhaseKind::InferActor,
+            Role::Reference => PhaseKind::InferReference,
+            Role::Reward => PhaseKind::InferReward,
+            Role::Critic => PhaseKind::InferCritic,
+        }
+    }
+
+    /// Phase marks one step emits, in order — the expected sequence the
+    /// trace-invariant checker verifies against the actual op stream.
+    pub fn step_phases(&self) -> Vec<PhaseKind> {
+        self.nodes.iter().filter_map(|n| n.kind).collect()
+    }
+
+    /// Roles with a non-actor scoring node — the models whose outputs
+    /// travel over the wire when a placement plan hosts them away from
+    /// the actor (the coordinator's step-time model reads this instead of
+    /// hardcoding the PPO scorer list).
+    pub fn scorer_roles(&self) -> Vec<Role> {
+        self.scorer_infers().into_iter().map(|(r, _)| r).collect()
+    }
+
+    /// Non-actor scoring nodes with their `pairs` flag — the wire model
+    /// ships a second sequence set (and a second output set) for paired
+    /// scorers.
+    pub fn scorer_infers(&self) -> Vec<(Role, bool)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n.body {
+                PhaseBody::Infer { role, pairs } if role != Role::Actor => {
+                    Some((role, pairs))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Roles with a training node — the data-parallel gradient
+    /// synchronisation set.
+    pub fn train_roles(&self) -> Vec<Role> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n.body {
+                PhaseBody::Train { role, .. } => Some(role),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// The experience tensors a pre-collected (train-only) step loads, per
+/// algorithm: PPO's classic eight, the critic-free six (no values), and
+/// DPO's preference-pair set.
+fn precollected_tensors(algo: Algo) -> Vec<ExpTensor> {
+    use ExpTensor::*;
+    match algo {
+        Algo::Ppo => vec![
+            SeqTokens,   // sequences
+            Mask,        // attention mask
+            PerTokenF32, // old logprobs
+            PerTokenF32, // ref logprobs
+            PerSeqF32,   // rewards
+            PerTokenF32, // values
+            PerTokenF32, // advantages
+            PerTokenF32, // returns
+        ],
+        Algo::Grpo | Algo::Remax => vec![
+            SeqTokens,   // sequences
+            Mask,        // attention mask
+            PerTokenF32, // old logprobs
+            PerTokenF32, // ref logprobs
+            PerSeqF32,   // rewards
+            PerTokenF32, // advantages
+        ],
+        Algo::Dpo => vec![
+            SeqTokens,   // chosen sequences
+            Mask,        // chosen mask
+            SeqTokens,   // rejected sequences
+            Mask,        // rejected mask
+            PerTokenF32, // ref logprobs (chosen)
+            PerTokenF32, // ref logprobs (rejected)
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+
+    fn scn(algo: Algo, mode: ScenarioMode) -> SimScenario {
+        let mut s = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        s.algo = algo;
+        s.mode = mode;
+        s
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in Algo::ALL {
+            assert_eq!(Algo::by_name(a.name()), Some(a));
+        }
+        assert_eq!(Algo::by_name("sarsa"), None);
+        assert_eq!(Algo::known_names(), "ppo, grpo, remax, dpo");
+        assert_eq!(
+            Algo::parse_list("ppo, grpo,dpo").unwrap(),
+            vec![Algo::Ppo, Algo::Grpo, Algo::Dpo]
+        );
+        let err = Algo::parse_list("ppo,sarsa").unwrap_err();
+        assert!(err.contains("unknown algo 'sarsa'"), "{err}");
+    }
+
+    #[test]
+    fn ppo_full_program_matches_paper_pipeline() {
+        let p = PhaseProgram::compile(&scn(Algo::Ppo, ScenarioMode::Full));
+        assert_eq!(
+            p.step_phases(),
+            vec![
+                PhaseKind::Generation,
+                PhaseKind::InferActor,
+                PhaseKind::InferReference,
+                PhaseKind::InferReward,
+                PhaseKind::InferCritic,
+                PhaseKind::TrainActor,
+                PhaseKind::TrainCritic,
+            ]
+        );
+        assert_eq!(p.active_roles, RoleSet::ALL);
+        assert_eq!(p.scorer_roles(), vec![Role::Reference, Role::Reward, Role::Critic]);
+        assert_eq!(p.train_roles(), vec![Role::Actor, Role::Critic]);
+        // GAE advantages and the experience free run unmarked.
+        assert!(p.nodes.iter().any(|n| n.kind.is_none()
+            && n.body == PhaseBody::Advantages { kind: AdvantageKind::Gae }));
+        assert_eq!(p.nodes.last().unwrap().body, PhaseBody::FreeExperience);
+    }
+
+    #[test]
+    fn grpo_and_remax_drop_the_critic() {
+        for algo in [Algo::Grpo, Algo::Remax] {
+            let p = PhaseProgram::compile(&scn(algo, ScenarioMode::Full));
+            assert!(!p.active_roles.contains(Role::Critic), "{:?}", algo);
+            assert!(!p.step_phases().contains(&PhaseKind::InferCritic));
+            assert!(!p.step_phases().contains(&PhaseKind::TrainCritic));
+            assert_eq!(p.scorer_roles(), vec![Role::Reference, Role::Reward]);
+            assert_eq!(p.train_roles(), vec![Role::Actor]);
+        }
+        // Only ReMax schedules the extra greedy rollout — and its reward
+        // pass scores both rollouts (the baseline).
+        let remax = PhaseProgram::compile(&scn(Algo::Remax, ScenarioMode::Full));
+        assert!(remax.nodes.iter().any(|n| n.body
+            == PhaseBody::Generation {
+                greedy_baseline: true
+            }));
+        assert!(remax.nodes.iter().any(|n| n.body
+            == PhaseBody::Infer {
+                role: Role::Reward,
+                pairs: true
+            }));
+        let grpo = PhaseProgram::compile(&scn(Algo::Grpo, ScenarioMode::Full));
+        assert!(grpo.nodes.iter().any(|n| n.body
+            == PhaseBody::Generation {
+                greedy_baseline: false
+            }));
+        assert!(grpo.nodes.iter().any(|n| n.body
+            == PhaseBody::Infer {
+                role: Role::Reward,
+                pairs: false
+            }));
+        assert!(grpo.nodes.iter().any(|n| n.body
+            == PhaseBody::Advantages {
+                kind: AdvantageKind::GroupRelative
+            }));
+    }
+
+    #[test]
+    fn dpo_collapses_to_reference_scoring_and_one_update() {
+        let p = PhaseProgram::compile(&scn(Algo::Dpo, ScenarioMode::Full));
+        assert_eq!(
+            p.step_phases(),
+            vec![PhaseKind::InferReference, PhaseKind::TrainActor]
+        );
+        assert_eq!(p.active_roles, RoleSet::of(&[Role::Actor, Role::Reference]));
+        // Pairs load instead of generation; the update is the preference
+        // loss over the doubled batch.
+        assert!(matches!(
+            &p.nodes[0].body,
+            PhaseBody::LoadExperience { tensors } if tensors.len() == 4
+        ));
+        assert!(p.nodes.iter().any(|n| n.body
+            == PhaseBody::Train {
+                role: Role::Actor,
+                loss: LossKind::Preference,
+                pairs: true
+            }));
+        assert!(!p.nodes.iter().any(|n| matches!(n.body, PhaseBody::Advantages { .. })));
+    }
+
+    #[test]
+    fn precollected_modes_shrink_with_the_algo() {
+        let p = PhaseProgram::compile(&scn(Algo::Ppo, ScenarioMode::TrainBothPrecollected));
+        assert_eq!(
+            p.step_phases(),
+            vec![PhaseKind::TrainActor, PhaseKind::TrainCritic]
+        );
+        assert!(matches!(
+            &p.nodes[0].body,
+            PhaseBody::LoadExperience { tensors } if tensors.len() == 8
+        ));
+        // Critic-free algos load no values and schedule no critic update,
+        // even in "train both" mode.
+        let g = PhaseProgram::compile(&scn(Algo::Grpo, ScenarioMode::TrainBothPrecollected));
+        assert_eq!(g.step_phases(), vec![PhaseKind::TrainActor]);
+        assert!(matches!(
+            &g.nodes[0].body,
+            PhaseBody::LoadExperience { tensors } if tensors.len() == 6
+        ));
+        let a = PhaseProgram::compile(&scn(Algo::Ppo, ScenarioMode::TrainActorOnly));
+        assert_eq!(a.step_phases(), vec![PhaseKind::TrainActor]);
+    }
+
+    #[test]
+    fn scorer_only_placement_receives_remote_sequences() {
+        let mut s = scn(Algo::Ppo, ScenarioMode::Full);
+        s.roles = RoleSet::of(&[Role::Reference, Role::Reward]);
+        let p = PhaseProgram::compile(&s);
+        assert_eq!(
+            p.nodes[0].body,
+            PhaseBody::RemoteSequences {
+                greedy_baseline: false
+            }
+        );
+        assert_eq!(
+            p.step_phases(),
+            vec![PhaseKind::InferReference, PhaseKind::InferReward]
+        );
+        assert!(p.train_roles().is_empty());
+        // A DPO scorer GPU only ever hosts the reference.
+        s.algo = Algo::Dpo;
+        let p = PhaseProgram::compile(&s);
+        assert_eq!(p.active_roles, RoleSet::of(&[Role::Reference]));
+        assert_eq!(p.step_phases(), vec![PhaseKind::InferReference]);
+    }
+
+    #[test]
+    fn exp_tensor_sizes() {
+        assert_eq!(ExpTensor::SeqTokens.bytes(2, 512), 2 * 512 * 8);
+        assert_eq!(ExpTensor::Mask.bytes(2, 512), 2 * 512 * 8);
+        assert_eq!(ExpTensor::PerTokenF32.bytes(2, 512), 2 * 512 * 4);
+        assert_eq!(ExpTensor::PerSeqF32.bytes(2, 512), 2 * 4);
+    }
+
+    #[test]
+    fn kind_maps() {
+        assert_eq!(PhaseProgram::infer_kind(Role::Critic), PhaseKind::InferCritic);
+        assert_eq!(PhaseProgram::infer_kind(Role::Actor), PhaseKind::InferActor);
+    }
+}

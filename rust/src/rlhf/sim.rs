@@ -1,21 +1,28 @@
 //! The RLHF stage-3 allocation-trace generator — the heart of the memory
 //! study.
 //!
-//! For a given framework profile, model set, strategy configuration and
-//! `empty_cache` policy, [`build_trace`] emits the op stream one simulated
-//! GPU (rank 0 of `world`) observes across PPO steps:
+//! For a given framework profile, model set, strategy configuration,
+//! algorithm and `empty_cache` policy, [`build_trace`] emits the op stream
+//! one simulated GPU (rank `rank` of `world`) observes across PPO steps.
+//! The pipeline itself is *data*: the scenario compiles to a
+//! [`PhaseProgram`] (see [`crate::rlhf::program`]) and the emitter here is
+//! a thin interpreter over its nodes. PPO's classic step:
 //!
 //! ```text
 //! Init ── [ Generation → InferActor → InferReference → InferReward →
 //!           InferCritic → TrainActor → TrainCritic → (step end) ]*
 //! ```
 //!
+//! Critic-free algorithms (GRPO, ReMax) and DPO compile to shorter
+//! programs — fewer models at Init, fewer phases per step.
+//!
 //! Nothing here hardcodes memory *outcomes*; strategies only change which
-//! allocations are emitted (partitioned storage, gather/staging transients,
-//! checkpointed saves...). Fragmentation and reserved/allocated curves
-//! emerge when the trace replays through the allocator.
+//! allocations are emitted (partitioned storage, gather/staging
+//! transients, checkpointed saves...). Fragmentation and
+//! reserved/allocated curves emerge when the trace replays through the
+//! allocator.
 
-use crate::frameworks::{FrameworkProfile, GenerationImpl};
+use crate::frameworks::{FrameworkKind, FrameworkProfile, GenerationImpl};
 use crate::mem::{
     adam_state_tensors, lora::lora_tensors, ActivationModel, AdamConfig, DType, KvCacheModel,
     ParamInventory, SeqShape, TensorSpec,
@@ -23,6 +30,9 @@ use crate::mem::{
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::cost::{CostModel, GpuSpec};
 use crate::rlhf::models::{RlhfModelSet, Role, RoleSet};
+use crate::rlhf::program::{
+    AdvantageKind, Algo, ExpTensor, LossKind, PhaseBody, PhaseNode, PhaseProgram,
+};
 use crate::strategies::{zero, StrategyConfig};
 use crate::trace::{PhaseKind, Tag, Trace, TraceBuilder, TraceHandle};
 use crate::util::prng::Rng;
@@ -57,6 +67,15 @@ impl ScenarioMode {
     pub fn by_name(s: &str) -> Option<Self> {
         Self::ALL.into_iter().find(|m| m.name() == s)
     }
+
+    /// Comma-separated valid names (for CLI/config error messages).
+    pub fn known_names() -> String {
+        Self::ALL
+            .iter()
+            .map(|m| m.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
 }
 
 /// One simulated experiment (a row of Table 1 / Table 2).
@@ -69,6 +88,9 @@ pub struct SimScenario {
     pub policy: EmptyCachePolicy,
     pub steps: u64,
     pub mode: ScenarioMode,
+    /// Which RLHF algorithm the pipeline runs — decides the model cast
+    /// and the compiled [`PhaseProgram`] (PPO is the paper's default).
+    pub algo: Algo,
     pub gpu: GpuSpec,
     /// Seed for response-length sampling.
     pub seed: u64,
@@ -80,7 +102,8 @@ pub struct SimScenario {
     /// Which of the four models this GPU hosts. [`RoleSet::ALL`] is the
     /// classic symmetric data-parallel replica; cluster placement plans
     /// ([`crate::coordinator::PlacementPlan`]) assign per-GPU subsets, so
-    /// ranks genuinely emit different traces.
+    /// ranks genuinely emit different traces. The models actually
+    /// instantiated are `roles ∩ algo.roles()`.
     pub roles: RoleSet,
     /// Hosted frozen models swapped out to host memory between the
     /// experience and training phases (Hydra-style phase time-sharing).
@@ -92,56 +115,81 @@ pub struct SimScenario {
     pub rank: u64,
 }
 
-impl SimScenario {
-    /// DeepSpeed-Chat/OPT, the Figure-1 configuration.
-    pub fn deepspeed_opt(strategy: StrategyConfig, policy: EmptyCachePolicy) -> Self {
+/// A named scenario preset: the framework/model/jitter triple behind the
+/// paper's three configurations. One table, consumed by the
+/// [`SimScenario`] constructors, the sweep presets and `rlhf-mem profile`
+/// configs — a row added here exists everywhere at once.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioPreset {
+    /// Stable lookup name (`deepspeed-opt`, `colossal-opt`,
+    /// `colossal-gpt2`).
+    pub name: &'static str,
+    pub framework: FrameworkKind,
+    pub models: fn() -> RlhfModelSet,
+}
+
+/// The paper's three framework/model configurations.
+pub const SCENARIO_PRESETS: [ScenarioPreset; 3] = [
+    ScenarioPreset {
+        name: "deepspeed-opt",
+        framework: FrameworkKind::DeepSpeedChat,
+        models: RlhfModelSet::opt,
+    },
+    ScenarioPreset {
+        name: "colossal-opt",
+        framework: FrameworkKind::ColossalChat,
+        models: RlhfModelSet::opt,
+    },
+    ScenarioPreset {
+        name: "colossal-gpt2",
+        framework: FrameworkKind::ColossalChat,
+        models: RlhfModelSet::gpt2,
+    },
+];
+
+impl ScenarioPreset {
+    pub fn by_name(name: &str) -> Option<&'static ScenarioPreset> {
+        SCENARIO_PRESETS.iter().find(|p| p.name == name)
+    }
+
+    /// Materialize the preset with the paper testbed's shared defaults:
+    /// world 4, 3 PPO steps, RTX-3090 time model, seed `0x5EED`, the full
+    /// PPO pipeline on a full replica, and the framework's length-jitter
+    /// default.
+    pub fn build(&self, strategy: StrategyConfig, policy: EmptyCachePolicy) -> SimScenario {
         SimScenario {
-            framework: FrameworkProfile::deepspeed_chat(),
-            models: RlhfModelSet::opt(),
+            framework: FrameworkProfile::by_kind(self.framework),
+            models: (self.models)(),
             strategy,
             world: 4,
             policy,
             steps: 3,
             mode: ScenarioMode::Full,
+            algo: Algo::Ppo,
             gpu: GpuSpec::rtx3090(),
             seed: 0x5EED,
-            // DeepSpeed-Chat pads prompts and answers to the configured
-            // maxima, so tensor sizes repeat exactly across steps.
-            len_jitter: false,
+            len_jitter: self.framework.default_len_jitter(),
             roles: RoleSet::ALL,
             time_shared: RoleSet::EMPTY,
             rank: 0,
         }
+    }
+}
+
+impl SimScenario {
+    /// DeepSpeed-Chat/OPT, the Figure-1 configuration.
+    pub fn deepspeed_opt(strategy: StrategyConfig, policy: EmptyCachePolicy) -> Self {
+        SCENARIO_PRESETS[0].build(strategy, policy)
     }
 
     /// ColossalChat/OPT.
     pub fn colossal_opt(strategy: StrategyConfig, policy: EmptyCachePolicy) -> Self {
-        SimScenario {
-            framework: FrameworkProfile::colossal_chat(),
-            models: RlhfModelSet::opt(),
-            strategy,
-            world: 4,
-            policy,
-            steps: 3,
-            mode: ScenarioMode::Full,
-            gpu: GpuSpec::rtx3090(),
-            seed: 0x5EED,
-            len_jitter: true,
-            roles: RoleSet::ALL,
-            time_shared: RoleSet::EMPTY,
-            rank: 0,
-        }
+        SCENARIO_PRESETS[1].build(strategy, policy)
     }
 
     /// ColossalChat/GPT-2.
     pub fn colossal_gpt2(strategy: StrategyConfig, policy: EmptyCachePolicy) -> Self {
-        SimScenario {
-            framework: FrameworkProfile::colossal_chat(),
-            models: RlhfModelSet::gpt2(),
-            strategy,
-            policy,
-            ..Self::colossal_opt(strategy, policy)
-        }
+        SCENARIO_PRESETS[2].build(strategy, policy)
     }
 }
 
@@ -332,9 +380,12 @@ impl GatherStream {
     }
 }
 
-/// The emitter.
+/// The interpreter: walks a [`PhaseProgram`]'s nodes and emits each
+/// body's allocation pattern.
 struct Emitter<'a> {
     scn: &'a SimScenario,
+    /// Hosted roles ∩ algorithm cast — the models that exist on this GPU.
+    active: RoleSet,
     b: TraceBuilder,
     actor: SimModel,
     reference: SimModel,
@@ -347,8 +398,19 @@ struct Emitter<'a> {
 }
 
 /// Build the allocation trace one GPU of `scn` observes — rank `scn.rank`
-/// of the `scn.world`-wide data-parallel group, hosting `scn.roles`.
+/// of the `scn.world`-wide data-parallel group, hosting `scn.roles` —
+/// by compiling the scenario's [`PhaseProgram`] and interpreting it.
 pub fn build_trace(scn: &SimScenario) -> Trace {
+    let program = PhaseProgram::compile(scn);
+    build_trace_with_program(scn, &program)
+}
+
+/// [`build_trace`] over an explicit program — the hook the golden tests
+/// use to pin compiled programs against hand-written pipelines, and the
+/// escape hatch for experimenting with custom phase orders. The program
+/// must have been compiled for (or be consistent with) `scn`'s roles and
+/// algorithm; [`build_trace`] is the safe entry point.
+pub fn build_trace_with_program(scn: &SimScenario, program: &PhaseProgram) -> Trace {
     assert!(
         scn.framework.supports(&scn.strategy),
         "{} does not support {:?}",
@@ -368,6 +430,7 @@ pub fn build_trace(scn: &SimScenario) -> Trace {
     );
     let mut e = Emitter {
         scn,
+        active: program.active_roles,
         b: TraceBuilder::new(),
         actor: SimModel::build(Role::Actor, scn),
         reference: SimModel::build(Role::Reference, scn),
@@ -377,72 +440,51 @@ pub fn build_trace(scn: &SimScenario) -> Trace {
         rng: Rng::seeded(scn.seed),
         cur_gen_len: scn.framework.gen_len,
     };
-    e.run();
+    e.run(program);
     e.b.finish()
 }
 
 impl<'a> Emitter<'a> {
-    fn run(&mut self) {
+    fn run(&mut self, program: &PhaseProgram) {
         self.init();
         for step in 1..=self.scn.steps {
             // Variable-length responses: the batch's max generated length
             // this step (EOS stopping), which every downstream tensor
-            // inherits.
-            self.cur_gen_len = if self.scn.len_jitter {
+            // inherits. Offline algorithms (DPO) have no rollout whose
+            // length could vary — their preference pairs are fixed-size,
+            // so every phase sees the configured maximum.
+            self.cur_gen_len = if self.scn.len_jitter && self.scn.algo.generates() {
                 let g = self.scn.framework.gen_len;
                 let lo = (g / 2).max(1);
                 lo + self.rng.gen_range(g - lo + 1)
             } else {
                 self.scn.framework.gen_len
             };
-            match self.scn.mode {
-                ScenarioMode::Full => {
-                    // Only the phases whose model this GPU hosts run here;
-                    // a scorer-only GPU instead receives the sequences the
-                    // actor's GPU generated over the wire.
-                    if self.hosts(Role::Actor) {
-                        self.generation();
-                        self.infer_phase(PhaseKind::InferActor);
-                    } else {
-                        self.remote_sequences();
-                    }
-                    if self.hosts(Role::Reference) {
-                        self.infer_phase(PhaseKind::InferReference);
-                    }
-                    if self.hosts(Role::Reward) {
-                        self.infer_phase(PhaseKind::InferReward);
-                    }
-                    if self.hosts(Role::Critic) {
-                        self.infer_phase(PhaseKind::InferCritic);
-                    }
-                    if self.hosts(Role::Actor) || self.hosts(Role::Critic) {
-                        self.advantages();
-                    }
-                    if self.hosts(Role::Actor) {
-                        self.train_phase(PhaseKind::TrainActor);
-                    }
-                    if self.hosts(Role::Critic) {
-                        self.train_phase(PhaseKind::TrainCritic);
-                    }
-                }
-                ScenarioMode::TrainBothPrecollected => {
-                    self.precollected_experience();
-                    if self.hosts(Role::Actor) {
-                        self.train_phase(PhaseKind::TrainActor);
-                    }
-                    if self.hosts(Role::Critic) {
-                        self.train_phase(PhaseKind::TrainCritic);
-                    }
-                }
-                ScenarioMode::TrainActorOnly => {
-                    self.precollected_experience();
-                    if self.hosts(Role::Actor) {
-                        self.train_phase(PhaseKind::TrainActor);
-                    }
-                }
+            for node in &program.nodes {
+                self.exec(node);
             }
-            self.free_experience();
             self.b.step_end(step);
+        }
+    }
+
+    /// Interpret one program node: phase mark, body, `empty_cache` hook.
+    fn exec(&mut self, node: &PhaseNode) {
+        if let Some(kind) = node.kind {
+            self.b.phase(kind);
+        }
+        match &node.body {
+            PhaseBody::Generation { greedy_baseline } => self.generation(*greedy_baseline),
+            PhaseBody::RemoteSequences { greedy_baseline } => {
+                self.remote_sequences(*greedy_baseline)
+            }
+            PhaseBody::LoadExperience { tensors } => self.load_experience(tensors),
+            PhaseBody::Infer { role, pairs } => self.infer_body(*role, *pairs),
+            PhaseBody::Advantages { kind } => self.advantages(*kind),
+            PhaseBody::Train { role, loss, pairs } => self.train_body(*role, *loss, *pairs),
+            PhaseBody::FreeExperience => self.free_experience(),
+        }
+        if let Some(kind) = node.kind {
+            self.end_phase(kind);
         }
     }
 
@@ -450,10 +492,6 @@ impl<'a> Emitter<'a> {
         if self.scn.policy.applies_after(phase) {
             self.b.empty_cache();
         }
-    }
-
-    fn hosts(&self, role: Role) -> bool {
-        self.scn.roles.contains(role)
     }
 
     // ---------------- Init ----------------
@@ -467,8 +505,9 @@ impl<'a> Emitter<'a> {
         let rank = self.scn.rank;
 
         for role in Role::ALL {
-            // Placement: only the models this GPU hosts get engine state.
-            if !self.scn.roles.contains(role) {
+            // Placement × algorithm: only the models of this GPU's active
+            // cast get engine state.
+            if !self.active.contains(role) {
                 continue;
             }
             let m = self.model_mut(role);
@@ -559,7 +598,7 @@ impl<'a> Emitter<'a> {
         // gathers at generation time instead).
         if self.scn.framework.hybrid_engine
             && !z.partitions_params()
-            && self.scn.roles.contains(Role::Actor)
+            && self.active.contains(Role::Actor)
         {
             let layers = self.actor.inv.arch.n_layers;
             let mut sizes: Vec<u64> = Vec::new();
@@ -573,8 +612,7 @@ impl<'a> Emitter<'a> {
 
     // ---------------- Experience generation ----------------
 
-    fn generation(&mut self) {
-        self.b.phase(PhaseKind::Generation);
+    fn generation(&mut self, greedy_baseline: bool) {
         let fw = &self.scn.framework;
         let world = self.scn.world;
         let z3 = self.scn.strategy.zero.partitions_params();
@@ -607,6 +645,14 @@ impl<'a> Emitter<'a> {
         for _chunk in 0..chunks {
             self.generate_chunk(mb, gen_len);
         }
+        // ReMax's advantage baseline: a second, *greedy* rollout of the
+        // same shape — the prefill/decode KV and logits churn happens
+        // twice per step.
+        if greedy_baseline {
+            for _chunk in 0..chunks {
+                self.generate_chunk(mb, gen_len);
+            }
+        }
 
         if z3 {
             self.b.free_all(gathered);
@@ -619,8 +665,11 @@ impl<'a> Emitter<'a> {
         let mask = self.b.alloc(seq_bytes, Tag::Experience);
         self.exp.handles.push(seqs);
         self.exp.handles.push(mask);
-
-        self.end_phase(PhaseKind::Generation);
+        if greedy_baseline {
+            // Greedy baseline sequences + mask persist for reward scoring.
+            let hs = self.b.alloc_group([seq_bytes, seq_bytes], Tag::Experience);
+            self.exp.handles.extend(hs);
+        }
     }
 
     /// One generation micro-batch: prefill + autoregressive decode with a
@@ -710,15 +759,7 @@ impl<'a> Emitter<'a> {
 
     // ---------------- Scoring inferences ----------------
 
-    fn infer_phase(&mut self, phase: PhaseKind) {
-        self.b.phase(phase);
-        let role = match phase {
-            PhaseKind::InferActor => Role::Actor,
-            PhaseKind::InferReference => Role::Reference,
-            PhaseKind::InferReward => Role::Reward,
-            PhaseKind::InferCritic => Role::Critic,
-            _ => unreachable!("not an inference phase"),
-        };
+    fn infer_body(&mut self, role: Role, pairs: bool) {
         // ColossalChat re-uploads host-offloaded inference models when the
         // experience phase needs them.
         if !self.model(role).resident {
@@ -731,7 +772,8 @@ impl<'a> Emitter<'a> {
             batch: mb,
             seq: fw.prompt_len + self.cur_gen_len,
         };
-        let chunks = fw.infer_chunks();
+        // DPO scores chosen + rejected: twice the forward passes.
+        let chunks = fw.infer_chunks() * if pairs { 2 } else { 1 };
         let per_gpu_rollout = fw.rollout_batch;
 
         for _c in 0..chunks {
@@ -750,26 +792,48 @@ impl<'a> Emitter<'a> {
             self.b.compute(us);
         }
 
-        // Persisted experience from this phase.
+        // Persisted experience from this phase (paired scorers keep both
+        // sets' outputs: DPO's chosen+rejected logprobs, ReMax's primary
+        // + greedy-baseline rewards).
         let s = fw.prompt_len + self.cur_gen_len;
-        let keep = match role {
-            Role::Actor => vec![per_gpu_rollout * s * 4],      // old logprobs
-            Role::Reference => vec![per_gpu_rollout * s * 4],  // ref logprobs
-            Role::Reward => vec![per_gpu_rollout * 4],         // sequence rewards
-            Role::Critic => vec![per_gpu_rollout * s * 4],     // values
+        let keep: Vec<u64> = match role {
+            Role::Actor => vec![per_gpu_rollout * s * 4], // old logprobs
+            Role::Reference => {
+                let lp = per_gpu_rollout * s * 4; // ref logprobs
+                if pairs {
+                    vec![lp, lp]
+                } else {
+                    vec![lp]
+                }
+            }
+            Role::Reward => {
+                let r = per_gpu_rollout * 4; // sequence rewards
+                if pairs {
+                    vec![r, r]
+                } else {
+                    vec![r]
+                }
+            }
+            Role::Critic => vec![per_gpu_rollout * s * 4], // values
         };
         let hs = self.b.alloc_group(keep, Tag::Experience);
         self.exp.handles.extend(hs);
-
-        self.end_phase(phase);
     }
 
-    /// Advantage/return computation (GAE) on experience tensors.
-    fn advantages(&mut self) {
+    /// Advantage/return computation on experience tensors.
+    fn advantages(&mut self, kind: AdvantageKind) {
         let fw = &self.scn.framework;
         let s = fw.prompt_len + self.cur_gen_len;
         let b = fw.rollout_batch;
-        let sizes = vec![b * s * 4, b * s * 4]; // advantages, returns
+        let sizes = match kind {
+            // GAE over critic values: advantages + returns.
+            AdvantageKind::Gae => vec![b * s * 4, b * s * 4],
+            // Per-sequence group baselines + per-token advantages.
+            AdvantageKind::GroupRelative => vec![b * 4, b * s * 4],
+            // Per-token advantages only: the greedy rollout's rewards
+            // were already persisted by the doubled reward pass.
+            AdvantageKind::GreedyBaseline => vec![b * s * 4],
+        };
         let hs = self.b.alloc_group(sizes, Tag::Experience);
         self.exp.handles.extend(hs);
     }
@@ -777,29 +841,27 @@ impl<'a> Emitter<'a> {
     /// Sequences + attention masks received from the actor's GPU — what a
     /// scorer-only GPU of a placement plan holds instead of generating.
     /// Lengths follow the same jitter stream as the actor's rank, so every
-    /// GPU of a plan agrees on this step's shapes.
-    fn remote_sequences(&mut self) {
+    /// GPU of a plan agrees on this step's shapes. Under ReMax the greedy
+    /// rollout's sequences arrive too (the reward pass scores them).
+    fn remote_sequences(&mut self, greedy_baseline: bool) {
         let fw = &self.scn.framework;
         let seq_bytes = fw.rollout_batch * (fw.prompt_len + self.cur_gen_len) * DType::I64.bytes();
         let hs = self.b.alloc_group([seq_bytes, seq_bytes], Tag::Experience);
         self.exp.handles.extend(hs);
+        if greedy_baseline {
+            let hs = self.b.alloc_group([seq_bytes, seq_bytes], Tag::Experience);
+            self.exp.handles.extend(hs);
+        }
     }
 
-    /// E6 pre-collected experience (loaded instead of generated).
-    fn precollected_experience(&mut self) {
+    /// Experience loaded instead of generated: E6's pre-collected batches
+    /// and DPO's offline preference pairs, sized by the program node's
+    /// tensor list.
+    fn load_experience(&mut self, tensors: &[ExpTensor]) {
         let fw = &self.scn.framework;
         let s = fw.total_seq();
         let b = fw.rollout_batch;
-        let sizes = vec![
-            b * s * DType::I64.bytes(), // sequences
-            b * s * DType::I64.bytes(), // mask
-            b * s * 4,                  // old logprobs
-            b * s * 4,                  // ref logprobs
-            b * 4,                      // rewards
-            b * s * 4,                  // values
-            b * s * 4,                  // advantages
-            b * s * 4,                  // returns
-        ];
+        let sizes: Vec<u64> = tensors.iter().map(|t| t.bytes(b, s)).collect();
         let hs = self.b.alloc_group(sizes, Tag::Experience);
         self.exp.handles.extend(hs);
     }
@@ -811,16 +873,9 @@ impl<'a> Emitter<'a> {
 
     // ---------------- Training ----------------
 
-    fn train_phase(&mut self, phase: PhaseKind) {
-        self.b.phase(phase);
-        let role = match phase {
-            PhaseKind::TrainActor => Role::Actor,
-            PhaseKind::TrainCritic => Role::Critic,
-            _ => unreachable!("not a training phase"),
-        };
-
+    fn train_body(&mut self, role: Role, loss: LossKind, pairs: bool) {
         // ColossalChat: move the frozen scorers off-GPU while training.
-        if phase == PhaseKind::TrainActor
+        if role == Role::Actor
             && self.scn.framework.offload_inference_models_during_training
             && self.scn.mode == ScenarioMode::Full
         {
@@ -833,15 +888,17 @@ impl<'a> Emitter<'a> {
         // training phase comes first on this GPU; offload_model is
         // idempotent, so the second phase is a no-op.
         if self.scn.mode == ScenarioMode::Full && !self.scn.time_shared.is_empty() {
-            for role in [Role::Reference, Role::Reward] {
-                if self.scn.time_shared.contains(role) {
-                    self.offload_model(role);
+            for r in [Role::Reference, Role::Reward] {
+                if self.scn.time_shared.contains(r) {
+                    self.offload_model(r);
                 }
             }
         }
 
         let fw = self.scn.framework.clone();
-        let mb = fw.train_micro_batch.min(fw.rollout_batch);
+        // DPO forwards chosen+rejected concatenated: double micro-batch.
+        let pair_factor = if pairs { 2 } else { 1 };
+        let mb = fw.train_micro_batch.min(fw.rollout_batch) * pair_factor;
         let sh = SeqShape {
             batch: mb,
             seq: fw.prompt_len + self.cur_gen_len,
@@ -861,7 +918,7 @@ impl<'a> Emitter<'a> {
 
         for _epoch in 0..fw.ppo_epochs {
             for _chunk in 0..fw.train_chunks() {
-                self.train_micro_step(role, sh, &mut vec![]);
+                self.train_micro_step(role, sh, loss);
             }
         }
 
@@ -870,13 +927,11 @@ impl<'a> Emitter<'a> {
         // zero_grad(set_to_none=True): drop dense grads after the step.
         let ghs = std::mem::take(&mut self.model_mut(role).grad_handles);
         self.b.free_all(ghs);
-
-        self.end_phase(phase);
     }
 
     /// One training micro-batch: forward (saving activations), loss,
     /// backward (consuming them), gradient production.
-    fn train_micro_step(&mut self, role: Role, sh: SeqShape, _unused: &mut Vec<TraceHandle>) {
+    fn train_micro_step(&mut self, role: Role, sh: SeqShape, loss: LossKind) {
         let z = self.scn.strategy.zero;
         let world = self.scn.world;
         let ckpt = self.scn.strategy.grad_checkpoint;
@@ -922,20 +977,26 @@ impl<'a> Emitter<'a> {
 
         // ---- Head + loss (before the gathered params are released) ----
         let mut head_saved: Vec<TraceHandle> = vec![];
-        match role {
-            Role::Actor => {
+        match loss {
+            LossKind::PpoClip => {
                 let lb = self.model(role).act.logits_bytes(sh);
                 head_saved.push(self.b.alloc(lb, Tag::SavedActivation));
                 // logprobs, ratio, clipped surrogate, KL penalty temps.
                 let t = sh.batch * sh.seq * 4;
                 self.b.transient([lb, t, t, t, t], Tag::Workspace);
             }
-            Role::Critic => {
+            LossKind::ValueLoss => {
                 let t = sh.batch * sh.seq * 4;
                 // values, clipped values, value-loss temps.
                 self.b.transient([t, t, t], Tag::Workspace);
             }
-            _ => unreachable!(),
+            LossKind::Preference => {
+                let lb = self.model(role).act.logits_bytes(sh);
+                head_saved.push(self.b.alloc(lb, Tag::SavedActivation));
+                // Pair logprobs, chosen−rejected margin, −logσ loss temps.
+                let t = sh.batch * sh.seq * 4;
+                self.b.transient([lb, t, t, t], Tag::Workspace);
+            }
         }
         ring.drain(&mut self.b);
         self.b.free_all(head_saved);
@@ -1385,5 +1446,102 @@ mod tests {
         scn.steps = 3;
         let three = build_trace(&scn).len();
         assert!(three > 2 * one && three < 4 * one, "one={one} three={three}");
+    }
+
+    #[test]
+    fn preset_table_backs_the_constructors() {
+        let a = ScenarioPreset::by_name("deepspeed-opt").unwrap().build(
+            StrategyConfig::none(),
+            EmptyCachePolicy::Never,
+        );
+        assert_eq!(a.framework.kind, FrameworkKind::DeepSpeedChat);
+        assert!(!a.len_jitter);
+        assert_eq!(a.algo, Algo::Ppo);
+        let b = ScenarioPreset::by_name("colossal-gpt2").unwrap().build(
+            StrategyConfig::none(),
+            EmptyCachePolicy::Never,
+        );
+        assert_eq!(b.models.policy_arch.name, "gpt2-xl");
+        assert!(b.len_jitter, "colossal presets jitter");
+        assert!(ScenarioPreset::by_name("nope").is_none());
+        // Constructor == table row, field for field.
+        let c = SimScenario::colossal_opt(StrategyConfig::zero3(), EmptyCachePolicy::AfterBoth);
+        assert_eq!(c.framework.kind, FrameworkKind::ColossalChat);
+        assert_eq!(c.models.policy_arch.name, "opt-1.3b");
+        assert!(c.len_jitter);
+    }
+
+    #[test]
+    fn critic_free_algos_drop_critic_state_and_phases() {
+        use crate::trace::TraceOp;
+        let phases = |t: &Trace| -> Vec<PhaseKind> {
+            t.ops
+                .iter()
+                .filter_map(|op| match op {
+                    TraceOp::Phase(p) => Some(*p),
+                    _ => None,
+                })
+                .collect()
+        };
+        for algo in [Algo::Grpo, Algo::Remax] {
+            let mut scn = small_scn(StrategyConfig::none());
+            scn.algo = algo;
+            let t = build_trace(&scn);
+            let ps = phases(&t);
+            assert!(!ps.contains(&PhaseKind::InferCritic), "{:?}", algo);
+            assert!(!ps.contains(&PhaseKind::TrainCritic), "{:?}", algo);
+            assert!(ps.contains(&PhaseKind::Generation));
+            assert!(ps.contains(&PhaseKind::InferReward));
+            // Three models at Init instead of four: fewer Param allocs.
+            let ppo = build_trace(&small_scn(StrategyConfig::none()));
+            let count = |t: &Trace| {
+                t.ops
+                    .iter()
+                    .filter(|op| matches!(op, TraceOp::Alloc { tag: Tag::Param, .. }))
+                    .count()
+            };
+            assert!(count(&t) < count(&ppo));
+        }
+    }
+
+    #[test]
+    fn remax_doubles_generation_churn() {
+        use crate::trace::TraceOp;
+        let kv_allocs = |t: &Trace| {
+            t.ops
+                .iter()
+                .filter(|op| matches!(op, TraceOp::Alloc { tag: Tag::KvCache, .. }))
+                .count()
+        };
+        let ppo = build_trace(&small_scn(StrategyConfig::none()));
+        let mut scn = small_scn(StrategyConfig::none());
+        scn.algo = Algo::Remax;
+        let remax = build_trace(&scn);
+        assert_eq!(kv_allocs(&remax), 2 * kv_allocs(&ppo));
+    }
+
+    #[test]
+    fn dpo_runs_reference_scoring_and_one_update_only() {
+        use crate::trace::TraceOp;
+        let mut scn = small_scn(StrategyConfig::none());
+        scn.algo = Algo::Dpo;
+        let t = build_trace(&scn);
+        let ps: Vec<PhaseKind> = t
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::Phase(p) => Some(*p),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            ps,
+            vec![PhaseKind::Init, PhaseKind::InferReference, PhaseKind::TrainActor]
+        );
+        // No rollout: no KV-cache churn at all.
+        assert!(!t
+            .ops
+            .iter()
+            .any(|op| matches!(op, TraceOp::Alloc { tag: Tag::KvCache, .. })));
     }
 }

@@ -1,6 +1,7 @@
 //! Grid construction: enumerate framework × model-set × strategy ×
-//! scenario-mode × `empty_cache`-policy × allocator-config combinations
-//! into a flat list of [`SweepCell`]s with deterministic per-cell seeds.
+//! scenario-mode × `empty_cache`-policy × algorithm × allocator-config
+//! combinations into a flat list of [`SweepCell`]s with deterministic
+//! per-cell seeds.
 
 use crate::alloc::AllocatorConfig;
 use crate::experiment::RTX3090_HBM;
@@ -8,6 +9,7 @@ use crate::frameworks::{FrameworkKind, FrameworkProfile};
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::cost::GpuSpec;
 use crate::rlhf::models::RlhfModelSet;
+use crate::rlhf::program::Algo;
 use crate::rlhf::sim::{ScenarioMode, SimScenario};
 use crate::strategies::StrategyConfig;
 use std::sync::Arc;
@@ -28,14 +30,18 @@ pub enum SeedPolicy {
 #[derive(Debug, Clone)]
 pub struct SweepCell {
     /// `framework/model/strategy/mode/policy` — the stable identity used
-    /// by filters, seeds and reports. Grids with a non-default allocator
-    /// axis append `/alloc_label` as a sixth component.
+    /// by filters, seeds and reports. Grids with a non-PPO algorithm axis
+    /// append `/algo`, and a non-default allocator axis `/alloc_label`,
+    /// as extra components (in that order).
     pub key: String,
     pub framework: String,
     pub model: String,
     pub strategy: String,
     pub mode: ScenarioMode,
     pub policy: EmptyCachePolicy,
+    /// RLHF algorithm of the cell (`ppo` unless the grid's algorithm
+    /// axis says otherwise).
+    pub algo: Algo,
     /// Display label of the allocator configuration ("default" unless the
     /// grid's allocator axis says otherwise).
     pub alloc_label: String,
@@ -63,6 +69,7 @@ pub struct SweepGrid {
     policies: Vec<EmptyCachePolicy>,
     allocators: Vec<(String, AllocatorConfig)>,
     modes: Vec<ScenarioMode>,
+    algos: Vec<Algo>,
     steps: u64,
     world: u64,
     capacity: u64,
@@ -90,6 +97,7 @@ impl SweepGrid {
             policies: vec![EmptyCachePolicy::Never],
             allocators: vec![("default".to_string(), AllocatorConfig::default())],
             modes: vec![ScenarioMode::Full],
+            algos: vec![Algo::Ppo],
             steps: 3,
             world: 4,
             capacity: RTX3090_HBM,
@@ -145,6 +153,14 @@ impl SweepGrid {
 
     pub fn modes(mut self, ms: impl IntoIterator<Item = ScenarioMode>) -> Self {
         self.modes = ms.into_iter().collect();
+        self
+    }
+
+    /// Algorithm axis (`ppo`/`grpo`/`remax`/`dpo`). Non-PPO algorithms
+    /// are appended to the cell key so single-algorithm grids keep the
+    /// legacy five-part keys the paper presets and tests rely on.
+    pub fn algos(mut self, al: impl IntoIterator<Item = Algo>) -> Self {
+        self.algos = al.into_iter().collect();
         self
     }
 
@@ -214,7 +230,7 @@ impl SweepGrid {
         scenario: SimScenario,
     ) -> Self {
         let (framework, model, strategy) = (framework.into(), model.into(), strategy.into());
-        let key = format!(
+        let mut key = format!(
             "{}/{}/{}/{}/{}",
             framework,
             model,
@@ -222,6 +238,10 @@ impl SweepGrid {
             scenario.mode.name(),
             scenario.policy.name()
         );
+        if scenario.algo != Algo::Ppo {
+            key.push('/');
+            key.push_str(scenario.algo.name());
+        }
         self.extra.push(SweepCell {
             key,
             framework,
@@ -229,6 +249,7 @@ impl SweepGrid {
             strategy,
             mode: scenario.mode,
             policy: scenario.policy,
+            algo: scenario.algo,
             alloc_label: "default".to_string(),
             alloc_cfg: AllocatorConfig::default(),
             capacity: self.capacity,
@@ -263,66 +284,74 @@ impl SweepGrid {
                     }
                     for mode in &self.modes {
                         for policy in &self.policies {
-                            for (alabel, acfg) in &self.allocators {
-                                let scenario_key = format!(
-                                    "{}/{}/{}/{}/{}",
-                                    kind.name(),
-                                    mlabel,
-                                    slabel,
-                                    mode.name(),
-                                    policy.name()
-                                );
-                                let mut key = scenario_key.clone();
-                                if alabel != "default" {
-                                    key.push('/');
-                                    key.push_str(alabel);
+                            for algo in &self.algos {
+                                for (alabel, acfg) in &self.allocators {
+                                    let scenario_key = format!(
+                                        "{}/{}/{}/{}/{}",
+                                        kind.name(),
+                                        mlabel,
+                                        slabel,
+                                        mode.name(),
+                                        policy.name()
+                                    );
+                                    let mut key = scenario_key.clone();
+                                    if *algo != Algo::Ppo {
+                                        key.push('/');
+                                        key.push_str(algo.name());
+                                    }
+                                    if alabel != "default" {
+                                        key.push('/');
+                                        key.push_str(alabel);
+                                    }
+                                    if !self.passes_filters(&key) {
+                                        continue;
+                                    }
+                                    let mut scenario = SimScenario {
+                                        framework: profile.clone(),
+                                        models: models.clone(),
+                                        strategy: *strategy,
+                                        world: self.world,
+                                        policy: *policy,
+                                        steps: self.steps,
+                                        mode: *mode,
+                                        algo: *algo,
+                                        gpu: self.gpu,
+                                        seed: match self.seed {
+                                            SeedPolicy::Fixed(s) => s,
+                                            // Seeded from the *scenario*
+                                            // key (without the algo or
+                                            // allocator suffixes): cells
+                                            // differing only in those axes
+                                            // must sample the identical
+                                            // length-jitter stream, else
+                                            // the measured axis delta is
+                                            // confounded by seed noise.
+                                            SeedPolicy::PerCell(base) => {
+                                                derive_seed(base, &scenario_key)
+                                            }
+                                        },
+                                        len_jitter: kind.default_len_jitter(),
+                                        roles: crate::rlhf::models::RoleSet::ALL,
+                                        time_shared: crate::rlhf::models::RoleSet::EMPTY,
+                                        rank: 0,
+                                    };
+                                    if let Some(f) = &self.customize {
+                                        f(&mut scenario);
+                                    }
+                                    cells.push(SweepCell {
+                                        key,
+                                        framework: kind.name().to_string(),
+                                        model: mlabel.clone(),
+                                        strategy: slabel.clone(),
+                                        mode: *mode,
+                                        policy: *policy,
+                                        algo: *algo,
+                                        alloc_label: alabel.clone(),
+                                        alloc_cfg: acfg.clone(),
+                                        scenario,
+                                        capacity: self.capacity,
+                                    });
                                 }
-                                if !self.passes_filters(&key) {
-                                    continue;
-                                }
-                                let mut scenario = SimScenario {
-                                    framework: profile.clone(),
-                                    models: models.clone(),
-                                    strategy: *strategy,
-                                    world: self.world,
-                                    policy: *policy,
-                                    steps: self.steps,
-                                    mode: *mode,
-                                    gpu: self.gpu,
-                                    seed: match self.seed {
-                                        SeedPolicy::Fixed(s) => s,
-                                        // Seeded from the *scenario* key
-                                        // (without the allocator suffix):
-                                        // the knob doesn't change trace
-                                        // generation, so cells differing
-                                        // only in allocator config must
-                                        // replay the identical workload —
-                                        // else the measured knob delta is
-                                        // confounded by seed noise.
-                                        SeedPolicy::PerCell(base) => {
-                                            derive_seed(base, &scenario_key)
-                                        }
-                                    },
-                                    len_jitter: *kind == FrameworkKind::ColossalChat,
-                                    roles: crate::rlhf::models::RoleSet::ALL,
-                                    time_shared: crate::rlhf::models::RoleSet::EMPTY,
-                                    rank: 0,
-                                };
-                                if let Some(f) = &self.customize {
-                                    f(&mut scenario);
-                                }
-                                cells.push(SweepCell {
-                                    key,
-                                    framework: kind.name().to_string(),
-                                    model: mlabel.clone(),
-                                    strategy: slabel.clone(),
-                                    mode: *mode,
-                                    policy: *policy,
-                                    alloc_label: alabel.clone(),
-                                    alloc_cfg: acfg.clone(),
-                                    scenario,
-                                    capacity: self.capacity,
-                                });
                             }
                         }
                     }
@@ -463,6 +492,59 @@ mod tests {
             .unwrap();
         assert_eq!(only.len(), 1);
         assert_eq!(only[0].alloc_label, "expandable");
+    }
+
+    #[test]
+    fn algo_axis_suffixes_non_ppo_keys() {
+        use crate::rlhf::program::Algo;
+        let cells = SweepGrid::new()
+            .algos([Algo::Ppo, Algo::Grpo, Algo::Dpo])
+            .build()
+            .unwrap();
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].key, "DeepSpeed-Chat/OPT/None/full/never");
+        assert_eq!(cells[1].key, "DeepSpeed-Chat/OPT/None/full/never/grpo");
+        assert_eq!(cells[2].key, "DeepSpeed-Chat/OPT/None/full/never/dpo");
+        assert_eq!(cells[0].algo, Algo::Ppo);
+        assert_eq!(cells[1].scenario.algo, Algo::Grpo);
+        // The axis participates in filters like every key component.
+        let only = SweepGrid::new()
+            .algos([Algo::Ppo, Algo::Grpo])
+            .include("grpo")
+            .build()
+            .unwrap();
+        assert_eq!(only.len(), 1);
+        assert_eq!(only[0].algo, Algo::Grpo);
+        // Algo precedes the allocator label in combined keys.
+        let combined = SweepGrid::new()
+            .algos([Algo::Grpo])
+            .allocator_configs([(
+                "expandable",
+                AllocatorConfig {
+                    expandable_segments: true,
+                    ..AllocatorConfig::default()
+                },
+            )])
+            .build()
+            .unwrap();
+        assert_eq!(
+            combined[0].key,
+            "DeepSpeed-Chat/OPT/None/full/never/grpo/expandable"
+        );
+    }
+
+    #[test]
+    fn per_cell_seeds_ignore_the_algo_suffix() {
+        use crate::rlhf::program::Algo;
+        // Cells differing only in algorithm sample the identical jitter
+        // stream — the axis delta must not be confounded by seeds.
+        let cells = SweepGrid::new()
+            .algos([Algo::Ppo, Algo::Grpo])
+            .seeds(SeedPolicy::PerCell(42))
+            .build()
+            .unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].scenario.seed, cells[1].scenario.seed);
     }
 
     #[test]

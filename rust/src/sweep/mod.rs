@@ -5,10 +5,12 @@
 //! Figure 1) — so the experiment layer exposes exactly that shape:
 //!
 //! * [`SweepGrid`] enumerates the cartesian product of the axes — the
-//!   four scenario axes plus an allocator-config axis
-//!   (`PYTORCH_CUDA_ALLOC_CONF` emulations, the planner's search space) —
-//!   with include/exclude filters, per-cell deterministic seeds, and a
-//!   `customize` hook for off-grid tweaks, into [`SweepCell`]s;
+//!   four scenario axes plus an algorithm axis
+//!   ([`crate::rlhf::program::Algo`]: PPO / GRPO / ReMax / DPO) and an
+//!   allocator-config axis (`PYTORCH_CUDA_ALLOC_CONF` emulations, the
+//!   planner's search space) — with include/exclude filters, per-cell
+//!   deterministic seeds, and a `customize` hook for off-grid tweaks,
+//!   into [`SweepCell`]s;
 //! * [`SweepRunner`] shards the cells across a pool of worker threads —
 //!   each worker owns its own allocator + profiler, so per-cell numbers
 //!   are bit-identical whatever `--jobs` is;

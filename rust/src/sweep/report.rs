@@ -57,9 +57,10 @@ impl SweepReport {
     /// Group cells into the paper's table layout: one block per
     /// `(framework, model)` in first-seen order, one [`StrategyRow`] per
     /// strategy (per scenario mode — non-`full` modes get the mode
-    /// appended to the row label so multi-mode grids don't collapse, and
-    /// non-default allocator configs likewise get their label appended so
-    /// an allocator axis doesn't overwrite the stock rows).
+    /// appended to the row label so multi-mode grids don't collapse;
+    /// non-PPO algorithms and non-default allocator configs likewise get
+    /// their labels appended so those axes don't overwrite the stock
+    /// rows).
     /// A cell with policy `never` fills the row's "original" half,
     /// `after_both` the "+ empty_cache" half; a row missing one half
     /// mirrors the other (so `never`-only grids still render).
@@ -81,6 +82,9 @@ impl SweepReport {
             } else {
                 format!("{} [{}]", cell.strategy, cell.mode)
             };
+            if cell.algo != "ppo" {
+                row_label = format!("{} [{}]", row_label, cell.algo);
+            }
             if cell.alloc != "default" {
                 row_label = format!("{} [{}]", row_label, cell.alloc);
             }

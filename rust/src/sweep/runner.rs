@@ -30,6 +30,9 @@ pub struct CellResult {
     pub strategy: String,
     pub mode: &'static str,
     pub policy: &'static str,
+    /// RLHF algorithm name of the cell ("ppo" unless the grid's
+    /// algorithm axis set one).
+    pub algo: &'static str,
     /// Allocator-config label of the cell ("default" unless the grid's
     /// allocator axis set one).
     pub alloc: String,
@@ -50,6 +53,7 @@ impl CellResult {
             ("strategy", Json::str(self.strategy.clone())),
             ("mode", Json::str(self.mode)),
             ("policy", Json::str(self.policy)),
+            ("algo", Json::str(self.algo)),
             ("alloc", Json::str(self.alloc.clone())),
             ("seed", Json::from(self.seed)),
             ("reserved", Json::from(self.summary.peak_reserved)),
@@ -172,6 +176,7 @@ fn run_cell(index: usize, cell: &SweepCell, capture: bool) -> CellResult {
         strategy: cell.strategy.clone(),
         mode: cell.mode.name(),
         policy: cell.policy.name(),
+        algo: cell.algo.name(),
         alloc: cell.alloc_label.clone(),
         seed: cell.scenario.seed,
         summary,

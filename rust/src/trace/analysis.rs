@@ -1,9 +1,92 @@
 //! Pure-trace analysis: live-byte accounting per tag, peak composition —
 //! the debugging lens for calibrating the phase generators against the
-//! paper's numbers (no allocator involved; this is ideal residency).
+//! paper's numbers (no allocator involved; this is ideal residency) —
+//! plus [`check_invariants`], the structural checker the phase-program
+//! property tests run over the full algo × strategy × mode grid.
 
 use super::op::{PhaseKind, Tag, Trace, TraceOp};
 use std::collections::HashMap;
+
+/// Structural invariants every compiled phase program's emission must
+/// uphold:
+///
+/// 1. **Handle discipline** — every id allocates once (never reused, even
+///    after a free), frees at most once, never frees before allocating,
+///    and no zero-byte allocs.
+/// 2. **Lifetime closure** — every alloc id is freed exactly once *or*
+///    still live at the final `StepEnd` (persistent engine state); no
+///    allocs/frees trail the final step boundary, where they would dodge
+///    that accounting.
+/// 3. **Phase-mark sequence** — the trace's `Phase` marks are exactly
+///    `Init` followed by `expected_step_phases` repeated once per
+///    `StepEnd`: only phases of roles this GPU hosts ever appear (the
+///    compiled program filtered the rest out), in program order. Pass
+///    [`crate::rlhf::program::PhaseProgram::step_phases`] of the
+///    scenario's compiled program.
+pub fn check_invariants(
+    trace: &Trace,
+    expected_step_phases: &[PhaseKind],
+) -> Result<(), String> {
+    use std::collections::HashSet;
+    let mut live: HashSet<u64> = HashSet::new();
+    let mut freed: HashSet<u64> = HashSet::new();
+    let mut marks: Vec<PhaseKind> = Vec::new();
+    let mut steps = 0u64;
+    let mut last_step_end: Option<usize> = None;
+    for (i, op) in trace.ops.iter().enumerate() {
+        match op {
+            TraceOp::Alloc { handle, bytes, .. } => {
+                if *bytes == 0 {
+                    return Err(format!("op {i}: zero-byte alloc"));
+                }
+                if live.contains(&handle.0) || freed.contains(&handle.0) {
+                    return Err(format!("op {i}: handle {} reused", handle.0));
+                }
+                live.insert(handle.0);
+            }
+            TraceOp::Free { handle } => {
+                if !live.remove(&handle.0) {
+                    return Err(format!("op {i}: free of dead handle {}", handle.0));
+                }
+                freed.insert(handle.0);
+            }
+            TraceOp::Phase(p) => marks.push(*p),
+            TraceOp::StepEnd { step } => {
+                steps += 1;
+                if *step != steps {
+                    return Err(format!(
+                        "op {i}: StepEnd {} out of order (expected {steps})",
+                        step
+                    ));
+                }
+                last_step_end = Some(i);
+            }
+            _ => {}
+        }
+    }
+    match last_step_end {
+        None => return Err("trace has no StepEnd".to_string()),
+        Some(i) => {
+            if trace.ops[i + 1..]
+                .iter()
+                .any(|op| matches!(op, TraceOp::Alloc { .. } | TraceOp::Free { .. }))
+            {
+                return Err("alloc/free after the final StepEnd".to_string());
+            }
+        }
+    }
+    let mut want = vec![PhaseKind::Init];
+    for _ in 0..steps {
+        want.extend_from_slice(expected_step_phases);
+    }
+    if marks != want {
+        return Err(format!(
+            "phase-mark sequence {:?} != program-expected {:?}",
+            marks, want
+        ));
+    }
+    Ok(())
+}
 
 /// Composition of live bytes at the moment total residency peaked.
 #[derive(Debug, Clone)]
@@ -97,6 +180,93 @@ mod tests {
         assert_eq!(c.phase, PhaseKind::TrainActor);
         assert_eq!(c.by_tag[0], (Tag::Grad, 300));
         assert_eq!(c.by_tag[1], (Tag::Param, 100));
+    }
+
+    #[test]
+    fn invariant_checker_accepts_well_formed_traces() {
+        let mut b = TraceBuilder::new();
+        b.phase(PhaseKind::Init);
+        let persistent = b.alloc(100, Tag::Param);
+        let _ = persistent; // live at StepEnd — allowed.
+        for step in 1..=2 {
+            b.phase(PhaseKind::Generation);
+            b.transient([50], Tag::KvCache);
+            b.phase(PhaseKind::TrainActor);
+            b.transient([70], Tag::Grad);
+            b.step_end(step);
+        }
+        let t = b.finish();
+        check_invariants(&t, &[PhaseKind::Generation, PhaseKind::TrainActor]).unwrap();
+        // A different expected pipeline must be rejected.
+        assert!(check_invariants(&t, &[PhaseKind::Generation]).is_err());
+    }
+
+    #[test]
+    fn invariant_checker_rejects_malformed_traces() {
+        use crate::trace::{TraceHandle, TraceOp};
+        // Double free.
+        let t = Trace {
+            ops: vec![
+                TraceOp::Phase(PhaseKind::Init),
+                TraceOp::Alloc {
+                    handle: TraceHandle(1),
+                    bytes: 10,
+                    tag: Tag::Param,
+                },
+                TraceOp::Free {
+                    handle: TraceHandle(1),
+                },
+                TraceOp::Free {
+                    handle: TraceHandle(1),
+                },
+                TraceOp::StepEnd { step: 1 },
+            ],
+        };
+        assert!(check_invariants(&t, &[]).is_err());
+        // Handle reuse after free.
+        let t = Trace {
+            ops: vec![
+                TraceOp::Phase(PhaseKind::Init),
+                TraceOp::Alloc {
+                    handle: TraceHandle(1),
+                    bytes: 10,
+                    tag: Tag::Param,
+                },
+                TraceOp::Free {
+                    handle: TraceHandle(1),
+                },
+                TraceOp::Alloc {
+                    handle: TraceHandle(1),
+                    bytes: 20,
+                    tag: Tag::Grad,
+                },
+                TraceOp::StepEnd { step: 1 },
+            ],
+        };
+        assert!(check_invariants(&t, &[]).is_err());
+        // Alloc trailing the final StepEnd.
+        let t = Trace {
+            ops: vec![
+                TraceOp::Phase(PhaseKind::Init),
+                TraceOp::StepEnd { step: 1 },
+                TraceOp::Alloc {
+                    handle: TraceHandle(9),
+                    bytes: 10,
+                    tag: Tag::Workspace,
+                },
+            ],
+        };
+        assert!(check_invariants(&t, &[]).is_err());
+        // Missing StepEnd entirely.
+        let t = Trace {
+            ops: vec![TraceOp::Phase(PhaseKind::Init)],
+        };
+        assert!(check_invariants(&t, &[]).is_err());
+        // Out-of-order step numbering.
+        let t = Trace {
+            ops: vec![TraceOp::Phase(PhaseKind::Init), TraceOp::StepEnd { step: 2 }],
+        };
+        assert!(check_invariants(&t, &[]).is_err());
     }
 
     #[test]

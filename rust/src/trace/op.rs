@@ -167,6 +167,44 @@ impl Trace {
         self.ops.is_empty()
     }
 
+    /// Order-sensitive digest of the full op stream — two traces share a
+    /// fingerprint iff they are op-for-op identical (handles, sizes, tags,
+    /// phase marks, compute times, step boundaries). The sim golden tests
+    /// pin the PPO pipeline with this.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::Hasher;
+        let mut h = crate::util::fasthash::FastHasher::default();
+        h.write_u64(self.ops.len() as u64);
+        for op in &self.ops {
+            match op {
+                TraceOp::Alloc { handle, bytes, tag } => {
+                    h.write_u64(1);
+                    h.write_u64(handle.0);
+                    h.write_u64(*bytes);
+                    h.write(tag.name().as_bytes());
+                }
+                TraceOp::Free { handle } => {
+                    h.write_u64(2);
+                    h.write_u64(handle.0);
+                }
+                TraceOp::EmptyCache => h.write_u64(3),
+                TraceOp::Phase(p) => {
+                    h.write_u64(4);
+                    h.write_u64(p.tag() as u64);
+                }
+                TraceOp::Compute { us } => {
+                    h.write_u64(5);
+                    h.write_u64(us.to_bits());
+                }
+                TraceOp::StepEnd { step } => {
+                    h.write_u64(6);
+                    h.write_u64(*step);
+                }
+            }
+        }
+        h.finish()
+    }
+
     /// Sanity check: every Free refers to a previously allocated, not yet
     /// freed handle; returns the set of leaked (never freed) handles.
     pub fn check_balanced(&self) -> Result<Vec<TraceHandle>, String> {
@@ -264,6 +302,30 @@ mod tests {
             ],
         };
         assert!(t.check_balanced().is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_op_streams() {
+        let mk = |bytes: u64| Trace {
+            ops: vec![
+                TraceOp::Phase(PhaseKind::Generation),
+                TraceOp::Alloc {
+                    handle: TraceHandle(1),
+                    bytes,
+                    tag: Tag::KvCache,
+                },
+                TraceOp::Free {
+                    handle: TraceHandle(1),
+                },
+                TraceOp::StepEnd { step: 1 },
+            ],
+        };
+        assert_eq!(mk(100).fingerprint(), mk(100).fingerprint());
+        assert_ne!(mk(100).fingerprint(), mk(101).fingerprint());
+        // Op order matters.
+        let mut reordered = mk(100);
+        reordered.ops.swap(0, 3);
+        assert_ne!(reordered.fingerprint(), mk(100).fingerprint());
     }
 
     #[test]

@@ -98,6 +98,12 @@ impl Args {
     }
 }
 
+/// Split a comma-separated CLI list, trimming whitespace and dropping
+/// empty entries — the shared helper behind every `--foo a,b,c` flag.
+pub fn split_list(s: &str) -> impl Iterator<Item = &str> {
+    s.split(',').map(str::trim).filter(|x| !x.is_empty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +154,12 @@ mod tests {
     fn explicit_false() {
         let a = args("x --feature=false");
         assert!(!a.bool_flag("feature"));
+    }
+
+    #[test]
+    fn split_list_trims_and_drops_empties() {
+        let v: Vec<&str> = split_list(" a, b ,,c ").collect();
+        assert_eq!(v, vec!["a", "b", "c"]);
+        assert_eq!(split_list("").count(), 0);
     }
 }

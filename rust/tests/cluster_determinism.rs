@@ -49,6 +49,31 @@ fn cluster_reproduces_itself_across_runs() {
 }
 
 #[test]
+fn cluster_algo_axis_is_jobs_deterministic_and_lighter_without_critic() {
+    let mut budget = tiny_budget();
+    budget.strategies = Some(vec!["none".to_string()]);
+    budget.algos = Some(vec!["ppo".to_string(), "grpo".to_string()]);
+    let serial = plan_cluster(&budget, 1).unwrap();
+    let pooled = plan_cluster(&budget, 4).unwrap();
+    assert_eq!(serial.jsonl(), pooled.jsonl());
+    // 3 plans × 1 strategy × 2 algos, keyed with the algo suffix.
+    assert_eq!(serial.outcomes.len(), 6);
+    let find = |key: &str| {
+        serial
+            .outcomes
+            .iter()
+            .find(|o| o.candidate.key() == key)
+            .unwrap_or_else(|| panic!("missing {key}"))
+    };
+    let ppo = find("cluster/w2/colocated/None");
+    let grpo = find("cluster/w2/colocated/None/grpo");
+    assert!(
+        grpo.run.max_peak_reserved() < ppo.run.max_peak_reserved(),
+        "dropping the critic must lighten every colocated GPU"
+    );
+}
+
+#[test]
 fn fused_placement_beats_dedicated_gpu_total() {
     // The paper's (and Hydra's) fused-placement claim: colocating the
     // frozen reference + reward models with the training pair costs less

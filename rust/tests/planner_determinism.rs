@@ -42,6 +42,32 @@ fn advise_jobs1_and_jobs4_are_byte_identical() {
 }
 
 #[test]
+fn advise_with_algo_axis_is_jobs_deterministic() {
+    let mut budget = narrowed_budget();
+    budget.allocators = Some(vec!["default".to_string()]);
+    budget.algos = Some(vec![
+        "ppo".to_string(),
+        "grpo".to_string(),
+        "dpo".to_string(),
+    ]);
+    let serial = plan(&budget, 1).unwrap();
+    let pooled = plan(&budget, 4).unwrap();
+    assert_eq!(serial.jsonl(), pooled.jsonl());
+    // 3 algos × 2 strategies × 4 policies × 1 allocator.
+    assert_eq!(serial.outcomes.len(), 3 * 2 * 4);
+    // Overheads are measured within one algorithm's workload: every
+    // un-mitigated baseline is its own zero, whatever the algo.
+    for o in &serial.outcomes {
+        if o.candidate.policy == EmptyCachePolicy::Never
+            && o.candidate.alloc_label == "default"
+            && !o.summary.oom
+        {
+            assert_eq!(o.overhead_pct, Some(0.0), "{}", o.candidate.key());
+        }
+    }
+}
+
+#[test]
 fn advise_reproduces_itself_across_runs() {
     let budget = narrowed_budget();
     let a = plan(&budget, 3).unwrap();

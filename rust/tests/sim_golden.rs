@@ -1,0 +1,283 @@
+//! Golden pins for the PhaseProgram refactor.
+//!
+//! Pre-refactor, `Emitter::run` hardcoded the PPO pipeline as
+//! `ScenarioMode` match arms. The refactor made the pipeline data — a
+//! compiled [`PhaseProgram`] — and the emitter an interpreter. These
+//! tests preserve the *old* match-arm pipelines verbatim as hand-written
+//! oracle node lists and assert that compilation reproduces them exactly
+//! and the interpreter emits **op-for-op identical** traces over them.
+//!
+//! Scope: this pins exactly the surface the refactor changed — pipeline
+//! *selection* (which phases run, in what order, gated how). The emitter
+//! bodies themselves are shared between both runs, so a regression inside
+//! a body would move both traces together; numeric drift there is gated
+//! separately by the allocator/paper tests (`table1 --compare-paper`,
+//! `rust/tests/integration.rs`) and the per-module sim tests.
+//!
+//! They also pin the algorithm axis's headline: critic-free (GRPO/ReMax)
+//! and reference-only (DPO) pipelines reserve less than PPO for the same
+//! model set.
+
+use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::models::{Role, RoleSet};
+use rlhf_mem::rlhf::program::{
+    AdvantageKind, Algo, ExpTensor, LossKind, PhaseBody, PhaseNode, PhaseProgram,
+};
+use rlhf_mem::rlhf::sim::{
+    build_trace, build_trace_with_program, ScenarioMode, SimScenario,
+};
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::trace::PhaseKind;
+
+/// The pre-refactor `Emitter::run` PPO pipeline, written out by hand:
+/// exactly the phases the old `ScenarioMode` match arms ran, gated on
+/// the same `hosts()` checks, in the same order.
+fn legacy_ppo_program(scn: &SimScenario) -> PhaseProgram {
+    assert_eq!(scn.algo, Algo::Ppo, "the legacy emitter was PPO-only");
+    let hosts = |r: Role| scn.roles.contains(r);
+    let mark = |kind: PhaseKind, requires: RoleSet, body: PhaseBody| PhaseNode {
+        kind: Some(kind),
+        requires,
+        body,
+    };
+    let silent = |requires: RoleSet, body: PhaseBody| PhaseNode {
+        kind: None,
+        requires,
+        body,
+    };
+    let infer = |role: Role, kind: PhaseKind| {
+        mark(
+            kind,
+            RoleSet::of(&[role]),
+            PhaseBody::Infer { role, pairs: false },
+        )
+    };
+    let ppo_precollected = vec![
+        ExpTensor::SeqTokens,
+        ExpTensor::Mask,
+        ExpTensor::PerTokenF32, // old logprobs
+        ExpTensor::PerTokenF32, // ref logprobs
+        ExpTensor::PerSeqF32,   // rewards
+        ExpTensor::PerTokenF32, // values
+        ExpTensor::PerTokenF32, // advantages
+        ExpTensor::PerTokenF32, // returns
+    ];
+    let train_actor = mark(
+        PhaseKind::TrainActor,
+        RoleSet::of(&[Role::Actor]),
+        PhaseBody::Train {
+            role: Role::Actor,
+            loss: LossKind::PpoClip,
+            pairs: false,
+        },
+    );
+    let train_critic = mark(
+        PhaseKind::TrainCritic,
+        RoleSet::of(&[Role::Critic]),
+        PhaseBody::Train {
+            role: Role::Critic,
+            loss: LossKind::ValueLoss,
+            pairs: false,
+        },
+    );
+
+    let mut nodes: Vec<PhaseNode> = Vec::new();
+    match scn.mode {
+        ScenarioMode::Full => {
+            if hosts(Role::Actor) {
+                nodes.push(mark(
+                    PhaseKind::Generation,
+                    RoleSet::of(&[Role::Actor]),
+                    PhaseBody::Generation {
+                        greedy_baseline: false,
+                    },
+                ));
+                nodes.push(infer(Role::Actor, PhaseKind::InferActor));
+            } else {
+                nodes.push(silent(
+                    RoleSet::EMPTY,
+                    PhaseBody::RemoteSequences {
+                        greedy_baseline: false,
+                    },
+                ));
+            }
+            if hosts(Role::Reference) {
+                nodes.push(infer(Role::Reference, PhaseKind::InferReference));
+            }
+            if hosts(Role::Reward) {
+                nodes.push(infer(Role::Reward, PhaseKind::InferReward));
+            }
+            if hosts(Role::Critic) {
+                nodes.push(infer(Role::Critic, PhaseKind::InferCritic));
+            }
+            if hosts(Role::Actor) || hosts(Role::Critic) {
+                nodes.push(silent(
+                    RoleSet::of(&[Role::Actor, Role::Critic]),
+                    PhaseBody::Advantages {
+                        kind: AdvantageKind::Gae,
+                    },
+                ));
+            }
+            if hosts(Role::Actor) {
+                nodes.push(train_actor);
+            }
+            if hosts(Role::Critic) {
+                nodes.push(train_critic);
+            }
+        }
+        ScenarioMode::TrainBothPrecollected => {
+            nodes.push(silent(
+                RoleSet::EMPTY,
+                PhaseBody::LoadExperience {
+                    tensors: ppo_precollected,
+                },
+            ));
+            if hosts(Role::Actor) {
+                nodes.push(train_actor);
+            }
+            if hosts(Role::Critic) {
+                nodes.push(train_critic);
+            }
+        }
+        ScenarioMode::TrainActorOnly => {
+            nodes.push(silent(
+                RoleSet::EMPTY,
+                PhaseBody::LoadExperience {
+                    tensors: ppo_precollected,
+                },
+            ));
+            if hosts(Role::Actor) {
+                nodes.push(train_actor);
+            }
+        }
+    }
+    nodes.push(silent(RoleSet::EMPTY, PhaseBody::FreeExperience));
+    PhaseProgram {
+        algo: Algo::Ppo,
+        active_roles: scn.roles,
+        nodes,
+    }
+}
+
+/// The PPO scenario matrix the golden pin covers: both frameworks, the
+/// strategy extremes, every mode, a jittering model set, a placement
+/// role-subset, time-sharing, and a non-zero rank.
+fn golden_scenarios() -> Vec<(String, SimScenario)> {
+    let mut out: Vec<(String, SimScenario)> = Vec::new();
+    for (label, strategy) in [
+        ("none", StrategyConfig::none()),
+        ("zero3", StrategyConfig::zero3()),
+        ("all", StrategyConfig::all_enabled()),
+    ] {
+        let mut scn = SimScenario::deepspeed_opt(strategy, EmptyCachePolicy::AfterBoth);
+        scn.steps = 2;
+        out.push((format!("ds-opt/{label}"), scn));
+    }
+    for mode in ScenarioMode::ALL {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 1;
+        scn.mode = mode;
+        out.push((format!("ds-opt/mode-{}", mode.name()), scn));
+    }
+    let mut cc = SimScenario::colossal_opt(StrategyConfig::zero3(), EmptyCachePolicy::AfterInference);
+    cc.steps = 2;
+    out.push(("cc-opt/zero3-jitter".to_string(), cc));
+    let mut gpt2 = SimScenario::colossal_gpt2(StrategyConfig::none(), EmptyCachePolicy::Never);
+    gpt2.steps = 1;
+    out.push(("cc-gpt2/none".to_string(), gpt2));
+    let mut scorer = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+    scorer.steps = 2;
+    scorer.roles = RoleSet::of(&[Role::Reference, Role::Reward]);
+    out.push(("ds-opt/scorer-gpu".to_string(), scorer));
+    let mut shared = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+    shared.steps = 2;
+    shared.time_shared = RoleSet::of(&[Role::Reference, Role::Reward]);
+    out.push(("ds-opt/time-shared".to_string(), shared));
+    let mut rank3 = SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+    rank3.steps = 1;
+    rank3.rank = 3;
+    out.push(("ds-opt/zero3-rank3".to_string(), rank3));
+    out
+}
+
+#[test]
+fn compiled_ppo_programs_equal_the_legacy_pipelines() {
+    for (label, scn) in golden_scenarios() {
+        assert_eq!(
+            PhaseProgram::compile(&scn),
+            legacy_ppo_program(&scn),
+            "{label}: compilation diverged from the legacy match arms"
+        );
+    }
+}
+
+#[test]
+fn ppo_traces_are_op_for_op_identical_to_the_legacy_pipeline() {
+    for (label, scn) in golden_scenarios() {
+        let legacy = legacy_ppo_program(&scn);
+        let compiled = build_trace(&scn);
+        let oracle = build_trace_with_program(&scn, &legacy);
+        assert_eq!(
+            compiled.fingerprint(),
+            oracle.fingerprint(),
+            "{label}: fingerprints diverged"
+        );
+        assert_eq!(compiled.ops.len(), oracle.ops.len(), "{label}");
+        // Fingerprint equality already implies this with overwhelming
+        // probability; the exact comparison makes failures debuggable.
+        assert!(compiled.ops == oracle.ops, "{label}: op streams diverged");
+    }
+}
+
+#[test]
+fn build_trace_is_deterministic() {
+    let mut scn = SimScenario::colossal_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+    scn.steps = 2;
+    for algo in Algo::ALL {
+        scn.algo = algo;
+        let a = build_trace(&scn).fingerprint();
+        let b = build_trace(&scn).fingerprint();
+        assert_eq!(a, b, "{}", algo.name());
+    }
+}
+
+#[test]
+fn critic_free_and_preference_algos_reserve_less_than_ppo() {
+    let run = |algo: Algo| {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 2;
+        scn.algo = algo;
+        run_scenario(&scn, RTX3090_HBM).summary
+    };
+    let ppo = run(Algo::Ppo);
+    assert!(!ppo.oom);
+    for algo in [Algo::Grpo, Algo::Dpo] {
+        let s = run(algo);
+        assert!(!s.oom, "{}", algo.name());
+        assert!(
+            s.peak_reserved < ppo.peak_reserved,
+            "{} peak {} must undercut ppo {}",
+            algo.name(),
+            s.peak_reserved,
+            ppo.peak_reserved
+        );
+    }
+    // ReMax drops the critic too; its extra greedy rollout churns more
+    // transient memory than PPO's generation but still beats PPO's
+    // four-engine peak on this testbed.
+    let remax = run(Algo::Remax);
+    assert!(!remax.oom);
+    assert!(remax.peak_reserved < ppo.peak_reserved);
+}
+
+#[test]
+fn algo_traces_differ_from_ppo() {
+    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+    scn.steps = 1;
+    let ppo = build_trace(&scn).fingerprint();
+    for algo in [Algo::Grpo, Algo::Remax, Algo::Dpo] {
+        scn.algo = algo;
+        assert_ne!(build_trace(&scn).fingerprint(), ppo, "{}", algo.name());
+    }
+}

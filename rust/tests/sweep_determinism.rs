@@ -70,3 +70,22 @@ fn fixed_seed_grid_reproduces_itself() {
     let b = SweepRunner::new(3).run(cells);
     assert_eq!(a.jsonl(), b.jsonl());
 }
+
+#[test]
+fn algo_axis_grid_is_jobs_deterministic() {
+    use rlhf_mem::rlhf::program::Algo;
+    let cells = grid().algos(Algo::ALL).build().unwrap();
+    assert_eq!(cells.len(), 8 * Algo::ALL.len());
+    // Non-PPO cells carry the algo as an extra key component.
+    assert_eq!(cells[0].key, "DeepSpeed-Chat/OPT/None/full/never");
+    assert_eq!(cells[1].key, "DeepSpeed-Chat/OPT/None/full/never/grpo");
+    let serial = SweepRunner::new(1).run(cells.clone());
+    let pooled = SweepRunner::new(4).run(cells);
+    assert_eq!(
+        serial.jsonl(),
+        pooled.jsonl(),
+        "the algo axis must not break --jobs determinism"
+    );
+    // The JSONL carries the algo for every cell.
+    assert!(serial.jsonl().lines().all(|l| l.contains("\"algo\":")));
+}

@@ -1,0 +1,71 @@
+//! Property-style trace invariants over the full algorithm × strategy ×
+//! mode grid (plus placement subsets): every trace the interpreter emits
+//! must uphold handle discipline, lifetime closure at the final StepEnd,
+//! and a phase-mark sequence exactly matching its compiled
+//! [`PhaseProgram`] — only phases of hosted, algorithm-active roles, in
+//! program order.
+
+use rlhf_mem::coordinator::PlacementPlan;
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::program::{Algo, PhaseProgram};
+use rlhf_mem::rlhf::sim::{build_trace, ScenarioMode, SimScenario};
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::trace::analysis::check_invariants;
+
+fn check(scn: &SimScenario, context: &str) {
+    let program = PhaseProgram::compile(scn);
+    let trace = build_trace(scn);
+    check_invariants(&trace, &program.step_phases())
+        .unwrap_or_else(|e| panic!("{context}: {e}"));
+}
+
+#[test]
+fn every_algo_strategy_mode_cell_upholds_the_invariants() {
+    for algo in Algo::ALL {
+        for (label, strategy) in StrategyConfig::table1_deepspeed_rows() {
+            for mode in ScenarioMode::ALL {
+                let mut scn =
+                    SimScenario::deepspeed_opt(strategy, EmptyCachePolicy::AfterBoth);
+                scn.steps = 1;
+                scn.mode = mode;
+                scn.algo = algo;
+                check(
+                    &scn,
+                    &format!("ds/{label}/{}/{}", mode.name(), algo.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn colossal_offload_cycles_uphold_the_invariants() {
+    // ColossalChat swaps scorers to host during training and re-uploads
+    // next step — two steps exercise the full offload/upload cycle, with
+    // length jitter varying every step's shapes.
+    for algo in Algo::ALL {
+        for mode in ScenarioMode::ALL {
+            let mut scn =
+                SimScenario::colossal_opt(StrategyConfig::zero3(), EmptyCachePolicy::AfterInference);
+            scn.steps = 2;
+            scn.mode = mode;
+            scn.algo = algo;
+            check(&scn, &format!("cc/zero3/{}/{}", mode.name(), algo.name()));
+        }
+    }
+}
+
+#[test]
+fn placement_subsets_uphold_the_invariants() {
+    for algo in Algo::ALL {
+        let mut base = SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+        base.steps = 2;
+        base.algo = algo;
+        for plan in PlacementPlan::presets(3) {
+            for g in 0..plan.gpus() as usize {
+                let scn = plan.scenario_for_gpu(&base, g);
+                check(&scn, &format!("{}/gpu{g}/{}", plan.name, algo.name()));
+            }
+        }
+    }
+}
