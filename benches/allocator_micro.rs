@@ -1,12 +1,23 @@
 //! Microbenchmarks of the caching-allocator simulator — the L3 hot path.
 //! Used by EXPERIMENTS.md §Perf (replay throughput target: >= 10 M ops/s).
+//!
+//! The `large-pool churn` workload is the indexed-allocator acceptance
+//! benchmark: thousands of partially-used segments pin cached blocks
+//! while a hot alloc/free/`empty_cache` loop runs on top. The seed
+//! allocator re-scanned every pooled block (and every driver segment
+//! slot) per `empty_cache`; the fully-free-segment index visits only the
+//! segment actually released — ≥2× allocator-op throughput here.
 
 use rlhf_mem::alloc::CachingAllocator;
+use rlhf_mem::bench::report::{emit_local, LocalEntry};
+use rlhf_mem::bench::workloads::{large_pool_churn, large_pool_churn_ops};
 use rlhf_mem::bench::{bench, throughput};
 use rlhf_mem::util::bytes::{GIB, KIB, MIB};
 use rlhf_mem::util::prng::Rng;
 
 fn main() {
+    let mut entries: Vec<LocalEntry> = Vec::new();
+
     // 1. alloc/free ping-pong (cache hits).
     let r = bench("alloc/free cache-hit pairs (x100k)", 1, 10, || {
         let mut a = CachingAllocator::with_default_config(GIB);
@@ -16,6 +27,7 @@ fn main() {
         }
     });
     println!("{}  -> {:.1} M ops/s", r.report(), throughput(&r, 200_000.0) / 1e6);
+    entries.push(LocalEntry::timed(&r, Some(200_000.0)));
 
     // 2. mixed-size steady state.
     let r = bench("mixed sizes steady-state (x100k)", 1, 5, || {
@@ -43,6 +55,7 @@ fn main() {
         }
     });
     println!("{}  -> {:.1} M ops/s", r.report(), throughput(&r, 200_000.0) / 1e6);
+    entries.push(LocalEntry::timed(&r, Some(200_000.0)));
 
     // 3. empty_cache on a populated cache.
     let r = bench("empty_cache (200 cached segments)", 1, 20, || {
@@ -54,8 +67,23 @@ fn main() {
         a.empty_cache();
     });
     println!("{}", r.report());
+    entries.push(LocalEntry::timed(&r, None));
 
-    // 4. end-to-end scenario replay (the Table-1 inner loop).
+    // 4. large-pool churn — the fully-free-segment index's acceptance
+    // workload (shared with `rlhf-mem bench`'s alloc_churn).
+    let churn_ops = large_pool_churn_ops() as f64;
+    let r = bench("large-pool churn (6k pinned segs)", 1, 5, || {
+        let a = large_pool_churn();
+        assert_eq!(a.reserved(), 0);
+    });
+    println!(
+        "{}  -> {:.2} M alloc-ops/s",
+        r.report(),
+        throughput(&r, churn_ops) / 1e6
+    );
+    entries.push(LocalEntry::timed(&r, Some(churn_ops)));
+
+    // 5. end-to-end scenario replay (the Table-1 inner loop).
     use rlhf_mem::experiment::{run_trace, RTX3090_HBM};
     use rlhf_mem::policy::EmptyCachePolicy;
     use rlhf_mem::rlhf::sim::{build_trace, SimScenario};
@@ -67,4 +95,7 @@ fn main() {
         let _ = run_trace(&trace, RTX3090_HBM);
     });
     println!("{}  -> {:.1} M trace-ops/s", r.report(), throughput(&r, ops) / 1e6);
+    entries.push(LocalEntry::timed(&r, Some(ops)));
+
+    emit_local("allocator_micro", &entries);
 }

@@ -1,14 +1,17 @@
 //! Bench for §3.3's placement ablation (E7): never / after-both /
 //! after-inference / after-training.
 
+use rlhf_mem::bench::report::{emit_local, LocalEntry};
 use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::rlhf::sim::SimScenario;
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::util::bytes::fmt_gib_paper;
+use rlhf_mem::util::json::Json;
 
 fn main() {
     let mut results = Vec::new();
+    let mut entries: Vec<LocalEntry> = Vec::new();
     for policy in EmptyCachePolicy::ALL {
         let mut scn = SimScenario::colossal_gpt2(StrategyConfig::zero3(), policy);
         scn.steps = 3;
@@ -20,6 +23,17 @@ fn main() {
             fmt_gib_paper(res.summary.frag),
             res.summary.empty_cache_calls
         );
+        entries.push(LocalEntry::counters(
+            policy.name(),
+            Json::obj(vec![
+                ("peak_reserved", Json::from(res.summary.peak_reserved)),
+                ("frag", Json::from(res.summary.frag)),
+                (
+                    "empty_cache_calls",
+                    Json::from(res.summary.empty_cache_calls),
+                ),
+            ]),
+        ));
         results.push((policy, res.summary));
     }
     let get = |p: EmptyCachePolicy| results.iter().find(|(q, _)| *q == p).unwrap().1.clone();
@@ -33,4 +47,5 @@ fn main() {
         / both.peak_reserved as f64;
     assert!(gap < 0.15, "after_inference should be within 15% of after_both, gap {gap:.2}");
     println!("empty_cache_ablation bench complete (orderings hold)");
+    emit_local("empty_cache_ablation", &entries);
 }

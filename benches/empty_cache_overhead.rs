@@ -1,11 +1,13 @@
 //! Bench for §3.3's cost/benefit claim (E8): memory saved vs end-to-end
 //! simulated time overhead of empty_cache across representative rows.
 
+use rlhf_mem::bench::report::{emit_local, LocalEntry};
 use rlhf_mem::experiment::RTX3090_HBM;
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::report::paper::measure_row_full;
 use rlhf_mem::rlhf::sim::SimScenario;
 use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::util::json::Json;
 
 fn main() {
     let rows: Vec<(&str, SimScenario)> = vec![
@@ -16,6 +18,7 @@ fn main() {
         ("CC/GPT2 ZeRO-3", SimScenario::colossal_gpt2(StrategyConfig::zero3(), EmptyCachePolicy::Never)),
     ];
     let mut worst_overhead: f64 = 0.0;
+    let mut entries: Vec<LocalEntry> = Vec::new();
     for (label, scn) in rows {
         let (row, orig, ec) = measure_row_full(label, &scn, RTX3090_HBM);
         let saved = 1.0 - row.with_empty_cache.peak_reserved as f64 / row.original.peak_reserved as f64;
@@ -28,9 +31,21 @@ fn main() {
             row.original.frag as f64 / (1u64 << 30) as f64,
             row.with_empty_cache.frag as f64 / (1u64 << 30) as f64,
         );
+        entries.push(LocalEntry::counters(
+            label,
+            Json::obj(vec![
+                ("peak_reserved", Json::from(row.original.peak_reserved)),
+                (
+                    "peak_reserved_with_empty_cache",
+                    Json::from(row.with_empty_cache.peak_reserved),
+                ),
+                ("overhead_pct", Json::from(overhead * 100.0)),
+            ]),
+        ));
     }
     // Paper: ~2% average overhead. Assert the order of magnitude: well
     // under 10% on every row.
     assert!(worst_overhead < 0.10, "time overhead too high: {worst_overhead:.3}");
     println!("empty_cache_overhead bench complete (overhead < 10% everywhere)");
+    emit_local("empty_cache_overhead", &entries);
 }

@@ -4,11 +4,13 @@
 //! the tens of percent).
 
 use rlhf_mem::bench::bench;
+use rlhf_mem::bench::report::{emit_local, LocalEntry};
 use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::rlhf::sim::SimScenario;
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::util::bytes::fmt_bytes;
+use rlhf_mem::util::json::Json;
 
 fn main() {
     let scn = SimScenario::deepspeed_opt(StrategyConfig::all_enabled(), EmptyCachePolicy::Never);
@@ -28,4 +30,23 @@ fn main() {
     println!("timeline -> target/bench-results/figure1.csv ({} points)", res.profiler.timeline.points().len());
     assert!(s.frag_overhead_ratio() > 0.08, "frag overhead must be substantial");
     println!("figure1 bench complete");
+
+    emit_local(
+        "figure1",
+        &[
+            LocalEntry::timed(&timing, None),
+            LocalEntry::counters(
+                "figure1 shape",
+                Json::obj(vec![
+                    ("peak_reserved", Json::from(s.peak_reserved)),
+                    ("frag", Json::from(s.fig1_frag())),
+                    ("peak_phase", Json::str(s.peak_phase.name())),
+                    (
+                        "timeline_points",
+                        Json::from(res.profiler.timeline.points().len()),
+                    ),
+                ]),
+            ),
+        ],
+    );
 }

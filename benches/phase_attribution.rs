@@ -1,14 +1,17 @@
 //! Bench for §3.1's three-scenario comparison (E6): full pipeline vs
 //! training-only scenarios — fragmentation must come from the inferences.
 
+use rlhf_mem::bench::report::{emit_local, LocalEntry};
 use rlhf_mem::experiment::{run_scenario, RTX3090_HBM};
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::rlhf::sim::{ScenarioMode, SimScenario};
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::util::bytes::fmt_gib_paper;
+use rlhf_mem::util::json::Json;
 
 fn main() {
     let mut out = Vec::new();
+    let mut entries: Vec<LocalEntry> = Vec::new();
     for (label, mode) in [
         ("full pipeline", ScenarioMode::Full),
         ("train both (pre-collected)", ScenarioMode::TrainBothPrecollected),
@@ -23,6 +26,14 @@ fn main() {
             fmt_gib_paper(res.summary.frag),
             fmt_gib_paper(res.summary.peak_allocated),
         );
+        entries.push(LocalEntry::counters(
+            label,
+            Json::obj(vec![
+                ("peak_reserved", Json::from(res.summary.peak_reserved)),
+                ("frag", Json::from(res.summary.frag)),
+                ("peak_allocated", Json::from(res.summary.peak_allocated)),
+            ]),
+        ));
         out.push(res.summary);
     }
     // Paper §3.1: the full pipeline shows more fragmentation and reserved
@@ -31,4 +42,5 @@ fn main() {
     assert!(out[0].peak_reserved >= out[1].peak_reserved);
     assert!(out[1].peak_reserved >= out[2].peak_reserved, "actor-only is smallest");
     println!("phase_attribution bench complete (orderings hold)");
+    emit_local("phase_attribution", &entries);
 }

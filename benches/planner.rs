@@ -6,8 +6,11 @@
 //! contract).
 
 use rlhf_mem::bench::bench;
+use rlhf_mem::bench::report::{emit_local, LocalEntry};
+use rlhf_mem::bench::workloads::hash_text;
 use rlhf_mem::planner::{plan, Budget};
 use rlhf_mem::sweep::SweepRunner;
+use rlhf_mem::util::json::Json;
 
 fn main() {
     let budget = Budget::from_json_text(include_str!("../examples/budget_rtx3090.json"))
@@ -52,5 +55,20 @@ fn main() {
     }
     println!(
         "planner bench complete: {candidates} candidates, speedup {speedup:.2}x"
+    );
+
+    emit_local(
+        "planner",
+        &[
+            LocalEntry::timed(&t1, Some(candidates as f64)),
+            LocalEntry::timed(&tn, Some(candidates as f64)),
+            LocalEntry::counters(
+                "advise results",
+                Json::obj(vec![
+                    ("candidates", Json::from(candidates)),
+                    ("jsonl_fingerprint", Json::str(hash_text(&pooled.jsonl()))),
+                ]),
+            ),
+        ],
     );
 }

@@ -3,21 +3,26 @@
 //! allocator replay), so this measures exactly what the compile +
 //! interpret refactor touched: ops emitted per second per algorithm.
 
+use rlhf_mem::bench::report::{emit_local, LocalEntry};
+use rlhf_mem::bench::workloads::fmt_fingerprint;
 use rlhf_mem::bench::{bench, throughput};
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::rlhf::program::{Algo, PhaseProgram};
 use rlhf_mem::rlhf::sim::{build_trace, SimScenario};
 use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::util::json::Json;
 
 fn main() {
     println!("trace-generation throughput (DeepSpeed-Chat/OPT, ZeRO-3, 2 steps)\n");
+    let mut entries: Vec<LocalEntry> = Vec::new();
     let mut total_mops = 0.0;
     for algo in Algo::ALL {
         let mut scn =
             SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
         scn.steps = 2;
         scn.algo = algo;
-        let ops = build_trace(&scn).len();
+        let trace = build_trace(&scn);
+        let ops = trace.len();
         let r = bench(&format!("build_trace {} ({} ops)", algo.name(), ops), 1, 5, || {
             let t = build_trace(&scn);
             assert!(!t.is_empty());
@@ -26,6 +31,17 @@ fn main() {
         let mops = throughput(&r, ops as f64) / 1e6;
         println!("    {:>8.2} Mops/s", mops);
         total_mops += mops;
+        entries.push(LocalEntry::timed(&r, Some(ops as f64)));
+        entries.push(LocalEntry::counters(
+            format!("trace {}", algo.name()),
+            Json::obj(vec![
+                ("trace_ops", Json::from(ops)),
+                (
+                    "trace_fingerprint",
+                    Json::str(fmt_fingerprint(trace.fingerprint())),
+                ),
+            ]),
+        ));
     }
 
     // Compilation alone should be vanishingly cheap next to emission.
@@ -37,9 +53,11 @@ fn main() {
         }
     });
     println!("{}", r.report());
+    entries.push(LocalEntry::timed(&r, Some(1000.0)));
     println!(
         "\nsim_trace bench complete: {:.2} Mops/s summed across {} algorithms",
         total_mops,
         Algo::ALL.len()
     );
+    emit_local("sim_trace", &entries);
 }

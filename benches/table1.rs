@@ -5,8 +5,11 @@
 //! paper's rows plus the parallel speedup.
 
 use rlhf_mem::bench::bench;
+use rlhf_mem::bench::report::{emit_local, LocalEntry};
+use rlhf_mem::bench::workloads::hash_text;
 use rlhf_mem::report::paper::render_rows;
 use rlhf_mem::sweep::{presets, SweepRunner};
+use rlhf_mem::util::json::Json;
 
 fn main() {
     let cells = presets::table1_cells(3).expect("table1 grid");
@@ -39,4 +42,19 @@ fn main() {
         println!("{}", render_rows(&format!("{fw} / {model}"), &rows));
     }
     println!("table1 bench complete: {n} cells, speedup {speedup:.2}x");
+
+    emit_local(
+        "table1",
+        &[
+            LocalEntry::timed(&t1, Some(n as f64)),
+            LocalEntry::timed(&tn, Some(n as f64)),
+            LocalEntry::counters(
+                "table1 results",
+                Json::obj(vec![
+                    ("cells", Json::from(n)),
+                    ("jsonl_fingerprint", Json::str(hash_text(&pooled.jsonl()))),
+                ]),
+            ),
+        ],
+    );
 }

@@ -4,8 +4,11 @@
 //! CLI), timed serially and on the worker pool.
 
 use rlhf_mem::bench::bench;
+use rlhf_mem::bench::report::{emit_local, LocalEntry};
+use rlhf_mem::bench::workloads::hash_text;
 use rlhf_mem::report::paper::{paper_table2, render_rows};
 use rlhf_mem::sweep::{presets, SweepRunner};
+use rlhf_mem::util::json::Json;
 
 fn main() {
     let cells = presets::table2_cells(3).expect("table2 grid");
@@ -26,7 +29,8 @@ fn main() {
         t1.summary.median / tn.summary.median
     );
 
-    for (_fw, model, rows) in pooled.unwrap().strategy_rows() {
+    let pooled = pooled.unwrap();
+    for (_fw, model, rows) in pooled.strategy_rows() {
         println!("{}", render_rows(&format!("{model} (4xA100-80G)"), &rows));
     }
     println!("paper reference:");
@@ -36,4 +40,20 @@ fn main() {
             v[0], v[1], v[2], v[3], v[4]
         );
     }
+
+    let n = pooled.cells.len();
+    emit_local(
+        "table2",
+        &[
+            LocalEntry::timed(&t1, Some(n as f64)),
+            LocalEntry::timed(&tn, Some(n as f64)),
+            LocalEntry::counters(
+                "table2 results",
+                Json::obj(vec![
+                    ("cells", Json::from(n)),
+                    ("jsonl_fingerprint", Json::str(hash_text(&pooled.jsonl()))),
+                ]),
+            ),
+        ],
+    );
 }

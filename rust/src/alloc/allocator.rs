@@ -13,6 +13,15 @@
 //!   retry before surfacing the error;
 //! * `empty_cache()` returns every fully-free segment to the driver;
 //! * stats + event stream per the paper's Appendix B definitions.
+//!
+//! Hot-path complexity (the speed layer under every sweep/planner/cluster
+//! run): best-fit is O(log n) over the per-pool size index, coalescing is
+//! O(1) over the blocks' address-ordered `prev`/`next` handles, and the
+//! release paths (`empty_cache`, OOM retry, gc-threshold) walk only the
+//! pool's fully-free-segment index ([`BlockPool`] keeps it in sync on
+//! every insert/remove) instead of scanning every cached block or every
+//! segment. The golden tests in `rust/tests/alloc_golden.rs` pin the
+//! event log byte-identical to the pre-index scan implementation.
 
 use super::block::{Block, BlockId, BlockSlab, BlockState, NO_BLOCK};
 use super::config::{AllocatorConfig, PoolKind};
@@ -497,17 +506,20 @@ impl CachingAllocator {
         if self.driver.reserved() + incoming <= target {
             return;
         }
-        // Candidate = fully-free segment: its head block is free and spans
-        // the whole segment (single-block chain).
+        // Candidates come straight from the pools' fully-free-segment
+        // indexes — the same set a scan over `seg_heads` for free,
+        // single-block chains would find, without visiting busy segments.
         let mut candidates: Vec<(u64, u32, BlockId, u64, PoolKind)> = Vec::new();
-        for (&seg, &head) in &self.seg_heads {
-            if keep == Some(seg) {
-                continue;
-            }
-            let b = self.slab.get(head);
-            if b.state == BlockState::Free && b.next == NO_BLOCK {
+        for (pool, pool_kind) in [
+            (&self.small, PoolKind::Small),
+            (&self.large, PoolKind::Large),
+        ] {
+            for (size, head, seg) in pool.fully_free() {
+                if keep == Some(seg) {
+                    continue;
+                }
                 let age = self.seg_last_use.get(&seg).copied().unwrap_or(0);
-                candidates.push((age, seg.0, head, b.size, b.pool));
+                candidates.push((age, seg.0, head, size, pool_kind));
             }
         }
         candidates.sort_unstable_by_key(|&(age, seg, ..)| (age, seg));
@@ -591,7 +603,8 @@ impl CachingAllocator {
             b.next = rem_id.0;
         }
         let rem_size = size - rounded;
-        self.pool(pool_kind).insert(rem_size, rem_id);
+        // A split remainder starts past offset 0 — never a whole segment.
+        self.pool(pool_kind).insert(rem_size, rem_id, seg, false);
         block_id
     }
 
@@ -616,8 +629,14 @@ impl CachingAllocator {
         self.stats.sync(self.driver.reserved(), allocated);
 
         let merged = self.coalesce(block_id, pool_kind);
-        let merged_size = self.slab.get(merged).size;
-        self.pool(pool_kind).insert(merged_size, merged);
+        let (merged_size, merged_seg, spans) = {
+            let b = self.slab.get(merged);
+            // offset 0 with no successor ⟺ the single block tiling the
+            // segment — the fully-free-segment index's membership rule.
+            (b.size, b.segment, b.offset == 0 && b.next == NO_BLOCK)
+        };
+        self.pool(pool_kind)
+            .insert(merged_size, merged, merged_seg, spans);
 
         self.emit(AllocEvent::Free { size });
     }
@@ -681,26 +700,19 @@ impl CachingAllocator {
     fn release_cached_segments(&mut self) -> u64 {
         let mut released = 0u64;
         for pool_kind in [PoolKind::Small, PoolKind::Large] {
-            // Collect candidates first (can't mutate while iterating).
-            let candidates: Vec<(u64, BlockId)> = self
-                .pool(pool_kind)
-                .iter()
-                .copied()
-                .collect();
-            for (size, id) in candidates {
-                let (seg, offset) = {
-                    let b = self.slab.get(id);
-                    (b.segment, b.offset)
-                };
-                let seg_size = self.driver.segment_size(seg);
-                // Fully-free segment == single free block spanning it.
-                if offset == 0 && size == seg_size {
-                    self.release_full_segment(seg, id, size, pool_kind);
-                    released += seg_size;
-                    self.emit(AllocEvent::CudaFree {
-                        segment_bytes: seg_size,
-                    });
-                }
+            // Snapshot the fully-free-segment index (can't mutate while
+            // iterating). Its `(size, BlockId)` order is the relative
+            // order a scan over the whole pool would have released in.
+            let candidates: Vec<(u64, BlockId, SegmentId)> = match pool_kind {
+                PoolKind::Small => self.small.fully_free().collect(),
+                PoolKind::Large => self.large.fully_free().collect(),
+            };
+            for (size, id, seg) in candidates {
+                self.release_full_segment(seg, id, size, pool_kind);
+                released += size;
+                self.emit(AllocEvent::CudaFree {
+                    segment_bytes: size,
+                });
             }
         }
         if self.cfg.expandable_segments {
@@ -749,7 +761,8 @@ impl CachingAllocator {
                 self.slab.remove(tail);
             } else {
                 self.slab.get_mut(tail).size = size - cut;
-                self.pool(pool_kind).insert(size - cut, tail);
+                // offset > 0 (checked above): never a whole segment.
+                self.pool(pool_kind).insert(size - cut, tail, seg, false);
             }
             self.driver.shrink_segment(seg, cut);
             self.stats.shrunk_bytes += cut;
@@ -785,11 +798,15 @@ impl CachingAllocator {
     /// Exhaustive invariant check — O(everything); tests and property tests
     /// call this after every operation.
     pub fn validate(&self) -> Result<(), String> {
+        use std::collections::BTreeSet;
         // 1. Per-segment chains must tile the segment exactly.
         let mut total_alloc = 0u64;
         let mut total_free = 0u64;
         let mut seg_bytes = 0u64;
         let mut free_blocks: Vec<(u64, BlockId)> = Vec::new();
+        // Recomputed-from-scratch fully-free sets (`[small, large]`) to
+        // hold the pools' incremental indexes against.
+        let mut expect_ff: [BTreeSet<(u64, BlockId)>; 2] = [BTreeSet::new(), BTreeSet::new()];
         for (&seg, &head) in &self.seg_heads {
             let seg_size = self.driver.segment_size(seg);
             seg_bytes += seg_size;
@@ -823,6 +840,9 @@ impl CachingAllocator {
                     BlockState::Free => {
                         total_free += b.size;
                         free_blocks.push((b.size, cursor));
+                        if b.offset == 0 && b.next == NO_BLOCK {
+                            expect_ff[pool_idx(b.pool)].insert((b.size, cursor));
+                        }
                     }
                 }
                 expect_offset += b.size;
@@ -868,6 +888,32 @@ impl CachingAllocator {
                 "pool count {pool_count} != free block count {}",
                 free_blocks.len()
             ));
+        }
+        // 3b. The fully-free-segment indexes hold exactly the free blocks
+        // spanning their whole segment, with the right owning segments.
+        for (pool, kind) in [(&self.small, PoolKind::Small), (&self.large, PoolKind::Large)] {
+            let got: BTreeSet<(u64, BlockId)> =
+                pool.fully_free().map(|(size, id, _)| (size, id)).collect();
+            if got != expect_ff[pool_idx(kind)] {
+                return Err(format!(
+                    "{} pool fully-free index out of sync: {} indexed vs {} spanning",
+                    kind.name(),
+                    got.len(),
+                    expect_ff[pool_idx(kind)].len()
+                ));
+            }
+            for (size, id, seg) in pool.fully_free() {
+                let b = self.slab.get(id);
+                if b.segment != seg || b.size != size {
+                    return Err(format!(
+                        "{} pool fully-free entry {id:?} stale: indexed ({size} B, {seg:?}) \
+                         vs block ({} B, {:?})",
+                        kind.name(),
+                        b.size,
+                        b.segment
+                    ));
+                }
+            }
         }
         // 4. Live handle map points at allocated blocks.
         for (&h, &bid) in &self.live {

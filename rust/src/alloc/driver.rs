@@ -45,6 +45,10 @@ pub struct SimDriver {
     reserved: u64,
     segments: Vec<Option<u64>>, // SegmentId -> size (None = freed)
     free_slots: Vec<u32>,
+    /// Live-segment count, maintained incrementally so
+    /// [`Self::live_segments`] (on the `empty_cache` path) is O(1)
+    /// instead of a scan over every slot ever allocated.
+    live: usize,
     pub num_mallocs: u64,
     pub num_frees: u64,
     /// `cuMemMap` growths of expandable segments.
@@ -63,6 +67,7 @@ impl SimDriver {
             reserved: 0,
             segments: Vec::new(),
             free_slots: Vec::new(),
+            live: 0,
             num_mallocs: 0,
             num_frees: 0,
             num_grows: 0,
@@ -97,6 +102,7 @@ impl SimDriver {
             });
         }
         self.reserved += size;
+        self.live += 1;
         self.num_mallocs += 1;
         self.time_us += self.cost.cuda_malloc_base_us
             + self.cost.cuda_malloc_per_gib_us * (size as f64 / (1u64 << 30) as f64);
@@ -119,6 +125,7 @@ impl SimDriver {
             .take()
             .expect("double cuda_free");
         self.reserved -= size;
+        self.live -= 1;
         self.num_frees += 1;
         self.free_slots.push(id.0);
         self.time_us += self.cost.cuda_free_us;
@@ -171,7 +178,11 @@ impl SimDriver {
     }
 
     pub fn live_segments(&self) -> usize {
-        self.segments.iter().filter(|s| s.is_some()).count()
+        debug_assert_eq!(
+            self.live,
+            self.segments.iter().filter(|s| s.is_some()).count()
+        );
+        self.live
     }
 }
 

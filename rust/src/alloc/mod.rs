@@ -13,4 +13,7 @@ pub mod stats;
 pub use allocator::{AllocError, AllocId, CachingAllocator};
 pub use config::{AllocatorConfig, CostModel, PoolKind};
 pub use driver::{DriverOom, SegmentId, SimDriver};
-pub use stats::{AllocEvent, AllocObserver, AllocStats, NullObserver, PhaseTag, StatSnapshot};
+pub use stats::{
+    fingerprint_events, AllocEvent, AllocObserver, AllocStats, NullObserver, PhaseTag,
+    StatSnapshot,
+};

@@ -1,14 +1,36 @@
-//! Free-block pools: size-ordered sets supporting best-fit lookup, keyed
-//! `(size, BlockId)` exactly like PyTorch's `BlockComparator`.
+//! Free-block pools: per-pool size-indexed free maps supporting O(log n)
+//! best-fit lookup, keyed `(size, BlockId)` exactly like PyTorch's
+//! `BlockComparator` (size first, then an arbitrary-but-stable id as the
+//! tie-break — kept as `BlockId`, not address, so the indexed pool serves
+//! the exact block the seed allocator's scan would have picked and the
+//! event-log golden tests hold bit-for-bit).
+//!
+//! On top of the size index the pool maintains a **fully-free-segment
+//! index**: the subset of cached blocks that span their whole segment
+//! (offset 0, no successor — by the chain-tiling invariant that is exactly
+//! "the segment is fully free"). `empty_cache()`, the OOM-retry cascade and
+//! the `garbage_collection_threshold` pass used to rediscover those by
+//! walking every pooled block / every segment; with the index they touch
+//! only the segments they will actually release. The index is maintained
+//! in O(log n) at insert and O(log n) at remove — no separate bookkeeping
+//! pass can forget it, because every pool mutation goes through
+//! [`BlockPool::insert`] / [`BlockPool::remove`].
 
 use super::block::BlockId;
-use std::collections::BTreeSet;
+use super::driver::SegmentId;
+use std::collections::BTreeMap;
 use std::ops::Bound;
 
 /// One pool (small or large) of cached free blocks.
 #[derive(Debug, Default, Clone)]
 pub struct BlockPool {
-    set: BTreeSet<(u64, BlockId)>,
+    /// Size index: every cached block, keyed `(size, BlockId)`, valued by
+    /// its owning segment.
+    map: BTreeMap<(u64, BlockId), SegmentId>,
+    /// Fully-free-segment index: the subset of `map` whose blocks span
+    /// their whole segment, same key order. Iterating it yields releases
+    /// in the identical relative order a full `map` scan would have.
+    fully_free: BTreeMap<(u64, BlockId), SegmentId>,
     /// Total bytes cached in this pool (Σ sizes of free blocks).
     cached_bytes: u64,
 }
@@ -18,24 +40,31 @@ impl BlockPool {
         Self::default()
     }
 
-    pub fn insert(&mut self, size: u64, id: BlockId) {
-        let fresh = self.set.insert((size, id));
+    /// Insert a free block. `spans_segment` marks blocks covering their
+    /// whole segment (offset 0 and no successor); those also enter the
+    /// fully-free-segment index.
+    pub fn insert(&mut self, size: u64, id: BlockId, segment: SegmentId, spans_segment: bool) {
+        let fresh = self.map.insert((size, id), segment).is_none();
         debug_assert!(fresh, "block {id:?} already pooled");
+        if spans_segment {
+            self.fully_free.insert((size, id), segment);
+        }
         self.cached_bytes += size;
     }
 
     pub fn remove(&mut self, size: u64, id: BlockId) {
-        let was = self.set.remove(&(size, id));
+        let was = self.map.remove(&(size, id)).is_some();
         debug_assert!(was, "block {id:?} not in pool");
+        self.fully_free.remove(&(size, id));
         self.cached_bytes -= size;
     }
 
     /// Best fit: the smallest cached block with `size >= want`.
     pub fn best_fit(&self, want: u64) -> Option<(u64, BlockId)> {
-        self.set
+        self.map
             .range((Bound::Included((want, BlockId(0))), Bound::Unbounded))
             .next()
-            .copied()
+            .map(|(&key, _)| key)
     }
 
     /// Best fit bounded above: PyTorch with `max_split_size` set refuses
@@ -47,26 +76,32 @@ impl BlockPool {
     }
 
     pub fn len(&self) -> usize {
-        self.set.len()
+        self.map.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.set.is_empty()
+        self.map.is_empty()
     }
 
     pub fn cached_bytes(&self) -> u64 {
         self.cached_bytes
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = &(u64, BlockId)> {
-        self.set.iter()
+    /// Every cached block, `(size, BlockId)` ascending.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, BlockId, SegmentId)> + '_ {
+        self.map.iter().map(|(&(size, id), &seg)| (size, id, seg))
     }
 
-    /// Drain every entry (used by empty_cache / OOM recovery paths, which
-    /// re-examine blocks segment-by-segment).
-    pub fn drain_all(&mut self) -> Vec<(u64, BlockId)> {
-        self.cached_bytes = 0;
-        std::mem::take(&mut self.set).into_iter().collect()
+    /// The fully-free segments' blocks, `(size, BlockId)` ascending — the
+    /// order `empty_cache()` / OOM retry release them in.
+    pub fn fully_free(&self) -> impl Iterator<Item = (u64, BlockId, SegmentId)> + '_ {
+        self.fully_free
+            .iter()
+            .map(|(&(size, id), &seg)| (size, id, seg))
+    }
+
+    pub fn fully_free_len(&self) -> usize {
+        self.fully_free.len()
     }
 }
 
@@ -74,12 +109,16 @@ impl BlockPool {
 mod tests {
     use super::*;
 
+    fn seg(n: u32) -> SegmentId {
+        SegmentId(n)
+    }
+
     #[test]
     fn best_fit_picks_smallest_sufficient() {
         let mut p = BlockPool::new();
-        p.insert(512, BlockId(1));
-        p.insert(2048, BlockId(2));
-        p.insert(4096, BlockId(3));
+        p.insert(512, BlockId(1), seg(1), false);
+        p.insert(2048, BlockId(2), seg(2), false);
+        p.insert(4096, BlockId(3), seg(3), false);
         assert_eq!(p.best_fit(1024), Some((2048, BlockId(2))));
         assert_eq!(p.best_fit(2048), Some((2048, BlockId(2))));
         assert_eq!(p.best_fit(4097), None);
@@ -89,16 +128,16 @@ mod tests {
     #[test]
     fn ties_broken_by_block_id() {
         let mut p = BlockPool::new();
-        p.insert(1024, BlockId(9));
-        p.insert(1024, BlockId(3));
+        p.insert(1024, BlockId(9), seg(9), false);
+        p.insert(1024, BlockId(3), seg(3), false);
         assert_eq!(p.best_fit(100), Some((1024, BlockId(3))));
     }
 
     #[test]
     fn remove_updates_bytes() {
         let mut p = BlockPool::new();
-        p.insert(1024, BlockId(1));
-        p.insert(512, BlockId(2));
+        p.insert(1024, BlockId(1), seg(1), false);
+        p.insert(512, BlockId(2), seg(2), false);
         p.remove(1024, BlockId(1));
         assert_eq!(p.cached_bytes(), 512);
         assert_eq!(p.len(), 1);
@@ -108,19 +147,33 @@ mod tests {
     #[test]
     fn bounded_fit() {
         let mut p = BlockPool::new();
-        p.insert(64 << 20, BlockId(1)); // 64 MiB oversized block
+        p.insert(64 << 20, BlockId(1), seg(1), true); // 64 MiB oversized block
         assert!(p.best_fit_bounded(1 << 20, 32 << 20).is_none());
         assert!(p.best_fit_bounded(1 << 20, 64 << 20).is_some());
     }
 
     #[test]
-    fn drain_resets() {
+    fn fully_free_index_tracks_spanning_blocks() {
         let mut p = BlockPool::new();
-        p.insert(512, BlockId(1));
-        p.insert(1024, BlockId(2));
-        let drained = p.drain_all();
-        assert_eq!(drained.len(), 2);
-        assert!(p.is_empty());
-        assert_eq!(p.cached_bytes(), 0);
+        p.insert(2048, BlockId(1), seg(1), true);
+        p.insert(1024, BlockId(2), seg(2), false);
+        p.insert(512, BlockId(3), seg(3), true);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.fully_free_len(), 2);
+        // (size, id) ascending — identical to a full-scan release order.
+        let ff: Vec<_> = p.fully_free().collect();
+        assert_eq!(
+            ff,
+            vec![(512, BlockId(3), seg(3)), (2048, BlockId(1), seg(1))]
+        );
+        // Removing a spanning block clears it from both indexes.
+        p.remove(2048, BlockId(1));
+        assert_eq!(p.fully_free_len(), 1);
+        assert_eq!(p.len(), 2);
+        // Removing a non-spanning block leaves the fully-free index alone.
+        p.remove(1024, BlockId(2));
+        assert_eq!(p.fully_free_len(), 1);
+        assert_eq!(p.fully_free().next(), Some((512, BlockId(3), seg(3))));
     }
+
 }

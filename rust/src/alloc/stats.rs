@@ -68,6 +68,75 @@ impl StatSnapshot {
     }
 }
 
+/// Order-sensitive digest of a drained event log (event kinds, every
+/// field, and each event's point-in-time snapshot — `time_us` hashed by
+/// its exact bit pattern). Two logs share a fingerprint iff the allocator
+/// behaved identically op for op; the alloc golden tests pin the indexed
+/// allocator against the seed scan implementation with this, and the
+/// bench subsystem records it so perf work can't silently change results.
+pub fn fingerprint_events(events: &[(AllocEvent, StatSnapshot)]) -> u64 {
+    use crate::util::fasthash::FastHasher;
+    use std::hash::Hasher;
+    let mut h = FastHasher::default();
+    h.write_u64(events.len() as u64);
+    for (ev, snap) in events {
+        match *ev {
+            AllocEvent::Alloc {
+                requested,
+                rounded,
+                cache_hit,
+            } => {
+                h.write_u64(1);
+                h.write_u64(requested);
+                h.write_u64(rounded);
+                h.write_u64(cache_hit as u64);
+            }
+            AllocEvent::Free { size } => {
+                h.write_u64(2);
+                h.write_u64(size);
+            }
+            AllocEvent::CudaMalloc {
+                segment_bytes,
+                rounded,
+                frag_sample,
+            } => {
+                h.write_u64(3);
+                h.write_u64(segment_bytes);
+                h.write_u64(rounded);
+                h.write_u64(frag_sample);
+            }
+            AllocEvent::CudaFree { segment_bytes } => {
+                h.write_u64(4);
+                h.write_u64(segment_bytes);
+            }
+            AllocEvent::EmptyCache { segments, bytes } => {
+                h.write_u64(5);
+                h.write_u64(segments);
+                h.write_u64(bytes);
+            }
+            AllocEvent::OomRetry { released_bytes } => {
+                h.write_u64(6);
+                h.write_u64(released_bytes);
+            }
+            AllocEvent::GcReclaim { segments, bytes } => {
+                h.write_u64(7);
+                h.write_u64(segments);
+                h.write_u64(bytes);
+            }
+            AllocEvent::SegmentShrink { bytes } => {
+                h.write_u64(8);
+                h.write_u64(bytes);
+            }
+        }
+        h.write_u64(snap.reserved);
+        h.write_u64(snap.allocated);
+        h.write_u64(snap.requested);
+        h.write_u64(snap.time_us.to_bits());
+        h.write_u64(snap.phase as u64);
+    }
+    h.finish()
+}
+
 /// Observer of the allocator's event stream (the profiler implements
 /// this). Events are buffered inside the allocator while
 /// `set_event_recording(true)` is on; the replay loop drains them and
@@ -158,6 +227,30 @@ mod tests {
         s.sync(200, 180);
         assert_eq!(s.peak_reserved, 200);
         assert_eq!(s.peak_allocated, 180);
+    }
+
+    #[test]
+    fn event_fingerprint_is_order_and_field_sensitive() {
+        let snap = StatSnapshot::default();
+        let a = vec![
+            (
+                AllocEvent::Alloc {
+                    requested: 100,
+                    rounded: 512,
+                    cache_hit: false,
+                },
+                snap,
+            ),
+            (AllocEvent::Free { size: 512 }, snap),
+        ];
+        assert_eq!(fingerprint_events(&a), fingerprint_events(&a));
+        let mut reordered = a.clone();
+        reordered.reverse();
+        assert_ne!(fingerprint_events(&a), fingerprint_events(&reordered));
+        let mut tweaked = a.clone();
+        tweaked[0].1.reserved = 1;
+        assert_ne!(fingerprint_events(&a), fingerprint_events(&tweaked));
+        assert_ne!(fingerprint_events(&a), fingerprint_events(&a[..1]));
     }
 
     #[test]

@@ -1,6 +1,19 @@
-//! Mini benchmark harness (no `criterion` offline): warmup + timed
-//! iterations with summary statistics, plus helpers to print paper-style
-//! result blocks and dump JSON for EXPERIMENTS.md.
+//! The perf subsystem behind `rlhf-mem bench` and the `benches/*.rs`
+//! harnesses.
+//!
+//! * this module — a mini benchmark harness (no `criterion` offline):
+//!   warmup + timed iterations with summary statistics;
+//! * [`workloads`] — the canonical deterministic workloads whose counters
+//!   populate the repo's `BENCH_<n>.json` trajectory;
+//! * [`report`] — the `BENCH` JSON schema writer and the CI regression
+//!   gate's comparison logic (deterministic counters exact, wall time
+//!   within a generous tolerance).
+//!
+//! See DESIGN.md §13 for the methodology (what is deterministic vs timed,
+//! and the baseline-update procedure).
+
+pub mod report;
+pub mod workloads;
 
 use crate::util::stats::Summary;
 use std::time::Instant;

@@ -1,0 +1,307 @@
+//! The `BENCH_<n>.json` schema: writer, baseline comparison (the CI
+//! regression gate), and the shared emitter the `benches/*.rs` harnesses
+//! use so local `cargo bench` numbers and the CI `rlhf-mem bench` gate
+//! speak the same format.
+//!
+//! Schema (`rlhf-mem-bench-v1`): a document holds `index` (position in
+//! the repo's BENCH trajectory), `locked` (whether the CI gate enforces
+//! exact counter equality), `peak_rss_bytes`, and one entry per workload
+//! with a `deterministic` counter object (machine-independent — op
+//! counts, peaks, output fingerprints) and a `timed` object (`wall_s`,
+//! `ops_per_s` — machine-dependent, gated only by tolerance). See
+//! DESIGN.md §13 for the baseline-update procedure.
+
+use super::workloads::WorkloadRun;
+use super::BenchResult;
+use crate::util::json::Json;
+
+pub const SCHEMA: &str = "rlhf-mem-bench-v1";
+
+/// Render a suite run as one BENCH document.
+pub fn to_doc(index: u64, locked: bool, runs: &[WorkloadRun], peak_rss_bytes: u64) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("index", Json::from(index)),
+        ("locked", Json::from(locked)),
+        (
+            "regenerate",
+            Json::str(format!(
+                "cargo run --release -- bench --out BENCH_{index}.json --index {index} --lock"
+            )),
+        ),
+        ("peak_rss_bytes", Json::from(peak_rss_bytes)),
+        (
+            "workloads",
+            Json::Arr(runs.iter().map(workload_json).collect()),
+        ),
+    ])
+}
+
+fn workload_json(r: &WorkloadRun) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name)),
+        ("deterministic", r.deterministic.clone()),
+        ("ops", Json::from(r.ops)),
+        (
+            "timed",
+            Json::obj(vec![
+                ("wall_s", Json::from(r.wall_s)),
+                (
+                    "ops_per_s",
+                    Json::from(r.ops as f64 / r.wall_s.max(1e-9)),
+                ),
+            ]),
+        ),
+    ])
+}
+
+fn workloads_of(doc: &Json) -> Vec<(&str, &Json)> {
+    doc.get("workloads")
+        .and_then(|w| w.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|w| w.get("name").and_then(|n| n.as_str()).map(|n| (n, w)))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Compare a fresh BENCH document against a baseline: every baseline
+/// workload must exist in `current` with an **exactly equal**
+/// `deterministic` object, and its wall time must not exceed
+/// `baseline_wall × tolerance`. Returns the violations (empty = clean).
+/// Schema mismatches are errors, not violations.
+pub fn compare(current: &Json, baseline: &Json, tolerance: f64) -> Result<Vec<String>, String> {
+    for (label, doc) in [("current", current), ("baseline", baseline)] {
+        let schema = doc
+            .get("schema")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| format!("{label} document has no schema field"))?;
+        if schema != SCHEMA {
+            return Err(format!("{label} schema '{schema}' != '{SCHEMA}'"));
+        }
+    }
+    let cur = workloads_of(current);
+    let mut violations = Vec::new();
+    for (name, base_w) in workloads_of(baseline) {
+        let Some((_, cur_w)) = cur.iter().find(|(n, _)| *n == name) else {
+            violations.push(format!("workload '{name}' missing from current run"));
+            continue;
+        };
+        match (base_w.get("deterministic"), cur_w.get("deterministic")) {
+            (Some(b), Some(c)) if b == c => {}
+            (Some(b), Some(c)) => violations.push(format!(
+                "workload '{name}': deterministic counters diverged\n  baseline: {b}\n  current:  {c}"
+            )),
+            _ => violations.push(format!(
+                "workload '{name}': missing deterministic section"
+            )),
+        }
+        let base_wall = base_w.get("timed").and_then(|t| t.req_f64("wall_s").ok());
+        let cur_wall = cur_w.get("timed").and_then(|t| t.req_f64("wall_s").ok());
+        if let (Some(b), Some(c)) = (base_wall, cur_wall) {
+            if c > b * tolerance {
+                violations.push(format!(
+                    "workload '{name}': wall {c:.3}s exceeds baseline {b:.3}s × tolerance {tolerance}"
+                ));
+            }
+        }
+    }
+    Ok(violations)
+}
+
+/// Peak resident set size of this process (Linux `VmHWM`; 0 elsewhere).
+pub fn peak_rss_bytes() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|kb| kb.parse::<u64>().ok())
+        })
+        .map(|kb| kb * 1024)
+        .unwrap_or(0)
+}
+
+/// Next free index in a directory's `BENCH_<n>.json` trajectory.
+pub fn next_bench_index(dir: &str) -> u64 {
+    let mut max = 0u64;
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(n) = name
+                .strip_prefix("BENCH_")
+                .and_then(|rest| rest.strip_suffix(".json"))
+                .and_then(|digits| digits.parse::<u64>().ok())
+            {
+                max = max.max(n);
+            }
+        }
+    }
+    max + 1
+}
+
+/// One entry of a local `benches/*.rs` harness run.
+pub struct LocalEntry {
+    pub name: String,
+    /// Machine-independent counters, when the harness has them.
+    pub deterministic: Option<Json>,
+    /// Median per-iteration wall time, seconds.
+    pub wall_s: Option<f64>,
+    /// Throughput at the median, when an op count is known.
+    pub ops_per_s: Option<f64>,
+}
+
+impl LocalEntry {
+    /// From a timed [`BenchResult`] (median wall; throughput if the
+    /// per-iteration op count is known).
+    pub fn timed(result: &BenchResult, ops_per_iter: Option<f64>) -> LocalEntry {
+        LocalEntry {
+            name: result.name.clone(),
+            deterministic: None,
+            wall_s: Some(result.summary.median),
+            ops_per_s: ops_per_iter.map(|ops| ops / result.summary.median.max(1e-12)),
+        }
+    }
+
+    /// From deterministic counters only (harnesses that assert orderings
+    /// rather than time loops).
+    pub fn counters(name: impl Into<String>, deterministic: Json) -> LocalEntry {
+        LocalEntry {
+            name: name.into(),
+            deterministic: Some(deterministic),
+            wall_s: None,
+            ops_per_s: None,
+        }
+    }
+}
+
+/// Write a local harness's entries as one BENCH-schema document to
+/// `<dir>/<name>.json`, where `<dir>` is `$BENCH_JSON_DIR` if set, else
+/// `target/bench-json` (always keyed by harness name — a whole
+/// `cargo bench` run must not overwrite itself down to one file).
+/// Returns the path written, or an error string (harnesses print it and
+/// continue — local JSON is best-effort, the asserts are the gate).
+pub fn write_local(bench_name: &str, entries: &[LocalEntry]) -> Result<String, String> {
+    let dir = match std::env::var("BENCH_JSON_DIR") {
+        Ok(d) if !d.is_empty() => d,
+        _ => "target/bench-json".to_string(),
+    };
+    std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+    let path = format!("{dir}/{bench_name}.json");
+    let workloads: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            let mut fields = vec![("name".to_string(), Json::str(e.name.clone()))];
+            if let Some(d) = &e.deterministic {
+                fields.push(("deterministic".to_string(), d.clone()));
+            }
+            let mut timed = Vec::new();
+            if let Some(w) = e.wall_s {
+                timed.push(("wall_s".to_string(), Json::from(w)));
+            }
+            if let Some(t) = e.ops_per_s {
+                timed.push(("ops_per_s".to_string(), Json::from(t)));
+            }
+            if !timed.is_empty() {
+                fields.push(("timed".to_string(), Json::Obj(timed)));
+            }
+            Json::Obj(fields)
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("kind", Json::str("local-bench")),
+        ("name", Json::str(bench_name)),
+        ("peak_rss_bytes", Json::from(peak_rss_bytes())),
+        ("workloads", Json::Arr(workloads)),
+    ]);
+    std::fs::write(&path, doc.to_string_pretty()).map_err(|e| e.to_string())?;
+    Ok(path)
+}
+
+/// [`write_local`] + a one-line confirmation / warning on stdout — the
+/// tail call of every `benches/*.rs` harness.
+pub fn emit_local(bench_name: &str, entries: &[LocalEntry]) {
+    match write_local(bench_name, entries) {
+        Ok(path) => println!("bench JSON -> {path}"),
+        Err(e) => println!("bench JSON skipped ({e})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc_with(counters: u64, wall: f64) -> Json {
+        let runs = vec![WorkloadRun {
+            name: "w",
+            deterministic: Json::obj(vec![("count", Json::from(counters))]),
+            ops: 10,
+            wall_s: wall,
+        }];
+        to_doc(1, true, &runs, 0)
+    }
+
+    #[test]
+    fn doc_roundtrips_and_compares_clean() {
+        let doc = doc_with(7, 0.5);
+        let parsed = crate::util::json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+        assert!(compare(&parsed, &doc, 2.0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn counter_drift_is_a_violation() {
+        let base = doc_with(7, 0.5);
+        let cur = doc_with(8, 0.5);
+        let v = compare(&cur, &base, 2.0).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("deterministic counters diverged"), "{}", v[0]);
+    }
+
+    #[test]
+    fn wall_regression_beyond_tolerance_is_a_violation() {
+        let base = doc_with(7, 0.5);
+        let ok = doc_with(7, 0.9);
+        assert!(compare(&ok, &base, 2.0).unwrap().is_empty());
+        let slow = doc_with(7, 1.5);
+        let v = compare(&slow, &base, 2.0).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("exceeds baseline"), "{}", v[0]);
+    }
+
+    #[test]
+    fn missing_workload_is_a_violation() {
+        let base = doc_with(7, 0.5);
+        let empty = to_doc(1, false, &[], 0);
+        let v = compare(&empty, &base, 2.0).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("missing from current run"), "{}", v[0]);
+        // And an empty baseline gates nothing (the unlocked-seed state).
+        assert!(compare(&base, &empty, 2.0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn schema_mismatch_is_an_error() {
+        let base = doc_with(7, 0.5);
+        let bogus = Json::obj(vec![("schema", Json::str("other"))]);
+        assert!(compare(&base, &bogus, 2.0).is_err());
+    }
+
+    #[test]
+    fn next_index_scans_trajectory() {
+        let dir = std::env::temp_dir().join("rlhf-mem-bench-idx-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = dir.to_str().unwrap();
+        assert_eq!(next_bench_index(d), 1);
+        std::fs::write(dir.join("BENCH_3.json"), "{}").unwrap();
+        std::fs::write(dir.join("BENCH_7.json"), "{}").unwrap();
+        std::fs::write(dir.join("BENCH_x.json"), "{}").unwrap();
+        assert_eq!(next_bench_index(d), 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

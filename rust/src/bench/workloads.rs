@@ -1,0 +1,392 @@
+//! Canonical workloads behind `rlhf-mem bench`: the allocator micro and
+//! large-pool-churn loops, PPO trace generation, a Table-1 cell, an
+//! `advise` planner search, and a 4-GPU `cluster` sweep — one per layer
+//! of the speed stack.
+//!
+//! Each workload returns machine-independent **deterministic counters**
+//! (op counts, peaks, fingerprints of the exact outputs — seeded
+//! simulation, no wall-clock inputs) next to its measured wall time. The
+//! CI gate compares the counters exactly and the wall time within a
+//! generous tolerance, so a perf "optimization" that changes results
+//! cannot land silently (DESIGN.md §13).
+
+use crate::alloc::CachingAllocator;
+use crate::coordinator::schedule::{cluster_key, run_configs, ClusterConfig};
+use crate::coordinator::PlacementPlan;
+use crate::experiment::{run_scenario, RTX3090_HBM};
+use crate::frameworks::{FrameworkKind, FrameworkProfile};
+use crate::planner::{plan, Budget};
+use crate::policy::EmptyCachePolicy;
+use crate::rlhf::cost::GpuSpec;
+use crate::rlhf::models::RoleSet;
+use crate::rlhf::program::Algo;
+use crate::rlhf::sim::{build_trace, ScenarioMode, SimScenario};
+use crate::strategies::StrategyConfig;
+use crate::sweep::model_set_by_name;
+use crate::util::bytes::{GIB, KIB, MIB};
+use crate::util::fasthash::FastHasher;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use std::hash::Hasher;
+use std::time::Instant;
+
+/// One executed workload: deterministic counters + the timed side.
+pub struct WorkloadRun {
+    pub name: &'static str,
+    /// Machine-independent counters (compared exactly by the CI gate).
+    pub deterministic: Json,
+    /// Operations executed (throughput denominator).
+    pub ops: u64,
+    /// Measured wall time, seconds.
+    pub wall_s: f64,
+}
+
+/// The canonical suite, in execution order.
+pub const NAMES: &[&str] = &[
+    "alloc_micro",
+    "alloc_churn",
+    "trace_gen",
+    "table1_cell",
+    "advise_search",
+    "cluster_sweep",
+];
+
+/// Run one canonical workload by name.
+pub fn run_by_name(name: &str) -> Option<WorkloadRun> {
+    match name {
+        "alloc_micro" => Some(alloc_micro()),
+        "alloc_churn" => Some(alloc_churn()),
+        "trace_gen" => Some(trace_gen()),
+        "table1_cell" => Some(table1_cell()),
+        "advise_search" => Some(advise_search()),
+        "cluster_sweep" => Some(cluster_sweep()),
+        _ => None,
+    }
+}
+
+/// Run the whole canonical suite.
+pub fn run_all() -> Vec<WorkloadRun> {
+    NAMES
+        .iter()
+        .map(|n| run_by_name(n).expect("canonical workload"))
+        .collect()
+}
+
+/// Stable digest of a JSONL/JSON artifact, formatted for the BENCH schema.
+pub fn hash_text(text: &str) -> String {
+    let mut h = FastHasher::default();
+    h.write(text.as_bytes());
+    fmt_fingerprint(h.finish())
+}
+
+/// `u64` fingerprints don't fit losslessly in a JSON number — record them
+/// as fixed-width hex strings.
+pub fn fmt_fingerprint(fp: u64) -> String {
+    format!("0x{fp:016x}")
+}
+
+fn alloc_stat_counters(a: &CachingAllocator) -> Json {
+    let s = a.stats();
+    Json::obj(vec![
+        ("num_allocs", Json::from(s.num_allocs)),
+        ("num_frees", Json::from(s.num_frees)),
+        ("num_cache_hits", Json::from(s.num_cache_hits)),
+        ("num_cuda_mallocs", Json::from(s.num_cuda_mallocs)),
+        ("num_cuda_frees", Json::from(s.num_cuda_frees)),
+        ("num_empty_cache", Json::from(s.num_empty_cache)),
+        ("peak_reserved", Json::from(s.peak_reserved)),
+        ("peak_allocated", Json::from(s.peak_allocated)),
+        ("max_frag_sample", Json::from(s.max_frag_sample)),
+    ])
+}
+
+/// Allocator micro: the cache-hit ping-pong — the pool's O(log n) fast
+/// path with zero driver traffic after the first segment.
+pub fn alloc_micro() -> WorkloadRun {
+    const PAIRS: u64 = 100_000;
+    let t = Instant::now();
+    let mut a = CachingAllocator::with_default_config(GIB);
+    for _ in 0..PAIRS {
+        let h = a.alloc(64 * KIB).expect("micro alloc");
+        a.free(h);
+    }
+    let wall_s = t.elapsed().as_secs_f64();
+    a.validate().expect("micro validate");
+    WorkloadRun {
+        name: "alloc_micro",
+        deterministic: alloc_stat_counters(&a),
+        ops: PAIRS * 2,
+        wall_s,
+    }
+}
+
+/// Number of pinned large-pool segments the churn loop holds: each keeps
+/// a non-releasable cached block in the pool, so the seed allocator's
+/// `empty_cache` scan had this many entries to wade through per call.
+pub const CHURN_PINNED: u64 = 6_000;
+/// Churn iterations (one 32 MiB alloc/free pair each).
+pub const CHURN_ITERS: u64 = 8_000;
+/// `empty_cache` cadence within the churn loop.
+pub const CHURN_EMPTY_EVERY: u64 = 16;
+
+/// The large-pool churn: thousands of partially-used segments pin cached
+/// (but not releasable) blocks while a hot alloc/free/empty_cache loop
+/// runs on top. The fully-free-segment index makes each `empty_cache`
+/// proportional to the one segment it releases; the seed allocator
+/// scanned all `CHURN_PINNED + 1` pool entries (and every driver segment
+/// slot) per call. `benches/allocator_micro.rs` times this same loop —
+/// the ≥2× allocator-op throughput acceptance workload.
+pub fn large_pool_churn() -> CachingAllocator {
+    // 6000 × 20 MiB ≈ 117 GiB of simulated segments: accounting only, no
+    // real memory behind it.
+    let mut a = CachingAllocator::with_default_config(256 * GIB);
+    let mut pinned = Vec::with_capacity(CHURN_PINNED as usize);
+    for _ in 0..CHURN_PINNED {
+        // < 10 MiB ⇒ a 20 MiB buffer per request: ~9 MiB live plus a
+        // ~11 MiB cached split remainder that never becomes fully free.
+        pinned.push(a.alloc(9 * MIB + 512).expect("churn setup"));
+    }
+    for i in 0..CHURN_ITERS {
+        let h = a.alloc(32 * MIB).expect("churn alloc");
+        a.free(h);
+        if i % CHURN_EMPTY_EVERY == CHURN_EMPTY_EVERY - 1 {
+            a.empty_cache();
+        }
+    }
+    for h in pinned {
+        a.free(h);
+    }
+    a.empty_cache();
+    assert_eq!(a.reserved(), 0, "churn must drain to zero");
+    a
+}
+
+/// Ops per [`large_pool_churn`] call (allocs + frees + empty_caches).
+pub fn large_pool_churn_ops() -> u64 {
+    let pairs = CHURN_PINNED + CHURN_ITERS;
+    2 * pairs + CHURN_ITERS / CHURN_EMPTY_EVERY + 1
+}
+
+pub fn alloc_churn() -> WorkloadRun {
+    let t = Instant::now();
+    let a = large_pool_churn();
+    let wall_s = t.elapsed().as_secs_f64();
+    WorkloadRun {
+        name: "alloc_churn",
+        deterministic: alloc_stat_counters(&a),
+        ops: large_pool_churn_ops(),
+        wall_s,
+    }
+}
+
+/// PPO trace generation (the PhaseProgram interpreter's hot path).
+pub fn trace_gen() -> WorkloadRun {
+    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+    scn.steps = 2;
+    let t = Instant::now();
+    let trace = build_trace(&scn);
+    let wall_s = t.elapsed().as_secs_f64();
+    WorkloadRun {
+        name: "trace_gen",
+        deterministic: Json::obj(vec![
+            ("trace_ops", Json::from(trace.len())),
+            (
+                "trace_fingerprint",
+                Json::str(fmt_fingerprint(trace.fingerprint())),
+            ),
+        ]),
+        ops: trace.len() as u64,
+        wall_s,
+    }
+}
+
+/// One Table-1 cell end to end: trace generation + allocator replay +
+/// profiling on the paper's RTX-3090 capacity.
+pub fn table1_cell() -> WorkloadRun {
+    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+    scn.steps = 3;
+    let t = Instant::now();
+    let res = run_scenario(&scn, RTX3090_HBM);
+    let wall_s = t.elapsed().as_secs_f64();
+    let s = &res.summary;
+    WorkloadRun {
+        name: "table1_cell",
+        deterministic: Json::obj(vec![
+            ("peak_reserved", Json::from(s.peak_reserved)),
+            ("peak_allocated", Json::from(s.peak_allocated)),
+            ("frag", Json::from(s.frag)),
+            ("cuda_mallocs", Json::from(s.cuda_mallocs)),
+            ("oom", Json::from(s.oom)),
+            ("ops_executed", Json::from(res.replay.ops_executed)),
+        ]),
+        ops: res.replay.ops_executed as u64,
+        wall_s,
+    }
+}
+
+/// A full `advise` planner search over the paper's RTX-3090 budget
+/// (2 workers — parallelism exercised, output jobs-independent).
+pub fn advise_search() -> WorkloadRun {
+    let budget = Budget::rtx3090_table1();
+    let t = Instant::now();
+    let report = plan(&budget, 2).expect("advise search");
+    let wall_s = t.elapsed().as_secs_f64();
+    let best = report
+        .best()
+        .map(|o| o.candidate.key())
+        .unwrap_or_else(|| "none".to_string());
+    WorkloadRun {
+        name: "advise_search",
+        deterministic: Json::obj(vec![
+            ("candidates", Json::from(report.outcomes.len())),
+            (
+                "feasible",
+                Json::from(report.outcomes.iter().filter(|o| o.feasible).count()),
+            ),
+            ("best", Json::str(best)),
+            ("jsonl_fingerprint", Json::str(hash_text(&report.jsonl()))),
+        ]),
+        ops: report.outcomes.len() as u64,
+        wall_s,
+    }
+}
+
+/// A 4-GPU cluster placement sweep (colocated vs dedicated × none/zero3),
+/// exercising per-GPU trace generation, collectives and aggregation.
+pub fn cluster_sweep() -> WorkloadRun {
+    let kind = FrameworkKind::by_name("ds").expect("ds framework");
+    let profile = FrameworkProfile::by_kind(kind);
+    let (_mlabel, models) = model_set_by_name("opt").expect("opt models");
+    let world = 4u64;
+    let mut configs: Vec<ClusterConfig> = Vec::new();
+    for plan_name in ["colocated", "dedicated"] {
+        let placement = PlacementPlan::by_name(plan_name, world).expect("placement preset");
+        for (label, strategy) in [
+            ("none", StrategyConfig::none()),
+            ("zero3", StrategyConfig::zero3()),
+        ] {
+            if !profile.supports(&strategy) {
+                continue;
+            }
+            let base = SimScenario {
+                framework: profile.clone(),
+                models: models.clone(),
+                strategy,
+                world,
+                policy: EmptyCachePolicy::Never,
+                steps: 1,
+                mode: ScenarioMode::Full,
+                algo: Algo::Ppo,
+                gpu: GpuSpec::rtx3090(),
+                seed: 0x5EED,
+                len_jitter: kind.default_len_jitter(),
+                roles: RoleSet::ALL,
+                time_shared: RoleSet::EMPTY,
+                rank: 0,
+            };
+            configs.push(ClusterConfig {
+                key: cluster_key(world, &placement.name, label, Algo::Ppo),
+                strategy_label: label.to_string(),
+                plan: placement.clone(),
+                base,
+            });
+        }
+    }
+    let t = Instant::now();
+    let batch = run_configs(&configs, 24 * GIB, 2).expect("cluster sweep");
+    let wall_s = t.elapsed().as_secs_f64();
+    let runs: Vec<(String, crate::coordinator::ClusterRun)> = configs
+        .iter()
+        .map(|c| c.key.clone())
+        .zip(batch.runs)
+        .collect();
+    let ooms = runs.iter().filter(|(_, r)| r.oom()).count();
+    WorkloadRun {
+        name: "cluster_sweep",
+        deterministic: Json::obj(vec![
+            ("configurations", Json::from(runs.len())),
+            ("gpu_traces", Json::from(batch.cells)),
+            ("ooms", Json::from(ooms)),
+            (
+                "jsonl_fingerprint",
+                Json::str(hash_text(&crate::report::cluster::jsonl(&runs))),
+            ),
+        ]),
+        ops: batch.cells as u64,
+        wall_s,
+    }
+}
+
+/// A fast deterministic churn used by `--smoke` and tests: same shape as
+/// [`large_pool_churn`], two orders of magnitude smaller.
+pub fn smoke_churn_counters() -> Json {
+    let mut a = CachingAllocator::with_default_config(8 * GIB);
+    let mut rng = Rng::seeded(0x5EED);
+    let mut live = Vec::new();
+    for _ in 0..64 {
+        live.push(a.alloc(9 * MIB + 512).expect("smoke setup"));
+    }
+    for i in 0..400u64 {
+        if live.is_empty() || rng.bernoulli(0.6) {
+            if let Ok(h) = a.alloc(rng.gen_range(24 * MIB) + MIB) {
+                live.push(h);
+            }
+        } else {
+            let i = rng.range_usize(0, live.len());
+            a.free(live.swap_remove(i));
+        }
+        if i % 50 == 49 {
+            a.empty_cache();
+        }
+    }
+    for h in live {
+        a.free(h);
+    }
+    a.empty_cache();
+    a.validate().expect("smoke churn validate");
+    alloc_stat_counters(&a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_micro_counters_are_exact() {
+        let w = alloc_micro();
+        let d = &w.deterministic;
+        assert_eq!(d.req_u64("num_allocs").unwrap(), 100_000);
+        assert_eq!(d.req_u64("num_frees").unwrap(), 100_000);
+        // Everything after the first alloc is a cache hit of the same block.
+        assert_eq!(d.req_u64("num_cache_hits").unwrap(), 99_999);
+        assert_eq!(d.req_u64("num_cuda_mallocs").unwrap(), 1);
+        assert!(w.wall_s > 0.0);
+    }
+
+    #[test]
+    fn churn_is_deterministic_and_release_heavy() {
+        let a = large_pool_churn();
+        let b = large_pool_churn();
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa.num_cuda_mallocs, sb.num_cuda_mallocs);
+        assert_eq!(sa.peak_reserved, sb.peak_reserved);
+        assert_eq!(sa.max_frag_sample, sb.max_frag_sample);
+        // The churn loop's empty_cache calls must actually release the
+        // churned segment each time (the indexed release path's work).
+        assert_eq!(sa.num_empty_cache, CHURN_ITERS / CHURN_EMPTY_EVERY + 1);
+        assert!(sa.num_cuda_frees >= CHURN_ITERS / CHURN_EMPTY_EVERY);
+    }
+
+    #[test]
+    fn trace_gen_fingerprint_stable_within_process() {
+        let a = trace_gen();
+        let b = trace_gen();
+        assert_eq!(a.deterministic, b.deterministic);
+        assert!(a.ops > 100);
+    }
+
+    #[test]
+    fn smoke_churn_is_deterministic() {
+        assert_eq!(smoke_churn_counters(), smoke_churn_counters());
+    }
+}

@@ -1,0 +1,255 @@
+//! `rlhf-mem bench` — the perf subsystem's front end: run the canonical
+//! workload suite, emit a `BENCH_<n>.json` trajectory point, gate against
+//! a committed baseline, or run the consolidated CI smoke suite.
+//!
+//! ```text
+//! rlhf-mem bench                          # run suite, write next BENCH_<n>.json
+//! rlhf-mem bench --check BENCH_5.json     # CI gate: determinism + baseline
+//! rlhf-mem bench --smoke --out-dir bench-artifacts
+//! ```
+//!
+//! The gate is two-layered (DESIGN.md §13): the suite always runs twice
+//! under `--check` and the two runs' deterministic counters must agree
+//! **exactly** (hard, machine-independent); against the baseline,
+//! counters must match exactly and wall time stay within `--tolerance`
+//! when the baseline is `locked`, and differences are reported without
+//! failing while it is not.
+
+use rlhf_mem::bench::{report, workloads};
+use rlhf_mem::util::cli::Args;
+use rlhf_mem::util::json::{self, Json};
+use std::time::Instant;
+
+pub const BENCH_USAGE: &str = "\
+rlhf-mem bench — run the canonical perf workloads and record/gate the
+BENCH_<n>.json trajectory
+
+FLAGS:
+  --out FILE       write the BENCH JSON here (default: next BENCH_<n>.json
+                   in the current directory; a --check run without --out
+                   writes nothing — gate runs don't grow the trajectory)
+  --index N        trajectory index recorded in the document (default:
+                   inferred from the output path / directory scan)
+  --lock           mark the emitted document locked (counters become a
+                   hard CI gate when committed as the baseline)
+  --check FILE     regression gate: run the suite twice (determinism is
+                   always enforced), then compare against FILE —
+                   deterministic counters exactly, wall time within
+                   --tolerance; mismatches fail only if FILE is locked
+  --tolerance X    wall-clock slack factor for --check (default 5.0)
+  --smoke          run the consolidated CI smoke suite instead (cluster +
+                   advise + algos, each writing its JSONL artifact)
+  --out-dir DIR    smoke artifact directory (default bench-artifacts)
+";
+
+pub fn run(args: &Args) -> Result<(), String> {
+    if args.bool_flag("help") {
+        println!("{BENCH_USAGE}");
+        return Ok(());
+    }
+    if args.bool_flag("smoke") {
+        return run_smoke(args);
+    }
+
+    let suite_start = Instant::now();
+    println!(
+        "bench: running {} canonical workloads",
+        workloads::NAMES.len()
+    );
+    let runs = run_suite();
+
+    // Emit the fresh document *before* any gating, so CI's artifact
+    // upload has it even when the gate fails — that failing document is
+    // exactly what the DESIGN §13 lock-from-CI procedure commits. A pure
+    // gate run (no --out) writes nothing: auto-indexed trajectory files
+    // are only for explicit recording runs.
+    let explicit_out = args.flag("out").map(|s| s.to_string());
+    let write_out = explicit_out.is_some() || !args.has("check");
+    let out = match explicit_out {
+        Some(p) => p,
+        None => format!("BENCH_{}.json", report::next_bench_index(".")),
+    };
+    let index = match args.flag("index") {
+        Some(_) => args.get_u64("index", 0)?,
+        None => infer_index(&out).unwrap_or_else(|| report::next_bench_index(".")),
+    };
+    let doc = report::to_doc(
+        index,
+        args.bool_flag("lock"),
+        &runs,
+        report::peak_rss_bytes(),
+    );
+    if write_out {
+        std::fs::write(&out, doc.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    }
+
+    println!("\n{:<16} {:>12} {:>12}  deterministic", "workload", "wall", "ops/s");
+    for r in &runs {
+        println!(
+            "{:<16} {:>11.3}s {:>12.0}  {}",
+            r.name,
+            r.wall_s,
+            r.ops as f64 / r.wall_s.max(1e-9),
+            r.deterministic
+        );
+    }
+    if write_out {
+        println!(
+            "wrote {out} (index {index}, suite wall {:.2}s, peak RSS {} MiB)",
+            suite_start.elapsed().as_secs_f64(),
+            report::peak_rss_bytes() / (1 << 20)
+        );
+    } else {
+        println!(
+            "(suite wall {:.2}s, peak RSS {} MiB; no --out given — nothing written)",
+            suite_start.elapsed().as_secs_f64(),
+            report::peak_rss_bytes() / (1 << 20)
+        );
+    }
+
+    if let Some(baseline_path) = args.flag("check") {
+        // Layer 1 — determinism: a second in-process run must reproduce
+        // every deterministic counter bit for bit. Machine-independent,
+        // so it gates from the very first CI run.
+        println!("bench: determinism self-check (second suite run)");
+        let rerun = run_suite();
+        for (a, b) in runs.iter().zip(&rerun) {
+            if a.deterministic != b.deterministic {
+                return Err(format!(
+                    "workload '{}' is nondeterministic across two in-process runs\n  \
+                     first:  {}\n  second: {}",
+                    a.name, a.deterministic, b.deterministic
+                ));
+            }
+        }
+        println!("bench: determinism self-check clean");
+
+        // Layer 2 — the committed baseline.
+        let tolerance = args.get_f64("tolerance", 5.0)?;
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| format!("read {baseline_path}: {e}"))?;
+        let baseline = json::parse(&text).map_err(|e| format!("parse {baseline_path}: {e}"))?;
+        let locked = baseline
+            .get("locked")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+        let violations = report::compare(&doc, &baseline, tolerance)?;
+        if violations.is_empty() {
+            println!("bench gate: clean vs {baseline_path} (tolerance {tolerance}x)");
+        } else {
+            for v in &violations {
+                eprintln!("bench gate: {v}");
+            }
+            if locked {
+                return Err(format!(
+                    "{} regression(s) vs locked baseline {baseline_path}",
+                    violations.len()
+                ));
+            }
+            println!(
+                "bench gate: baseline {baseline_path} is not locked — {} difference(s) \
+                 recorded, not gated. Lock it by committing the freshly emitted \
+                 document (see its 'regenerate' field).",
+                violations.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_suite() -> Vec<workloads::WorkloadRun> {
+    workloads::NAMES
+        .iter()
+        .map(|name| {
+            let r = workloads::run_by_name(name).expect("canonical workload");
+            println!("  {:<16} {:>9.3}s  {} ops", r.name, r.wall_s, r.ops);
+            r
+        })
+        .collect()
+}
+
+/// `BENCH_<n>.json` → `n`.
+fn infer_index(path: &str) -> Option<u64> {
+    std::path::Path::new(path)
+        .file_name()?
+        .to_str()?
+        .strip_prefix("BENCH_")?
+        .strip_suffix(".json")?
+        .parse()
+        .ok()
+}
+
+/// The consolidated smoke suite: what used to be three copy-pasted CI
+/// steps (cluster / advise / algos) becomes one invocation whose JSONL
+/// artifacts land in `--out-dir`, plus a `BENCH_smoke.json` summary with
+/// a fingerprint per artifact.
+fn run_smoke(args: &Args) -> Result<(), String> {
+    let out_dir = args.get_or("out-dir", "bench-artifacts").to_string();
+    std::fs::create_dir_all(&out_dir).map_err(|e| format!("create {out_dir}: {e}"))?;
+
+    let smokes: Vec<(&str, Vec<String>)> = vec![
+        (
+            "cluster",
+            argv(&[
+                "cluster", "--gpus", "2", "--strategies", "none", "--algos", "ppo,grpo",
+                "--steps", "1", "--jobs", "2", "--jsonl",
+                &format!("{out_dir}/cluster-smoke.jsonl"),
+            ]),
+        ),
+        (
+            "advise",
+            argv(&[
+                "advise", "--budget", "examples/budget_rtx3090.json", "--jobs", "2",
+                "--top", "3", "--jsonl", &format!("{out_dir}/advise-smoke.jsonl"),
+            ]),
+        ),
+        (
+            "algos",
+            argv(&[
+                "algos", "--strategies", "none", "--steps", "1", "--jobs", "2",
+                "--jsonl", &format!("{out_dir}/algos-smoke.jsonl"),
+            ]),
+        ),
+    ];
+
+    let mut artifacts: Vec<Json> = Vec::new();
+    for (name, raw) in smokes {
+        println!("== smoke: {name} ==");
+        let sub = Args::parse(raw);
+        match sub.subcommand.as_deref() {
+            Some("cluster") => super::cluster::run(&sub)?,
+            Some("advise") => super::advise::run(&sub)?,
+            Some("algos") => super::algos::run(&sub)?,
+            _ => unreachable!("smoke table names a known subcommand"),
+        }
+        let path = format!("{out_dir}/{name}-smoke.jsonl");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("smoke '{name}' left no artifact at {path}: {e}"))?;
+        if text.trim().is_empty() {
+            return Err(format!("smoke '{name}' wrote an empty artifact at {path}"));
+        }
+        artifacts.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("path", Json::str(path)),
+            ("lines", Json::from(text.lines().count())),
+            ("fingerprint", Json::str(workloads::hash_text(&text))),
+        ]));
+    }
+
+    let summary = Json::obj(vec![
+        ("schema", Json::str(report::SCHEMA)),
+        ("kind", Json::str("smoke")),
+        ("alloc_churn_small", workloads::smoke_churn_counters()),
+        ("artifacts", Json::Arr(artifacts)),
+        ("peak_rss_bytes", Json::from(report::peak_rss_bytes())),
+    ]);
+    let summary_path = format!("{out_dir}/BENCH_smoke.json");
+    std::fs::write(&summary_path, summary.to_string_pretty())
+        .map_err(|e| format!("write {summary_path}: {e}"))?;
+    println!("smoke suite clean; summary -> {summary_path}");
+    Ok(())
+}
+
+fn argv(parts: &[&str]) -> Vec<String> {
+    parts.iter().map(|s| s.to_string()).collect()
+}

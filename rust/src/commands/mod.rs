@@ -6,6 +6,7 @@
 pub mod ablation;
 pub mod advise;
 pub mod algos;
+pub mod bench;
 pub mod cluster;
 pub mod debug;
 pub mod genablation;

@@ -27,6 +27,9 @@ SUBCOMMANDS:
   advise       Search the mitigation space for the cheapest config that
                fits a GPU budget; --cluster searches placements instead
                (see `advise --help`)
+  bench        Run the canonical perf workloads: record a BENCH_<n>.json
+               trajectory point, gate against a baseline (--check), or
+               run the CI smoke suite (--smoke; see `bench --help`)
   train        Real end-to-end PPO via PJRT artifacts (needs --features pjrt)
   quickstart   Tiny profiled RLHF run (fast smoke)
   profile      Run a user-defined experiment from a JSON config
@@ -53,6 +56,7 @@ fn main() {
         Some("algos") => commands::algos::run(&args),
         Some("cluster") => commands::cluster::run(&args),
         Some("advise") => commands::advise::run(&args),
+        Some("bench") => commands::bench::run(&args),
         Some("train") => run_train(&args),
         Some("quickstart") => commands::quickstart::run(&args),
         Some("debug") => commands::debug::run(&args),

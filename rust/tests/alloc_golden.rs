@@ -1,0 +1,90 @@
+//! Event-log golden tests for the indexed allocator core.
+//!
+//! The PR that introduced the per-pool size-indexed free maps and the
+//! fully-free-segment index promised **zero behavioral drift**: every
+//! sweep, planner and cluster number must come out identical to the seed
+//! scan-based allocator. These tests execute that promise against the
+//! embedded pre-refactor oracle (`support/oracle.rs`, the seed allocator
+//! verbatim): identical drained `(AllocEvent, StatSnapshot)` logs —
+//! element for element, fingerprint for fingerprint, with bit-identical
+//! simulated time — over random op streams, OOM-retry regimes, and real
+//! PPO/GRPO/DPO traces, plus determinism of the fingerprint itself.
+
+#[path = "support/oracle.rs"]
+#[allow(dead_code)]
+mod oracle;
+
+use oracle::{assert_equivalent, assert_equivalent_on_trace};
+use rlhf_mem::alloc::AllocatorConfig;
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::program::Algo;
+use rlhf_mem::rlhf::sim::{build_trace, SimScenario};
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::util::bytes::{GIB, MIB};
+
+#[test]
+fn indexed_allocator_matches_oracle_on_random_streams() {
+    // Roomy device: cache grows large, empty_cache has real work.
+    assert_equivalent(&AllocatorConfig::default(), 4 * GIB, 0xA110C, 4_000, "roomy");
+    // Tight device: the OOM-retry release cascade fires regularly.
+    assert_equivalent(&AllocatorConfig::default(), 320 * MIB, 0xBEEF, 4_000, "tight");
+    // Brutal device: frequent hard OOMs surface through both identically.
+    assert_equivalent(&AllocatorConfig::default(), 96 * MIB, 0x0DD5, 2_000, "brutal");
+}
+
+// (The `max_split_size` × `expandable_segments` × `gc_threshold` knob
+// grid is pinned against the oracle in `alloc_property.rs`, next to the
+// knob grid's own invariant property tests.)
+
+#[test]
+fn indexed_allocator_matches_oracle_on_rlhf_traces() {
+    // The Table-1 inner loop: a full PPO trace on the paper's RTX-3090
+    // capacity, with the §3.3 mitigation enabled so EmptyCache trace ops
+    // exercise the indexed release path mid-pipeline.
+    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::AfterBoth);
+    scn.steps = 2;
+    let trace = build_trace(&scn);
+    assert_equivalent_on_trace(&AllocatorConfig::default(), 24 * GIB, &trace, "ds-opt/ppo");
+
+    // A critic-free and a preference-only pipeline, ZeRO-3.
+    for algo in [Algo::Grpo, Algo::Dpo] {
+        let mut scn =
+            SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::AfterInference);
+        scn.steps = 1;
+        scn.algo = algo;
+        let trace = build_trace(&scn);
+        let label = format!("ds-opt/{}", algo.name());
+        assert_equivalent_on_trace(&AllocatorConfig::default(), 24 * GIB, &trace, &label);
+    }
+
+    // An undersized device: the trace OOMs; both allocators must OOM on
+    // the same op with the same event history.
+    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+    scn.steps = 1;
+    let trace = build_trace(&scn);
+    assert_equivalent_on_trace(&AllocatorConfig::default(), 4 * GIB, &trace, "ds-opt/oom");
+
+    // Allocator knobs over a real trace (the planner's candidate space).
+    let knobbed = AllocatorConfig {
+        expandable_segments: true,
+        garbage_collection_threshold: Some(0.8),
+        ..AllocatorConfig::default()
+    };
+    let mut scn = SimScenario::colossal_opt(StrategyConfig::zero3(), EmptyCachePolicy::AfterBoth);
+    scn.steps = 1;
+    let trace = build_trace(&scn);
+    assert_equivalent_on_trace(&knobbed, 24 * GIB, &trace, "cc-opt/knobbed");
+}
+
+#[test]
+fn equivalence_fingerprint_is_deterministic() {
+    // Same config + seed ⇒ same shared fingerprint: the property that
+    // lets `rlhf-mem bench` record event fingerprints as exact-match
+    // counters in BENCH_<n>.json.
+    let run = || assert_equivalent(&AllocatorConfig::default(), GIB, 0x5EED, 1_500, "fp");
+    let a = run();
+    let b = run();
+    assert_eq!(a.fingerprint, b.fingerprint);
+    assert_eq!(a.events, b.events);
+    assert!(a.events > 0, "workload must emit events");
+}

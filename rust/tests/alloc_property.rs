@@ -11,6 +11,10 @@ use rlhf_mem::alloc::{AllocId, AllocatorConfig, CachingAllocator};
 use rlhf_mem::util::bytes::{GIB, KIB, MIB};
 use rlhf_mem::util::prng::Rng;
 
+#[path = "support/oracle.rs"]
+#[allow(dead_code)]
+mod oracle;
+
 /// Every knob combination the planner searches, plus the untuned default.
 fn knob_grid() -> Vec<AllocatorConfig> {
     let mut cfgs = Vec::new();
@@ -110,6 +114,23 @@ fn knob_streams_are_deterministic() {
             )
         };
         assert_eq!(run(cfg.clone()), run(cfg.clone()), "{}", cfg.knob_label());
+    }
+}
+
+#[test]
+fn knob_grid_matches_pre_refactor_oracle() {
+    // Allocator-equivalence property: for every knob combination the
+    // planner searches, the indexed allocator's drained
+    // `(AllocEvent, StatSnapshot)` log must match the pre-refactor seed
+    // oracle element for element (same fingerprint, same peak/frag
+    // stats, bit-identical simulated time), and both must `validate()`.
+    // The lockstep harness lives in `support/oracle.rs`.
+    for cfg in knob_grid() {
+        for seed in [0xDEC0DE, 0xFACADE] {
+            let label = format!("oracle/{}/seed{seed:x}", cfg.knob_label());
+            let eq = oracle::assert_equivalent(&cfg, GIB, seed, 1_200, &label);
+            assert!(eq.events > 0, "[{label}] stream must emit events");
+        }
     }
 }
 

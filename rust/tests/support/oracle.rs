@@ -1,0 +1,1025 @@
+//! The **pre-index oracle**: the seed allocator (commit `d408984`,
+//! `rust/src/alloc/{pool,allocator}.rs`) preserved verbatim — linear
+//! release scans and all — plus a lockstep harness that drives it and the
+//! indexed [`CachingAllocator`] through identical op streams and asserts
+//! their drained `(AllocEvent, StatSnapshot)` logs are element-for-element
+//! identical (same fingerprint, same peaks, same fragmentation, same
+//! bit-exact simulated time).
+//!
+//! This is the same pinning strategy `rust/tests/sim_golden.rs` used for
+//! the PhaseProgram refactor: the replaced implementation lives on inside
+//! the test as a hand-carried oracle, so behavior identity is *executed*,
+//! not asserted from memory. Only mechanical adaptations were made to the
+//! copy: crate-path imports, `BlockPool` → `OraclePool`,
+//! `CachingAllocator` → `OracleAllocator`; every algorithmic line is the
+//! seed's.
+//!
+//! Shared (via `#[path]`) by `alloc_golden.rs` and `alloc_property.rs`.
+
+use rlhf_mem::alloc::block::{Block, BlockId, BlockSlab, BlockState, NO_BLOCK};
+use rlhf_mem::alloc::config::{AllocatorConfig, PoolKind};
+use rlhf_mem::alloc::driver::{SegmentId, SimDriver};
+use rlhf_mem::alloc::stats::{AllocEvent, AllocStats, PhaseTag, StatSnapshot};
+use rlhf_mem::alloc::{fingerprint_events, AllocError, AllocId, CachingAllocator};
+use rlhf_mem::trace::{Trace, TraceOp};
+use rlhf_mem::util::bytes::{round_down, round_up, KIB, MIB};
+use rlhf_mem::util::fasthash::FastMap;
+use rlhf_mem::util::prng::Rng;
+use std::collections::BTreeSet;
+use std::ops::Bound;
+
+/// The seed free-block pool: one size-ordered set, no fully-free index —
+/// `empty_cache` discovers releasable segments by scanning every entry.
+#[derive(Debug, Default, Clone)]
+pub struct OraclePool {
+    set: BTreeSet<(u64, BlockId)>,
+    cached_bytes: u64,
+}
+
+impl OraclePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, size: u64, id: BlockId) {
+        let fresh = self.set.insert((size, id));
+        debug_assert!(fresh, "block {id:?} already pooled");
+        self.cached_bytes += size;
+    }
+
+    pub fn remove(&mut self, size: u64, id: BlockId) {
+        let was = self.set.remove(&(size, id));
+        debug_assert!(was, "block {id:?} not in pool");
+        self.cached_bytes -= size;
+    }
+
+    pub fn best_fit(&self, want: u64) -> Option<(u64, BlockId)> {
+        self.set
+            .range((Bound::Included((want, BlockId(0))), Bound::Unbounded))
+            .next()
+            .copied()
+    }
+
+    pub fn best_fit_bounded(&self, want: u64, max: u64) -> Option<(u64, BlockId)> {
+        self.best_fit(want).filter(|(sz, _)| *sz <= max)
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    pub fn cached_bytes(&self) -> u64 {
+        self.cached_bytes
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(u64, BlockId)> {
+        self.set.iter()
+    }
+}
+
+fn pool_idx(kind: PoolKind) -> usize {
+    match kind {
+        PoolKind::Small => 0,
+        PoolKind::Large => 1,
+    }
+}
+
+/// The seed `CachingAllocator`, verbatim (see module docs).
+pub struct OracleAllocator {
+    cfg: AllocatorConfig,
+    driver: SimDriver,
+    slab: BlockSlab,
+    small: OraclePool,
+    large: OraclePool,
+    live: FastMap<u64, BlockId>,
+    next_handle: u64,
+    seg_heads: FastMap<SegmentId, BlockId>,
+    expandable: [Option<SegmentId>; 2],
+    tick: u64,
+    seg_last_use: FastMap<SegmentId, u64>,
+    stats: AllocStats,
+    phase: PhaseTag,
+    record_events: bool,
+    events: Vec<(AllocEvent, StatSnapshot)>,
+}
+
+impl OracleAllocator {
+    pub fn new(capacity: u64, cfg: AllocatorConfig) -> Self {
+        let driver = SimDriver::new(capacity, cfg.cost.clone());
+        OracleAllocator {
+            cfg,
+            driver,
+            slab: BlockSlab::new(),
+            small: OraclePool::new(),
+            large: OraclePool::new(),
+            live: FastMap::default(),
+            next_handle: 1,
+            seg_heads: FastMap::default(),
+            expandable: [None, None],
+            tick: 0,
+            seg_last_use: FastMap::default(),
+            stats: AllocStats::default(),
+            phase: 0,
+            record_events: false,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn set_event_recording(&mut self, on: bool) {
+        self.record_events = on;
+    }
+
+    pub fn drain_events_into(&mut self, out: &mut Vec<(AllocEvent, StatSnapshot)>) {
+        out.append(&mut self.events);
+    }
+
+    pub fn set_phase(&mut self, phase: PhaseTag) {
+        self.phase = phase;
+    }
+
+    pub fn stats(&self) -> &AllocStats {
+        &self.stats
+    }
+
+    pub fn reserved(&self) -> u64 {
+        self.driver.reserved()
+    }
+
+    pub fn allocated(&self) -> u64 {
+        self.stats.allocated
+    }
+
+    pub fn time_us(&self) -> f64 {
+        self.stats.time_us + self.driver.time_us
+    }
+
+    pub fn snapshot(&self) -> StatSnapshot {
+        StatSnapshot {
+            reserved: self.driver.reserved(),
+            allocated: self.stats.allocated,
+            requested: self.stats.requested,
+            time_us: self.time_us(),
+            phase: self.phase,
+        }
+    }
+
+    fn emit(&mut self, ev: AllocEvent) {
+        if self.record_events {
+            let snap = self.snapshot();
+            self.events.push((ev, snap));
+        }
+    }
+
+    fn pool(&mut self, kind: PoolKind) -> &mut OraclePool {
+        match kind {
+            PoolKind::Small => &mut self.small,
+            PoolKind::Large => &mut self.large,
+        }
+    }
+
+    pub fn pool_cached_bytes(&self, kind: PoolKind) -> u64 {
+        match kind {
+            PoolKind::Small => self.small.cached_bytes(),
+            PoolKind::Large => self.large.cached_bytes(),
+        }
+    }
+
+    pub fn alloc(&mut self, requested: u64) -> Result<AllocId, AllocError> {
+        assert!(requested > 0, "alloc(0)");
+        let rounded = self.cfg.round_size(requested);
+        let pool_kind = self.cfg.pool_for(rounded);
+
+        let found = self.find_cached(rounded, pool_kind);
+        let (block_id, cache_hit) = match found {
+            Some(id) => (id, true),
+            None => {
+                let seg_block = if self.cfg.expandable_segments {
+                    self.grow_expandable(rounded, pool_kind)?
+                } else {
+                    self.alloc_segment(rounded, pool_kind)?
+                };
+                (seg_block, false)
+            }
+        };
+
+        let block_id = self.maybe_split(block_id, rounded, pool_kind);
+
+        {
+            let b = self.slab.get_mut(block_id);
+            debug_assert_eq!(b.state, BlockState::Free);
+            b.state = BlockState::Allocated;
+            b.requested = requested;
+        }
+        let size = self.slab.get(block_id).size;
+        self.stats.num_allocs += 1;
+        if cache_hit {
+            self.stats.num_cache_hits += 1;
+        }
+        self.stats.time_us += self.cfg.cost.cache_hit_us;
+        self.stats.requested += requested;
+        let allocated = self.stats.allocated + size;
+        self.stats.sync(self.driver.reserved(), allocated);
+
+        let handle = AllocId(self.next_handle);
+        self.next_handle += 1;
+        self.live.insert(handle.0, block_id);
+
+        if self.cfg.garbage_collection_threshold.is_some() {
+            self.tick += 1;
+            let seg = self.slab.get(block_id).segment;
+            self.seg_last_use.insert(seg, self.tick);
+        }
+
+        self.emit(AllocEvent::Alloc {
+            requested,
+            rounded,
+            cache_hit,
+        });
+        Ok(handle)
+    }
+
+    fn find_cached(&mut self, rounded: u64, pool_kind: PoolKind) -> Option<BlockId> {
+        let max_split = self
+            .cfg
+            .max_split_size
+            .filter(|_| !self.cfg.expandable_segments);
+        let (size, id) = {
+            let pool = self.pool(pool_kind);
+            match (pool_kind, max_split) {
+                (PoolKind::Large, Some(max)) if rounded < max => {
+                    pool.best_fit_bounded(rounded, max)
+                }
+                _ => pool.best_fit(rounded),
+            }
+        }?;
+        self.pool(pool_kind).remove(size, id);
+        Some(id)
+    }
+
+    fn alloc_segment(&mut self, rounded: u64, pool_kind: PoolKind) -> Result<BlockId, AllocError> {
+        let seg_size = self.cfg.segment_size_for(rounded);
+        self.maybe_gc(seg_size, None);
+        let cached_free = self.driver.reserved() - self.stats.allocated;
+        let pool_cached = self.pool_cached_bytes(pool_kind);
+        let frag_sample = if pool_cached >= rounded { cached_free } else { 0 };
+
+        let seg = match self.driver.cuda_malloc(seg_size) {
+            Ok(s) => s,
+            Err(_) => {
+                let released = self.release_cached_segments();
+                self.emit(AllocEvent::OomRetry {
+                    released_bytes: released,
+                });
+                match self.driver.cuda_malloc(seg_size) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        return Err(AllocError::Oom(e, self.snapshot()));
+                    }
+                }
+            }
+        };
+        self.note_driver_growth(seg_size, rounded, frag_sample);
+
+        let block = Block {
+            segment: seg,
+            pool: pool_kind,
+            offset: 0,
+            size: seg_size,
+            requested: 0,
+            state: BlockState::Free,
+            prev: NO_BLOCK,
+            next: NO_BLOCK,
+            origin_phase: self.phase,
+            live: true,
+        };
+        let id = self.slab.insert(block);
+        self.seg_heads.insert(seg, id);
+        if self.cfg.garbage_collection_threshold.is_some() {
+            self.tick += 1;
+            self.seg_last_use.insert(seg, self.tick);
+        }
+        Ok(id)
+    }
+
+    fn note_driver_growth(&mut self, mapped_bytes: u64, rounded: u64, frag_sample: u64) {
+        self.stats.last_frag_sample = frag_sample;
+        if frag_sample > self.stats.max_frag_sample {
+            self.stats.max_frag_sample = frag_sample;
+        }
+        self.stats.num_cuda_mallocs += 1;
+        self.stats.reserved = self.driver.reserved();
+        if self.stats.reserved > self.stats.peak_reserved {
+            self.stats.peak_reserved = self.stats.reserved;
+            self.stats.frag_at_peak_reserved = frag_sample;
+        }
+        self.emit(AllocEvent::CudaMalloc {
+            segment_bytes: mapped_bytes,
+            rounded,
+            frag_sample,
+        });
+    }
+
+    fn grow_expandable(
+        &mut self,
+        rounded: u64,
+        pool_kind: PoolKind,
+    ) -> Result<BlockId, AllocError> {
+        let idx = pool_idx(pool_kind);
+        let granule = self.cfg.expandable_granule();
+        let mut retried = false;
+        loop {
+            let Some(seg) = self.expandable[idx] else {
+                let block = self.alloc_segment(rounded, pool_kind)?;
+                self.expandable[idx] = Some(self.slab.get(block).segment);
+                return Ok(block);
+            };
+            let head = *self.seg_heads.get(&seg).expect("expandable segment head");
+            let mut tail = head;
+            while self.slab.get(tail).next != NO_BLOCK {
+                tail = BlockId(self.slab.get(tail).next);
+            }
+            let (tail_state, tail_size) = {
+                let b = self.slab.get(tail);
+                (b.state, b.size)
+            };
+            let free_tail = if tail_state == BlockState::Free {
+                tail_size
+            } else {
+                0
+            };
+            let need = rounded.saturating_sub(free_tail);
+            if need == 0 {
+                self.pool(pool_kind).remove(tail_size, tail);
+                return Ok(tail);
+            }
+            let delta = round_up(need, granule);
+            self.maybe_gc(delta, Some(seg));
+            let cached_free = self.driver.reserved() - self.stats.allocated;
+            let pool_cached = self.pool_cached_bytes(pool_kind);
+            let frag_sample = if pool_cached >= rounded { cached_free } else { 0 };
+            match self.driver.grow_segment(seg, delta) {
+                Ok(()) => {
+                    self.note_driver_growth(delta, rounded, frag_sample);
+                    if tail_state == BlockState::Free {
+                        self.pool(pool_kind).remove(tail_size, tail);
+                        self.slab.get_mut(tail).size = tail_size + delta;
+                        return Ok(tail);
+                    }
+                    let offset = {
+                        let b = self.slab.get(tail);
+                        b.offset + b.size
+                    };
+                    let grown = Block {
+                        segment: seg,
+                        pool: pool_kind,
+                        offset,
+                        size: delta,
+                        requested: 0,
+                        state: BlockState::Free,
+                        prev: tail.0,
+                        next: NO_BLOCK,
+                        origin_phase: self.phase,
+                        live: true,
+                    };
+                    let grown_id = self.slab.insert(grown);
+                    self.slab.get_mut(tail).next = grown_id.0;
+                    return Ok(grown_id);
+                }
+                Err(e) => {
+                    if retried {
+                        return Err(AllocError::Oom(e, self.snapshot()));
+                    }
+                    retried = true;
+                    let released = self.release_cached_segments();
+                    self.emit(AllocEvent::OomRetry {
+                        released_bytes: released,
+                    });
+                }
+            }
+        }
+    }
+
+    fn maybe_gc(&mut self, incoming: u64, keep: Option<SegmentId>) {
+        let Some(threshold) = self.cfg.garbage_collection_threshold else {
+            return;
+        };
+        let target = (threshold * self.driver.capacity() as f64) as u64;
+        if self.driver.reserved() + incoming <= target {
+            return;
+        }
+        // The seed's linear pass: every segment head is inspected.
+        let mut candidates: Vec<(u64, u32, BlockId, u64, PoolKind)> = Vec::new();
+        for (&seg, &head) in &self.seg_heads {
+            if keep == Some(seg) {
+                continue;
+            }
+            let b = self.slab.get(head);
+            if b.state == BlockState::Free && b.next == NO_BLOCK {
+                let age = self.seg_last_use.get(&seg).copied().unwrap_or(0);
+                candidates.push((age, seg.0, head, b.size, b.pool));
+            }
+        }
+        candidates.sort_unstable_by_key(|&(age, seg, ..)| (age, seg));
+        let mut released = 0u64;
+        let mut segments = 0u64;
+        for (_, seg_raw, head, size, pool_kind) in candidates {
+            if self.driver.reserved() + incoming <= target {
+                break;
+            }
+            self.release_full_segment(SegmentId(seg_raw), head, size, pool_kind);
+            released += size;
+            segments += 1;
+        }
+        if segments > 0 {
+            self.stats.num_gc_passes += 1;
+            self.stats.gc_reclaimed += released;
+            self.stats.sync(self.driver.reserved(), self.stats.allocated);
+            self.emit(AllocEvent::GcReclaim {
+                segments,
+                bytes: released,
+            });
+        }
+    }
+
+    fn release_full_segment(
+        &mut self,
+        seg: SegmentId,
+        head: BlockId,
+        size: u64,
+        pool_kind: PoolKind,
+    ) {
+        self.pool(pool_kind).remove(size, head);
+        self.slab.remove(head);
+        self.seg_heads.remove(&seg);
+        self.seg_last_use.remove(&seg);
+        for slot in self.expandable.iter_mut() {
+            if *slot == Some(seg) {
+                *slot = None;
+            }
+        }
+        self.driver.cuda_free(seg);
+        self.stats.num_cuda_frees += 1;
+    }
+
+    fn maybe_split(&mut self, block_id: BlockId, rounded: u64, pool_kind: PoolKind) -> BlockId {
+        let (size, offset, seg, next, origin_phase) = {
+            let b = self.slab.get(block_id);
+            (b.size, b.offset, b.segment, b.next, b.origin_phase)
+        };
+        debug_assert!(size >= rounded);
+        if !self.cfg.should_split(size, rounded, pool_kind) {
+            return block_id;
+        }
+        let rem = Block {
+            segment: seg,
+            pool: pool_kind,
+            offset: offset + rounded,
+            size: size - rounded,
+            requested: 0,
+            state: BlockState::Free,
+            prev: block_id.0,
+            next,
+            origin_phase,
+            live: true,
+        };
+        let rem_id = self.slab.insert(rem);
+        if next != NO_BLOCK {
+            self.slab.get_mut(BlockId(next)).prev = rem_id.0;
+        }
+        {
+            let b = self.slab.get_mut(block_id);
+            b.size = rounded;
+            b.next = rem_id.0;
+        }
+        let rem_size = size - rounded;
+        self.pool(pool_kind).insert(rem_size, rem_id);
+        block_id
+    }
+
+    pub fn free(&mut self, handle: AllocId) {
+        let block_id = self
+            .live
+            .remove(&handle.0)
+            .unwrap_or_else(|| panic!("free of unknown handle {handle:?}"));
+        let (size, requested, pool_kind) = {
+            let b = self.slab.get_mut(block_id);
+            debug_assert_eq!(b.state, BlockState::Allocated);
+            b.state = BlockState::Free;
+            let r = b.requested;
+            b.requested = 0;
+            (b.size, r, b.pool)
+        };
+        self.stats.num_frees += 1;
+        self.stats.time_us += self.cfg.cost.pool_free_us;
+        self.stats.requested -= requested;
+        let allocated = self.stats.allocated - size;
+        self.stats.sync(self.driver.reserved(), allocated);
+
+        let merged = self.coalesce(block_id, pool_kind);
+        let merged_size = self.slab.get(merged).size;
+        self.pool(pool_kind).insert(merged_size, merged);
+
+        self.emit(AllocEvent::Free { size });
+    }
+
+    fn coalesce(&mut self, block_id: BlockId, pool_kind: PoolKind) -> BlockId {
+        let mut cur = block_id;
+
+        let prev = self.slab.get(cur).prev;
+        if prev != NO_BLOCK {
+            let prev_id = BlockId(prev);
+            if self.slab.get(prev_id).state == BlockState::Free {
+                let prev_size = self.slab.get(prev_id).size;
+                self.pool(pool_kind).remove(prev_size, prev_id);
+                let (cur_size, cur_next) = {
+                    let c = self.slab.get(cur);
+                    (c.size, c.next)
+                };
+                {
+                    let p = self.slab.get_mut(prev_id);
+                    p.size += cur_size;
+                    p.next = cur_next;
+                }
+                if cur_next != NO_BLOCK {
+                    self.slab.get_mut(BlockId(cur_next)).prev = prev_id.0;
+                }
+                self.slab.remove(cur);
+                cur = prev_id;
+            }
+        }
+
+        let next = self.slab.get(cur).next;
+        if next != NO_BLOCK {
+            let next_id = BlockId(next);
+            if self.slab.get(next_id).state == BlockState::Free {
+                let next_size = self.slab.get(next_id).size;
+                self.pool(pool_kind).remove(next_size, next_id);
+                let next_next = self.slab.get(next_id).next;
+                {
+                    let c = self.slab.get_mut(cur);
+                    c.size += next_size;
+                    c.next = next_next;
+                }
+                if next_next != NO_BLOCK {
+                    self.slab.get_mut(BlockId(next_next)).prev = cur.0;
+                }
+                self.slab.remove(next_id);
+            }
+        }
+        cur
+    }
+
+    /// The seed's linear release scan: every pooled block is visited to
+    /// find the fully-free segments.
+    fn release_cached_segments(&mut self) -> u64 {
+        let mut released = 0u64;
+        for pool_kind in [PoolKind::Small, PoolKind::Large] {
+            let candidates: Vec<(u64, BlockId)> =
+                self.pool(pool_kind).iter().copied().collect();
+            for (size, id) in candidates {
+                let (seg, offset) = {
+                    let b = self.slab.get(id);
+                    (b.segment, b.offset)
+                };
+                let seg_size = self.driver.segment_size(seg);
+                if offset == 0 && size == seg_size {
+                    self.release_full_segment(seg, id, size, pool_kind);
+                    released += seg_size;
+                    self.emit(AllocEvent::CudaFree {
+                        segment_bytes: seg_size,
+                    });
+                }
+            }
+        }
+        if self.cfg.expandable_segments {
+            released += self.shrink_expandable_tails();
+        }
+        if released > 0 {
+            self.stats.sync(self.driver.reserved(), self.stats.allocated);
+        }
+        released
+    }
+
+    fn shrink_expandable_tails(&mut self) -> u64 {
+        let granule = self.cfg.expandable_granule();
+        let mut released = 0u64;
+        for slot in self.expandable {
+            let Some(seg) = slot else {
+                continue;
+            };
+            let head = *self.seg_heads.get(&seg).expect("expandable segment head");
+            let mut tail = head;
+            while self.slab.get(tail).next != NO_BLOCK {
+                tail = BlockId(self.slab.get(tail).next);
+            }
+            let (state, size, offset, prev, pool_kind) = {
+                let b = self.slab.get(tail);
+                (b.state, b.size, b.offset, b.prev, b.pool)
+            };
+            if state != BlockState::Free || offset == 0 {
+                continue;
+            }
+            let cut = round_down(size, granule);
+            if cut == 0 {
+                continue;
+            }
+            self.pool(pool_kind).remove(size, tail);
+            if cut == size {
+                self.slab.get_mut(BlockId(prev)).next = NO_BLOCK;
+                self.slab.remove(tail);
+            } else {
+                self.slab.get_mut(tail).size = size - cut;
+                self.pool(pool_kind).insert(size - cut, tail);
+            }
+            self.driver.shrink_segment(seg, cut);
+            self.stats.shrunk_bytes += cut;
+            self.emit(AllocEvent::SegmentShrink { bytes: cut });
+            released += cut;
+        }
+        released
+    }
+
+    pub fn empty_cache(&mut self) -> u64 {
+        self.stats.num_empty_cache += 1;
+        self.stats.time_us += self.cfg.cost.empty_cache_base_us;
+        let before_segments = self.driver.live_segments() as u64;
+        let released = self.release_cached_segments();
+        let segs = before_segments - self.driver.live_segments() as u64;
+        self.emit(AllocEvent::EmptyCache {
+            segments: segs,
+            bytes: released,
+        });
+        released
+    }
+
+    pub fn live_allocs(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn live_segments(&self) -> usize {
+        self.driver.live_segments()
+    }
+
+    /// The seed's O(everything) invariant check, minus the (new) fully-
+    /// free-index clause it predates.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut total_alloc = 0u64;
+        let mut total_free = 0u64;
+        let mut seg_bytes = 0u64;
+        let mut free_blocks: Vec<(u64, BlockId)> = Vec::new();
+        for (&seg, &head) in &self.seg_heads {
+            let seg_size = self.driver.segment_size(seg);
+            seg_bytes += seg_size;
+            let mut cursor = head;
+            let mut expect_offset = 0u64;
+            let mut prev_state: Option<BlockState> = None;
+            let mut prev_id = NO_BLOCK;
+            loop {
+                let b = self.slab.get(cursor);
+                if b.segment != seg {
+                    return Err(format!("block {cursor:?} in wrong segment"));
+                }
+                if b.offset != expect_offset {
+                    return Err(format!(
+                        "segment {seg:?}: expected offset {expect_offset}, got {}",
+                        b.offset
+                    ));
+                }
+                if b.prev != prev_id {
+                    return Err(format!("block {cursor:?} has broken prev link"));
+                }
+                if b.state == BlockState::Free && prev_state == Some(BlockState::Free) {
+                    return Err(format!(
+                        "segment {seg:?}: adjacent free blocks (coalescing broken)"
+                    ));
+                }
+                match b.state {
+                    BlockState::Allocated => total_alloc += b.size,
+                    BlockState::Free => {
+                        total_free += b.size;
+                        free_blocks.push((b.size, cursor));
+                    }
+                }
+                expect_offset += b.size;
+                prev_state = Some(b.state);
+                prev_id = cursor.0;
+                if b.next == NO_BLOCK {
+                    break;
+                }
+                cursor = BlockId(b.next);
+            }
+            if expect_offset != seg_size {
+                return Err(format!(
+                    "segment {seg:?}: chain covers {expect_offset} of {seg_size} bytes"
+                ));
+            }
+        }
+        if seg_bytes != self.driver.reserved() {
+            return Err(format!(
+                "segment bytes {seg_bytes} != driver reserved {}",
+                self.driver.reserved()
+            ));
+        }
+        if total_alloc != self.stats.allocated {
+            return Err(format!(
+                "chain allocated {total_alloc} != stats.allocated {}",
+                self.stats.allocated
+            ));
+        }
+        if total_alloc + total_free != seg_bytes {
+            return Err("allocated + free != reserved".to_string());
+        }
+        let pooled: u64 = self.small.cached_bytes() + self.large.cached_bytes();
+        if pooled != total_free {
+            return Err(format!(
+                "pool bytes {pooled} != chain free bytes {total_free}"
+            ));
+        }
+        let pool_count = self.small.len() + self.large.len();
+        if pool_count != free_blocks.len() {
+            return Err(format!(
+                "pool count {pool_count} != free block count {}",
+                free_blocks.len()
+            ));
+        }
+        for (&h, &bid) in &self.live {
+            let b = self.slab.get(bid);
+            if b.state != BlockState::Allocated {
+                return Err(format!("handle {h} points at non-allocated block"));
+            }
+        }
+        if self.slab.len_live() != free_blocks.len() + self.live.len() {
+            return Err(format!(
+                "slab live {} != free {} + allocated {}",
+                self.slab.len_live(),
+                free_blocks.len(),
+                self.live.len()
+            ));
+        }
+        self.cfg.check()?;
+        if self.cfg.garbage_collection_threshold.is_none() && self.stats.num_gc_passes != 0 {
+            return Err("gc pass recorded without garbage_collection_threshold".to_string());
+        }
+        if self.cfg.expandable_segments {
+            for (&seg, &head) in &self.seg_heads {
+                let pool = self.slab.get(head).pool;
+                if self.expandable[pool_idx(pool)] != Some(seg) {
+                    return Err(format!(
+                        "segment {seg:?} is not the registered expandable segment of the {} pool",
+                        pool.name()
+                    ));
+                }
+            }
+            for (idx, slot) in self.expandable.iter().enumerate() {
+                if let Some(seg) = slot {
+                    if !self.seg_heads.contains_key(seg) {
+                        return Err(format!(
+                            "expandable slot {idx} points at dead segment {seg:?}"
+                        ));
+                    }
+                }
+            }
+        } else if self.expandable.iter().any(|s| s.is_some()) {
+            return Err("expandable segment registered without the knob".to_string());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lockstep equivalence harness
+// ---------------------------------------------------------------------------
+
+/// Outcome of one lockstep drive, for callers that want to pin or log it.
+pub struct Equivalence {
+    /// Shared fingerprint of the (identical) event logs.
+    pub fingerprint: u64,
+    /// Events both allocators emitted.
+    pub events: usize,
+}
+
+/// Compare the logs' unchecked suffix element-for-element, panicking at
+/// the first divergence with just that event (not the whole log).
+fn check_new_events(
+    label: &str,
+    at: &str,
+    checked: &mut usize,
+    log_a: &[(AllocEvent, StatSnapshot)],
+    log_o: &[(AllocEvent, StatSnapshot)],
+) {
+    assert_eq!(
+        log_a.len(),
+        log_o.len(),
+        "[{label}] {at}: event-count divergence"
+    );
+    while *checked < log_a.len() {
+        let i = *checked;
+        assert!(
+            log_a[i] == log_o[i],
+            "[{label}] {at}: event {i} diverged\n  indexed: {:?}\n  oracle:  {:?}",
+            log_a[i],
+            log_o[i]
+        );
+        *checked += 1;
+    }
+}
+
+/// Final cross-checks once a drive completes: identical logs (already
+/// verified element-wise), identical fingerprints, identical stats, both
+/// `validate()` clean.
+fn finish(
+    label: &str,
+    a: &CachingAllocator,
+    o: &OracleAllocator,
+    log_a: &[(AllocEvent, StatSnapshot)],
+    log_o: &[(AllocEvent, StatSnapshot)],
+) -> Equivalence {
+    let fa = fingerprint_events(log_a);
+    let fo = fingerprint_events(log_o);
+    assert_eq!(fa, fo, "[{label}] event-log fingerprints diverged");
+    let (sa, so) = (a.stats(), o.stats());
+    assert_eq!(sa.peak_reserved, so.peak_reserved, "[{label}] peak_reserved");
+    assert_eq!(sa.peak_allocated, so.peak_allocated, "[{label}] peak_allocated");
+    assert_eq!(sa.max_frag_sample, so.max_frag_sample, "[{label}] max_frag_sample");
+    assert_eq!(
+        sa.frag_at_peak_reserved, so.frag_at_peak_reserved,
+        "[{label}] frag_at_peak_reserved"
+    );
+    assert_eq!(sa.num_allocs, so.num_allocs, "[{label}] num_allocs");
+    assert_eq!(sa.num_cache_hits, so.num_cache_hits, "[{label}] num_cache_hits");
+    assert_eq!(sa.num_cuda_mallocs, so.num_cuda_mallocs, "[{label}] num_cuda_mallocs");
+    assert_eq!(sa.num_cuda_frees, so.num_cuda_frees, "[{label}] num_cuda_frees");
+    assert_eq!(sa.num_gc_passes, so.num_gc_passes, "[{label}] num_gc_passes");
+    assert_eq!(sa.gc_reclaimed, so.gc_reclaimed, "[{label}] gc_reclaimed");
+    assert_eq!(sa.shrunk_bytes, so.shrunk_bytes, "[{label}] shrunk_bytes");
+    assert_eq!(
+        a.time_us().to_bits(),
+        o.time_us().to_bits(),
+        "[{label}] simulated time must be bit-identical"
+    );
+    a.validate()
+        .unwrap_or_else(|e| panic!("[{label}] indexed validate: {e}"));
+    o.validate()
+        .unwrap_or_else(|e| panic!("[{label}] oracle validate: {e}"));
+    Equivalence {
+        fingerprint: fa,
+        events: log_a.len(),
+    }
+}
+
+/// Drive the indexed allocator and the seed oracle through one seeded
+/// random op stream (the `alloc_property` recipe: mixed size classes,
+/// alloc-biased, periodic `empty_cache`, phase churn, teardown to zero)
+/// and assert full observational equivalence.
+pub fn assert_equivalent(
+    cfg: &AllocatorConfig,
+    capacity: u64,
+    seed: u64,
+    steps: u64,
+    label: &str,
+) -> Equivalence {
+    let mut a = CachingAllocator::new(capacity, cfg.clone());
+    let mut o = OracleAllocator::new(capacity, cfg.clone());
+    a.set_event_recording(true);
+    o.set_event_recording(true);
+    let mut rng = Rng::seeded(seed);
+    let mut live_a: Vec<AllocId> = Vec::new();
+    let mut live_o: Vec<AllocId> = Vec::new();
+    let mut log_a: Vec<(AllocEvent, StatSnapshot)> = Vec::new();
+    let mut log_o: Vec<(AllocEvent, StatSnapshot)> = Vec::new();
+    let mut checked = 0usize;
+    for step in 0..steps {
+        if step % 61 == 60 {
+            let phase = (step / 61 % 9) as u16;
+            a.set_phase(phase);
+            o.set_phase(phase);
+        }
+        if live_a.is_empty() || rng.bernoulli(0.58) {
+            let class = rng.gen_range(4);
+            let sz = match class {
+                0 => rng.gen_range(4 * KIB) + 1,
+                1 => rng.gen_range(900 * KIB) + KIB,
+                2 => rng.gen_range(8 * MIB) + MIB,
+                _ => rng.gen_range(48 * MIB) + 10 * MIB,
+            };
+            let ra = a.alloc(sz);
+            let ro = o.alloc(sz);
+            match (ra, ro) {
+                (Ok(ha), Ok(ho)) => {
+                    assert_eq!(ha, ho, "[{label}] step {step}: handle divergence");
+                    live_a.push(ha);
+                    live_o.push(ho);
+                }
+                (Err(_), Err(_)) => {}
+                (ra, ro) => panic!(
+                    "[{label}] step {step}: alloc({sz}) diverged: \
+                     indexed ok={} vs oracle ok={}",
+                    ra.is_ok(),
+                    ro.is_ok()
+                ),
+            }
+        } else {
+            let i = rng.range_usize(0, live_a.len());
+            a.free(live_a.swap_remove(i));
+            o.free(live_o.swap_remove(i));
+        }
+        if step % 97 == 96 {
+            assert_eq!(
+                a.empty_cache(),
+                o.empty_cache(),
+                "[{label}] step {step}: empty_cache released different bytes"
+            );
+        }
+        a.drain_events_into(&mut log_a);
+        o.drain_events_into(&mut log_o);
+        check_new_events(label, &format!("step {step}"), &mut checked, &log_a, &log_o);
+    }
+    for (ha, ho) in live_a.into_iter().zip(live_o) {
+        a.free(ha);
+        o.free(ho);
+    }
+    assert_eq!(
+        a.empty_cache(),
+        o.empty_cache(),
+        "[{label}] teardown empty_cache"
+    );
+    a.drain_events_into(&mut log_a);
+    o.drain_events_into(&mut log_o);
+    check_new_events(label, "teardown", &mut checked, &log_a, &log_o);
+    assert_eq!(a.reserved(), 0, "[{label}] indexed must drain to zero");
+    assert_eq!(o.reserved(), 0, "[{label}] oracle must drain to zero");
+    finish(label, &a, &o, &log_a, &log_o)
+}
+
+/// Drive both allocators through a real RLHF trace's allocator-visible
+/// ops (alloc / free / empty_cache / phase marks) and assert equivalence.
+/// Replay stops at the first OOM, like `trace::replay` does — but both
+/// sides must OOM on the same op.
+pub fn assert_equivalent_on_trace(
+    cfg: &AllocatorConfig,
+    capacity: u64,
+    trace: &Trace,
+    label: &str,
+) -> Equivalence {
+    let mut a = CachingAllocator::new(capacity, cfg.clone());
+    let mut o = OracleAllocator::new(capacity, cfg.clone());
+    a.set_event_recording(true);
+    o.set_event_recording(true);
+    let mut handles_a: FastMap<u64, AllocId> = FastMap::default();
+    let mut handles_o: FastMap<u64, AllocId> = FastMap::default();
+    let mut log_a: Vec<(AllocEvent, StatSnapshot)> = Vec::new();
+    let mut log_o: Vec<(AllocEvent, StatSnapshot)> = Vec::new();
+    let mut checked = 0usize;
+    for (i, op) in trace.ops.iter().enumerate() {
+        match op {
+            TraceOp::Alloc { handle, bytes, .. } => {
+                let ra = a.alloc(*bytes);
+                let ro = o.alloc(*bytes);
+                match (ra, ro) {
+                    (Ok(ha), Ok(ho)) => {
+                        assert_eq!(ha, ho, "[{label}] op {i}: handle divergence");
+                        handles_a.insert(handle.0, ha);
+                        handles_o.insert(handle.0, ho);
+                    }
+                    (Err(_), Err(_)) => break, // same-op OOM: stop like replay()
+                    (ra, ro) => panic!(
+                        "[{label}] op {i}: alloc({bytes}) diverged: \
+                         indexed ok={} vs oracle ok={}",
+                        ra.is_ok(),
+                        ro.is_ok()
+                    ),
+                }
+            }
+            TraceOp::Free { handle } => {
+                let ha = handles_a.remove(&handle.0).expect("unknown trace handle");
+                let ho = handles_o.remove(&handle.0).expect("unknown trace handle");
+                a.free(ha);
+                o.free(ho);
+            }
+            TraceOp::EmptyCache => {
+                assert_eq!(
+                    a.empty_cache(),
+                    o.empty_cache(),
+                    "[{label}] op {i}: empty_cache released different bytes"
+                );
+            }
+            TraceOp::Phase(kind) => {
+                a.set_phase(kind.tag());
+                o.set_phase(kind.tag());
+            }
+            TraceOp::Compute { .. } | TraceOp::StepEnd { .. } => {}
+        }
+        a.drain_events_into(&mut log_a);
+        o.drain_events_into(&mut log_o);
+        check_new_events(label, &format!("op {i}"), &mut checked, &log_a, &log_o);
+    }
+    // An OOM break leaves the failed op's retry events buffered.
+    a.drain_events_into(&mut log_a);
+    o.drain_events_into(&mut log_o);
+    check_new_events(label, "final", &mut checked, &log_a, &log_o);
+    finish(label, &a, &o, &log_a, &log_o)
+}
