@@ -1,7 +1,7 @@
 //! Canonical workloads behind `rlhf-mem bench`: the allocator micro and
 //! large-pool-churn loops, PPO trace generation, a Table-1 cell, an
-//! `advise` planner search, and a 4-GPU `cluster` sweep — one per layer
-//! of the speed stack.
+//! `advise` planner search, a 4-GPU `cluster` sweep, and the `peft`
+//! model-sharing comparison — one per layer of the speed stack.
 //!
 //! Each workload returns machine-independent **deterministic counters**
 //! (op counts, peaks, fingerprints of the exact outputs — seeded
@@ -19,10 +19,10 @@ use crate::planner::{plan, Budget};
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::cost::GpuSpec;
 use crate::rlhf::models::RoleSet;
-use crate::rlhf::program::Algo;
+use crate::rlhf::program::{Algo, Sharing};
 use crate::rlhf::sim::{build_trace, ScenarioMode, SimScenario};
 use crate::strategies::StrategyConfig;
-use crate::sweep::model_set_by_name;
+use crate::sweep::{model_set_by_name, SweepGrid, SweepRunner};
 use crate::util::bytes::{GIB, KIB, MIB};
 use crate::util::fasthash::FastHasher;
 use crate::util::json::Json;
@@ -49,6 +49,7 @@ pub const NAMES: &[&str] = &[
     "table1_cell",
     "advise_search",
     "cluster_sweep",
+    "peft_sweep",
 ];
 
 /// Run one canonical workload by name.
@@ -60,6 +61,7 @@ pub fn run_by_name(name: &str) -> Option<WorkloadRun> {
         "table1_cell" => Some(table1_cell()),
         "advise_search" => Some(advise_search()),
         "cluster_sweep" => Some(cluster_sweep()),
+        "peft_sweep" => Some(peft_sweep()),
         _ => None,
     }
 }
@@ -277,6 +279,7 @@ pub fn cluster_sweep() -> WorkloadRun {
                 steps: 1,
                 mode: ScenarioMode::Full,
                 algo: Algo::Ppo,
+                sharing: Sharing::Separate,
                 gpu: GpuSpec::rtx3090(),
                 seed: 0x5EED,
                 len_jitter: kind.default_len_jitter(),
@@ -285,7 +288,7 @@ pub fn cluster_sweep() -> WorkloadRun {
                 rank: 0,
             };
             configs.push(ClusterConfig {
-                key: cluster_key(world, &placement.name, label, Algo::Ppo),
+                key: cluster_key(world, &placement.name, label, Algo::Ppo, Sharing::Separate),
                 strategy_label: label.to_string(),
                 plan: placement.clone(),
                 base,
@@ -313,6 +316,44 @@ pub fn cluster_sweep() -> WorkloadRun {
             ),
         ]),
         ops: batch.cells as u64,
+        wall_s,
+    }
+}
+
+/// The `peft` model-sharing comparison: every sharing placement ×
+/// {none, zero3} on the paper testbed — the Efficient-RLHF LoRA-PPO /
+/// Hydra-PPO memory-ordering sweep, fingerprinted end to end.
+pub fn peft_sweep() -> WorkloadRun {
+    let cells = SweepGrid::new()
+        .strategies([
+            ("None", StrategyConfig::none()),
+            ("ZeRO-3", StrategyConfig::zero3()),
+        ])
+        .sharings(Sharing::ALL)
+        .steps(1)
+        .build()
+        .expect("peft grid");
+    let t = Instant::now();
+    let report = SweepRunner::new(2).run(cells);
+    let wall_s = t.elapsed().as_secs_f64();
+    let peak = |sharing: &str| -> u64 {
+        report
+            .cells
+            .iter()
+            .filter(|c| c.sharing == sharing && c.strategy == "None")
+            .map(|c| c.summary.peak_reserved)
+            .max()
+            .unwrap_or(0)
+    };
+    let ordered = peak("hydra") < peak("lora") && peak("lora") < peak("separate");
+    WorkloadRun {
+        name: "peft_sweep",
+        deterministic: Json::obj(vec![
+            ("cells", Json::from(report.cells.len())),
+            ("paper_ordering_holds", Json::from(ordered)),
+            ("jsonl_fingerprint", Json::str(hash_text(&report.jsonl()))),
+        ]),
+        ops: report.cells.len() as u64,
         wall_s,
     }
 }

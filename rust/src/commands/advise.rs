@@ -16,12 +16,14 @@ use rlhf_mem::util::bytes::fmt_gib_paper;
 use rlhf_mem::util::cli::Args;
 
 pub const ADVISE_USAGE: &str = "\
-rlhf-mem advise — search strategy × empty_cache × allocator-knob space for
-the cheapest configuration that fits a GPU budget
+rlhf-mem advise — search sharing × strategy × empty_cache × allocator-knob
+space for the cheapest configuration that fits a GPU budget
 
 FLAGS:
   --budget FILE    JSON budget spec (default: the paper's RTX-3090 testbed;
-                   see examples/budget_rtx3090.json for every field)
+                   see examples/budget_rtx3090.json for every field —
+                   \"sharings\": [\"separate\",\"lora\",\"hydra\"] widens the
+                   model-sharing axis)
   --cluster        search placement plan × strategy × world-size instead
                    (feasible = every GPU of the plan fits the budget;
                    ranked on the max-per-GPU-memory vs step-time frontier)

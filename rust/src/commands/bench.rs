@@ -37,8 +37,11 @@ FLAGS:
                    deterministic counters exactly, wall time within
                    --tolerance; mismatches fail only if FILE is locked
   --tolerance X    wall-clock slack factor for --check (default 5.0)
+  --accept FILE    promote a CI-emitted bench document to the locked
+                   baseline: FILE is re-emitted with locked=true to --out
+                   (required) — the DESIGN §13 lock-from-CI step
   --smoke          run the consolidated CI smoke suite instead (cluster +
-                   advise + algos, each writing its JSONL artifact)
+                   advise + algos + peft, each writing its JSONL artifact)
   --out-dir DIR    smoke artifact directory (default bench-artifacts)
 ";
 
@@ -49,6 +52,9 @@ pub fn run(args: &Args) -> Result<(), String> {
     }
     if args.bool_flag("smoke") {
         return run_smoke(args);
+    }
+    if let Some(artifact) = args.flag("accept") {
+        return run_accept(artifact, args.flag("out"));
     }
 
     let suite_start = Instant::now();
@@ -133,6 +139,22 @@ pub fn run(args: &Args) -> Result<(), String> {
             .get("locked")
             .and_then(|v| v.as_bool())
             .unwrap_or(false);
+        let baseline_workloads = baseline
+            .get("workloads")
+            .and_then(|v| match v {
+                Json::Arr(items) => Some(items.len()),
+                _ => None,
+            })
+            .unwrap_or(0);
+        if locked && baseline_workloads == 0 {
+            eprintln!(
+                "bench gate: WARNING — baseline {baseline_path} is locked but records \
+                 no workloads, so only the determinism self-check gates this run. \
+                 Accept a CI-emitted document with \
+                 `rlhf-mem bench --accept <artifact> --out {baseline_path}` to arm \
+                 the counter gate."
+            );
+        }
         let violations = report::compare(&doc, &baseline, tolerance)?;
         if violations.is_empty() {
             println!("bench gate: clean vs {baseline_path} (tolerance {tolerance}x)");
@@ -154,6 +176,48 @@ pub fn run(args: &Args) -> Result<(), String> {
             );
         }
     }
+    Ok(())
+}
+
+/// `--accept`: promote a CI-emitted bench document to the locked
+/// baseline. The artifact's counters were produced by the exact binary
+/// CI built, so committing them (rather than numbers from a developer
+/// machine) is what makes the locked gate honest — see DESIGN §13.
+fn run_accept(artifact: &str, out: Option<&str>) -> Result<(), String> {
+    let out = out.ok_or_else(|| {
+        "--accept needs --out <baseline.json> (the committed baseline to overwrite)".to_string()
+    })?;
+    let text =
+        std::fs::read_to_string(artifact).map_err(|e| format!("read {artifact}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| format!("parse {artifact}: {e}"))?;
+    let workload_count = match doc.get("workloads") {
+        Some(Json::Arr(items)) if !items.is_empty() => items.len(),
+        _ => {
+            return Err(format!(
+                "{artifact} records no workloads — accept a full `rlhf-mem bench` \
+                 document, not a smoke summary"
+            ))
+        }
+    };
+    let locked = match doc {
+        Json::Obj(kvs) => Json::Obj(
+            kvs.into_iter()
+                .map(|(k, v)| {
+                    if k == "locked" {
+                        (k, Json::from(true))
+                    } else {
+                        (k, v)
+                    }
+                })
+                .collect(),
+        ),
+        other => other,
+    };
+    std::fs::write(out, locked.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    println!(
+        "accepted {artifact} -> {out} (locked, {workload_count} workloads); \
+         commit {out} to arm the gate"
+    );
     Ok(())
 }
 
@@ -179,8 +243,8 @@ fn infer_index(path: &str) -> Option<u64> {
         .ok()
 }
 
-/// The consolidated smoke suite: what used to be three copy-pasted CI
-/// steps (cluster / advise / algos) becomes one invocation whose JSONL
+/// The consolidated smoke suite: what used to be copy-pasted CI steps
+/// (cluster / advise / algos / peft) becomes one invocation whose JSONL
 /// artifacts land in `--out-dir`, plus a `BENCH_smoke.json` summary with
 /// a fingerprint per artifact.
 fn run_smoke(args: &Args) -> Result<(), String> {
@@ -210,6 +274,13 @@ fn run_smoke(args: &Args) -> Result<(), String> {
                 "--jsonl", &format!("{out_dir}/algos-smoke.jsonl"),
             ]),
         ),
+        (
+            "peft",
+            argv(&[
+                "peft", "--strategies", "none", "--steps", "1", "--jobs", "2",
+                "--compare-paper", "--jsonl", &format!("{out_dir}/peft-smoke.jsonl"),
+            ]),
+        ),
     ];
 
     let mut artifacts: Vec<Json> = Vec::new();
@@ -220,6 +291,7 @@ fn run_smoke(args: &Args) -> Result<(), String> {
             Some("cluster") => super::cluster::run(&sub)?,
             Some("advise") => super::advise::run(&sub)?,
             Some("algos") => super::algos::run(&sub)?,
+            Some("peft") => super::peft::run(&sub)?,
             _ => unreachable!("smoke table names a known subcommand"),
         }
         let path = format!("{out_dir}/{name}-smoke.jsonl");

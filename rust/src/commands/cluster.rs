@@ -19,7 +19,7 @@ use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::report::cluster as render;
 use rlhf_mem::rlhf::cost::GpuSpec;
 use rlhf_mem::rlhf::models::RoleSet;
-use rlhf_mem::rlhf::program::Algo;
+use rlhf_mem::rlhf::program::{Algo, Sharing};
 use rlhf_mem::rlhf::sim::{ScenarioMode, SimScenario};
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::sweep::{model_set_by_name, SweepRunner};
@@ -36,6 +36,8 @@ FLAGS (comma-separated lists):
   --plans colocated,time-shared,dedicated   placement presets (default all)
   --strategies none,zero1,zero2,zero3,offload,ckpt,all   (default none,zero3)
   --algos ppo,grpo,remax,dpo     RLHF algorithms (default ppo)
+  --sharings separate,lora,hydra,frozen-shared   model-sharing placements
+                                 (default separate)
   --framework ds|cc              framework profile (default ds)
   --models opt|gpt2|nano         model pair (default opt)
   --steps N        PPO steps per configuration (default 2)
@@ -77,6 +79,7 @@ pub fn run(args: &Args) -> Result<(), String> {
             .collect::<Result<_, _>>()?;
 
     let algos: Vec<Algo> = Algo::parse_list(args.get_or("algos", "ppo"))?;
+    let sharings: Vec<Sharing> = Sharing::parse_list(args.get_or("sharings", "separate"))?;
 
     let fw_name = args.get_or("framework", "ds");
     let kind = FrameworkKind::by_name(fw_name)
@@ -96,9 +99,9 @@ pub fn run(args: &Args) -> Result<(), String> {
     let capacity = args.get_u64("capacity-gib", 24)? * GIB;
     let seed = args.get_u64("seed", 0x5EED)?;
 
-    // Enumerate configurations (world -> plan -> strategy -> algo); the
-    // shared coordinator engine lowers each GPU to a sweep cell and
-    // aggregates.
+    // Enumerate configurations (world -> plan -> strategy -> algo ->
+    // sharing); the shared coordinator engine lowers each GPU to a sweep
+    // cell and aggregates.
     let mut configs: Vec<ClusterConfig> = Vec::new();
     for &world in &worlds {
         for plan_name in &plan_names {
@@ -108,28 +111,31 @@ pub fn run(args: &Args) -> Result<(), String> {
                     continue;
                 }
                 for &algo in &algos {
-                    let base = SimScenario {
-                        framework: profile.clone(),
-                        models: models.clone(),
-                        strategy: *strategy,
-                        world,
-                        policy: EmptyCachePolicy::Never,
-                        steps,
-                        mode: ScenarioMode::Full,
-                        algo,
-                        gpu,
-                        seed,
-                        len_jitter: kind.default_len_jitter(),
-                        roles: RoleSet::ALL,
-                        time_shared: RoleSet::EMPTY,
-                        rank: 0,
-                    };
-                    configs.push(ClusterConfig {
-                        key: cluster_key(world, &plan.name, label, algo),
-                        strategy_label: label.to_string(),
-                        plan: plan.clone(),
-                        base,
-                    });
+                    for &sharing in &sharings {
+                        let base = SimScenario {
+                            framework: profile.clone(),
+                            models: models.clone(),
+                            strategy: *strategy,
+                            world,
+                            policy: EmptyCachePolicy::Never,
+                            steps,
+                            mode: ScenarioMode::Full,
+                            algo,
+                            sharing,
+                            gpu,
+                            seed,
+                            len_jitter: kind.default_len_jitter(),
+                            roles: RoleSet::ALL,
+                            time_shared: RoleSet::EMPTY,
+                            rank: 0,
+                        };
+                        configs.push(ClusterConfig {
+                            key: cluster_key(world, &plan.name, label, algo, sharing),
+                            strategy_label: label.to_string(),
+                            plan: plan.clone(),
+                            base,
+                        });
+                    }
                 }
             }
         }

@@ -13,6 +13,7 @@ pub mod genablation;
 pub mod profile;
 pub mod figure1;
 pub mod overhead;
+pub mod peft;
 pub mod phases;
 pub mod quickstart;
 pub mod sweep;

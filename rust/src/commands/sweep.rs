@@ -15,7 +15,7 @@
 use rlhf_mem::frameworks::FrameworkKind;
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::rlhf::cost::GpuSpec;
-use rlhf_mem::rlhf::program::Algo;
+use rlhf_mem::rlhf::program::{Algo, Sharing};
 use rlhf_mem::rlhf::sim::ScenarioMode;
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::sweep::{model_set_by_name, SeedPolicy, SweepGrid, SweepRunner};
@@ -32,6 +32,7 @@ FLAGS (comma-separated lists):
   --policies never,after_both,after_inference,after_training (default never)
   --modes full,train_both,train_actor                    (default full)
   --algos ppo,grpo,remax,dpo                             (default ppo)
+  --sharings separate,lora,hydra,frozen-shared           (default separate)
   --steps N        PPO steps per cell (default 3)
   --world N        data-parallel ranks (default 4)
   --capacity-gib N simulated HBM per GPU (default 24)
@@ -82,6 +83,7 @@ pub fn run(args: &Args) -> Result<(), String> {
     grid = grid.modes(modes);
 
     grid = grid.algos(Algo::parse_list(args.get_or("algos", "ppo"))?);
+    grid = grid.sharings(Sharing::parse_list(args.get_or("sharings", "separate"))?);
 
     grid = grid
         .steps(args.get_u64("steps", 3)?)

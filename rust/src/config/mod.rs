@@ -22,14 +22,15 @@
 //!
 //! `mode` selects the §3.1 scenario (`full`, `train_both`,
 //! `train_actor`); `algo` the RLHF algorithm (`ppo`, `grpo`, `remax`,
-//! `dpo`). Unknown names error with the valid list.
+//! `dpo`); `sharing` the model-sharing placement (`separate`, `lora`,
+//! `hydra`, `frozen-shared`). Unknown names error with the valid list.
 
 use crate::frameworks::{FrameworkKind, FrameworkProfile};
 use crate::mem::{LoraSpec, LoraTargets, ModelArch};
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::cost::GpuSpec;
 use crate::rlhf::models::RlhfModelSet;
-use crate::rlhf::program::Algo;
+use crate::rlhf::program::{Algo, Sharing};
 use crate::rlhf::sim::{ScenarioMode, SimScenario};
 use crate::strategies::{StrategyConfig, ZeroStage};
 use crate::util::bytes::GIB;
@@ -140,6 +141,17 @@ impl ExperimentConfig {
             )
         })?;
 
+        let sharing_name = j
+            .get("sharing")
+            .and_then(|v| v.as_str())
+            .unwrap_or("separate");
+        let sharing = Sharing::by_name(sharing_name).ok_or_else(|| {
+            format!(
+                "unknown sharing '{sharing_name}' (valid: {})",
+                Sharing::known_names()
+            )
+        })?;
+
         let scenario = SimScenario {
             framework,
             models: RlhfModelSet {
@@ -152,6 +164,7 @@ impl ExperimentConfig {
             steps: j.get("steps").and_then(|v| v.as_u64()).unwrap_or(3),
             mode,
             algo,
+            sharing,
             gpu,
             seed: j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0x5EED),
             len_jitter: j
@@ -224,6 +237,18 @@ mod tests {
         let err = ExperimentConfig::from_json_text(r#"{"algo": "sarsa"}"#).unwrap_err();
         assert!(err.contains("unknown algo 'sarsa'"), "{err}");
         assert!(err.contains("ppo, grpo, remax, dpo"), "{err}");
+        let err = ExperimentConfig::from_json_text(r#"{"sharing": "siamese"}"#).unwrap_err();
+        assert!(err.contains("unknown sharing 'siamese'"), "{err}");
+        assert!(err.contains("separate, lora, hydra, frozen-shared"), "{err}");
+    }
+
+    #[test]
+    fn sharing_field_parses_and_defaults_to_separate() {
+        let cfg =
+            ExperimentConfig::from_json_text(r#"{"sharing": "hydra", "steps": 1}"#).unwrap();
+        assert_eq!(cfg.scenario.sharing, Sharing::Hydra);
+        let cfg = ExperimentConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.scenario.sharing, Sharing::Separate);
     }
 
     #[test]

@@ -14,10 +14,10 @@ use super::collective;
 use super::placement::PlacementPlan;
 use crate::alloc::AllocatorConfig;
 use crate::experiment::run_scenario;
-use crate::mem::{lora::lora_tensors, DType};
+use crate::mem::DType;
 use crate::profiler::ProfileSummary;
 use crate::rlhf::models::{Role, RoleSet};
-use crate::rlhf::program::{Algo, PhaseProgram};
+use crate::rlhf::program::{Algo, PhaseProgram, Sharing};
 use crate::rlhf::sim::SimScenario;
 use crate::sweep::{SweepCell, SweepRunner};
 use crate::util::json::Json;
@@ -129,6 +129,7 @@ pub fn plan_cells(
                 mode: base.mode,
                 policy: base.policy,
                 algo: base.algo,
+                sharing: base.sharing,
                 alloc_label: "default".to_string(),
                 alloc_cfg: AllocatorConfig::default(),
                 scenario,
@@ -184,14 +185,25 @@ pub fn aggregate(
 }
 
 /// The stable configuration key (`cluster/w{world}/{plan}/{strategy}`,
-/// with `/{algo}` appended for non-PPO algorithms) shared by `rlhf-mem
-/// cluster` JSONL and the planner's `ClusterCandidate::key`, so the two
-/// outputs stay cross-referencable.
-pub fn cluster_key(world: u64, plan_name: &str, strategy_label: &str, algo: Algo) -> String {
+/// with `/{algo}` appended for non-PPO algorithms and `/{sharing}` for
+/// non-separate placements) shared by `rlhf-mem cluster` JSONL and the
+/// planner's `ClusterCandidate::key`, so the two outputs stay
+/// cross-referencable.
+pub fn cluster_key(
+    world: u64,
+    plan_name: &str,
+    strategy_label: &str,
+    algo: Algo,
+    sharing: Sharing,
+) -> String {
     let mut key = format!("cluster/w{world}/{plan_name}/{strategy_label}");
     if algo != Algo::Ppo {
         key.push('/');
         key.push_str(algo.name());
+    }
+    if sharing != Sharing::Separate {
+        key.push('/');
+        key.push_str(sharing.name());
     }
     key
 }
@@ -350,20 +362,11 @@ fn collective_us_per_step(plan: &PlacementPlan, base: &SimScenario) -> f64 {
     us
 }
 
-/// fp16 bytes of `role`'s trainable tensors under the scenario's strategy
-/// (mirrors the trace emitter: LoRA shrinks only the actor).
-fn trainable_bytes_f16(base: &SimScenario, role: Role) -> u64 {
-    let inv = base.models.inventory_for(role);
-    let tensors = if role == Role::Actor {
-        match base.strategy.lora {
-            Some(spec) => lora_tensors(&inv, spec),
-            None => inv.tensors.clone(),
-        }
-    } else {
-        inv.tensors.clone()
-    };
-    tensors.iter().map(|t| t.bytes(DType::F16)).sum()
-}
+// The gradient payload sizing (fp16 bytes of `role`'s trainable tensors
+// under the scenario's strategy *and sharing*) lives with the trace
+// emitter — `crate::rlhf::sim::trainable_bytes_f16` — so the collective
+// model can never drift from what the traces actually train.
+use crate::rlhf::sim::trainable_bytes_f16;
 
 #[cfg(test)]
 mod tests {
@@ -425,14 +428,22 @@ mod tests {
     }
 
     #[test]
-    fn cluster_key_appends_non_ppo_algo() {
+    fn cluster_key_appends_non_default_axes() {
         assert_eq!(
-            cluster_key(2, "colocated", "None", Algo::Ppo),
+            cluster_key(2, "colocated", "None", Algo::Ppo, Sharing::Separate),
             "cluster/w2/colocated/None"
         );
         assert_eq!(
-            cluster_key(4, "dedicated", "ZeRO-3", Algo::Grpo),
+            cluster_key(4, "dedicated", "ZeRO-3", Algo::Grpo, Sharing::Separate),
             "cluster/w4/dedicated/ZeRO-3/grpo"
+        );
+        assert_eq!(
+            cluster_key(2, "colocated", "None", Algo::Ppo, Sharing::Lora),
+            "cluster/w2/colocated/None/lora"
+        );
+        assert_eq!(
+            cluster_key(4, "dedicated", "ZeRO-3", Algo::Grpo, Sharing::Hydra),
+            "cluster/w4/dedicated/ZeRO-3/grpo/hydra"
         );
     }
 
@@ -456,6 +467,20 @@ mod tests {
         dpo.algo = Algo::Dpo;
         let dpo_run = run_plan(&plan, &dpo, RTX3090_HBM).unwrap();
         assert!(dpo_run.p2p_us > ppo_run.p2p_us);
+    }
+
+    #[test]
+    fn shared_backbones_shrink_the_gradient_allreduce() {
+        // Under ZeRO-0 the critic's dense gradients dominate the
+        // all-reduce; LoRA sharing shrinks its payload to adapters+head
+        // and the resident footprint to one backbone per pair.
+        let plan = PlacementPlan::colocated(2);
+        let sep = run_plan(&plan, &base(), RTX3090_HBM).unwrap();
+        let mut shared = base();
+        shared.sharing = Sharing::Lora;
+        let lora = run_plan(&plan, &shared, RTX3090_HBM).unwrap();
+        assert!(lora.collective_us < sep.collective_us);
+        assert!(lora.max_peak_reserved() < sep.max_peak_reserved());
     }
 
     #[test]

@@ -22,6 +22,10 @@ SUBCOMMANDS:
   sweep        Run a user-defined scenario grid (see `sweep --help`)
   algos        Compare RLHF algorithms (ppo/grpo/remax/dpo): peak reserved
                + fragmentation per algorithm, per strategy (see `algos --help`)
+  peft         Compare model-sharing placements (separate/lora/hydra/
+               frozen-shared): peak reserved + step time per placement,
+               per strategy; --compare-paper gates the Efficient-RLHF
+               ordering (see `peft --help`)
   cluster      Multi-GPU placement simulator: per-GPU peaks + step time
                per placement plan (see `cluster --help`)
   advise       Search the mitigation space for the cheapest config that
@@ -54,6 +58,7 @@ fn main() {
         Some("overhead") => commands::overhead::run(&args),
         Some("sweep") => commands::sweep::run(&args),
         Some("algos") => commands::algos::run(&args),
+        Some("peft") => commands::peft::run(&args),
         Some("cluster") => commands::cluster::run(&args),
         Some("advise") => commands::advise::run(&args),
         Some("bench") => commands::bench::run(&args),

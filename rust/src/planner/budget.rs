@@ -18,6 +18,7 @@
 //!   "strategies": ["none", "zero3"],
 //!   "allocators": ["default", "expandable"],
 //!   "algos": ["ppo", "grpo"],
+//!   "sharings": ["separate", "lora", "hydra"],
 //!   "worlds": [2, 4]
 //! }
 //! ```
@@ -27,7 +28,9 @@
 //! and the labels of [`super::space::allocator_candidates`]); omitted, the
 //! full space is searched. `algos` widens the search across RLHF
 //! algorithms ([`crate::rlhf::program::Algo`] names; omitted, PPO only —
-//! the paper's pipeline). `worlds` lists the cluster sizes `advise
+//! the paper's pipeline). `sharings` widens it across model-sharing
+//! placements ([`crate::rlhf::program::Sharing`] names; omitted, separate
+//! full replicas only). `worlds` lists the cluster sizes `advise
 //! --cluster` searches placements over (each ≥ 2 GPUs; omitted, `{2,
 //! world}`).
 
@@ -63,6 +66,9 @@ pub struct Budget {
     /// Optional RLHF algorithm names widening the search across the
     /// algorithm axis. Omitted, only PPO (the paper's pipeline) runs.
     pub algos: Option<Vec<String>>,
+    /// Optional model-sharing placement names widening the search across
+    /// the sharing axis. Omitted, only separate full replicas run.
+    pub sharings: Option<Vec<String>>,
     /// Cluster sizes (GPU counts ≥ 2) `advise --cluster` searches.
     /// Omitted, the cluster planner tries `{2, world}`.
     pub worlds: Option<Vec<u64>>,
@@ -87,6 +93,7 @@ impl Budget {
             strategies: None,
             allocators: None,
             algos: None,
+            sharings: None,
             worlds: None,
         }
     }
@@ -103,7 +110,7 @@ impl Budget {
     pub fn from_json(j: &Json) -> Result<Budget, String> {
         // A typo'd field name must not silently fall back to defaults
         // (same fail-loud principle as the typed-field checks below).
-        const KNOWN: [&str; 14] = [
+        const KNOWN: [&str; 15] = [
             "name",
             "capacity_gib",
             "max_overhead_pct",
@@ -117,6 +124,7 @@ impl Budget {
             "strategies",
             "allocators",
             "algos",
+            "sharings",
             "worlds",
         ];
         if let Json::Obj(kvs) = j {
@@ -243,6 +251,7 @@ impl Budget {
             strategies: name_list("strategies")?,
             allocators: name_list("allocators")?,
             algos: name_list("algos")?,
+            sharings: name_list("sharings")?,
             worlds,
         })
     }
@@ -284,6 +293,10 @@ mod tests {
         let b = Budget::from_json_text(r#"{"algos": ["ppo", "grpo"]}"#).unwrap();
         assert_eq!(b.algos.as_deref().unwrap().len(), 2);
         assert!(Budget::from_json_text(r#"{"algos": []}"#).is_err());
+        assert!(b.sharings.is_none(), "separate-only unless widened");
+        let b = Budget::from_json_text(r#"{"sharings": ["separate", "hydra"]}"#).unwrap();
+        assert_eq!(b.sharings.as_deref().unwrap().len(), 2);
+        assert!(Budget::from_json_text(r#"{"sharings": []}"#).is_err());
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! Given a [`Budget`] (device capacity, tolerated time overhead, workload),
 //! the planner enumerates the mitigation space — strategy presets
 //! (ZeRO-1/2/3, offload, checkpointing, each carrying the paper's global
-//! LoRA default) × [`EmptyCachePolicy`] placements × allocator knobs
-//! (`max_split_size`, `expandable_segments`,
+//! LoRA default) × model-sharing placements
+//! ([`crate::rlhf::program::Sharing`]: separate replicas, shared LoRA
+//! backbones, hydra heads) × [`EmptyCachePolicy`] placements × allocator
+//! knobs (`max_split_size`, `expandable_segments`,
 //! `garbage_collection_threshold`) — runs every candidate through the
 //! [`crate::sweep::SweepRunner`] worker pool, prunes dominated
 //! configurations, and emits a ranked recommendation with a
@@ -107,15 +109,18 @@ fn analyze(budget: Budget, candidates: Vec<Candidate>, sweep: SweepReport) -> Pl
         .map(|s| !s.oom && s.peak_reserved <= budget.capacity)
         .collect();
 
-    // Per-(algorithm, strategy) un-mitigated baseline time (policy
-    // `never`, default allocator, run to completion) — overheads compare
-    // within one workload, never across algorithms.
+    // Per-(algorithm, strategy, sharing) un-mitigated baseline time
+    // (policy `never`, default allocator, run to completion) — overheads
+    // compare within one workload, never across algorithms or across
+    // model-sharing placements (a hydra step is a different workload than
+    // a full-replica step, not a mitigated version of it).
     let baseline_time = |of: &Candidate| -> Option<f64> {
         candidates
             .iter()
             .position(|c| {
                 c.strategy_label == of.strategy_label
                     && c.algo == of.algo
+                    && c.sharing == of.sharing
                     && c.policy == EmptyCachePolicy::Never
                     && c.alloc_label == "default"
             })
@@ -271,8 +276,8 @@ impl PlanReport {
     /// Ranked table of the top `top` recommendations.
     pub fn to_table(&self, top: usize) -> TextTable {
         let mut t = TextTable::new(&[
-            "Rank", "Algo", "Strategy", "Policy", "Allocator", "Reserved", "Frag.", "Overhead",
-            "Frontier",
+            "Rank", "Algo", "Sharing", "Strategy", "Policy", "Allocator", "Reserved", "Frag.",
+            "Overhead", "Frontier",
         ]);
         for o in self.recommended().into_iter().take(top) {
             t.row(outcome_row(o, o.rank.map(|r| r.to_string()).unwrap_or_default()));
@@ -284,8 +289,8 @@ impl PlanReport {
     /// the ranking when the point is also recommended).
     pub fn frontier_table(&self) -> TextTable {
         let mut t = TextTable::new(&[
-            "Rank", "Algo", "Strategy", "Policy", "Allocator", "Reserved", "Frag.", "Overhead",
-            "Frontier",
+            "Rank", "Algo", "Sharing", "Strategy", "Policy", "Allocator", "Reserved", "Frag.",
+            "Overhead", "Frontier",
         ]);
         for o in self.frontier() {
             let rank = o.rank.map(|r| r.to_string()).unwrap_or_else(|| "-".into());
@@ -313,6 +318,7 @@ fn outcome_row(o: &PlanOutcome, rank: String) -> Vec<String> {
     vec![
         rank,
         o.candidate.algo.name().to_string(),
+        o.candidate.sharing.name().to_string(),
         o.candidate.strategy_label.clone(),
         o.candidate.policy.name().to_string(),
         o.candidate.alloc_label.clone(),
@@ -334,6 +340,7 @@ impl PlanOutcome {
             ("index", Json::from(self.candidate.index)),
             ("key", Json::str(self.candidate.key())),
             ("algo", Json::str(self.candidate.algo.name())),
+            ("sharing", Json::str(self.candidate.sharing.name())),
             ("strategy", Json::str(self.candidate.strategy_label.clone())),
             ("policy", Json::str(self.candidate.policy.name())),
             ("alloc", Json::str(self.candidate.alloc_label.clone())),
@@ -387,6 +394,7 @@ impl ClusterOutcome {
             ("plan", Json::str(self.candidate.plan.name.clone())),
             ("strategy", Json::str(self.candidate.strategy_label.clone())),
             ("algo", Json::str(self.candidate.algo.name())),
+            ("sharing", Json::str(self.candidate.sharing.name())),
             (
                 "per_gpu_reserved",
                 Json::Arr(
@@ -595,8 +603,8 @@ impl ClusterReport {
 
 fn cluster_table_header() -> TextTable {
     TextTable::new(&[
-        "Rank", "GPUs", "Placement", "Strategy", "Algo", "Max GPU", "Total", "Step ms",
-        "Frontier",
+        "Rank", "GPUs", "Placement", "Strategy", "Algo", "Sharing", "Max GPU", "Total",
+        "Step ms", "Frontier",
     ])
 }
 
@@ -607,6 +615,7 @@ fn cluster_row(o: &ClusterOutcome, rank: String) -> Vec<String> {
         o.candidate.plan.name.clone(),
         o.candidate.strategy_label.clone(),
         o.candidate.algo.name().to_string(),
+        o.candidate.sharing.name().to_string(),
         fmt_gib_paper(o.run.max_peak_reserved()),
         fmt_gib_paper(o.run.total_peak_reserved()),
         format!("{:.1}", o.run.step_time_us / 1000.0),
@@ -704,6 +713,34 @@ mod tests {
         for o in &report.outcomes {
             assert_eq!(o.run.gpus.len() as u64, o.candidate.world);
         }
+    }
+
+    #[test]
+    fn sharing_baselines_compare_within_their_own_placement() {
+        let mut b = tiny_budget();
+        b.allocators = Some(vec!["default".to_string()]);
+        b.sharings = Some(vec!["separate".to_string(), "lora".to_string()]);
+        let report = plan(&b, 2).unwrap();
+        assert_eq!(report.outcomes.len(), 2 * 2 * 4, "strategy x sharing x policy");
+        // Every (strategy, sharing) pair owns its own zero-overhead
+        // baseline: a lora cell is never measured against a full-replica
+        // run of the same strategy.
+        for o in &report.outcomes {
+            if o.candidate.policy == EmptyCachePolicy::Never && !o.summary.oom {
+                assert_eq!(o.overhead_pct, Some(0.0), "{}", o.candidate.key());
+            }
+        }
+        // Shared frozen backbones strictly shrink the best feasible peak.
+        let best_for = |sharing: &str| {
+            report
+                .outcomes
+                .iter()
+                .filter(|o| o.candidate.sharing.name() == sharing && o.feasible)
+                .map(|o| o.summary.peak_reserved)
+                .min()
+                .expect("feasible cell")
+        };
+        assert!(best_for("lora") < best_for("separate"));
     }
 
     #[test]

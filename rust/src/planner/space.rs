@@ -10,7 +10,7 @@ use crate::coordinator::PlacementPlan;
 use crate::frameworks::FrameworkProfile;
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::models::RoleSet;
-use crate::rlhf::program::Algo;
+use crate::rlhf::program::{Algo, Sharing};
 use crate::rlhf::sim::{ScenarioMode, SimScenario};
 use crate::strategies::StrategyConfig;
 use crate::sweep::SweepCell;
@@ -23,6 +23,7 @@ pub struct Candidate {
     /// JSONL lines are keyed by.
     pub index: usize,
     pub algo: Algo,
+    pub sharing: Sharing,
     pub strategy_label: String,
     pub strategy: StrategyConfig,
     pub policy: EmptyCachePolicy,
@@ -31,15 +32,20 @@ pub struct Candidate {
 }
 
 impl Candidate {
-    /// `strategy/policy[/algo]/alloc` — unique within one plan. Non-PPO
-    /// algorithms insert `/algo` before the allocator label, matching the
-    /// [`crate::sweep::SweepCell`] key component order; PPO-only budgets
-    /// keep the legacy three-part keys.
+    /// `strategy/policy[/algo][/sharing]/alloc` — unique within one plan.
+    /// Non-PPO algorithms insert `/algo` and non-separate placements
+    /// `/sharing` before the allocator label, matching the
+    /// [`crate::sweep::SweepCell`] key component order; PPO-only
+    /// full-replica budgets keep the legacy three-part keys.
     pub fn key(&self) -> String {
         let mut key = format!("{}/{}", self.strategy_label, self.policy.name());
         if self.algo != Algo::Ppo {
             key.push('/');
             key.push_str(self.algo.name());
+        }
+        if self.sharing != Sharing::Separate {
+            key.push('/');
+            key.push_str(self.sharing.name());
         }
         key.push('/');
         key.push_str(&self.alloc_label);
@@ -92,6 +98,22 @@ fn algo_rows(budget: &Budget) -> Result<Vec<Algo>, String> {
     }
 }
 
+/// The budget's sharing rows: its `sharings` names resolved, or separate
+/// full replicas only (the paper's placement) when unrestricted.
+fn sharing_rows(budget: &Budget) -> Result<Vec<Sharing>, String> {
+    match &budget.sharings {
+        Some(names) => names
+            .iter()
+            .map(|n| {
+                Sharing::by_name(n).ok_or_else(|| {
+                    format!("unknown sharing '{n}' (valid: {})", Sharing::known_names())
+                })
+            })
+            .collect(),
+        None => Ok(vec![Sharing::Separate]),
+    }
+}
+
 /// The budget's strategy rows: its `strategies` short-names resolved, or
 /// the full Table-1 sweep when unrestricted.
 fn strategy_rows(budget: &Budget) -> Result<Vec<(String, StrategyConfig)>, String> {
@@ -112,13 +134,14 @@ fn strategy_rows(budget: &Budget) -> Result<Vec<(String, StrategyConfig)>, Strin
 }
 
 /// Enumerate the space for `budget` in deterministic order (algorithm →
-/// strategy → policy → allocator), honouring its optional
-/// `strategies`/`allocators`/`algos` restrictions and skipping strategies
-/// the framework cannot run.
+/// sharing → strategy → policy → allocator), honouring its optional
+/// `strategies`/`allocators`/`algos`/`sharings` restrictions and skipping
+/// strategies the framework cannot run.
 pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
     let profile = FrameworkProfile::by_kind(budget.framework);
 
     let algo_rows: Vec<Algo> = algo_rows(budget)?;
+    let sharing_rows: Vec<Sharing> = sharing_rows(budget)?;
     let strategy_rows: Vec<(String, StrategyConfig)> = strategy_rows(budget)?;
 
     let all_allocs = allocator_candidates();
@@ -142,21 +165,24 @@ pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
 
     let mut out = Vec::new();
     for algo in &algo_rows {
-        for (slabel, strategy) in &strategy_rows {
-            if !profile.supports(strategy) {
-                continue;
-            }
-            for policy in EmptyCachePolicy::ALL {
-                for (alabel, acfg) in &allocs {
-                    out.push(Candidate {
-                        index: out.len(),
-                        algo: *algo,
-                        strategy_label: slabel.clone(),
-                        strategy: *strategy,
-                        policy,
-                        alloc_label: alabel.clone(),
-                        alloc_cfg: acfg.clone(),
-                    });
+        for sharing in &sharing_rows {
+            for (slabel, strategy) in &strategy_rows {
+                if !profile.supports(strategy) {
+                    continue;
+                }
+                for policy in EmptyCachePolicy::ALL {
+                    for (alabel, acfg) in &allocs {
+                        out.push(Candidate {
+                            index: out.len(),
+                            algo: *algo,
+                            sharing: *sharing,
+                            strategy_label: slabel.clone(),
+                            strategy: *strategy,
+                            policy,
+                            alloc_label: alabel.clone(),
+                            alloc_cfg: acfg.clone(),
+                        });
+                    }
                 }
             }
         }
@@ -188,6 +214,7 @@ pub fn to_cells(budget: &Budget, candidates: &[Candidate]) -> Vec<SweepCell> {
                 steps: budget.steps,
                 mode: ScenarioMode::Full,
                 algo: c.algo,
+                sharing: c.sharing,
                 gpu: budget.gpu,
                 seed: budget.seed,
                 len_jitter,
@@ -203,6 +230,7 @@ pub fn to_cells(budget: &Budget, candidates: &[Candidate]) -> Vec<SweepCell> {
                 mode: ScenarioMode::Full,
                 policy: c.policy,
                 algo: c.algo,
+                sharing: c.sharing,
                 alloc_label: c.alloc_label.clone(),
                 alloc_cfg: c.alloc_cfg.clone(),
                 scenario,
@@ -224,21 +252,28 @@ pub struct ClusterCandidate {
     pub strategy_label: String,
     pub strategy: StrategyConfig,
     pub algo: Algo,
+    pub sharing: Sharing,
 }
 
 impl ClusterCandidate {
-    /// `cluster/w{world}/{plan}/{strategy}` (plus `/{algo}` for non-PPO)
-    /// — unique within one search, and identical to the `rlhf-mem
-    /// cluster` JSONL key for the same configuration (both call
-    /// [`cluster_key`]).
+    /// `cluster/w{world}/{plan}/{strategy}` (plus `/{algo}` for non-PPO
+    /// and `/{sharing}` for non-separate placements) — unique within one
+    /// search, and identical to the `rlhf-mem cluster` JSONL key for the
+    /// same configuration (both call [`cluster_key`]).
     pub fn key(&self) -> String {
-        cluster_key(self.world, &self.plan.name, &self.strategy_label, self.algo)
+        cluster_key(
+            self.world,
+            &self.plan.name,
+            &self.strategy_label,
+            self.algo,
+            self.sharing,
+        )
     }
 }
 
 /// Enumerate the placement space for `budget` in deterministic order
-/// (world → plan preset → strategy → algorithm). Worlds come from
-/// `budget.worlds` (default `{2, world}`), each ≥ 2 GPUs.
+/// (world → plan preset → strategy → algorithm → sharing). Worlds come
+/// from `budget.worlds` (default `{2, world}`), each ≥ 2 GPUs.
 pub fn enumerate_cluster(budget: &Budget) -> Result<Vec<ClusterCandidate>, String> {
     // The cluster search varies placement × strategy × world only; every
     // cell runs policy `never` on the default allocator. A budget that
@@ -254,6 +289,7 @@ pub fn enumerate_cluster(budget: &Budget) -> Result<Vec<ClusterCandidate>, Strin
     let profile = FrameworkProfile::by_kind(budget.framework);
     let rows = strategy_rows(budget)?;
     let algos = algo_rows(budget)?;
+    let sharings = sharing_rows(budget)?;
     let worlds: Vec<u64> = match &budget.worlds {
         Some(ws) => ws.clone(),
         None => {
@@ -277,14 +313,17 @@ pub fn enumerate_cluster(budget: &Budget) -> Result<Vec<ClusterCandidate>, Strin
                     continue;
                 }
                 for algo in &algos {
-                    out.push(ClusterCandidate {
-                        index: out.len(),
-                        world,
-                        plan: plan.clone(),
-                        strategy_label: label.clone(),
-                        strategy: *strategy,
-                        algo: *algo,
-                    });
+                    for sharing in &sharings {
+                        out.push(ClusterCandidate {
+                            index: out.len(),
+                            world,
+                            plan: plan.clone(),
+                            strategy_label: label.clone(),
+                            strategy: *strategy,
+                            algo: *algo,
+                            sharing: *sharing,
+                        });
+                    }
                 }
             }
         }
@@ -310,6 +349,7 @@ pub fn cluster_base_scenario(budget: &Budget, c: &ClusterCandidate) -> SimScenar
         steps: budget.steps,
         mode: ScenarioMode::Full,
         algo: c.algo,
+        sharing: c.sharing,
         gpu: budget.gpu,
         seed: budget.seed,
         len_jitter: budget.framework.default_len_jitter(),
@@ -393,6 +433,33 @@ mod tests {
     }
 
     #[test]
+    fn sharing_axis_widens_the_space_and_suffixes_keys() {
+        let mut budget = Budget::rtx3090_table1();
+        budget.strategies = Some(vec!["none".to_string()]);
+        budget.allocators = Some(vec!["default".to_string()]);
+        budget.sharings = Some(vec!["separate".to_string(), "hydra".to_string()]);
+        let cands = enumerate(&budget).unwrap();
+        // 2 sharings × 1 strategy × 4 policies × 1 allocator.
+        assert_eq!(cands.len(), 2 * 4);
+        assert_eq!(cands[0].key(), "None/never/default");
+        assert_eq!(cands[4].key(), "None/never/hydra/default");
+        assert_eq!(cands[0].sharing, Sharing::Separate);
+        assert_eq!(cands[4].sharing, Sharing::Hydra);
+        let cells = to_cells(&budget, &cands);
+        assert_eq!(cells[4].scenario.sharing, Sharing::Hydra);
+        assert_eq!(cells[4].key, "advise/None/never/hydra/default");
+        // Algo precedes sharing in combined keys.
+        budget.algos = Some(vec!["grpo".to_string()]);
+        budget.sharings = Some(vec!["lora".to_string()]);
+        let cands = enumerate(&budget).unwrap();
+        assert_eq!(cands[0].key(), "None/never/grpo/lora/default");
+        budget.sharings = Some(vec!["siamese".to_string()]);
+        let err = enumerate(&budget).unwrap_err();
+        assert!(err.contains("unknown sharing 'siamese'"), "{err}");
+        assert!(err.contains("separate, lora, hydra, frozen-shared"), "{err}");
+    }
+
+    #[test]
     fn cluster_space_shape_and_keys() {
         let mut budget = Budget::rtx3090_table1();
         budget.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
@@ -422,6 +489,15 @@ mod tests {
         assert_eq!(cands[1].key(), "cluster/w2/colocated/None/grpo");
         let base = cluster_base_scenario(&budget, &cands[1]);
         assert_eq!(base.algo, Algo::Grpo);
+        // The sharing axis widens it too, suffixing after the algo.
+        budget.algos = None;
+        budget.sharings = Some(vec!["separate".to_string(), "lora".to_string()]);
+        let cands = enumerate_cluster(&budget).unwrap();
+        assert_eq!(cands.len(), 3 * 2 * 2);
+        assert_eq!(cands[0].key(), "cluster/w2/colocated/None");
+        assert_eq!(cands[1].key(), "cluster/w2/colocated/None/lora");
+        let base = cluster_base_scenario(&budget, &cands[1]);
+        assert_eq!(base.sharing, Sharing::Lora);
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! Report renderers: generic text tables, the paper-shaped outputs
 //! (Table 1/2 rows, Figure 1 annotations), the cluster placement tables
-//! behind `rlhf-mem cluster`, and the per-algorithm comparison behind
-//! `rlhf-mem algos`.
+//! behind `rlhf-mem cluster`, the per-algorithm comparison behind
+//! `rlhf-mem algos`, and the model-sharing comparison behind
+//! `rlhf-mem peft`.
 
 pub mod algos;
 pub mod cluster;
 pub mod paper;
+pub mod peft;
 pub mod table;
 
 pub use paper::{render_rows, StrategyRow};

@@ -1,0 +1,105 @@
+//! Model-sharing comparison renderer: one row per strategy, one
+//! `Resv`/`Time` column pair per sharing placement — the table behind
+//! `rlhf-mem peft`, showing how much of the full-replica memory bill a
+//! shared frozen backbone (LoRA adapters, hydra heads) forgives and what
+//! it costs in modeled step time (the Efficient-RLHF trade-off).
+
+use crate::report::table::TextTable;
+use crate::rlhf::program::{Algo, Sharing};
+use crate::sweep::CellResult;
+use crate::util::bytes::fmt_gib_paper;
+
+/// Build the comparison table from the `algo`'s sweep cells (one cell
+/// per strategy × sharing; extra axes collapse onto the same row/column
+/// slot, last writer wins; other algorithms' cells are skipped).
+/// Strategies keep first-seen order; `sharings` fixes the column order.
+/// Cells that OOMed render as `OOM`.
+pub fn comparison_table(cells: &[CellResult], sharings: &[Sharing], algo: Algo) -> TextTable {
+    let mut header: Vec<String> = vec!["Strategy".to_string()];
+    for s in sharings {
+        header.push(format!("{} Resv", s.name()));
+        header.push(format!("{} ms", s.name()));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = TextTable::new(&header_refs);
+
+    // strategy label -> per-sharing (reserved, time_us, oom) slots.
+    let mut rows: Vec<(String, Vec<Option<(u64, f64, bool)>>)> = Vec::new();
+    for cell in cells {
+        if cell.algo != algo.name() {
+            continue;
+        }
+        let Some(si) = sharings.iter().position(|s| s.name() == cell.sharing) else {
+            continue;
+        };
+        let ri = match rows.iter().position(|(s, _)| *s == cell.strategy) {
+            Some(i) => i,
+            None => {
+                rows.push((cell.strategy.clone(), vec![None; sharings.len()]));
+                rows.len() - 1
+            }
+        };
+        rows[ri].1[si] = Some((
+            cell.summary.peak_reserved,
+            cell.summary.total_time_us,
+            cell.summary.oom,
+        ));
+    }
+
+    for (strategy, slots) in rows {
+        let mut out = vec![strategy];
+        for slot in slots {
+            match slot {
+                Some((_, _, true)) => {
+                    out.push("OOM".to_string());
+                    out.push("OOM".to_string());
+                }
+                Some((reserved, time_us, false)) => {
+                    out.push(fmt_gib_paper(reserved));
+                    out.push(format!("{:.1}", time_us / 1000.0));
+                }
+                None => {
+                    out.push("-".to_string());
+                    out.push("-".to_string());
+                }
+            }
+        }
+        t.row(out);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+    use crate::sweep::{SweepGrid, SweepRunner};
+
+    #[test]
+    fn table_has_one_row_per_strategy_and_columns_per_sharing() {
+        let sharings = [Sharing::Separate, Sharing::Lora, Sharing::Hydra];
+        let cells = SweepGrid::new()
+            .strategies([
+                ("None", StrategyConfig::none()),
+                ("ZeRO-3", StrategyConfig::zero3()),
+            ])
+            .policies([EmptyCachePolicy::Never])
+            .sharings(sharings)
+            .steps(1)
+            .build()
+            .unwrap();
+        let report = SweepRunner::new(2).run(cells);
+        let t = comparison_table(&report.cells, &sharings, Algo::Ppo);
+        assert_eq!(t.header.len(), 1 + 2 * sharings.len());
+        assert_eq!(t.header[1], "separate Resv");
+        assert_eq!(t.header[6], "hydra ms");
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "None");
+        assert_eq!(t.rows[1][0], "ZeRO-3");
+        // Every slot filled (no OOM on the paper testbed at 1 step).
+        for row in &t.rows {
+            assert!(row.iter().all(|c| c != "-" && c != "OOM"), "{row:?}");
+        }
+    }
+}

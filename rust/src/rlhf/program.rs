@@ -28,6 +28,12 @@
 //! four-model cast, GRPO's and ReMax's critic-free variants, and DPO's
 //! reference-only preference pipeline each compile to a different node
 //! list — exactly the axis the memory study sweeps.
+//!
+//! Orthogonal to both is the **model-sharing axis** ([`Sharing`]): how the
+//! cast maps onto stored parameters (separate replicas, LoRA pairs sharing
+//! frozen backbones, Hydra's single trunk). Sharing leaves the compiled
+//! node list untouched — it reshapes the tensor lists the emitter
+//! allocates for each role.
 
 use crate::mem::DType;
 use crate::rlhf::models::{Role, RoleSet};
@@ -131,6 +137,112 @@ impl Algo {
     /// (doubling the effective batch of those phases)?
     pub fn pairs(self) -> bool {
         self == Algo::Dpo
+    }
+}
+
+/// How the cast shares parameter storage — the parameter-efficient
+/// placements of Efficient-RLHF (arXiv 2309.00754) and PERL (arXiv
+/// 2403.10704). Sharing never changes *which* phases compile (the
+/// [`PhaseProgram`] is placement-invariant); it changes the tensor lists
+/// the emitter allocates per role: who owns a backbone, who rides a
+/// frozen one, and whether optimizer/gradient state is sized off adapter
+/// parameters only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sharing {
+    /// Every role loads its own full replica — the paper's testbed and
+    /// the bit-identical default path.
+    Separate,
+    /// LoRA-PPO: actor/reference share one frozen policy backbone and
+    /// critic/reward one frozen value backbone; the trainable roles train
+    /// LoRA adapters (plus the critic's value head) instead of the base
+    /// weights, so optimizer and gradient state shrink to adapter size.
+    Lora,
+    /// Hydra-PPO: a *single* frozen policy backbone hosts all four roles;
+    /// value roles become scalar heads over the shared trunk. The actor
+    /// trains the shared adapter set, the critic only its value head.
+    Hydra,
+    /// Frozen weight sharing without adapter-only training: each pair
+    /// shares one stored base replica (no duplicate frozen copies), but
+    /// the trainable roles keep their [`Sharing::Separate`] training
+    /// state (actor LoRA-or-full, critic full fine-tune).
+    FrozenShared,
+}
+
+impl Sharing {
+    pub const ALL: [Sharing; 4] = [
+        Sharing::Separate,
+        Sharing::Lora,
+        Sharing::Hydra,
+        Sharing::FrozenShared,
+    ];
+
+    /// Stable name used in sweep-cell keys, JSON reports and configs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Sharing::Separate => "separate",
+            Sharing::Lora => "lora",
+            Sharing::Hydra => "hydra",
+            Sharing::FrozenShared => "frozen-shared",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|x| x.name() == s)
+    }
+
+    /// Parse a comma-separated sharing list (CLI flags), with the shared
+    /// unknown-name error message.
+    pub fn parse_list(s: &str) -> Result<Vec<Sharing>, String> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|x| !x.is_empty())
+            .map(|n| {
+                Sharing::by_name(n).ok_or_else(|| {
+                    format!("unknown sharing '{n}' (valid: {})", Sharing::known_names())
+                })
+            })
+            .collect()
+    }
+
+    /// Comma-separated valid names (for CLI/config error messages).
+    pub fn known_names() -> String {
+        Self::ALL
+            .iter()
+            .map(|x| x.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// The roles that share one stored backbone with `role`. The group's
+    /// *owner* — the first group member (in [`Role::ALL`] order) active on
+    /// a GPU — allocates the backbone; the other members allocate only
+    /// their private head tensors.
+    pub fn group_of(self, role: Role) -> RoleSet {
+        match self {
+            Sharing::Separate => RoleSet::of(&[role]),
+            Sharing::Lora | Sharing::FrozenShared => match role {
+                Role::Actor | Role::Reference => {
+                    RoleSet::of(&[Role::Actor, Role::Reference])
+                }
+                Role::Critic | Role::Reward => RoleSet::of(&[Role::Critic, Role::Reward]),
+            },
+            Sharing::Hydra => RoleSet::ALL,
+        }
+    }
+
+    /// Do base weights stay frozen (training touches adapters/heads
+    /// only)? Frozen backbones are never ZeRO-partitioned — there is
+    /// nothing to re-materialize per step — and the hybrid engine's
+    /// second inference copy shrinks to adapter size.
+    pub fn frozen_backbone(self) -> bool {
+        matches!(self, Sharing::Lora | Sharing::Hydra)
+    }
+
+    /// Does the sharing collapse the cast onto the policy architecture
+    /// (Hydra's one-trunk placement)? When true, the value roles are
+    /// heads over the *policy* backbone instead of separate value models.
+    pub fn unifies_architectures(self) -> bool {
+        self == Sharing::Hydra
     }
 }
 
@@ -502,6 +614,73 @@ mod tests {
         );
         let err = Algo::parse_list("ppo,sarsa").unwrap_err();
         assert!(err.contains("unknown algo 'sarsa'"), "{err}");
+    }
+
+    #[test]
+    fn sharing_names_roundtrip() {
+        for s in Sharing::ALL {
+            assert_eq!(Sharing::by_name(s.name()), Some(s));
+        }
+        assert_eq!(Sharing::by_name("mega-shared"), None);
+        assert_eq!(Sharing::known_names(), "separate, lora, hydra, frozen-shared");
+        assert_eq!(
+            Sharing::parse_list("separate, lora,hydra").unwrap(),
+            vec![Sharing::Separate, Sharing::Lora, Sharing::Hydra]
+        );
+        let err = Sharing::parse_list("lora,mega").unwrap_err();
+        assert!(err.contains("unknown sharing 'mega'"), "{err}");
+    }
+
+    #[test]
+    fn sharing_groups_and_flags() {
+        use crate::rlhf::models::Role;
+        // Separate: everyone is their own group owner.
+        for r in Role::ALL {
+            assert_eq!(Sharing::Separate.group_of(r), RoleSet::of(&[r]));
+        }
+        // LoRA / frozen-shared pair the architectures.
+        for s in [Sharing::Lora, Sharing::FrozenShared] {
+            assert_eq!(
+                s.group_of(Role::Reference),
+                RoleSet::of(&[Role::Actor, Role::Reference])
+            );
+            assert_eq!(
+                s.group_of(Role::Reward),
+                RoleSet::of(&[Role::Critic, Role::Reward])
+            );
+        }
+        // Hydra: one trunk for the whole cast.
+        assert_eq!(Sharing::Hydra.group_of(Role::Critic), RoleSet::ALL);
+        assert!(Sharing::Lora.frozen_backbone());
+        assert!(Sharing::Hydra.frozen_backbone());
+        assert!(!Sharing::Separate.frozen_backbone());
+        assert!(!Sharing::FrozenShared.frozen_backbone());
+        assert!(Sharing::Hydra.unifies_architectures());
+        assert!(!Sharing::Lora.unifies_architectures());
+    }
+
+    #[test]
+    fn sharing_never_changes_the_compiled_program() {
+        // The sharing axis reshapes tensor lists, not the pipeline: every
+        // sharing compiles the identical node list.
+        for algo in Algo::ALL {
+            for mode in ScenarioMode::ALL {
+                let mut base = scn(algo, mode);
+                base.sharing = Sharing::Separate;
+                let reference = PhaseProgram::compile(&base);
+                for sharing in Sharing::ALL {
+                    base.sharing = sharing;
+                    assert_eq!(
+                        PhaseProgram::compile(&base),
+                        reference,
+                        "{}/{}/{}",
+                        algo.name(),
+                        mode.name(),
+                        sharing.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -25,13 +25,13 @@
 use crate::frameworks::{FrameworkKind, FrameworkProfile, GenerationImpl};
 use crate::mem::{
     adam_state_tensors, lora::lora_tensors, ActivationModel, AdamConfig, DType, KvCacheModel,
-    ParamInventory, SeqShape, TensorSpec,
+    LoraSpec, ParamInventory, SeqShape, TensorSpec,
 };
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::cost::{CostModel, GpuSpec};
 use crate::rlhf::models::{RlhfModelSet, Role, RoleSet};
 use crate::rlhf::program::{
-    AdvantageKind, Algo, ExpTensor, LossKind, PhaseBody, PhaseNode, PhaseProgram,
+    AdvantageKind, Algo, ExpTensor, LossKind, PhaseBody, PhaseNode, PhaseProgram, Sharing,
 };
 use crate::strategies::{zero, StrategyConfig};
 use crate::trace::{PhaseKind, Tag, Trace, TraceBuilder, TraceHandle};
@@ -91,6 +91,12 @@ pub struct SimScenario {
     /// Which RLHF algorithm the pipeline runs — decides the model cast
     /// and the compiled [`PhaseProgram`] (PPO is the paper's default).
     pub algo: Algo,
+    /// How the cast shares parameter storage (LoRA-PPO pairs, Hydra's
+    /// single trunk). [`Sharing::Separate`] — every role its own full
+    /// replica — reproduces the paper's testbed bit-for-bit; the other
+    /// placements reshape the per-role tensor lists the emitter
+    /// allocates, never the compiled phase pipeline.
+    pub sharing: Sharing,
     pub gpu: GpuSpec,
     /// Seed for response-length sampling.
     pub seed: u64,
@@ -166,6 +172,7 @@ impl ScenarioPreset {
             steps: 3,
             mode: ScenarioMode::Full,
             algo: Algo::Ppo,
+            sharing: Sharing::Separate,
             gpu: GpuSpec::rtx3090(),
             seed: 0x5EED,
             len_jitter: self.framework.default_len_jitter(),
@@ -204,6 +211,10 @@ struct SimModel {
     /// Trainable tensors (LoRA adapters + value head, or everything if
     /// LoRA is off).
     trainable: Vec<TensorSpec>,
+    /// Parameter tensors this role allocates *itself*: the full inventory
+    /// when it owns (or doesn't share) its backbone, only its private
+    /// head tensors when it rides another role's frozen replica.
+    extra: Vec<TensorSpec>,
     /// Persistent handles.
     param_handles: Vec<TraceHandle>,
     adapter_handles: Vec<TraceHandle>,
@@ -216,24 +227,81 @@ struct SimModel {
 
 impl SimModel {
     fn build(role: Role, scn: &SimScenario) -> SimModel {
-        let inv = scn.models.inventory_for(role);
-        let act = ActivationModel::new(scn.models.arch_for(role), DType::F16);
-        let kv = KvCacheModel::new(scn.models.arch_for(role), DType::F16);
+        let sharing = scn.sharing;
+        // Hydra collapses the cast onto the policy trunk: value roles are
+        // scalar heads over the actor architecture, not separate models.
+        let inv = if sharing.unifies_architectures() && role.has_value_head() {
+            ParamInventory::build_with_value_head(&scn.models.policy_arch)
+        } else {
+            scn.models.inventory_for(role)
+        };
+        let arch = if sharing.unifies_architectures() {
+            &scn.models.policy_arch
+        } else {
+            scn.models.arch_for(role)
+        };
+        let act = ActivationModel::new(arch, DType::F16);
+        let kv = KvCacheModel::new(arch, DType::F16);
         let cost = CostModel::for_inventory(&inv, scn.gpu);
         // DeepSpeed-Chat's reference scripts set `actor_lora_dim 128` but
         // leave `critic_lora_dim 0`: the critic is fully fine-tuned. This
         // is what makes ZeRO-1's optimizer partitioning worth ~4 GB in
         // Table 1 (the critic's full Adam state dwarfs the actor's LoRA
-        // state).
+        // state). The LoRA/Hydra sharings are exactly the Efficient-RLHF
+        // counter-move: every trainable role shrinks to adapters/heads.
         let trainable: Vec<TensorSpec> = if !role.is_trainable() {
             vec![]
-        } else if role == Role::Actor {
-            match scn.strategy.lora {
-                Some(spec) => lora_tensors(&inv, spec),
-                None => inv.tensors.clone(),
-            }
         } else {
+            match sharing {
+                Sharing::Separate | Sharing::FrozenShared => {
+                    if role == Role::Actor {
+                        match scn.strategy.lora {
+                            Some(spec) => lora_tensors(&inv, spec),
+                            None => inv.tensors.clone(),
+                        }
+                    } else {
+                        inv.tensors.clone()
+                    }
+                }
+                Sharing::Lora => {
+                    let spec = scn.strategy.lora.unwrap_or_else(LoraSpec::paper_default);
+                    let mut t = lora_tensors(&inv, spec);
+                    t.extend(
+                        inv.tensors.iter().filter(|t| t.name == "v_head").cloned(),
+                    );
+                    t
+                }
+                Sharing::Hydra => {
+                    if role == Role::Actor {
+                        let spec =
+                            scn.strategy.lora.unwrap_or_else(LoraSpec::paper_default);
+                        lora_tensors(&inv, spec)
+                    } else {
+                        // The critic trains only its head over the trunk.
+                        inv.tensors
+                            .iter()
+                            .filter(|t| t.name == "v_head")
+                            .cloned()
+                            .collect()
+                    }
+                }
+            }
+        };
+        // Backbone ownership: the first *active* member of the role's
+        // sharing group (Role::ALL order) stores the shared replica; the
+        // others allocate only their private head tensors. Under
+        // `Separate` every role is its own owner, so `extra` is the full
+        // inventory — bit-identical to the pre-axis traces.
+        let active = scn.roles.intersect(scn.algo.roles());
+        let owner = sharing.group_of(role).intersect(active).iter().next();
+        let extra: Vec<TensorSpec> = if owner == Some(role) || owner.is_none() {
             inv.tensors.clone()
+        } else {
+            inv.tensors
+                .iter()
+                .filter(|t| t.name == "v_head")
+                .cloned()
+                .collect()
         };
         SimModel {
             role,
@@ -242,6 +310,7 @@ impl SimModel {
             kv,
             cost,
             trainable,
+            extra,
             param_handles: vec![],
             adapter_handles: vec![],
             opt_handles: vec![],
@@ -253,6 +322,18 @@ impl SimModel {
     fn trainable_bytes_f16(&self) -> u64 {
         self.trainable.iter().map(|t| t.bytes(DType::F16)).sum()
     }
+
+    fn extra_bytes_f16(&self) -> u64 {
+        self.extra.iter().map(|t| t.bytes(DType::F16)).sum()
+    }
+}
+
+/// F16 bytes of `role`'s trainable tensors under `scn`'s strategy *and
+/// sharing* — the gradient-synchronisation payload. The coordinator's
+/// collective model charges this instead of re-deriving the trainable
+/// rules privately.
+pub fn trainable_bytes_f16(scn: &SimScenario, role: Role) -> u64 {
+    SimModel::build(role, scn).trainable_bytes_f16()
 }
 
 /// Experience tensors shared across phases within one PPO step.
@@ -494,6 +575,18 @@ impl<'a> Emitter<'a> {
         }
     }
 
+    /// Is `role`'s fp16 backbone stored ZeRO-3-partitioned on this rank
+    /// (so forwards must gather)? Only the *training engines* shard —
+    /// DeepSpeed-Chat's and ColossalChat's reference scripts leave frozen
+    /// replicas unsharded — and a frozen shared backbone (LoRA/Hydra)
+    /// never shards: the base weights take no optimizer step, so there is
+    /// nothing to re-materialize per micro-batch.
+    fn param_partitioned(&self, role: Role) -> bool {
+        self.scn.strategy.zero.partitions_params()
+            && role.is_trainable()
+            && !self.scn.sharing.frozen_backbone()
+    }
+
     // ---------------- Init ----------------
 
     fn init(&mut self) {
@@ -510,16 +603,15 @@ impl<'a> Emitter<'a> {
             if !self.active.contains(role) {
                 continue;
             }
-            let m = self.model_mut(role);
-            // fp16 replica: per-tensor; partitioned under ZeRO-3 — but only
-            // for the *training engines* (actor, critic). DeepSpeed-Chat's
-            // and ColossalChat's reference scripts leave the frozen
-            // reference/reward replicas unsharded regardless of the actor's
-            // ZeRO stage.
-            let partition = z.partitions_params() && role.is_trainable();
+            // fp16 replica: per-tensor; partitioned under ZeRO-3, for the
+            // training engines only (see `param_partitioned`). Under a
+            // sharing placement a role allocates its `extra` tensors — the
+            // full inventory if it owns its group's backbone, just its
+            // value head if it rides another role's frozen replica.
+            let partition = self.param_partitioned(role);
+            let m = self.model(role);
             let sizes: Vec<u64> = m
-                .inv
-                .tensors
+                .extra
                 .iter()
                 .map(|t| {
                     let full = t.bytes(DType::F16);
@@ -535,16 +627,40 @@ impl<'a> Emitter<'a> {
             m.param_handles = handles;
             m.resident = true;
 
-            // LoRA adapters (dense; only the actor carries them).
-            let adapter_sizes: Vec<u64> = if role == Role::Actor && self.scn.strategy.lora.is_some()
-            {
-                self.model(role)
+            // Dense adapters. Separate/frozen-shared keep today's rule
+            // (only the actor carries LoRA); the adapter-training
+            // placements allocate every trainable role's adapter set (the
+            // value head is already a Param above, so it is excluded).
+            let adapter_sizes: Vec<u64> = match self.scn.sharing {
+                Sharing::Separate | Sharing::FrozenShared => {
+                    if role == Role::Actor && self.scn.strategy.lora.is_some() {
+                        self.model(role)
+                            .trainable
+                            .iter()
+                            .map(|t| t.bytes(DType::F16))
+                            .collect()
+                    } else {
+                        vec![]
+                    }
+                }
+                Sharing::Lora => self
+                    .model(role)
                     .trainable
                     .iter()
+                    .filter(|t| t.name != "v_head")
                     .map(|t| t.bytes(DType::F16))
-                    .collect()
-            } else {
-                vec![]
+                    .collect(),
+                Sharing::Hydra => {
+                    if role == Role::Actor {
+                        self.model(role)
+                            .trainable
+                            .iter()
+                            .map(|t| t.bytes(DType::F16))
+                            .collect()
+                    } else {
+                        vec![]
+                    }
+                }
             };
             if !adapter_sizes.is_empty() {
                 let hs = self.b.alloc_group(adapter_sizes, Tag::Param);
@@ -595,15 +711,28 @@ impl<'a> Emitter<'a> {
 
         // DeepSpeed-Chat hybrid engine: fused inference containers hold a
         // second copy of the actor weights (ZeRO-3 materializes them from
-        // gathers at generation time instead).
+        // gathers at generation time instead). With a frozen shared
+        // backbone only the adapters drift from the inference copy, so
+        // the duplicate shrinks to per-layer adapter bytes.
         if self.scn.framework.hybrid_engine
-            && !z.partitions_params()
+            && !self.param_partitioned(Role::Actor)
             && self.active.contains(Role::Actor)
         {
             let layers = self.actor.inv.arch.n_layers;
             let mut sizes: Vec<u64> = Vec::new();
             for l in 0..layers {
-                sizes.push(self.actor.inv.layer_bytes(l, DType::F16));
+                let b = if self.scn.sharing.frozen_backbone() {
+                    self.actor
+                        .trainable
+                        .iter()
+                        .filter(|t| t.layer == Some(l))
+                        .map(|t| t.bytes(DType::F16))
+                        .sum::<u64>()
+                        .max(16)
+                } else {
+                    self.actor.inv.layer_bytes(l, DType::F16)
+                };
+                sizes.push(b);
             }
             let hs = self.b.alloc_group(sizes, Tag::Param);
             self.actor.opt_handles.extend(hs); // lifetime = engine lifetime
@@ -615,7 +744,7 @@ impl<'a> Emitter<'a> {
     fn generation(&mut self, greedy_baseline: bool) {
         let fw = &self.scn.framework;
         let world = self.scn.world;
-        let z3 = self.scn.strategy.zero.partitions_params();
+        let z3 = self.param_partitioned(Role::Actor);
 
         // DeepSpeed hybrid-engine style: under ZeRO-3 the actor's full
         // parameters are gathered once for the whole generation phase.
@@ -947,7 +1076,7 @@ impl<'a> Emitter<'a> {
         );
         let mut fwd_us = 0.0;
         for l in 0..n_layers {
-            if z.partitions_params() {
+            if self.param_partitioned(role) {
                 // Prefetch-bucketed all-gather; gathered copies stay live up
                 // to `stage3_max_live_parameters`, interleaving with the
                 // saved activations below.
@@ -1010,7 +1139,7 @@ impl<'a> Emitter<'a> {
             zero::defaults::PREFETCH_BUCKET_BYTES,
         );
         for (i, _l) in (0..n_layers).rev().enumerate() {
-            if z.partitions_params() {
+            if self.param_partitioned(role) {
                 let newly = stream.advance(i, &mut ring, &mut self.b);
                 bwd_us += self.model(role).cost.allgather_us(newly, world);
             }
@@ -1134,21 +1263,24 @@ impl<'a> Emitter<'a> {
             return;
         }
         let hs = std::mem::take(&mut self.model_mut(role).param_handles);
-        let bytes: u64 = 0;
-        let _ = bytes;
         self.b.free_all(hs);
         self.model_mut(role).resident = false;
-        let total = self.model(role).inv.total_bytes(DType::F16);
-        let us = self.model(role).cost.host_copy_us(total);
-        self.b.compute(us);
+        // A role that rides another role's frozen replica only moves its
+        // own (`extra`) tensors; the shared backbone stays on-device.
+        let total = self.model(role).extra_bytes_f16();
+        if total > 0 {
+            let us = self.model(role).cost.host_copy_us(total);
+            self.b.compute(us);
+        }
     }
 
     fn upload_model(&mut self, role: Role) {
         // Only frozen scorers are host-offloaded, and those are unsharded.
+        // With a sharing placement the role re-allocates only the tensors
+        // it owns (`extra`) — a shared backbone never left the device.
         let sizes: Vec<u64> = self
             .model(role)
-            .inv
-            .tensors
+            .extra
             .iter()
             .map(|t| t.bytes(DType::F16))
             .collect();
@@ -1156,9 +1288,11 @@ impl<'a> Emitter<'a> {
         let m = self.model_mut(role);
         m.param_handles = hs;
         m.resident = true;
-        let total = self.model(role).inv.total_bytes(DType::F16);
-        let us = self.model(role).cost.host_copy_us(total);
-        self.b.compute(us);
+        let total = self.model(role).extra_bytes_f16();
+        if total > 0 {
+            let us = self.model(role).cost.host_copy_us(total);
+            self.b.compute(us);
+        }
     }
 
     // ---------------- helpers ----------------
@@ -1186,8 +1320,9 @@ impl<'a> Emitter<'a> {
     /// before the gathered parameters are released.
     fn forward_layers(&mut self, role: Role, sh: SeqShape, head_sizes: &[u64]) {
         // Only the sharded training engines (actor/critic) need gathers;
-        // the frozen scorers hold full replicas.
-        let z3 = self.scn.strategy.zero.partitions_params() && role.is_trainable();
+        // frozen scorers — and frozen shared backbones — hold full
+        // replicas.
+        let z3 = self.param_partitioned(role);
         let world = self.scn.world;
         let n_layers = self.model(role).inv.arch.n_layers;
         let mut ring = GatherRing::new(zero::defaults::MAX_LIVE_GATHERED_BYTES);
@@ -1543,5 +1678,100 @@ mod tests {
             .ops
             .iter()
             .any(|op| matches!(op, TraceOp::Alloc { tag: Tag::KvCache, .. })));
+    }
+
+    fn alloc_bytes(t: &Trace, want: Tag) -> u64 {
+        use crate::trace::TraceOp;
+        t.ops
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::Alloc { tag, bytes, .. } if *tag == want => Some(*bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    #[test]
+    fn shared_backbones_shrink_param_footprint() {
+        let traced = |sharing: Sharing| {
+            let mut scn = small_scn(StrategyConfig::none());
+            scn.sharing = sharing;
+            alloc_bytes(&build_trace(&scn), Tag::Param)
+        };
+        let separate = traced(Sharing::Separate);
+        let lora = traced(Sharing::Lora);
+        let hydra = traced(Sharing::Hydra);
+        let frozen = traced(Sharing::FrozenShared);
+        assert!(hydra < lora, "hydra {hydra} !< lora {lora}");
+        assert!(lora < separate, "lora {lora} !< separate {separate}");
+        assert!(frozen < separate, "frozen {frozen} !< separate {separate}");
+    }
+
+    #[test]
+    fn adapter_only_optimizer_state_shrinks() {
+        let opt = |sharing: Sharing| {
+            let mut scn = small_scn(StrategyConfig::none());
+            scn.sharing = sharing;
+            alloc_bytes(&build_trace(&scn), Tag::OptState)
+        };
+        let separate = opt(Sharing::Separate);
+        let lora = opt(Sharing::Lora);
+        let hydra = opt(Sharing::Hydra);
+        // Separate is dominated by the critic's *full* Adam state; the
+        // sharing placements keep only adapter/head moments.
+        assert!(
+            lora * 2 < separate,
+            "lora Adam state {lora} vs full fine-tune {separate}"
+        );
+        assert!(hydra < lora, "hydra {hydra} !< lora {lora}");
+    }
+
+    #[test]
+    fn sharing_traces_stay_balanced() {
+        for sharing in Sharing::ALL {
+            for algo in Algo::ALL {
+                let mut scn = small_scn(StrategyConfig::zero3());
+                scn.sharing = sharing;
+                scn.algo = algo;
+                let trace = build_trace(&scn);
+                trace
+                    .check_balanced()
+                    .unwrap_or_else(|e| panic!("{}/{}: {e}", sharing.name(), algo.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_backbones_skip_zero3_gathers() {
+        use crate::trace::TraceOp;
+        let gathers = |sharing: Sharing| {
+            let mut scn = small_scn(StrategyConfig::zero3());
+            scn.sharing = sharing;
+            build_trace(&scn)
+                .ops
+                .iter()
+                .filter(|op| matches!(op, TraceOp::Alloc { tag: Tag::CommBuffer, .. }))
+                .count()
+        };
+        let separate = gathers(Sharing::Separate);
+        let lora = gathers(Sharing::Lora);
+        // A frozen backbone holds a full replica — no per-layer gather
+        // churn, only the persistent reduce buckets survive.
+        assert!(
+            lora * 10 < separate,
+            "lora gathers {lora} vs separate {separate}"
+        );
+    }
+
+    #[test]
+    fn colossal_offload_only_moves_owned_tensors_under_sharing() {
+        let mut scn = SimScenario::colossal_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 2;
+        let separate = alloc_bytes(&build_trace(&scn), Tag::Param);
+        scn.sharing = Sharing::Lora;
+        let lora = alloc_bytes(&build_trace(&scn), Tag::Param);
+        // Ref/reward re-uploads shrink to their private heads, so the
+        // cumulative Param traffic collapses alongside the Init footprint.
+        assert!(lora < separate / 2, "{lora} vs {separate}");
     }
 }

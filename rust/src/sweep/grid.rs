@@ -1,7 +1,7 @@
 //! Grid construction: enumerate framework × model-set × strategy ×
-//! scenario-mode × `empty_cache`-policy × algorithm × allocator-config
-//! combinations into a flat list of [`SweepCell`]s with deterministic
-//! per-cell seeds.
+//! scenario-mode × `empty_cache`-policy × algorithm × model-sharing ×
+//! allocator-config combinations into a flat list of [`SweepCell`]s with
+//! deterministic per-cell seeds.
 
 use crate::alloc::AllocatorConfig;
 use crate::experiment::RTX3090_HBM;
@@ -9,7 +9,7 @@ use crate::frameworks::{FrameworkKind, FrameworkProfile};
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::cost::GpuSpec;
 use crate::rlhf::models::RlhfModelSet;
-use crate::rlhf::program::Algo;
+use crate::rlhf::program::{Algo, Sharing};
 use crate::rlhf::sim::{ScenarioMode, SimScenario};
 use crate::strategies::StrategyConfig;
 use std::sync::Arc;
@@ -31,8 +31,9 @@ pub enum SeedPolicy {
 pub struct SweepCell {
     /// `framework/model/strategy/mode/policy` — the stable identity used
     /// by filters, seeds and reports. Grids with a non-PPO algorithm axis
-    /// append `/algo`, and a non-default allocator axis `/alloc_label`,
-    /// as extra components (in that order).
+    /// append `/algo`, a non-separate sharing axis `/sharing`, and a
+    /// non-default allocator axis `/alloc_label`, as extra components (in
+    /// that order).
     pub key: String,
     pub framework: String,
     pub model: String,
@@ -42,6 +43,9 @@ pub struct SweepCell {
     /// RLHF algorithm of the cell (`ppo` unless the grid's algorithm
     /// axis says otherwise).
     pub algo: Algo,
+    /// Model-sharing placement of the cell (`separate` unless the grid's
+    /// sharing axis says otherwise).
+    pub sharing: Sharing,
     /// Display label of the allocator configuration ("default" unless the
     /// grid's allocator axis says otherwise).
     pub alloc_label: String,
@@ -70,6 +74,7 @@ pub struct SweepGrid {
     allocators: Vec<(String, AllocatorConfig)>,
     modes: Vec<ScenarioMode>,
     algos: Vec<Algo>,
+    sharings: Vec<Sharing>,
     steps: u64,
     world: u64,
     capacity: u64,
@@ -98,6 +103,7 @@ impl SweepGrid {
             allocators: vec![("default".to_string(), AllocatorConfig::default())],
             modes: vec![ScenarioMode::Full],
             algos: vec![Algo::Ppo],
+            sharings: vec![Sharing::Separate],
             steps: 3,
             world: 4,
             capacity: RTX3090_HBM,
@@ -161,6 +167,15 @@ impl SweepGrid {
     /// legacy five-part keys the paper presets and tests rely on.
     pub fn algos(mut self, al: impl IntoIterator<Item = Algo>) -> Self {
         self.algos = al.into_iter().collect();
+        self
+    }
+
+    /// Model-sharing axis (`separate`/`lora`/`hydra`/`frozen-shared`).
+    /// Non-separate placements are appended to the cell key (after the
+    /// algo component, before the allocator label) so single-placement
+    /// grids keep their legacy keys.
+    pub fn sharings(mut self, sh: impl IntoIterator<Item = Sharing>) -> Self {
+        self.sharings = sh.into_iter().collect();
         self
     }
 
@@ -242,6 +257,10 @@ impl SweepGrid {
             key.push('/');
             key.push_str(scenario.algo.name());
         }
+        if scenario.sharing != Sharing::Separate {
+            key.push('/');
+            key.push_str(scenario.sharing.name());
+        }
         self.extra.push(SweepCell {
             key,
             framework,
@@ -250,6 +269,7 @@ impl SweepGrid {
             mode: scenario.mode,
             policy: scenario.policy,
             algo: scenario.algo,
+            sharing: scenario.sharing,
             alloc_label: "default".to_string(),
             alloc_cfg: AllocatorConfig::default(),
             capacity: self.capacity,
@@ -285,72 +305,81 @@ impl SweepGrid {
                     for mode in &self.modes {
                         for policy in &self.policies {
                             for algo in &self.algos {
-                                for (alabel, acfg) in &self.allocators {
-                                    let scenario_key = format!(
-                                        "{}/{}/{}/{}/{}",
-                                        kind.name(),
-                                        mlabel,
-                                        slabel,
-                                        mode.name(),
-                                        policy.name()
-                                    );
-                                    let mut key = scenario_key.clone();
-                                    if *algo != Algo::Ppo {
-                                        key.push('/');
-                                        key.push_str(algo.name());
+                                for sharing in &self.sharings {
+                                    for (alabel, acfg) in &self.allocators {
+                                        let scenario_key = format!(
+                                            "{}/{}/{}/{}/{}",
+                                            kind.name(),
+                                            mlabel,
+                                            slabel,
+                                            mode.name(),
+                                            policy.name()
+                                        );
+                                        let mut key = scenario_key.clone();
+                                        if *algo != Algo::Ppo {
+                                            key.push('/');
+                                            key.push_str(algo.name());
+                                        }
+                                        if *sharing != Sharing::Separate {
+                                            key.push('/');
+                                            key.push_str(sharing.name());
+                                        }
+                                        if alabel != "default" {
+                                            key.push('/');
+                                            key.push_str(alabel);
+                                        }
+                                        if !self.passes_filters(&key) {
+                                            continue;
+                                        }
+                                        let mut scenario = SimScenario {
+                                            framework: profile.clone(),
+                                            models: models.clone(),
+                                            strategy: *strategy,
+                                            world: self.world,
+                                            policy: *policy,
+                                            steps: self.steps,
+                                            mode: *mode,
+                                            algo: *algo,
+                                            sharing: *sharing,
+                                            gpu: self.gpu,
+                                            seed: match self.seed {
+                                                SeedPolicy::Fixed(s) => s,
+                                                // Seeded from the *scenario*
+                                                // key (without the algo,
+                                                // sharing or allocator
+                                                // suffixes): cells differing
+                                                // only in those axes must
+                                                // sample the identical
+                                                // length-jitter stream, else
+                                                // the measured axis delta is
+                                                // confounded by seed noise.
+                                                SeedPolicy::PerCell(base) => {
+                                                    derive_seed(base, &scenario_key)
+                                                }
+                                            },
+                                            len_jitter: kind.default_len_jitter(),
+                                            roles: crate::rlhf::models::RoleSet::ALL,
+                                            time_shared: crate::rlhf::models::RoleSet::EMPTY,
+                                            rank: 0,
+                                        };
+                                        if let Some(f) = &self.customize {
+                                            f(&mut scenario);
+                                        }
+                                        cells.push(SweepCell {
+                                            key,
+                                            framework: kind.name().to_string(),
+                                            model: mlabel.clone(),
+                                            strategy: slabel.clone(),
+                                            mode: *mode,
+                                            policy: *policy,
+                                            algo: *algo,
+                                            sharing: *sharing,
+                                            alloc_label: alabel.clone(),
+                                            alloc_cfg: acfg.clone(),
+                                            scenario,
+                                            capacity: self.capacity,
+                                        });
                                     }
-                                    if alabel != "default" {
-                                        key.push('/');
-                                        key.push_str(alabel);
-                                    }
-                                    if !self.passes_filters(&key) {
-                                        continue;
-                                    }
-                                    let mut scenario = SimScenario {
-                                        framework: profile.clone(),
-                                        models: models.clone(),
-                                        strategy: *strategy,
-                                        world: self.world,
-                                        policy: *policy,
-                                        steps: self.steps,
-                                        mode: *mode,
-                                        algo: *algo,
-                                        gpu: self.gpu,
-                                        seed: match self.seed {
-                                            SeedPolicy::Fixed(s) => s,
-                                            // Seeded from the *scenario*
-                                            // key (without the algo or
-                                            // allocator suffixes): cells
-                                            // differing only in those axes
-                                            // must sample the identical
-                                            // length-jitter stream, else
-                                            // the measured axis delta is
-                                            // confounded by seed noise.
-                                            SeedPolicy::PerCell(base) => {
-                                                derive_seed(base, &scenario_key)
-                                            }
-                                        },
-                                        len_jitter: kind.default_len_jitter(),
-                                        roles: crate::rlhf::models::RoleSet::ALL,
-                                        time_shared: crate::rlhf::models::RoleSet::EMPTY,
-                                        rank: 0,
-                                    };
-                                    if let Some(f) = &self.customize {
-                                        f(&mut scenario);
-                                    }
-                                    cells.push(SweepCell {
-                                        key,
-                                        framework: kind.name().to_string(),
-                                        model: mlabel.clone(),
-                                        strategy: slabel.clone(),
-                                        mode: *mode,
-                                        policy: *policy,
-                                        algo: *algo,
-                                        alloc_label: alabel.clone(),
-                                        alloc_cfg: acfg.clone(),
-                                        scenario,
-                                        capacity: self.capacity,
-                                    });
                                 }
                             }
                         }
@@ -545,6 +574,71 @@ mod tests {
             .unwrap();
         assert_eq!(cells.len(), 2);
         assert_eq!(cells[0].scenario.seed, cells[1].scenario.seed);
+    }
+
+    #[test]
+    fn sharing_axis_suffixes_non_separate_keys() {
+        let cells = SweepGrid::new()
+            .sharings([Sharing::Separate, Sharing::Lora, Sharing::Hydra])
+            .build()
+            .unwrap();
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].key, "DeepSpeed-Chat/OPT/None/full/never");
+        assert_eq!(cells[1].key, "DeepSpeed-Chat/OPT/None/full/never/lora");
+        assert_eq!(cells[2].key, "DeepSpeed-Chat/OPT/None/full/never/hydra");
+        assert_eq!(cells[0].sharing, Sharing::Separate);
+        assert_eq!(cells[1].scenario.sharing, Sharing::Lora);
+        // The axis participates in filters like every key component.
+        let only = SweepGrid::new()
+            .sharings([Sharing::Separate, Sharing::Hydra])
+            .include("hydra")
+            .build()
+            .unwrap();
+        assert_eq!(only.len(), 1);
+        assert_eq!(only[0].sharing, Sharing::Hydra);
+        // Suffix order: algo, then sharing, then allocator label.
+        let combined = SweepGrid::new()
+            .algos([Algo::Grpo])
+            .sharings([Sharing::Lora])
+            .allocator_configs([(
+                "expandable",
+                AllocatorConfig {
+                    expandable_segments: true,
+                    ..AllocatorConfig::default()
+                },
+            )])
+            .build()
+            .unwrap();
+        assert_eq!(
+            combined[0].key,
+            "DeepSpeed-Chat/OPT/None/full/never/grpo/lora/expandable"
+        );
+    }
+
+    #[test]
+    fn per_cell_seeds_ignore_the_sharing_suffix() {
+        // Cells differing only in the sharing placement replay the
+        // identical workload — the placement delta must not be confounded
+        // by seeds.
+        let cells = SweepGrid::new()
+            .sharings([Sharing::Separate, Sharing::Hydra])
+            .seeds(SeedPolicy::PerCell(42))
+            .build()
+            .unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].scenario.seed, cells[1].scenario.seed);
+    }
+
+    #[test]
+    fn push_scenario_suffixes_sharing() {
+        let mut scn = SimScenario::colossal_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.sharing = Sharing::Lora;
+        let cells = SweepGrid::new()
+            .push_scenario("ColossalChat", "OPT", "custom", scn)
+            .build()
+            .unwrap();
+        assert_eq!(cells[1].key, "ColossalChat/OPT/custom/full/never/lora");
+        assert_eq!(cells[1].sharing, Sharing::Lora);
     }
 
     #[test]

@@ -58,9 +58,9 @@ impl SweepReport {
     /// `(framework, model)` in first-seen order, one [`StrategyRow`] per
     /// strategy (per scenario mode — non-`full` modes get the mode
     /// appended to the row label so multi-mode grids don't collapse;
-    /// non-PPO algorithms and non-default allocator configs likewise get
-    /// their labels appended so those axes don't overwrite the stock
-    /// rows).
+    /// non-PPO algorithms, non-separate sharing placements and
+    /// non-default allocator configs likewise get their labels appended
+    /// so those axes don't overwrite the stock rows).
     /// A cell with policy `never` fills the row's "original" half,
     /// `after_both` the "+ empty_cache" half; a row missing one half
     /// mirrors the other (so `never`-only grids still render).
@@ -84,6 +84,9 @@ impl SweepReport {
             };
             if cell.algo != "ppo" {
                 row_label = format!("{} [{}]", row_label, cell.algo);
+            }
+            if cell.sharing != "separate" {
+                row_label = format!("{} [{}]", row_label, cell.sharing);
             }
             if cell.alloc != "default" {
                 row_label = format!("{} [{}]", row_label, cell.alloc);
@@ -185,6 +188,21 @@ mod tests {
         assert_eq!(rows.len(), 2, "allocator variants must not collapse");
         assert_eq!(rows[0].strategy, "None");
         assert_eq!(rows[1].strategy, "None [expandable]");
+    }
+
+    #[test]
+    fn sharing_axis_gets_its_own_rows() {
+        use crate::rlhf::program::Sharing;
+        let cells = SweepGrid::new()
+            .sharings([Sharing::Separate, Sharing::Hydra])
+            .steps(1)
+            .build()
+            .unwrap();
+        let report = SweepRunner::new(2).run(cells);
+        let rows = &report.strategy_rows()[0].2;
+        assert_eq!(rows.len(), 2, "sharing variants must not collapse");
+        assert_eq!(rows[0].strategy, "None");
+        assert_eq!(rows[1].strategy, "None [hydra]");
     }
 
     #[test]

@@ -33,6 +33,9 @@ pub struct CellResult {
     /// RLHF algorithm name of the cell ("ppo" unless the grid's
     /// algorithm axis set one).
     pub algo: &'static str,
+    /// Model-sharing placement name of the cell ("separate" unless the
+    /// grid's sharing axis set one).
+    pub sharing: &'static str,
     /// Allocator-config label of the cell ("default" unless the grid's
     /// allocator axis set one).
     pub alloc: String,
@@ -54,6 +57,7 @@ impl CellResult {
             ("mode", Json::str(self.mode)),
             ("policy", Json::str(self.policy)),
             ("algo", Json::str(self.algo)),
+            ("sharing", Json::str(self.sharing)),
             ("alloc", Json::str(self.alloc.clone())),
             ("seed", Json::from(self.seed)),
             ("reserved", Json::from(self.summary.peak_reserved)),
@@ -177,6 +181,7 @@ fn run_cell(index: usize, cell: &SweepCell, capture: bool) -> CellResult {
         mode: cell.mode.name(),
         policy: cell.policy.name(),
         algo: cell.algo.name(),
+        sharing: cell.sharing.name(),
         alloc: cell.alloc_label.clone(),
         seed: cell.scenario.seed,
         summary,

@@ -74,6 +74,31 @@ fn cluster_algo_axis_is_jobs_deterministic_and_lighter_without_critic() {
 }
 
 #[test]
+fn cluster_sharing_axis_is_jobs_deterministic_and_lighter_shared() {
+    let mut budget = tiny_budget();
+    budget.strategies = Some(vec!["none".to_string()]);
+    budget.sharings = Some(vec!["separate".to_string(), "lora".to_string()]);
+    let serial = plan_cluster(&budget, 1).unwrap();
+    let pooled = plan_cluster(&budget, 4).unwrap();
+    assert_eq!(serial.jsonl(), pooled.jsonl());
+    // 3 plans × 1 strategy × 2 sharings, keyed with the sharing suffix.
+    assert_eq!(serial.outcomes.len(), 6);
+    let find = |key: &str| {
+        serial
+            .outcomes
+            .iter()
+            .find(|o| o.candidate.key() == key)
+            .unwrap_or_else(|| panic!("missing {key}"))
+    };
+    let separate = find("cluster/w2/colocated/None");
+    let lora = find("cluster/w2/colocated/None/lora");
+    assert!(
+        lora.run.max_peak_reserved() < separate.run.max_peak_reserved(),
+        "sharing the frozen backbones must lighten every colocated GPU"
+    );
+}
+
+#[test]
 fn fused_placement_beats_dedicated_gpu_total() {
     // The paper's (and Hydra's) fused-placement claim: colocating the
     // frozen reference + reward models with the training pair costs less
@@ -112,7 +137,8 @@ fn example_budget_round_trips_through_the_cluster_planner() {
     budget.strategies = Some(vec!["none".to_string()]);
     budget.worlds = Some(vec![2]);
     let report = plan_cluster(&budget, 2).unwrap();
-    assert_eq!(report.outcomes.len(), 3, "3 placement presets");
+    // 3 placement presets × the example file's two sharing placements.
+    assert_eq!(report.outcomes.len(), 6, "3 plans x 2 sharings");
     let rec = report.recommended();
     assert!(
         !rec.is_empty(),

@@ -68,6 +68,36 @@ fn advise_with_algo_axis_is_jobs_deterministic() {
 }
 
 #[test]
+fn advise_with_sharing_axis_is_jobs_deterministic() {
+    let mut budget = narrowed_budget();
+    budget.allocators = Some(vec!["default".to_string()]);
+    budget.sharings = Some(vec![
+        "separate".to_string(),
+        "lora".to_string(),
+        "hydra".to_string(),
+    ]);
+    let serial = plan(&budget, 1).unwrap();
+    let pooled = plan(&budget, 4).unwrap();
+    assert_eq!(serial.jsonl(), pooled.jsonl());
+    // 3 sharings × 2 strategies × 4 policies × 1 allocator.
+    assert_eq!(serial.outcomes.len(), 3 * 2 * 4);
+    // Overheads are measured within one placement's workload: every
+    // un-mitigated baseline is its own zero, whatever the sharing.
+    for o in &serial.outcomes {
+        if o.candidate.policy == EmptyCachePolicy::Never
+            && o.candidate.alloc_label == "default"
+            && !o.summary.oom
+        {
+            assert_eq!(o.overhead_pct, Some(0.0), "{}", o.candidate.key());
+        }
+    }
+    // The shared-backbone placements must dominate the recommendation:
+    // same workload semantics, strictly less memory.
+    let best = serial.best().expect("something fits");
+    assert_ne!(best.candidate.sharing.name(), "separate");
+}
+
+#[test]
 fn advise_reproduces_itself_across_runs() {
     let budget = narrowed_budget();
     let a = plan(&budget, 3).unwrap();
@@ -87,7 +117,9 @@ fn example_budget_file_round_trips_through_the_planner() {
     budget.strategies = Some(vec!["none".to_string()]);
     budget.allocators = Some(vec!["default".to_string()]);
     let report = plan(&budget, 2).unwrap();
-    assert_eq!(report.outcomes.len(), 4);
+    // 1 strategy × 4 policies × 1 allocator × the example file's two
+    // sharing placements (separate, lora).
+    assert_eq!(report.outcomes.len(), 8);
     assert!(report.best().is_some(), "the paper's testbed fits 24 GiB");
 }
 

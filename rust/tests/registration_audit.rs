@@ -1,0 +1,127 @@
+//! Meta-test: every integration test file is actually registered.
+//!
+//! Because the crate lays its sources out under `rust/` instead of the
+//! default `tests/`, Cargo's auto-discovery is off and every integration
+//! test needs an explicit `[[test]]` block in `Cargo.toml`. A file that
+//! is added without one compiles never and fails never — PR 4 found
+//! `cluster_determinism.rs` silently dead this way. This test walks both
+//! directions: every `rust/tests/*.rs` file has a `[[test]]` entry, and
+//! every `[[test]]` entry points at an existing file.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// Minimal extraction of `[[test]]` blocks from Cargo.toml: collects the
+/// `name`/`path` pairs that follow each `[[test]]` header (the manifest
+/// is committed alongside this file, so the dependency-free parse only
+/// has to handle the style used there: one `key = "value"` per line).
+fn registered_tests(manifest: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut in_test = false;
+    let mut name: Option<String> = None;
+    let mut path: Option<String> = None;
+    let mut flush = |name: &mut Option<String>, path: &mut Option<String>| {
+        if name.is_some() || path.is_some() {
+            out.push((
+                name.take().unwrap_or_default(),
+                path.take().unwrap_or_default(),
+            ));
+        }
+    };
+    for line in manifest.lines() {
+        let line = line.trim();
+        if line.starts_with('[') {
+            if in_test {
+                flush(&mut name, &mut path);
+            }
+            in_test = line == "[[test]]";
+            continue;
+        }
+        if !in_test {
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            continue;
+        };
+        let value = value.trim().trim_matches('"').to_string();
+        match key.trim() {
+            "name" => name = Some(value),
+            "path" => path = Some(value),
+            _ => {}
+        }
+    }
+    if in_test {
+        flush(&mut name, &mut path);
+    }
+    out
+}
+
+fn repo_root() -> std::path::PathBuf {
+    // CARGO_MANIFEST_DIR is the repo root (Cargo.toml lives there).
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn every_test_file_is_registered_in_the_manifest() {
+    let root = repo_root();
+    let manifest = std::fs::read_to_string(root.join("Cargo.toml")).expect("read Cargo.toml");
+    let registered: BTreeSet<String> = registered_tests(&manifest)
+        .into_iter()
+        .map(|(_, path)| path)
+        .collect();
+
+    let mut on_disk: BTreeSet<String> = BTreeSet::new();
+    for entry in std::fs::read_dir(root.join("rust/tests")).expect("read rust/tests") {
+        let entry = entry.expect("dir entry");
+        if !entry.file_type().expect("file type").is_file() {
+            continue; // support/ dirs hold shared helpers, not test roots
+        }
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.ends_with(".rs") {
+            on_disk.insert(format!("rust/tests/{name}"));
+        }
+    }
+
+    let dead: Vec<&String> = on_disk.difference(&registered).collect();
+    assert!(
+        dead.is_empty(),
+        "test files with no [[test]] block in Cargo.toml (they never run): {dead:?}"
+    );
+    assert!(
+        on_disk.contains("rust/tests/registration_audit.rs"),
+        "the audit must see itself — the directory scan is broken"
+    );
+}
+
+#[test]
+fn every_manifest_entry_points_at_a_real_file() {
+    let root = repo_root();
+    let manifest = std::fs::read_to_string(root.join("Cargo.toml")).expect("read Cargo.toml");
+    let entries = registered_tests(&manifest);
+    assert!(
+        entries.len() >= 11,
+        "expected the known [[test]] blocks, parsed only {}",
+        entries.len()
+    );
+    for (name, path) in entries {
+        assert!(!name.is_empty(), "[[test]] block without a name (path {path})");
+        assert!(
+            !path.is_empty(),
+            "[[test]] '{name}' has no explicit path — auto-discovery is off \
+             for this layout, so it would never run"
+        );
+        assert!(
+            Path::new(&root.join(&path)).is_file(),
+            "[[test]] '{name}' points at missing file {path}"
+        );
+        let stem = Path::new(&path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or_default();
+        assert_eq!(
+            name, stem,
+            "[[test]] name should match its file stem for greppability"
+        );
+    }
+}

@@ -72,6 +72,28 @@ fn fixed_seed_grid_reproduces_itself() {
 }
 
 #[test]
+fn sharing_axis_grid_is_jobs_deterministic() {
+    use rlhf_mem::rlhf::program::Sharing;
+    let cells = grid().seeds(SeedPolicy::PerCell(7)).sharings(Sharing::ALL).build().unwrap();
+    assert_eq!(cells.len(), 8 * Sharing::ALL.len());
+    // Non-separate cells carry the placement as an extra key component,
+    // and per-cell seeds ignore it (same scenario, different placement →
+    // same response lengths).
+    assert_eq!(cells[0].key, "DeepSpeed-Chat/OPT/None/full/never");
+    assert_eq!(cells[1].key, "DeepSpeed-Chat/OPT/None/full/never/lora");
+    assert_eq!(cells[0].scenario.seed, cells[1].scenario.seed);
+    let serial = SweepRunner::new(1).run(cells.clone());
+    let pooled = SweepRunner::new(4).run(cells);
+    assert_eq!(
+        serial.jsonl(),
+        pooled.jsonl(),
+        "the sharing axis must not break --jobs determinism"
+    );
+    // The JSONL carries the placement for every cell.
+    assert!(serial.jsonl().lines().all(|l| l.contains("\"sharing\":")));
+}
+
+#[test]
 fn algo_axis_grid_is_jobs_deterministic() {
     use rlhf_mem::rlhf::program::Algo;
     let cells = grid().algos(Algo::ALL).build().unwrap();

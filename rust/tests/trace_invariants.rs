@@ -1,16 +1,20 @@
 //! Property-style trace invariants over the full algorithm × strategy ×
-//! mode grid (plus placement subsets): every trace the interpreter emits
-//! must uphold handle discipline, lifetime closure at the final StepEnd,
-//! and a phase-mark sequence exactly matching its compiled
-//! [`PhaseProgram`] — only phases of hosted, algorithm-active roles, in
-//! program order.
+//! mode grid (plus placement subsets and the model-sharing axis): every
+//! trace the interpreter emits must uphold handle discipline, lifetime
+//! closure at the final StepEnd, and a phase-mark sequence exactly
+//! matching its compiled [`PhaseProgram`] — only phases of hosted,
+//! algorithm-active roles, in program order. Shared frozen backbones
+//! additionally must allocate each shared weight handle exactly once
+//! (handle discipline makes a double allocation a hard error) and keep
+//! adapter-only optimizer state at or under the full fine-tune bill.
 
 use rlhf_mem::coordinator::PlacementPlan;
 use rlhf_mem::policy::EmptyCachePolicy;
-use rlhf_mem::rlhf::program::{Algo, PhaseProgram};
+use rlhf_mem::rlhf::program::{Algo, PhaseProgram, Sharing};
 use rlhf_mem::rlhf::sim::{build_trace, ScenarioMode, SimScenario};
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::trace::analysis::check_invariants;
+use rlhf_mem::trace::{Tag, Trace, TraceOp};
 
 fn check(scn: &SimScenario, context: &str) {
     let program = PhaseProgram::compile(scn);
@@ -51,6 +55,114 @@ fn colossal_offload_cycles_uphold_the_invariants() {
             scn.mode = mode;
             scn.algo = algo;
             check(&scn, &format!("cc/zero3/{}/{}", mode.name(), algo.name()));
+        }
+    }
+}
+
+#[test]
+fn sharing_grid_upholds_the_invariants() {
+    for sharing in Sharing::ALL {
+        for algo in Algo::ALL {
+            for (label, strategy) in StrategyConfig::table1_deepspeed_rows() {
+                let mut scn =
+                    SimScenario::deepspeed_opt(strategy, EmptyCachePolicy::AfterBoth);
+                scn.steps = 1;
+                scn.algo = algo;
+                scn.sharing = sharing;
+                check(
+                    &scn,
+                    &format!("ds/{label}/{}/{}", algo.name(), sharing.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharing_survives_colossal_offload_cycles() {
+    // ColossalChat swaps scorers to host during training; under sharing
+    // the scorers' device tensors are adapters or value heads, never the
+    // backbone another role still needs — two steps exercise the full
+    // offload/upload cycle per placement.
+    for sharing in Sharing::ALL {
+        for algo in Algo::ALL {
+            let mut scn = SimScenario::colossal_opt(
+                StrategyConfig::zero3(),
+                EmptyCachePolicy::AfterInference,
+            );
+            scn.steps = 2;
+            scn.algo = algo;
+            scn.sharing = sharing;
+            check(&scn, &format!("cc/zero3/{}/{}", algo.name(), sharing.name()));
+        }
+    }
+}
+
+fn alloc_bytes(t: &Trace, want: Tag) -> u64 {
+    t.ops
+        .iter()
+        .filter_map(|op| match op {
+            TraceOp::Alloc { tag, bytes, .. } if *tag == want => Some(*bytes),
+            _ => None,
+        })
+        .sum()
+}
+
+fn alloc_count(t: &Trace, want: Tag) -> usize {
+    t.ops
+        .iter()
+        .filter(|op| matches!(op, TraceOp::Alloc { tag, .. } if *tag == want))
+        .count()
+}
+
+#[test]
+fn shared_backbones_allocate_each_weight_handle_once() {
+    // One frozen backbone hosts several roles, so shared placements emit
+    // strictly fewer Param allocations than full replicas — and hydra
+    // (one backbone for everything) never more than lora (one per pair).
+    // check_invariants (above) already makes re-allocating a live handle
+    // a hard error, so fewer allocations means each shared handle was
+    // created exactly once.
+    for algo in Algo::ALL {
+        let count = |sharing: Sharing| {
+            let mut scn =
+                SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+            scn.steps = 1;
+            scn.algo = algo;
+            scn.sharing = sharing;
+            alloc_count(&build_trace(&scn), Tag::Param)
+        };
+        let separate = count(Sharing::Separate);
+        let lora = count(Sharing::Lora);
+        let hydra = count(Sharing::Hydra);
+        assert!(lora < separate, "{}: lora {lora} vs separate {separate}", algo.name());
+        // DPO's two-role cast makes hydra and lora the same placement.
+        assert!(hydra <= lora, "{}: hydra {hydra} vs lora {lora}", algo.name());
+    }
+}
+
+#[test]
+fn adapter_optimizer_state_never_exceeds_full_fine_tune() {
+    for algo in Algo::ALL {
+        for (label, strategy) in StrategyConfig::table1_deepspeed_rows() {
+            let opt = |sharing: Sharing| {
+                let mut scn =
+                    SimScenario::deepspeed_opt(strategy, EmptyCachePolicy::Never);
+                scn.steps = 1;
+                scn.algo = algo;
+                scn.sharing = sharing;
+                alloc_bytes(&build_trace(&scn), Tag::OptState)
+            };
+            let separate = opt(Sharing::Separate);
+            for sharing in [Sharing::Lora, Sharing::Hydra, Sharing::FrozenShared] {
+                let shared = opt(sharing);
+                assert!(
+                    shared <= separate,
+                    "ds/{label}/{}/{}: adapter opt state {shared} exceeds full {separate}",
+                    algo.name(),
+                    sharing.name()
+                );
+            }
         }
     }
 }
