@@ -977,6 +977,76 @@ impl CachingAllocator {
             })
             .collect()
     }
+
+    /// Total cached bytes held in segments that are *entirely* free — the
+    /// memory `empty_cache` / the OOM-retry cascade could release right
+    /// now. Served from the pools' fully-free-segment index, O(index len).
+    pub fn cached_fully_free_bytes(&self) -> u64 {
+        self.small.fully_free().map(|(size, _, _)| size).sum::<u64>()
+            + self.large.fully_free().map(|(size, _, _)| size).sum::<u64>()
+    }
+
+    /// Deterministic per-segment map for observability: one record per live
+    /// segment (sorted by segment id — `seg_heads` is a hash map, so the
+    /// iteration order must not leak into artifacts), with the allocated /
+    /// free byte split obtained by walking the segment's block chain.
+    pub fn segment_map(&self) -> Vec<SegmentRecord> {
+        let mut out: Vec<SegmentRecord> = self
+            .seg_heads
+            .iter()
+            .map(|(&seg, &head)| {
+                let mut rec = SegmentRecord {
+                    segment: seg.0,
+                    pool: self.slab.get(head).pool,
+                    origin_phase: self.slab.get(head).origin_phase,
+                    size: self.driver.segment_size(seg),
+                    allocated: 0,
+                    free: 0,
+                    blocks: 0,
+                };
+                let mut cur = head;
+                loop {
+                    let b = self.slab.get(cur);
+                    rec.blocks += 1;
+                    match b.state {
+                        BlockState::Allocated => rec.allocated += b.size,
+                        BlockState::Free => rec.free += b.size,
+                    }
+                    if b.next == NO_BLOCK {
+                        break;
+                    }
+                    cur = BlockId(b.next);
+                }
+                rec
+            })
+            .collect();
+        out.sort_by_key(|r| r.segment);
+        out
+    }
+}
+
+/// One live segment's composition at inspection time (see
+/// [`CachingAllocator::segment_map`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentRecord {
+    pub segment: u32,
+    pub pool: PoolKind,
+    /// Phase during which the segment was first mapped.
+    pub origin_phase: PhaseTag,
+    pub size: u64,
+    /// Bytes in allocated blocks.
+    pub allocated: u64,
+    /// Bytes in free (cached) blocks.
+    pub free: u64,
+    /// Block-chain length.
+    pub blocks: u32,
+}
+
+impl SegmentRecord {
+    /// A segment with zero allocated bytes is releasable cache.
+    pub fn fully_free(&self) -> bool {
+        self.allocated == 0
+    }
 }
 
 #[cfg(test)]

@@ -10,7 +10,7 @@ pub mod driver;
 pub mod pool;
 pub mod stats;
 
-pub use allocator::{AllocError, AllocId, CachingAllocator};
+pub use allocator::{AllocError, AllocId, CachingAllocator, SegmentRecord};
 pub use config::{AllocatorConfig, CostModel, PoolKind};
 pub use driver::{DriverOom, SegmentId, SimDriver};
 pub use stats::{

@@ -10,11 +10,12 @@
 //! generous tolerance, so a perf "optimization" that changes results
 //! cannot land silently (DESIGN.md §13).
 
-use crate::alloc::CachingAllocator;
+use crate::alloc::{AllocatorConfig, CachingAllocator};
 use crate::coordinator::schedule::{cluster_key, run_configs, ClusterConfig};
 use crate::coordinator::PlacementPlan;
 use crate::experiment::{run_scenario, RTX3090_HBM};
 use crate::frameworks::{FrameworkKind, FrameworkProfile};
+use crate::obs::{explain_scenario, ExplainOptions};
 use crate::planner::{plan, Budget};
 use crate::policy::EmptyCachePolicy;
 use crate::rlhf::cost::GpuSpec;
@@ -50,6 +51,7 @@ pub const NAMES: &[&str] = &[
     "advise_search",
     "cluster_sweep",
     "peft_sweep",
+    "explain",
 ];
 
 /// Run one canonical workload by name.
@@ -62,6 +64,7 @@ pub fn run_by_name(name: &str) -> Option<WorkloadRun> {
         "advise_search" => Some(advise_search()),
         "cluster_sweep" => Some(cluster_sweep()),
         "peft_sweep" => Some(peft_sweep()),
+        "explain" => Some(explain_run()),
         _ => None,
     }
 }
@@ -354,6 +357,44 @@ pub fn peft_sweep() -> WorkloadRun {
             ("jsonl_fingerprint", Json::str(hash_text(&report.jsonl()))),
         ]),
         ops: report.cells.len() as u64,
+        wall_s,
+    }
+}
+
+/// The observability stack end-to-end: one `explain` run over the paper's
+/// DeepSpeed/OPT preset with the peak flight recorder, the ranked shrink
+/// table and a Perfetto export all armed. The counters pin the exact
+/// five-way peak decomposition against drift.
+pub fn explain_run() -> WorkloadRun {
+    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+    scn.steps = 1;
+    let opts = ExplainOptions {
+        perfetto_pid: Some(0),
+        ..ExplainOptions::default()
+    };
+    let t = Instant::now();
+    let out = explain_scenario(&scn, RTX3090_HBM, &AllocatorConfig::default(), &opts);
+    let wall_s = t.elapsed().as_secs_f64();
+    let peak = out.report.peak.as_ref().expect("preset must reserve");
+    let b = peak.breakdown;
+    let trace_events = out.perfetto.as_ref().map(|d| d.event_count()).unwrap_or(0);
+    WorkloadRun {
+        name: "explain",
+        deterministic: Json::obj(vec![
+            ("reserved", Json::from(peak.reserved)),
+            ("census_requested", Json::from(b.census_requested)),
+            ("rounding_waste", Json::from(b.rounding_waste)),
+            ("block_slack", Json::from(b.block_slack)),
+            ("free_gaps", Json::from(b.free_gaps)),
+            ("cached_free", Json::from(b.cached_free)),
+            ("rows", Json::from(out.report.rows.len())),
+            ("trace_events", Json::from(trace_events)),
+            (
+                "render_fingerprint",
+                Json::str(hash_text(&out.report.render())),
+            ),
+        ]),
+        ops: trace_events as u64,
         wall_s,
     }
 }

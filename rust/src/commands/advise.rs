@@ -11,6 +11,7 @@
 //! model", and scripts can branch on it.
 
 use rlhf_mem::planner::{plan, plan_cluster, Budget};
+use rlhf_mem::report;
 use rlhf_mem::sweep::SweepRunner;
 use rlhf_mem::util::bytes::fmt_gib_paper;
 use rlhf_mem::util::cli::Args;
@@ -96,9 +97,10 @@ pub fn run(args: &Args) -> Result<(), String> {
         );
     }
     println!("({})", report.summary_line());
+    println!("{}", report::telemetry::render_telemetry(&report.telemetry()));
 
     if let Some(path) = args.flag("jsonl") {
-        std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
+        std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
     if let Some(path) = args.flag("json") {
@@ -141,9 +143,10 @@ fn run_cluster(args: &Args, budget: &Budget, jobs: usize, top: usize) -> Result<
         }
     }
     println!("({})", report.summary_line());
+    println!("{}", report::telemetry::render_telemetry(&report.telemetry()));
 
     if let Some(path) = args.flag("jsonl") {
-        std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
+        std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
     if let Some(path) = args.flag("json") {

@@ -12,9 +12,12 @@
 //! the sweep worker pool; aggregation is serial, so the JSONL output is
 //! byte-identical for any `--jobs`.
 
+use rlhf_mem::alloc::AllocatorConfig;
 use rlhf_mem::coordinator::schedule::{cluster_key, run_configs, ClusterConfig};
 use rlhf_mem::coordinator::{ClusterRun, PlacementPlan};
+use rlhf_mem::experiment::run_scenario_observed;
 use rlhf_mem::frameworks::{FrameworkKind, FrameworkProfile};
+use rlhf_mem::obs::{ObsStack, TraceDoc};
 use rlhf_mem::policy::EmptyCachePolicy;
 use rlhf_mem::report::cluster as render;
 use rlhf_mem::rlhf::cost::GpuSpec;
@@ -48,6 +51,9 @@ FLAGS (comma-separated lists):
   --detail         also print the per-GPU breakdown table
   --jsonl FILE     one deterministic JSON line per configuration
   --json FILE      the whole report as one JSON array
+  --trace-out FILE Perfetto trace of the first configuration: one track
+                   per rank plus collective/P2P flow arrows
+                   (open in ui.perfetto.dev)
 ";
 
 pub fn run(args: &Args) -> Result<(), String> {
@@ -178,6 +184,12 @@ pub fn run(args: &Args) -> Result<(), String> {
         std::fs::write(path, render::jsonl(&runs)).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
+    if let Some(path) = args.flag("trace-out") {
+        let (key, run) = &runs[0];
+        let doc = cluster_trace(&configs[0], run, capacity, steps);
+        std::fs::write(path, doc.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {path} — trace of '{key}' (open in ui.perfetto.dev)");
+    }
     if let Some(path) = args.flag("json") {
         let doc = Json::Arr(
             runs.iter()
@@ -195,4 +207,38 @@ pub fn run(args: &Args) -> Result<(), String> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// Record one configuration's per-rank Perfetto traces (every GPU of the
+/// plan replays its own trace, each on its own `pid` track), merge them,
+/// and draw the modeled per-step collective/P2P costs as flow arrows
+/// between the rank tracks. Everything is derived from simulated time and
+/// the deterministic step-time model — two invocations emit byte-identical
+/// documents.
+fn cluster_trace(config: &ClusterConfig, run: &ClusterRun, capacity: u64, steps: u64) -> TraceDoc {
+    let mut merged = TraceDoc::new();
+    for g in 0..config.plan.gpus() as usize {
+        let scn = config.plan.scenario_for_gpu(&config.base, g);
+        let mut obs = ObsStack::new().record_perfetto(g as u64);
+        let outcome = run_scenario_observed(&scn, capacity, &AllocatorConfig::default(), &mut obs);
+        let doc = obs
+            .finish_perfetto(outcome.end_time_us)
+            .expect("recorder was armed above");
+        merged.merge(doc);
+    }
+    for step in 1..=steps {
+        let t = step as f64 * run.step_time_us;
+        for g in 1..config.plan.gpus() {
+            merged.flow("experience p2p", 0, t, g, t + run.p2p_us, run.p2p_us);
+            merged.flow(
+                "grad allreduce",
+                g,
+                t + run.p2p_us,
+                0,
+                t + run.p2p_us + run.collective_us,
+                run.collective_us,
+            );
+        }
+    }
+    merged
 }

@@ -1,0 +1,45 @@
+//! `rlhf-mem explain <config.json>` — attribute a run's reserved peak:
+//! who owns it (live census by tag / phase / role), what overhead
+//! surrounds it (the exact five-way fragmentation decomposition), and
+//! which knob shrinks each slice first.
+
+use rlhf_mem::alloc::AllocatorConfig;
+use rlhf_mem::config::ExperimentConfig;
+use rlhf_mem::obs::{explain_scenario, ExplainOptions};
+use rlhf_mem::util::cli::Args;
+
+const USAGE: &str =
+    "usage: rlhf-mem explain <config.json> [--json FILE] [--trace-out FILE] [--top-peaks K]";
+
+pub fn run(args: &Args) -> Result<(), String> {
+    let path = args.positional.first().ok_or(USAGE)?;
+    let cfg = ExperimentConfig::from_file(path)?;
+
+    let mut opts = ExplainOptions::default();
+    if let Some(k) = args.flag("top-peaks") {
+        opts.top_k = k
+            .parse()
+            .map_err(|_| format!("--top-peaks: not a count: {k}"))?;
+    }
+    if args.flag("trace-out").is_some() {
+        opts.perfetto_pid = Some(0);
+    }
+
+    let out = explain_scenario(&cfg.scenario, cfg.capacity, &AllocatorConfig::default(), &opts);
+    print!("{}", out.report.render());
+    if out.report.summary.oom {
+        println!("!! OOM — peak shown is where the replay died");
+    }
+
+    if let Some(file) = args.flag("json") {
+        std::fs::write(file, out.report.to_json().to_string_pretty())
+            .map_err(|e| e.to_string())?;
+        println!("wrote {file}");
+    }
+    if let Some(file) = args.flag("trace-out") {
+        let doc = out.perfetto.expect("recorder was armed above");
+        std::fs::write(file, doc.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {file} (open in ui.perfetto.dev)");
+    }
+    Ok(())
+}

@@ -9,6 +9,7 @@ pub mod algos;
 pub mod bench;
 pub mod cluster;
 pub mod debug;
+pub mod explain;
 pub mod genablation;
 pub mod profile;
 pub mod figure1;

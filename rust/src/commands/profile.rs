@@ -1,11 +1,14 @@
 //! `rlhf-mem profile <config.json>` — run a user-defined experiment from a
 //! JSON config (see `config/mod.rs` for the schema) and print the profile.
 
+use rlhf_mem::alloc::AllocatorConfig;
 use rlhf_mem::config::ExperimentConfig;
-use rlhf_mem::experiment::run_scenario;
-use rlhf_mem::util::bytes::fmt_bytes;
+use rlhf_mem::experiment::run_scenario_observed;
+use rlhf_mem::obs::{profile_doc, ObsStack};
+use rlhf_mem::profiler::MemoryProfiler;
+use rlhf_mem::rlhf::program::PhaseProgram;
+use rlhf_mem::util::bytes::{fmt_bytes, MIB};
 use rlhf_mem::util::cli::Args;
-use rlhf_mem::util::json::Json;
 
 pub fn run(args: &Args) -> Result<(), String> {
     let path = args
@@ -13,8 +16,27 @@ pub fn run(args: &Args) -> Result<(), String> {
         .first()
         .ok_or("usage: rlhf-mem profile <config.json>")?;
     let cfg = ExperimentConfig::from_file(path)?;
-    let res = run_scenario(&cfg.scenario, cfg.capacity);
-    let s = &res.summary;
+
+    let profiler = match args.flag("timeline-resolution") {
+        Some(mib) => {
+            let mib: u64 = mib
+                .parse()
+                .map_err(|_| format!("--timeline-resolution: not a MiB count: {mib}"))?;
+            MemoryProfiler::with_timeline_resolution(mib * MIB)
+        }
+        None => MemoryProfiler::new(),
+    };
+    let mut obs = ObsStack::with_profiler(profiler);
+    if args.flag("trace-out").is_some() {
+        obs = obs.record_perfetto(0);
+    }
+    let outcome = run_scenario_observed(
+        &cfg.scenario,
+        cfg.capacity,
+        &AllocatorConfig::default(),
+        &mut obs,
+    );
+    let s = &outcome.summary;
     println!(
         "{} / {} + {} / {} / {} / world {}",
         cfg.scenario.framework.kind.name(),
@@ -33,18 +55,20 @@ pub fn run(args: &Args) -> Result<(), String> {
         println!("  !! OOM — the workload does not fit the configured device");
     }
     if args.bool_flag("chart") {
-        println!("\n{}", res.profiler.timeline.ascii_chart(100, 14));
+        println!("\n{}", obs.profiler.timeline.ascii_chart(100, 14));
     }
     if let Some(out) = args.flag("json") {
-        let doc = Json::obj(vec![
-            ("reserved", Json::from(s.peak_reserved)),
-            ("frag", Json::from(s.frag)),
-            ("allocated", Json::from(s.peak_allocated)),
-            ("peak_phase", Json::str(s.peak_phase.name())),
-            ("oom", Json::from(s.oom)),
-        ]);
+        let program = PhaseProgram::compile(&cfg.scenario);
+        let doc = profile_doc(s, &obs.profiler, &program);
         std::fs::write(out, doc.to_string_pretty()).map_err(|e| e.to_string())?;
         println!("wrote {out}");
+    }
+    if let Some(out) = args.flag("trace-out") {
+        let doc = obs
+            .finish_perfetto(outcome.end_time_us)
+            .expect("recorder was armed above");
+        std::fs::write(out, doc.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {out} (open in ui.perfetto.dev)");
     }
     Ok(())
 }

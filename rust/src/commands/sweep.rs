@@ -14,6 +14,7 @@
 
 use rlhf_mem::frameworks::FrameworkKind;
 use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::report;
 use rlhf_mem::rlhf::cost::GpuSpec;
 use rlhf_mem::rlhf::program::{Algo, Sharing};
 use rlhf_mem::rlhf::sim::ScenarioMode;
@@ -125,8 +126,9 @@ pub fn run(args: &Args) -> Result<(), String> {
 
     println!("{}", report.to_table().render());
     println!("({})", report.summary_line());
+    println!("{}", report::telemetry::render_telemetry(&report.telemetry()));
     if let Some(path) = args.flag("jsonl") {
-        std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
+        std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
     Ok(())

@@ -73,7 +73,7 @@ pub fn run(args: &Args) -> Result<(), String> {
         println!("wrote {path}");
     }
     if let Some(path) = args.flag("jsonl") {
-        std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
+        std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
     Ok(())

@@ -10,6 +10,7 @@
 //! state between concurrent runs.
 
 use crate::alloc::{AllocatorConfig, CachingAllocator};
+use crate::obs::ObsStack;
 use crate::profiler::{MemoryProfiler, ProfileSummary};
 use crate::rlhf::sim::{build_trace, SimScenario};
 use crate::trace::{replay, ReplayResult};
@@ -75,6 +76,54 @@ pub fn run_trace_with(
     }
 }
 
+/// Result of one run under the full observability stack. The sinks
+/// themselves (profiler, peak recorder, Perfetto recorder) stay in the
+/// caller's [`ObsStack`]; this carries what the replay alone knows.
+pub struct ObservedOutcome {
+    pub summary: ProfileSummary,
+    pub replay: ReplayResult,
+    pub final_reserved: u64,
+    pub final_allocated: u64,
+    /// Final simulated time (allocator + compute), the close timestamp
+    /// for [`ObsStack::finish_perfetto`].
+    pub end_time_us: f64,
+}
+
+/// Run a pre-built trace feeding every sink in `obs` — the engine behind
+/// `rlhf-mem explain` and `--trace-out`.
+pub fn run_trace_observed(
+    trace: &crate::trace::Trace,
+    capacity: u64,
+    alloc_cfg: &AllocatorConfig,
+    obs: &mut ObsStack,
+) -> ObservedOutcome {
+    let mut alloc = CachingAllocator::new(capacity, alloc_cfg.clone());
+    let replay_res = replay(trace, &mut alloc, obs);
+    debug_assert!(alloc.validate().is_ok(), "{:?}", alloc.validate());
+    let final_reserved = alloc.reserved();
+    let final_allocated = alloc.allocated();
+    let end_time_us = alloc.time_us() + replay_res.compute_us;
+    let summary = ProfileSummary::collect(&obs.profiler, &alloc, &replay_res);
+    ObservedOutcome {
+        summary,
+        replay: replay_res,
+        final_reserved,
+        final_allocated,
+        end_time_us,
+    }
+}
+
+/// [`run_trace_observed`] starting from a scenario.
+pub fn run_scenario_observed(
+    scn: &SimScenario,
+    capacity: u64,
+    alloc_cfg: &AllocatorConfig,
+    obs: &mut ObsStack,
+) -> ObservedOutcome {
+    let trace = build_trace(scn);
+    run_trace_observed(&trace, capacity, alloc_cfg, obs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +134,20 @@ mod tests {
     fn experiment_result_is_send() {
         fn assert_send<T: Send>() {}
         assert_send::<ExperimentResult>();
+    }
+
+    #[test]
+    fn observed_run_matches_plain_run() {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 1;
+        let base = run_scenario(&scn, RTX3090_HBM);
+        let mut obs = ObsStack::new();
+        let observed =
+            run_scenario_observed(&scn, RTX3090_HBM, &AllocatorConfig::default(), &mut obs);
+        assert_eq!(base.summary, observed.summary);
+        let peak = obs.recorder.peak().expect("peak must be recorded");
+        assert_eq!(peak.reserved, base.summary.peak_reserved);
+        assert_eq!(peak.breakdown.total(), peak.reserved);
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod coordinator;
 pub mod experiment;
 pub mod frameworks;
 pub mod mem;
+pub mod obs;
 pub mod planner;
 pub mod policy;
 pub mod profiler;

@@ -37,6 +37,11 @@ SUBCOMMANDS:
   train        Real end-to-end PPO via PJRT artifacts (needs --features pjrt)
   quickstart   Tiny profiled RLHF run (fast smoke)
   profile      Run a user-defined experiment from a JSON config
+               (--json FILE, --chart, --timeline-resolution MIB,
+               --trace-out FILE for a Perfetto trace)
+  explain      Attribute a run's reserved peak: live-tensor census, exact
+               fragmentation decomposition, ranked shrink levers
+               (--json FILE, --trace-out FILE, --top-peaks K)
   gen-ablation Appendix-B generation() implementation comparison
   debug        Calibration lens: peak composition + frag samples
 
@@ -66,6 +71,7 @@ fn main() {
         Some("quickstart") => commands::quickstart::run(&args),
         Some("debug") => commands::debug::run(&args),
         Some("profile") => commands::profile::run(&args),
+        Some("explain") => commands::explain::run(&args),
         Some("gen-ablation") => commands::genablation::run(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'\n{USAGE}");

@@ -1,0 +1,354 @@
+//! `rlhf-mem explain` core: run a scenario under the full observability
+//! stack and turn the peak snapshot into a ranked "what to shrink first"
+//! report. The command in `commands/explain.rs` is a thin wrapper so the
+//! golden tests can drive everything here directly.
+
+use crate::alloc::AllocatorConfig;
+use crate::experiment::run_trace_observed;
+use crate::obs::{ObsStack, PeakSnapshot, StepPeak, TraceDoc};
+use crate::profiler::ProfileSummary;
+use crate::report::TextTable;
+use crate::rlhf::sim::{build_trace, SimScenario};
+use crate::trace::Tag;
+use crate::util::bytes::fmt_bytes;
+use crate::util::json::Json;
+
+/// Knobs for [`explain_scenario`].
+#[derive(Debug, Clone)]
+pub struct ExplainOptions {
+    /// How many of the largest step peaks to keep (`TopPeaks` mode).
+    pub top_k: usize,
+    /// Also record a Perfetto trace for this rank.
+    pub perfetto_pid: Option<u64>,
+}
+
+impl Default for ExplainOptions {
+    fn default() -> Self {
+        ExplainOptions {
+            top_k: 5,
+            perfetto_pid: None,
+        }
+    }
+}
+
+/// One row of the ranked shrink table.
+#[derive(Debug, Clone)]
+pub struct ShrinkRow {
+    /// "live tensors" census class or allocator overhead class.
+    pub name: &'static str,
+    /// `true` for live census rows (tags), `false` for overhead rows.
+    pub is_census: bool,
+    pub bytes: u64,
+    /// Share of the peak reserved bytes, percent.
+    pub share_pct: f64,
+    /// The mitigation lever that attacks this row.
+    pub advice: &'static str,
+}
+
+/// The full explain result.
+#[derive(Debug)]
+pub struct ExplainReport {
+    pub label: String,
+    pub capacity: u64,
+    pub summary: ProfileSummary,
+    /// Composition at the global reserved peak (`None` only for a replay
+    /// that never mapped device memory).
+    pub peak: Option<PeakSnapshot>,
+    pub top_peaks: Vec<StepPeak>,
+    /// Ranked shrink rows, descending bytes.
+    pub rows: Vec<ShrinkRow>,
+}
+
+/// [`ExplainReport`] plus the optional Perfetto document.
+#[derive(Debug)]
+pub struct ExplainOutcome {
+    pub report: ExplainReport,
+    pub perfetto: Option<TraceDoc>,
+}
+
+/// Which mitigation attacks a census tag (the planner's vocabulary:
+/// strategy / sharing / policy / allocator knobs).
+pub fn advice_for_tag(tag: Tag) -> &'static str {
+    match tag {
+        Tag::Param => "zero=3 partitioning; sharing=lora|hydra (frozen shared base)",
+        Tag::Grad => "zero>=2 partitioning; grad_checkpoint",
+        Tag::OptState => "zero>=1 partitioning; cpu_offload; sharing=lora (adapter-only Adam)",
+        Tag::Activation => "grad_checkpoint; smaller train_micro_batch",
+        Tag::SavedActivation => "grad_checkpoint (recompute in backward)",
+        Tag::KvCache => "smaller rollout_batch / gen_len",
+        Tag::Logits => "smaller infer_micro_batch",
+        Tag::CommBuffer => "smaller ZeRO reduce/allgather buckets",
+        Tag::Staging => "disable cpu_offload (trades memory back for time)",
+        Tag::Workspace => "workload-inherent scratch",
+        Tag::Experience => "smaller rollout_batch; stream experience to host",
+    }
+}
+
+fn overhead_rows(peak: &PeakSnapshot) -> [ShrinkRow; 4] {
+    let b = &peak.breakdown;
+    let mk = |name, bytes, advice| ShrinkRow {
+        name,
+        is_census: false,
+        bytes,
+        share_pct: 0.0,
+        advice,
+    };
+    [
+        mk(
+            "cached-free segments",
+            b.cached_free,
+            "empty_cache=after_inference|after_both; gc threshold",
+        ),
+        mk(
+            "free-gap fragmentation",
+            b.free_gaps,
+            "expandable_segments; max_split_size",
+        ),
+        mk(
+            "block slack",
+            b.block_slack,
+            "max_split_size (split large cached blocks)",
+        ),
+        mk(
+            "rounding waste",
+            b.rounding_waste,
+            "inherent (512 B request rounding)",
+        ),
+    ]
+}
+
+/// Run `scn` under the observability stack and build the report.
+pub fn explain_scenario(
+    scn: &SimScenario,
+    capacity: u64,
+    alloc_cfg: &AllocatorConfig,
+    opts: &ExplainOptions,
+) -> ExplainOutcome {
+    let trace = build_trace(scn);
+    let mut obs = ObsStack::new().top_k(opts.top_k);
+    if let Some(pid) = opts.perfetto_pid {
+        obs = obs.record_perfetto(pid);
+    }
+    let outcome = run_trace_observed(&trace, capacity, alloc_cfg, &mut obs);
+    let perfetto = obs.finish_perfetto(outcome.end_time_us);
+
+    let peak = obs.recorder.peak().cloned();
+    let mut rows: Vec<ShrinkRow> = Vec::new();
+    if let Some(p) = &peak {
+        for (tag, census) in &p.by_tag {
+            rows.push(ShrinkRow {
+                name: tag.name(),
+                is_census: true,
+                bytes: census.requested,
+                share_pct: 0.0,
+                advice: advice_for_tag(*tag),
+            });
+        }
+        rows.extend(overhead_rows(p));
+        rows.retain(|r| r.bytes > 0);
+        rows.sort_by_key(|r| (std::cmp::Reverse(r.bytes), r.name));
+        let reserved = p.reserved.max(1);
+        for r in &mut rows {
+            r.share_pct = r.bytes as f64 * 100.0 / reserved as f64;
+        }
+    }
+
+    let label = format!(
+        "{} / {} + {} / {} / {} / {} / world {}",
+        scn.framework.kind.name(),
+        scn.models.policy_arch.name,
+        scn.models.value_arch.name,
+        scn.strategy.label(),
+        scn.algo.name(),
+        scn.sharing.name(),
+        scn.world
+    );
+    ExplainOutcome {
+        report: ExplainReport {
+            label,
+            capacity,
+            summary: outcome.summary,
+            peak,
+            top_peaks: obs.recorder.top_peaks().to_vec(),
+            rows,
+        },
+        perfetto,
+    }
+}
+
+impl ExplainReport {
+    /// Fraction of the peak reserved bytes the decomposition accounts
+    /// for, percent. By construction this is 100.0 (the five terms sum to
+    /// reserved exactly); the golden test pins it ≥ 99.
+    pub fn accounted_pct(&self) -> f64 {
+        match &self.peak {
+            Some(p) if p.reserved > 0 => {
+                p.breakdown.total() as f64 * 100.0 / p.reserved as f64
+            }
+            _ => 100.0,
+        }
+    }
+
+    /// The ranked shrink table plus the decomposition header, rendered.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.label));
+        let Some(p) = &self.peak else {
+            out.push_str("  no device memory was ever reserved\n");
+            return out;
+        };
+        let b = &p.breakdown;
+        out.push_str(&format!(
+            "  peak reserved {} — set during {} (step {}), {} live tensors\n",
+            fmt_bytes(p.reserved),
+            p.phase.name(),
+            p.step,
+            p.by_tag.iter().map(|(_, c)| c.count).sum::<u64>(),
+        ));
+        out.push_str(&format!(
+            "  = {} live + {} rounding + {} slack + {} free gaps + {} cached-free  ({:.1}% accounted)\n\n",
+            fmt_bytes(b.census_requested),
+            fmt_bytes(b.rounding_waste),
+            fmt_bytes(b.block_slack),
+            fmt_bytes(b.free_gaps),
+            fmt_bytes(b.cached_free),
+            self.accounted_pct(),
+        ));
+        let mut t = TextTable::new(&["#", "what", "class", "bytes", "share", "shrink lever"]);
+        for (i, r) in self.rows.iter().enumerate() {
+            t.row(vec![
+                format!("{}", i + 1),
+                r.name.to_string(),
+                if r.is_census { "live" } else { "overhead" }.to_string(),
+                fmt_bytes(r.bytes),
+                format!("{:.1}%", r.share_pct),
+                r.advice.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        if !self.top_peaks.is_empty() {
+            out.push_str("\n  top step peaks:\n");
+            for sp in &self.top_peaks {
+                let top = sp
+                    .top_tag
+                    .map(|(tag, bytes)| format!("{} {}", tag.name(), fmt_bytes(bytes)))
+                    .unwrap_or_else(|| "-".to_string());
+                out.push_str(&format!(
+                    "    step {:>3}  {:>12}  during {:<15} top live: {}\n",
+                    sp.step,
+                    fmt_bytes(sp.reserved),
+                    sp.phase.name(),
+                    top
+                ));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable document (`explain --json`).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("what", Json::str(r.name)),
+                    (
+                        "class",
+                        Json::str(if r.is_census { "live" } else { "overhead" }),
+                    ),
+                    ("bytes", Json::from(r.bytes)),
+                    ("share_pct", Json::from(r.share_pct)),
+                    ("advice", Json::str(r.advice)),
+                ])
+            })
+            .collect();
+        let top_peaks: Vec<Json> = self
+            .top_peaks
+            .iter()
+            .map(|sp| {
+                Json::obj(vec![
+                    ("step", Json::from(sp.step)),
+                    ("reserved", Json::from(sp.reserved)),
+                    ("phase", Json::str(sp.phase.name())),
+                    (
+                        "top_tag",
+                        match sp.top_tag {
+                            Some((tag, bytes)) => Json::obj(vec![
+                                ("tag", Json::str(tag.name())),
+                                ("bytes", Json::from(bytes)),
+                            ]),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("scenario", Json::str(self.label.clone())),
+            ("capacity", Json::from(self.capacity)),
+            ("reserved", Json::from(self.summary.peak_reserved)),
+            ("accounted_pct", Json::from(self.accounted_pct())),
+            ("oom", Json::from(self.summary.oom)),
+            ("rows", Json::Arr(rows)),
+            (
+                "peak",
+                match &self.peak {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("top_peaks", Json::Arr(top_peaks)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::RTX3090_HBM;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+
+    #[test]
+    fn explain_ranks_and_accounts() {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        scn.steps = 1;
+        let out = explain_scenario(
+            &scn,
+            RTX3090_HBM,
+            &AllocatorConfig::default(),
+            &ExplainOptions::default(),
+        );
+        let r = &out.report;
+        assert!(!r.summary.oom);
+        assert!(r.accounted_pct() >= 99.0, "{}", r.accounted_pct());
+        assert!(!r.rows.is_empty());
+        for w in r.rows.windows(2) {
+            assert!(w[0].bytes >= w[1].bytes, "rows must be ranked");
+        }
+        // Rendering is total and carries the table header.
+        let text = r.render();
+        assert!(text.contains("shrink lever"), "{text}");
+    }
+
+    #[test]
+    fn explain_json_round_trips() {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+        scn.steps = 1;
+        let out = explain_scenario(
+            &scn,
+            RTX3090_HBM,
+            &AllocatorConfig::default(),
+            &ExplainOptions {
+                top_k: 2,
+                perfetto_pid: None,
+            },
+        );
+        let text = out.report.to_json().to_string_pretty();
+        let j = crate::util::json::parse(&text).unwrap();
+        assert!(j.req_f64("accounted_pct").unwrap() >= 99.0);
+        assert!(j.req_arr("rows").unwrap().len() >= 3);
+        assert!(out.report.top_peaks.len() <= 2);
+    }
+}

@@ -1,0 +1,166 @@
+//! Observability subsystem (DESIGN.md §15): the layer that turns the
+//! memory study from a scoreboard into an explainable system.
+//!
+//! Three pillars, all fed by the same replay event stream:
+//!
+//! * **Peak flight recorder** ([`PeakRecorder`]) — a live-block census
+//!   keyed by tag / phase-of-origin / role / pool that snapshots the full
+//!   composition of the reserved peak the moment it is set, with an exact
+//!   five-way fragmentation decomposition ([`PeakBreakdown`]). Surfaced
+//!   by `rlhf-mem explain`.
+//! * **Trace export** ([`perfetto`]) — Chrome/Perfetto trace-event JSON
+//!   (`--trace-out` on `profile` / `explain` / `cluster`): phase spans
+//!   per rank, allocator instants, reserved/allocated counter tracks,
+//!   collective flow events.
+//! * **Run-telemetry ledger** ([`Telemetry`]) — deterministic counters
+//!   (JSONL `telemetry` footers on sweep/planner artifacts) strictly
+//!   separated from wall-clock spans (printed only).
+//!
+//! Determinism rules: every artifact-bound value is derived from
+//! index-ordered results or sorted aggregations; wall-clock never enters
+//! an artifact; the jobs-1 vs jobs-N byte-identical contract holds for
+//! every footer and trace document.
+
+pub mod explain;
+pub mod perfetto;
+pub mod recorder;
+pub mod telemetry;
+
+pub use explain::{explain_scenario, ExplainOptions, ExplainOutcome, ExplainReport, ShrinkRow};
+pub use perfetto::{PerfettoRecorder, TraceDoc};
+pub use recorder::{phase_role, CensusBytes, PeakBreakdown, PeakRecorder, PeakSnapshot, StepPeak};
+pub use telemetry::Telemetry;
+
+use crate::alloc::{AllocEvent, CachingAllocator, StatSnapshot};
+use crate::profiler::MemoryProfiler;
+use crate::trace::{PhaseKind, PhaseSink, TraceOp};
+use crate::util::json::Json;
+
+/// Fan-out sink: one replay feeds the profiler, the peak recorder, and
+/// (optionally) a Perfetto recorder. This is what
+/// [`run_trace_observed`](crate::experiment::run_trace_observed) drives.
+#[derive(Debug)]
+pub struct ObsStack {
+    pub profiler: MemoryProfiler,
+    pub recorder: PeakRecorder,
+    pub perfetto: Option<PerfettoRecorder>,
+}
+
+impl ObsStack {
+    pub fn new() -> Self {
+        Self::with_profiler(MemoryProfiler::new())
+    }
+
+    /// Use a custom-configured profiler (e.g. a non-default timeline
+    /// resolution).
+    pub fn with_profiler(profiler: MemoryProfiler) -> Self {
+        ObsStack {
+            profiler,
+            recorder: PeakRecorder::new(),
+            perfetto: None,
+        }
+    }
+
+    /// Keep the `k` largest step peaks.
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.recorder = PeakRecorder::with_top_k(k);
+        self
+    }
+
+    /// Also record a Perfetto trace for rank `pid`.
+    pub fn record_perfetto(mut self, pid: u64) -> Self {
+        self.perfetto = Some(PerfettoRecorder::new(pid));
+        self
+    }
+
+    /// Close the Perfetto document (if recording) at `end_time_us`.
+    pub fn finish_perfetto(&mut self, end_time_us: f64) -> Option<TraceDoc> {
+        self.perfetto.take().map(|p| p.finish(end_time_us))
+    }
+}
+
+impl Default for ObsStack {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseSink for ObsStack {
+    fn on_phase(&mut self, phase: PhaseKind, alloc: &CachingAllocator, compute_us: f64) {
+        self.profiler.on_phase(phase, alloc, compute_us);
+        self.recorder.on_phase(phase, alloc, compute_us);
+        if let Some(p) = self.perfetto.as_mut() {
+            p.on_phase(phase, alloc, compute_us);
+        }
+    }
+
+    fn on_step_end(&mut self, step: u64, alloc: &CachingAllocator, compute_us: f64) {
+        self.profiler.on_step_end(step, alloc, compute_us);
+        self.recorder.on_step_end(step, alloc, compute_us);
+        if let Some(p) = self.perfetto.as_mut() {
+            p.on_step_end(step, alloc, compute_us);
+        }
+    }
+
+    fn on_alloc_event(&mut self, event: &AllocEvent, state: &StatSnapshot) {
+        self.profiler.on_alloc_event(event, state);
+        self.recorder.on_alloc_event(event, state);
+        if let Some(p) = self.perfetto.as_mut() {
+            p.on_alloc_event(event, state);
+        }
+    }
+
+    fn on_op(&mut self, op: &TraceOp) {
+        self.profiler.on_op(op);
+        self.recorder.on_op(op);
+        if let Some(p) = self.perfetto.as_mut() {
+            p.on_op(op);
+        }
+    }
+
+    fn on_op_end(&mut self, alloc: &CachingAllocator) {
+        self.profiler.on_op_end(alloc);
+        self.recorder.on_op_end(alloc);
+        if let Some(p) = self.perfetto.as_mut() {
+            p.on_op_end(alloc);
+        }
+    }
+}
+
+/// The `profile --json` document. The first five keys are the original
+/// schema and must stay stable (external consumers parse them); the
+/// attribution / frag-sample / empty-cache keys extend it.
+pub fn profile_doc(
+    s: &crate::profiler::ProfileSummary,
+    profiler: &MemoryProfiler,
+    program: &crate::rlhf::program::PhaseProgram,
+) -> Json {
+    let attribution: Vec<Json> = profiler
+        .phase_attribution(program)
+        .into_iter()
+        .map(|(phase, peak)| {
+            Json::obj(vec![
+                ("phase", Json::str(phase.name())),
+                ("reserved", Json::from(peak.reserved)),
+                ("allocated", Json::from(peak.allocated)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        // Legacy keys — order and names pinned by obs_golden.rs.
+        ("reserved", Json::from(s.peak_reserved)),
+        ("frag", Json::from(s.frag)),
+        ("allocated", Json::from(s.peak_allocated)),
+        ("peak_phase", Json::str(s.peak_phase.name())),
+        ("oom", Json::from(s.oom)),
+        // Extensions.
+        ("phase_attribution", Json::Arr(attribution)),
+        ("frag_samples", Json::from(profiler.frag_samples.len())),
+        ("empty_cache_calls", Json::from(s.empty_cache_calls)),
+        (
+            "empty_cache_released",
+            Json::from(profiler.empty_cache_released),
+        ),
+        ("cuda_mallocs", Json::from(s.cuda_mallocs)),
+    ])
+}

@@ -1,0 +1,320 @@
+//! Chrome/Perfetto trace-event export: any profiled run becomes a JSON
+//! document `ui.perfetto.dev` opens directly.
+//!
+//! Schema emitted (the classic trace-event JSON, DESIGN.md §15):
+//! * phase spans — `"ph": "X"` complete events, one track per rank
+//!   (`pid` = rank, `tid` = 1);
+//! * allocator events — `"ph": "i"` instants on a second track
+//!   (`tid` = 2): cudaMalloc / cudaFree / empty_cache / OOM-retry / gc;
+//! * reserved & allocated — `"ph": "C"` counter tracks sampled from the
+//!   allocator's stat snapshots;
+//! * cluster collective costs — `"ph": "s"` / `"ph": "f"` flow events
+//!   between rank tracks.
+//!
+//! All timestamps are simulated microseconds (allocator time + replayed
+//! compute time); nothing wall-clock enters the document, so two runs of
+//! the same scenario emit byte-identical traces.
+
+use crate::alloc::{AllocEvent, CachingAllocator, StatSnapshot};
+use crate::trace::{PhaseKind, PhaseSink};
+use crate::util::json::Json;
+
+/// Builder for one trace-event document. Ranks append via
+/// [`PerfettoRecorder`]; multi-rank documents merge with [`Self::merge`].
+#[derive(Debug, Default)]
+pub struct TraceDoc {
+    events: Vec<Json>,
+    next_flow_id: u64,
+}
+
+impl TraceDoc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, ev: Json) {
+        self.events.push(ev);
+    }
+
+    /// A complete ("X") span on `pid`'s phase track.
+    pub fn span(&mut self, pid: u64, name: &str, ts_us: f64, dur_us: f64) {
+        self.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str("phase")),
+            ("ph", Json::str("X")),
+            ("ts", Json::from(ts_us)),
+            ("dur", Json::from(dur_us)),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(1u64)),
+        ]));
+    }
+
+    /// An instant ("i") on `pid`'s allocator track.
+    pub fn instant(&mut self, pid: u64, name: &str, ts_us: f64, arg_bytes: u64) {
+        self.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str("alloc")),
+            ("ph", Json::str("i")),
+            ("s", Json::str("t")),
+            ("ts", Json::from(ts_us)),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(2u64)),
+            ("args", Json::obj(vec![("bytes", Json::from(arg_bytes))])),
+        ]));
+    }
+
+    /// A counter ("C") sample on `pid`'s `name` counter track.
+    pub fn counter(&mut self, pid: u64, name: &str, ts_us: f64, value: u64) {
+        self.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("ph", Json::str("C")),
+            ("ts", Json::from(ts_us)),
+            ("pid", Json::from(pid)),
+            ("args", Json::obj(vec![("bytes", Json::from(value))])),
+        ]));
+    }
+
+    /// A flow arrow from `(from_pid, from_ts)` to `(to_pid, to_ts)` —
+    /// used for cluster collective/P2P costs between rank tracks.
+    pub fn flow(
+        &mut self,
+        name: &str,
+        from_pid: u64,
+        from_ts_us: f64,
+        to_pid: u64,
+        to_ts_us: f64,
+        cost_us: f64,
+    ) {
+        let id = self.next_flow_id;
+        self.next_flow_id += 1;
+        let args = Json::obj(vec![("cost_us", Json::from(cost_us))]);
+        self.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str("collective")),
+            ("ph", Json::str("s")),
+            ("id", Json::from(id)),
+            ("ts", Json::from(from_ts_us)),
+            ("pid", Json::from(from_pid)),
+            ("tid", Json::from(1u64)),
+            ("args", args.clone()),
+        ]));
+        self.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str("collective")),
+            ("ph", Json::str("f")),
+            ("bp", Json::str("e")),
+            ("id", Json::from(id)),
+            ("ts", Json::from(to_ts_us)),
+            ("pid", Json::from(to_pid)),
+            ("tid", Json::from(1u64)),
+            ("args", args),
+        ]));
+    }
+
+    /// Name `pid`'s process track (shows as the rank label in the UI).
+    pub fn name_process(&mut self, pid: u64, name: &str) {
+        self.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::from(pid)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+
+    /// Append every event of `other` (multi-rank merge). Flow ids are the
+    /// merged doc's concern — callers emit flows on the merged doc only.
+    pub fn merge(&mut self, other: TraceDoc) {
+        self.events.extend(other.events);
+    }
+
+    pub fn event_count(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The final document.
+    pub fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(self.events)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+}
+
+/// A [`PhaseSink`] that records one rank's replay into a [`TraceDoc`]:
+/// phase spans, allocator instants, and reserved/allocated counter
+/// tracks. Counter samples below `counter_resolution` bytes of change are
+/// decimated (same discipline as the profiler's timeline) to keep traces
+/// viewer-sized.
+#[derive(Debug)]
+pub struct PerfettoRecorder {
+    doc: TraceDoc,
+    pid: u64,
+    compute_us: f64,
+    open_span: Option<(PhaseKind, f64)>,
+    last_reserved: u64,
+    last_allocated: u64,
+    counter_resolution: u64,
+    emitted_first_counter: bool,
+}
+
+impl PerfettoRecorder {
+    /// Record rank `pid` (single-GPU runs use rank 0).
+    pub fn new(pid: u64) -> Self {
+        let mut doc = TraceDoc::new();
+        doc.name_process(pid, &format!("rank {pid}"));
+        PerfettoRecorder {
+            doc,
+            pid,
+            compute_us: 0.0,
+            open_span: None,
+            last_reserved: 0,
+            last_allocated: 0,
+            counter_resolution: 1 << 20,
+            emitted_first_counter: false,
+        }
+    }
+
+    fn now(&self, alloc_time_us: f64) -> f64 {
+        alloc_time_us + self.compute_us
+    }
+
+    fn close_span(&mut self, end_us: f64) {
+        if let Some((phase, start)) = self.open_span.take() {
+            self.doc
+                .span(self.pid, phase.name(), start, (end_us - start).max(0.0));
+        }
+    }
+
+    fn sample_counters(&mut self, ts: f64, reserved: u64, allocated: u64) {
+        let moved = reserved.abs_diff(self.last_reserved) >= self.counter_resolution
+            || allocated.abs_diff(self.last_allocated) >= self.counter_resolution;
+        if !moved && self.emitted_first_counter {
+            return;
+        }
+        self.emitted_first_counter = true;
+        self.last_reserved = reserved;
+        self.last_allocated = allocated;
+        self.doc.counter(self.pid, "reserved", ts, reserved);
+        self.doc.counter(self.pid, "allocated", ts, allocated);
+    }
+
+    /// Close the trailing span and hand the document over. `end_time_us`
+    /// is the run's final simulated time (allocator + compute).
+    pub fn finish(mut self, end_time_us: f64) -> TraceDoc {
+        self.close_span(end_time_us);
+        self.doc
+    }
+}
+
+impl PhaseSink for PerfettoRecorder {
+    fn on_phase(&mut self, phase: PhaseKind, alloc: &CachingAllocator, compute_us: f64) {
+        self.compute_us = compute_us;
+        let t = self.now(alloc.time_us());
+        self.close_span(t);
+        self.open_span = Some((phase, t));
+        self.sample_counters(t, alloc.reserved(), alloc.allocated());
+    }
+
+    fn on_step_end(&mut self, step: u64, alloc: &CachingAllocator, compute_us: f64) {
+        self.compute_us = compute_us;
+        let t = self.now(alloc.time_us());
+        self.doc.instant(self.pid, &format!("step {step}"), t, 0);
+    }
+
+    fn on_alloc_event(&mut self, event: &AllocEvent, state: &StatSnapshot) {
+        let t = self.now(state.time_us);
+        match event {
+            AllocEvent::CudaMalloc { segment_bytes, .. } => {
+                self.doc.instant(self.pid, "cudaMalloc", t, *segment_bytes);
+            }
+            AllocEvent::CudaFree { segment_bytes } => {
+                self.doc.instant(self.pid, "cudaFree", t, *segment_bytes);
+            }
+            AllocEvent::EmptyCache { bytes, .. } => {
+                self.doc.instant(self.pid, "empty_cache", t, *bytes);
+            }
+            AllocEvent::OomRetry { released_bytes } => {
+                self.doc.instant(self.pid, "oom_retry", t, *released_bytes);
+            }
+            AllocEvent::GcReclaim { bytes, .. } => {
+                self.doc.instant(self.pid, "gc_reclaim", t, *bytes);
+            }
+            _ => {}
+        }
+        self.sample_counters(t, state.reserved, state.allocated);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::CachingAllocator;
+    use crate::trace::{replay, Tag, TraceBuilder};
+    use crate::util::bytes::{GIB, MIB};
+    use crate::util::json::parse;
+
+    #[test]
+    fn document_round_trips_and_has_tracks() {
+        let mut b = TraceBuilder::new();
+        b.phase(PhaseKind::Generation);
+        b.transient([50 * MIB], Tag::KvCache);
+        b.phase(PhaseKind::TrainActor);
+        b.transient([80 * MIB], Tag::Grad);
+        b.step_end(1);
+        let trace = b.finish();
+
+        let mut alloc = CachingAllocator::with_default_config(GIB);
+        let mut rec = PerfettoRecorder::new(0);
+        let res = replay(&trace, &mut alloc, &mut rec);
+        let doc = rec.finish(alloc.time_us() + res.compute_us);
+        let text = doc.to_json().to_string_pretty();
+
+        let parsed = parse(&text).expect("trace must be valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let ph = |kind: &str| {
+            events
+                .iter()
+                .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some(kind))
+                .count()
+        };
+        assert!(ph("C") >= 2, "counter samples missing");
+        assert!(ph("i") >= 1, "allocator instants missing");
+        let spans: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"))
+            .filter_map(|e| e.get("name").and_then(|v| v.as_str()))
+            .collect();
+        assert!(spans.contains(&"generation"), "{spans:?}");
+        assert!(spans.contains(&"train_actor"), "{spans:?}");
+    }
+
+    #[test]
+    fn flows_pair_start_and_finish() {
+        let mut doc = TraceDoc::new();
+        doc.flow("p2p", 0, 10.0, 1, 20.0, 5.0);
+        let j = doc.to_json();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("s"));
+        assert_eq!(events[1].get("ph").unwrap().as_str(), Some("f"));
+        assert_eq!(events[0].get("id"), events[1].get("id"));
+    }
+
+    #[test]
+    fn identical_runs_emit_identical_traces() {
+        let run = || {
+            let mut b = TraceBuilder::new();
+            b.phase(PhaseKind::Generation);
+            b.transient([30 * MIB, 40 * MIB], Tag::Activation);
+            b.step_end(1);
+            let trace = b.finish();
+            let mut alloc = CachingAllocator::with_default_config(GIB);
+            let mut rec = PerfettoRecorder::new(0);
+            let res = replay(&trace, &mut alloc, &mut rec);
+            rec.finish(alloc.time_us() + res.compute_us)
+                .to_json()
+                .to_string_pretty()
+        };
+        assert_eq!(run(), run());
+    }
+}

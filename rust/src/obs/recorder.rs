@@ -1,0 +1,571 @@
+//! The peak flight recorder: a [`PhaseSink`] that maintains a live-block
+//! census (tag, phase-of-origin, role, pool) from the replayed op stream
+//! and, at the moment a new global reserved peak is set, snapshots the
+//! full composition of that peak — what the memory *is*, not just how big
+//! it got.
+//!
+//! The census is driven by pairing each [`TraceOp`] (which carries the
+//! tag and trace handle) with the [`AllocEvent`]s the allocator emits for
+//! it (which carry the requested and rounded sizes): `on_op` stages the
+//! in-flight alloc, `on_alloc_event` completes the census entry, and
+//! `on_op_end` — called once the op is done and its events drained —
+//! checks whether the op raised the global reserved peak and, if so,
+//! introspects the quiescent allocator for the segment map and cache
+//! state. Reserved only rises inside an op's driver-growth path, so at
+//! `on_op_end` a peak-setting op still holds `reserved() == peak`.
+//!
+//! Everything recorded is deterministic: census aggregations sort by
+//! byte count (name-tiebroken), the segment map sorts by segment id, and
+//! no wall-clock value ever enters a snapshot.
+
+use crate::alloc::{AllocEvent, CachingAllocator, PoolKind, SegmentRecord, StatSnapshot};
+use crate::trace::{PhaseKind, PhaseSink, Tag, TraceOp};
+use crate::util::fasthash::FastMap;
+use crate::util::json::Json;
+
+/// Model-role attribution of a phase: which RLHF model's work allocated
+/// during it. Derived purely from the phase-of-origin, so it needs no
+/// extra plumbing through the emitters.
+pub fn phase_role(phase: PhaseKind) -> &'static str {
+    match phase {
+        PhaseKind::Init => "setup",
+        PhaseKind::Generation | PhaseKind::InferActor | PhaseKind::TrainActor => "actor",
+        PhaseKind::InferCritic | PhaseKind::TrainCritic => "critic",
+        PhaseKind::InferReference => "reference",
+        PhaseKind::InferReward => "reward",
+        PhaseKind::Idle => "idle",
+    }
+}
+
+/// One live allocation in the census.
+#[derive(Debug, Clone, Copy)]
+struct CensusEntry {
+    tag: Tag,
+    /// Phase that performed the allocation.
+    phase: PhaseKind,
+    requested: u64,
+    rounded: u64,
+}
+
+/// Live bytes aggregated for one census key.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CensusBytes {
+    /// Bytes the callers asked for.
+    pub requested: u64,
+    /// After the allocator's 512 B rounding.
+    pub rounded: u64,
+    /// Number of live allocations.
+    pub count: u64,
+}
+
+/// The five-way exact decomposition of a reserved peak. The terms are
+/// disjoint and sum to `reserved` by construction:
+///
+/// ```text
+/// reserved = census_requested   (bytes live tensors asked for)
+///          + rounding_waste     (512 B-rounding inside live blocks)
+///          + block_slack        (block size beyond the rounded request —
+///                                unsplit-remainder bytes inside live blocks)
+///          + free_gaps          (free blocks inside partially-used
+///                                segments — the un-releasable gaps)
+///          + cached_free        (fully-free cached segments — releasable
+///                                by empty_cache)
+/// ```
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeakBreakdown {
+    pub census_requested: u64,
+    pub rounding_waste: u64,
+    pub block_slack: u64,
+    pub free_gaps: u64,
+    pub cached_free: u64,
+}
+
+impl PeakBreakdown {
+    /// Sum of all five terms — equals the reserved bytes the breakdown
+    /// decomposes (the `obs_golden` tests pin this exactly).
+    pub fn total(&self) -> u64 {
+        self.census_requested
+            + self.rounding_waste
+            + self.block_slack
+            + self.free_gaps
+            + self.cached_free
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("census_requested", Json::from(self.census_requested)),
+            ("rounding_waste", Json::from(self.rounding_waste)),
+            ("block_slack", Json::from(self.block_slack)),
+            ("free_gaps", Json::from(self.free_gaps)),
+            ("cached_free", Json::from(self.cached_free)),
+            ("total", Json::from(self.total())),
+        ])
+    }
+}
+
+/// Full composition captured at the moment the global reserved peak was
+/// set.
+#[derive(Debug, Clone)]
+pub struct PeakSnapshot {
+    /// Reserved bytes at the peak (== breakdown total).
+    pub reserved: u64,
+    /// Allocated (live block) bytes at the peak.
+    pub allocated: u64,
+    /// Phase executing when the peak was set.
+    pub phase: PhaseKind,
+    /// Step executing when the peak was set (0 = before the first
+    /// `StepEnd`).
+    pub step: u64,
+    /// Live census by tag, descending requested bytes (name-tiebroken).
+    pub by_tag: Vec<(Tag, CensusBytes)>,
+    /// Live census by phase-of-origin, descending requested bytes.
+    pub by_phase: Vec<(PhaseKind, CensusBytes)>,
+    /// Live census by model role, descending requested bytes.
+    pub by_role: Vec<(&'static str, CensusBytes)>,
+    /// Live census per allocator pool: `[small, large]`.
+    pub by_pool: [CensusBytes; 2],
+    /// Per-segment map (sorted by segment id).
+    pub segments: Vec<SegmentRecord>,
+    pub breakdown: PeakBreakdown,
+}
+
+impl PeakSnapshot {
+    pub fn to_json(&self) -> Json {
+        let census = |b: &CensusBytes| {
+            Json::obj(vec![
+                ("requested", Json::from(b.requested)),
+                ("rounded", Json::from(b.rounded)),
+                ("count", Json::from(b.count)),
+            ])
+        };
+        let by_tag: Vec<Json> = self
+            .by_tag
+            .iter()
+            .map(|(t, b)| {
+                let mut o = vec![("tag".to_string(), Json::str(t.name()))];
+                if let Json::Obj(kvs) = census(b) {
+                    o.extend(kvs);
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let by_phase: Vec<Json> = self
+            .by_phase
+            .iter()
+            .map(|(p, b)| {
+                let mut o = vec![("phase".to_string(), Json::str(p.name()))];
+                if let Json::Obj(kvs) = census(b) {
+                    o.extend(kvs);
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let by_role: Vec<Json> = self
+            .by_role
+            .iter()
+            .map(|(r, b)| {
+                let mut o = vec![("role".to_string(), Json::str(*r))];
+                if let Json::Obj(kvs) = census(b) {
+                    o.extend(kvs);
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let segments: Vec<Json> = self
+            .segments
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("segment", Json::from(u64::from(s.segment))),
+                    ("pool", Json::str(s.pool.name())),
+                    ("size", Json::from(s.size)),
+                    ("allocated", Json::from(s.allocated)),
+                    ("free", Json::from(s.free)),
+                    ("blocks", Json::from(u64::from(s.blocks))),
+                    (
+                        "origin_phase",
+                        Json::str(PhaseKind::from_tag(s.origin_phase).name()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("reserved", Json::from(self.reserved)),
+            ("allocated", Json::from(self.allocated)),
+            ("phase", Json::str(self.phase.name())),
+            ("step", Json::from(self.step)),
+            ("breakdown", self.breakdown.to_json()),
+            ("by_tag", Json::Arr(by_tag)),
+            ("by_phase", Json::Arr(by_phase)),
+            ("by_role", Json::Arr(by_role)),
+            (
+                "by_pool",
+                Json::obj(vec![
+                    ("small", census(&self.by_pool[0])),
+                    ("large", census(&self.by_pool[1])),
+                ]),
+            ),
+            ("segments", Json::Arr(segments)),
+        ])
+    }
+}
+
+/// Summary of one step's reserved peak (the `TopPeaks` mode keeps the K
+/// largest of these for intra-run variance).
+#[derive(Debug, Clone)]
+pub struct StepPeak {
+    pub step: u64,
+    /// Max reserved bytes observed during the step.
+    pub reserved: u64,
+    /// Phase executing when the step's max was reached.
+    pub phase: PhaseKind,
+    /// Largest live census tag at that moment (tag, requested bytes).
+    pub top_tag: Option<(Tag, u64)>,
+}
+
+/// The flight recorder. Pass it to `replay` (usually inside an
+/// [`ObsStack`](crate::obs::ObsStack) alongside the profiler).
+#[derive(Debug)]
+pub struct PeakRecorder {
+    current_phase: PhaseKind,
+    current_step: u64,
+    /// Trace handle → live census entry.
+    live: FastMap<u64, CensusEntry>,
+    /// Running totals over `live` (kept incrementally: the census is
+    /// consulted at every step peak, not just the global one).
+    live_requested: u64,
+    live_rounded: u64,
+    /// The alloc op staged by `on_op`, completed by the next Alloc event.
+    pending_alloc: Option<(u64, Tag)>,
+    /// Global peak reserved seen so far.
+    peak_seen: u64,
+    peak: Option<PeakSnapshot>,
+    /// Whether the op that just ran emitted events (cheap pre-filter so
+    /// `on_op_end` skips stats reads for compute/phase ops).
+    op_had_events: bool,
+    /// K largest step peaks (descending reserved).
+    top_peaks: Vec<StepPeak>,
+    top_k: usize,
+    /// Current step's running max.
+    step_peak: StepPeak,
+}
+
+const DEFAULT_TOP_K: usize = 5;
+
+impl PeakRecorder {
+    pub fn new() -> Self {
+        Self::with_top_k(DEFAULT_TOP_K)
+    }
+
+    /// Keep the `k` largest step peaks (`TopPeaks` mode).
+    pub fn with_top_k(k: usize) -> Self {
+        PeakRecorder {
+            current_phase: PhaseKind::Init,
+            current_step: 0,
+            live: FastMap::default(),
+            live_requested: 0,
+            live_rounded: 0,
+            pending_alloc: None,
+            peak_seen: 0,
+            peak: None,
+            op_had_events: false,
+            top_peaks: Vec::new(),
+            top_k: k,
+            step_peak: StepPeak {
+                step: 1,
+                reserved: 0,
+                phase: PhaseKind::Init,
+                top_tag: None,
+            },
+        }
+    }
+
+    /// The global-peak composition (None iff the replay never reserved).
+    pub fn peak(&self) -> Option<&PeakSnapshot> {
+        self.peak.as_ref()
+    }
+
+    /// The K largest step peaks, descending reserved bytes.
+    pub fn top_peaks(&self) -> &[StepPeak] {
+        &self.top_peaks
+    }
+
+    /// Live census bytes right now (requested, rounded).
+    pub fn live_bytes(&self) -> (u64, u64) {
+        (self.live_requested, self.live_rounded)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Largest live tag by requested bytes (deterministic: name-tiebroken).
+    fn top_live_tag(&self) -> Option<(Tag, u64)> {
+        let mut by_tag: FastMap<&'static str, (Tag, u64)> = FastMap::default();
+        for e in self.live.values() {
+            by_tag
+                .entry(e.tag.name())
+                .and_modify(|(_, b)| *b += e.requested)
+                .or_insert((e.tag, e.requested));
+        }
+        by_tag
+            .into_iter()
+            .map(|(_, v)| v)
+            .max_by_key(|(t, b)| (*b, std::cmp::Reverse(t.name())))
+    }
+
+    /// Aggregate the live census and introspect the allocator into a full
+    /// peak snapshot.
+    fn snapshot_composition(&self, alloc: &CachingAllocator) -> PeakSnapshot {
+        let cfg = alloc.config();
+        let mut by_tag: FastMap<&'static str, (Tag, CensusBytes)> = FastMap::default();
+        let mut by_phase: FastMap<u16, (PhaseKind, CensusBytes)> = FastMap::default();
+        let mut by_role: FastMap<&'static str, CensusBytes> = FastMap::default();
+        let mut by_pool = [CensusBytes::default(); 2];
+        for e in self.live.values() {
+            let add = |b: &mut CensusBytes| {
+                b.requested += e.requested;
+                b.rounded += e.rounded;
+                b.count += 1;
+            };
+            add(&mut by_tag.entry(e.tag.name()).or_insert((e.tag, CensusBytes::default())).1);
+            add(&mut by_phase
+                .entry(e.phase.tag())
+                .or_insert((e.phase, CensusBytes::default()))
+                .1);
+            add(by_role.entry(phase_role(e.phase)).or_default());
+            let pool = match cfg.pool_for(e.rounded) {
+                PoolKind::Small => 0,
+                PoolKind::Large => 1,
+            };
+            add(&mut by_pool[pool]);
+        }
+        // Deterministic orders: descending requested bytes, name-tiebroken.
+        let mut by_tag: Vec<(Tag, CensusBytes)> = by_tag.into_iter().map(|(_, v)| v).collect();
+        by_tag.sort_by_key(|(t, b)| (std::cmp::Reverse(b.requested), t.name()));
+        let mut by_phase: Vec<(PhaseKind, CensusBytes)> =
+            by_phase.into_iter().map(|(_, v)| v).collect();
+        by_phase.sort_by_key(|(p, b)| (std::cmp::Reverse(b.requested), p.name()));
+        let mut by_role: Vec<(&'static str, CensusBytes)> = by_role.into_iter().collect();
+        by_role.sort_by_key(|(r, b)| (std::cmp::Reverse(b.requested), *r));
+
+        let reserved = alloc.reserved();
+        let allocated = alloc.allocated();
+        let cached_free = alloc.cached_fully_free_bytes();
+        let breakdown = PeakBreakdown {
+            census_requested: self.live_requested,
+            rounding_waste: self.live_rounded - self.live_requested,
+            // allocated sums live *block* sizes; each live block is at
+            // least its rounded request, so the slack is non-negative.
+            block_slack: allocated.saturating_sub(self.live_rounded),
+            // Free blocks inside partially-used segments: everything
+            // reserved that is neither allocated nor releasable cache.
+            free_gaps: reserved.saturating_sub(allocated + cached_free),
+            cached_free,
+        };
+        PeakSnapshot {
+            reserved,
+            allocated,
+            phase: self.current_phase,
+            step: self.current_step,
+            by_tag,
+            by_phase,
+            by_role,
+            by_pool,
+            segments: alloc.segment_map(),
+            breakdown,
+        }
+    }
+}
+
+impl Default for PeakRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseSink for PeakRecorder {
+    fn on_phase(&mut self, phase: PhaseKind, _alloc: &CachingAllocator, _compute_us: f64) {
+        self.current_phase = phase;
+    }
+
+    fn on_op(&mut self, op: &TraceOp) {
+        self.op_had_events = false;
+        match op {
+            TraceOp::Alloc { handle, tag, .. } => {
+                self.pending_alloc = Some((handle.0, *tag));
+            }
+            TraceOp::Free { handle } => {
+                if let Some(e) = self.live.remove(&handle.0) {
+                    self.live_requested -= e.requested;
+                    self.live_rounded -= e.rounded;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_alloc_event(&mut self, event: &AllocEvent, state: &StatSnapshot) {
+        self.op_had_events = true;
+        if let AllocEvent::Alloc {
+            requested, rounded, ..
+        } = event
+        {
+            if let Some((handle, tag)) = self.pending_alloc.take() {
+                self.live.insert(
+                    handle,
+                    CensusEntry {
+                        tag,
+                        phase: self.current_phase,
+                        requested: *requested,
+                        rounded: *rounded,
+                    },
+                );
+                self.live_requested += requested;
+                self.live_rounded += rounded;
+            }
+        }
+        if state.reserved > self.step_peak.reserved {
+            self.step_peak.reserved = state.reserved;
+            self.step_peak.phase = self.current_phase;
+            self.step_peak.top_tag = self.top_live_tag();
+        }
+    }
+
+    fn on_op_end(&mut self, alloc: &CachingAllocator) {
+        if !self.op_had_events {
+            return;
+        }
+        let peak = alloc.stats().peak_reserved;
+        if peak > self.peak_seen {
+            self.peak_seen = peak;
+            self.peak = Some(self.snapshot_composition(alloc));
+        }
+    }
+
+    fn on_step_end(&mut self, step: u64, _alloc: &CachingAllocator, _compute_us: f64) {
+        let mut done = StepPeak {
+            step: step + 1,
+            reserved: 0,
+            phase: self.current_phase,
+            top_tag: None,
+        };
+        std::mem::swap(&mut done, &mut self.step_peak);
+        done.step = step;
+        self.top_peaks.push(done);
+        // Keep the K largest, stable under ties by earliest step.
+        self.top_peaks
+            .sort_by_key(|p| (std::cmp::Reverse(p.reserved), p.step));
+        self.top_peaks.truncate(self.top_k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::CachingAllocator;
+    use crate::trace::{replay, TraceBuilder};
+    use crate::util::bytes::{GIB, MIB};
+
+    fn record(build: impl FnOnce(&mut TraceBuilder)) -> (PeakRecorder, CachingAllocator) {
+        let mut b = TraceBuilder::new();
+        build(&mut b);
+        let trace = b.finish();
+        let mut rec = PeakRecorder::new();
+        let mut alloc = CachingAllocator::with_default_config(4 * GIB);
+        replay(&trace, &mut alloc, &mut rec);
+        (rec, alloc)
+    }
+
+    #[test]
+    fn breakdown_sums_to_reserved_at_peak() {
+        let (rec, alloc) = record(|b| {
+            b.phase(PhaseKind::Generation);
+            let h = b.alloc(15 * MIB, Tag::KvCache);
+            b.transient([3 * MIB + 700], Tag::Activation);
+            b.free(h);
+            b.phase(PhaseKind::TrainActor);
+            b.alloc(30 * MIB, Tag::Grad);
+            b.step_end(1);
+        });
+        let peak = rec.peak().expect("reserved memory must have peaked");
+        assert_eq!(peak.reserved, alloc.stats().peak_reserved);
+        assert_eq!(peak.breakdown.total(), peak.reserved);
+    }
+
+    #[test]
+    fn census_attributes_tags_and_phases() {
+        let (rec, _alloc) = record(|b| {
+            b.phase(PhaseKind::Generation);
+            b.alloc(10 * MIB, Tag::KvCache);
+            b.phase(PhaseKind::TrainActor);
+            b.alloc(40 * MIB, Tag::Grad);
+            b.step_end(1);
+        });
+        let peak = rec.peak().unwrap();
+        assert_eq!(peak.by_tag[0].0, Tag::Grad);
+        assert_eq!(peak.by_tag[0].1.requested, 40 * MIB);
+        assert_eq!(peak.by_phase[0].0, PhaseKind::TrainActor);
+        assert_eq!(peak.by_role[0].0, "actor");
+        let census_total: u64 = peak.by_tag.iter().map(|(_, b)| b.requested).sum();
+        assert_eq!(census_total, peak.breakdown.census_requested);
+    }
+
+    #[test]
+    fn freed_blocks_leave_the_census() {
+        let (rec, _alloc) = record(|b| {
+            b.phase(PhaseKind::Generation);
+            let h = b.alloc(10 * MIB, Tag::KvCache);
+            b.free(h);
+            b.step_end(1);
+        });
+        assert_eq!(rec.live_count(), 0);
+        assert_eq!(rec.live_bytes(), (0, 0));
+        // Peak was set while the block was live — census captured it.
+        let peak = rec.peak().unwrap();
+        assert_eq!(peak.breakdown.census_requested, 10 * MIB);
+    }
+
+    #[test]
+    fn cached_free_recognized_after_frees() {
+        let (rec, alloc) = record(|b| {
+            b.phase(PhaseKind::Generation);
+            let h1 = b.alloc(15 * MIB, Tag::KvCache);
+            let h2 = b.alloc(15 * MIB, Tag::KvCache);
+            b.free(h1);
+            b.free(h2);
+            b.phase(PhaseKind::TrainActor);
+            // Frag-caused malloc: the two cached 16 MiB segments can't
+            // serve 30 MiB — the peak snapshot must classify them.
+            b.alloc(30 * MIB, Tag::Grad);
+            b.step_end(1);
+        });
+        let peak = rec.peak().unwrap();
+        assert_eq!(peak.breakdown.cached_free, 32 * MIB);
+        assert_eq!(peak.breakdown.total(), peak.reserved);
+        assert_eq!(alloc.cached_fully_free_bytes(), 32 * MIB);
+        // Segment map agrees with the index.
+        let from_map: u64 = peak
+            .segments
+            .iter()
+            .filter(|s| s.fully_free())
+            .map(|s| s.size)
+            .sum();
+        assert_eq!(from_map, 32 * MIB);
+    }
+
+    #[test]
+    fn top_peaks_ranked_descending() {
+        let (rec, _alloc) = record(|b| {
+            for step in 1..=3 {
+                b.phase(PhaseKind::Generation);
+                b.transient([(step * 20) * MIB], Tag::KvCache);
+                b.step_end(step);
+            }
+        });
+        let tops = rec.top_peaks();
+        assert_eq!(tops.len(), 3);
+        assert!(tops[0].reserved >= tops[1].reserved);
+        assert!(tops[1].reserved >= tops[2].reserved);
+    }
+}

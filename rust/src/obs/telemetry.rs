@@ -1,0 +1,103 @@
+//! Run-telemetry ledger: a lightweight counter/span registry for the
+//! search subsystems (sweep, planner, cluster).
+//!
+//! The ledger enforces the same discipline as the bench subsystem
+//! (DESIGN.md §13): **deterministic counters** — order-independent `u64`
+//! sums derived from the index-ordered result cells — are the only values
+//! that enter machine-readable artifacts (the `telemetry` JSONL footer),
+//! while **wall-clock spans** live in a separate list that is printed by
+//! `report::telemetry` but never serialized. That split is what keeps the
+//! jobs-1 vs jobs-N byte-identical contract intact for every artifact
+//! that carries a footer.
+
+use crate::util::json::Json;
+
+/// The ledger: insertion-ordered counters plus wall-clock spans.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    counters: Vec<(String, u64)>,
+    wall: Vec<(String, f64)>,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate `delta` into the named deterministic counter (created at
+    /// first touch; insertion order is the artifact order).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        match self.counters.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v += delta,
+            None => self.counters.push((name.to_string(), delta)),
+        }
+    }
+
+    /// Record a wall-clock span. Wall values are for the printed table
+    /// only — they never enter JSON artifacts.
+    pub fn wall(&mut self, name: &str, seconds: f64) {
+        self.wall.push((name.to_string(), seconds));
+    }
+
+    pub fn counters(&self) -> &[(String, u64)] {
+        &self.counters
+    }
+
+    pub fn walls(&self) -> &[(String, f64)] {
+        &self.wall
+    }
+
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// The deterministic counters as a JSON object (insertion order).
+    pub fn counters_json(&self) -> Json {
+        Json::Obj(
+            self.counters
+                .iter()
+                .map(|(n, v)| (n.clone(), Json::from(*v)))
+                .collect(),
+        )
+    }
+
+    /// One compact JSONL footer line: `{"telemetry":{...}}`. Wall spans
+    /// are deliberately absent — the footer must be byte-identical for
+    /// any `--jobs`.
+    pub fn footer_line(&self) -> String {
+        Json::obj(vec![("telemetry", self.counters_json())]).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn counters_accumulate_in_insertion_order() {
+        let mut t = Telemetry::new();
+        t.add("cells", 3);
+        t.add("oom_cells", 1);
+        t.add("cells", 2);
+        assert_eq!(t.get("cells"), Some(5));
+        let names: Vec<&str> = t.counters().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["cells", "oom_cells"]);
+    }
+
+    #[test]
+    fn footer_excludes_wall_clock() {
+        let mut t = Telemetry::new();
+        t.add("cells", 7);
+        t.wall("sweep", 1.25);
+        let line = t.footer_line();
+        let j = parse(&line).unwrap();
+        let tele = j.get("telemetry").unwrap();
+        assert_eq!(tele.req_u64("cells").unwrap(), 7);
+        assert!(!line.contains("1.25"), "wall time leaked into the footer");
+        assert!(!line.contains('\n'), "footer must be a single JSONL line");
+    }
+}

@@ -53,6 +53,7 @@ pub use space::{allocator_candidates, Candidate, ClusterCandidate};
 
 use crate::coordinator::schedule::{run_configs, ClusterConfig};
 use crate::coordinator::ClusterRun;
+use crate::obs::Telemetry;
 use crate::policy::EmptyCachePolicy;
 use crate::profiler::ProfileSummary;
 use crate::report::table::TextTable;
@@ -250,6 +251,42 @@ impl PlanReport {
             out.push_str(&o.to_json().to_string());
             out.push('\n');
         }
+        out
+    }
+
+    /// The run-telemetry ledger of this search: counters summed over the
+    /// enumeration-ordered outcomes (deterministic, `jobs`-independent);
+    /// the underlying sweep's wall-clock in the never-serialized wall
+    /// list.
+    pub fn telemetry(&self) -> Telemetry {
+        let mut t = Telemetry::new();
+        t.add("candidates", self.outcomes.len() as u64);
+        t.add(
+            "feasible",
+            self.outcomes.iter().filter(|o| o.feasible).count() as u64,
+        );
+        t.add(
+            "frontier",
+            self.outcomes.iter().filter(|o| o.on_frontier).count() as u64,
+        );
+        t.add(
+            "oom_cells",
+            self.outcomes.iter().filter(|o| o.summary.oom).count() as u64,
+        );
+        for o in &self.outcomes {
+            t.add("num_allocs", o.summary.num_allocs);
+            t.add("cache_hits", o.summary.num_cache_hits);
+        }
+        t.wall("plan", self.wall_seconds);
+        t
+    }
+
+    /// [`Self::jsonl`] plus one trailing `{"telemetry":{...}}` footer
+    /// line. Still byte-identical for any `--jobs`.
+    pub fn jsonl_with_telemetry(&self) -> String {
+        let mut out = self.jsonl();
+        out.push_str(&self.telemetry().footer_line());
+        out.push('\n');
         out
     }
 
@@ -545,6 +582,45 @@ impl ClusterReport {
             out.push_str(&o.to_json().to_string());
             out.push('\n');
         }
+        out
+    }
+
+    /// The run-telemetry ledger of this placement search (same discipline
+    /// as [`PlanReport::telemetry`]): enumeration-ordered counters only,
+    /// wall-clock kept out of artifacts.
+    pub fn telemetry(&self) -> Telemetry {
+        let mut t = Telemetry::new();
+        t.add("candidates", self.outcomes.len() as u64);
+        t.add(
+            "feasible",
+            self.outcomes.iter().filter(|o| o.feasible).count() as u64,
+        );
+        t.add(
+            "frontier",
+            self.outcomes.iter().filter(|o| o.on_frontier).count() as u64,
+        );
+        t.add(
+            "gpu_runs",
+            self.outcomes.iter().map(|o| o.run.gpus.len() as u64).sum(),
+        );
+        t.add(
+            "oom_gpus",
+            self.outcomes
+                .iter()
+                .flat_map(|o| &o.run.gpus)
+                .filter(|g| g.oom)
+                .count() as u64,
+        );
+        t.wall("plan_cluster", self.wall_seconds);
+        t
+    }
+
+    /// [`Self::jsonl`] plus one trailing `{"telemetry":{...}}` footer
+    /// line. Still byte-identical for any `--jobs`.
+    pub fn jsonl_with_telemetry(&self) -> String {
+        let mut out = self.jsonl();
+        out.push_str(&self.telemetry().footer_line());
+        out.push('\n');
         out
     }
 

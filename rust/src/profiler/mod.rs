@@ -57,8 +57,14 @@ pub struct MemoryProfiler {
 
 impl MemoryProfiler {
     pub fn new() -> Self {
+        Self::with_timeline_resolution(Timeline::new().resolution())
+    }
+
+    /// A profiler whose timeline decimates at `min_delta` bytes instead of
+    /// the default 16 MiB (`profile --timeline-resolution`).
+    pub fn with_timeline_resolution(min_delta: u64) -> Self {
         MemoryProfiler {
-            timeline: Timeline::new(),
+            timeline: Timeline::with_resolution(min_delta),
             frag_samples: Vec::new(),
             phase_peaks: HashMap::new(),
             peak_phase: PhaseKind::Init,

@@ -28,6 +28,11 @@ pub struct ProfileSummary {
     pub empty_cache_calls: u64,
     pub empty_cache_released: u64,
     pub cuda_mallocs: u64,
+    /// Total allocation requests served.
+    pub num_allocs: u64,
+    /// Requests served from the cache (no cudaMalloc) — the telemetry
+    /// ledger reports the hit ratio per search.
+    pub num_cache_hits: u64,
     /// Replay hit OOM (the paper's frameworks would have crashed).
     pub oom: bool,
 }
@@ -50,6 +55,8 @@ impl ProfileSummary {
             empty_cache_calls: prof.empty_cache_calls,
             empty_cache_released: prof.empty_cache_released,
             cuda_mallocs: prof.cuda_mallocs,
+            num_allocs: stats.num_allocs,
+            num_cache_hits: stats.num_cache_hits,
             oom: !replay.ok(),
         }
     }

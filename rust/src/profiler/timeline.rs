@@ -47,6 +47,11 @@ impl Timeline {
         }
     }
 
+    /// The decimation resolution in bytes.
+    pub fn resolution(&self) -> u64 {
+        self.min_delta
+    }
+
     pub fn push(&mut self, time_us: f64, reserved: u64, allocated: u64, phase: PhaseKind) {
         if let Some(last) = self.points.last() {
             let dr = reserved.abs_diff(last.reserved);

@@ -9,6 +9,7 @@ pub mod cluster;
 pub mod paper;
 pub mod peft;
 pub mod table;
+pub mod telemetry;
 
 pub use paper::{render_rows, StrategyRow};
 pub use table::TextTable;

@@ -211,6 +211,8 @@ mod tests {
             empty_cache_calls: 0,
             empty_cache_released: 0,
             cuda_mallocs: 1,
+            num_allocs: 1,
+            num_cache_hits: 0,
             oom: false,
         };
         let paper = [18.8, 0.2, 18.2, 19.4, 0.05];
@@ -267,6 +269,8 @@ mod tests {
             empty_cache_calls: 0,
             empty_cache_released: 0,
             cuda_mallocs: 5,
+            num_allocs: 5,
+            num_cache_hits: 0,
             oom: false,
         };
         let row = StrategyRow {

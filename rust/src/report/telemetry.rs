@@ -1,0 +1,51 @@
+//! Renderer for the run-telemetry ledger
+//! ([`Telemetry`](crate::obs::Telemetry)): deterministic counters and
+//! wall-clock spans as one table, clearly separated — counters are the
+//! values that also land in JSONL footers, wall spans never leave the
+//! terminal.
+
+use crate::obs::Telemetry;
+use crate::report::table::TextTable;
+
+/// The telemetry ledger as a `kind | name | value` table.
+pub fn telemetry_table(t: &Telemetry) -> TextTable {
+    let mut table = TextTable::new(&["kind", "name", "value"]);
+    for (name, v) in t.counters() {
+        table.row(vec![
+            "counter".to_string(),
+            name.clone(),
+            v.to_string(),
+        ]);
+    }
+    for (name, secs) in t.walls() {
+        table.row(vec![
+            "wall".to_string(),
+            name.clone(),
+            format!("{secs:.2}s"),
+        ]);
+    }
+    table
+}
+
+/// Render the ledger with its header line (the CLI's `--telemetry` view).
+pub fn render_telemetry(t: &Telemetry) -> String {
+    format!("telemetry:\n{}", telemetry_table(t).render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_lists_counters_then_walls() {
+        let mut t = Telemetry::new();
+        t.add("cells", 12);
+        t.add("oom_cells", 2);
+        t.wall("sweep", 0.5);
+        let table = telemetry_table(&t);
+        assert_eq!(table.rows.len(), 3);
+        assert_eq!(table.rows[0][1], "cells");
+        assert_eq!(table.rows[2][0], "wall");
+        assert!(render_telemetry(&t).contains("telemetry:"));
+    }
+}

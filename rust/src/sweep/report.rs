@@ -2,6 +2,7 @@
 //! paper-shaped [`StrategyRow`] grouping that `table1`/`table2` render.
 
 use super::runner::CellResult;
+use crate::obs::Telemetry;
 use crate::report::paper::StrategyRow;
 use crate::report::table::TextTable;
 use crate::util::bytes::fmt_gib_paper;
@@ -24,6 +25,36 @@ impl SweepReport {
             out.push_str(&c.jsonl_line());
             out.push('\n');
         }
+        out
+    }
+
+    /// The run-telemetry ledger of this sweep. Counters are sums over the
+    /// index-ordered cells — deterministic and `jobs`-independent — while
+    /// the sweep's wall-clock lands in the (never-serialized) wall list.
+    pub fn telemetry(&self) -> Telemetry {
+        let mut t = Telemetry::new();
+        t.add("cells", self.cells.len() as u64);
+        t.add(
+            "oom_cells",
+            self.cells.iter().filter(|c| c.summary.oom).count() as u64,
+        );
+        for c in &self.cells {
+            let s = &c.summary;
+            t.add("num_allocs", s.num_allocs);
+            t.add("cache_hits", s.num_cache_hits);
+            t.add("cuda_mallocs", s.cuda_mallocs);
+            t.add("empty_cache_calls", s.empty_cache_calls);
+        }
+        t.wall("sweep", self.wall_seconds);
+        t
+    }
+
+    /// [`Self::jsonl`] plus one trailing `{"telemetry":{...}}` footer
+    /// line. Still byte-identical for any `--jobs`.
+    pub fn jsonl_with_telemetry(&self) -> String {
+        let mut out = self.jsonl();
+        out.push_str(&self.telemetry().footer_line());
+        out.push('\n');
         out
     }
 

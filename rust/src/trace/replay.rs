@@ -50,6 +50,20 @@ pub trait PhaseSink {
     fn on_alloc_event(&mut self, event: &AllocEvent, state: &StatSnapshot) {
         let _ = (event, state);
     }
+    /// The trace op about to execute. `AllocEvent`s carry no tag or trace
+    /// handle, so a sink that needs attribution (the obs census) pairs the
+    /// op seen here with the events that follow it.
+    fn on_op(&mut self, op: &TraceOp) {
+        let _ = op;
+    }
+    /// The op finished and its events have all been forwarded; the
+    /// allocator is quiescent and may be introspected. This is where the
+    /// peak recorder snapshots composition: reserved only rises inside an
+    /// op's driver-growth path, so an op that set a new peak still holds
+    /// `reserved() == peak_reserved` here.
+    fn on_op_end(&mut self, alloc: &CachingAllocator) {
+        let _ = alloc;
+    }
 }
 
 /// No-op sink.
@@ -70,6 +84,7 @@ pub fn replay(trace: &Trace, alloc: &mut CachingAllocator, sink: &mut dyn PhaseS
     alloc.set_event_recording(true);
 
     for (i, op) in trace.ops.iter().enumerate() {
+        sink.on_op(op);
         match op {
             TraceOp::Alloc { handle, bytes, .. } => match alloc.alloc(*bytes) {
                 Ok(id) => {
@@ -79,6 +94,7 @@ pub fn replay(trace: &Trace, alloc: &mut CachingAllocator, sink: &mut dyn PhaseS
                     // Forward the events of the failed op (OOM retries)
                     // before surfacing the error.
                     forward_events(alloc, sink, &mut scratch);
+                    sink.on_op_end(alloc);
                     alloc.set_event_recording(false);
                     return ReplayResult {
                         ops_executed: i,
@@ -116,6 +132,7 @@ pub fn replay(trace: &Trace, alloc: &mut CachingAllocator, sink: &mut dyn PhaseS
             }
         }
         forward_events(alloc, sink, &mut scratch);
+        sink.on_op_end(alloc);
     }
     // Leave the allocator as we found it: recording off, log empty —
     // otherwise an allocator reused after replay would buffer events

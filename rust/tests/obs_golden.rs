@@ -1,0 +1,292 @@
+//! Observability golden tests: the `explain` decomposition pinned against
+//! the embedded seed-allocator oracle, per-rank peak attribution for
+//! cluster placements, the timeline-resolution contract, the
+//! `profile --json` legacy schema, Perfetto document validity, and the
+//! jobs-1 vs jobs-N byte-identity of every telemetry footer.
+
+#[path = "support/oracle.rs"]
+#[allow(dead_code)]
+mod oracle;
+
+use oracle::assert_equivalent_on_trace;
+use rlhf_mem::alloc::AllocatorConfig;
+use rlhf_mem::coordinator::PlacementPlan;
+use rlhf_mem::experiment::{run_scenario_observed, RTX3090_HBM};
+use rlhf_mem::frameworks::FrameworkKind;
+use rlhf_mem::obs::{explain_scenario, profile_doc, ExplainOptions, ObsStack};
+use rlhf_mem::planner::{plan, plan_cluster, Budget};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::profiler::{MemoryProfiler, Timeline};
+use rlhf_mem::rlhf::program::PhaseProgram;
+use rlhf_mem::rlhf::sim::{build_trace, SimScenario};
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::sweep::{SweepGrid, SweepRunner};
+use rlhf_mem::trace::PhaseKind;
+use rlhf_mem::util::bytes::MIB;
+use rlhf_mem::util::json::{parse, Json};
+
+fn ds_opt(steps: u64) -> SimScenario {
+    let mut scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+    scn.steps = steps;
+    scn
+}
+
+/// The paper's Table-1 workload, explained: the allocator behavior on the
+/// exact trace is pinned against the seed oracle, and the five-way
+/// decomposition must account for (at least 99% of, and by construction
+/// exactly) the peak reserved bytes.
+#[test]
+fn explain_accounts_for_the_deepspeed_peak_against_the_oracle() {
+    let scn = ds_opt(1);
+    let trace = build_trace(&scn);
+    assert_equivalent_on_trace(
+        &AllocatorConfig::default(),
+        RTX3090_HBM,
+        &trace,
+        "explain-golden",
+    );
+
+    let out = explain_scenario(
+        &scn,
+        RTX3090_HBM,
+        &AllocatorConfig::default(),
+        &ExplainOptions::default(),
+    );
+    let r = &out.report;
+    assert!(!r.summary.oom, "Table-1 baseline fits 24 GiB");
+    let peak = r.peak.as_ref().expect("device memory was reserved");
+    assert_eq!(
+        peak.reserved, r.summary.peak_reserved,
+        "recorder and profiler must agree on the global peak"
+    );
+    assert_eq!(
+        peak.breakdown.total(),
+        peak.reserved,
+        "census + rounding + slack + free gaps + cached-free must sum to reserved"
+    );
+    assert!(r.accounted_pct() >= 99.0, "{}", r.accounted_pct());
+
+    // The tag census, the phase census, and the pool census are three
+    // views of the same live-block set.
+    let by_tag: u64 = peak.by_tag.iter().map(|(_, c)| c.requested).sum();
+    let by_phase: u64 = peak.by_phase.iter().map(|(_, c)| c.requested).sum();
+    let by_pool: u64 = peak.by_pool.iter().map(|c| c.requested).sum();
+    assert_eq!(by_tag, peak.breakdown.census_requested);
+    assert_eq!(by_phase, by_tag);
+    assert_eq!(by_pool, by_tag);
+
+    // The shrink table ranks descending and starts with a live class
+    // (model state dominates the un-mitigated baseline).
+    assert!(!r.rows.is_empty());
+    for w in r.rows.windows(2) {
+        assert!(w[0].bytes >= w[1].bytes);
+    }
+    assert!(r.rows[0].is_census, "the top consumer is a live tensor class");
+}
+
+/// Per-rank peak attribution under cluster placements: every phase a
+/// GPU's profiler or recorder attributes memory to must appear in the
+/// PhaseProgram compiled for that rank's scenario.
+#[test]
+fn cluster_rank_attribution_matches_the_compiled_program() {
+    let mut base = ds_opt(1);
+    base.world = 2;
+    let plans = vec![
+        PlacementPlan::time_shared(2),
+        PlacementPlan::dedicated(2).expect("2 GPUs is enough for dedicated"),
+    ];
+    for plan in &plans {
+        for g in 0..plan.gpus() as usize {
+            let scn = plan.scenario_for_gpu(&base, g);
+            let program = PhaseProgram::compile(&scn);
+            let mut allowed: Vec<PhaseKind> = vec![PhaseKind::Init];
+            allowed.extend(program.step_phases());
+
+            let mut obs = ObsStack::new();
+            let outcome =
+                run_scenario_observed(&scn, RTX3090_HBM, &AllocatorConfig::default(), &mut obs);
+            assert!(!outcome.summary.oom, "{}/gpu{g}", plan.name);
+
+            for phase in obs.profiler.phase_peaks.keys() {
+                assert!(
+                    allowed.contains(phase),
+                    "{}/gpu{g}: profiler peak in unscheduled phase {}",
+                    plan.name,
+                    phase.name()
+                );
+            }
+            let peak = obs.recorder.peak().expect("rank reserved memory");
+            assert!(
+                allowed.contains(&peak.phase),
+                "{}/gpu{g}: global peak in unscheduled phase {}",
+                plan.name,
+                peak.phase.name()
+            );
+            for (phase, _) in &peak.by_phase {
+                assert!(allowed.contains(phase), "{}/gpu{g}", plan.name);
+            }
+            // Attribution is program-ordered and non-empty for a rank
+            // that reserved memory.
+            let attr = obs.profiler.phase_attribution(&program);
+            assert!(!attr.is_empty(), "{}/gpu{g}", plan.name);
+        }
+    }
+}
+
+/// The decimation floor is a constructor parameter with a pinned default
+/// of 16 MiB; a finer resolution never yields fewer timeline points.
+#[test]
+fn timeline_resolution_default_is_16_mib_and_tunable() {
+    assert_eq!(Timeline::new().resolution(), 16 * MIB);
+    assert_eq!(MemoryProfiler::new().timeline.resolution(), 16 * MIB);
+
+    let scn = ds_opt(1);
+    let mut coarse = ObsStack::with_profiler(MemoryProfiler::with_timeline_resolution(256 * MIB));
+    run_scenario_observed(&scn, RTX3090_HBM, &AllocatorConfig::default(), &mut coarse);
+    let mut fine = ObsStack::with_profiler(MemoryProfiler::with_timeline_resolution(MIB));
+    run_scenario_observed(&scn, RTX3090_HBM, &AllocatorConfig::default(), &mut fine);
+
+    let coarse_n = coarse.profiler.timeline.points().len();
+    let fine_n = fine.profiler.timeline.points().len();
+    assert!(coarse_n > 0);
+    assert!(
+        fine_n >= coarse_n,
+        "1 MiB resolution kept {fine_n} points vs {coarse_n} at 256 MiB"
+    );
+}
+
+/// `profile --json` schema: the five legacy scalar keys keep their names
+/// and order (external consumers index into them); the attribution and
+/// empty-cache extensions ride behind.
+#[test]
+fn profile_doc_legacy_keys_stay_first() {
+    let scn = ds_opt(1);
+    let mut obs = ObsStack::new();
+    let outcome = run_scenario_observed(&scn, RTX3090_HBM, &AllocatorConfig::default(), &mut obs);
+    let program = PhaseProgram::compile(&scn);
+    let doc = profile_doc(&outcome.summary, &obs.profiler, &program);
+
+    let Json::Obj(kvs) = &doc else {
+        panic!("profile_doc must be a JSON object")
+    };
+    let keys: Vec<&str> = kvs.iter().map(|(k, _)| k.as_str()).collect();
+    assert_eq!(
+        &keys[..5],
+        &["reserved", "frag", "allocated", "peak_phase", "oom"],
+        "legacy profile --json schema must stay stable"
+    );
+    assert!(keys.contains(&"phase_attribution"));
+    assert!(keys.contains(&"frag_samples"));
+    assert!(keys.contains(&"empty_cache_calls"));
+
+    let parsed = parse(&doc.to_string_pretty()).unwrap();
+    assert_eq!(
+        parsed.req_u64("reserved").unwrap(),
+        outcome.summary.peak_reserved
+    );
+    let attr = parsed.req_arr("phase_attribution").unwrap();
+    assert!(!attr.is_empty());
+    for entry in attr {
+        assert!(entry.get("phase").and_then(Json::as_str).is_some());
+        assert!(entry.req_u64("reserved").unwrap() > 0);
+    }
+}
+
+/// The Perfetto document parses, carries counter samples, allocator
+/// instants, and one span per scheduled phase — and is byte-identical
+/// across two recordings of the same scenario.
+#[test]
+fn perfetto_trace_covers_every_scheduled_phase() {
+    let scn = ds_opt(1);
+    let opts = ExplainOptions {
+        top_k: 3,
+        perfetto_pid: Some(0),
+    };
+    let out = explain_scenario(&scn, RTX3090_HBM, &AllocatorConfig::default(), &opts);
+    let doc = out.perfetto.expect("perfetto recorder was armed");
+    let text = doc.to_json().to_string_pretty();
+
+    let j = parse(&text).unwrap();
+    let events = j.req_arr("traceEvents").unwrap();
+    assert!(!events.is_empty());
+    let count = |ph: &str| {
+        events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph))
+            .count()
+    };
+    assert!(count("C") >= 1, "at least one counter sample");
+    assert!(count("i") >= 1, "allocator instants present");
+    assert!(count("M") >= 1, "process-name metadata present");
+
+    let span_names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    let program = PhaseProgram::compile(&scn);
+    for phase in program.step_phases() {
+        assert!(
+            span_names.contains(&phase.name()),
+            "missing span for phase {}",
+            phase.name()
+        );
+    }
+
+    let again = explain_scenario(&scn, RTX3090_HBM, &AllocatorConfig::default(), &opts);
+    assert_eq!(
+        text,
+        again.perfetto.unwrap().to_json().to_string_pretty(),
+        "trace documents must be deterministic"
+    );
+}
+
+/// Every telemetry-bearing artifact — sweep, planner, cluster planner —
+/// is byte-identical for `--jobs 1` vs `--jobs 4`, and the footer is a
+/// parseable `{"telemetry":{...}}` object with the promised counters.
+#[test]
+fn telemetry_footers_are_worker_count_invariant() {
+    let cells = SweepGrid::new()
+        .frameworks([FrameworkKind::DeepSpeedChat])
+        .strategies([
+            ("None", StrategyConfig::none()),
+            ("ZeRO-3", StrategyConfig::zero3()),
+        ])
+        .policies([EmptyCachePolicy::Never, EmptyCachePolicy::AfterBoth])
+        .steps(1)
+        .build()
+        .unwrap();
+    let serial = SweepRunner::new(1).run(cells.clone()).jsonl_with_telemetry();
+    let pooled = SweepRunner::new(4).run(cells).jsonl_with_telemetry();
+    assert_eq!(serial, pooled, "sweep JSONL + footer must not depend on --jobs");
+
+    let footer = serial.lines().last().unwrap();
+    let j = parse(footer).unwrap();
+    let t = j.get("telemetry").expect("footer carries a telemetry object");
+    assert_eq!(t.req_u64("cells").unwrap(), 4);
+    assert!(t.req_u64("num_allocs").unwrap() > 0);
+    assert!(t.req_u64("cuda_mallocs").unwrap() > 0);
+    assert!(t.get("wall_seconds").is_none(), "wall-clock never enters artifacts");
+
+    let mut b = Budget::rtx3090_table1();
+    b.steps = 1;
+    b.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
+    b.allocators = Some(vec!["default".to_string()]);
+    let plan_serial = plan(&b, 1).unwrap().jsonl_with_telemetry();
+    let plan_pooled = plan(&b, 4).unwrap().jsonl_with_telemetry();
+    assert_eq!(plan_serial, plan_pooled);
+    let pf = parse(plan_serial.lines().last().unwrap()).unwrap();
+    let pt = pf.get("telemetry").expect("planner footer");
+    assert!(pt.req_u64("candidates").unwrap() > 0);
+
+    let mut cb = Budget::rtx3090_table1();
+    cb.steps = 1;
+    cb.strategies = Some(vec!["none".to_string()]);
+    cb.worlds = Some(vec![2]);
+    let cl_serial = plan_cluster(&cb, 1).unwrap().jsonl_with_telemetry();
+    let cl_pooled = plan_cluster(&cb, 4).unwrap().jsonl_with_telemetry();
+    assert_eq!(cl_serial, cl_pooled);
+    let cf = parse(cl_serial.lines().last().unwrap()).unwrap();
+    let ct = cf.get("telemetry").expect("cluster-planner footer");
+    assert!(ct.req_u64("gpu_runs").unwrap() >= 2);
+}
