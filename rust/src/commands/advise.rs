@@ -10,7 +10,7 @@
 //! advisor's honest answer is then "buy a bigger GPU or shrink the
 //! model", and scripts can branch on it.
 
-use rlhf_mem::planner::{plan, plan_cluster, Budget};
+use rlhf_mem::planner::{plan_cluster, plan_with, Budget, PlanOptions};
 use rlhf_mem::report;
 use rlhf_mem::sweep::SweepRunner;
 use rlhf_mem::util::bytes::fmt_gib_paper;
@@ -28,6 +28,11 @@ FLAGS:
   --cluster        search placement plan × strategy × world-size instead
                    (feasible = every GPU of the plan fits the budget;
                    ranked on the max-per-GPU-memory vs step-time frontier)
+  --prescreen-static
+                   reject candidates whose static peak lower bound (see
+                   `rlhf-mem lint`) already exceeds the capacity, before
+                   simulating them; the surviving frontier is identical,
+                   telemetry counts the pruned candidates
   --jobs N         worker threads (default: all cores)
   --top N          recommendations to print (default 10)
   --jsonl FILE     write one deterministic JSON line per candidate
@@ -58,7 +63,13 @@ pub fn run(args: &Args) -> Result<(), String> {
         budget.framework.name(),
         budget.models.policy_arch.name,
     );
-    let report = plan(&budget, jobs)?;
+    let opts = PlanOptions {
+        prescreen_static: args.bool_flag("prescreen-static"),
+    };
+    let report = plan_with(&budget, jobs, opts)?;
+    if let Some(p) = report.static_pruned {
+        println!("static prescreen: {p} candidate(s) rejected before simulation");
+    }
 
     println!("\n== top recommendations ==");
     println!("{}", report.to_table(top).render());

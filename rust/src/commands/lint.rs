@@ -1,0 +1,52 @@
+//! `rlhf-mem lint <config.json>` — statically verify a configuration
+//! without simulating it: phase-program dataflow, sharing ownership,
+//! placement collectives (`--plan`), and the abstract peak bounds
+//! against the config's `capacity_gib`. Non-zero exit when any finding
+//! resolves to `deny`.
+
+use rlhf_mem::config::ExperimentConfig;
+use rlhf_mem::coordinator::PlacementPlan;
+use rlhf_mem::lint::{lint_plan, lint_scenario, LintConfig};
+use rlhf_mem::report;
+use rlhf_mem::util::cli::Args;
+
+const USAGE: &str = "usage: rlhf-mem lint <config.json> [--plan NAME] [--gpus N] \
+                     [--deny LIST] [--warn LIST] [--allow LIST] [--json FILE]";
+
+pub fn run(args: &Args) -> Result<(), String> {
+    let path = args.positional.first().ok_or(USAGE)?;
+    let cfg = ExperimentConfig::from_file(path)?;
+    let lc = LintConfig::from_lists(
+        args.get_or("deny", ""),
+        args.get_or("warn", ""),
+        args.get_or("allow", ""),
+    )?;
+
+    let report = if let Some(plan_name) = args.flag("plan") {
+        let gpus = args.get_u64("gpus", cfg.scenario.world)?;
+        let plan = PlacementPlan::by_name(plan_name, gpus)?;
+        lint_plan(&cfg.scenario, &plan, cfg.capacity, &lc)
+    } else {
+        lint_scenario(&cfg.scenario, cfg.capacity, &lc)
+    };
+
+    print!("{}", report::lint::render(&report));
+    println!(
+        "lint: {} deny, {} warn",
+        report.deny_count(),
+        report.warn_count()
+    );
+
+    if let Some(file) = args.flag("json") {
+        std::fs::write(file, report.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {file}");
+    }
+
+    if report.deny_count() > 0 {
+        return Err(format!(
+            "lint failed with {} deny finding(s)",
+            report.deny_count()
+        ));
+    }
+    Ok(())
+}

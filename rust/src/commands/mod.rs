@@ -11,6 +11,7 @@ pub mod cluster;
 pub mod debug;
 pub mod explain;
 pub mod genablation;
+pub mod lint;
 pub mod profile;
 pub mod figure1;
 pub mod overhead;

@@ -28,7 +28,16 @@
 //! that genuinely differ, and a step-time model charging cross-GPU bytes
 //! through ring/P2P collectives (`rlhf-mem cluster`, `advise --cluster`).
 //!
+//! Structural properties of a configuration are checkable *before* any
+//! simulation: the [`lint`] static verifier (`rlhf-mem lint`) runs
+//! dataflow, ownership, collective-matching and abstract peak-bound
+//! passes over the compiled phase program and placement plan, and its
+//! lower bounds prescreen planner candidates (`advise
+//! --prescreen-static`).
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+#![forbid(unsafe_code)]
 
 pub mod alloc;
 pub mod bench;
@@ -36,6 +45,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiment;
 pub mod frameworks;
+pub mod lint;
 pub mod mem;
 pub mod obs;
 pub mod planner;

@@ -1,0 +1,291 @@
+//! Abstract-interpretation pass: a conservative static peak-memory
+//! interval per phase, computed without generating a trace.
+//!
+//! The abstract domain is an interval `[lo, hi]` of ideal live bytes per
+//! [`PhaseKind`]. The anchor is [`sim::init_footprint`] — the exact
+//! engine-lifetime bytes `init` allocates on this rank (`P`):
+//!
+//! - **Lower bound.** Engine state never shrinks below `P` minus the
+//!   scorers the simulator may swap out to host mid-step (ColossalChat's
+//!   offload of reference/reward during training, and placement-plan
+//!   phase time-sharing — both fire only from a training node under
+//!   `ScenarioMode::Full`). So `lo(init) = P` and `lo(phase) = P - S`
+//!   where `S` is the swappable scorers' replica bytes.
+//! - **Upper bound.** `P` plus an experience envelope `E` (every tensor a
+//!   step can persist across phases, at doubled batch for greedy
+//!   baselines / preference pairs and jitter-free maximum length) plus,
+//!   for non-init phases, a working-set envelope `W` that dominates any
+//!   phase body's transient churn: per architecture, `13×` the full fp16
+//!   replica (covers gathered ZeRO shards, fp16/fp32 gradients, master
+//!   copies, Adam scratch and flat buffers), the training-resident
+//!   activations, one layer's forward+backward transients, two logits
+//!   tensors and twice the full-length KV cache — summed over both
+//!   architectures and doubled once more. `init` itself can absorb a
+//!   *silent* leading experience load (offline algorithms attribute the
+//!   first `LoadExperience` to the init phase mark), hence `hi(init) =
+//!   P + E`, not `P`.
+//!
+//! Soundness — `lo <= phase_peaks(trace) <= hi` for every phase of every
+//! configuration — is not argued once and assumed: the `lint_soundness`
+//! integration test proves it over the full algo × sharing × strategy ×
+//! mode × placement battery, and pins `init`'s peak to exactly `P` where
+//! no silent load exists. The planner's `--prescreen-static` relies on
+//! one direction only: `lo <= ideal peak <= peak_allocated <=
+//! peak_reserved`, so `lo > capacity` proves infeasibility.
+
+use super::diag::{Finding, Span};
+use crate::mem::{ActivationModel, DType, KvCacheModel, ParamInventory, SeqShape};
+use crate::rlhf::models::Role;
+use crate::rlhf::program::{PhaseBody, PhaseProgram};
+use crate::rlhf::sim::{self, ScenarioMode, SimScenario};
+use crate::trace::PhaseKind;
+use crate::util::bytes::fmt_bytes;
+
+/// The static interval for one phase: ideal live bytes stay within
+/// `lo..=hi` whenever the phase runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseBound {
+    pub phase: PhaseKind,
+    pub lo: u64,
+    pub hi: u64,
+}
+
+/// Replica bytes of the scorers the simulator may host-swap mid-step:
+/// zero unless the compiled program actually trains under
+/// [`ScenarioMode::Full`] (both swap paths live in the train body).
+fn swappable_bytes(scn: &SimScenario, program: &PhaseProgram, fp: &sim::InitFootprint) -> u64 {
+    if scn.mode != ScenarioMode::Full {
+        return 0;
+    }
+    let trains_actor = program.nodes.iter().any(|n| {
+        matches!(
+            n.body,
+            PhaseBody::Train {
+                role: Role::Actor,
+                ..
+            }
+        )
+    });
+    let trains_any = program
+        .nodes
+        .iter()
+        .any(|n| matches!(n.body, PhaseBody::Train { .. }));
+    let mut s = 0;
+    for r in [Role::Reference, Role::Reward] {
+        let colossal = trains_actor && scn.framework.offload_inference_models_during_training;
+        let time_shared = trains_any && scn.time_shared.contains(r);
+        if colossal || time_shared {
+            s += fp.role_total(r);
+        }
+    }
+    s
+}
+
+/// The experience envelope `E`: every byte one step can persist across
+/// phase boundaries, at worst-case batch and length.
+fn experience_envelope(scn: &SimScenario) -> u64 {
+    let fw = &scn.framework;
+    // Greedy baselines and preference pairs at most double the batch;
+    // +2 length slack keeps the bound comfortably above any off-by-one
+    // in downstream shapes.
+    let b = fw.rollout_batch * 2;
+    let t = fw.total_seq() + 2;
+    // 4 I64 sequence/mask tensors + up to 8 per-token and 8 per-sequence
+    // F32 tensors (logprobs, rewards, values, advantages, returns, ...).
+    4 * b * t * DType::I64.bytes() + 8 * b * t * 4 + 8 * b * 4
+}
+
+/// The working-set envelope `W`: dominates any single phase body's
+/// transient churn on top of engine state + experience.
+fn working_set_envelope(scn: &SimScenario) -> u64 {
+    let fw = &scn.framework;
+    let b = fw.rollout_batch * 2;
+    let t = fw.total_seq() + 2;
+    let sh = SeqShape { batch: b, seq: t };
+    let mut w = 0u64;
+    for arch in [&scn.models.policy_arch, &scn.models.value_arch] {
+        let inv = ParamInventory::build_with_value_head(arch);
+        let c = inv.total_bytes(DType::F16);
+        let act = ActivationModel::new(arch, DType::F16);
+        let kv = KvCacheModel::new(arch, DType::F16);
+        let transients: u64 = act.layer_transients(sh).iter().map(|a| a.bytes).sum();
+        let backward: u64 = act
+            .layer_backward_transients(sh)
+            .iter()
+            .map(|a| a.bytes)
+            .sum();
+        w += 13 * c
+            + act.train_forward_resident(sh)
+            + transients
+            + backward
+            + 2 * act.logits_bytes(sh)
+            + 2 * kv.total_bytes(b, t);
+    }
+    2 * w
+}
+
+/// The exact engine-lifetime floor — `init`'s static lower bound, and
+/// the planner prescreen's whole-scenario lower bound (every phase's
+/// ideal peak is at least the engine bytes still resident).
+pub fn static_lower_max(scn: &SimScenario) -> u64 {
+    sim::init_footprint(scn).total()
+}
+
+/// Compute the static interval for every phase the compiled program can
+/// mark, `init` first, then in first-appearance order.
+pub fn static_bounds(scn: &SimScenario) -> Vec<PhaseBound> {
+    let program = PhaseProgram::compile(scn);
+    let fp = sim::init_footprint(scn);
+    let p = fp.total();
+    let s = swappable_bytes(scn, &program, &fp);
+    let e = experience_envelope(scn);
+    let w = working_set_envelope(scn);
+
+    let mut out = vec![PhaseBound {
+        phase: PhaseKind::Init,
+        lo: p,
+        hi: p + e,
+    }];
+    for node in &program.nodes {
+        let Some(kind) = node.kind else { continue };
+        if out.iter().any(|b| b.phase == kind) {
+            continue;
+        }
+        out.push(PhaseBound {
+            phase: kind,
+            lo: p - s,
+            hi: p + e + w,
+        });
+    }
+    out
+}
+
+/// The bounds pass as lint rules: `RLHF030` (deny) per phase whose lower
+/// bound alone exceeds `capacity` — the configuration is *proven*
+/// infeasible — and one `RLHF031` (warn) when only upper bounds exceed
+/// it, i.e. the static analysis cannot rule an OOM out. Returns the
+/// computed bounds so reports can render the interval table.
+pub fn check_bounds(
+    scn: &SimScenario,
+    capacity: u64,
+    gpu: Option<u64>,
+    findings: &mut Vec<Finding>,
+) -> Vec<PhaseBound> {
+    let bounds = static_bounds(scn);
+    let mut proven_infeasible = false;
+    for b in &bounds {
+        if b.lo > capacity {
+            proven_infeasible = true;
+            findings.push(Finding::new(
+                "RLHF030",
+                format!(
+                    "phase {} needs at least {} but capacity is {}",
+                    b.phase.name(),
+                    fmt_bytes(b.lo),
+                    fmt_bytes(capacity)
+                ),
+                Span {
+                    gpu,
+                    phase: Some(b.phase.name().to_string()),
+                    node: None,
+                },
+            ));
+        }
+    }
+    if !proven_infeasible {
+        if let Some(worst) = bounds.iter().max_by_key(|b| b.hi) {
+            if worst.hi > capacity {
+                findings.push(Finding::new(
+                    "RLHF031",
+                    format!(
+                        "phase {} may need up to {} against capacity {}: the static \
+                         bounds cannot rule an OOM out (simulate to decide)",
+                        worst.phase.name(),
+                        fmt_bytes(worst.hi),
+                        fmt_bytes(capacity)
+                    ),
+                    Span {
+                        gpu,
+                        phase: Some(worst.phase.name().to_string()),
+                        node: None,
+                    },
+                ));
+            }
+        }
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::EmptyCachePolicy;
+    use crate::strategies::StrategyConfig;
+    use crate::trace::analysis::phase_peaks;
+
+    #[test]
+    fn intervals_are_well_formed() {
+        let scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        let bounds = static_bounds(&scn);
+        assert_eq!(bounds[0].phase, PhaseKind::Init);
+        for b in &bounds {
+            assert!(b.lo <= b.hi, "{:?}", b);
+            assert!(b.lo <= bounds[0].lo, "floor above init floor: {:?}", b);
+        }
+        // DeepSpeed never host-swaps scorers: the floor is flat.
+        assert!(bounds.iter().all(|b| b.lo == bounds[0].lo));
+    }
+
+    #[test]
+    fn colossal_offload_lowers_the_floor() {
+        let scn = SimScenario::colossal_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        let bounds = static_bounds(&scn);
+        let init = bounds[0];
+        let train = bounds
+            .iter()
+            .find(|b| b.phase == PhaseKind::TrainActor)
+            .unwrap();
+        assert!(train.lo < init.lo, "{} vs {}", train.lo, init.lo);
+    }
+
+    #[test]
+    fn bounds_bracket_one_simulated_scenario() {
+        let mut scn = SimScenario::deepspeed_opt(StrategyConfig::zero3(), EmptyCachePolicy::Never);
+        scn.steps = 2;
+        let bounds = static_bounds(&scn);
+        for (phase, peak) in phase_peaks(&sim::build_trace(&scn)) {
+            let b = bounds.iter().find(|b| b.phase == phase).unwrap();
+            assert!(
+                b.lo <= peak && peak <= b.hi,
+                "{}: {} outside [{}, {}]",
+                phase.name(),
+                peak,
+                b.lo,
+                b.hi
+            );
+        }
+    }
+
+    #[test]
+    fn capacity_rules_fire_in_order() {
+        let scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        let floor = static_lower_max(&scn);
+        // Below the floor: proven infeasible, no inconclusive warning.
+        let mut f = Vec::new();
+        check_bounds(&scn, floor - 1, None, &mut f);
+        assert!(f.iter().any(|x| x.code == "RLHF030"), "{f:?}");
+        assert!(f.iter().all(|x| x.code != "RLHF031"), "{f:?}");
+        // Between floor and ceiling: inconclusive only.
+        let hi = static_bounds(&scn).iter().map(|b| b.hi).max().unwrap();
+        let mut f = Vec::new();
+        check_bounds(&scn, hi - 1, None, &mut f);
+        assert_eq!(
+            f.iter().map(|x| x.code).collect::<Vec<_>>(),
+            vec!["RLHF031"]
+        );
+        // Above the ceiling: clean.
+        let mut f = Vec::new();
+        check_bounds(&scn, hi, None, &mut f);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

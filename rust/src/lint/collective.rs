@@ -1,0 +1,288 @@
+//! Cross-rank collective-matching pass over a [`PlacementPlan`]: the
+//! structural rules [`PlacementPlan::validate_for`] enforces at schedule
+//! time, re-expressed as diagnostics (`RLHF020`–`RLHF025`), plus the two
+//! genuinely cross-rank checks the dynamic path only hits as a deadlock:
+//!
+//! - `RLHF026` — a trainable role's hosts partially overlap the training
+//!   data-parallel group. ZeRO gradient all-reduce is a group-wide
+//!   collective: ranks inside the overlap enter it, ranks outside never
+//!   do, and the step deadlocks. (Disjoint hosts are fine — each trains
+//!   an independent world-of-one replica; equal sets are the normal DP
+//!   group.)
+//! - `RLHF027` — a generating algorithm whose rollout producer (the
+//!   actor) is hosted nowhere while scorer GPUs wait for shipped
+//!   sequences: every P2P receive would block forever.
+//!
+//! `RLHF010` (warn) flags a sharing group split across GPUs: the base
+//! deduplication [`Sharing`] promises exists only on GPUs hosting ≥ 2
+//! group members, so a split placement silently pays full-replica cost.
+
+use super::diag::{Finding, Span};
+use crate::coordinator::PlacementPlan;
+use crate::rlhf::models::{Role, RoleSet};
+use crate::rlhf::program::{Algo, Sharing};
+
+/// Run every placement/collective rule, appending findings in
+/// deterministic order (structural rules first, mirroring
+/// [`PlacementPlan::validate_for`], then collectives, then sharing).
+///
+/// Returns `false` when the plan's *shape* is broken (`RLHF020`/
+/// `RLHF021`) — per-GPU passes cannot index such a plan and must be
+/// skipped.
+pub fn check_plan(
+    plan: &PlacementPlan,
+    algo: Algo,
+    sharing: Sharing,
+    findings: &mut Vec<Finding>,
+) -> bool {
+    if plan.hosted.is_empty() {
+        findings.push(Finding::new(
+            "RLHF020",
+            "placement plan has no GPUs".to_string(),
+            Span::none(),
+        ));
+        return false;
+    }
+    if plan.time_shared.len() != plan.hosted.len() {
+        findings.push(Finding::new(
+            "RLHF021",
+            format!(
+                "time_shared table covers {} GPUs but hosted covers {}",
+                plan.time_shared.len(),
+                plan.hosted.len()
+            ),
+            Span::none(),
+        ));
+        return false;
+    }
+    for (g, set) in plan.hosted.iter().enumerate() {
+        if set.is_empty() {
+            findings.push(Finding::new(
+                "RLHF022",
+                format!("GPU {g} hosts no model"),
+                Span::on_gpu(g as u64),
+            ));
+        }
+    }
+    for role in algo.roles().iter() {
+        if plan.hosts_of(role).is_empty() {
+            findings.push(Finding::new(
+                "RLHF023",
+                format!("no GPU hosts the {} model", role.name()),
+                Span::none(),
+            ));
+        }
+    }
+    for (g, ts) in plan.time_shared.iter().enumerate() {
+        if !ts.is_subset_of(plan.hosted[g]) {
+            findings.push(Finding::new(
+                "RLHF024",
+                format!(
+                    "GPU {g} time-shares {} but hosts only {}",
+                    ts.label(),
+                    plan.hosted[g].label()
+                ),
+                Span::on_gpu(g as u64),
+            ));
+        }
+        for role in ts.iter() {
+            if role.is_trainable() {
+                findings.push(Finding::new(
+                    "RLHF025",
+                    format!(
+                        "GPU {g} time-shares the trainable {} model (its optimizer \
+                         state cannot swap out mid-step)",
+                        role.name()
+                    ),
+                    Span::on_gpu(g as u64),
+                ));
+            }
+        }
+    }
+
+    // RLHF026: gradient all-reduce group mismatch. The DP group is the
+    // actor's host set; any other trainable role must either ride the
+    // whole group or live entirely outside it.
+    let dp = plan.dp_gpus();
+    for role in algo.roles().iter().filter(|r| r.is_trainable()) {
+        let hosts = plan.hosts_of(role);
+        if hosts.is_empty() || hosts == dp {
+            continue;
+        }
+        let overlap: Vec<usize> = hosts.iter().copied().filter(|g| dp.contains(g)).collect();
+        if !overlap.is_empty() {
+            findings.push(Finding::new(
+                "RLHF026",
+                format!(
+                    "{} trains on GPUs {hosts:?} but the data-parallel group is {dp:?}: \
+                     ranks {overlap:?} would enter a gradient all-reduce the others never \
+                     join (deadlock)",
+                    role.name(),
+                ),
+                Span::none(),
+            ));
+        }
+    }
+
+    // RLHF027: P2P consumers with no producer.
+    if algo.generates() && dp.is_empty() {
+        let consumers: Vec<usize> = (0..plan.hosted.len())
+            .filter(|&g| !plan.hosted[g].intersect(algo.roles()).is_empty())
+            .collect();
+        if !consumers.is_empty() {
+            findings.push(Finding::new(
+                "RLHF027",
+                format!(
+                    "no GPU hosts the generating actor, but GPUs {consumers:?} wait for \
+                     shipped sequences (P2P receive with no sender)"
+                ),
+                Span::none(),
+            ));
+        }
+    }
+
+    // RLHF010: a sharing group spread over GPUs that don't all host the
+    // same members loses the base deduplication on the partial hosts.
+    if sharing != Sharing::Separate {
+        let mut seen = RoleSet::EMPTY;
+        for role in algo.roles().iter() {
+            if seen.contains(role) {
+                continue;
+            }
+            let group = sharing.group_of(role).intersect(algo.roles());
+            for r in group.iter() {
+                seen = seen.with(r);
+            }
+            let members: Vec<Role> = group.iter().collect();
+            if members.len() < 2 {
+                continue;
+            }
+            let first_hosts = plan.hosts_of(members[0]);
+            if members.iter().any(|&m| plan.hosts_of(m) != first_hosts) {
+                findings.push(Finding::new(
+                    "RLHF010",
+                    format!(
+                        "sharing group {} is split across GPUs: members are hosted on \
+                         different GPU sets, so the shared-base deduplication is lost",
+                        group.label()
+                    ),
+                    Span::none(),
+                ));
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.code).collect()
+    }
+
+    #[test]
+    fn presets_are_clean_for_every_algo() {
+        for gpus in [2u64, 4] {
+            for plan in PlacementPlan::presets(gpus) {
+                for algo in Algo::ALL {
+                    // Presets host every role, so every reduced cast fits.
+                    let mut findings = Vec::new();
+                    assert!(check_plan(&plan, algo, Sharing::Separate, &mut findings));
+                    assert!(
+                        findings.is_empty(),
+                        "{}/{}: {:?}",
+                        plan.name,
+                        algo.name(),
+                        findings
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn structural_rules_mirror_validate_for() {
+        let mut plan = PlacementPlan::colocated(2);
+        plan.hosted = vec![];
+        plan.time_shared = vec![];
+        let mut f = Vec::new();
+        assert!(!check_plan(&plan, Algo::Ppo, Sharing::Separate, &mut f));
+        assert_eq!(codes(&f), vec!["RLHF020"]);
+
+        let mut plan = PlacementPlan::colocated(2);
+        plan.time_shared.pop();
+        let mut f = Vec::new();
+        assert!(!check_plan(&plan, Algo::Ppo, Sharing::Separate, &mut f));
+        assert_eq!(codes(&f), vec!["RLHF021"]);
+
+        let mut plan = PlacementPlan::colocated(2);
+        plan.hosted[1] = RoleSet::EMPTY;
+        let mut f = Vec::new();
+        assert!(check_plan(&plan, Algo::Dpo, Sharing::Separate, &mut f));
+        assert!(codes(&f).contains(&"RLHF022"), "{f:?}");
+
+        let mut plan = PlacementPlan::colocated(2);
+        plan.time_shared[0] = RoleSet::of(&[Role::Actor]);
+        let mut f = Vec::new();
+        check_plan(&plan, Algo::Ppo, Sharing::Separate, &mut f);
+        assert_eq!(codes(&f), vec!["RLHF025"]);
+    }
+
+    #[test]
+    fn partial_dp_overlap_is_a_deadlock() {
+        // Actor on GPUs {0,1}; critic on {1,2}: rank 1 enters the critic
+        // all-reduce, rank 0 never does.
+        let mut plan = PlacementPlan::colocated(3);
+        plan.hosted = vec![
+            RoleSet::of(&[Role::Actor, Role::Reference, Role::Reward]),
+            RoleSet::of(&[Role::Actor, Role::Critic]),
+            RoleSet::of(&[Role::Critic, Role::Reference, Role::Reward]),
+        ];
+        plan.time_shared = vec![RoleSet::EMPTY; 3];
+        let mut f = Vec::new();
+        assert!(check_plan(&plan, Algo::Ppo, Sharing::Separate, &mut f));
+        assert_eq!(codes(&f), vec!["RLHF026"]);
+        // Disjoint critic hosts train independent replicas: no deadlock.
+        plan.hosted[1] = RoleSet::of(&[Role::Actor]);
+        let mut f = Vec::new();
+        assert!(check_plan(&plan, Algo::Ppo, Sharing::Separate, &mut f));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn missing_generator_blocks_p2p() {
+        let mut plan = PlacementPlan::colocated(2);
+        plan.hosted = vec![
+            RoleSet::of(&[Role::Reference, Role::Reward]),
+            RoleSet::of(&[Role::Critic, Role::Reward]),
+        ];
+        plan.time_shared = vec![RoleSet::EMPTY; 2];
+        let mut f = Vec::new();
+        assert!(check_plan(&plan, Algo::Ppo, Sharing::Separate, &mut f));
+        // Actor unhosted fires both the structural and the P2P rule.
+        assert!(codes(&f).contains(&"RLHF023"));
+        assert!(codes(&f).contains(&"RLHF027"));
+        // DPO loads pairs locally: no P2P, only the structural miss.
+        let mut f = Vec::new();
+        assert!(check_plan(&plan, Algo::Dpo, Sharing::Separate, &mut f));
+        assert!(codes(&f).contains(&"RLHF023"));
+        assert!(!codes(&f).contains(&"RLHF027"));
+    }
+
+    #[test]
+    fn split_sharing_group_warns() {
+        // Dedicated hosts actor+critic away from reference+reward: under
+        // LoRA both pair groups are split.
+        let plan = PlacementPlan::dedicated(4).unwrap();
+        let mut f = Vec::new();
+        assert!(check_plan(&plan, Algo::Ppo, Sharing::Lora, &mut f));
+        assert_eq!(codes(&f), vec!["RLHF010", "RLHF010"]);
+        // Colocated hosts whole groups everywhere: clean.
+        let plan = PlacementPlan::colocated(4);
+        let mut f = Vec::new();
+        assert!(check_plan(&plan, Algo::Ppo, Sharing::Lora, &mut f));
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

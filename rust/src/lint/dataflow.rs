@@ -1,0 +1,607 @@
+//! Dataflow pass: abstract def-use analysis over a compiled
+//! [`PhaseProgram`]'s experience tensors, plus the sharing-group
+//! ownership rules over the static parameter allocations a scenario
+//! implies.
+//!
+//! The abstract domain is a seven-element resource set — the experience
+//! bundle one RLHF step threads between phases (sequences, pair
+//! sequences, old/ref logprobs, rewards, values, advantages). Each
+//! [`PhaseBody`] *defines* some resources and *requires* others; walking
+//! the node list with a live set catches use-before-produce
+//! (`RLHF001`), freeing nothing (`RLHF002`), leaks past the step
+//! boundary (`RLHF003`), unsatisfiable role requirements (`RLHF004`),
+//! redundant definitions (`RLHF005`) and phase-mark/body mismatches
+//! (`RLHF006`) — statically, without generating a trace.
+//!
+//! Roles of the algorithm's cast that this GPU does *not* host are
+//! *remote*: their scoring outputs arrive over the wire, so they
+//! pre-populate the live set (the coordinator's P2P model ships them;
+//! [`super::collective`] checks a producer exists).
+
+use super::diag::{Finding, Span};
+use crate::mem::{DType, ParamInventory, ParamKind};
+use crate::rlhf::models::{Role, RoleSet};
+use crate::rlhf::program::{ExpTensor, PhaseBody, PhaseProgram};
+use crate::rlhf::sim::{self, SimScenario};
+
+/// One element of the abstract experience bundle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    /// Rollout token sequences + attention masks.
+    Sequences,
+    /// The second sequence set of paired pipelines (DPO's rejected half,
+    /// ReMax's greedy-baseline rollout).
+    PairSequences,
+    /// The actor's old per-token logprobs.
+    OldLogprobs,
+    /// The frozen reference's per-token logprobs.
+    RefLogprobs,
+    /// Per-sequence scalar rewards.
+    Rewards,
+    /// The critic's per-token values.
+    Values,
+    /// Computed advantages (and value targets where the estimator keeps
+    /// returns).
+    Advantages,
+}
+
+impl Resource {
+    pub const ALL: [Resource; 7] = [
+        Resource::Sequences,
+        Resource::PairSequences,
+        Resource::OldLogprobs,
+        Resource::RefLogprobs,
+        Resource::Rewards,
+        Resource::Values,
+        Resource::Advantages,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Resource::Sequences => "sequences",
+            Resource::PairSequences => "pair_sequences",
+            Resource::OldLogprobs => "old_logprobs",
+            Resource::RefLogprobs => "ref_logprobs",
+            Resource::Rewards => "rewards",
+            Resource::Values => "values",
+            Resource::Advantages => "advantages",
+        }
+    }
+
+    fn bit(self) -> u8 {
+        match self {
+            Resource::Sequences => 1,
+            Resource::PairSequences => 2,
+            Resource::OldLogprobs => 4,
+            Resource::RefLogprobs => 8,
+            Resource::Rewards => 16,
+            Resource::Values => 32,
+            Resource::Advantages => 64,
+        }
+    }
+}
+
+/// A set of [`Resource`]s (bitset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResSet(u8);
+
+impl ResSet {
+    pub const EMPTY: ResSet = ResSet(0);
+
+    pub fn of(rs: &[Resource]) -> ResSet {
+        rs.iter().fold(ResSet::EMPTY, |s, &r| s.with(r))
+    }
+
+    #[must_use]
+    pub fn with(self, r: Resource) -> ResSet {
+        ResSet(self.0 | r.bit())
+    }
+
+    #[must_use]
+    pub fn union(self, other: ResSet) -> ResSet {
+        ResSet(self.0 | other.0)
+    }
+
+    /// Elements of `self` not in `other`.
+    #[must_use]
+    pub fn minus(self, other: ResSet) -> ResSet {
+        ResSet(self.0 & !other.0)
+    }
+
+    #[must_use]
+    pub fn intersect(self, other: ResSet) -> ResSet {
+        ResSet(self.0 & other.0)
+    }
+
+    pub fn contains(self, r: Resource) -> bool {
+        self.0 & r.bit() != 0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn iter(self) -> impl Iterator<Item = Resource> {
+        Resource::ALL.into_iter().filter(move |&r| self.contains(r))
+    }
+
+    /// `sequences+rewards`-style label (`-` when empty).
+    pub fn label(self) -> String {
+        if self.is_empty() {
+            return "-".to_string();
+        }
+        self.iter().map(Resource::name).collect::<Vec<_>>().join("+")
+    }
+}
+
+/// Resources a node produces into the step's experience bundle.
+pub fn node_defs(body: &PhaseBody) -> ResSet {
+    match body {
+        PhaseBody::Generation { greedy_baseline }
+        | PhaseBody::RemoteSequences { greedy_baseline } => {
+            let mut s = ResSet::of(&[Resource::Sequences]);
+            if *greedy_baseline {
+                s = s.with(Resource::PairSequences);
+            }
+            s
+        }
+        PhaseBody::LoadExperience { tensors } => {
+            let mut s = ResSet::EMPTY;
+            let seq_sets = tensors
+                .iter()
+                .filter(|t| matches!(t, ExpTensor::SeqTokens))
+                .count();
+            if seq_sets >= 1 {
+                s = s.with(Resource::Sequences);
+            }
+            if seq_sets >= 2 {
+                s = s.with(Resource::PairSequences);
+            }
+            if tensors
+                .iter()
+                .any(|t| matches!(t, ExpTensor::PerTokenF32 | ExpTensor::PerSeqF32))
+            {
+                // Pre-collected scalar/per-token experience stands in for
+                // the whole scored bundle.
+                s = s.union(ResSet::of(&[
+                    Resource::OldLogprobs,
+                    Resource::RefLogprobs,
+                    Resource::Rewards,
+                    Resource::Values,
+                    Resource::Advantages,
+                ]));
+            }
+            s
+        }
+        PhaseBody::Infer { role, .. } => ResSet::of(&[scorer_output(*role)]),
+        PhaseBody::Advantages { .. } => ResSet::of(&[Resource::Advantages]),
+        PhaseBody::Train { .. } | PhaseBody::FreeExperience => ResSet::EMPTY,
+    }
+}
+
+/// Resources a node consumes — what must be live when it runs.
+pub fn node_reqs(body: &PhaseBody) -> ResSet {
+    use crate::rlhf::program::{AdvantageKind, LossKind};
+    match body {
+        PhaseBody::Generation { .. }
+        | PhaseBody::RemoteSequences { .. }
+        | PhaseBody::LoadExperience { .. } => ResSet::EMPTY,
+        PhaseBody::Infer { role: _, pairs } => {
+            let mut s = ResSet::of(&[Resource::Sequences]);
+            if *pairs {
+                s = s.with(Resource::PairSequences);
+            }
+            s
+        }
+        PhaseBody::Advantages { kind } => match kind {
+            AdvantageKind::Gae => ResSet::of(&[Resource::Rewards, Resource::Values]),
+            AdvantageKind::GroupRelative | AdvantageKind::GreedyBaseline => {
+                ResSet::of(&[Resource::Rewards])
+            }
+        },
+        PhaseBody::Train { loss, .. } => match loss {
+            LossKind::PpoClip => ResSet::of(&[
+                Resource::Sequences,
+                Resource::OldLogprobs,
+                Resource::RefLogprobs,
+                Resource::Advantages,
+            ]),
+            LossKind::ValueLoss => ResSet::of(&[
+                Resource::Sequences,
+                Resource::Values,
+                Resource::Advantages,
+            ]),
+            LossKind::Preference => ResSet::of(&[
+                Resource::Sequences,
+                Resource::PairSequences,
+                Resource::RefLogprobs,
+            ]),
+        },
+        PhaseBody::FreeExperience => ResSet::EMPTY,
+    }
+}
+
+/// The experience output a role's scoring pass persists.
+fn scorer_output(role: Role) -> Resource {
+    match role {
+        Role::Actor => Resource::OldLogprobs,
+        Role::Reference => Resource::RefLogprobs,
+        Role::Reward => Resource::Rewards,
+        Role::Critic => Resource::Values,
+    }
+}
+
+/// The phase mark a body naturally carries (`None`: the body runs inside
+/// the enclosing phase and must stay unmarked).
+fn natural_kind(body: &PhaseBody) -> Option<crate::trace::PhaseKind> {
+    use crate::trace::PhaseKind;
+    match body {
+        PhaseBody::Generation { .. } => Some(PhaseKind::Generation),
+        PhaseBody::Infer { role, .. } => Some(PhaseProgram::infer_kind(*role)),
+        PhaseBody::Train { role: Role::Actor, .. } => Some(PhaseKind::TrainActor),
+        PhaseBody::Train { role: Role::Critic, .. } => Some(PhaseKind::TrainCritic),
+        _ => None,
+    }
+}
+
+/// Walk `program`'s nodes with a live resource set, appending findings.
+/// `remote` is the set of cast roles another GPU hosts — their scoring
+/// outputs are ambient (shipped in, never a local leak). `gpu` scopes
+/// spans for cluster lints.
+pub fn check_program(
+    program: &PhaseProgram,
+    remote: RoleSet,
+    gpu: Option<u64>,
+    findings: &mut Vec<Finding>,
+) {
+    let span_at = |node: usize, kind: Option<crate::trace::PhaseKind>| Span {
+        gpu,
+        phase: kind.map(|k| k.name().to_string()),
+        node: Some(node),
+    };
+
+    let ambient = remote
+        .intersect(program.algo.roles())
+        .iter()
+        .fold(ResSet::EMPTY, |s, r| s.with(scorer_output(r)));
+    let mut live = ambient;
+
+    for (i, node) in program.nodes.iter().enumerate() {
+        let span = || span_at(i, node.kind.or_else(|| natural_kind(&node.body)));
+
+        // RLHF004: the node needs roles this GPU does not instantiate.
+        // Advantages runs wherever *either* consumer lives; every other
+        // body needs its full requirement set locally.
+        let hosted_ok = match node.body {
+            PhaseBody::Advantages { .. } => {
+                node.requires.is_empty()
+                    || !node.requires.intersect(program.active_roles).is_empty()
+            }
+            _ => node.requires.is_subset_of(program.active_roles),
+        };
+        if !hosted_ok {
+            findings.push(Finding::new(
+                "RLHF004",
+                format!(
+                    "node requires role(s) {} but this GPU instantiates {}",
+                    node.requires.label(),
+                    program.active_roles.label()
+                ),
+                span(),
+            ));
+        }
+
+        // RLHF006: phase-mark / body agreement.
+        match (node.kind, natural_kind(&node.body)) {
+            (Some(marked), Some(natural)) if marked != natural => {
+                findings.push(Finding::new(
+                    "RLHF006",
+                    format!(
+                        "node is marked '{}' but its body implies '{}'",
+                        marked.name(),
+                        natural.name()
+                    ),
+                    span(),
+                ));
+            }
+            (Some(marked), None) => {
+                findings.push(Finding::new(
+                    "RLHF006",
+                    format!(
+                        "node is marked '{}' but its body runs inside the enclosing phase",
+                        marked.name()
+                    ),
+                    span(),
+                ));
+            }
+            _ => {}
+        }
+
+        if matches!(node.body, PhaseBody::FreeExperience) {
+            // RLHF002: freeing when nothing locally-produced is live.
+            if live.minus(ambient).is_empty() {
+                findings.push(Finding::new(
+                    "RLHF002",
+                    "experience freed while no experience is live (double-free)".to_string(),
+                    span(),
+                ));
+            }
+            live = ResSet::EMPTY;
+            continue;
+        }
+
+        // RLHF001: consumed before any producer ran.
+        let missing = node_reqs(&node.body).minus(live);
+        if !missing.is_empty() {
+            findings.push(Finding::new(
+                "RLHF001",
+                format!("consumes {} before any node produces it", missing.label()),
+                span(),
+            ));
+        }
+
+        // RLHF005: produced again while still live.
+        let defs = node_defs(&node.body);
+        let redundant = defs.intersect(live);
+        if !redundant.is_empty() {
+            findings.push(Finding::new(
+                "RLHF005",
+                format!("produces {} while it is already live", redundant.label()),
+                span(),
+            ));
+        }
+        live = live.union(defs);
+    }
+
+    // RLHF003: locally-produced experience outlives the step.
+    let leaked = live.minus(ambient);
+    if !leaked.is_empty() {
+        findings.push(Finding::new(
+            "RLHF003",
+            format!("{} still live after the last node (leak across step)", leaked.label()),
+            Span {
+                gpu,
+                ..Span::default()
+            },
+        ));
+    }
+}
+
+/// What a static parameter allocation is, for the ownership rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StaticAllocKind {
+    /// The (possibly shared) backbone replica.
+    SharedBase,
+    /// A private value/LM head riding a shared backbone.
+    Head,
+    /// Trainable tensors (full replica or adapters).
+    Adapter,
+    /// Optimizer state (Adam moments + fp32 master).
+    Optimizer,
+}
+
+impl StaticAllocKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StaticAllocKind::SharedBase => "base",
+            StaticAllocKind::Head => "head",
+            StaticAllocKind::Adapter => "adapter",
+            StaticAllocKind::Optimizer => "optimizer",
+        }
+    }
+}
+
+/// One static (init-time) parameter allocation, attributed to a role.
+/// Sizes are unsharded logical bytes — the ownership rules are about
+/// *who* allocates, not how ZeRO splits it.
+#[derive(Debug, Clone, Copy)]
+pub struct StaticAlloc {
+    pub role: Role,
+    pub kind: StaticAllocKind,
+    pub bytes: u64,
+}
+
+/// The owner of `role`'s sharing group on this scenario's GPU: the first
+/// active group member in [`Role::ALL`] order (the simulator's rule).
+pub fn group_owner(scn: &SimScenario, role: Role) -> Option<Role> {
+    let active = scn.roles.intersect(scn.algo.roles());
+    scn.sharing.group_of(role).intersect(active).iter().next()
+}
+
+/// The static parameter allocations `scn`'s init implies, per active
+/// role: the shared base (owner only), private heads (non-owners),
+/// trainable tensors and optimizer state (trainable roles). Mutation
+/// tests seed hand-built lists; this derivation is always clean.
+pub fn derive_static_allocs(scn: &SimScenario) -> Vec<StaticAlloc> {
+    let active = scn.roles.intersect(scn.algo.roles());
+    let mut out = Vec::new();
+    for role in active.iter() {
+        let inv = role_inventory(scn, role);
+        match group_owner(scn, role) {
+            Some(owner) if owner == role => out.push(StaticAlloc {
+                role,
+                kind: StaticAllocKind::SharedBase,
+                bytes: inv.total_bytes(DType::F16),
+            }),
+            _ => {
+                let head: u64 = inv
+                    .tensors
+                    .iter()
+                    .filter(|t| matches!(t.kind, ParamKind::Head))
+                    .map(|t| t.bytes(DType::F16))
+                    .sum();
+                if head > 0 {
+                    out.push(StaticAlloc {
+                        role,
+                        kind: StaticAllocKind::Head,
+                        bytes: head,
+                    });
+                }
+            }
+        }
+        if role.is_trainable() {
+            let trainable = sim::trainable_bytes_f16(scn, role);
+            out.push(StaticAlloc {
+                role,
+                kind: StaticAllocKind::Adapter,
+                bytes: trainable,
+            });
+            // Adam: exp_avg + exp_avg_sq + fp32 master = 12 B/param =
+            // 6 x the f16 trainable bytes.
+            out.push(StaticAlloc {
+                role,
+                kind: StaticAllocKind::Optimizer,
+                bytes: 6 * trainable,
+            });
+        }
+    }
+    out
+}
+
+/// The parameter inventory a role instantiates under the scenario's
+/// sharing (Hydra collapses every role onto the policy trunk).
+fn role_inventory(scn: &SimScenario, role: Role) -> ParamInventory {
+    if scn.sharing.unifies_architectures() {
+        if role.has_value_head() {
+            ParamInventory::build_with_value_head(&scn.models.policy_arch)
+        } else {
+            ParamInventory::build(&scn.models.policy_arch)
+        }
+    } else {
+        scn.models.inventory_for(role)
+    }
+}
+
+/// Sharing-group ownership rules over static allocations: `RLHF012`
+/// (base allocated by a non-owner) and `RLHF011` (optimizer state larger
+/// than the trainable tensors justify — the frozen-backbone
+/// adapter-state rule of Efficient-RLHF / PERL).
+pub fn check_ownership(
+    scn: &SimScenario,
+    allocs: &[StaticAlloc],
+    gpu: Option<u64>,
+    findings: &mut Vec<Finding>,
+) {
+    let span = || Span {
+        gpu,
+        ..Span::default()
+    };
+    for a in allocs {
+        match a.kind {
+            StaticAllocKind::SharedBase => {
+                let owner = group_owner(scn, a.role);
+                if owner != Some(a.role) {
+                    findings.push(Finding::new(
+                        "RLHF012",
+                        format!(
+                            "role {} allocates the shared base owned by {}",
+                            a.role.name(),
+                            owner.map_or("nobody", Role::name),
+                        ),
+                        span(),
+                    ));
+                }
+            }
+            StaticAllocKind::Optimizer => {
+                let budget = 6 * sim::trainable_bytes_f16(scn, a.role);
+                if a.bytes > budget {
+                    let why = if scn.sharing.frozen_backbone() {
+                        "the backbone is frozen; optimizer state must cover adapters/heads only"
+                    } else {
+                        "optimizer state exceeds what the trainable tensors justify"
+                    };
+                    findings.push(Finding::new(
+                        "RLHF011",
+                        format!(
+                            "role {} holds {} optimizer bytes but trainable tensors justify {} ({why})",
+                            a.role.name(),
+                            a.bytes,
+                            budget,
+                        ),
+                        span(),
+                    ));
+                }
+            }
+            StaticAllocKind::Head | StaticAllocKind::Adapter => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::EmptyCachePolicy;
+    use crate::rlhf::program::Algo;
+    use crate::rlhf::sim::ScenarioMode;
+    use crate::strategies::StrategyConfig;
+
+    fn scn(algo: Algo) -> SimScenario {
+        let mut s = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        s.algo = algo;
+        s
+    }
+
+    #[test]
+    fn compiled_programs_are_dataflow_clean() {
+        for algo in Algo::ALL {
+            for mode in ScenarioMode::ALL {
+                let mut s = scn(algo);
+                s.mode = mode;
+                let program = PhaseProgram::compile(&s);
+                let mut findings = Vec::new();
+                check_program(&program, RoleSet::EMPTY, None, &mut findings);
+                assert!(
+                    findings.is_empty(),
+                    "{}/{}: {:?}",
+                    algo.name(),
+                    mode.name(),
+                    findings
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scorer_only_gpu_relies_on_remote_outputs() {
+        let mut s = scn(Algo::Ppo);
+        s.roles = RoleSet::of(&[Role::Reference, Role::Reward]);
+        let program = PhaseProgram::compile(&s);
+        let remote = RoleSet::of(&[Role::Actor, Role::Critic]);
+        let mut findings = Vec::new();
+        check_program(&program, remote, Some(3), &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn resource_sets_behave() {
+        let s = ResSet::of(&[Resource::Sequences, Resource::Rewards]);
+        assert!(s.contains(Resource::Rewards));
+        assert!(!s.contains(Resource::Values));
+        assert_eq!(s.minus(ResSet::of(&[Resource::Rewards])).label(), "sequences");
+        assert_eq!(ResSet::EMPTY.label(), "-");
+        assert_eq!(s.label(), "sequences+rewards");
+    }
+
+    #[test]
+    fn derived_allocs_pass_ownership() {
+        use crate::rlhf::program::Sharing;
+        for algo in Algo::ALL {
+            for sharing in Sharing::ALL {
+                let mut s = scn(algo);
+                s.sharing = sharing;
+                let allocs = derive_static_allocs(&s);
+                let mut findings = Vec::new();
+                check_ownership(&s, &allocs, None, &mut findings);
+                assert!(
+                    findings.is_empty(),
+                    "{}/{}: {:?}",
+                    algo.name(),
+                    sharing.name(),
+                    findings
+                );
+                // Every active role allocates something.
+                assert!(!allocs.is_empty());
+            }
+        }
+    }
+}

@@ -1,0 +1,363 @@
+//! Diagnostic plumbing for the static verifier: the stable code registry
+//! (`RLHF001`…), severities, spans, findings, and the
+//! `--deny`/`--warn`/`--allow` configuration.
+//!
+//! Every rule the linter can fire is registered in [`CODES`] with a
+//! default severity and a one-line summary; the DESIGN.md §16 diagnostics
+//! table mirrors this registry (`rust/tests/registration_audit.rs` keeps
+//! the two in sync). Codes are append-only: a released code never changes
+//! meaning, so scripts can match on them.
+
+use crate::util::cli::split_list;
+use crate::util::json::Json;
+
+/// How a finding is treated: `Deny` fails the lint, `Warn` reports
+/// without failing, `Allow` suppresses it entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Allow,
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Allow => "allow",
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// Where a finding points: any of a GPU index (cluster lints), a phase
+/// name, and a phase-program node index. All optional — a plan-shape
+/// error has no phase, a dataflow error on a single-GPU config has no
+/// GPU.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Span {
+    pub gpu: Option<u64>,
+    pub phase: Option<String>,
+    pub node: Option<usize>,
+}
+
+impl Span {
+    /// The empty span (configuration-level finding).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn on_gpu(gpu: u64) -> Self {
+        Self {
+            gpu: Some(gpu),
+            ..Self::default()
+        }
+    }
+
+    pub fn at_node(mut self, node: usize) -> Self {
+        self.node = Some(node);
+        self
+    }
+
+    pub fn at_phase(mut self, phase: &str) -> Self {
+        self.phase = Some(phase.to_string());
+        self
+    }
+
+    /// Human rendering: `gpu0 generation #3`, or `-` when empty.
+    pub fn render(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(g) = self.gpu {
+            parts.push(format!("gpu{g}"));
+        }
+        if let Some(p) = &self.phase {
+            parts.push(p.clone());
+        }
+        if let Some(n) = self.node {
+            parts.push(format!("#{n}"));
+        }
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+/// One registered diagnostic: stable code, default severity, one-line
+/// summary (what the DESIGN.md table lists).
+#[derive(Debug, Clone, Copy)]
+pub struct CodeInfo {
+    pub code: &'static str,
+    pub default: Severity,
+    pub summary: &'static str,
+}
+
+/// The diagnostic registry. Grouped: `RLHF00x` dataflow, `RLHF01x`
+/// sharing/ownership, `RLHF02x` placement/collectives, `RLHF03x` static
+/// peak bounds.
+pub const CODES: &[CodeInfo] = &[
+    CodeInfo {
+        code: "RLHF001",
+        default: Severity::Deny,
+        summary: "experience tensor consumed before any node produces it",
+    },
+    CodeInfo {
+        code: "RLHF002",
+        default: Severity::Deny,
+        summary: "experience freed while nothing is live (double-free)",
+    },
+    CodeInfo {
+        code: "RLHF003",
+        default: Severity::Warn,
+        summary: "experience still live after the last node (leak across step)",
+    },
+    CodeInfo {
+        code: "RLHF004",
+        default: Severity::Deny,
+        summary: "phase node requires a role this GPU does not host",
+    },
+    CodeInfo {
+        code: "RLHF005",
+        default: Severity::Warn,
+        summary: "experience tensor produced again while still live",
+    },
+    CodeInfo {
+        code: "RLHF006",
+        default: Severity::Deny,
+        summary: "marked phase kind does not match the node body",
+    },
+    CodeInfo {
+        code: "RLHF010",
+        default: Severity::Warn,
+        summary: "sharing group split across GPUs (base deduplication lost)",
+    },
+    CodeInfo {
+        code: "RLHF011",
+        default: Severity::Deny,
+        summary: "optimizer state exceeds the trainable budget on a frozen backbone",
+    },
+    CodeInfo {
+        code: "RLHF012",
+        default: Severity::Deny,
+        summary: "shared base allocated by a non-owner role",
+    },
+    CodeInfo {
+        code: "RLHF020",
+        default: Severity::Deny,
+        summary: "placement plan has no GPUs",
+    },
+    CodeInfo {
+        code: "RLHF021",
+        default: Severity::Deny,
+        summary: "hosted/time_shared plan tables have different lengths",
+    },
+    CodeInfo {
+        code: "RLHF022",
+        default: Severity::Deny,
+        summary: "GPU hosts no model",
+    },
+    CodeInfo {
+        code: "RLHF023",
+        default: Severity::Deny,
+        summary: "role the algorithm requires is hosted by no GPU",
+    },
+    CodeInfo {
+        code: "RLHF024",
+        default: Severity::Deny,
+        summary: "GPU time-shares a model it does not host",
+    },
+    CodeInfo {
+        code: "RLHF025",
+        default: Severity::Deny,
+        summary: "GPU time-shares a trainable model",
+    },
+    CodeInfo {
+        code: "RLHF026",
+        default: Severity::Deny,
+        summary: "trainable role's hosts do not match the data-parallel group",
+    },
+    CodeInfo {
+        code: "RLHF027",
+        default: Severity::Deny,
+        summary: "P2P experience shipping has consumers but no producer",
+    },
+    CodeInfo {
+        code: "RLHF030",
+        default: Severity::Deny,
+        summary: "statically infeasible: phase lower bound exceeds capacity",
+    },
+    CodeInfo {
+        code: "RLHF031",
+        default: Severity::Warn,
+        summary: "inconclusive: phase upper bound exceeds capacity",
+    },
+];
+
+/// Registry lookup by code.
+pub fn code_info(code: &str) -> Option<&'static CodeInfo> {
+    CODES.iter().find(|c| c.code == code)
+}
+
+/// One lint finding: a registered code at a span, with the severity the
+/// active [`LintConfig`] resolved for it.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub message: String,
+    pub span: Span,
+}
+
+impl Finding {
+    /// A finding at its code's registry-default severity (the
+    /// [`LintConfig`] re-resolves severities when the report is built).
+    pub fn new(code: &'static str, message: String, span: Span) -> Self {
+        let info = code_info(code).expect("finding uses a registered diagnostic code");
+        Finding {
+            code,
+            severity: info.default,
+            message,
+            span,
+        }
+    }
+
+    /// Deterministic JSON object for `--json` output.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::str(self.code)),
+            ("severity", Json::str(self.severity.name())),
+            (
+                "gpu",
+                match self.span.gpu {
+                    Some(g) => Json::from(g),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "phase",
+                match &self.span.phase {
+                    Some(p) => Json::str(p.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "node",
+                match self.span.node {
+                    Some(n) => Json::from(n),
+                    None => Json::Null,
+                },
+            ),
+            ("message", Json::str(self.message.clone())),
+        ])
+    }
+}
+
+/// The `--deny`/`--warn`/`--allow` severity overrides. Precedence:
+/// a specific code entry beats an `all` entry beats the registry
+/// default; listing the same code (or `all`) under two severities is an
+/// error rather than an ordering puzzle.
+#[derive(Debug, Clone, Default)]
+pub struct LintConfig {
+    all: Option<Severity>,
+    specific: Vec<(&'static str, Severity)>,
+}
+
+impl LintConfig {
+    /// Parse the three comma-separated lists (each entry a registered
+    /// code or `all`). Empty strings mean "no overrides".
+    pub fn from_lists(deny: &str, warn: &str, allow: &str) -> Result<Self, String> {
+        let mut cfg = LintConfig::default();
+        for (list, sev) in [
+            (deny, Severity::Deny),
+            (warn, Severity::Warn),
+            (allow, Severity::Allow),
+        ] {
+            for entry in split_list(list) {
+                if entry == "all" {
+                    if cfg.all.is_some() {
+                        return Err("'all' listed under more than one severity".to_string());
+                    }
+                    cfg.all = Some(sev);
+                    continue;
+                }
+                let info = code_info(entry).ok_or_else(|| {
+                    format!("unknown diagnostic code '{entry}' (codes: RLHF001..RLHF031, or 'all')")
+                })?;
+                if cfg.specific.iter().any(|(c, _)| *c == info.code) {
+                    return Err(format!("code '{entry}' listed under more than one severity"));
+                }
+                cfg.specific.push((info.code, sev));
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The severity this configuration resolves for `code`.
+    pub fn severity_for(&self, code: &str) -> Severity {
+        if let Some((_, sev)) = self.specific.iter().find(|(c, _)| *c == code) {
+            return *sev;
+        }
+        if let Some(sev) = self.all {
+            return sev;
+        }
+        code_info(code).map_or(Severity::Warn, |i| i.default)
+    }
+
+    /// Apply the configuration to a raw finding: re-resolve its severity,
+    /// dropping it entirely when allowed.
+    pub fn apply(&self, mut finding: Finding) -> Option<Finding> {
+        let sev = self.severity_for(finding.code);
+        if sev == Severity::Allow {
+            return None;
+        }
+        finding.severity = sev;
+        Some(finding)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_codes_are_unique_and_well_formed() {
+        for (i, a) in CODES.iter().enumerate() {
+            assert!(a.code.starts_with("RLHF") && a.code.len() == 7, "{}", a.code);
+            assert!(a.code[4..].chars().all(|c| c.is_ascii_digit()));
+            for b in &CODES[i + 1..] {
+                assert_ne!(a.code, b.code, "duplicate diagnostic code");
+            }
+        }
+    }
+
+    #[test]
+    fn config_precedence_specific_over_all_over_default() {
+        let cfg = LintConfig::from_lists("all", "RLHF003", "RLHF031").unwrap();
+        assert_eq!(cfg.severity_for("RLHF001"), Severity::Deny);
+        assert_eq!(cfg.severity_for("RLHF003"), Severity::Warn);
+        assert_eq!(cfg.severity_for("RLHF031"), Severity::Allow);
+        // Default config: registry defaults apply.
+        let def = LintConfig::default();
+        assert_eq!(def.severity_for("RLHF003"), Severity::Warn);
+        assert_eq!(def.severity_for("RLHF002"), Severity::Deny);
+    }
+
+    #[test]
+    fn config_rejects_unknown_and_conflicting_entries() {
+        assert!(LintConfig::from_lists("RLHF999", "", "").is_err());
+        assert!(LintConfig::from_lists("RLHF001", "RLHF001", "").is_err());
+        assert!(LintConfig::from_lists("all", "", "all").is_err());
+    }
+
+    #[test]
+    fn allow_drops_findings() {
+        let cfg = LintConfig::from_lists("", "", "RLHF003").unwrap();
+        let f = Finding::new("RLHF003", "leak".into(), Span::none());
+        assert!(cfg.apply(f).is_none());
+        let f = Finding::new("RLHF002", "double free".into(), Span::on_gpu(1).at_node(3));
+        let kept = cfg.apply(f).unwrap();
+        assert_eq!(kept.severity, Severity::Deny);
+        assert_eq!(kept.span.render(), "gpu1 #3");
+    }
+}

@@ -1,0 +1,246 @@
+//! Static verifier over compiled phase programs, placement plans and
+//! sharing/strategy configurations — every structural property the paper
+//! ties memory blowups to, checked *without generating a trace*.
+//!
+//! Three passes, each a module:
+//!
+//! - [`dataflow`] — def-use analysis over [`PhaseProgram`] nodes
+//!   (use-before-produce, double-free, cross-step leaks, phase-mark
+//!   mismatches) and sharing-group ownership rules over the static
+//!   allocations a scenario implies (`RLHF00x`, `RLHF01x`).
+//! - [`collective`] — cross-rank matching over a [`PlacementPlan`]:
+//!   plan-shape rules, gradient all-reduce group mismatches, P2P
+//!   consumers with no producer, split sharing groups (`RLHF02x`,
+//!   `RLHF010`).
+//! - [`bounds`] — abstract interpretation computing a conservative
+//!   static peak interval per phase, sound against the simulator
+//!   (`RLHF03x`); its lower bound also powers `advise
+//!   --prescreen-static`.
+//!
+//! Findings carry stable diagnostic codes from [`diag::CODES`] with
+//! `--deny`/`--warn`/`--allow` severity configuration; everything is
+//! deterministic, so `--json` output is byte-stable.
+
+pub mod bounds;
+pub mod collective;
+pub mod dataflow;
+pub mod diag;
+
+pub use bounds::{check_bounds, static_bounds, static_lower_max, PhaseBound};
+pub use collective::check_plan;
+pub use dataflow::{check_ownership, check_program, derive_static_allocs};
+pub use diag::{code_info, CodeInfo, Finding, LintConfig, Severity, Span, CODES};
+
+use crate::coordinator::PlacementPlan;
+use crate::rlhf::models::RoleSet;
+use crate::rlhf::program::PhaseProgram;
+use crate::rlhf::sim::SimScenario;
+use crate::util::json::Json;
+
+/// The static peak intervals computed for one GPU (`gpu` is `None` for a
+/// single-GPU lint).
+#[derive(Debug, Clone)]
+pub struct GpuBounds {
+    pub gpu: Option<u64>,
+    pub bounds: Vec<PhaseBound>,
+}
+
+/// Everything one lint run produced: configured findings (allowed codes
+/// already dropped) and the per-GPU bound tables.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub bounds: Vec<GpuBounds>,
+}
+
+impl LintReport {
+    pub fn deny_count(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Deny)
+            .count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Warn)
+            .count()
+    }
+
+    /// Deterministic JSON document for `--json` output.
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self.findings.iter().map(Finding::to_json).collect();
+        let bounds: Vec<Json> = self
+            .bounds
+            .iter()
+            .map(|g| {
+                let phases: Vec<Json> = g
+                    .bounds
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("phase", Json::str(b.phase.name())),
+                            ("lo", Json::from(b.lo)),
+                            ("hi", Json::from(b.hi)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    (
+                        "gpu",
+                        match g.gpu {
+                            Some(g) => Json::from(g),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("phases", Json::from(phases)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("deny", Json::from(self.deny_count())),
+            ("warn", Json::from(self.warn_count())),
+            ("findings", Json::from(findings)),
+            ("bounds", Json::from(bounds)),
+        ])
+    }
+}
+
+/// The algorithm-cast roles this GPU does *not* host — their scorer
+/// outputs arrive from other ranks, which the dataflow pass models as
+/// ambient definitions.
+fn remote_roles(scn: &SimScenario) -> RoleSet {
+    let active = scn.roles.intersect(scn.algo.roles());
+    let mut remote = RoleSet::EMPTY;
+    for role in scn.algo.roles().iter() {
+        if !active.contains(role) {
+            remote = remote.with(role);
+        }
+    }
+    remote
+}
+
+fn lint_one_gpu(
+    scn: &SimScenario,
+    capacity: u64,
+    gpu: Option<u64>,
+    findings: &mut Vec<Finding>,
+) -> GpuBounds {
+    let program = PhaseProgram::compile(scn);
+    check_program(&program, remote_roles(scn), gpu, findings);
+    let allocs = derive_static_allocs(scn);
+    check_ownership(scn, &allocs, gpu, findings);
+    let bounds = check_bounds(scn, capacity, gpu, findings);
+    GpuBounds { gpu, bounds }
+}
+
+/// Lint a single-GPU scenario against `capacity` bytes: dataflow,
+/// ownership and bounds passes, severities resolved by `cfg`.
+pub fn lint_scenario(scn: &SimScenario, capacity: u64, cfg: &LintConfig) -> LintReport {
+    let mut findings = Vec::new();
+    let bounds = lint_one_gpu(scn, capacity, None, &mut findings);
+    LintReport {
+        findings: findings.into_iter().filter_map(|f| cfg.apply(f)).collect(),
+        bounds: vec![bounds],
+    }
+}
+
+/// Lint `base` placed over `plan`: the collective pass over the plan
+/// itself, then the per-GPU passes over each GPU's derived scenario.
+/// When the plan's *shape* is broken the per-GPU passes are skipped —
+/// there is no coherent per-GPU scenario to check.
+pub fn lint_plan(
+    base: &SimScenario,
+    plan: &PlacementPlan,
+    capacity: u64,
+    cfg: &LintConfig,
+) -> LintReport {
+    let mut findings = Vec::new();
+    let mut bounds = Vec::new();
+    if check_plan(plan, base.algo, base.sharing, &mut findings) {
+        for g in 0..plan.hosted.len() {
+            // A GPU hosting nothing from the cast runs nothing (RLHF022
+            // already flags a fully empty GPU).
+            if plan.hosted[g].intersect(base.algo.roles()).is_empty() {
+                continue;
+            }
+            let scn = plan.scenario_for_gpu(base, g);
+            bounds.push(lint_one_gpu(&scn, capacity, Some(g as u64), &mut findings));
+        }
+    }
+    LintReport {
+        findings: findings.into_iter().filter_map(|f| cfg.apply(f)).collect(),
+        bounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::EmptyCachePolicy;
+    use crate::rlhf::program::Algo;
+    use crate::rlhf::sim::SCENARIO_PRESETS;
+    use crate::strategies::StrategyConfig;
+
+    #[test]
+    fn presets_lint_clean_at_ample_capacity() {
+        let cfg = LintConfig::default();
+        for preset in &SCENARIO_PRESETS {
+            let scn = preset.build(StrategyConfig::none(), EmptyCachePolicy::Never);
+            let report = lint_scenario(&scn, u64::MAX, &cfg);
+            assert!(
+                report.findings.is_empty(),
+                "{}: {:?}",
+                preset.name,
+                report.findings
+            );
+            assert_eq!(report.bounds.len(), 1);
+            assert!(!report.bounds[0].bounds.is_empty());
+        }
+    }
+
+    #[test]
+    fn plan_lint_covers_hosting_gpus_only() {
+        use crate::rlhf::models::{Role, RoleSet};
+        let mut base =
+            SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        base.algo = Algo::Dpo; // cast {actor, reference}
+        let mut plan = PlacementPlan::colocated(2);
+        plan.hosted = vec![
+            RoleSet::of(&[Role::Actor, Role::Reference]),
+            RoleSet::of(&[Role::Critic]),
+        ];
+        let report = lint_plan(&base, &plan, u64::MAX, &LintConfig::default());
+        assert!(report.findings.is_empty(), "{:?}", report.findings);
+        // GPU 1 hosts nothing from the DPO cast: no per-GPU lint for it.
+        let gpus: Vec<Option<u64>> = report.bounds.iter().map(|b| b.gpu).collect();
+        assert_eq!(gpus, vec![Some(0)]);
+    }
+
+    #[test]
+    fn every_preset_plan_lints_clean() {
+        let base = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        for plan in PlacementPlan::presets(4) {
+            let report = lint_plan(&base, &plan, u64::MAX, &LintConfig::default());
+            assert!(
+                report.findings.is_empty(),
+                "{}: {:?}",
+                plan.name,
+                report.findings
+            );
+            assert_eq!(report.bounds.len(), 4, "{}", plan.name);
+        }
+    }
+
+    #[test]
+    fn report_json_shape_is_stable() {
+        let scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        let report = lint_scenario(&scn, 0, &LintConfig::default());
+        assert!(report.deny_count() > 0);
+        let text = report.to_json().to_string_pretty();
+        assert!(text.contains("\"findings\""), "{text}");
+        assert!(text.contains("RLHF030"), "{text}");
+        assert!(text.contains("\"bounds\""), "{text}");
+    }
+}

@@ -29,8 +29,13 @@ SUBCOMMANDS:
   cluster      Multi-GPU placement simulator: per-GPU peaks + step time
                per placement plan (see `cluster --help`)
   advise       Search the mitigation space for the cheapest config that
-               fits a GPU budget; --cluster searches placements instead
-               (see `advise --help`)
+               fits a GPU budget; --cluster searches placements instead;
+               --prescreen-static rejects statically-infeasible candidates
+               before simulating (see `advise --help`)
+  lint         Statically verify a config without simulating: dataflow,
+               sharing ownership, placement collectives (--plan NAME),
+               abstract peak bounds vs capacity; stable RLHF0xx codes,
+               --deny/--warn/--allow LIST, --json FILE
   bench        Run the canonical perf workloads: record a BENCH_<n>.json
                trajectory point, gate against a baseline (--check), or
                run the CI smoke suite (--smoke; see `bench --help`)
@@ -66,6 +71,7 @@ fn main() {
         Some("peft") => commands::peft::run(&args),
         Some("cluster") => commands::cluster::run(&args),
         Some("advise") => commands::advise::run(&args),
+        Some("lint") => commands::lint::run(&args),
         Some("bench") => commands::bench::run(&args),
         Some("train") => run_train(&args),
         Some("quickstart") => commands::quickstart::run(&args),

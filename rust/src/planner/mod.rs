@@ -90,14 +90,57 @@ pub struct PlanReport {
     /// deterministic output).
     pub wall_seconds: f64,
     pub jobs: usize,
+    /// Candidates rejected by the static prescreen before simulation
+    /// (`None` when the prescreen was off).
+    pub static_pruned: Option<u64>,
+}
+
+/// Knobs for [`plan_with`]. [`Default`] reproduces [`plan`] exactly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanOptions {
+    /// Reject candidates whose static peak lower bound
+    /// ([`crate::lint::bounds::static_lower_max`]) already exceeds the
+    /// budget's capacity, *before* simulating them. Sound: the bound is
+    /// below the ideal live peak, which is below the reserved peak, so a
+    /// pruned candidate could never have been feasible — and because the
+    /// bound depends only on the (strategy, algo, sharing) group, whole
+    /// groups drop together, taking their overhead baselines with them.
+    /// The surviving outcomes (frontier, ranks, overheads) are
+    /// byte-identical to the unscreened search — pinned by
+    /// `rust/tests/lint_soundness.rs`.
+    pub prescreen_static: bool,
 }
 
 /// Search the mitigation space for `budget` on `jobs` workers.
 pub fn plan(budget: &Budget, jobs: usize) -> Result<PlanReport, String> {
-    let candidates = space::enumerate(budget)?;
+    plan_with(budget, jobs, PlanOptions::default())
+}
+
+/// [`plan`] with explicit [`PlanOptions`] — the two-tier entry point:
+/// static lint bounds first (optional), full simulation second.
+pub fn plan_with(budget: &Budget, jobs: usize, opts: PlanOptions) -> Result<PlanReport, String> {
+    let mut candidates = space::enumerate(budget)?;
+    let mut pruned = None;
+    if opts.prescreen_static {
+        let before = candidates.len();
+        candidates.retain(|c| {
+            let scn = space::candidate_scenario(budget, c);
+            crate::lint::bounds::static_lower_max(&scn) <= budget.capacity
+        });
+        if candidates.is_empty() {
+            return Err(format!(
+                "static prescreen rejected all {before} candidates: every phase \
+                 needs more than the {} GiB budget",
+                fmt_gib_paper(budget.capacity)
+            ));
+        }
+        pruned = Some((before - candidates.len()) as u64);
+    }
     let cells = space::to_cells(budget, &candidates);
     let sweep = SweepRunner::new(jobs).run(cells);
-    Ok(analyze(budget.clone(), candidates, sweep))
+    let mut report = analyze(budget.clone(), candidates, sweep);
+    report.static_pruned = pruned;
+    Ok(report)
 }
 
 /// Pure, serial post-processing of the sweep results — everything that
@@ -183,6 +226,7 @@ fn analyze(budget: Budget, candidates: Vec<Candidate>, sweep: SweepReport) -> Pl
         outcomes,
         wall_seconds: sweep.wall_seconds,
         jobs: sweep.jobs,
+        static_pruned: None,
     }
 }
 
@@ -273,12 +317,29 @@ impl PlanReport {
             "oom_cells",
             self.outcomes.iter().filter(|o| o.summary.oom).count() as u64,
         );
+        if let Some(p) = self.static_pruned {
+            t.add("static_pruned", p);
+        }
         for o in &self.outcomes {
             t.add("num_allocs", o.summary.num_allocs);
             t.add("cache_hits", o.summary.num_cache_hits);
         }
         t.wall("plan", self.wall_seconds);
         t
+    }
+
+    /// Deterministic JSON-lines dump of the *frontier outcomes only*, in
+    /// enumeration order — the prescreen-invariant artifact: because a
+    /// statically pruned candidate can never be feasible (and infeasible
+    /// points never reach the frontier), this is byte-identical between
+    /// `--prescreen-static` and unscreened runs of the same budget.
+    pub fn frontier_jsonl(&self) -> String {
+        let mut out = String::new();
+        for o in self.outcomes.iter().filter(|o| o.on_frontier) {
+            out.push_str(&o.to_json().to_string());
+            out.push('\n');
+        }
+        out
     }
 
     /// [`Self::jsonl`] plus one trailing `{"telemetry":{...}}` footer

@@ -196,32 +196,38 @@ pub fn enumerate(budget: &Budget) -> Result<Vec<Candidate>, String> {
     Ok(out)
 }
 
+/// The exact [`SimScenario`] a candidate simulates under `budget` — the
+/// single source both [`to_cells`] and the planner's static prescreen
+/// (`lint::bounds` over the same scenario the simulator would run) build
+/// from, so the prescreen can never diverge from the simulation.
+pub fn candidate_scenario(budget: &Budget, c: &Candidate) -> SimScenario {
+    SimScenario {
+        framework: FrameworkProfile::by_kind(budget.framework),
+        models: budget.models.clone(),
+        strategy: c.strategy,
+        world: budget.world,
+        policy: c.policy,
+        steps: budget.steps,
+        mode: ScenarioMode::Full,
+        algo: c.algo,
+        sharing: c.sharing,
+        gpu: budget.gpu,
+        seed: budget.seed,
+        len_jitter: budget.framework.default_len_jitter(),
+        roles: RoleSet::ALL,
+        time_shared: RoleSet::EMPTY,
+        rank: 0,
+    }
+}
+
 /// Lower candidates to [`SweepCell`]s for [`crate::sweep::SweepRunner`].
 /// Every cell shares the budget's seed (the search compares mitigations on
 /// the *same* workload) and runs at the budget's capacity.
 pub fn to_cells(budget: &Budget, candidates: &[Candidate]) -> Vec<SweepCell> {
-    let profile = FrameworkProfile::by_kind(budget.framework);
-    let len_jitter = budget.framework.default_len_jitter();
     candidates
         .iter()
         .map(|c| {
-            let scenario = SimScenario {
-                framework: profile.clone(),
-                models: budget.models.clone(),
-                strategy: c.strategy,
-                world: budget.world,
-                policy: c.policy,
-                steps: budget.steps,
-                mode: ScenarioMode::Full,
-                algo: c.algo,
-                sharing: c.sharing,
-                gpu: budget.gpu,
-                seed: budget.seed,
-                len_jitter,
-                roles: RoleSet::ALL,
-                time_shared: RoleSet::EMPTY,
-                rank: 0,
-            };
+            let scenario = candidate_scenario(budget, c);
             SweepCell {
                 key: format!("advise/{}", c.key()),
                 framework: budget.framework.name().to_string(),

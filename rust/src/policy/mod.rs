@@ -61,7 +61,7 @@ mod tests {
 
     #[test]
     fn placement_rules() {
-        use PhaseKind::*;
+        use PhaseKind::{Generation, InferReward, Init, TrainActor, TrainCritic};
         assert!(EmptyCachePolicy::AfterBoth.applies_after(Generation));
         assert!(EmptyCachePolicy::AfterBoth.applies_after(TrainActor));
         assert!(!EmptyCachePolicy::AfterBoth.applies_after(Init));

@@ -1,0 +1,64 @@
+//! Rendering for `rlhf-mem lint`: the findings table and the per-GPU
+//! static peak-interval table.
+
+use crate::lint::LintReport;
+use crate::report::TextTable;
+use crate::util::bytes::fmt_gib;
+
+/// The findings table (omitted when clean) followed by the static bound
+/// intervals the abstract-interpretation pass computed.
+pub fn render(report: &LintReport) -> String {
+    let mut out = String::new();
+    if report.findings.is_empty() {
+        out.push_str("no findings\n");
+    } else {
+        let mut t = TextTable::new(&["Code", "Severity", "Span", "Message"]);
+        for f in &report.findings {
+            t.row(vec![
+                f.code.to_string(),
+                f.severity.name().to_string(),
+                f.span.render(),
+                f.message.clone(),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    if !report.bounds.is_empty() {
+        out.push('\n');
+        out.push_str("Static peak intervals (ideal live bytes, GiB):\n");
+        let mut t = TextTable::new(&["GPU", "Phase", "Lower", "Upper"]);
+        for g in &report.bounds {
+            for b in &g.bounds {
+                t.row(vec![
+                    g.gpu.map_or_else(|| "-".to_string(), |x| x.to_string()),
+                    b.phase.name().to_string(),
+                    fmt_gib(b.lo),
+                    fmt_gib(b.hi),
+                ]);
+            }
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{lint_scenario, LintConfig};
+    use crate::policy::EmptyCachePolicy;
+    use crate::rlhf::sim::SimScenario;
+    use crate::strategies::StrategyConfig;
+    use crate::util::bytes::GIB;
+
+    #[test]
+    fn clean_and_dirty_renders() {
+        let scn = SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never);
+        let clean = render(&lint_scenario(&scn, u64::MAX, &LintConfig::default()));
+        assert!(clean.starts_with("no findings"), "{clean}");
+        assert!(clean.contains("init"), "{clean}");
+        let dirty = render(&lint_scenario(&scn, GIB, &LintConfig::default()));
+        assert!(dirty.contains("RLHF030"), "{dirty}");
+        assert!(dirty.contains("deny"), "{dirty}");
+    }
+}

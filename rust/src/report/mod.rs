@@ -6,6 +6,7 @@
 
 pub mod algos;
 pub mod cluster;
+pub mod lint;
 pub mod paper;
 pub mod peft;
 pub mod table;

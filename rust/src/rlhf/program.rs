@@ -557,7 +557,7 @@ impl PhaseProgram {
 /// algorithm: PPO's classic eight, the critic-free six (no values), and
 /// DPO's preference-pair set.
 fn precollected_tensors(algo: Algo) -> Vec<ExpTensor> {
-    use ExpTensor::*;
+    use ExpTensor::{Mask, PerSeqF32, PerTokenF32, SeqTokens};
     match algo {
         Algo::Ppo => vec![
             SeqTokens,   // sequences

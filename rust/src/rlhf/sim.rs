@@ -336,6 +336,179 @@ pub fn trainable_bytes_f16(scn: &SimScenario, role: Role) -> u64 {
     SimModel::build(role, scn).trainable_bytes_f16()
 }
 
+/// One role's share of the engine-lifetime bytes [`Emitter::init`]
+/// allocates on this rank, decomposed by what the bytes are.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoleFootprint {
+    pub role: Role,
+    /// fp16 replica (`extra` tensors; rank shard under ZeRO-3).
+    pub params: u64,
+    /// Dense adapter copies (LoRA placements).
+    pub adapters: u64,
+    /// Adam states (rank shard under ZeRO-1+).
+    pub optimizer: u64,
+    /// Gradient reduce bucket (ZeRO-2+).
+    pub comm: u64,
+    /// Pinned offload staging buffers.
+    pub staging: u64,
+}
+
+impl RoleFootprint {
+    pub fn total(&self) -> u64 {
+        self.params + self.adapters + self.optimizer + self.comm + self.staging
+    }
+}
+
+/// The static image of [`Emitter::init`]: every engine-lifetime byte the
+/// simulator will allocate on this rank before step 1, per active role,
+/// plus the hybrid-engine inference copy. Because `init` performs only
+/// allocations, `total()` is *exactly* the simulated `init` phase peak —
+/// the anchor of the lint subsystem's static bounds
+/// (`lint::bounds::static_bounds`), pinned by the
+/// `lint_soundness` integration test.
+#[derive(Debug, Clone, Default)]
+pub struct InitFootprint {
+    pub roles: Vec<RoleFootprint>,
+    /// DeepSpeed-Chat fused inference containers (actor weight copy).
+    pub hybrid_engine: u64,
+}
+
+impl InitFootprint {
+    /// Engine-lifetime bytes resident after `init` — the simulated `init`
+    /// phase peak.
+    pub fn total(&self) -> u64 {
+        self.roles.iter().map(RoleFootprint::total).sum::<u64>() + self.hybrid_engine
+    }
+
+    /// `role`'s engine-lifetime bytes (0 when not active on this rank).
+    pub fn role_total(&self, role: Role) -> u64 {
+        self.roles
+            .iter()
+            .find(|r| r.role == role)
+            .map_or(0, RoleFootprint::total)
+    }
+}
+
+/// Compute [`InitFootprint`] for `scn` without building a trace. This
+/// mirrors [`Emitter::init`] byte-for-byte — per-tensor ZeRO shard
+/// round-up included — so keep the two in lockstep.
+pub fn init_footprint(scn: &SimScenario) -> InitFootprint {
+    let world = scn.world;
+    let rank = scn.rank;
+    let z = scn.strategy.zero;
+    let offload = scn.strategy.cpu_offload;
+    let active = scn.roles.intersect(scn.algo.roles());
+    let partitioned = |role: Role| {
+        scn.strategy.zero.partitions_params()
+            && role.is_trainable()
+            && !scn.sharing.frozen_backbone()
+    };
+
+    let mut out = InitFootprint::default();
+    for role in Role::ALL {
+        if !active.contains(role) {
+            continue;
+        }
+        let m = SimModel::build(role, scn);
+        let params: u64 = m
+            .extra
+            .iter()
+            .map(|t| {
+                let full = t.bytes(DType::F16);
+                if partitioned(role) {
+                    zero::shard_bytes(full, world, rank)
+                } else {
+                    full
+                }
+            })
+            .sum();
+
+        let adapters: u64 = match scn.sharing {
+            Sharing::Separate | Sharing::FrozenShared => {
+                if role == Role::Actor && scn.strategy.lora.is_some() {
+                    m.trainable.iter().map(|t| t.bytes(DType::F16)).sum()
+                } else {
+                    0
+                }
+            }
+            Sharing::Lora => m
+                .trainable
+                .iter()
+                .filter(|t| t.name != "v_head")
+                .map(|t| t.bytes(DType::F16))
+                .sum(),
+            Sharing::Hydra => {
+                if role == Role::Actor {
+                    m.trainable.iter().map(|t| t.bytes(DType::F16)).sum()
+                } else {
+                    0
+                }
+            }
+        };
+
+        let optimizer: u64 = if role.is_trainable() && !offload {
+            let trainable_refs: Vec<&TensorSpec> = m.trainable.iter().collect();
+            adam_state_tensors(&trainable_refs, AdamConfig::default())
+                .iter()
+                .map(|s| {
+                    if z.partitions_optimizer() {
+                        zero::shard_bytes(s.bytes, world, rank)
+                    } else {
+                        s.bytes
+                    }
+                })
+                .sum()
+        } else {
+            0
+        };
+
+        let comm = if role.is_trainable() && z.partitions_gradients() {
+            m.trainable_bytes_f16()
+                .min(zero::defaults::REDUCE_BUCKET_BYTES)
+                .max(16)
+        } else {
+            0
+        };
+        let staging = if role.is_trainable() && offload {
+            let cfg = crate::strategies::offload::OffloadConfig::default();
+            let chunk = m.trainable_bytes_f16().min(cfg.staging_bytes).max(16);
+            chunk * cfg.live_buffers()
+        } else {
+            0
+        };
+
+        out.roles.push(RoleFootprint {
+            role,
+            params,
+            adapters,
+            optimizer,
+            comm,
+            staging,
+        });
+    }
+
+    if scn.framework.hybrid_engine && !partitioned(Role::Actor) && active.contains(Role::Actor) {
+        let actor = SimModel::build(Role::Actor, scn);
+        let layers = actor.inv.arch.n_layers;
+        let mut total = 0u64;
+        for l in 0..layers {
+            total += if scn.sharing.frozen_backbone() {
+                actor
+                    .trainable
+                    .iter()
+                    .filter(|t| t.layer == Some(l))
+                    .map(|t| t.bytes(DType::F16))
+                    .sum::<u64>()
+                    .max(16)
+            } else {
+                actor.inv.layer_bytes(l, DType::F16)
+            };
+        }
+        out.hybrid_engine = total;
+    }
+    out
+}
+
 /// Experience tensors shared across phases within one PPO step.
 #[derive(Default)]
 struct Experience {

@@ -3,6 +3,13 @@
 //! paper's numbers (no allocator involved; this is ideal residency) —
 //! plus [`check_invariants`], the structural checker the phase-program
 //! property tests run over the full algo × strategy × mode grid.
+//!
+//! These dynamic invariants have static counterparts in [`crate::lint`]:
+//! the dataflow pass (`RLHF001`–`RLHF006`) proves the def-use discipline
+//! a clean trace exhibits *before* any trace exists, and
+//! [`crate::lint::bounds`] brackets [`phase_peaks`] with intervals whose
+//! soundness the `lint_soundness` integration test pins against this
+//! module's accounting.
 
 use super::op::{PhaseKind, Tag, Trace, TraceOp};
 use std::collections::HashMap;

@@ -1,0 +1,237 @@
+//! Soundness of the static peak bounds (`lint::bounds`) against the
+//! simulator, proven over the full battery rather than argued once:
+//!
+//! - `lo <= phase_peaks(trace) <= hi` for every phase, across
+//!   algorithm × sharing × strategy (DeepSpeed), mode × framework
+//!   (including ColossalChat's ragged lengths and scorer offload), and
+//!   every placement preset's per-GPU derived scenario;
+//! - `init`'s simulated peak is *exactly* the static footprint for
+//!   generating pipelines (nothing silently loads into the init phase);
+//! - the planner's `--prescreen-static` prunes only statically-proven
+//!   infeasible candidates, so the surviving Pareto frontier is
+//!   byte-identical to the unscreened run.
+
+use rlhf_mem::coordinator::PlacementPlan;
+use rlhf_mem::lint::{static_bounds, static_lower_max};
+use rlhf_mem::planner::space::{candidate_scenario, enumerate};
+use rlhf_mem::planner::{plan, plan_with, Budget, PlanOptions};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::program::{Algo, Sharing};
+use rlhf_mem::rlhf::sim::{self, ScenarioMode, SimScenario, SCENARIO_PRESETS};
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::trace::analysis::phase_peaks;
+use rlhf_mem::trace::PhaseKind;
+
+/// Assert every simulated phase peak of `scn` falls inside its static
+/// interval.
+fn assert_bracketed(scn: &SimScenario, label: &str) {
+    let bounds = static_bounds(scn);
+    let trace = sim::build_trace(scn);
+    for (phase, peak) in phase_peaks(&trace) {
+        let b = bounds
+            .iter()
+            .find(|b| b.phase == phase)
+            .unwrap_or_else(|| panic!("{label}: no static bound for phase {}", phase.name()));
+        assert!(
+            b.lo <= peak && peak <= b.hi,
+            "{label}/{}: simulated peak {} outside static [{}, {}]",
+            phase.name(),
+            peak,
+            b.lo,
+            b.hi
+        );
+    }
+}
+
+#[test]
+fn bounds_bracket_every_algo_sharing_strategy_cell() {
+    for algo in Algo::ALL {
+        for sharing in Sharing::ALL {
+            for (row, strategy) in StrategyConfig::table1_deepspeed_rows() {
+                let mut scn =
+                    SimScenario::deepspeed_opt(strategy, EmptyCachePolicy::Never);
+                scn.steps = 2;
+                scn.algo = algo;
+                scn.sharing = sharing;
+                assert_bracketed(
+                    &scn,
+                    &format!("{}/{}/{row}", algo.name(), sharing.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bounds_bracket_every_mode_and_framework_cell() {
+    for preset in &SCENARIO_PRESETS {
+        for mode in ScenarioMode::ALL {
+            for (row, strategy) in StrategyConfig::table1_deepspeed_rows() {
+                // Presets keep the framework's length-jitter default, so
+                // ColossalChat cells run ragged lengths here.
+                let mut scn = preset.build(strategy, EmptyCachePolicy::AfterBoth);
+                if !scn.framework.supports(&scn.strategy) {
+                    continue;
+                }
+                scn.steps = 2;
+                scn.mode = mode;
+                assert_bracketed(&scn, &format!("{}/{}/{row}", preset.name, mode.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn bounds_bracket_every_placement_gpu() {
+    let strategies = [
+        StrategyConfig::none(),
+        StrategyConfig::zero3(),
+        StrategyConfig::zero3_offload(),
+    ];
+    for plan in PlacementPlan::presets(4) {
+        for algo in [Algo::Ppo, Algo::Grpo, Algo::Dpo] {
+            for strategy in strategies {
+                let mut base =
+                    SimScenario::deepspeed_opt(strategy, EmptyCachePolicy::Never);
+                base.steps = 2;
+                base.algo = algo;
+                for g in 0..plan.hosted.len() {
+                    if plan.hosted[g].intersect(algo.roles()).is_empty() {
+                        continue;
+                    }
+                    let scn = plan.scenario_for_gpu(&base, g);
+                    assert_bracketed(
+                        &scn,
+                        &format!("{}/{}/gpu{g}", plan.name, algo.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn init_peak_is_exactly_the_static_footprint() {
+    for preset in &SCENARIO_PRESETS {
+        for (row, strategy) in StrategyConfig::table1_deepspeed_rows() {
+            let mut scn = preset.build(strategy, EmptyCachePolicy::Never);
+            if !scn.framework.supports(&scn.strategy) {
+                continue;
+            }
+            scn.steps = 1;
+            // PPO generates, so the first marked phase after init is
+            // Generation: init's peak is the engine footprint, exactly.
+            let p = sim::init_footprint(&scn).total();
+            let peaks = phase_peaks(&sim::build_trace(&scn));
+            let init = peaks
+                .iter()
+                .find(|(k, _)| *k == PhaseKind::Init)
+                .expect("trace has an init phase")
+                .1;
+            assert_eq!(init, p, "{}/{row}", preset.name);
+        }
+    }
+}
+
+#[test]
+fn prescreen_is_identity_when_everything_clears_the_floor() {
+    let mut budget = Budget::rtx3090_table1();
+    budget.steps = 1;
+    budget.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
+    budget.allocators = Some(vec!["default".to_string()]);
+
+    let plain = plan(&budget, 2).unwrap();
+    let screened = plan_with(
+        &budget,
+        2,
+        PlanOptions {
+            prescreen_static: true,
+        },
+    )
+    .unwrap();
+    assert_eq!(plain.static_pruned, None);
+    assert_eq!(screened.static_pruned, Some(0));
+    assert_eq!(plain.outcomes.len(), screened.outcomes.len());
+    assert_eq!(
+        plain.frontier_jsonl(),
+        screened.frontier_jsonl(),
+        "prescreen must not change the frontier"
+    );
+    assert!(!screened.frontier_jsonl().is_empty(), "24 GiB fits something");
+}
+
+#[test]
+fn prescreen_prunes_proven_infeasible_groups_and_keeps_the_frontier() {
+    // Self-calibrating capacity: with separate vs hydra placements of the
+    // same "none" strategy, the full-replica group's static floor sits
+    // well above the shared-trunk group's. A capacity one byte below the
+    // separate floor proves that whole group infeasible while hydra
+    // still runs.
+    let mut budget = Budget::rtx3090_table1();
+    budget.steps = 1;
+    budget.strategies = Some(vec!["none".to_string()]);
+    budget.allocators = Some(vec!["default".to_string()]);
+    budget.sharings = Some(vec!["separate".to_string(), "hydra".to_string()]);
+
+    let cands = enumerate(&budget).unwrap();
+    let floor_of =
+        |sharing: Sharing| -> u64 {
+            cands
+                .iter()
+                .filter(|c| c.sharing == sharing)
+                .map(|c| static_lower_max(&candidate_scenario(&budget, c)))
+                .max()
+                .expect("candidates exist for the sharing")
+        };
+    let separate_floor = floor_of(Sharing::Separate);
+    let hydra_floor = floor_of(Sharing::Hydra);
+    assert!(
+        hydra_floor < separate_floor,
+        "shared trunk must undercut full replicas: {hydra_floor} vs {separate_floor}"
+    );
+    let separate_count = cands
+        .iter()
+        .filter(|c| c.sharing == Sharing::Separate)
+        .count() as u64;
+
+    budget.capacity = separate_floor - 1;
+    let plain = plan(&budget, 2).unwrap();
+    let screened = plan_with(
+        &budget,
+        2,
+        PlanOptions {
+            prescreen_static: true,
+        },
+    )
+    .unwrap();
+    assert_eq!(screened.static_pruned, Some(separate_count));
+    assert!(screened
+        .outcomes
+        .iter()
+        .all(|o| o.candidate.sharing == Sharing::Hydra));
+    // Pruned candidates were infeasible, so the frontier is untouched.
+    assert_eq!(plain.frontier_jsonl(), screened.frontier_jsonl());
+    // Survivors keep their enumeration identity: both runs' hydra lines
+    // agree index for index.
+    let plain_hydra: Vec<usize> = plain
+        .outcomes
+        .iter()
+        .filter(|o| o.candidate.sharing == Sharing::Hydra)
+        .map(|o| o.candidate.index)
+        .collect();
+    let screened_hydra: Vec<usize> =
+        screened.outcomes.iter().map(|o| o.candidate.index).collect();
+    assert_eq!(plain_hydra, screened_hydra);
+
+    // Below every floor the prescreen rejects the whole space, loudly.
+    budget.capacity = hydra_floor.min(separate_floor) - 1;
+    let err = plan_with(
+        &budget,
+        2,
+        PlanOptions {
+            prescreen_static: true,
+        },
+    )
+    .unwrap_err();
+    assert!(err.contains("static prescreen rejected all"), "{err}");
+}

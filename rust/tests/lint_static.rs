@@ -1,0 +1,270 @@
+//! Mutation battery for the static verifier: seed known-bad phase
+//! programs, ownership tables, placement plans and capacities, and
+//! assert the exact diagnostic code each defect fires — then prove the
+//! shipping presets and `examples/*.json` configs are deny-free under
+//! the strictest severity configuration.
+
+use rlhf_mem::config::ExperimentConfig;
+use rlhf_mem::coordinator::PlacementPlan;
+use rlhf_mem::lint::dataflow::{StaticAlloc, StaticAllocKind};
+use rlhf_mem::lint::{
+    check_ownership, check_plan, check_program, lint_plan, lint_scenario, static_bounds,
+    static_lower_max, Finding, LintConfig, Severity,
+};
+use rlhf_mem::policy::EmptyCachePolicy;
+use rlhf_mem::rlhf::models::{Role, RoleSet};
+use rlhf_mem::rlhf::program::{Algo, PhaseBody, PhaseNode, PhaseProgram, Sharing};
+use rlhf_mem::rlhf::sim::{self, SimScenario, SCENARIO_PRESETS};
+use rlhf_mem::strategies::StrategyConfig;
+use rlhf_mem::trace::PhaseKind;
+use rlhf_mem::util::bytes::GIB;
+
+fn codes(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.code).collect()
+}
+
+fn ppo() -> SimScenario {
+    SimScenario::deepspeed_opt(StrategyConfig::none(), EmptyCachePolicy::Never)
+}
+
+#[test]
+fn double_free_fires_rlhf002() {
+    let scn = ppo();
+    let mut program = PhaseProgram::compile(&scn);
+    // The compiled step already ends in FreeExperience; a second free
+    // runs with nothing live.
+    program.nodes.push(PhaseNode {
+        kind: None,
+        requires: RoleSet::EMPTY,
+        body: PhaseBody::FreeExperience,
+    });
+    let mut f = Vec::new();
+    check_program(&program, RoleSet::EMPTY, None, &mut f);
+    assert_eq!(codes(&f), vec!["RLHF002"]);
+}
+
+#[test]
+fn dropping_the_producer_fires_rlhf001() {
+    let scn = ppo();
+    let mut program = PhaseProgram::compile(&scn);
+    let gen = program
+        .nodes
+        .iter()
+        .position(|n| matches!(n.body, PhaseBody::Generation { .. }))
+        .expect("PPO generates");
+    program.nodes.remove(gen);
+    let mut f = Vec::new();
+    check_program(&program, RoleSet::EMPTY, None, &mut f);
+    assert!(!f.is_empty());
+    // Every downstream consumer of the rollout now reads unproduced
+    // experience; nothing else is wrong with the program.
+    assert!(
+        f.iter().all(|x| x.code == "RLHF001"),
+        "{:?}",
+        codes(&f)
+    );
+}
+
+#[test]
+fn wrong_phase_mark_fires_rlhf006() {
+    let scn = ppo();
+    let mut program = PhaseProgram::compile(&scn);
+    let gen = program
+        .nodes
+        .iter()
+        .position(|n| matches!(n.body, PhaseBody::Generation { .. }))
+        .expect("PPO generates");
+    program.nodes[gen].kind = Some(PhaseKind::TrainActor);
+    let mut f = Vec::new();
+    check_program(&program, RoleSet::EMPTY, None, &mut f);
+    assert_eq!(codes(&f), vec!["RLHF006"]);
+}
+
+#[test]
+fn non_owner_base_alloc_fires_rlhf012() {
+    let mut scn = ppo();
+    scn.sharing = Sharing::Lora;
+    // Under LoRA sharing the actor owns the {actor, reference} trunk;
+    // a reference-side base replica duplicates it.
+    let allocs = vec![StaticAlloc {
+        role: Role::Reference,
+        kind: StaticAllocKind::SharedBase,
+        bytes: 1,
+    }];
+    let mut f = Vec::new();
+    check_ownership(&scn, &allocs, None, &mut f);
+    assert_eq!(codes(&f), vec!["RLHF012"]);
+}
+
+#[test]
+fn oversized_optimizer_fires_rlhf011() {
+    let mut scn = ppo();
+    scn.sharing = Sharing::FrozenShared;
+    let budget = 6 * sim::trainable_bytes_f16(&scn, Role::Actor);
+    let allocs = vec![StaticAlloc {
+        role: Role::Actor,
+        kind: StaticAllocKind::Optimizer,
+        bytes: budget + 1,
+    }];
+    let mut f = Vec::new();
+    check_ownership(&scn, &allocs, None, &mut f);
+    assert_eq!(codes(&f), vec!["RLHF011"]);
+    // At exactly the budget the state is justified.
+    let allocs = vec![StaticAlloc {
+        role: Role::Actor,
+        kind: StaticAllocKind::Optimizer,
+        bytes: budget,
+    }];
+    let mut f = Vec::new();
+    check_ownership(&scn, &allocs, None, &mut f);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn partial_allreduce_overlap_fires_rlhf026() {
+    // Critic hosts {1, 2} vs the actor DP group {0, 1}: rank 1 enters a
+    // gradient all-reduce ranks 0/2 never join.
+    let mut plan = PlacementPlan::colocated(3);
+    plan.hosted = vec![
+        RoleSet::of(&[Role::Actor, Role::Reference, Role::Reward]),
+        RoleSet::of(&[Role::Actor, Role::Critic]),
+        RoleSet::of(&[Role::Critic, Role::Reference, Role::Reward]),
+    ];
+    plan.time_shared = vec![RoleSet::EMPTY; 3];
+    let mut f = Vec::new();
+    assert!(check_plan(&plan, Algo::Ppo, Sharing::Separate, &mut f));
+    assert_eq!(codes(&f), vec!["RLHF026"]);
+}
+
+#[test]
+fn unhosted_generator_fires_rlhf027() {
+    let mut plan = PlacementPlan::colocated(2);
+    plan.hosted = vec![
+        RoleSet::of(&[Role::Reference, Role::Reward]),
+        RoleSet::of(&[Role::Critic, Role::Reward]),
+    ];
+    plan.time_shared = vec![RoleSet::EMPTY; 2];
+    let mut f = Vec::new();
+    assert!(check_plan(&plan, Algo::Ppo, Sharing::Separate, &mut f));
+    assert!(codes(&f).contains(&"RLHF023"), "{f:?}");
+    assert!(codes(&f).contains(&"RLHF027"), "{f:?}");
+}
+
+#[test]
+fn time_sharing_an_unhosted_model_fires_rlhf024() {
+    let mut plan = PlacementPlan::colocated(2);
+    plan.hosted[0] = RoleSet::of(&[Role::Actor, Role::Critic, Role::Reward]);
+    plan.time_shared[0] = RoleSet::of(&[Role::Reference]);
+    let mut f = Vec::new();
+    assert!(check_plan(&plan, Algo::Ppo, Sharing::Separate, &mut f));
+    assert_eq!(codes(&f), vec!["RLHF024"]);
+}
+
+#[test]
+fn over_budget_capacity_fires_the_bounds_rules() {
+    let scn = ppo();
+    let floor = static_lower_max(&scn);
+    // Below the engine floor: proven infeasible, a deny.
+    let report = lint_scenario(&scn, floor - 1, &LintConfig::default());
+    assert!(report.deny_count() > 0);
+    assert!(
+        report.findings.iter().any(|x| x.code == "RLHF030"),
+        "{:?}",
+        codes(&report.findings)
+    );
+    // Between the floor and the ceiling: inconclusive, a warning only.
+    let ceiling = static_bounds(&scn).iter().map(|b| b.hi).max().unwrap();
+    let report = lint_scenario(&scn, ceiling - 1, &LintConfig::default());
+    assert_eq!(report.deny_count(), 0);
+    assert_eq!(codes(&report.findings), vec!["RLHF031"]);
+    assert_eq!(report.findings[0].severity, Severity::Warn);
+}
+
+#[test]
+fn severity_configuration_reshapes_the_verdict() {
+    let scn = ppo();
+    let ceiling = static_bounds(&scn).iter().map(|b| b.hi).max().unwrap();
+    // Promote the inconclusive warning to a deny...
+    let strict = LintConfig::from_lists("RLHF031", "", "").unwrap();
+    let report = lint_scenario(&scn, ceiling - 1, &strict);
+    assert_eq!(report.deny_count(), 1);
+    // ...or suppress it entirely.
+    let lax = LintConfig::from_lists("", "", "RLHF031").unwrap();
+    let report = lint_scenario(&scn, ceiling - 1, &lax);
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+/// The strict shipping gate: deny everything except `RLHF031`, which is
+/// inconclusive by design at realistic capacities (the static upper
+/// bound cannot rule an OOM out — the simulator decides).
+fn strictest() -> LintConfig {
+    LintConfig::from_lists("all", "", "RLHF031").unwrap()
+}
+
+#[test]
+fn presets_are_deny_free_under_the_strictest_config() {
+    let cfg = strictest();
+    for preset in &SCENARIO_PRESETS {
+        for (row, strategy) in StrategyConfig::table1_deepspeed_rows() {
+            let scn = preset.build(strategy, EmptyCachePolicy::Never);
+            if !scn.framework.supports(&scn.strategy) {
+                continue;
+            }
+            let report = lint_scenario(&scn, 24 * GIB, &cfg);
+            assert_eq!(
+                report.deny_count(),
+                0,
+                "{}/{row}: {:?}",
+                preset.name,
+                report.findings
+            );
+        }
+    }
+}
+
+#[test]
+fn placement_presets_are_deny_free_under_the_strictest_config() {
+    let cfg = strictest();
+    let base = ppo();
+    for plan in PlacementPlan::presets(4) {
+        for algo in Algo::ALL {
+            let mut base = base.clone();
+            base.algo = algo;
+            let report = lint_plan(&base, &plan, 24 * GIB, &cfg);
+            assert_eq!(
+                report.deny_count(),
+                0,
+                "{}/{}: {:?}",
+                plan.name,
+                algo.name(),
+                report.findings
+            );
+        }
+    }
+}
+
+#[test]
+fn shipped_example_configs_are_deny_free_under_the_strictest_config() {
+    let cfg = strictest();
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut checked = 0;
+    for entry in std::fs::read_dir(root.join("examples")).expect("read examples/") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).expect("read example");
+        let exp = ExperimentConfig::from_json_text(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let report = lint_scenario(&exp.scenario, exp.capacity, &cfg);
+        assert_eq!(
+            report.deny_count(),
+            0,
+            "{}: {:?}",
+            path.display(),
+            report.findings
+        );
+        checked += 1;
+    }
+    assert!(checked >= 2, "expected the shipped example configs");
+}

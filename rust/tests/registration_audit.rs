@@ -6,7 +6,9 @@
 //! is added without one compiles never and fails never — PR 4 found
 //! `cluster_determinism.rs` silently dead this way. This test walks both
 //! directions: every `rust/tests/*.rs` file has a `[[test]]` entry, and
-//! every `[[test]]` entry points at an existing file.
+//! every `[[test]]` entry points at an existing file. The same audit
+//! covers `benches/*.rs` vs the name-only `[[bench]]` blocks, and the
+//! lint diagnostic registry vs the DESIGN.md rule-catalog table.
 
 use std::collections::BTreeSet;
 use std::path::Path;
@@ -124,4 +126,104 @@ fn every_manifest_entry_points_at_a_real_file() {
             "[[test]] name should match its file stem for greppability"
         );
     }
+}
+
+/// `[[bench]]` blocks are name-only (the files live in the default
+/// `benches/` dir, where auto-discovery works), so the audit matches
+/// names against file stems in both directions.
+fn registered_benches(manifest: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut in_bench = false;
+    for line in manifest.lines() {
+        let line = line.trim();
+        if line.starts_with('[') {
+            in_bench = line == "[[bench]]";
+            continue;
+        }
+        if !in_bench {
+            continue;
+        }
+        if let Some((key, value)) = line.split_once('=') {
+            if key.trim() == "name" {
+                out.insert(value.trim().trim_matches('"').to_string());
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn every_bench_file_matches_a_manifest_block_and_vice_versa() {
+    let root = repo_root();
+    let manifest = std::fs::read_to_string(root.join("Cargo.toml")).expect("read Cargo.toml");
+    let registered = registered_benches(&manifest);
+    assert!(
+        registered.len() >= 9,
+        "expected the known [[bench]] blocks, parsed only {}",
+        registered.len()
+    );
+
+    let mut on_disk: BTreeSet<String> = BTreeSet::new();
+    for entry in std::fs::read_dir(root.join("benches")).expect("read benches/") {
+        let entry = entry.expect("dir entry");
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(stem) = name.strip_suffix(".rs") {
+            on_disk.insert(stem.to_string());
+        }
+    }
+
+    let dead: Vec<&String> = on_disk.difference(&registered).collect();
+    assert!(
+        dead.is_empty(),
+        "bench files with no [[bench]] block in Cargo.toml (they never build): {dead:?}"
+    );
+    let phantom: Vec<&String> = registered.difference(&on_disk).collect();
+    assert!(
+        phantom.is_empty(),
+        "[[bench]] blocks naming no benches/*.rs file: {phantom:?}"
+    );
+}
+
+/// Lint-registry audit: diagnostic codes are unique, well-shaped
+/// (`RLHF` + three digits), and every one of them is documented in the
+/// DESIGN.md rule-catalog table — a finding a user can hit but cannot
+/// look up is a doc bug.
+#[test]
+fn lint_codes_are_unique_well_shaped_and_documented() {
+    use rlhf_mem::lint::CODES;
+
+    let mut seen = BTreeSet::new();
+    for info in CODES {
+        assert!(
+            seen.insert(info.code),
+            "duplicate diagnostic code {}",
+            info.code
+        );
+        let digits = info.code.strip_prefix("RLHF").unwrap_or_else(|| {
+            panic!("code '{}' does not start with RLHF", info.code)
+        });
+        assert!(
+            digits.len() == 3 && digits.bytes().all(|b| b.is_ascii_digit()),
+            "code '{}' is not RLHF + three digits",
+            info.code
+        );
+        assert!(
+            !info.summary.is_empty(),
+            "code {} has an empty summary",
+            info.code
+        );
+    }
+
+    let design =
+        std::fs::read_to_string(repo_root().join("DESIGN.md")).expect("read DESIGN.md");
+    let undocumented: Vec<&str> = CODES
+        .iter()
+        .map(|c| c.code)
+        .filter(|code| !design.contains(code))
+        .collect();
+    assert!(
+        undocumented.is_empty(),
+        "diagnostic codes missing from the DESIGN.md rule catalog: {undocumented:?}"
+    );
 }
