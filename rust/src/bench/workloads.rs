@@ -1,7 +1,9 @@
 //! Canonical workloads behind `rlhf-mem bench`: the allocator micro and
 //! large-pool-churn loops, PPO trace generation, a Table-1 cell, an
-//! `advise` planner search, a 4-GPU `cluster` sweep, and the `peft`
-//! model-sharing comparison — one per layer of the speed stack.
+//! `advise` planner search, the surrogate-screened `advise --surrogate`
+//! two-tier search (fit + screen + frontier-identity check), a 4-GPU
+//! `cluster` sweep, and the `peft` model-sharing comparison — one per
+//! layer of the speed stack.
 //!
 //! Each workload returns machine-independent **deterministic counters**
 //! (op counts, peaks, fingerprints of the exact outputs — seeded
@@ -49,6 +51,7 @@ pub const NAMES: &[&str] = &[
     "trace_gen",
     "table1_cell",
     "advise_search",
+    "advise_surrogate",
     "cluster_sweep",
     "peft_sweep",
     "explain",
@@ -62,6 +65,7 @@ pub fn run_by_name(name: &str) -> Option<WorkloadRun> {
         "trace_gen" => Some(trace_gen()),
         "table1_cell" => Some(table1_cell()),
         "advise_search" => Some(advise_search()),
+        "advise_surrogate" => Some(advise_surrogate()),
         "cluster_sweep" => Some(cluster_sweep()),
         "peft_sweep" => Some(peft_sweep()),
         "explain" => Some(explain_run()),
@@ -252,6 +256,52 @@ pub fn advise_search() -> WorkloadRun {
             ("jsonl_fingerprint", Json::str(hash_text(&report.jsonl()))),
         ]),
         ops: report.outcomes.len() as u64,
+        wall_s,
+    }
+}
+
+/// The two-tier `advise --surrogate` search on the same RTX-3090 budget
+/// as [`advise_search`], timed end to end *including the fit*: fit the
+/// surrogate, screen the candidate product, simulate only the survivors
+/// and their baselines, and byte-compare the resulting frontier against
+/// the exhaustive search's. The headline counters are the simulated /
+/// screened reduction and the frontier-identity bit — a screening
+/// "optimization" that changes the frontier or quietly simulates more
+/// cells fails the exact-counter gate.
+pub fn advise_surrogate() -> WorkloadRun {
+    let budget = Budget::rtx3090_table1();
+    let t = Instant::now();
+    let opts = crate::surrogate::FitOptions::for_budget(&budget);
+    let model = crate::surrogate::fit(&budget, 2, &opts).expect("surrogate fit");
+    let screened = crate::surrogate::plan_surrogate(&budget, 2, &model).expect("surrogate advise");
+    let wall_s = t.elapsed().as_secs_f64();
+    let exhaustive = plan(&budget, 2).expect("exhaustive advise");
+    let identical = screened.frontier_jsonl() == exhaustive.frontier_jsonl();
+    WorkloadRun {
+        name: "advise_surrogate",
+        deterministic: Json::obj(vec![
+            ("candidates", Json::from(screened.screened)),
+            ("screened_out", Json::from(screened.screened_out)),
+            ("simulated", Json::from(screened.simulated)),
+            ("refined", Json::from(screened.refined)),
+            ("fallback", Json::from(screened.fallback)),
+            ("frontier_identical", Json::from(identical)),
+            (
+                "reduction_pct",
+                Json::from(
+                    (100 * (screened.screened - screened.simulated)) / screened.screened.max(1),
+                ),
+            ),
+            (
+                "max_rel_err_ppm",
+                Json::from((screened.max_rel_err * 1e6).round() as u64),
+            ),
+            (
+                "frontier_fingerprint",
+                Json::str(hash_text(&screened.frontier_jsonl())),
+            ),
+        ]),
+        ops: screened.screened,
         wall_s,
     }
 }

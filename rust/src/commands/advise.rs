@@ -12,6 +12,7 @@
 
 use rlhf_mem::planner::{plan_cluster, plan_with, Budget, PlanOptions};
 use rlhf_mem::report;
+use rlhf_mem::surrogate::{plan_surrogate, SurrogateModel};
 use rlhf_mem::sweep::SweepRunner;
 use rlhf_mem::util::bytes::fmt_gib_paper;
 use rlhf_mem::util::cli::Args;
@@ -33,9 +34,21 @@ FLAGS:
                    `rlhf-mem lint`) already exceeds the capacity, before
                    simulating them; the surviving frontier is identical,
                    telemetry counts the pruned candidates
+  --surrogate FILE two-tier search: screen the candidate product with a
+                   fitted SURROGATE.json (`rlhf-mem fit`) and simulate only
+                   candidates within the model's error envelope of the
+                   frontier — the printed frontier (and --frontier-jsonl)
+                   is byte-identical to the exhaustive search's; errors if
+                   the artifact's certificates are refuted (stale: refit)
   --jobs N         worker threads (default: all cores)
   --top N          recommendations to print (default 10)
   --jsonl FILE     write one deterministic JSON line per candidate
+                   (with --surrogate: the frontier lines, which is the
+                   whole deterministic contract of that mode)
+  --frontier-jsonl FILE
+                   write the frontier-only JSON lines, no telemetry footer
+                   — the search-mode-invariant identity artifact CI
+                   byte-compares across exhaustive and surrogate runs
   --json FILE      write the full report as one JSON document
 ";
 
@@ -51,6 +64,16 @@ pub fn run(args: &Args) -> Result<(), String> {
     let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
     let top = args.get_usize("top", 10)?;
 
+    if let Some(model_path) = args.flag("surrogate") {
+        if args.bool_flag("cluster") {
+            return Err(
+                "--surrogate and --cluster are mutually exclusive: the surrogate is \
+                 fitted over the single-GPU mitigation space"
+                    .to_string(),
+            );
+        }
+        return run_surrogate(args, &budget, jobs, model_path);
+    }
     if args.bool_flag("cluster") {
         return run_cluster(args, &budget, jobs, top);
     }
@@ -114,8 +137,75 @@ pub fn run(args: &Args) -> Result<(), String> {
         std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
+    if let Some(path) = args.flag("frontier-jsonl") {
+        std::fs::write(path, report.frontier_jsonl()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
     if let Some(path) = args.flag("json") {
         std::fs::write(path, report.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `advise --surrogate FILE`: screen with the fitted model, simulate
+/// only the survivors and their baselines.
+fn run_surrogate(
+    args: &Args,
+    budget: &Budget,
+    jobs: usize,
+    model_path: &str,
+) -> Result<(), String> {
+    let model = SurrogateModel::from_file(model_path)?;
+    println!(
+        "advise --surrogate: budget '{}' — {} GiB, ≤{}% overhead, {} / {}",
+        budget.name,
+        fmt_gib_paper(budget.capacity),
+        budget.max_overhead_pct,
+        budget.framework.name(),
+        budget.models.policy_arch.name,
+    );
+    println!(
+        "surrogate: artifact '{}' ({} cells at steps {:?}, max rel err {:.4})",
+        model.budget_name, model.cells, model.steps_fit, model.max_rel_err,
+    );
+    let report = plan_surrogate(budget, jobs, &model)?;
+
+    println!("\n== memory-vs-time frontier (surrogate-screened, identical to exhaustive) ==");
+    println!("{}", report.frontier_table().render());
+
+    match report.recommended_frontier() {
+        Some(best) => println!(
+            "cheapest feasible frontier configuration: {} — {} GiB reserved{}",
+            best.candidate.key(),
+            fmt_gib_paper(best.summary.peak_reserved),
+            match best.overhead_pct {
+                Some(p) => format!(", {p:+.1}% modeled time overhead"),
+                None => String::new(),
+            },
+        ),
+        None => {
+            println!("({})", report.summary_line());
+            // Sound refusal: every screened-out candidate is certified
+            // infeasible or strictly dominated by a *feasible* simulated
+            // one, so "no simulated fit" means "no fit at all".
+            return Err(format!(
+                "no configuration fits the '{}' budget ({} GiB, ≤{}% overhead)",
+                budget.name,
+                fmt_gib_paper(budget.capacity),
+                budget.max_overhead_pct
+            ));
+        }
+    }
+    println!("({})", report.summary_line());
+    println!("{}", report::telemetry::render_telemetry(&report.telemetry()));
+
+    if let Some(path) = args.flag("jsonl") {
+        std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.flag("frontier-jsonl") {
+        std::fs::write(path, report.frontier_jsonl()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
     Ok(())

@@ -35,7 +35,9 @@ FLAGS:
   --check FILE     regression gate: run the suite twice (determinism is
                    always enforced), then compare against FILE —
                    deterministic counters exactly, wall time within
-                   --tolerance; mismatches fail only if FILE is locked
+                   --tolerance; mismatches fail only if FILE is locked.
+                   A locked FILE with no recorded workloads fails outright:
+                   the arm-bench-lock CI dispatch is the only fill path
   --tolerance X    wall-clock slack factor for --check (default 5.0)
   --accept FILE    promote a CI-emitted bench document to the locked
                    baseline: FILE is re-emitted with locked=true to --out
@@ -147,13 +149,19 @@ pub fn run(args: &Args) -> Result<(), String> {
             })
             .unwrap_or(0);
         if locked && baseline_workloads == 0 {
-            // Expected pre-arming state: the `arm-bench-lock` CI job
-            // (workflow_dispatch) runs the suite, accepts the artifact and
-            // commits the armed baseline — until then only determinism gates.
-            println!(
-                "bench gate: baseline {baseline_path} pending arming (no workloads \
-                 recorded); dispatch the arm-bench-lock CI job to arm the counter gate."
-            );
+            // An armed lock with nothing recorded gates *nothing* — a
+            // state that silently waives the counter gate if tolerated.
+            // Fail hard: the `arm-bench-lock` CI job (workflow_dispatch)
+            // is the only fill path — it runs the suite, `--accept`s the
+            // artifact this run just emitted, and commits the armed
+            // baseline (DESIGN §13). Determinism and the artifact write
+            // both happened above, so the failing run still leaves
+            // everything arming needs.
+            return Err(format!(
+                "baseline {baseline_path} is locked but records no workloads: the \
+                 counter gate is armed yet vacuous. Dispatch the arm-bench-lock CI \
+                 job (the only fill path) to record and commit the baseline."
+            ));
         }
         let violations = report::compare(&doc, &baseline, tolerance)?;
         if violations.is_empty() {

@@ -39,7 +39,7 @@ FLAGS (comma-separated lists):
   --plans colocated,time-shared,dedicated   placement presets (default all)
   --strategies none,zero1,zero2,zero3,offload,ckpt,all   (default none,zero3)
   --algos ppo,grpo,remax,dpo     RLHF algorithms (default ppo)
-  --sharings separate,lora,hydra,frozen-shared   model-sharing placements
+  --sharings separate,lora,hydra,frozen-shared,perl   model-sharing placements
                                  (default separate)
   --framework ds|cc              framework profile (default ds)
   --models opt|gpt2|nano         model pair (default opt)

@@ -1,0 +1,86 @@
+//! `rlhf-mem fit` — mine the sweep traces of a budget's candidate
+//! product into a closed-form surrogate (`SURROGATE.json`), the screening
+//! tier of `advise --surrogate`.
+//!
+//! ```text
+//! rlhf-mem fit --budget examples/budget_rtx3090.json --out SURROGATE.json
+//! ```
+//!
+//! The artifact is *derived state*, not source: it certifies the exact
+//! build, budget provenance and `steps` values it was fitted on, and
+//! `advise --surrogate` falls back to plain simulation (or errors on
+//! refuted certificates) when anything drifted. Refit whenever the
+//! simulator, the candidate axes, or the budget changes — CI regenerates
+//! it fresh on every run rather than committing it.
+
+use rlhf_mem::planner::Budget;
+use rlhf_mem::surrogate::{fit, FitOptions};
+use rlhf_mem::sweep::SweepRunner;
+use rlhf_mem::util::cli::{split_list, Args};
+
+pub const FIT_USAGE: &str = "\
+rlhf-mem fit — fit the planner's surrogate model from simulated sweep cells
+
+Runs every candidate of the budget's sharing × strategy × empty_cache ×
+allocator product (once per --steps value) and fits, per candidate, an
+affine model of each memory/time target with a residual envelope strictly
+wider than every in-sample error. `advise --surrogate` then screens the
+space against the artifact and simulates only candidates within the
+envelope of the Pareto frontier.
+
+FLAGS:
+  --budget FILE    JSON budget spec (default: the paper's RTX-3090 testbed)
+  --steps LIST     comma-separated steps ladder to fit across, e.g. 1,2,3
+                   (default: the budget's own steps value)
+  --jobs N         sweep worker threads (default: all cores)
+  --out FILE       artifact path (default SURROGATE.json)
+";
+
+pub fn run(args: &Args) -> Result<(), String> {
+    if args.bool_flag("help") {
+        println!("{FIT_USAGE}");
+        return Ok(());
+    }
+    let budget = match args.flag("budget") {
+        Some(path) => Budget::from_file(path)?,
+        None => Budget::rtx3090_table1(),
+    };
+    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
+    let out = args.flag("out").unwrap_or("SURROGATE.json");
+
+    let opts = match args.flag("steps") {
+        Some(list) => {
+            let steps = split_list(list)
+                .map(|s| {
+                    s.parse::<u64>()
+                        .map_err(|e| format!("--steps entry '{s}': {e}"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            FitOptions { steps }
+        }
+        None => FitOptions::for_budget(&budget),
+    };
+
+    println!(
+        "fit: budget '{}' — {} / {}, steps {:?}, {} worker{}",
+        budget.name,
+        budget.framework.name(),
+        budget.models.policy_arch.name,
+        opts.steps,
+        jobs,
+        if jobs == 1 { "" } else { "s" },
+    );
+    let model = fit(&budget, jobs, &opts)?;
+    let oom_groups = model.groups.iter().filter(|g| !g.oom_steps.is_empty()).count();
+    println!(
+        "fitted {} groups from {} cells in {:.2}s (max rel err {:.6}, {} group(s) with OOM steps)",
+        model.groups.len(),
+        model.cells,
+        model.wall_seconds,
+        model.max_rel_err,
+        oom_groups,
+    );
+    std::fs::write(out, model.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -10,6 +10,7 @@ pub mod bench;
 pub mod cluster;
 pub mod debug;
 pub mod explain;
+pub mod fit;
 pub mod genablation;
 pub mod lint;
 pub mod profile;

@@ -30,7 +30,7 @@ rlhf-mem peft — compare model-sharing placements' memory behaviour per
 strategy (peak reserved + modeled step-time columns per placement)
 
 FLAGS (comma-separated lists):
-  --sharings separate,lora,hydra,frozen-shared   placement columns
+  --sharings separate,lora,hydra,frozen-shared,perl   placement columns
                                  (default separate,lora,hydra)
   --algos ppo,grpo,remax,dpo     one table per algorithm (default ppo)
   --strategies none,zero1,zero2,zero3,offload,ckpt,all   (default none,zero3)

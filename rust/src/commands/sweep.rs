@@ -33,7 +33,7 @@ FLAGS (comma-separated lists):
   --policies never,after_both,after_inference,after_training (default never)
   --modes full,train_both,train_actor                    (default full)
   --algos ppo,grpo,remax,dpo                             (default ppo)
-  --sharings separate,lora,hydra,frozen-shared           (default separate)
+  --sharings separate,lora,hydra,frozen-shared,perl           (default separate)
   --steps N        PPO steps per cell (default 3)
   --world N        data-parallel ranks (default 4)
   --capacity-gib N simulated HBM per GPU (default 24)

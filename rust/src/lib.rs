@@ -22,8 +22,13 @@
 //! what regenerates every paper table N-core fast. On top of the sweep
 //! engine, the [`planner`] searches the whole mitigation space — strategy
 //! × `empty_cache` placement × allocator knobs — for the cheapest
-//! configuration that fits a user's GPU budget (`rlhf-mem advise`), and
-//! the [`coordinator`] scales the simulator to a multi-GPU node: cluster
+//! configuration that fits a user's GPU budget (`rlhf-mem advise`) — and
+//! the [`surrogate`] makes that search two-tier: a closed-form model
+//! fitted from sweep traces (`rlhf-mem fit`) screens the candidate
+//! product, full simulation runs only on the candidates within the
+//! model's error envelope of the Pareto frontier, and the resulting
+//! frontier is byte-identical to the exhaustive search's (`advise
+//! --surrogate`). The [`coordinator`] scales the simulator to a multi-GPU node: cluster
 //! placement plans (colocated / time-shared / dedicated), per-GPU traces
 //! that genuinely differ, and a step-time model charging cross-GPU bytes
 //! through ring/P2P collectives (`rlhf-mem cluster`, `advise --cluster`).
@@ -56,6 +61,7 @@ pub mod report;
 pub mod runtime;
 pub mod rlhf;
 pub mod strategies;
+pub mod surrogate;
 pub mod sweep;
 pub mod trace;
 pub mod util;

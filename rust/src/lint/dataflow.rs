@@ -505,7 +505,7 @@ pub fn check_ownership(
             StaticAllocKind::Optimizer => {
                 let budget = 6 * sim::trainable_bytes_f16(scn, a.role);
                 if a.bytes > budget {
-                    let why = if scn.sharing.frozen_backbone() {
+                    let why = if scn.sharing.frozen_backbone_for(a.role) {
                         "the backbone is frozen; optimizer state must cover adapters/heads only"
                     } else {
                         "optimizer state exceeds what the trainable tensors justify"

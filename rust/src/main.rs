@@ -23,7 +23,7 @@ SUBCOMMANDS:
   algos        Compare RLHF algorithms (ppo/grpo/remax/dpo): peak reserved
                + fragmentation per algorithm, per strategy (see `algos --help`)
   peft         Compare model-sharing placements (separate/lora/hydra/
-               frozen-shared): peak reserved + step time per placement,
+               frozen-shared/perl): peak reserved + step time per placement,
                per strategy; --compare-paper gates the Efficient-RLHF
                ordering (see `peft --help`)
   cluster      Multi-GPU placement simulator: per-GPU peaks + step time
@@ -31,7 +31,12 @@ SUBCOMMANDS:
   advise       Search the mitigation space for the cheapest config that
                fits a GPU budget; --cluster searches placements instead;
                --prescreen-static rejects statically-infeasible candidates
-               before simulating (see `advise --help`)
+               before simulating; --surrogate FILE screens with a fitted
+               surrogate and simulates only near-frontier candidates, with
+               a byte-identical frontier (see `advise --help`)
+  fit          Fit the planner's closed-form surrogate (per-candidate
+               memory/time models + error envelopes) from simulated sweep
+               cells into SURROGATE.json (see `fit --help`)
   lint         Statically verify a config without simulating: dataflow,
                sharing ownership, placement collectives (--plan NAME),
                abstract peak bounds vs capacity; stable RLHF0xx codes,
@@ -71,6 +76,7 @@ fn main() {
         Some("peft") => commands::peft::run(&args),
         Some("cluster") => commands::cluster::run(&args),
         Some("advise") => commands::advise::run(&args),
+        Some("fit") => commands::fit::run(&args),
         Some("lint") => commands::lint::run(&args),
         Some("bench") => commands::bench::run(&args),
         Some("train") => run_train(&args),

@@ -329,14 +329,21 @@ impl PlanReport {
     }
 
     /// Deterministic JSON-lines dump of the *frontier outcomes only*, in
-    /// enumeration order — the prescreen-invariant artifact: because a
+    /// enumeration order — the search-mode-invariant artifact: because a
     /// statically pruned candidate can never be feasible (and infeasible
     /// points never reach the frontier), this is byte-identical between
-    /// `--prescreen-static` and unscreened runs of the same budget.
+    /// `--prescreen-static` and unscreened runs of the same budget, and
+    /// the surrogate-screened search
+    /// ([`crate::surrogate::SurrogatePlanReport::frontier_jsonl`])
+    /// reproduces it byte-for-byte as its identity contract. Lines are
+    /// [`frontier_line_json`] (no rank — see there).
     pub fn frontier_jsonl(&self) -> String {
         let mut out = String::new();
         for o in self.outcomes.iter().filter(|o| o.on_frontier) {
-            out.push_str(&o.to_json().to_string());
+            out.push_str(
+                &frontier_line_json(&o.candidate, &o.summary, o.overhead_pct, o.feasible, true)
+                    .to_string(),
+            );
             out.push('\n');
         }
         out
@@ -410,6 +417,44 @@ impl PlanReport {
             if self.jobs == 1 { "" } else { "s" },
         )
     }
+}
+
+/// One frontier JSONL line: [`PlanOutcome::to_json`] minus `rank`. Rank
+/// is a *global* ordering over every feasible candidate, which a search
+/// that never simulates dominated candidates cannot know — so the shared
+/// frontier artifact carries only per-candidate facts both search modes
+/// compute identically. Exhaustive ([`PlanReport::frontier_jsonl`]) and
+/// surrogate-screened searches both emit exactly this function's output.
+pub fn frontier_line_json(
+    c: &Candidate,
+    s: &ProfileSummary,
+    overhead_pct: Option<f64>,
+    feasible: bool,
+    on_frontier: bool,
+) -> Json {
+    Json::obj(vec![
+        ("index", Json::from(c.index)),
+        ("key", Json::str(c.key())),
+        ("algo", Json::str(c.algo.name())),
+        ("sharing", Json::str(c.sharing.name())),
+        ("strategy", Json::str(c.strategy_label.clone())),
+        ("policy", Json::str(c.policy.name())),
+        ("alloc", Json::str(c.alloc_label.clone())),
+        ("reserved", Json::from(s.peak_reserved)),
+        ("frag", Json::from(s.frag)),
+        ("allocated", Json::from(s.peak_allocated)),
+        ("time_us", Json::from(s.total_time_us)),
+        (
+            "overhead_pct",
+            match overhead_pct {
+                Some(p) => Json::from(p),
+                None => Json::Null,
+            },
+        ),
+        ("feasible", Json::from(feasible)),
+        ("frontier", Json::from(on_frontier)),
+        ("oom", Json::from(s.oom)),
+    ])
 }
 
 fn outcome_row(o: &PlanOutcome, rank: String) -> Vec<String> {

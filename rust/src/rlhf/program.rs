@@ -166,14 +166,21 @@ pub enum Sharing {
     /// the trainable roles keep their [`Sharing::Separate`] training
     /// state (actor LoRA-or-full, critic full fine-tune).
     FrozenShared,
+    /// PERL (arXiv 2403.10704): reward-model-side LoRA only. Critic and
+    /// reward share one frozen value backbone and the critic trains LoRA
+    /// adapters plus its value head; the actor and reference stay
+    /// separate full replicas with the actor's [`Sharing::Separate`]
+    /// training state (LoRA-or-full per the strategy preset).
+    Perl,
 }
 
 impl Sharing {
-    pub const ALL: [Sharing; 4] = [
+    pub const ALL: [Sharing; 5] = [
         Sharing::Separate,
         Sharing::Lora,
         Sharing::Hydra,
         Sharing::FrozenShared,
+        Sharing::Perl,
     ];
 
     /// Stable name used in sweep-cell keys, JSON reports and configs.
@@ -183,6 +190,7 @@ impl Sharing {
             Sharing::Lora => "lora",
             Sharing::Hydra => "hydra",
             Sharing::FrozenShared => "frozen-shared",
+            Sharing::Perl => "perl",
         }
     }
 
@@ -227,15 +235,36 @@ impl Sharing {
                 Role::Critic | Role::Reward => RoleSet::of(&[Role::Critic, Role::Reward]),
             },
             Sharing::Hydra => RoleSet::ALL,
+            // PERL shares the *value* side only: the policy-side roles
+            // keep separate full replicas.
+            Sharing::Perl => match role {
+                Role::Actor | Role::Reference => RoleSet::of(&[role]),
+                Role::Critic | Role::Reward => RoleSet::of(&[Role::Critic, Role::Reward]),
+            },
         }
     }
 
-    /// Do base weights stay frozen (training touches adapters/heads
-    /// only)? Frozen backbones are never ZeRO-partitioned — there is
-    /// nothing to re-materialize per step — and the hybrid engine's
-    /// second inference copy shrinks to adapter size.
+    /// Do base weights stay frozen for *every* trainable role (training
+    /// touches adapters/heads only)? Frozen backbones are never
+    /// ZeRO-partitioned — there is nothing to re-materialize per step —
+    /// and the hybrid engine's second inference copy shrinks to adapter
+    /// size. Per-role placements (PERL) freeze only part of the cast;
+    /// use [`Sharing::frozen_backbone_for`] wherever a specific role's
+    /// backbone is sized.
     pub fn frozen_backbone(self) -> bool {
         matches!(self, Sharing::Lora | Sharing::Hydra)
+    }
+
+    /// Is `role`'s base frozen under this placement? Identical to
+    /// [`Sharing::frozen_backbone`] for the uniform placements; PERL
+    /// freezes the value-side backbone (critic/reward) while the actor
+    /// and reference keep their separate full-training replicas.
+    pub fn frozen_backbone_for(self, role: Role) -> bool {
+        match self {
+            Sharing::Lora | Sharing::Hydra => true,
+            Sharing::Perl => role.has_value_head(),
+            Sharing::Separate | Sharing::FrozenShared => false,
+        }
     }
 
     /// Does the sharing collapse the cast onto the policy architecture
@@ -622,7 +651,10 @@ mod tests {
             assert_eq!(Sharing::by_name(s.name()), Some(s));
         }
         assert_eq!(Sharing::by_name("mega-shared"), None);
-        assert_eq!(Sharing::known_names(), "separate, lora, hydra, frozen-shared");
+        assert_eq!(
+            Sharing::known_names(),
+            "separate, lora, hydra, frozen-shared, perl"
+        );
         assert_eq!(
             Sharing::parse_list("separate, lora,hydra").unwrap(),
             vec![Sharing::Separate, Sharing::Lora, Sharing::Hydra]
@@ -651,12 +683,41 @@ mod tests {
         }
         // Hydra: one trunk for the whole cast.
         assert_eq!(Sharing::Hydra.group_of(Role::Critic), RoleSet::ALL);
+        // PERL pairs only the value side; policy roles stay their own
+        // groups.
+        assert_eq!(
+            Sharing::Perl.group_of(Role::Actor),
+            RoleSet::of(&[Role::Actor])
+        );
+        assert_eq!(
+            Sharing::Perl.group_of(Role::Reference),
+            RoleSet::of(&[Role::Reference])
+        );
+        assert_eq!(
+            Sharing::Perl.group_of(Role::Reward),
+            RoleSet::of(&[Role::Critic, Role::Reward])
+        );
         assert!(Sharing::Lora.frozen_backbone());
         assert!(Sharing::Hydra.frozen_backbone());
         assert!(!Sharing::Separate.frozen_backbone());
         assert!(!Sharing::FrozenShared.frozen_backbone());
+        // PERL is a per-role freeze: not uniform, so the whole-cast
+        // predicate stays false while the value side reports frozen.
+        assert!(!Sharing::Perl.frozen_backbone());
+        for r in Role::ALL {
+            assert_eq!(
+                Sharing::Perl.frozen_backbone_for(r),
+                r.has_value_head(),
+                "{}",
+                r.name()
+            );
+            for s in [Sharing::Separate, Sharing::Lora, Sharing::Hydra, Sharing::FrozenShared] {
+                assert_eq!(s.frozen_backbone_for(r), s.frozen_backbone());
+            }
+        }
         assert!(Sharing::Hydra.unifies_architectures());
         assert!(!Sharing::Lora.unifies_architectures());
+        assert!(!Sharing::Perl.unifies_architectures());
     }
 
     #[test]

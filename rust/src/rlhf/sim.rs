@@ -285,6 +285,26 @@ impl SimModel {
                             .collect()
                     }
                 }
+                // PERL: the actor keeps the Separate training state
+                // (LoRA-or-full per the strategy preset); the critic
+                // trains adapters over the frozen value backbone plus
+                // its value head — the reward-model-side LoRA rule.
+                Sharing::Perl => {
+                    if role == Role::Actor {
+                        match scn.strategy.lora {
+                            Some(spec) => lora_tensors(&inv, spec),
+                            None => inv.tensors.clone(),
+                        }
+                    } else {
+                        let spec =
+                            scn.strategy.lora.unwrap_or_else(LoraSpec::paper_default);
+                        let mut t = lora_tensors(&inv, spec);
+                        t.extend(
+                            inv.tensors.iter().filter(|t| t.name == "v_head").cloned(),
+                        );
+                        t
+                    }
+                }
             }
         };
         // Backbone ownership: the first *active* member of the role's
@@ -401,7 +421,7 @@ pub fn init_footprint(scn: &SimScenario) -> InitFootprint {
     let partitioned = |role: Role| {
         scn.strategy.zero.partitions_params()
             && role.is_trainable()
-            && !scn.sharing.frozen_backbone()
+            && !scn.sharing.frozen_backbone_for(role)
     };
 
     let mut out = InitFootprint::default();
@@ -442,6 +462,21 @@ pub fn init_footprint(scn: &SimScenario) -> InitFootprint {
                     m.trainable.iter().map(|t| t.bytes(DType::F16)).sum()
                 } else {
                     0
+                }
+            }
+            Sharing::Perl => {
+                if role == Role::Actor {
+                    if scn.strategy.lora.is_some() {
+                        m.trainable.iter().map(|t| t.bytes(DType::F16)).sum()
+                    } else {
+                        0
+                    }
+                } else {
+                    m.trainable
+                        .iter()
+                        .filter(|t| t.name != "v_head")
+                        .map(|t| t.bytes(DType::F16))
+                        .sum()
                 }
             }
         };
@@ -492,7 +527,7 @@ pub fn init_footprint(scn: &SimScenario) -> InitFootprint {
         let layers = actor.inv.arch.n_layers;
         let mut total = 0u64;
         for l in 0..layers {
-            total += if scn.sharing.frozen_backbone() {
+            total += if scn.sharing.frozen_backbone_for(Role::Actor) {
                 actor
                     .trainable
                     .iter()
@@ -757,7 +792,7 @@ impl<'a> Emitter<'a> {
     fn param_partitioned(&self, role: Role) -> bool {
         self.scn.strategy.zero.partitions_params()
             && role.is_trainable()
-            && !self.scn.sharing.frozen_backbone()
+            && !self.scn.sharing.frozen_backbone_for(role)
     }
 
     // ---------------- Init ----------------
@@ -834,6 +869,26 @@ impl<'a> Emitter<'a> {
                         vec![]
                     }
                 }
+                Sharing::Perl => {
+                    if role == Role::Actor {
+                        if self.scn.strategy.lora.is_some() {
+                            self.model(role)
+                                .trainable
+                                .iter()
+                                .map(|t| t.bytes(DType::F16))
+                                .collect()
+                        } else {
+                            vec![]
+                        }
+                    } else {
+                        self.model(role)
+                            .trainable
+                            .iter()
+                            .filter(|t| t.name != "v_head")
+                            .map(|t| t.bytes(DType::F16))
+                            .collect()
+                    }
+                }
             };
             if !adapter_sizes.is_empty() {
                 let hs = self.b.alloc_group(adapter_sizes, Tag::Param);
@@ -894,7 +949,7 @@ impl<'a> Emitter<'a> {
             let layers = self.actor.inv.arch.n_layers;
             let mut sizes: Vec<u64> = Vec::new();
             for l in 0..layers {
-                let b = if self.scn.sharing.frozen_backbone() {
+                let b = if self.scn.sharing.frozen_backbone_for(Role::Actor) {
                     self.actor
                         .trainable
                         .iter()

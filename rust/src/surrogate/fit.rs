@@ -1,0 +1,348 @@
+//! Fitting the surrogate: one sweep over the budget's candidate product
+//! (optionally at several `steps` values), then per-group per-target
+//! affine regression with residual envelopes.
+//!
+//! The fit is deliberately conservative about its own quality: the
+//! envelope of every target is sized from the *worst* in-sample residual
+//! (× [`super::ENVELOPE_SLACK`], + [`super::ENVELOPE_FLOOR`]), so a
+//! target the affine form fits poorly simply gets a wide envelope — the
+//! screen then keeps more candidates for full simulation instead of
+//! trusting a bad prediction. Soundness never depends on fit quality,
+//! only speed does.
+
+use super::{
+    features, GroupModel, SurrogateModel, TargetModel, ENVELOPE_FLOOR, ENVELOPE_SLACK,
+    NUM_FEATURES, PEAK_TARGET, PHASE_TARGET_PREFIX, TIME_TARGET,
+};
+use crate::planner::space;
+use crate::planner::Budget;
+use crate::rlhf::program::PhaseProgram;
+use crate::sweep::SweepRunner;
+
+/// Knobs of [`fit`].
+#[derive(Debug, Clone)]
+pub struct FitOptions {
+    /// The `steps` values to simulate every candidate at. More values
+    /// give the regression a real `steps` axis (the only feature that
+    /// varies within one budget); the default is the budget's own
+    /// `steps`, which yields exact intercept-only models for it.
+    pub steps: Vec<u64>,
+}
+
+impl FitOptions {
+    /// Fit exactly at the budget's configured `steps`.
+    pub fn for_budget(budget: &Budget) -> FitOptions {
+        FitOptions {
+            steps: vec![budget.steps],
+        }
+    }
+}
+
+/// One observed sweep cell of one group: feature vector + observed
+/// targets (name → value), in stable target order.
+struct Row {
+    x: [f64; NUM_FEATURES],
+    y: Vec<(String, f64)>,
+}
+
+/// Run the budget's sweep cells at every `opts.steps` value and fit a
+/// [`SurrogateModel`]. The sweep shards over `jobs` worker threads; the
+/// fitted artifact is byte-identical for any `jobs` (cells are keyed by
+/// position, regression order is fixed).
+pub fn fit(budget: &Budget, jobs: usize, opts: &FitOptions) -> Result<SurrogateModel, String> {
+    let mut steps_fit = opts.steps.clone();
+    steps_fit.sort_unstable();
+    steps_fit.dedup();
+    if steps_fit.is_empty() {
+        return Err("fit needs at least one steps value".to_string());
+    }
+    if steps_fit.contains(&0) {
+        return Err("fit steps must be >= 1 (a 0-step cell observes no phases)".to_string());
+    }
+
+    let candidates = space::enumerate(budget)?;
+    let n = candidates.len();
+    if n == 0 {
+        return Err(format!("budget '{}' enumerates no candidates", budget.name));
+    }
+
+    // Steps-major cell list: block si holds every candidate at steps
+    // steps_fit[si], so cell (si, ci) sits at index si*n + ci.
+    let mut cells = Vec::with_capacity(steps_fit.len() * n);
+    for &s in &steps_fit {
+        let mut block = space::to_cells(budget, &candidates);
+        for cell in &mut block {
+            cell.scenario.steps = s;
+        }
+        cells.append(&mut block);
+    }
+    let report = SweepRunner::new(jobs).capture_profiles(true).run(cells);
+
+    let mut groups = Vec::with_capacity(n);
+    let mut max_rel_err = 0.0f64;
+    for (ci, cand) in candidates.iter().enumerate() {
+        let mut oom_steps = Vec::new();
+        let mut rows: Vec<Row> = Vec::with_capacity(steps_fit.len());
+        for (si, &s) in steps_fit.iter().enumerate() {
+            let cell = &report.cells[si * n + ci];
+            if cell.summary.oom {
+                oom_steps.push(s);
+                continue;
+            }
+            let mut y = vec![
+                (PEAK_TARGET.to_string(), cell.summary.peak_reserved as f64),
+                (TIME_TARGET.to_string(), cell.summary.total_time_us),
+            ];
+            if let Some(profiler) = &cell.profiler {
+                let mut scn = space::candidate_scenario(budget, cand);
+                scn.steps = s;
+                let program = PhaseProgram::compile(&scn);
+                for (kind, peak) in profiler.phase_attribution(&program) {
+                    y.push((
+                        format!("{PHASE_TARGET_PREFIX}{}", kind.name()),
+                        peak.reserved as f64,
+                    ));
+                }
+            }
+            rows.push(Row {
+                x: features(budget, s),
+                y,
+            });
+        }
+
+        // Stable target order: first-seen across rows (peak, time, then
+        // phases in program order).
+        let mut names: Vec<String> = Vec::new();
+        for row in &rows {
+            for (name, _) in &row.y {
+                if !names.contains(name) {
+                    names.push(name.clone());
+                }
+            }
+        }
+        let mut targets = Vec::with_capacity(names.len());
+        for name in names {
+            let samples: Vec<([f64; NUM_FEATURES], f64)> = rows
+                .iter()
+                .filter_map(|r| {
+                    r.y.iter()
+                        .find(|(n, _)| *n == name)
+                        .map(|(_, v)| (r.x, *v))
+                })
+                .collect();
+            let model = fit_target(&samples);
+            for (x, y) in &samples {
+                let resid = (y - model.predict(x)).abs();
+                let rel = resid / y.abs().max(1.0);
+                if rel > max_rel_err {
+                    max_rel_err = rel;
+                }
+            }
+            targets.push((name, model));
+        }
+        groups.push(GroupModel {
+            key: cand.key(),
+            oom_steps,
+            targets,
+        });
+    }
+
+    Ok(SurrogateModel {
+        budget_name: budget.name.clone(),
+        framework: budget.framework.name().to_string(),
+        policy_model: budget.models.policy_arch.name.clone(),
+        value_model: budget.models.value_arch.name.clone(),
+        world: budget.world,
+        seed: budget.seed,
+        capacity: budget.capacity,
+        gpu: budget.gpu,
+        steps_fit,
+        cells: report.cells.len() as u64,
+        max_rel_err,
+        groups,
+        wall_seconds: report.wall_seconds,
+    })
+}
+
+/// Fit one target over its sample rows. The ladder degrades gracefully
+/// with sample count and conditioning:
+///
+/// 1. one row → intercept-only (exact, zero residual);
+/// 2. otherwise try the full [`super::FEATURES`] basis via normal
+///    equations — within a single budget most features are constant and
+///    collinear with the intercept, so this usually fails the pivot
+///    check and falls through;
+/// 3. the `[1, steps]` sub-basis (the only axis that varies in-budget);
+/// 4. the mean (intercept-only) as the unconditional fallback.
+///
+/// Whatever rung lands, the envelope covers the residuals — rung choice
+/// affects envelope width (speed), never soundness.
+fn fit_target(rows: &[([f64; NUM_FEATURES], f64)]) -> TargetModel {
+    let coefs = if rows.len() == 1 {
+        let mut c = [0.0; NUM_FEATURES];
+        c[0] = rows[0].1;
+        c
+    } else {
+        let full: Vec<usize> = (0..NUM_FEATURES).collect();
+        solve_least_squares(rows, &full)
+            .or_else(|| solve_least_squares(rows, &[0, 1]))
+            .unwrap_or_else(|| {
+                let mut c = [0.0; NUM_FEATURES];
+                c[0] = rows.iter().map(|(_, y)| *y).sum::<f64>() / rows.len() as f64;
+                c
+            })
+    };
+    let probe = TargetModel {
+        coefs,
+        envelope: 0.0,
+    };
+    let mut worst = 0.0f64;
+    for (x, y) in rows {
+        let resid = (y - probe.predict(x)).abs();
+        if resid > worst {
+            worst = resid;
+        }
+    }
+    TargetModel {
+        coefs,
+        envelope: ENVELOPE_SLACK * worst + ENVELOPE_FLOOR,
+    }
+}
+
+/// Least squares over the feature columns `cols` via normal equations +
+/// Gaussian elimination with partial pivoting. Returns `None` when the
+/// system is singular (pivot below `1e-9 ×` the matrix's initial scale)
+/// — the caller drops to a smaller basis. Coefficients come back in the
+/// full [`NUM_FEATURES`]-wide frame, zero for unused columns.
+fn solve_least_squares(
+    rows: &[([f64; NUM_FEATURES], f64)],
+    cols: &[usize],
+) -> Option<[f64; NUM_FEATURES]> {
+    let k = cols.len();
+    // Augmented normal system [XᵀX | Xᵀy].
+    let mut m = vec![vec![0.0f64; k + 1]; k];
+    for (x, y) in rows {
+        for (i, &ci) in cols.iter().enumerate() {
+            for (j, &cj) in cols.iter().enumerate() {
+                m[i][j] += x[ci] * x[cj];
+            }
+            m[i][k] += x[ci] * y;
+        }
+    }
+    let mut scale = 0.0f64;
+    for row in &m {
+        for &v in &row[..k] {
+            if v.abs() > scale {
+                scale = v.abs();
+            }
+        }
+    }
+    let threshold = 1e-9 * scale.max(1.0);
+
+    for col in 0..k {
+        let pivot_row = (col..k)
+            .max_by(|&a, &b| m[a][col].abs().total_cmp(&m[b][col].abs()))
+            .unwrap();
+        if m[pivot_row][col].abs() < threshold {
+            return None;
+        }
+        m.swap(col, pivot_row);
+        let pivot = m[col][col];
+        for r in 0..k {
+            if r == col {
+                continue;
+            }
+            let f = m[r][col] / pivot;
+            for c in col..=k {
+                m[r][c] -= f * m[col][c];
+            }
+        }
+    }
+    let mut out = [0.0f64; NUM_FEATURES];
+    for (i, &ci) in cols.iter().enumerate() {
+        out[ci] = m[i][k] / m[i][i];
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(steps: f64, y: f64) -> ([f64; NUM_FEATURES], f64) {
+        ([1.0, steps, 1024.0, 2.6e9, 6.6e8, 4.0], y)
+    }
+
+    #[test]
+    fn exact_affine_data_is_recovered() {
+        // y = 100 + 7·steps, three samples: the [1, steps] rung solves it
+        // exactly (every other column is constant ⇒ full basis singular).
+        let rows = [row(1.0, 107.0), row(2.0, 114.0), row(4.0, 128.0)];
+        let t = fit_target(&rows);
+        for (x, y) in &rows {
+            assert!(
+                (t.predict(x) - y).abs() < 1e-6,
+                "pred {} vs {}",
+                t.predict(x),
+                y
+            );
+        }
+        // Exact fit ⇒ floor-only envelope, still strictly positive.
+        assert!(t.envelope >= ENVELOPE_FLOOR);
+        assert!(t.envelope < ENVELOPE_FLOOR + 1e-3);
+    }
+
+    #[test]
+    fn single_sample_is_pinned_by_the_intercept() {
+        let rows = [row(2.0, 5.5e9)];
+        let t = fit_target(&rows);
+        assert_eq!(t.predict(&rows[0].0), 5.5e9);
+        assert_eq!(t.envelope, ENVELOPE_FLOOR);
+    }
+
+    #[test]
+    fn envelope_strictly_brackets_every_sample() {
+        // Non-affine data (quadratic in steps): the fit can't be exact,
+        // the envelope must still strictly contain every residual.
+        let rows = [
+            row(1.0, 1.0),
+            row(2.0, 4.0),
+            row(3.0, 9.0),
+            row(5.0, 25.0),
+        ];
+        let t = fit_target(&rows);
+        for (x, y) in &rows {
+            let p = t.predict(x);
+            assert!(
+                p - t.envelope < *y && *y < p + t.envelope,
+                "sample {y} escapes [{}, {}]",
+                p - t.envelope,
+                p + t.envelope
+            );
+        }
+    }
+
+    #[test]
+    fn singular_systems_fall_back_instead_of_exploding() {
+        // Identical feature rows with different y: no basis separates
+        // them; the mean fallback lands and the envelope covers both.
+        let rows = [row(2.0, 10.0), row(2.0, 20.0)];
+        let t = fit_target(&rows);
+        assert_eq!(t.coefs[1], 0.0, "steps coefficient must be dropped");
+        for (x, y) in &rows {
+            let p = t.predict(x);
+            assert!(p - t.envelope < *y && *y < p + t.envelope);
+        }
+    }
+
+    #[test]
+    fn fit_rejects_bad_step_ladders() {
+        let budget = Budget::rtx3090_table1();
+        assert!(fit(&budget, 1, &FitOptions { steps: vec![] })
+            .unwrap_err()
+            .contains("at least one"));
+        assert!(fit(&budget, 1, &FitOptions { steps: vec![0, 1] })
+            .unwrap_err()
+            .contains(">= 1"));
+    }
+}

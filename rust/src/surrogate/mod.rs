@@ -1,0 +1,471 @@
+//! Trace-mined surrogate of the planner's simulation: a closed-form
+//! memory/step-time model fitted from sweep cells, used to screen the
+//! mitigation space before any full simulation runs.
+//!
+//! The planner's exhaustive search ([`crate::planner::plan`]) simulates
+//! every candidate of the strategy × sharing × `empty_cache` × allocator
+//! product, at milliseconds per cell. Most of those cells exist only to
+//! be dominated: their peak and time land strictly inside another
+//! configuration's, so the Pareto frontier — the artifact the search is
+//! for — never contains them. The surrogate makes that screening decision
+//! in microseconds per candidate:
+//!
+//! * [`fit`] runs the budget's sweep cells once (optionally over a ladder
+//!   of `steps` values), groups them by their full discrete configuration
+//!   (`strategy/policy[/algo][/sharing]/alloc`), and fits one affine
+//!   model per group per target over the [`FEATURES`] basis — per-phase
+//!   reserved peaks (from [`crate::profiler::MemoryProfiler::
+//!   phase_attribution`]), the overall reserved peak and the modeled step
+//!   time. Every model carries a fitted **residual envelope**: by
+//!   construction strictly wider than every in-sample residual
+//!   ([`ENVELOPE_SLACK`] × the largest absolute residual, plus
+//!   [`ENVELOPE_FLOOR`]). The result serializes as the versioned
+//!   `SURROGATE.json` artifact (`rlhf-mem fit`).
+//! * [`plan_surrogate`] screens the candidate product against the model:
+//!   a candidate is dropped only when its *optimistic* corner
+//!   (prediction − envelope) is strictly dominated by the *pessimistic*
+//!   corner (prediction + envelope) of a certainly-feasible witness, or
+//!   when the artifact certifies it infeasible outright. Survivors — the
+//!   candidates within the surrogate's error envelope of the Pareto
+//!   frontier — go to full simulation, and the frontier computed over
+//!   that simulated subset is **byte-identical** to the exhaustive
+//!   search's ([`crate::planner::PlanReport::frontier_jsonl`] vs
+//!   [`SurrogatePlanReport::frontier_jsonl`], pinned by
+//!   `rust/tests/surrogate_soundness.rs`).
+//!
+//! Why the identity holds: envelopes strictly contain in-sample
+//! residuals, so for an artifact fitted on this exact budget (provenance
+//! and `steps` match) the corners bracket the true simulated values. A
+//! dominated-and-dropped candidate is then *truly* strictly dominated, in
+//! both dimensions, by its witness's true values; chains of witnesses
+//! terminate at an unscreened (hence simulated) configuration, and
+//! dominance is transitive, so no dropped candidate can be on the true
+//! frontier or shield another candidate's membership. When provenance
+//! does not match — different capacity, seed, model pair, or a group the
+//! fit never saw — the planner falls back to simulating those candidates
+//! (counted in telemetry), trading speed for the same guarantee, never
+//! correctness. DESIGN.md §17 carries the full argument and the refit
+//! policy.
+
+pub mod fit;
+pub mod screen;
+
+pub use fit::{fit, FitOptions};
+pub use screen::{plan_surrogate, SurrogateOutcome, SurrogatePlanReport};
+
+use crate::frameworks::FrameworkProfile;
+use crate::mem::DType;
+use crate::planner::Budget;
+use crate::rlhf::cost::GpuSpec;
+use crate::rlhf::models::Role;
+use crate::util::json::{parse, Json};
+
+/// Artifact schema tag (`SURROGATE.json`). Bump on any change to the
+/// fitted form, the feature basis or the envelope semantics — a stale
+/// artifact must fail loudly, not screen unsoundly.
+pub const SCHEMA: &str = "rlhf-mem-surrogate-v1";
+
+/// The affine feature basis, in coefficient order: intercept, simulated
+/// PPO steps, rollout tokens per step (batch × (prompt + generated)),
+/// fp16 bytes of the policy-side and value-side inventories, and the
+/// data-parallel world size. Within a single budget only `steps` varies
+/// (via the fit ladder), so the fit degenerates gracefully — see
+/// [`fit::fit_target`]'s ladder.
+pub const FEATURES: [&str; 6] = [
+    "1",
+    "steps",
+    "tokens",
+    "policy_bytes",
+    "value_bytes",
+    "world",
+];
+
+/// Number of features in [`FEATURES`].
+pub const NUM_FEATURES: usize = 6;
+
+/// Target name of the overall reserved peak (bytes).
+pub const PEAK_TARGET: &str = "peak_reserved";
+/// Target name of the modeled total step time (µs).
+pub const TIME_TARGET: &str = "total_time_us";
+/// Prefix of the per-phase reserved-peak targets (`phase:init`,
+/// `phase:generation`, ...).
+pub const PHASE_TARGET_PREFIX: &str = "phase:";
+
+/// Multiplier on the largest in-sample absolute residual when sizing a
+/// target's envelope. > 1 so the envelope *strictly* contains every
+/// residual the fit saw.
+pub const ENVELOPE_SLACK: f64 = 1.5;
+/// Additive envelope floor (1 byte / 1 µs): keeps the bracketing strict
+/// even for exact fits (zero residual), which is what makes tie-peak
+/// candidates survive screening instead of being dropped on a guess.
+pub const ENVELOPE_FLOOR: f64 = 1.0;
+
+/// The feature vector for `budget` at `steps` simulated PPO steps, in
+/// [`FEATURES`] order. A pure function of the budget — both the fit and
+/// the screen call this, so they can never disagree on the basis.
+pub fn features(budget: &Budget, steps: u64) -> [f64; NUM_FEATURES] {
+    let profile = FrameworkProfile::by_kind(budget.framework);
+    let tokens = profile.rollout_batch * (profile.prompt_len + profile.gen_len);
+    let policy_bytes = budget
+        .models
+        .inventory_for(Role::Actor)
+        .total_bytes(DType::F16);
+    let value_bytes = budget
+        .models
+        .inventory_for(Role::Critic)
+        .total_bytes(DType::F16);
+    [
+        1.0,
+        steps as f64,
+        tokens as f64,
+        policy_bytes as f64,
+        value_bytes as f64,
+        budget.world as f64,
+    ]
+}
+
+/// One fitted affine model for one target of one group: coefficients
+/// over [`FEATURES`] (zero for features the fit ladder dropped) plus the
+/// residual envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TargetModel {
+    pub coefs: [f64; NUM_FEATURES],
+    /// Strictly wider than every in-sample |residual|:
+    /// [`ENVELOPE_SLACK`] × max |residual| + [`ENVELOPE_FLOOR`]. For an
+    /// in-sample prediction, `pred − envelope < truth < pred + envelope`.
+    pub envelope: f64,
+}
+
+impl TargetModel {
+    /// Predict the target at feature vector `x` (fixed evaluation order —
+    /// the prediction is bit-reproducible).
+    pub fn predict(&self, x: &[f64; NUM_FEATURES]) -> f64 {
+        let mut y = 0.0;
+        for (c, v) in self.coefs.iter().zip(x.iter()) {
+            y += c * v;
+        }
+        y
+    }
+}
+
+/// The fitted models of one discrete configuration (one planner
+/// [`crate::planner::Candidate`] key).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupModel {
+    /// The candidate key (`strategy/policy[/algo][/sharing]/alloc`).
+    pub key: String,
+    /// `steps` values at which this configuration's fit cell OOMed at the
+    /// artifact's capacity. Deterministic simulation makes this a
+    /// certificate: replaying the same cell would OOM again.
+    pub oom_steps: Vec<u64>,
+    /// Fitted targets in stable order: [`PEAK_TARGET`], [`TIME_TARGET`],
+    /// then the `phase:*` reserved peaks in program order. Empty when
+    /// every fit cell of the group OOMed (nothing to fit).
+    pub targets: Vec<(String, TargetModel)>,
+}
+
+impl GroupModel {
+    pub fn target(&self, name: &str) -> Option<&TargetModel> {
+        self.targets.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+}
+
+/// The fitted surrogate: provenance (what the fit simulated) + one
+/// [`GroupModel`] per discrete configuration, in enumeration order.
+/// Serializes as `SURROGATE.json` ([`Self::to_json`]).
+#[derive(Debug, Clone)]
+pub struct SurrogateModel {
+    /// Name of the budget the fit ran (display only).
+    pub budget_name: String,
+    // Provenance: screening trusts the artifact's certificates only when
+    // every one of these matches the budget being planned.
+    pub framework: String,
+    pub policy_model: String,
+    pub value_model: String,
+    pub world: u64,
+    pub seed: u64,
+    pub capacity: u64,
+    pub gpu: GpuSpec,
+    /// The `steps` ladder the fit simulated (sorted, deduplicated).
+    pub steps_fit: Vec<u64>,
+    /// Sweep cells simulated by the fit.
+    pub cells: u64,
+    /// Largest in-sample relative error across every group and target:
+    /// max |residual| / max(|observed|, 1). The CI gate holds this under
+    /// a committed bound (see `.github/workflows/ci.yml`).
+    pub max_rel_err: f64,
+    pub groups: Vec<GroupModel>,
+    /// Wall-clock of the fit sweep, seconds. Never serialized (the
+    /// artifact must be machine-independent); 0 after a parse.
+    pub wall_seconds: f64,
+}
+
+impl SurrogateModel {
+    pub fn group(&self, key: &str) -> Option<&GroupModel> {
+        self.groups.iter().find(|g| g.key == key)
+    }
+
+    /// Does this artifact's provenance match `budget` exactly? Only then
+    /// are its OOM flags and envelopes certificates about the cells the
+    /// planner would simulate (the simulator is deterministic, so same
+    /// provenance ⇒ same cell results). The `steps` axis is checked
+    /// separately ([`Self::in_sample`]) because the fit ladder may cover
+    /// several values.
+    pub fn applies_to(&self, budget: &Budget) -> bool {
+        self.framework == budget.framework.name()
+            && self.policy_model == budget.models.policy_arch.name
+            && self.value_model == budget.models.value_arch.name
+            && self.world == budget.world
+            && self.seed == budget.seed
+            && self.capacity == budget.capacity
+            && self.gpu == budget.gpu
+    }
+
+    /// Was `steps` one of the fitted ladder values? In-sample predictions
+    /// are bracketed by the envelopes *by construction*; out-of-sample
+    /// ones are extrapolations and must not drop candidates.
+    pub fn in_sample(&self, steps: u64) -> bool {
+        self.steps_fit.contains(&steps)
+    }
+
+    /// The `SURROGATE.json` document (deterministic field order; no
+    /// wall-clock).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("budget", Json::str(self.budget_name.clone())),
+            ("framework", Json::str(self.framework.clone())),
+            ("policy_model", Json::str(self.policy_model.clone())),
+            ("value_model", Json::str(self.value_model.clone())),
+            ("world", Json::from(self.world)),
+            ("seed", Json::from(self.seed)),
+            ("capacity", Json::from(self.capacity)),
+            (
+                "gpu",
+                Json::obj(vec![
+                    ("flops", Json::from(self.gpu.flops)),
+                    ("hbm_bw", Json::from(self.gpu.hbm_bw)),
+                    ("link_bw", Json::from(self.gpu.link_bw)),
+                ]),
+            ),
+            (
+                "steps_fit",
+                Json::Arr(self.steps_fit.iter().map(|&s| Json::from(s)).collect()),
+            ),
+            (
+                "features",
+                Json::Arr(FEATURES.iter().map(|f| Json::str(*f)).collect()),
+            ),
+            ("cells", Json::from(self.cells)),
+            ("max_rel_err", Json::from(self.max_rel_err)),
+            (
+                "groups",
+                Json::Arr(self.groups.iter().map(group_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json_text(text: &str) -> Result<SurrogateModel, String> {
+        Self::from_json(&parse(text)?)
+    }
+
+    pub fn from_file(path: &str) -> Result<SurrogateModel, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json_text(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn from_json(j: &Json) -> Result<SurrogateModel, String> {
+        let schema = j.req_str("schema")?;
+        if schema != SCHEMA {
+            return Err(format!(
+                "surrogate schema '{schema}' != '{SCHEMA}': refit with `rlhf-mem fit`"
+            ));
+        }
+        let feats: Vec<&str> = j
+            .req_arr("features")?
+            .iter()
+            .filter_map(|f| f.as_str())
+            .collect();
+        if feats != FEATURES {
+            return Err(format!(
+                "surrogate feature basis {feats:?} does not match this build's \
+                 {FEATURES:?}: refit with `rlhf-mem fit`"
+            ));
+        }
+        let gpu = j.req("gpu")?;
+        let gpu = GpuSpec {
+            flops: gpu.req_f64("flops")?,
+            hbm_bw: gpu.req_f64("hbm_bw")?,
+            link_bw: gpu.req_f64("link_bw")?,
+        };
+        let steps_fit = j
+            .req_arr("steps_fit")?
+            .iter()
+            .map(|s| s.as_u64().ok_or("steps_fit entries must be u64".to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        let groups = j
+            .req_arr("groups")?
+            .iter()
+            .map(group_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(SurrogateModel {
+            budget_name: j.req_str("budget")?.to_string(),
+            framework: j.req_str("framework")?.to_string(),
+            policy_model: j.req_str("policy_model")?.to_string(),
+            value_model: j.req_str("value_model")?.to_string(),
+            world: j.req_u64("world")?,
+            seed: j.req_u64("seed")?,
+            capacity: j.req_u64("capacity")?,
+            gpu,
+            steps_fit,
+            cells: j.req_u64("cells")?,
+            max_rel_err: j.req_f64("max_rel_err")?,
+            groups,
+            wall_seconds: 0.0,
+        })
+    }
+}
+
+fn group_json(g: &GroupModel) -> Json {
+    Json::obj(vec![
+        ("key", Json::str(g.key.clone())),
+        (
+            "oom_steps",
+            Json::Arr(g.oom_steps.iter().map(|&s| Json::from(s)).collect()),
+        ),
+        (
+            "targets",
+            Json::Obj(
+                g.targets
+                    .iter()
+                    .map(|(name, t)| {
+                        (
+                            name.clone(),
+                            Json::obj(vec![
+                                (
+                                    "coefs",
+                                    Json::Arr(t.coefs.iter().map(|&c| Json::from(c)).collect()),
+                                ),
+                                ("envelope", Json::from(t.envelope)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn group_from_json(j: &Json) -> Result<GroupModel, String> {
+    let oom_steps = j
+        .req_arr("oom_steps")?
+        .iter()
+        .map(|s| s.as_u64().ok_or("oom_steps entries must be u64".to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    let Json::Obj(target_kvs) = j.req("targets")? else {
+        return Err("group 'targets' must be an object".to_string());
+    };
+    let mut targets = Vec::with_capacity(target_kvs.len());
+    for (name, t) in target_kvs {
+        let coef_arr = t.req_arr("coefs")?;
+        if coef_arr.len() != NUM_FEATURES {
+            return Err(format!(
+                "target '{name}' has {} coefficients, expected {NUM_FEATURES}",
+                coef_arr.len()
+            ));
+        }
+        let mut coefs = [0.0; NUM_FEATURES];
+        for (i, c) in coef_arr.iter().enumerate() {
+            coefs[i] = c
+                .as_f64()
+                .ok_or_else(|| format!("target '{name}' coefficient {i} is not a number"))?;
+        }
+        targets.push((
+            name.clone(),
+            TargetModel {
+                coefs,
+                envelope: t.req_f64("envelope")?,
+            },
+        ));
+    }
+    Ok(GroupModel {
+        key: j.req_str("key")?.to_string(),
+        oom_steps,
+        targets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn features_are_the_documented_basis() {
+        let budget = Budget::rtx3090_table1();
+        let x = features(&budget, 3);
+        assert_eq!(x[0], 1.0);
+        assert_eq!(x[1], 3.0);
+        // DeepSpeed-Chat: batch 2 × (256 prompt + 256 generated).
+        assert_eq!(x[2], 1024.0);
+        assert!(x[3] > x[4], "policy (1.3b) outweighs value (350m)");
+        assert_eq!(x[5], budget.world as f64);
+    }
+
+    #[test]
+    fn target_model_predicts_in_fixed_order() {
+        let t = TargetModel {
+            coefs: [10.0, 2.0, 0.0, 0.0, 0.0, 0.0],
+            envelope: 1.0,
+        };
+        let budget = Budget::rtx3090_table1();
+        assert_eq!(t.predict(&features(&budget, 5)), 20.0);
+    }
+
+    #[test]
+    fn artifact_roundtrips_and_rejects_drift() {
+        let model = SurrogateModel {
+            budget_name: "rt".to_string(),
+            framework: "DeepSpeed-Chat".to_string(),
+            policy_model: "opt-1.3b".to_string(),
+            value_model: "opt-350m".to_string(),
+            world: 4,
+            seed: 0x5EED,
+            capacity: 24 * crate::util::bytes::GIB,
+            gpu: GpuSpec::rtx3090(),
+            steps_fit: vec![1, 2],
+            cells: 280,
+            max_rel_err: 0.001,
+            groups: vec![GroupModel {
+                key: "None/never/default".to_string(),
+                oom_steps: vec![],
+                targets: vec![(
+                    PEAK_TARGET.to_string(),
+                    TargetModel {
+                        coefs: [1.5e10, 2.25, 0.0, 0.0, 0.0, 0.0],
+                        envelope: 1.0,
+                    },
+                )],
+            }],
+            wall_seconds: 9.0,
+        };
+        let text = model.to_json().to_string_pretty();
+        let back = SurrogateModel::from_json_text(&text).unwrap();
+        assert_eq!(back.to_json().to_string(), model.to_json().to_string());
+        assert_eq!(back.wall_seconds, 0.0, "wall never enters the artifact");
+        assert!(back.applies_to(&Budget::rtx3090_table1()));
+        assert!(back.in_sample(2));
+        assert!(!back.in_sample(3));
+        let mut other = Budget::rtx3090_table1();
+        other.seed = 7;
+        assert!(!back.applies_to(&other));
+
+        let bad = text.replace(SCHEMA, "rlhf-mem-surrogate-v0");
+        assert!(SurrogateModel::from_json_text(&bad)
+            .unwrap_err()
+            .contains("refit"));
+        let bad = text.replace("\"steps\"", "\"epochs\"");
+        assert!(SurrogateModel::from_json_text(&bad)
+            .unwrap_err()
+            .contains("feature basis"));
+    }
+}

@@ -1,0 +1,543 @@
+//! The two-tier search: surrogate screening first, full simulation only
+//! for candidates the model cannot certify away.
+//!
+//! # Screening verdicts
+//!
+//! Per candidate, from the artifact's group models:
+//!
+//! * **Fallback** — the artifact does not cover this candidate (wrong
+//!   provenance, out-of-sample `steps`, unknown group, missing targets).
+//!   Always simulated; the surrogate buys nothing here but costs nothing
+//!   in correctness.
+//! * **Certain OOM** — the fit observed this exact cell OOM at this
+//!   exact `steps`/provenance; deterministic simulation would OOM again.
+//!   Excluded without simulation (an OOM cell is infeasible and the
+//!   frontier never contains infeasible points).
+//! * **Certified** — the group's peak/time models predict with their
+//!   envelopes. Because the envelope strictly contains every in-sample
+//!   residual and an applicable artifact makes this cell in-sample, the
+//!   true simulated values lie strictly inside
+//!   `(prediction − envelope, prediction + envelope)`. A certified
+//!   candidate is excluded only when
+//!   1. its optimistic peak corner already exceeds capacity (truly
+//!      infeasible), or
+//!   2. some *certainly feasible* certified witness's pessimistic corner
+//!      is ≤ its optimistic corner in **both** dimensions — strict
+//!      bracketing then forces strict true dominance in both dimensions,
+//!      so the candidate can be on no frontier and can shield nothing.
+//!
+//! Survivors are simulated (pass A), their overhead baselines next
+//! (pass B, the `refined` counter), and the Pareto frontier over the
+//! simulated subset is byte-identical to the exhaustive search's — the
+//! module doc of [`crate::surrogate`] sketches why, DESIGN.md §17 has
+//! the full argument, and [`plan_surrogate`] additionally *checks* the
+//! dominance certificates against the simulated results, erroring on a
+//! stale artifact instead of returning a silently wrong frontier.
+
+use super::{features, SurrogateModel, PEAK_TARGET, TIME_TARGET};
+use crate::obs::Telemetry;
+use crate::planner::{frontier, frontier_line_json, space, Budget, Candidate};
+use crate::policy::EmptyCachePolicy;
+use crate::profiler::ProfileSummary;
+use crate::report::table::TextTable;
+use crate::sweep::SweepRunner;
+use crate::util::bytes::fmt_gib_paper;
+
+/// One simulated candidate's verdict — the surrogate search only ever
+/// materializes outcomes it actually simulated.
+#[derive(Debug, Clone)]
+pub struct SurrogateOutcome {
+    pub candidate: Candidate,
+    pub summary: ProfileSummary,
+    /// Completed without OOM and peak reserved fits the budget.
+    pub feasible: bool,
+    /// Same semantics (and same value) as the exhaustive search's
+    /// [`crate::planner::PlanOutcome::overhead_pct`]: pass B simulates
+    /// every simulated candidate's un-mitigated baseline, so the numbers
+    /// agree line-for-line.
+    pub overhead_pct: Option<f64>,
+    /// On the memory-vs-time Pareto frontier (computed over the
+    /// simulated subset; identical membership to the exhaustive search).
+    pub on_frontier: bool,
+}
+
+/// The surrogate-screened planner's output.
+#[derive(Debug)]
+pub struct SurrogatePlanReport {
+    pub budget: Budget,
+    /// Simulated candidates only, enumeration order.
+    pub outcomes: Vec<SurrogateOutcome>,
+    /// Candidates screened (the full enumeration).
+    pub screened: u64,
+    /// Candidates excluded without simulation.
+    pub screened_out: u64,
+    /// Candidates simulated in total (pass A survivors + pass B
+    /// baselines) — the headline denominator vs `screened`.
+    pub simulated: u64,
+    /// Pass-B cells: overhead baselines the screen excluded but the
+    /// report needs for its `overhead_pct` columns.
+    pub refined: u64,
+    /// Candidates the artifact could not certify (simulated in pass A).
+    pub fallback: u64,
+    /// Wall-clock of both sweeps, seconds (never serialized).
+    pub wall_seconds: f64,
+    pub jobs: usize,
+    /// Echo of the artifact's fit quality.
+    pub max_rel_err: f64,
+}
+
+/// A candidate's screening prediction.
+enum Pred {
+    /// Artifact certifies this cell OOMs at the planned `steps`.
+    CertainOom,
+    /// In-sample prediction with strict-bracketing corners.
+    Certified {
+        opt_peak: f64,
+        pess_peak: f64,
+        opt_time: f64,
+        pess_time: f64,
+        /// Pessimistic peak fits capacity ⇒ truly feasible.
+        certainly_feasible: bool,
+    },
+    /// Artifact has no certified prediction — simulate.
+    Fallback,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Verdict {
+    Simulate,
+    /// Optimistic peak ≥ capacity: truly infeasible.
+    InfeasibleBound,
+    /// Strictly dominated (both dims) by a certainly-feasible witness.
+    Dominated,
+    /// Certified OOM.
+    Oom,
+}
+
+/// Screen `budget`'s candidate product against `model`, simulate the
+/// survivors and their overhead baselines, and return a report whose
+/// [`SurrogatePlanReport::frontier_jsonl`] is byte-identical to the
+/// exhaustive [`crate::planner::plan`]'s
+/// [`crate::planner::PlanReport::frontier_jsonl`] — or an error if the
+/// simulated results refute the artifact's dominance certificates (a
+/// stale artifact: refit, don't guess).
+pub fn plan_surrogate(
+    budget: &Budget,
+    jobs: usize,
+    model: &SurrogateModel,
+) -> Result<SurrogatePlanReport, String> {
+    let candidates = space::enumerate(budget)?;
+    let applicable = model.applies_to(budget) && model.in_sample(budget.steps);
+    let x = features(budget, budget.steps);
+    let cap = budget.capacity as f64;
+
+    let preds: Vec<Pred> = candidates
+        .iter()
+        .map(|c| {
+            if !applicable {
+                return Pred::Fallback;
+            }
+            let Some(g) = model.group(&c.key()) else {
+                return Pred::Fallback;
+            };
+            if g.oom_steps.contains(&budget.steps) {
+                return Pred::CertainOom;
+            }
+            let (Some(pk), Some(tm)) = (g.target(PEAK_TARGET), g.target(TIME_TARGET)) else {
+                return Pred::Fallback;
+            };
+            let peak = pk.predict(&x);
+            let time = tm.predict(&x);
+            Pred::Certified {
+                opt_peak: (peak - pk.envelope).max(0.0),
+                pess_peak: peak + pk.envelope,
+                opt_time: (time - tm.envelope).max(0.0),
+                pess_time: time + tm.envelope,
+                certainly_feasible: peak + pk.envelope <= cap,
+            }
+        })
+        .collect();
+
+    let verdicts: Vec<Verdict> = preds
+        .iter()
+        .enumerate()
+        .map(|(i, p)| match p {
+            Pred::Fallback => Verdict::Simulate,
+            Pred::CertainOom => Verdict::Oom,
+            Pred::Certified {
+                opt_peak, opt_time, ..
+            } => {
+                if *opt_peak >= cap {
+                    return Verdict::InfeasibleBound;
+                }
+                let dominated = preds.iter().enumerate().any(|(j, w)| {
+                    j != i
+                        && matches!(
+                            w,
+                            Pred::Certified {
+                                certainly_feasible: true,
+                                pess_peak,
+                                pess_time,
+                                ..
+                            } if *pess_peak <= *opt_peak && *pess_time <= *opt_time
+                        )
+                });
+                if dominated {
+                    Verdict::Dominated
+                } else {
+                    Verdict::Simulate
+                }
+            }
+        })
+        .collect();
+
+    // Pass A: simulate the survivors.
+    let survivors: Vec<Candidate> = candidates
+        .iter()
+        .zip(&verdicts)
+        .filter(|(_, v)| **v == Verdict::Simulate)
+        .map(|(c, _)| c.clone())
+        .collect();
+    let fallback = preds.iter().filter(|p| matches!(p, Pred::Fallback)).count() as u64;
+    let sweep_a = SweepRunner::new(jobs).run(space::to_cells(budget, &survivors));
+    let mut wall_seconds = sweep_a.wall_seconds;
+    let mut sim_summary: Vec<Option<ProfileSummary>> = vec![None; candidates.len()];
+    for (c, cell) in survivors.iter().zip(&sweep_a.cells) {
+        sim_summary[c.index] = Some(cell.summary.clone());
+    }
+
+    // Check every dominance certificate against the simulated truth: an
+    // excluded candidate's optimistic corner must be strictly beaten, in
+    // both dimensions, by some feasible simulated configuration — the
+    // chain of witnesses that justified the exclusion terminates at one.
+    // A certificate this check refutes means the artifact no longer
+    // describes this code or budget; failing loudly beats a wrong
+    // frontier.
+    for (i, v) in verdicts.iter().enumerate() {
+        if *v != Verdict::Dominated {
+            continue;
+        }
+        let Pred::Certified {
+            opt_peak, opt_time, ..
+        } = &preds[i]
+        else {
+            unreachable!("only certified candidates are dominance-excluded");
+        };
+        let witnessed = sim_summary.iter().flatten().any(|s| {
+            !s.oom
+                && s.peak_reserved <= budget.capacity
+                && (s.peak_reserved as f64) < *opt_peak
+                && s.total_time_us < *opt_time
+        });
+        if !witnessed {
+            return Err(format!(
+                "surrogate certificate refuted: '{}' was screened out as dominated but no \
+                 simulated configuration beats its optimistic corner — the SURROGATE \
+                 artifact is stale for this build or budget; re-run `rlhf-mem fit`",
+                candidates[i].key()
+            ));
+        }
+    }
+
+    // Pass B: overhead baselines (policy `never`, default allocator,
+    // same strategy/algo/sharing) of every simulated candidate that the
+    // screen excluded. A certified-OOM baseline stays excluded — the
+    // exhaustive search also reports `overhead_pct: null` against an
+    // OOMed baseline.
+    let baseline_pos = |of: &Candidate| -> Option<usize> {
+        candidates.iter().position(|c| {
+            c.strategy_label == of.strategy_label
+                && c.algo == of.algo
+                && c.sharing == of.sharing
+                && c.policy == EmptyCachePolicy::Never
+                && c.alloc_label == "default"
+        })
+    };
+    let mut needed: Vec<usize> = survivors
+        .iter()
+        .filter_map(baseline_pos)
+        .filter(|&i| sim_summary[i].is_none() && verdicts[i] != Verdict::Oom)
+        .collect();
+    needed.sort_unstable();
+    needed.dedup();
+    let refined = needed.len() as u64;
+    if !needed.is_empty() {
+        let extra: Vec<Candidate> = needed.iter().map(|&i| candidates[i].clone()).collect();
+        let sweep_b = SweepRunner::new(jobs).run(space::to_cells(budget, &extra));
+        wall_seconds += sweep_b.wall_seconds;
+        for (c, cell) in extra.iter().zip(&sweep_b.cells) {
+            sim_summary[c.index] = Some(cell.summary.clone());
+        }
+    }
+
+    // Frontier + overheads over the simulated subset, enumeration order.
+    // Membership is identical to the exhaustive frontier: every excluded
+    // candidate is either truly infeasible (never on a frontier, never
+    // dominates) or strictly dominated in both dimensions by a feasible
+    // simulated point (which therefore also dominates anything it
+    // dominated).
+    let simulated_idx: Vec<usize> = (0..candidates.len())
+        .filter(|&i| sim_summary[i].is_some())
+        .collect();
+    let points: Vec<frontier::Point> = simulated_idx
+        .iter()
+        .map(|&i| {
+            let s = sim_summary[i].as_ref().unwrap();
+            let ok = !s.oom && s.peak_reserved <= budget.capacity;
+            (s.peak_reserved, s.total_time_us, ok)
+        })
+        .collect();
+    let on_frontier = frontier::pareto_frontier(&points);
+
+    let outcomes: Vec<SurrogateOutcome> = simulated_idx
+        .iter()
+        .zip(&on_frontier)
+        .map(|(&i, &front)| {
+            let summary = sim_summary[i].clone().unwrap();
+            let overhead_pct = baseline_pos(&candidates[i])
+                .and_then(|b| sim_summary[b].as_ref())
+                .filter(|base| !base.oom)
+                .map(|base| {
+                    (summary.total_time_us - base.total_time_us) / base.total_time_us * 100.0
+                });
+            SurrogateOutcome {
+                candidate: candidates[i].clone(),
+                summary: summary.clone(),
+                feasible: !summary.oom && summary.peak_reserved <= budget.capacity,
+                overhead_pct,
+                on_frontier: front,
+            }
+        })
+        .collect();
+
+    let simulated = outcomes.len() as u64;
+    Ok(SurrogatePlanReport {
+        budget: budget.clone(),
+        screened: candidates.len() as u64,
+        screened_out: candidates.len() as u64 - (simulated - refined),
+        simulated,
+        refined,
+        fallback,
+        outcomes,
+        wall_seconds,
+        jobs: sweep_a.jobs,
+        max_rel_err: model.max_rel_err,
+    })
+}
+
+impl SurrogatePlanReport {
+    /// The memory-vs-time Pareto frontier, cheapest memory first — the
+    /// same points, in the same order, as the exhaustive
+    /// [`crate::planner::PlanReport::frontier`].
+    pub fn frontier(&self) -> Vec<&SurrogateOutcome> {
+        let mut v: Vec<&SurrogateOutcome> =
+            self.outcomes.iter().filter(|o| o.on_frontier).collect();
+        v.sort_by(|a, b| {
+            a.summary
+                .peak_reserved
+                .cmp(&b.summary.peak_reserved)
+                .then(a.summary.total_time_us.total_cmp(&b.summary.total_time_us))
+                .then(a.candidate.index.cmp(&b.candidate.index))
+        });
+        v
+    }
+
+    /// The cheapest feasible frontier configuration within the budget's
+    /// overhead tolerance (peak, then time, then index). This is the
+    /// surrogate search's recommendation; it is *not* always the
+    /// exhaustive search's `best()` — that rank is a global ordering
+    /// over candidates this search deliberately never simulated — which
+    /// is why the identity contract is [`Self::frontier_jsonl`], not the
+    /// recommendation string.
+    pub fn recommended_frontier(&self) -> Option<&SurrogateOutcome> {
+        self.outcomes
+            .iter()
+            .filter(|o| {
+                o.on_frontier
+                    && o.feasible
+                    && match o.overhead_pct {
+                        Some(p) => p <= self.budget.max_overhead_pct,
+                        None => true,
+                    }
+            })
+            .min_by(|a, b| {
+                a.summary
+                    .peak_reserved
+                    .cmp(&b.summary.peak_reserved)
+                    .then(a.summary.total_time_us.total_cmp(&b.summary.total_time_us))
+                    .then(a.candidate.index.cmp(&b.candidate.index))
+            })
+    }
+
+    /// Deterministic JSON-lines dump of the frontier, enumeration order
+    /// — byte-identical to the exhaustive search's
+    /// [`crate::planner::PlanReport::frontier_jsonl`] for the same
+    /// budget (both emit [`frontier_line_json`] lines; `rust/tests/
+    /// surrogate_soundness.rs` pins the identity, CI `cmp`s the files).
+    pub fn frontier_jsonl(&self) -> String {
+        let mut out = String::new();
+        for o in self.outcomes.iter().filter(|o| o.on_frontier) {
+            out.push_str(
+                &frontier_line_json(&o.candidate, &o.summary, o.overhead_pct, o.feasible, true)
+                    .to_string(),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// [`Self::frontier_jsonl`] plus one trailing `{"telemetry":{...}}`
+    /// footer line. Still byte-identical for any `--jobs`.
+    pub fn jsonl_with_telemetry(&self) -> String {
+        let mut out = self.frontier_jsonl();
+        out.push_str(&self.telemetry().footer_line());
+        out.push('\n');
+        out
+    }
+
+    /// The run-telemetry ledger: screening counters first (the headline
+    /// `sim_reduction_pct` is the integer percentage of candidates that
+    /// never reached the simulator), then the same per-outcome allocator
+    /// counters the exhaustive planner ledgers, over the simulated
+    /// subset. Deterministic for any `--jobs`; wall-clock stays in the
+    /// never-serialized wall list.
+    pub fn telemetry(&self) -> Telemetry {
+        let mut t = Telemetry::new();
+        t.add("candidates", self.screened);
+        t.add("screened_out", self.screened_out);
+        t.add("simulated", self.simulated);
+        t.add("refined", self.refined);
+        t.add("surrogate_fallback", self.fallback);
+        t.add(
+            "feasible",
+            self.outcomes.iter().filter(|o| o.feasible).count() as u64,
+        );
+        t.add(
+            "frontier",
+            self.outcomes.iter().filter(|o| o.on_frontier).count() as u64,
+        );
+        t.add(
+            "oom_cells",
+            self.outcomes.iter().filter(|o| o.summary.oom).count() as u64,
+        );
+        for o in &self.outcomes {
+            t.add("num_allocs", o.summary.num_allocs);
+            t.add("cache_hits", o.summary.num_cache_hits);
+        }
+        t.add(
+            "sim_reduction_pct",
+            (100 * (self.screened - self.simulated)) / self.screened.max(1),
+        );
+        t.add(
+            "surrogate_max_rel_err_ppm",
+            (self.max_rel_err * 1e6).round() as u64,
+        );
+        t.wall("plan_surrogate", self.wall_seconds);
+        t
+    }
+
+    /// The frontier as a table. No Rank column: ranks order *every*
+    /// feasible candidate and this search never simulates most of them.
+    pub fn frontier_table(&self) -> TextTable {
+        let mut t = TextTable::new(&[
+            "Algo", "Sharing", "Strategy", "Policy", "Allocator", "Reserved", "Frag.",
+            "Overhead", "Frontier",
+        ]);
+        for o in self.frontier() {
+            t.row(vec![
+                o.candidate.algo.name().to_string(),
+                o.candidate.sharing.name().to_string(),
+                o.candidate.strategy_label.clone(),
+                o.candidate.policy.name().to_string(),
+                o.candidate.alloc_label.clone(),
+                fmt_gib_paper(o.summary.peak_reserved),
+                fmt_gib_paper(o.summary.frag),
+                match o.overhead_pct {
+                    Some(p) => format!("{p:+.1}%"),
+                    None => "n/a".to_string(),
+                },
+                if o.on_frontier { "*" } else { "" }.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// One-line run summary for CLI output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} candidates screened, {} simulated ({} survivors, {} baselines, {} fallbacks) \
+             in {:.2}s on {} worker{}",
+            self.screened,
+            self.simulated,
+            self.simulated - self.refined,
+            self.refined,
+            self.fallback,
+            self.wall_seconds,
+            self.jobs,
+            if self.jobs == 1 { "" } else { "s" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::plan;
+    use crate::surrogate::{fit, FitOptions};
+
+    fn tiny_budget() -> Budget {
+        let mut b = Budget::rtx3090_table1();
+        b.steps = 1;
+        b.strategies = Some(vec!["none".to_string(), "zero3".to_string()]);
+        b.allocators = Some(vec!["default".to_string(), "expandable".to_string()]);
+        b
+    }
+
+    #[test]
+    fn screened_frontier_matches_exhaustive_byte_for_byte() {
+        let budget = tiny_budget();
+        let model = fit(&budget, 2, &FitOptions::for_budget(&budget)).unwrap();
+        let screened = plan_surrogate(&budget, 2, &model).unwrap();
+        let exhaustive = plan(&budget, 2).unwrap();
+        assert_eq!(screened.frontier_jsonl(), exhaustive.frontier_jsonl());
+        assert!(
+            screened.simulated < screened.screened,
+            "screening must skip some simulations ({} of {})",
+            screened.simulated,
+            screened.screened
+        );
+        assert_eq!(screened.fallback, 0, "self-fit artifact certifies everything");
+    }
+
+    #[test]
+    fn unknown_groups_fall_back_to_simulation() {
+        // Fit on a narrower space than we plan: the zero3 groups are
+        // unknown to the artifact and must be simulated, and the
+        // frontier must still match the exhaustive search exactly.
+        let mut narrow = tiny_budget();
+        narrow.strategies = Some(vec!["none".to_string()]);
+        let model = fit(&narrow, 2, &FitOptions::for_budget(&narrow)).unwrap();
+        let wide = tiny_budget();
+        let screened = plan_surrogate(&wide, 2, &model).unwrap();
+        assert!(screened.fallback > 0, "unknown groups must fall back");
+        assert_eq!(
+            screened.frontier_jsonl(),
+            plan(&wide, 2).unwrap().frontier_jsonl()
+        );
+    }
+
+    #[test]
+    fn mismatched_provenance_simulates_everything() {
+        let budget = tiny_budget();
+        let model = fit(&budget, 2, &FitOptions::for_budget(&budget)).unwrap();
+        let mut other = budget.clone();
+        other.seed = 0xBEEF;
+        let screened = plan_surrogate(&other, 2, &model).unwrap();
+        assert_eq!(screened.fallback, screened.screened);
+        assert_eq!(screened.simulated - screened.refined, screened.screened);
+        assert_eq!(
+            screened.frontier_jsonl(),
+            plan(&other, 2).unwrap().frontier_jsonl()
+        );
+    }
+}

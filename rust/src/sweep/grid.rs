@@ -170,7 +170,7 @@ impl SweepGrid {
         self
     }
 
-    /// Model-sharing axis (`separate`/`lora`/`hydra`/`frozen-shared`).
+    /// Model-sharing axis (`separate`/`lora`/`hydra`/`frozen-shared`/`perl`).
     /// Non-separate placements are appended to the cell key (after the
     /// algo component, before the allocator label) so single-placement
     /// grids keep their legacy keys.

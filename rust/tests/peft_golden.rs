@@ -152,6 +152,38 @@ fn non_separate_placements_change_the_op_stream() {
 }
 
 #[test]
+fn perl_shares_the_value_side_only() {
+    // PERL (arXiv 2403.10704) trains reward-side adapters over a frozen
+    // shared value backbone: it changes the op stream exactly when the
+    // cast trains a value-head role. PPO's critic does; the critic-free
+    // casts degrade to separate bit-for-bit (the reward scorer is a
+    // frozen replica either way).
+    for algo in Algo::ALL {
+        let separate = build_trace(&scenario(algo, Sharing::Separate)).fingerprint();
+        let perl = build_trace(&scenario(algo, Sharing::Perl)).fingerprint();
+        if algo.roles().contains(Role::Critic) {
+            assert_ne!(perl, separate, "{}", algo.name());
+        } else {
+            assert_eq!(perl, separate, "{}", algo.name());
+        }
+    }
+    // Value-side-only sharing sits strictly between full LoRA sharing
+    // and separate replicas on the PPO cast: it keeps both policy
+    // replicas (unlike lora) but drops one value backbone and the
+    // critic's full-model Adam state (unlike separate).
+    let peak = |sharing: Sharing| {
+        let s = run_scenario(&scenario(Algo::Ppo, sharing), RTX3090_HBM).summary;
+        assert!(!s.oom, "{}", sharing.name());
+        s.peak_reserved
+    };
+    let separate = peak(Sharing::Separate);
+    let lora = peak(Sharing::Lora);
+    let perl = peak(Sharing::Perl);
+    assert!(lora < perl, "lora {lora} must undercut perl {perl}");
+    assert!(perl < separate, "perl {perl} must undercut separate {separate}");
+}
+
+#[test]
 fn efficient_rlhf_peak_ordering_holds_per_algo() {
     for algo in Algo::ALL {
         let peak = |sharing: Sharing| {
