@@ -7,6 +7,7 @@ pub mod allocator;
 pub mod block;
 pub mod config;
 pub mod driver;
+pub mod paged;
 pub mod pool;
 pub mod stats;
 

@@ -1,0 +1,387 @@
+//! KV-cache pool disciplines for the serving simulator (DESIGN.md §18).
+//!
+//! Two ways to carve a fixed KV budget among concurrent requests, both
+//! measured in *token slots* (the engine converts to bytes via the model's
+//! per-token KV size):
+//!
+//! * [`PagedKvPool`] — vLLM-style fixed-size pages allocated on demand as a
+//!   sequence grows. Waste is bounded by one partially-filled page per
+//!   request (internal fragmentation only).
+//! * [`BestFitKvPool`] — the classic contiguous discipline: each request
+//!   reserves its worst-case extent (`prompt + max_new` tokens) up front
+//!   from a best-fit free list. Waste is the whole unwritten tail of every
+//!   reservation, plus external holes between extents.
+//!
+//! Both reuse [`BlockPool`]'s `(size, BlockId)` index machinery, so "which
+//! free page / extent is picked" is deterministic: smallest sufficient
+//! size, lowest id (= lowest offset) on ties.
+
+use super::block::BlockId;
+use super::driver::SegmentId;
+use super::pool::BlockPool;
+use std::collections::BTreeMap;
+
+/// A request's hold on KV storage. Opaque to the engine beyond the
+/// accounting accessors; returned to the owning pool on release.
+#[derive(Debug, Clone)]
+pub struct KvLease {
+    /// Tokens actually written (prompt + generated so far).
+    used: u64,
+    /// Token slots held from the pool on this lease's behalf.
+    held: u64,
+    shape: LeaseShape,
+}
+
+#[derive(Debug, Clone)]
+enum LeaseShape {
+    /// Page indices held, in allocation order (last one is the open page).
+    Paged(Vec<u32>),
+    /// Contiguous extent `[offset, offset + held)` in token slots.
+    Extent { offset: u32 },
+}
+
+impl KvLease {
+    /// Tokens actually written under this lease.
+    pub fn used_tokens(&self) -> u64 {
+        self.used
+    }
+    /// Token slots held (≥ used; the difference is this lease's waste).
+    pub fn held_tokens(&self) -> u64 {
+        self.held
+    }
+}
+
+/// The KV pool discipline for one serve cell.
+#[derive(Debug)]
+pub enum KvPool {
+    Paged(PagedKvPool),
+    BestFit(BestFitKvPool),
+}
+
+impl KvPool {
+    /// Admit a request arriving with `prompt` tokens that may generate up
+    /// to `max_new` more. `None` (nothing mutated) when the pool cannot
+    /// hold it right now.
+    pub fn try_admit(&mut self, prompt: u64, max_new: u64) -> Option<KvLease> {
+        match self {
+            KvPool::Paged(p) => p.try_admit(prompt),
+            KvPool::BestFit(p) => p.try_admit(prompt, max_new),
+        }
+    }
+
+    /// Record one more generated token under `lease`. `false` (lease
+    /// unchanged) when the pool cannot supply the next page.
+    pub fn try_extend(&mut self, lease: &mut KvLease) -> bool {
+        match self {
+            KvPool::Paged(p) => p.try_extend(lease),
+            KvPool::BestFit(p) => p.try_extend(lease),
+        }
+    }
+
+    /// Return a lease's storage to the pool.
+    pub fn release(&mut self, lease: KvLease) {
+        match self {
+            KvPool::Paged(p) => p.release(lease),
+            KvPool::BestFit(p) => p.release(lease),
+        }
+    }
+
+    /// Token slots currently held by live leases.
+    pub fn held_tokens(&self) -> u64 {
+        match self {
+            KvPool::Paged(p) => p.held_tokens,
+            KvPool::BestFit(p) => p.held_tokens,
+        }
+    }
+
+    /// Total token slots this pool can ever hold.
+    pub fn capacity_tokens(&self) -> u64 {
+        match self {
+            KvPool::Paged(p) => p.pages_total * p.page_tokens,
+            KvPool::BestFit(p) => p.capacity_tokens,
+        }
+    }
+}
+
+/// vLLM-style paged KV pool: `pages_total` fixed pages of `page_tokens`
+/// token slots each, allocated on demand.
+#[derive(Debug)]
+pub struct PagedKvPool {
+    page_tokens: u64,
+    pages_total: u64,
+    /// Free pages, indexed by the shared [`BlockPool`]: every entry is
+    /// `(page_tokens, BlockId(page_index))`, so best-fit degenerates to
+    /// "lowest free page index" — deterministic.
+    free: BlockPool,
+    held_tokens: u64,
+}
+
+impl PagedKvPool {
+    /// A pool of `capacity_tokens / page_tokens` pages (remainder slots
+    /// are unusable and simply dropped).
+    pub fn new(capacity_tokens: u64, page_tokens: u64) -> Self {
+        assert!(page_tokens > 0, "page_tokens must be positive");
+        let pages_total = capacity_tokens / page_tokens;
+        assert!(
+            pages_total <= u32::MAX as u64,
+            "page count exceeds index space"
+        );
+        let mut free = BlockPool::new();
+        for i in 0..pages_total {
+            free.insert(page_tokens, BlockId(i as u32), SegmentId(0), false);
+        }
+        Self {
+            page_tokens,
+            pages_total,
+            free,
+            held_tokens: 0,
+        }
+    }
+
+    fn alloc_page(&mut self) -> Option<u32> {
+        let (size, id) = self.free.best_fit(self.page_tokens)?;
+        self.free.remove(size, id);
+        self.held_tokens += self.page_tokens;
+        Some(id.0)
+    }
+
+    fn free_page(&mut self, page: u32) {
+        self.free
+            .insert(self.page_tokens, BlockId(page), SegmentId(0), false);
+        self.held_tokens -= self.page_tokens;
+    }
+
+    fn pages_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    fn try_admit(&mut self, prompt: u64) -> Option<KvLease> {
+        let need = self.pages_for(prompt.max(1));
+        if need > self.free.len() as u64 {
+            return None;
+        }
+        let mut pages = Vec::with_capacity(need as usize);
+        for _ in 0..need {
+            pages.push(self.alloc_page().expect("free count checked above"));
+        }
+        Some(KvLease {
+            used: prompt,
+            held: need * self.page_tokens,
+            shape: LeaseShape::Paged(pages),
+        })
+    }
+
+    fn try_extend(&mut self, lease: &mut KvLease) -> bool {
+        if lease.used + 1 > lease.held {
+            // Open page is full — need a fresh one.
+            match self.alloc_page() {
+                Some(page) => {
+                    let LeaseShape::Paged(pages) = &mut lease.shape else {
+                        panic!("paged pool given a non-paged lease");
+                    };
+                    pages.push(page);
+                    lease.held += self.page_tokens;
+                }
+                None => return false,
+            }
+        }
+        lease.used += 1;
+        true
+    }
+
+    fn release(&mut self, lease: KvLease) {
+        let LeaseShape::Paged(pages) = lease.shape else {
+            panic!("paged pool given a non-paged lease");
+        };
+        for page in pages {
+            self.free_page(page);
+        }
+    }
+}
+
+/// Contiguous best-fit KV pool: one worst-case extent per request, carved
+/// from a coalescing free list.
+#[derive(Debug)]
+pub struct BestFitKvPool {
+    capacity_tokens: u64,
+    /// Free extents by `(len, BlockId(offset))` — best-fit, lowest offset
+    /// on ties.
+    free: BlockPool,
+    /// The same free extents by offset, for O(log n) neighbor coalescing.
+    by_offset: BTreeMap<u32, u64>,
+    held_tokens: u64,
+}
+
+impl BestFitKvPool {
+    pub fn new(capacity_tokens: u64) -> Self {
+        assert!(
+            capacity_tokens <= u32::MAX as u64,
+            "token capacity exceeds offset space"
+        );
+        let mut pool = Self {
+            capacity_tokens,
+            free: BlockPool::new(),
+            by_offset: BTreeMap::new(),
+            held_tokens: 0,
+        };
+        if capacity_tokens > 0 {
+            pool.insert_free(0, capacity_tokens);
+        }
+        pool
+    }
+
+    fn insert_free(&mut self, offset: u32, len: u64) {
+        self.free.insert(len, BlockId(offset), SegmentId(0), false);
+        self.by_offset.insert(offset, len);
+    }
+
+    fn remove_free(&mut self, offset: u32, len: u64) {
+        self.free.remove(len, BlockId(offset));
+        self.by_offset.remove(&offset);
+    }
+
+    fn try_admit(&mut self, prompt: u64, max_new: u64) -> Option<KvLease> {
+        let want = (prompt + max_new).max(1);
+        let (len, id) = self.free.best_fit(want)?;
+        let offset = id.0;
+        self.remove_free(offset, len);
+        if len > want {
+            // Split: the tail stays free.
+            self.insert_free(offset + want as u32, len - want);
+        }
+        self.held_tokens += want;
+        Some(KvLease {
+            used: prompt,
+            held: want,
+            shape: LeaseShape::Extent { offset },
+        })
+    }
+
+    fn try_extend(&mut self, lease: &mut KvLease) -> bool {
+        // The extent was reserved for the worst case at admission; growth
+        // within it always succeeds.
+        debug_assert!(lease.used < lease.held, "extent overrun");
+        lease.used += 1;
+        true
+    }
+
+    fn release(&mut self, lease: KvLease) {
+        let LeaseShape::Extent { offset } = lease.shape else {
+            panic!("best-fit pool given a paged lease");
+        };
+        let mut offset = offset;
+        let mut len = lease.held;
+        self.held_tokens -= len;
+        // Coalesce with the free predecessor, if adjacent.
+        if let Some((&prev_off, &prev_len)) = self.by_offset.range(..offset).next_back() {
+            if prev_off as u64 + prev_len == offset as u64 {
+                self.remove_free(prev_off, prev_len);
+                offset = prev_off;
+                len += prev_len;
+            }
+        }
+        // Coalesce with the free successor, if adjacent.
+        let end = offset as u64 + len;
+        if let Some((&next_off, &next_len)) = self.by_offset.range(offset + 1..).next() {
+            if next_off as u64 == end {
+                self.remove_free(next_off, next_len);
+                len += next_len;
+            }
+        }
+        self.insert_free(offset, len);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paged_allocates_lowest_free_page_first() {
+        let mut p = PagedKvPool::new(64, 16); // 4 pages
+        let a = p.try_admit(20).unwrap(); // 2 pages: 0, 1
+        assert_eq!(a.held_tokens(), 32);
+        assert_eq!(a.used_tokens(), 20);
+        let b = p.try_admit(1).unwrap(); // page 2
+        p.release(a);
+        let c = p.try_admit(1).unwrap(); // reuses page 0 (lowest index)
+        let LeaseShape::Paged(pages) = &c.shape else {
+            panic!()
+        };
+        assert_eq!(pages, &[0]);
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.held_tokens, 0);
+    }
+
+    #[test]
+    fn paged_extend_crosses_page_boundary_and_exhausts() {
+        let mut p = PagedKvPool::new(32, 16); // 2 pages
+        let mut a = p.try_admit(15).unwrap(); // page 0
+        assert!(p.try_extend(&mut a)); // fills page 0 (16/16)
+        assert!(p.try_extend(&mut a)); // opens page 1
+        assert_eq!(a.held_tokens(), 32);
+        assert_eq!(a.used_tokens(), 17);
+        // Pool is out of pages: a second admit and further growth past the
+        // last page must fail without mutating anything.
+        assert!(p.try_admit(1).is_none());
+        for _ in 17..32 {
+            assert!(p.try_extend(&mut a));
+        }
+        assert!(!p.try_extend(&mut a));
+        assert_eq!(a.used_tokens(), 32);
+        p.release(a);
+        assert!(p.try_admit(32).is_some());
+    }
+
+    #[test]
+    fn best_fit_reserves_worst_case_and_coalesces() {
+        let mut p = BestFitKvPool::new(100);
+        let a = p.try_admit(10, 10).unwrap(); // [0, 20)
+        let b = p.try_admit(5, 5).unwrap(); // [20, 30)
+        let c = p.try_admit(1, 1).unwrap(); // [30, 32)
+        assert_eq!(p.held_tokens, 32);
+        assert_eq!(a.held_tokens(), 20);
+        // Free the middle extent, then its neighbors: everything coalesces
+        // back into one run covering the whole pool.
+        p.release(b);
+        p.release(a);
+        p.release(c);
+        assert_eq!(p.held_tokens, 0);
+        assert!(p.try_admit(50, 50).is_some());
+    }
+
+    #[test]
+    fn best_fit_prefers_tightest_hole() {
+        let mut p = BestFitKvPool::new(100);
+        let a = p.try_admit(5, 5).unwrap(); // [0, 10)
+        let b = p.try_admit(20, 0).unwrap(); // [10, 30)
+        let c = p.try_admit(4, 0).unwrap(); // [30, 34)
+        p.release(a); // hole [0, 10)
+        p.release(c); // hole [30, 34) + tail [34, 100) coalesce -> [30, 100)
+        // A 9-token request fits both holes; best fit takes the 10-slot one.
+        let d = p.try_admit(9, 0).unwrap();
+        let LeaseShape::Extent { offset } = d.shape else {
+            panic!()
+        };
+        assert_eq!(offset, 0);
+        p.release(b);
+        p.release(d);
+        assert_eq!(p.held_tokens, 0);
+    }
+
+    #[test]
+    fn admit_failure_leaves_pool_untouched() {
+        let mut bf = BestFitKvPool::new(10);
+        let a = bf.try_admit(4, 4).unwrap();
+        assert!(bf.try_admit(2, 4).is_none()); // needs 6 slots, only 2 free
+        assert_eq!(bf.held_tokens, 8);
+        bf.release(a);
+
+        let mut pg = PagedKvPool::new(32, 16);
+        let a = pg.try_admit(17).unwrap(); // both pages
+        assert!(pg.try_admit(1).is_none());
+        assert_eq!(pg.held_tokens, 32);
+        pg.release(a);
+    }
+}

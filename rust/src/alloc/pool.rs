@@ -68,11 +68,12 @@ impl BlockPool {
     }
 
     /// Best fit bounded above: PyTorch with `max_split_size` set refuses
-    /// to serve a request < max_split_size from an *oversized* (>
-    /// max_split_size) block unless the fit is close (within kLargeBuffer).
-    /// We expose the bound so the allocator can express that rule.
+    /// to serve a request < max_split_size from an *oversized* (>=
+    /// max_split_size) block — `get_free_block` treats `size >=
+    /// max_split_size` as oversized, so the bound is exclusive. We expose
+    /// the bound so the allocator can express that rule.
     pub fn best_fit_bounded(&self, want: u64, max: u64) -> Option<(u64, BlockId)> {
-        self.best_fit(want).filter(|(sz, _)| *sz <= max)
+        self.best_fit(want).filter(|(sz, _)| *sz < max)
     }
 
     pub fn len(&self) -> usize {
@@ -149,7 +150,36 @@ mod tests {
         let mut p = BlockPool::new();
         p.insert(64 << 20, BlockId(1), seg(1), true); // 64 MiB oversized block
         assert!(p.best_fit_bounded(1 << 20, 32 << 20).is_none());
-        assert!(p.best_fit_bounded(1 << 20, 64 << 20).is_some());
+        // Exact-max hit: a block of exactly max_split_size is oversized
+        // (PyTorch's `size >= max_split_size` test), so it must be refused.
+        assert!(p.best_fit_bounded(1 << 20, 64 << 20).is_none());
+        assert!(p.best_fit_bounded(1 << 20, (64 << 20) + 1).is_some());
+    }
+
+    #[test]
+    fn bounded_fit_empty_range() {
+        let mut p = BlockPool::new();
+        p.insert(64 << 20, BlockId(1), seg(1), true);
+        // want >= max leaves no admissible size in [want, max): never a hit,
+        // even when a block of exactly `want` is cached.
+        assert!(p.best_fit_bounded(64 << 20, 64 << 20).is_none());
+        assert!(p.best_fit_bounded(64 << 20, 32 << 20).is_none());
+        // Empty pool: trivially none.
+        let empty = BlockPool::new();
+        assert!(empty.best_fit_bounded(1, u64::MAX).is_none());
+    }
+
+    #[test]
+    fn bounded_fit_serves_strictly_under_max() {
+        let mut p = BlockPool::new();
+        p.insert((32 << 20) - 1, BlockId(1), seg(1), false);
+        p.insert(32 << 20, BlockId(2), seg(2), false);
+        // Only the strictly-under-max block is admissible; the exact-max
+        // block stays reserved for oversized requests.
+        assert_eq!(
+            p.best_fit_bounded(1 << 20, 32 << 20),
+            Some(((32 << 20) - 1, BlockId(1)))
+        );
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //! large-pool-churn loops, PPO trace generation, a Table-1 cell, an
 //! `advise` planner search, the surrogate-screened `advise --surrogate`
 //! two-tier search (fit + screen + frontier-identity check), a 4-GPU
-//! `cluster` sweep, and the `peft` model-sharing comparison — one per
-//! layer of the speed stack.
+//! `cluster` sweep, the `peft` model-sharing comparison, and the
+//! `serve` continuous-batching stream — one per layer of the speed
+//! stack.
 //!
 //! Each workload returns machine-independent **deterministic counters**
 //! (op counts, peaks, fingerprints of the exact outputs — seeded
@@ -55,6 +56,7 @@ pub const NAMES: &[&str] = &[
     "cluster_sweep",
     "peft_sweep",
     "explain",
+    "serve_stream",
 ];
 
 /// Run one canonical workload by name.
@@ -69,6 +71,7 @@ pub fn run_by_name(name: &str) -> Option<WorkloadRun> {
         "cluster_sweep" => Some(cluster_sweep()),
         "peft_sweep" => Some(peft_sweep()),
         "explain" => Some(explain_run()),
+        "serve_stream" => Some(serve_stream()),
         _ => None,
     }
 }
@@ -449,6 +452,49 @@ pub fn explain_run() -> WorkloadRun {
     }
 }
 
+/// The serving-scale workload: the default serving grid (paged page
+/// sizes vs best-fit reservation × concurrency ceilings) replayed
+/// through the continuous-batching engine on 2 workers. The counters pin
+/// request accounting, the per-discipline worst-case KV fragmentation
+/// and the exact JSONL artifact.
+pub fn serve_stream() -> WorkloadRun {
+    let spec = crate::serve::ServeSpec::default();
+    let cells = spec
+        .cells("rtx3090", GpuSpec::rtx3090())
+        .expect("serve grid");
+    let t = Instant::now();
+    let report = crate::serve::run_cells(&cells, 2);
+    let wall_s = t.elapsed().as_secs_f64();
+    let tel = report.telemetry();
+    let max_frag = |disc: &str| -> u64 {
+        report
+            .cells
+            .iter()
+            .filter(|c| c.discipline == disc)
+            .map(|c| c.kv_frag_bytes())
+            .max()
+            .unwrap_or(0)
+    };
+    WorkloadRun {
+        name: "serve_stream",
+        deterministic: Json::obj(vec![
+            ("cells", Json::from(report.cells.len())),
+            ("completed", Json::from(tel.get("completed").unwrap_or(0))),
+            ("failed", Json::from(tel.get("failed").unwrap_or(0))),
+            ("preempted", Json::from(tel.get("preempted").unwrap_or(0))),
+            (
+                "decode_steps",
+                Json::from(tel.get("decode_steps").unwrap_or(0)),
+            ),
+            ("paged_max_frag", Json::from(max_frag("paged"))),
+            ("best_fit_max_frag", Json::from(max_frag("best-fit"))),
+            ("jsonl_fingerprint", Json::str(hash_text(&report.jsonl()))),
+        ]),
+        ops: tel.get("decode_steps").unwrap_or(0) + tel.get("admissions").unwrap_or(0),
+        wall_s,
+    }
+}
+
 /// A fast deterministic churn used by `--smoke` and tests: same shape as
 /// [`large_pool_churn`], two orders of magnitude smaller.
 pub fn smoke_churn_counters() -> Json {
@@ -520,5 +566,13 @@ mod tests {
     #[test]
     fn smoke_churn_is_deterministic() {
         assert_eq!(smoke_churn_counters(), smoke_churn_counters());
+    }
+
+    #[test]
+    fn serve_stream_counters_are_deterministic() {
+        let a = serve_stream();
+        let b = serve_stream();
+        assert_eq!(a.deterministic, b.deterministic);
+        assert!(a.ops > 0);
     }
 }

@@ -12,10 +12,10 @@
 
 use rlhf_mem::planner::{plan_cluster, plan_with, Budget, PlanOptions};
 use rlhf_mem::report;
+use rlhf_mem::serve::plan_serve;
 use rlhf_mem::surrogate::{plan_surrogate, SurrogateModel};
-use rlhf_mem::sweep::SweepRunner;
 use rlhf_mem::util::bytes::fmt_gib_paper;
-use rlhf_mem::util::cli::Args;
+use rlhf_mem::util::cli::{Args, CommonArgs};
 
 pub const ADVISE_USAGE: &str = "\
 rlhf-mem advise — search sharing × strategy × empty_cache × allocator-knob
@@ -29,6 +29,11 @@ FLAGS:
   --cluster        search placement plan × strategy × world-size instead
                    (feasible = every GPU of the plan fits the budget;
                    ranked on the max-per-GPU-memory vs step-time frontier)
+  --serve          search the serving grid of the budget's \"serve\" object
+                   instead (discipline × page size × max concurrency;
+                   feasible = no dropped requests and p99 within
+                   p99_budget_ms; ranked by throughput on the
+                   peak-KV-vs-p99 frontier)
   --prescreen-static
                    reject candidates whose static peak lower bound (see
                    `rlhf-mem lint`) already exceeds the capacity, before
@@ -57,13 +62,24 @@ pub fn run(args: &Args) -> Result<(), String> {
         println!("{ADVISE_USAGE}");
         return Ok(());
     }
+    let common = CommonArgs::parse(args, 0x5EED)?;
     let budget = match args.flag("budget") {
         Some(path) => Budget::from_file(path)?,
         None => Budget::rtx3090_table1(),
     };
-    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
+    let jobs = common.jobs;
     let top = args.get_usize("top", 10)?;
 
+    if args.bool_flag("serve") {
+        if args.bool_flag("cluster") || args.has("surrogate") {
+            return Err(
+                "--serve is exclusive with --cluster/--surrogate: the serving grid \
+                 is its own search space"
+                    .to_string(),
+            );
+        }
+        return run_serve(&common, &budget, jobs);
+    }
     if let Some(model_path) = args.flag("surrogate") {
         if args.bool_flag("cluster") {
             return Err(
@@ -72,10 +88,10 @@ pub fn run(args: &Args) -> Result<(), String> {
                     .to_string(),
             );
         }
-        return run_surrogate(args, &budget, jobs, model_path);
+        return run_surrogate(args, &common, &budget, jobs, model_path);
     }
     if args.bool_flag("cluster") {
-        return run_cluster(args, &budget, jobs, top);
+        return run_cluster(&common, &budget, jobs, top);
     }
 
     println!(
@@ -133,7 +149,7 @@ pub fn run(args: &Args) -> Result<(), String> {
     println!("({})", report.summary_line());
     println!("{}", report::telemetry::render_telemetry(&report.telemetry()));
 
-    if let Some(path) = args.flag("jsonl") {
+    if let Some(path) = &common.jsonl {
         std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
@@ -141,9 +157,38 @@ pub fn run(args: &Args) -> Result<(), String> {
         std::fs::write(path, report.frontier_jsonl()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
-    if let Some(path) = args.flag("json") {
+    if let Some(path) = &common.json {
         std::fs::write(path, report.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `advise --serve`: evaluate the budget's serving grid and recommend a
+/// (discipline, page size, concurrency) configuration.
+fn run_serve(common: &CommonArgs, budget: &Budget, jobs: usize) -> Result<(), String> {
+    println!(
+        "advise --serve: budget '{}' — {} / {}",
+        budget.name,
+        budget.framework.name(),
+        budget.models.policy_arch.name,
+    );
+    let plan = plan_serve(budget, jobs)?;
+    println!("{}", plan.to_table());
+    println!("({})", plan.report.summary_line());
+    println!(
+        "{}",
+        report::telemetry::render_telemetry(&plan.report.telemetry())
+    );
+    if let Some(path) = &common.jsonl {
+        std::fs::write(path, plan.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    if plan.recommendation().is_none() {
+        return Err(format!(
+            "no serving configuration is feasible under the '{}' budget's traffic",
+            budget.name
+        ));
     }
     Ok(())
 }
@@ -152,6 +197,7 @@ pub fn run(args: &Args) -> Result<(), String> {
 /// only the survivors and their baselines.
 fn run_surrogate(
     args: &Args,
+    common: &CommonArgs,
     budget: &Budget,
     jobs: usize,
     model_path: &str,
@@ -200,7 +246,7 @@ fn run_surrogate(
     println!("({})", report.summary_line());
     println!("{}", report::telemetry::render_telemetry(&report.telemetry()));
 
-    if let Some(path) = args.flag("jsonl") {
+    if let Some(path) = &common.jsonl {
         std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
@@ -212,7 +258,7 @@ fn run_surrogate(
 }
 
 /// `advise --cluster`: placement × strategy × world-size search.
-fn run_cluster(args: &Args, budget: &Budget, jobs: usize, top: usize) -> Result<(), String> {
+fn run_cluster(common: &CommonArgs, budget: &Budget, jobs: usize, top: usize) -> Result<(), String> {
     println!(
         "advise --cluster: budget '{}' — {} GiB per GPU, {} / {}",
         budget.name,
@@ -246,11 +292,11 @@ fn run_cluster(args: &Args, budget: &Budget, jobs: usize, top: usize) -> Result<
     println!("({})", report.summary_line());
     println!("{}", report::telemetry::render_telemetry(&report.telemetry()));
 
-    if let Some(path) = args.flag("jsonl") {
+    if let Some(path) = &common.jsonl {
         std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
-    if let Some(path) = args.flag("json") {
+    if let Some(path) = &common.json {
         std::fs::write(path, report.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }

@@ -21,7 +21,7 @@ use rlhf_mem::rlhf::program::Algo;
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::sweep::{model_set_by_name, SweepGrid, SweepRunner};
 use rlhf_mem::util::bytes::GIB;
-use rlhf_mem::util::cli::{split_list, Args};
+use rlhf_mem::util::cli::{split_list, Args, CommonArgs};
 
 pub const ALGOS_USAGE: &str = "\
 rlhf-mem algos — compare RLHF algorithms' memory behaviour per strategy
@@ -46,6 +46,7 @@ pub fn run(args: &Args) -> Result<(), String> {
         println!("{ALGOS_USAGE}");
         return Ok(());
     }
+    let common = CommonArgs::parse(args, 0x5EED)?;
 
     let algos: Vec<Algo> = Algo::parse_list(args.get_or("algos", "ppo,grpo,remax,dpo"))?;
 
@@ -71,12 +72,9 @@ pub fn run(args: &Args) -> Result<(), String> {
         .steps(args.get_u64("steps", 2)?)
         .world(args.get_u64("world", 4)?)
         .capacity(args.get_u64("capacity-gib", 24)? * GIB)
-        .seeds(rlhf_mem::sweep::SeedPolicy::Fixed(args.get_u64("seed", 0x5EED)?));
-    grid = match args.get_or("gpu", "rtx3090") {
-        "rtx3090" => grid.gpu(GpuSpec::rtx3090()),
-        "a100" | "a100-80g" => grid.gpu(GpuSpec::a100_80g()),
-        other => return Err(format!("unknown gpu '{other}'")),
-    };
+        .seeds(rlhf_mem::sweep::SeedPolicy::Fixed(common.seed));
+    let gpu_name = args.get_or("gpu", "rtx3090");
+    grid = grid.gpu(GpuSpec::by_name(gpu_name).ok_or_else(|| format!("unknown gpu '{gpu_name}'"))?);
 
     let cells = grid.build()?;
     if cells.is_empty() {
@@ -84,8 +82,7 @@ pub fn run(args: &Args) -> Result<(), String> {
     }
     println!("algos: {} cells", cells.len());
 
-    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
-    let report = SweepRunner::new(jobs).run(cells);
+    let report = SweepRunner::new(common.jobs).run(cells);
 
     println!("{}", comparison_table(&report.cells, &algos).render());
     println!("({})", report.summary_line());
@@ -93,7 +90,7 @@ pub fn run(args: &Args) -> Result<(), String> {
         "Expectation: critic-free (grpo/remax) and reference-only (dpo) pipelines\n\
          reserve less than ppo for the same model set — fewer engines, fewer phases."
     );
-    if let Some(path) = args.flag("jsonl") {
+    if let Some(path) = &common.jsonl {
         std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }

@@ -18,6 +18,7 @@
 use rlhf_mem::bench::{report, workloads};
 use rlhf_mem::util::cli::Args;
 use rlhf_mem::util::json::{self, Json};
+use rlhf_mem::util::schema;
 use std::time::Instant;
 
 pub const BENCH_USAGE: &str = "\
@@ -43,7 +44,8 @@ FLAGS:
                    baseline: FILE is re-emitted with locked=true to --out
                    (required) — the DESIGN §13 lock-from-CI step
   --smoke          run the consolidated CI smoke suite instead (cluster +
-                   advise + algos + peft, each writing its JSONL artifact)
+                   advise + algos + peft + serve, each writing its JSONL
+                   artifact, every artifact's schema header validated)
   --out-dir DIR    smoke artifact directory (default bench-artifacts)
 ";
 
@@ -252,15 +254,17 @@ fn infer_index(path: &str) -> Option<u64> {
 }
 
 /// The consolidated smoke suite: what used to be copy-pasted CI steps
-/// (cluster / advise / algos / peft) becomes one invocation whose JSONL
-/// artifacts land in `--out-dir`, plus a `BENCH_smoke.json` summary with
-/// a fingerprint per artifact.
+/// (cluster / advise / algos / peft / serve) becomes one invocation
+/// whose JSONL artifacts land in `--out-dir`, plus a `BENCH_smoke.json`
+/// summary with a fingerprint per artifact. Every artifact's versioned
+/// schema header is validated against its expected kind.
 fn run_smoke(args: &Args) -> Result<(), String> {
     let out_dir = args.get_or("out-dir", "bench-artifacts").to_string();
     std::fs::create_dir_all(&out_dir).map_err(|e| format!("create {out_dir}: {e}"))?;
 
-    let smokes: Vec<(&str, Vec<String>)> = vec![
+    let smokes: Vec<(&str, &str, Vec<String>)> = vec![
         (
+            "cluster",
             "cluster",
             argv(&[
                 "cluster", "--gpus", "2", "--strategies", "none", "--algos", "ppo,grpo",
@@ -270,6 +274,7 @@ fn run_smoke(args: &Args) -> Result<(), String> {
         ),
         (
             "advise",
+            "planner",
             argv(&[
                 "advise", "--budget", "examples/budget_rtx3090.json", "--jobs", "2",
                 "--top", "3", "--jsonl", &format!("{out_dir}/advise-smoke.jsonl"),
@@ -277,6 +282,7 @@ fn run_smoke(args: &Args) -> Result<(), String> {
         ),
         (
             "algos",
+            "sweep",
             argv(&[
                 "algos", "--strategies", "none", "--steps", "1", "--jobs", "2",
                 "--jsonl", &format!("{out_dir}/algos-smoke.jsonl"),
@@ -284,15 +290,25 @@ fn run_smoke(args: &Args) -> Result<(), String> {
         ),
         (
             "peft",
+            "sweep",
             argv(&[
                 "peft", "--strategies", "none", "--steps", "1", "--jobs", "2",
                 "--compare-paper", "--jsonl", &format!("{out_dir}/peft-smoke.jsonl"),
             ]),
         ),
+        (
+            "serve",
+            "serve",
+            argv(&[
+                "serve", "--requests", "24", "--page-tokens", "16",
+                "--max-concurrency", "4,8", "--jobs", "2", "--jsonl",
+                &format!("{out_dir}/serve-smoke.jsonl"),
+            ]),
+        ),
     ];
 
     let mut artifacts: Vec<Json> = Vec::new();
-    for (name, raw) in smokes {
+    for (name, kind, raw) in smokes {
         println!("== smoke: {name} ==");
         let sub = Args::parse(raw);
         match sub.subcommand.as_deref() {
@@ -300,6 +316,7 @@ fn run_smoke(args: &Args) -> Result<(), String> {
             Some("advise") => super::advise::run(&sub)?,
             Some("algos") => super::algos::run(&sub)?,
             Some("peft") => super::peft::run(&sub)?,
+            Some("serve") => super::serve::run(&sub)?,
             _ => unreachable!("smoke table names a known subcommand"),
         }
         let path = format!("{out_dir}/{name}-smoke.jsonl");
@@ -308,6 +325,8 @@ fn run_smoke(args: &Args) -> Result<(), String> {
         if text.trim().is_empty() {
             return Err(format!("smoke '{name}' wrote an empty artifact at {path}"));
         }
+        schema::check_jsonl(kind, &text)
+            .map_err(|e| format!("smoke '{name}' artifact {path}: {e}"))?;
         artifacts.push(Json::obj(vec![
             ("name", Json::str(name)),
             ("path", Json::str(path)),

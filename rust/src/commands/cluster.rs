@@ -25,9 +25,9 @@ use rlhf_mem::rlhf::models::RoleSet;
 use rlhf_mem::rlhf::program::{Algo, Sharing};
 use rlhf_mem::rlhf::sim::{ScenarioMode, SimScenario};
 use rlhf_mem::strategies::StrategyConfig;
-use rlhf_mem::sweep::{model_set_by_name, SweepRunner};
+use rlhf_mem::sweep::model_set_by_name;
 use rlhf_mem::util::bytes::GIB;
-use rlhf_mem::util::cli::{split_list, Args};
+use rlhf_mem::util::cli::{split_list, Args, CommonArgs};
 use rlhf_mem::util::json::Json;
 
 pub const CLUSTER_USAGE: &str = "\
@@ -61,6 +61,7 @@ pub fn run(args: &Args) -> Result<(), String> {
         println!("{CLUSTER_USAGE}");
         return Ok(());
     }
+    let common = CommonArgs::parse(args, 0x5EED)?;
 
     let worlds: Vec<u64> = split_list(args.get_or("gpus", "2,4"))
         .map(|n| {
@@ -96,14 +97,11 @@ pub fn run(args: &Args) -> Result<(), String> {
     let (_mlabel, models) =
         model_set_by_name(model_name).ok_or_else(|| format!("unknown model set '{model_name}'"))?;
 
-    let gpu = match args.get_or("gpu", "rtx3090") {
-        "rtx3090" => GpuSpec::rtx3090(),
-        "a100" | "a100-80g" => GpuSpec::a100_80g(),
-        other => return Err(format!("unknown gpu '{other}'")),
-    };
+    let gpu_name = args.get_or("gpu", "rtx3090");
+    let gpu = GpuSpec::by_name(gpu_name).ok_or_else(|| format!("unknown gpu '{gpu_name}'"))?;
     let steps = args.get_u64("steps", 2)?;
     let capacity = args.get_u64("capacity-gib", 24)? * GIB;
-    let seed = args.get_u64("seed", 0x5EED)?;
+    let seed = common.seed;
 
     // Enumerate configurations (world -> plan -> strategy -> algo ->
     // sharing); the shared coordinator engine lowers each GPU to a sweep
@@ -156,8 +154,7 @@ pub fn run(args: &Args) -> Result<(), String> {
         traces
     );
 
-    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
-    let batch = run_configs(&configs, capacity, jobs)?;
+    let batch = run_configs(&configs, capacity, common.jobs)?;
     let runs: Vec<(String, ClusterRun)> = configs
         .iter()
         .map(|c| c.key.clone())
@@ -180,17 +177,17 @@ pub fn run(args: &Args) -> Result<(), String> {
         ooms
     );
 
-    if let Some(path) = args.flag("jsonl") {
+    if let Some(path) = &common.jsonl {
         std::fs::write(path, render::jsonl(&runs)).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
-    if let Some(path) = args.flag("trace-out") {
+    if let Some(path) = &common.trace_out {
         let (key, run) = &runs[0];
         let doc = cluster_trace(&configs[0], run, capacity, steps);
         std::fs::write(path, doc.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
         println!("wrote {path} — trace of '{key}' (open in ui.perfetto.dev)");
     }
-    if let Some(path) = args.flag("json") {
+    if let Some(path) = &common.json {
         let doc = Json::Arr(
             runs.iter()
                 .map(|(key, run)| {

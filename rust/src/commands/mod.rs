@@ -19,8 +19,58 @@ pub mod overhead;
 pub mod peft;
 pub mod phases;
 pub mod quickstart;
+pub mod serve;
 pub mod sweep;
 pub mod table1;
 pub mod table2;
 #[cfg(feature = "pjrt")]
 pub mod train;
+
+#[cfg(test)]
+mod tests {
+    /// Golden `--help` snapshots: the CLI surface of every CommonArgs
+    /// command is pinned byte-for-byte. A failing case means a flag was
+    /// renamed or re-spelled — update the snapshot file under
+    /// `rust/src/commands/snapshots/` only when the change is deliberate.
+    #[test]
+    fn help_snapshots_pin_the_cli_surface() {
+        for (name, usage, snapshot) in [
+            (
+                "sweep",
+                super::sweep::SWEEP_USAGE,
+                include_str!("snapshots/sweep_help.txt"),
+            ),
+            (
+                "advise",
+                super::advise::ADVISE_USAGE,
+                include_str!("snapshots/advise_help.txt"),
+            ),
+            (
+                "cluster",
+                super::cluster::CLUSTER_USAGE,
+                include_str!("snapshots/cluster_help.txt"),
+            ),
+            (
+                "peft",
+                super::peft::PEFT_USAGE,
+                include_str!("snapshots/peft_help.txt"),
+            ),
+            (
+                "algos",
+                super::algos::ALGOS_USAGE,
+                include_str!("snapshots/algos_help.txt"),
+            ),
+            (
+                "serve",
+                super::serve::SERVE_USAGE,
+                include_str!("snapshots/serve_help.txt"),
+            ),
+        ] {
+            assert_eq!(
+                usage, snapshot,
+                "--help surface for '{name}' drifted from \
+                 rust/src/commands/snapshots/{name}_help.txt"
+            );
+        }
+    }
+}

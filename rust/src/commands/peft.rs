@@ -23,7 +23,7 @@ use rlhf_mem::rlhf::program::{Algo, Sharing};
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::sweep::{model_set_by_name, CellResult, SweepGrid, SweepRunner};
 use rlhf_mem::util::bytes::GIB;
-use rlhf_mem::util::cli::{split_list, Args};
+use rlhf_mem::util::cli::{split_list, Args, CommonArgs};
 
 pub const PEFT_USAGE: &str = "\
 rlhf-mem peft — compare model-sharing placements' memory behaviour per
@@ -59,6 +59,7 @@ pub fn run(args: &Args) -> Result<(), String> {
         println!("{PEFT_USAGE}");
         return Ok(());
     }
+    let common = CommonArgs::parse(args, 0x5EED)?;
 
     let sharings: Vec<Sharing> =
         Sharing::parse_list(args.get_or("sharings", "separate,lora,hydra"))?;
@@ -87,12 +88,9 @@ pub fn run(args: &Args) -> Result<(), String> {
         .steps(args.get_u64("steps", 2)?)
         .world(args.get_u64("world", 4)?)
         .capacity(args.get_u64("capacity-gib", 24)? * GIB)
-        .seeds(rlhf_mem::sweep::SeedPolicy::Fixed(args.get_u64("seed", 0x5EED)?));
-    grid = match args.get_or("gpu", "rtx3090") {
-        "rtx3090" => grid.gpu(GpuSpec::rtx3090()),
-        "a100" | "a100-80g" => grid.gpu(GpuSpec::a100_80g()),
-        other => return Err(format!("unknown gpu '{other}'")),
-    };
+        .seeds(rlhf_mem::sweep::SeedPolicy::Fixed(common.seed));
+    let gpu_name = args.get_or("gpu", "rtx3090");
+    grid = grid.gpu(GpuSpec::by_name(gpu_name).ok_or_else(|| format!("unknown gpu '{gpu_name}'"))?);
 
     let cells = grid.build()?;
     if cells.is_empty() {
@@ -100,8 +98,7 @@ pub fn run(args: &Args) -> Result<(), String> {
     }
     println!("peft: {} cells", cells.len());
 
-    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
-    let report = SweepRunner::new(jobs).run(cells);
+    let report = SweepRunner::new(common.jobs).run(cells);
 
     for &algo in &algos {
         if algos.len() > 1 {
@@ -115,7 +112,7 @@ pub fn run(args: &Args) -> Result<(), String> {
          the full-replica bill — one backbone instead of four, adapter-only\n\
          optimizer state — at a small modeled step-time premium."
     );
-    if let Some(path) = args.flag("jsonl") {
+    if let Some(path) = &common.jsonl {
         std::fs::write(path, report.jsonl()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }

@@ -1,0 +1,119 @@
+//! `rlhf-mem serve` — the serving-scale workload simulator: replay a
+//! deterministic seeded request stream through the continuous-batching
+//! scheduler under each KV-pool discipline (vLLM-style fixed pages vs
+//! best-fit worst-case reservation) and report throughput, tail latency
+//! and KV fragmentation per (discipline × page size × concurrency) cell.
+//!
+//! ```text
+//! rlhf-mem serve --requests 64 --arrival-rps 20 --kv-capacity-gib 8 \
+//!                --page-tokens 8,16,32 --max-concurrency 4,8,16 \
+//!                --jobs 8 --jsonl serve.jsonl
+//! ```
+//!
+//! Cells run on a worker pool under the sweep engine's contract: the
+//! JSONL artifact is byte-identical for any `--jobs`.
+
+use rlhf_mem::report;
+use rlhf_mem::report::serve::summary_table;
+use rlhf_mem::rlhf::cost::GpuSpec;
+use rlhf_mem::serve::{run_cells, ServeSpec};
+use rlhf_mem::util::bytes::GIB;
+use rlhf_mem::util::cli::{split_list, Args, CommonArgs};
+
+pub const SERVE_USAGE: &str = "\
+rlhf-mem serve — simulate a serving-scale generation workload: continuous
+batching + paged KV cache vs best-fit reservation, per cell of a
+(discipline x page size x concurrency) grid
+
+FLAGS (comma-separated lists):
+  --disciplines paged,best-fit   KV-pool disciplines (default both)
+  --page-tokens 8,16,32          page sizes for 'paged', tokens (default 8,16,32)
+  --max-concurrency 4,8,16       admission ceilings (default 4,8,16)
+  --model NAME     model preset (default opt-1.3b)
+  --gpu rtx3090|a100             time-model GPU (default rtx3090)
+  --kv-capacity-gib N            KV-pool carve-out (default 8)
+  --requests N     requests in the stream (default 64)
+  --arrival-rps X  mean arrival rate, req/s (default 20)
+  --prompt-len N   mean prompt length, tokens (default 256)
+  --prompt-jitter N              +- uniform prompt jitter (default 64)
+  --max-new N      mean response budget, tokens (default 128)
+  --response-jitter N            +- uniform response jitter (default 32)
+  --seed N         stream seed (default 0xC0FFEE)
+  --jobs N         worker threads (default: all cores)
+  --jsonl FILE     write the versioned per-cell JSON-lines artifact
+";
+
+pub fn run(args: &Args) -> Result<(), String> {
+    if args.bool_flag("help") {
+        println!("{SERVE_USAGE}");
+        return Ok(());
+    }
+    let common = CommonArgs::parse(args, ServeSpec::default().seed)?;
+
+    let mut spec = ServeSpec {
+        seed: common.seed,
+        ..ServeSpec::default()
+    };
+    if let Some(name) = args.flag("model") {
+        spec.model = name.to_string();
+    }
+    spec.kv_capacity_bytes = args.get_u64("kv-capacity-gib", 8)? * GIB;
+    spec.requests = args.get_u64("requests", spec.requests)?.max(1);
+    spec.arrival_rps = args.get_f64("arrival-rps", spec.arrival_rps)?;
+    if !(spec.arrival_rps.is_finite() && spec.arrival_rps > 0.0) {
+        return Err("--arrival-rps must be a positive number".to_string());
+    }
+    spec.prompt_len = args.get_u64("prompt-len", spec.prompt_len)?.max(1);
+    spec.prompt_jitter = args.get_u64("prompt-jitter", spec.prompt_jitter)?;
+    spec.max_new = args.get_u64("max-new", spec.max_new)?.max(1);
+    spec.response_jitter = args.get_u64("response-jitter", spec.response_jitter)?;
+    if let Some(list) = args.flag("disciplines") {
+        spec.disciplines = split_list(list).map(String::from).collect();
+        if spec.disciplines.is_empty() {
+            return Err("--disciplines must name at least one discipline".to_string());
+        }
+    }
+    for (flag, dst) in [
+        ("page-tokens", &mut spec.page_tokens),
+        ("max-concurrency", &mut spec.max_concurrency),
+    ] {
+        if let Some(list) = args.flag(flag) {
+            let xs: Vec<u64> = split_list(list)
+                .map(|n| {
+                    n.parse::<u64>()
+                        .ok()
+                        .filter(|&x| x > 0)
+                        .ok_or_else(|| format!("--{flag} entries must be positive integers"))
+                })
+                .collect::<Result<_, _>>()?;
+            if xs.is_empty() {
+                return Err(format!("--{flag} must not be empty"));
+            }
+            *dst = xs;
+        }
+    }
+
+    let gpu_name = args.get_or("gpu", "rtx3090");
+    let gpu = GpuSpec::by_name(gpu_name).ok_or_else(|| format!("unknown gpu '{gpu_name}'"))?;
+    let cells = spec.cells(gpu_name, gpu)?;
+    println!(
+        "serve: {} cells — {} requests @ {:.1} rps, {} / {}, KV budget {:.1} GiB",
+        cells.len(),
+        spec.requests,
+        spec.arrival_rps,
+        spec.model,
+        gpu_name,
+        spec.kv_capacity_bytes as f64 / GIB as f64,
+    );
+
+    let report = run_cells(&cells, common.jobs);
+    println!("{}", summary_table(&report.cells).render());
+    println!("({})", report.summary_line());
+    println!("{}", report::telemetry::render_telemetry(&report.telemetry()));
+
+    if let Some(path) = &common.jsonl {
+        std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

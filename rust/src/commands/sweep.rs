@@ -21,7 +21,7 @@ use rlhf_mem::rlhf::sim::ScenarioMode;
 use rlhf_mem::strategies::StrategyConfig;
 use rlhf_mem::sweep::{model_set_by_name, SeedPolicy, SweepGrid, SweepRunner};
 use rlhf_mem::util::bytes::GIB;
-use rlhf_mem::util::cli::{split_list, Args};
+use rlhf_mem::util::cli::{split_list, Args, CommonArgs};
 
 pub const SWEEP_USAGE: &str = "\
 rlhf-mem sweep — run a user-defined scenario grid on a worker pool
@@ -51,6 +51,7 @@ pub fn run(args: &Args) -> Result<(), String> {
         println!("{SWEEP_USAGE}");
         return Ok(());
     }
+    let common = CommonArgs::parse(args, 0x5EED)?;
     let mut grid = SweepGrid::new();
 
     let fws: Vec<FrameworkKind> = split_list(args.get_or("frameworks", "ds"))
@@ -91,17 +92,13 @@ pub fn run(args: &Args) -> Result<(), String> {
         .world(args.get_u64("world", 4)?)
         .capacity(args.get_u64("capacity-gib", 24)? * GIB);
 
-    grid = match args.get_or("gpu", "rtx3090") {
-        "rtx3090" => grid.gpu(GpuSpec::rtx3090()),
-        "a100" | "a100-80g" => grid.gpu(GpuSpec::a100_80g()),
-        other => return Err(format!("unknown gpu '{other}'")),
-    };
+    let gpu_name = args.get_or("gpu", "rtx3090");
+    grid = grid.gpu(GpuSpec::by_name(gpu_name).ok_or_else(|| format!("unknown gpu '{gpu_name}'"))?);
 
-    let seed = args.get_u64("seed", 0x5EED)?;
     grid = grid.seeds(if args.bool_flag("per-cell-seeds") {
-        SeedPolicy::PerCell(seed)
+        SeedPolicy::PerCell(common.seed)
     } else {
-        SeedPolicy::Fixed(seed)
+        SeedPolicy::Fixed(common.seed)
     });
 
     if let Some(pats) = args.flag("include") {
@@ -121,13 +118,12 @@ pub fn run(args: &Args) -> Result<(), String> {
     }
     println!("sweep: {} cells", cells.len());
 
-    let jobs = args.get_usize("jobs", SweepRunner::default_jobs())?;
-    let report = SweepRunner::new(jobs).run(cells);
+    let report = SweepRunner::new(common.jobs).run(cells);
 
     println!("{}", report.to_table().render());
     println!("({})", report.summary_line());
     println!("{}", report::telemetry::render_telemetry(&report.telemetry()));
-    if let Some(path) = args.flag("jsonl") {
+    if let Some(path) = &common.jsonl {
         std::fs::write(path, report.jsonl_with_telemetry()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }

@@ -24,7 +24,7 @@ use rlhf_mem::util::json::Json;
 /// any reserved-scale cell drifts more than this from the published
 /// table (generous enough for modeling noise, tight enough to catch a
 /// broken allocator or trace generator).
-pub const DEFAULT_TOLERANCE_GIB: f64 = 2.0;
+pub const DEFAULT_TOLERANCE_GIB: f64 = rlhf_mem::util::cli::DEFAULT_TOLERANCE_GIB;
 
 pub fn run(args: &Args) -> Result<(), String> {
     let steps = args.get_u64("steps", 3)?;

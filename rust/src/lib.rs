@@ -60,6 +60,7 @@ pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod rlhf;
+pub mod serve;
 pub mod strategies;
 pub mod surrogate;
 pub mod sweep;

@@ -28,12 +28,18 @@ SUBCOMMANDS:
                ordering (see `peft --help`)
   cluster      Multi-GPU placement simulator: per-GPU peaks + step time
                per placement plan (see `cluster --help`)
+  serve        Serving-scale workload simulator: continuous batching +
+               paged KV cache vs best-fit reservation over a seeded
+               request stream — throughput, p99 latency, KV fragmentation
+               per (discipline x page size x concurrency) cell
+               (see `serve --help`)
   advise       Search the mitigation space for the cheapest config that
                fits a GPU budget; --cluster searches placements instead;
                --prescreen-static rejects statically-infeasible candidates
                before simulating; --surrogate FILE screens with a fitted
                surrogate and simulates only near-frontier candidates, with
-               a byte-identical frontier (see `advise --help`)
+               a byte-identical frontier; --serve evaluates the budget's
+               serving grid instead (see `advise --help`)
   fit          Fit the planner's closed-form surrogate (per-candidate
                memory/time models + error envelopes) from simulated sweep
                cells into SURROGATE.json (see `fit --help`)
@@ -75,6 +81,7 @@ fn main() {
         Some("algos") => commands::algos::run(&args),
         Some("peft") => commands::peft::run(&args),
         Some("cluster") => commands::cluster::run(&args),
+        Some("serve") => commands::serve::run(&args),
         Some("advise") => commands::advise::run(&args),
         Some("fit") => commands::fit::run(&args),
         Some("lint") => commands::lint::run(&args),

@@ -64,11 +64,16 @@ impl Telemetry {
         )
     }
 
-    /// One compact JSONL footer line: `{"telemetry":{...}}`. Wall spans
+    /// One compact JSONL footer line:
+    /// `{"schema":"rlhf-mem-telemetry-v1","telemetry":{...}}`. Wall spans
     /// are deliberately absent — the footer must be byte-identical for
     /// any `--jobs`.
     pub fn footer_line(&self) -> String {
-        Json::obj(vec![("telemetry", self.counters_json())]).to_string()
+        Json::obj(vec![
+            ("schema", Json::str(crate::util::schema::tag("telemetry"))),
+            ("telemetry", self.counters_json()),
+        ])
+        .to_string()
     }
 }
 
@@ -95,6 +100,7 @@ mod tests {
         t.wall("sweep", 1.25);
         let line = t.footer_line();
         let j = parse(&line).unwrap();
+        assert_eq!(j.req_str("schema").unwrap(), "rlhf-mem-telemetry-v1");
         let tele = j.get("telemetry").unwrap();
         assert_eq!(tele.req_u64("cells").unwrap(), 7);
         assert!(!line.contains("1.25"), "wall time leaked into the footer");

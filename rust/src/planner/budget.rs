@@ -38,6 +38,7 @@ use crate::frameworks::FrameworkKind;
 use crate::mem::ModelArch;
 use crate::rlhf::cost::GpuSpec;
 use crate::rlhf::models::RlhfModelSet;
+use crate::serve::ServeSpec;
 use crate::util::bytes::GIB;
 use crate::util::json::{parse, Json};
 
@@ -72,6 +73,9 @@ pub struct Budget {
     /// Cluster sizes (GPU counts ≥ 2) `advise --cluster` searches.
     /// Omitted, the cluster planner tries `{2, world}`.
     pub worlds: Option<Vec<u64>>,
+    /// Serving traffic + config grid for `advise --serve`. Omitted, the
+    /// serve planner falls back to [`ServeSpec::default`].
+    pub serve: Option<ServeSpec>,
 }
 
 impl Budget {
@@ -95,6 +99,7 @@ impl Budget {
             algos: None,
             sharings: None,
             worlds: None,
+            serve: None,
         }
     }
 
@@ -110,7 +115,7 @@ impl Budget {
     pub fn from_json(j: &Json) -> Result<Budget, String> {
         // A typo'd field name must not silently fall back to defaults
         // (same fail-loud principle as the typed-field checks below).
-        const KNOWN: [&str; 15] = [
+        const KNOWN: [&str; 16] = [
             "name",
             "capacity_gib",
             "max_overhead_pct",
@@ -126,6 +131,7 @@ impl Budget {
             "algos",
             "sharings",
             "worlds",
+            "serve",
         ];
         if let Json::Obj(kvs) = j {
             for (k, _) in kvs {
@@ -160,11 +166,9 @@ impl Budget {
         let value_arch = ModelArch::by_name(value_name)
             .ok_or_else(|| format!("unknown model '{value_name}'"))?;
 
-        let gpu = match j.get("gpu").and_then(|v| v.as_str()).unwrap_or("rtx3090") {
-            "rtx3090" => GpuSpec::rtx3090(),
-            "a100" | "a100-80g" => GpuSpec::a100_80g(),
-            other => return Err(format!("unknown gpu '{other}'")),
-        };
+        let gpu_name = j.get("gpu").and_then(|v| v.as_str()).unwrap_or("rtx3090");
+        let gpu =
+            GpuSpec::by_name(gpu_name).ok_or_else(|| format!("unknown gpu '{gpu_name}'"))?;
 
         let max_overhead_pct = j
             .get("max_overhead_pct")
@@ -231,6 +235,11 @@ impl Budget {
             }
         };
 
+        let serve = match j.get("serve") {
+            None => None,
+            Some(v) => Some(ServeSpec::from_json(v)?),
+        };
+
         Ok(Budget {
             name: j
                 .get("name")
@@ -253,6 +262,7 @@ impl Budget {
             algos: name_list("algos")?,
             sharings: name_list("sharings")?,
             worlds,
+            serve,
         })
     }
 }
@@ -309,6 +319,18 @@ mod tests {
         assert_eq!(b.steps, anchor.steps);
         assert_eq!(b.seed, anchor.seed);
         assert!(b.strategies.is_none());
+    }
+
+    #[test]
+    fn serve_spec_parses_and_rejects_typos() {
+        let b = Budget::from_json_text(r#"{"serve": {"requests": 8, "max_concurrency": [2, 4]}}"#)
+            .unwrap();
+        let s = b.serve.unwrap();
+        assert_eq!(s.requests, 8);
+        assert_eq!(s.max_concurrency, vec![2, 4]);
+        assert!(Budget::from_json_text("{}").unwrap().serve.is_none());
+        assert!(Budget::from_json_text(r#"{"serve": {"reqs": 8}}"#).is_err());
+        assert!(Budget::from_json_text(r#"{"serve": 3}"#).is_err());
     }
 
     #[test]

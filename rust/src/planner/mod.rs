@@ -60,6 +60,7 @@ use crate::report::table::TextTable;
 use crate::sweep::{SweepReport, SweepRunner};
 use crate::util::bytes::fmt_gib_paper;
 use crate::util::json::Json;
+use crate::util::schema;
 
 /// One candidate's verdict.
 #[derive(Debug, Clone)]
@@ -287,10 +288,12 @@ impl PlanReport {
             .min_by(f64::total_cmp)
     }
 
-    /// Deterministic JSON-lines dump: one line per candidate, enumeration
-    /// order. Byte-identical for the same budget whatever `jobs` was.
+    /// Deterministic JSON-lines dump: the versioned schema header, then
+    /// one line per candidate, enumeration order. Byte-identical for the
+    /// same budget whatever `jobs` was.
     pub fn jsonl(&self) -> String {
-        let mut out = String::new();
+        let mut out = schema::header_line("planner");
+        out.push('\n');
         for o in &self.outcomes {
             out.push_str(&o.to_json().to_string());
             out.push('\n');
@@ -338,7 +341,8 @@ impl PlanReport {
     /// reproduces it byte-for-byte as its identity contract. Lines are
     /// [`frontier_line_json`] (no rank — see there).
     pub fn frontier_jsonl(&self) -> String {
-        let mut out = String::new();
+        let mut out = schema::header_line("planner");
+        out.push('\n');
         for o in self.outcomes.iter().filter(|o| o.on_frontier) {
             out.push_str(
                 &frontier_line_json(&o.candidate, &o.summary, o.overhead_pct, o.feasible, true)
@@ -680,10 +684,12 @@ impl ClusterReport {
         v
     }
 
-    /// Deterministic JSON-lines dump: one line per candidate, enumeration
-    /// order. Byte-identical for the same budget whatever `jobs` was.
+    /// Deterministic JSON-lines dump: the versioned schema header, then
+    /// one line per candidate, enumeration order. Byte-identical for the
+    /// same budget whatever `jobs` was.
     pub fn jsonl(&self) -> String {
-        let mut out = String::new();
+        let mut out = schema::header_line("cluster");
+        out.push('\n');
         for o in &self.outcomes {
             out.push_str(&o.to_json().to_string());
             out.push('\n');
@@ -822,7 +828,8 @@ mod tests {
         let budget = tiny_budget();
         let report = plan(&budget, 2).unwrap();
         assert_eq!(report.outcomes.len(), 2 * 4 * 2);
-        assert_eq!(report.jsonl().lines().count(), report.outcomes.len());
+        // Schema header + one line per outcome.
+        assert_eq!(report.jsonl().lines().count(), report.outcomes.len() + 1);
         for (i, o) in report.outcomes.iter().enumerate() {
             assert_eq!(o.candidate.index, i);
         }
@@ -882,7 +889,7 @@ mod tests {
         b.worlds = Some(vec![2]);
         let report = plan_cluster(&b, 2).unwrap();
         assert_eq!(report.outcomes.len(), 3, "3 plans x 1 strategy");
-        assert_eq!(report.jsonl().lines().count(), 3);
+        assert_eq!(report.jsonl().lines().count(), 4, "header + 3 outcomes");
         let best = report.best().expect("the paper's testbed fits 24 GiB");
         assert!(best.feasible);
         // Ranking is by most-loaded-GPU peak, ascending.

@@ -47,10 +47,12 @@ pub fn gpu_table(runs: &[(String, ClusterRun)]) -> TextTable {
     t
 }
 
-/// Deterministic JSON-lines: one `{key, ...cluster}` line per
-/// configuration, input order — byte-identical whatever `--jobs` was.
+/// Deterministic JSON-lines: the versioned schema header, then one
+/// `{key, ...cluster}` line per configuration, input order —
+/// byte-identical whatever `--jobs` was.
 pub fn jsonl(runs: &[(String, ClusterRun)]) -> String {
-    let mut out = String::new();
+    let mut out = crate::util::schema::header_line("cluster");
+    out.push('\n');
     for (i, (key, run)) in runs.iter().enumerate() {
         let mut line: Vec<(String, Json)> = vec![
             ("index".to_string(), Json::from(i)),
@@ -89,7 +91,8 @@ mod tests {
         assert_eq!(summary_table(&runs).rows.len(), 1);
         assert_eq!(gpu_table(&runs).rows.len(), 2);
         let lines = jsonl(&runs);
-        assert_eq!(lines.lines().count(), 1);
+        assert_eq!(lines.lines().count(), 2, "schema header + 1 config");
+        assert!(lines.starts_with("{\"schema\":\"rlhf-mem-cluster-v1\"}"));
         assert!(lines.contains("\"key\":\"cluster/w2/dedicated/None\""));
         assert!(lines.contains("per_gpu"));
     }

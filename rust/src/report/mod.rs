@@ -1,14 +1,15 @@
 //! Report renderers: generic text tables, the paper-shaped outputs
 //! (Table 1/2 rows, Figure 1 annotations), the cluster placement tables
 //! behind `rlhf-mem cluster`, the per-algorithm comparison behind
-//! `rlhf-mem algos`, and the model-sharing comparison behind
-//! `rlhf-mem peft`.
+//! `rlhf-mem algos`, the model-sharing comparison behind
+//! `rlhf-mem peft`, and the serving-cell table behind `rlhf-mem serve`.
 
 pub mod algos;
 pub mod cluster;
 pub mod lint;
 pub mod paper;
 pub mod peft;
+pub mod serve;
 pub mod table;
 pub mod telemetry;
 

@@ -1,0 +1,93 @@
+//! Serve-report renderer: one row per (discipline × page size ×
+//! concurrency) cell of `rlhf-mem serve`, with throughput, tail latency
+//! and KV-pool footprint columns.
+
+use crate::report::table::TextTable;
+use crate::serve::ServeCellResult;
+use crate::util::bytes::fmt_gib_paper;
+
+/// One row per cell, input (grid enumeration) order.
+pub fn summary_table(cells: &[ServeCellResult]) -> TextTable {
+    let mut t = TextTable::new(&[
+        "Discipline",
+        "Page",
+        "Conc",
+        "Done",
+        "Fail",
+        "Preempt",
+        "tok/s",
+        "p50 ms",
+        "p99 ms",
+        "Peak KV",
+        "Frag",
+        "Frag%",
+    ]);
+    for c in cells {
+        let o = &c.outcome;
+        t.row(vec![
+            c.discipline.to_string(),
+            if c.page_tokens == 0 {
+                "-".to_string()
+            } else {
+                c.page_tokens.to_string()
+            },
+            c.max_concurrency.to_string(),
+            o.completed.to_string(),
+            o.failed.to_string(),
+            o.preempted.to_string(),
+            format!("{:.1}", o.throughput_tok_s()),
+            format!("{:.1}", o.p50_latency_us as f64 / 1e3),
+            format!("{:.1}", o.p99_latency_us as f64 / 1e3),
+            fmt_gib_paper(c.kv_peak_held_bytes()),
+            fmt_gib_paper(c.kv_frag_bytes()),
+            format!("{:.1}", o.frag_frac() * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::ModelArch;
+    use crate::rlhf::GpuSpec;
+    use crate::serve::{run_cells, KvDiscipline, ServeScenario, ServeStream};
+
+    #[test]
+    fn table_covers_every_cell() {
+        let stream = ServeStream {
+            requests: 8,
+            mean_interarrival_us: 5_000,
+            prompt_len: 64,
+            prompt_jitter: 16,
+            max_new: 32,
+            response_jitter: 8,
+            seed: 7,
+        };
+        let cells = vec![
+            ServeScenario {
+                arch: ModelArch::opt_1_3b(),
+                gpu_name: "rtx3090".into(),
+                gpu: GpuSpec::rtx3090(),
+                kv_capacity_bytes: 1 << 30,
+                discipline: KvDiscipline::Paged { page_tokens: 16 },
+                max_concurrency: 4,
+                stream: stream.clone(),
+            },
+            ServeScenario {
+                arch: ModelArch::opt_1_3b(),
+                gpu_name: "rtx3090".into(),
+                gpu: GpuSpec::rtx3090(),
+                kv_capacity_bytes: 1 << 30,
+                discipline: KvDiscipline::BestFit,
+                max_concurrency: 4,
+                stream,
+            },
+        ];
+        let report = run_cells(&cells, 2);
+        let t = summary_table(&report.cells);
+        assert_eq!(t.rows.len(), 2);
+        // Best-fit has no page size.
+        assert_eq!(t.rows[1][1], "-");
+    }
+}

@@ -40,6 +40,16 @@ impl GpuSpec {
             link_bw: 200e9,
         }
     }
+
+    /// Look up a preset by CLI name — the single source of truth for every
+    /// subcommand's `--gpu` flag (`rtx3090`, `a100` / `a100-80g`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "rtx3090" => Some(Self::rtx3090()),
+            "a100" | "a100-80g" => Some(Self::a100_80g()),
+            _ => None,
+        }
+    }
 }
 
 /// Phase-duration calculator for one model.

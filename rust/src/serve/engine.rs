@@ -1,0 +1,336 @@
+//! Continuous-batching engine: a discrete-event simulation of one serve
+//! cell (DESIGN.md §18).
+//!
+//! The loop alternates admission and decode. Admission is FIFO by arrival
+//! time and charges a prefill pass per admitted request; decode advances
+//! every running request by one token per step at the batched decode cost.
+//! When the paged KV pool runs out of pages mid-decode, the engine
+//! preempts the *latest-admitted* other request (vLLM's recompute-style
+//! preemption: its KV is dropped and the request re-queues with its
+//! original arrival priority). A request whose KV alone exceeds the pool
+//! fails permanently. All state is integer µs / integer tokens, so a cell
+//! replays byte-identically.
+
+use super::scenario::{KvDiscipline, Request, ServeScenario};
+use crate::alloc::paged::{BestFitKvPool, KvLease, KvPool, PagedKvPool};
+use crate::mem::ParamInventory;
+use crate::rlhf::CostModel;
+
+/// Deterministic outcome of one serve cell. Token/µs units; the report
+/// layer converts KV tokens to bytes.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOutcome {
+    pub requests: u64,
+    pub completed: u64,
+    /// Requests dropped because their KV footprint can never fit.
+    pub failed: u64,
+    /// OOM preemptions (a running request's KV dropped + re-queued).
+    pub preempted: u64,
+    /// Admissions (> completed when preempted requests re-enter).
+    pub admissions: u64,
+    pub decode_steps: u64,
+    pub generated_tokens: u64,
+    /// End of the last event, µs.
+    pub makespan_us: u64,
+    /// Completion latencies (arrival → last token), µs.
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub mean_latency_us: f64,
+    /// Peak token slots held by the pool, and tokens actually written at
+    /// the moment the peak was first reached. held − used = fragmentation
+    /// (internal page slack for paged; unwritten reservation tails and
+    /// holes for best-fit).
+    pub peak_held_tokens: u64,
+    pub used_at_peak_tokens: u64,
+    pub capacity_tokens: u64,
+}
+
+impl ServeOutcome {
+    /// Fragmentation at the held-peak, token slots.
+    pub fn frag_tokens(&self) -> u64 {
+        self.peak_held_tokens - self.used_at_peak_tokens
+    }
+
+    /// Fragmentation as a fraction of the peak held footprint.
+    pub fn frag_frac(&self) -> f64 {
+        if self.peak_held_tokens == 0 {
+            0.0
+        } else {
+            self.frag_tokens() as f64 / self.peak_held_tokens as f64
+        }
+    }
+
+    /// Generated tokens per second over the makespan.
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.makespan_us == 0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 * 1e6 / self.makespan_us as f64
+        }
+    }
+}
+
+struct Active {
+    req: Request,
+    lease: KvLease,
+    generated: u64,
+    /// Monotone admission sequence number; highest = latest admitted =
+    /// first preemption victim.
+    seq: u64,
+}
+
+/// Run one serve cell to completion.
+pub fn simulate(scn: &ServeScenario) -> ServeOutcome {
+    let cost = CostModel::for_inventory(&ParamInventory::build(&scn.arch), scn.gpu);
+    let capacity_tokens = scn.capacity_tokens();
+    let mut pool = match scn.discipline {
+        KvDiscipline::Paged { page_tokens } => {
+            KvPool::Paged(PagedKvPool::new(capacity_tokens, page_tokens))
+        }
+        KvDiscipline::BestFit => KvPool::BestFit(BestFitKvPool::new(capacity_tokens)),
+    };
+
+    let reqs = scn.stream.generate();
+    let mut out = ServeOutcome {
+        requests: reqs.len() as u64,
+        capacity_tokens,
+        ..ServeOutcome::default()
+    };
+
+    // Waiting queue kept sorted by (arrival, id): FIFO admission, and a
+    // preempted request re-enters at its original priority.
+    let mut waiting: Vec<Request> = Vec::new();
+    let mut running: Vec<Active> = Vec::new();
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut next_arrival = 0usize;
+    let mut next_seq = 0u64;
+    let mut used_tokens = 0u64; // Σ (prompt + generated) over running
+    let mut t = 0u64;
+
+    let prefill_us = |tokens: u64| (cost.forward_us(tokens).round() as u64).max(1);
+    let decode_us = |batch: u64| (cost.decode_step_us(batch).round() as u64).max(1);
+
+    // Peak tracking: first moment the held footprint reaches a new high.
+    macro_rules! note_peak {
+        () => {
+            if pool.held_tokens() > out.peak_held_tokens {
+                out.peak_held_tokens = pool.held_tokens();
+                out.used_at_peak_tokens = used_tokens;
+            }
+        };
+    }
+
+    loop {
+        // Pull due arrivals into the waiting queue.
+        while next_arrival < reqs.len() && reqs[next_arrival].arrival_us <= t {
+            insert_by_priority(&mut waiting, reqs[next_arrival].clone());
+            next_arrival += 1;
+        }
+
+        // Admit FIFO while capacity and the concurrency ceiling allow.
+        while (running.len() as u64) < scn.max_concurrency && !waiting.is_empty() {
+            let head = &waiting[0];
+            match pool.try_admit(head.prompt, head.target_new) {
+                Some(lease) => {
+                    let req = waiting.remove(0);
+                    t += prefill_us(req.prompt);
+                    used_tokens += req.prompt;
+                    out.admissions += 1;
+                    note_peak!();
+                    running.push(Active {
+                        req,
+                        lease,
+                        generated: 0,
+                        seq: next_seq,
+                    });
+                    next_seq += 1;
+                }
+                None if running.is_empty() => {
+                    // The pool is fully drained (leases live only on
+                    // running requests), yet this request does not fit:
+                    // it never will.
+                    waiting.remove(0);
+                    out.failed += 1;
+                }
+                None => break,
+            }
+        }
+
+        if running.is_empty() {
+            if next_arrival < reqs.len() {
+                // Idle until the next arrival.
+                t = t.max(reqs[next_arrival].arrival_us);
+                continue;
+            }
+            break; // waiting is drained too (admit-or-fail above)
+        }
+
+        // One batched decode step: every running request gains one token.
+        t += decode_us(running.len() as u64);
+        out.decode_steps += 1;
+        let mut i = 0;
+        while i < running.len() {
+            let mut extend_failed = false;
+            while !pool.try_extend(&mut running[i].lease) {
+                // Out of pages: preempt the latest-admitted other request
+                // (recompute-style — its KV is dropped, it re-queues).
+                let victim = running
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| *j != i)
+                    .max_by_key(|(_, a)| a.seq)
+                    .map(|(j, _)| j);
+                match victim {
+                    Some(j) => {
+                        let v = running.remove(j);
+                        used_tokens -= v.req.prompt + v.generated;
+                        pool.release(v.lease);
+                        out.preempted += 1;
+                        insert_by_priority(&mut waiting, v.req);
+                        if j < i {
+                            i -= 1;
+                        }
+                    }
+                    None => {
+                        // Alone and still cannot grow: the request's own
+                        // KV exceeds the pool.
+                        extend_failed = true;
+                        break;
+                    }
+                }
+            }
+            if extend_failed {
+                let a = running.remove(i);
+                used_tokens -= a.req.prompt + a.generated;
+                pool.release(a.lease);
+                out.failed += 1;
+                continue; // same i now names the next request
+            }
+            running[i].generated += 1;
+            used_tokens += 1;
+            out.generated_tokens += 1;
+            note_peak!();
+            if running[i].generated >= running[i].req.target_new {
+                let a = running.remove(i);
+                used_tokens -= a.req.prompt + a.generated;
+                pool.release(a.lease);
+                latencies.push(t - a.req.arrival_us);
+                out.completed += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    out.makespan_us = t;
+    latencies.sort_unstable();
+    if !latencies.is_empty() {
+        let n = latencies.len();
+        out.p50_latency_us = latencies[(n - 1) * 50 / 100];
+        out.p99_latency_us = latencies[(n - 1) * 99 / 100];
+        out.mean_latency_us = latencies.iter().sum::<u64>() as f64 / n as f64;
+    }
+    debug_assert_eq!(out.completed + out.failed, out.requests);
+    debug_assert_eq!(pool.held_tokens(), 0, "leaked KV leases");
+    out
+}
+
+/// Insert keeping `(arrival_us, id)` order — the admission priority.
+fn insert_by_priority(waiting: &mut Vec<Request>, req: Request) {
+    let key = (req.arrival_us, req.id);
+    let pos = waiting
+        .binary_search_by_key(&key, |r| (r.arrival_us, r.id))
+        .unwrap_or_else(|p| p);
+    waiting.insert(pos, req);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::ModelArch;
+    use crate::rlhf::GpuSpec;
+    use crate::serve::scenario::ServeStream;
+
+    fn scenario(discipline: KvDiscipline, max_concurrency: u64, kv_gib: u64) -> ServeScenario {
+        ServeScenario {
+            arch: ModelArch::opt_1_3b(),
+            gpu_name: "rtx3090".into(),
+            gpu: GpuSpec::rtx3090(),
+            kv_capacity_bytes: kv_gib << 30,
+            discipline,
+            max_concurrency,
+            stream: ServeStream {
+                requests: 48,
+                mean_interarrival_us: 5_000,
+                prompt_len: 128,
+                prompt_jitter: 32,
+                max_new: 64,
+                response_jitter: 16,
+                seed: 0xC0FFEE,
+            },
+        }
+    }
+
+    #[test]
+    fn every_request_is_accounted_for() {
+        for disc in [KvDiscipline::Paged { page_tokens: 16 }, KvDiscipline::BestFit] {
+            let out = simulate(&scenario(disc, 8, 4));
+            assert_eq!(out.completed + out.failed, 48);
+            assert_eq!(out.failed, 0, "4 GiB fits these requests");
+            assert!(out.generated_tokens > 0);
+            assert!(out.p99_latency_us >= out.p50_latency_us);
+            assert!(out.throughput_tok_s() > 0.0);
+            assert!(out.peak_held_tokens >= out.used_at_peak_tokens);
+            assert!(out.peak_held_tokens <= out.capacity_tokens);
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let scn = scenario(KvDiscipline::Paged { page_tokens: 16 }, 8, 4);
+        let a = simulate(&scn);
+        let b = simulate(&scn);
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.p99_latency_us, b.p99_latency_us);
+        assert_eq!(a.peak_held_tokens, b.peak_held_tokens);
+        assert_eq!(a.preempted, b.preempted);
+    }
+
+    #[test]
+    fn tiny_pool_preempts_under_pressure() {
+        // ~0.06 GiB ≈ 341 token slots: two mid-size requests cannot both
+        // hold their full sequences -> the paged engine must preempt.
+        let mut scn = scenario(KvDiscipline::Paged { page_tokens: 16 }, 8, 1);
+        scn.kv_capacity_bytes = 64 << 20;
+        scn.stream.requests = 12;
+        scn.stream.mean_interarrival_us = 100;
+        let out = simulate(&scn);
+        assert_eq!(out.completed + out.failed, 12);
+        assert!(out.completed > 0);
+        assert!(out.preempted > 0, "pressure must trigger preemption");
+        assert!(out.admissions > out.completed);
+    }
+
+    #[test]
+    fn impossible_request_fails_not_hangs() {
+        // Pool smaller than a single prompt: every request fails.
+        let mut scn = scenario(KvDiscipline::BestFit, 4, 1);
+        scn.kv_capacity_bytes = scn.kv_token_bytes() * 8; // 8 token slots
+        scn.stream.requests = 5;
+        let out = simulate(&scn);
+        assert_eq!(out.failed, 5);
+        assert_eq!(out.completed, 0);
+    }
+
+    #[test]
+    fn paged_wastes_less_than_best_fit_under_load() {
+        let paged = simulate(&scenario(KvDiscipline::Paged { page_tokens: 16 }, 16, 4));
+        let best = simulate(&scenario(KvDiscipline::BestFit, 16, 4));
+        assert!(
+            paged.frag_tokens() <= best.frag_tokens(),
+            "paged {} vs best-fit {}",
+            paged.frag_tokens(),
+            best.frag_tokens()
+        );
+    }
+}

@@ -1,0 +1,263 @@
+//! Serving-scale workload axis (ROADMAP item 1, DESIGN.md §18).
+//!
+//! The paper studies training-time memory; the "millions of users" story
+//! runs through the *generation* phase serving heavy traffic. This module
+//! simulates exactly that: a seeded request stream ([`scenario`]) against
+//! a continuous-batching scheduler with per-request admission/eviction
+//! ([`engine`]) and a choice of KV-pool disciplines
+//! ([`crate::alloc::paged`]): vLLM-style fixed pages vs. classic best-fit
+//! worst-case reservation. [`run_cells`] shards a (discipline × page size
+//! × concurrency) grid across a worker pool under the same jobs-1 vs
+//! jobs-N byte-identical contract as the sweep engine, and [`plan`]
+//! threads a serving budget through `advise`.
+
+pub mod engine;
+pub mod plan;
+pub mod scenario;
+
+pub use engine::{simulate, ServeOutcome};
+pub use plan::{plan_serve, ServePlanReport, ServeSpec};
+pub use scenario::{KvDiscipline, Request, ServeScenario, ServeStream};
+
+use crate::obs::Telemetry;
+use crate::util::json::Json;
+use crate::util::schema;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One evaluated serve cell: the scenario's identity plus its outcome.
+#[derive(Debug, Clone)]
+pub struct ServeCellResult {
+    pub index: usize,
+    pub model: String,
+    pub gpu: String,
+    pub discipline: &'static str,
+    /// Page size in tokens (0 for best-fit).
+    pub page_tokens: u64,
+    pub max_concurrency: u64,
+    /// Bytes of KV per token — converts the outcome's token counts.
+    pub kv_token_bytes: u64,
+    pub kv_capacity_bytes: u64,
+    pub outcome: ServeOutcome,
+}
+
+impl ServeCellResult {
+    fn new(index: usize, scn: &ServeScenario, outcome: ServeOutcome) -> Self {
+        ServeCellResult {
+            index,
+            model: scn.arch.name.clone(),
+            gpu: scn.gpu_name.clone(),
+            discipline: scn.discipline.name(),
+            page_tokens: scn.discipline.page_tokens(),
+            max_concurrency: scn.max_concurrency,
+            kv_token_bytes: scn.kv_token_bytes(),
+            kv_capacity_bytes: scn.kv_capacity_bytes,
+            outcome,
+        }
+    }
+
+    pub fn kv_peak_held_bytes(&self) -> u64 {
+        self.outcome.peak_held_tokens * self.kv_token_bytes
+    }
+
+    pub fn kv_frag_bytes(&self) -> u64 {
+        self.outcome.frag_tokens() * self.kv_token_bytes
+    }
+
+    /// The cell as a JSON object — every value deterministic (counters
+    /// and integer-µs times only, no wall clock).
+    pub fn to_json(&self) -> Json {
+        let o = &self.outcome;
+        Json::obj(vec![
+            ("cell", Json::from(self.index)),
+            ("model", Json::str(&*self.model)),
+            ("gpu", Json::str(&*self.gpu)),
+            ("discipline", Json::str(self.discipline)),
+            ("page_tokens", Json::from(self.page_tokens)),
+            ("max_concurrency", Json::from(self.max_concurrency)),
+            ("requests", Json::from(o.requests)),
+            ("completed", Json::from(o.completed)),
+            ("failed", Json::from(o.failed)),
+            ("preempted", Json::from(o.preempted)),
+            ("admissions", Json::from(o.admissions)),
+            ("decode_steps", Json::from(o.decode_steps)),
+            ("generated_tokens", Json::from(o.generated_tokens)),
+            ("throughput_tok_s", Json::from(o.throughput_tok_s())),
+            ("p50_latency_us", Json::from(o.p50_latency_us)),
+            ("p99_latency_us", Json::from(o.p99_latency_us)),
+            ("mean_latency_us", Json::from(o.mean_latency_us)),
+            ("makespan_us", Json::from(o.makespan_us)),
+            ("kv_capacity_bytes", Json::from(self.kv_capacity_bytes)),
+            ("kv_token_bytes", Json::from(self.kv_token_bytes)),
+            ("kv_peak_held_bytes", Json::from(self.kv_peak_held_bytes())),
+            (
+                "kv_used_at_peak_bytes",
+                Json::from(o.used_at_peak_tokens * self.kv_token_bytes),
+            ),
+            ("kv_frag_bytes", Json::from(self.kv_frag_bytes())),
+            ("kv_frag_pct", Json::from(o.frag_frac() * 100.0)),
+        ])
+    }
+
+    pub fn jsonl_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// A completed serve grid: index-ordered cells plus run metadata.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub cells: Vec<ServeCellResult>,
+    pub wall_seconds: f64,
+    pub jobs: usize,
+}
+
+impl ServeReport {
+    /// The versioned JSONL artifact: schema header, then one line per
+    /// cell in index order. Byte-identical for any `--jobs`.
+    pub fn jsonl(&self) -> String {
+        let mut out = schema::header_line("serve");
+        out.push('\n');
+        for c in &self.cells {
+            out.push_str(&c.jsonl_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Deterministic run counters (order-independent sums over cells).
+    pub fn telemetry(&self) -> Telemetry {
+        let mut t = Telemetry::new();
+        t.add("cells", self.cells.len() as u64);
+        for c in &self.cells {
+            let o = &c.outcome;
+            t.add("requests", o.requests);
+            t.add("completed", o.completed);
+            t.add("failed", o.failed);
+            t.add("preempted", o.preempted);
+            t.add("admissions", o.admissions);
+            t.add("decode_steps", o.decode_steps);
+            t.add("generated_tokens", o.generated_tokens);
+        }
+        t.wall("serve", self.wall_seconds);
+        t
+    }
+
+    /// The artifact plus the telemetry footer line.
+    pub fn jsonl_with_telemetry(&self) -> String {
+        let mut out = self.jsonl();
+        out.push_str(&self.telemetry().footer_line());
+        out.push('\n');
+        out
+    }
+
+    /// One-line run summary for stdout.
+    pub fn summary_line(&self) -> String {
+        let t = self.telemetry();
+        format!(
+            "serve: {} cells, {} requests ({} completed, {} failed, {} preempted) \
+             in {:.2}s with {} jobs",
+            self.cells.len(),
+            t.get("requests").unwrap_or(0),
+            t.get("completed").unwrap_or(0),
+            t.get("failed").unwrap_or(0),
+            t.get("preempted").unwrap_or(0),
+            self.wall_seconds,
+            self.jobs
+        )
+    }
+}
+
+/// Run every cell across `jobs` workers. Results land in index-ordered
+/// slots, so the report is byte-identical regardless of worker count or
+/// completion order — the sweep engine's contract, upheld here.
+pub fn run_cells(cells: &[ServeScenario], jobs: usize) -> ServeReport {
+    let t0 = Instant::now();
+    let jobs = jobs.max(1);
+    let n = cells.len();
+    let slots: Mutex<Vec<Option<ServeCellResult>>> = Mutex::new((0..n).map(|_| None).collect());
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..jobs.min(n.max(1)) {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let outcome = engine::simulate(&cells[i]);
+                let result = ServeCellResult::new(i, &cells[i], outcome);
+                slots.lock().unwrap()[i] = Some(result);
+            });
+        }
+    });
+    let cells = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|c| c.expect("every cell filled"))
+        .collect();
+    ServeReport {
+        cells,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        jobs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::ModelArch;
+    use crate::rlhf::GpuSpec;
+
+    fn grid() -> Vec<ServeScenario> {
+        let stream = ServeStream {
+            requests: 24,
+            mean_interarrival_us: 5_000,
+            prompt_len: 96,
+            prompt_jitter: 32,
+            max_new: 48,
+            response_jitter: 16,
+            seed: 42,
+        };
+        let mut cells = Vec::new();
+        for disc in [
+            KvDiscipline::Paged { page_tokens: 16 },
+            KvDiscipline::Paged { page_tokens: 32 },
+            KvDiscipline::BestFit,
+        ] {
+            for conc in [4u64, 8] {
+                cells.push(ServeScenario {
+                    arch: ModelArch::opt_1_3b(),
+                    gpu_name: "rtx3090".into(),
+                    gpu: GpuSpec::rtx3090(),
+                    kv_capacity_bytes: 2 << 30,
+                    discipline: disc,
+                    max_concurrency: conc,
+                    stream: stream.clone(),
+                });
+            }
+        }
+        cells
+    }
+
+    #[test]
+    fn jobs_one_and_many_agree_byte_for_byte() {
+        let a = run_cells(&grid(), 1);
+        let b = run_cells(&grid(), 4);
+        assert_eq!(a.jsonl_with_telemetry(), b.jsonl_with_telemetry());
+        assert_eq!(a.cells.len(), 6);
+    }
+
+    #[test]
+    fn artifact_opens_with_serve_header_and_covers_cells() {
+        let r = run_cells(&grid(), 2);
+        let text = r.jsonl();
+        schema::check_jsonl("serve", &text).unwrap();
+        // Header + one line per cell.
+        assert_eq!(text.lines().count(), r.cells.len() + 1);
+        for line in text.lines().skip(1) {
+            assert!(line.contains("\"discipline\":"), "{line}");
+        }
+    }
+}

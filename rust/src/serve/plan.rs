@@ -1,0 +1,521 @@
+//! The serving budget threaded through `advise`: given traffic (request
+//! rate, length distributions) and a KV budget, search the (discipline ×
+//! page size × max concurrency) grid and answer "what batch + page-size
+//! config fits this GPU under this traffic" — a Pareto frontier over
+//! (peak KV footprint, p99 latency) plus a throughput-ranked
+//! recommendation. See DESIGN.md §18.
+
+use super::scenario::{KvDiscipline, ServeScenario, ServeStream};
+use super::{run_cells, ServeCellResult, ServeReport};
+use crate::mem::ModelArch;
+use crate::planner::budget::Budget;
+use crate::planner::frontier::pareto_frontier;
+use crate::rlhf::GpuSpec;
+use crate::util::bytes::GIB;
+use crate::util::json::Json;
+use crate::util::schema;
+
+/// The `"serve"` object of a budget file: traffic plus the config grid to
+/// search. Every field optional; defaults describe a moderate chat-style
+/// load on an 8 GiB KV carve-out.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    /// Model whose KV/compute costs the cells use.
+    pub model: String,
+    /// Bytes of GPU memory dedicated to the KV cache.
+    pub kv_capacity_bytes: u64,
+    pub requests: u64,
+    /// Mean request arrival rate, requests/second.
+    pub arrival_rps: f64,
+    pub prompt_len: u64,
+    pub prompt_jitter: u64,
+    pub max_new: u64,
+    pub response_jitter: u64,
+    pub seed: u64,
+    /// Disciplines to search: any of `"paged"`, `"best-fit"`.
+    pub disciplines: Vec<String>,
+    /// Page sizes (tokens) for the paged discipline.
+    pub page_tokens: Vec<u64>,
+    /// Concurrency ceilings to search.
+    pub max_concurrency: Vec<u64>,
+    /// Optional p99-latency ceiling, ms: cells above it are infeasible.
+    pub p99_budget_ms: Option<f64>,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            model: "opt-1.3b".to_string(),
+            kv_capacity_bytes: 8 * GIB,
+            requests: 64,
+            arrival_rps: 20.0,
+            prompt_len: 256,
+            prompt_jitter: 64,
+            max_new: 128,
+            response_jitter: 32,
+            seed: 0xC0FFEE,
+            disciplines: vec!["paged".to_string(), "best-fit".to_string()],
+            page_tokens: vec![8, 16, 32],
+            max_concurrency: vec![4, 8, 16],
+            p99_budget_ms: None,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// Parse the budget file's `"serve"` object. Unknown fields fail loud,
+    /// like the budget itself.
+    pub fn from_json(j: &Json) -> Result<ServeSpec, String> {
+        const KNOWN: [&str; 13] = [
+            "model",
+            "kv_capacity_gib",
+            "requests",
+            "arrival_rps",
+            "prompt_len",
+            "prompt_jitter",
+            "max_new",
+            "response_jitter",
+            "seed",
+            "disciplines",
+            "page_tokens",
+            "max_concurrency",
+            "p99_budget_ms",
+        ];
+        let Json::Obj(kvs) = j else {
+            return Err("'serve' must be a JSON object".to_string());
+        };
+        for (k, _) in kvs {
+            if !KNOWN.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown serve field '{k}' (known fields: {})",
+                    KNOWN.join(", ")
+                ));
+            }
+        }
+        let mut spec = ServeSpec::default();
+
+        let opt_u64 = |key: &str| -> Result<Option<u64>, String> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_u64()
+                    .map(Some)
+                    .ok_or_else(|| format!("serve '{key}' must be a non-negative integer")),
+            }
+        };
+        let opt_f64 = |key: &str| -> Result<Option<f64>, String> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|x| x.is_finite() && *x > 0.0)
+                    .map(Some)
+                    .ok_or_else(|| format!("serve '{key}' must be a positive number")),
+            }
+        };
+        let u64_list = |key: &str| -> Result<Option<Vec<u64>>, String> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let arr = v.as_arr().ok_or_else(|| {
+                        format!("serve '{key}' must be an array of positive integers")
+                    })?;
+                    let xs = arr
+                        .iter()
+                        .map(|x| {
+                            x.as_u64().filter(|&n| n > 0).ok_or_else(|| {
+                                format!("serve '{key}' entries must be positive integers")
+                            })
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    if xs.is_empty() {
+                        return Err(format!("serve '{key}' must not be empty"));
+                    }
+                    Ok(Some(xs))
+                }
+            }
+        };
+
+        if let Some(model) = j.get("model") {
+            let name = model
+                .as_str()
+                .ok_or_else(|| "serve 'model' must be a string".to_string())?;
+            ModelArch::by_name(name).ok_or_else(|| format!("unknown model '{name}'"))?;
+            spec.model = name.to_string();
+        }
+        if let Some(gib) = opt_u64("kv_capacity_gib")? {
+            spec.kv_capacity_bytes = gib * GIB;
+        }
+        if let Some(v) = opt_u64("requests")? {
+            spec.requests = v.max(1);
+        }
+        if let Some(v) = opt_f64("arrival_rps")? {
+            spec.arrival_rps = v;
+        }
+        if let Some(v) = opt_u64("prompt_len")? {
+            spec.prompt_len = v.max(1);
+        }
+        if let Some(v) = opt_u64("prompt_jitter")? {
+            spec.prompt_jitter = v;
+        }
+        if let Some(v) = opt_u64("max_new")? {
+            spec.max_new = v.max(1);
+        }
+        if let Some(v) = opt_u64("response_jitter")? {
+            spec.response_jitter = v;
+        }
+        if let Some(v) = opt_u64("seed")? {
+            spec.seed = v;
+        }
+        if let Some(names) = j.get("disciplines") {
+            let arr = names
+                .as_arr()
+                .ok_or_else(|| "serve 'disciplines' must be an array of strings".to_string())?;
+            let mut ds = Vec::new();
+            for x in arr {
+                match x.as_str() {
+                    Some(d @ ("paged" | "best-fit")) => ds.push(d.to_string()),
+                    Some(other) => {
+                        return Err(format!(
+                            "unknown discipline '{other}' (known: paged, best-fit)"
+                        ))
+                    }
+                    None => return Err("serve 'disciplines' entries must be strings".to_string()),
+                }
+            }
+            if ds.is_empty() {
+                return Err("serve 'disciplines' must not be empty".to_string());
+            }
+            spec.disciplines = ds;
+        }
+        if let Some(xs) = u64_list("page_tokens")? {
+            spec.page_tokens = xs;
+        }
+        if let Some(xs) = u64_list("max_concurrency")? {
+            spec.max_concurrency = xs;
+        }
+        spec.p99_budget_ms = opt_f64("p99_budget_ms")?;
+        Ok(spec)
+    }
+
+    /// The seeded stream this spec describes.
+    pub fn stream(&self) -> ServeStream {
+        ServeStream {
+            requests: self.requests,
+            mean_interarrival_us: ((1e6 / self.arrival_rps).round() as u64).max(1),
+            prompt_len: self.prompt_len,
+            prompt_jitter: self.prompt_jitter,
+            max_new: self.max_new,
+            response_jitter: self.response_jitter,
+            seed: self.seed,
+        }
+    }
+
+    /// Materialize the (discipline × page size × concurrency) grid. The
+    /// page axis collapses for best-fit (it has no pages).
+    pub fn cells(&self, gpu_name: &str, gpu: GpuSpec) -> Result<Vec<ServeScenario>, String> {
+        let arch = ModelArch::by_name(&self.model)
+            .ok_or_else(|| format!("unknown model '{}'", self.model))?;
+        let stream = self.stream();
+        let mut disciplines = Vec::new();
+        for d in &self.disciplines {
+            match d.as_str() {
+                "paged" => {
+                    for &p in &self.page_tokens {
+                        disciplines.push(KvDiscipline::Paged { page_tokens: p });
+                    }
+                }
+                "best-fit" => disciplines.push(KvDiscipline::BestFit),
+                other => return Err(format!("unknown discipline '{other}'")),
+            }
+        }
+        let mut cells = Vec::new();
+        for disc in &disciplines {
+            for &conc in &self.max_concurrency {
+                cells.push(ServeScenario {
+                    arch: arch.clone(),
+                    gpu_name: gpu_name.to_string(),
+                    gpu,
+                    kv_capacity_bytes: self.kv_capacity_bytes,
+                    discipline: *disc,
+                    max_concurrency: conc,
+                    stream: stream.clone(),
+                });
+            }
+        }
+        Ok(cells)
+    }
+}
+
+/// Planner verdict for one serve cell.
+#[derive(Debug, Clone)]
+pub struct ServeVerdict {
+    /// No dropped requests, and p99 within the budget (when set).
+    pub feasible: bool,
+    /// On the (peak KV bytes, p99 latency) Pareto frontier.
+    pub on_frontier: bool,
+    /// Throughput rank among feasible cells (0 = recommended).
+    pub rank: Option<usize>,
+}
+
+/// The serve-planner result: the evaluated grid plus per-cell verdicts.
+#[derive(Debug, Clone)]
+pub struct ServePlanReport {
+    pub budget_name: String,
+    pub spec: ServeSpec,
+    pub report: ServeReport,
+    pub verdicts: Vec<ServeVerdict>,
+}
+
+/// Evaluate the serving budget's grid and rank configurations.
+pub fn plan_serve(budget: &Budget, jobs: usize) -> Result<ServePlanReport, String> {
+    let spec = budget.serve.clone().unwrap_or_default();
+    let cells = spec.cells(gpu_label(&budget.gpu), budget.gpu)?;
+    let report = run_cells(&cells, jobs);
+
+    let feasible: Vec<bool> = report
+        .cells
+        .iter()
+        .map(|c| {
+            c.outcome.failed == 0
+                && spec
+                    .p99_budget_ms
+                    .map(|ms| c.outcome.p99_latency_us as f64 <= ms * 1e3)
+                    .unwrap_or(true)
+        })
+        .collect();
+    let points: Vec<(u64, f64, bool)> = report
+        .cells
+        .iter()
+        .zip(&feasible)
+        .map(|(c, &ok)| (c.kv_peak_held_bytes(), c.outcome.p99_latency_us as f64, ok))
+        .collect();
+    let on_frontier = pareto_frontier(&points);
+
+    // Throughput ranking over feasible cells; deterministic tie-breaks on
+    // (smaller peak KV, lower index).
+    let mut order: Vec<usize> = (0..report.cells.len()).filter(|&i| feasible[i]).collect();
+    order.sort_by(|&a, &b| {
+        let (ca, cb) = (&report.cells[a], &report.cells[b]);
+        cb.outcome
+            .throughput_tok_s()
+            .partial_cmp(&ca.outcome.throughput_tok_s())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(ca.kv_peak_held_bytes().cmp(&cb.kv_peak_held_bytes()))
+            .then(a.cmp(&b))
+    });
+    let mut verdicts: Vec<ServeVerdict> = feasible
+        .iter()
+        .zip(&on_frontier)
+        .map(|(&feasible, &on_frontier)| ServeVerdict {
+            feasible,
+            on_frontier,
+            rank: None,
+        })
+        .collect();
+    for (rank, &i) in order.iter().enumerate() {
+        verdicts[i].rank = Some(rank);
+    }
+
+    Ok(ServePlanReport {
+        budget_name: budget.name.clone(),
+        spec,
+        report,
+        verdicts,
+    })
+}
+
+impl ServePlanReport {
+    /// The recommended cell (rank 0), if any cell is feasible.
+    pub fn recommendation(&self) -> Option<&ServeCellResult> {
+        self.verdicts
+            .iter()
+            .position(|v| v.rank == Some(0))
+            .map(|i| &self.report.cells[i])
+    }
+
+    /// Versioned JSONL: the serve header, one line per cell (cell fields
+    /// plus the planner verdict), and the telemetry footer.
+    pub fn jsonl(&self) -> String {
+        let mut out = schema::header_line("serve");
+        out.push('\n');
+        for (cell, v) in self.report.cells.iter().zip(&self.verdicts) {
+            let Json::Obj(mut kvs) = cell.to_json() else {
+                unreachable!("cell json is an object");
+            };
+            kvs.push(("feasible".to_string(), Json::from(v.feasible)));
+            kvs.push(("on_frontier".to_string(), Json::from(v.on_frontier)));
+            if let Some(rank) = v.rank {
+                kvs.push(("rank".to_string(), Json::from(rank)));
+            }
+            out.push_str(&Json::Obj(kvs).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn jsonl_with_telemetry(&self) -> String {
+        let mut t = self.report.telemetry();
+        t.add("feasible", self.verdicts.iter().filter(|v| v.feasible).count() as u64);
+        t.add(
+            "frontier",
+            self.verdicts.iter().filter(|v| v.on_frontier).count() as u64,
+        );
+        let mut out = self.jsonl();
+        out.push_str(&t.footer_line());
+        out.push('\n');
+        out
+    }
+
+    /// Human summary: the frontier plus the recommendation.
+    pub fn to_table(&self) -> String {
+        let mut out = format!(
+            "serve plan for '{}': {} cells, traffic {} req @ {:.1} rps, \
+             KV budget {:.1} GiB\n",
+            self.budget_name,
+            self.report.cells.len(),
+            self.spec.requests,
+            self.spec.arrival_rps,
+            self.spec.kv_capacity_bytes as f64 / GIB as f64,
+        );
+        out.push_str(
+            "  rank  discipline  page  conc  tok/s     p99 ms    peak KV GiB  frag%  frontier\n",
+        );
+        let mut rows: Vec<(usize, &ServeCellResult, &ServeVerdict)> = self
+            .report
+            .cells
+            .iter()
+            .zip(&self.verdicts)
+            .enumerate()
+            .filter(|(_, (_, v))| v.feasible)
+            .map(|(i, (c, v))| (i, c, v))
+            .collect();
+        rows.sort_by_key(|(i, _, v)| (v.rank.unwrap_or(usize::MAX), *i));
+        for (_, c, v) in &rows {
+            out.push_str(&format!(
+                "  {:>4}  {:<10}  {:>4}  {:>4}  {:>8.1}  {:>8.1}  {:>11.2}  {:>5.1}  {}\n",
+                v.rank.map(|r| r.to_string()).unwrap_or_default(),
+                c.discipline,
+                c.page_tokens,
+                c.max_concurrency,
+                c.outcome.throughput_tok_s(),
+                c.outcome.p99_latency_us as f64 / 1e3,
+                c.kv_peak_held_bytes() as f64 / GIB as f64,
+                c.outcome.frag_frac() * 100.0,
+                if v.on_frontier { "*" } else { "" },
+            ));
+        }
+        let infeasible = self.verdicts.iter().filter(|v| !v.feasible).count();
+        if infeasible > 0 {
+            out.push_str(&format!(
+                "  ({infeasible} infeasible cells omitted: dropped requests or p99 over budget)\n"
+            ));
+        }
+        match self.recommendation() {
+            Some(c) => out.push_str(&format!(
+                "recommended: {} page_tokens={} max_concurrency={} — {:.1} tok/s, \
+                 p99 {:.1} ms, peak KV {:.2} GiB\n",
+                c.discipline,
+                c.page_tokens,
+                c.max_concurrency,
+                c.outcome.throughput_tok_s(),
+                c.outcome.p99_latency_us as f64 / 1e3,
+                c.kv_peak_held_bytes() as f64 / GIB as f64,
+            )),
+            None => out.push_str("recommended: none — no feasible cell under this traffic\n"),
+        }
+        out
+    }
+}
+
+/// Stable display label for a GPU preset (budgets carry the spec, not the
+/// CLI name).
+fn gpu_label(gpu: &GpuSpec) -> &'static str {
+    if *gpu == GpuSpec::rtx3090() {
+        "rtx3090"
+    } else if *gpu == GpuSpec::a100_80g() {
+        "a100-80g"
+    } else {
+        "custom"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_budget() -> Budget {
+        let mut b = Budget::rtx3090_table1();
+        b.serve = Some(ServeSpec {
+            requests: 24,
+            max_concurrency: vec![4, 8],
+            page_tokens: vec![16],
+            ..ServeSpec::default()
+        });
+        b
+    }
+
+    #[test]
+    fn plan_ranks_and_marks_a_frontier() {
+        let plan = plan_serve(&small_budget(), 2).unwrap();
+        // paged×1 page size + best-fit, × 2 concurrencies.
+        assert_eq!(plan.report.cells.len(), 4);
+        assert_eq!(plan.verdicts.len(), 4);
+        assert!(plan.verdicts.iter().any(|v| v.on_frontier));
+        let rec = plan.recommendation().expect("some cell is feasible");
+        assert!(rec.outcome.failed == 0);
+        // The recommendation has the best feasible throughput.
+        for (c, v) in plan.report.cells.iter().zip(&plan.verdicts) {
+            if v.feasible {
+                assert!(c.outcome.throughput_tok_s() <= rec.outcome.throughput_tok_s() + 1e-9);
+            }
+        }
+        let table = plan.to_table();
+        assert!(table.contains("recommended:"), "{table}");
+    }
+
+    #[test]
+    fn plan_jsonl_is_versioned_and_jobs_invariant() {
+        let a = plan_serve(&small_budget(), 1).unwrap();
+        let b = plan_serve(&small_budget(), 4).unwrap();
+        assert_eq!(a.jsonl_with_telemetry(), b.jsonl_with_telemetry());
+        schema::check_jsonl("serve", &a.jsonl()).unwrap();
+        assert!(a.jsonl().lines().skip(1).all(|l| l.contains("\"feasible\":")));
+    }
+
+    #[test]
+    fn spec_parsing_rejects_typos_and_bad_values() {
+        use crate::util::json::parse;
+        let ok = ServeSpec::from_json(
+            &parse(r#"{"requests": 8, "page_tokens": [8, 64], "p99_budget_ms": 250}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(ok.requests, 8);
+        assert_eq!(ok.page_tokens, vec![8, 64]);
+        assert_eq!(ok.p99_budget_ms, Some(250.0));
+        for bad in [
+            r#"{"request": 8}"#,
+            r#"{"requests": -1}"#,
+            r#"{"model": "nope"}"#,
+            r#"{"disciplines": ["slab"]}"#,
+            r#"{"disciplines": []}"#,
+            r#"{"page_tokens": [0]}"#,
+            r#"{"p99_budget_ms": 0}"#,
+            r#"[1]"#,
+        ] {
+            assert!(ServeSpec::from_json(&parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn p99_budget_gates_feasibility() {
+        let mut b = small_budget();
+        if let Some(s) = &mut b.serve {
+            s.p99_budget_ms = Some(0.001); // nothing clears 1µs
+        }
+        let plan = plan_serve(&b, 2).unwrap();
+        assert!(plan.verdicts.iter().all(|v| !v.feasible));
+        assert!(plan.recommendation().is_none());
+        assert!(plan.to_table().contains("none"), "{}", plan.to_table());
+    }
+}

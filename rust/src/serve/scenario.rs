@@ -1,0 +1,184 @@
+//! Serving workload description: a deterministic seeded request stream
+//! plus the KV budget and scheduling knobs for one serve cell.
+//!
+//! Everything here is integer-valued (token counts, microseconds) and
+//! driven by the library [`Rng`], so a scenario replays byte-identically
+//! for a given seed — the property the jobs-1 vs jobs-N contract and the
+//! CI serve gate rest on.
+
+use crate::mem::{DType, KvCacheModel, ModelArch};
+use crate::rlhf::GpuSpec;
+use crate::util::prng::Rng;
+
+/// Seeded request-stream spec: arrival process and length distributions.
+#[derive(Debug, Clone)]
+pub struct ServeStream {
+    /// Total requests in the stream.
+    pub requests: u64,
+    /// Mean inter-arrival gap, µs. Arrivals are uniformly jittered in
+    /// `[0, 2·mean]` — integer-only (no libm), same mean as Poisson.
+    pub mean_interarrival_us: u64,
+    /// Prompt length, tokens, uniformly jittered by ±`prompt_jitter`.
+    pub prompt_len: u64,
+    pub prompt_jitter: u64,
+    /// Response budget, tokens, uniformly jittered by ±`response_jitter`.
+    pub max_new: u64,
+    pub response_jitter: u64,
+    pub seed: u64,
+}
+
+/// One request materialized from the stream.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_us: u64,
+    /// Prompt tokens (KV written at admission by the prefill pass).
+    pub prompt: u64,
+    /// Tokens this request will generate before completing.
+    pub target_new: u64,
+}
+
+impl ServeStream {
+    /// Materialize the stream. Same seed → same vector, always sorted by
+    /// arrival time (arrivals are generated as a running sum).
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::seeded(self.seed);
+        let mut t = 0u64;
+        let mut out = Vec::with_capacity(self.requests as usize);
+        for id in 0..self.requests {
+            t += rng.gen_range(2 * self.mean_interarrival_us + 1);
+            let prompt = jittered(&mut rng, self.prompt_len, self.prompt_jitter);
+            let target_new = jittered(&mut rng, self.max_new, self.response_jitter);
+            out.push(Request {
+                id,
+                arrival_us: t,
+                prompt,
+                target_new,
+            });
+        }
+        out
+    }
+}
+
+/// `base ± jitter`, uniform, clamped to ≥ 1 token.
+fn jittered(rng: &mut Rng, base: u64, jitter: u64) -> u64 {
+    (base + rng.gen_range(2 * jitter + 1)).saturating_sub(jitter).max(1)
+}
+
+/// How the KV budget is carved among concurrent requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvDiscipline {
+    /// vLLM-style on-demand fixed-size pages of `page_tokens` slots.
+    Paged { page_tokens: u64 },
+    /// Contiguous worst-case reservation from a best-fit free list.
+    BestFit,
+}
+
+impl KvDiscipline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvDiscipline::Paged { .. } => "paged",
+            KvDiscipline::BestFit => "best-fit",
+        }
+    }
+
+    /// Page size in tokens; 0 for the (page-less) best-fit discipline.
+    pub fn page_tokens(&self) -> u64 {
+        match self {
+            KvDiscipline::Paged { page_tokens } => *page_tokens,
+            KvDiscipline::BestFit => 0,
+        }
+    }
+}
+
+/// One serve cell: a request stream against one (discipline, concurrency)
+/// configuration of one model on one GPU.
+#[derive(Debug, Clone)]
+pub struct ServeScenario {
+    pub arch: ModelArch,
+    pub gpu_name: String,
+    pub gpu: GpuSpec,
+    /// Bytes of GPU memory dedicated to the KV cache.
+    pub kv_capacity_bytes: u64,
+    pub discipline: KvDiscipline,
+    /// Admission ceiling: running requests never exceed this.
+    pub max_concurrency: u64,
+    pub stream: ServeStream,
+}
+
+impl ServeScenario {
+    /// Bytes of KV cache per token for this model (both K and V, all
+    /// layers, fp16) — the token-slot/byte exchange rate.
+    pub fn kv_token_bytes(&self) -> u64 {
+        KvCacheModel::new(&self.arch, DType::F16).total_bytes(1, 1)
+    }
+
+    /// The KV budget expressed in token slots.
+    pub fn capacity_tokens(&self) -> u64 {
+        self.kv_capacity_bytes / self.kv_token_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(seed: u64) -> ServeStream {
+        ServeStream {
+            requests: 32,
+            mean_interarrival_us: 10_000,
+            prompt_len: 64,
+            prompt_jitter: 16,
+            max_new: 32,
+            response_jitter: 8,
+            seed,
+        }
+    }
+
+    #[test]
+    fn stream_replays_exactly_for_a_seed() {
+        let a = stream(7).generate();
+        let b = stream(7).generate();
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                (x.id, x.arrival_us, x.prompt, x.target_new),
+                (y.id, y.arrival_us, y.prompt, y.target_new)
+            );
+        }
+        // A different seed genuinely changes the stream.
+        let c = stream(8).generate();
+        assert!(a
+            .iter()
+            .zip(&c)
+            .any(|(x, y)| (x.arrival_us, x.prompt) != (y.arrival_us, y.prompt)));
+    }
+
+    #[test]
+    fn stream_is_sorted_and_lengths_in_band() {
+        let reqs = stream(11).generate();
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us);
+        }
+        for r in &reqs {
+            assert!((48..=80).contains(&r.prompt), "prompt {}", r.prompt);
+            assert!((24..=40).contains(&r.target_new), "new {}", r.target_new);
+        }
+    }
+
+    #[test]
+    fn token_bytes_matches_kv_model() {
+        let scn = ServeScenario {
+            arch: ModelArch::opt_1_3b(),
+            gpu_name: "rtx3090".into(),
+            gpu: GpuSpec::rtx3090(),
+            kv_capacity_bytes: 8 << 30,
+            discipline: KvDiscipline::Paged { page_tokens: 16 },
+            max_concurrency: 8,
+            stream: stream(1),
+        };
+        // opt-1.3b: 2 (K+V) · 24 layers · 2048 d_model · 2 bytes = 192 KiB.
+        assert_eq!(scn.kv_token_bytes(), 2 * 24 * 2048 * 2);
+        assert_eq!(scn.capacity_tokens(), (8 << 30) / (2 * 24 * 2048 * 2));
+    }
+}

@@ -42,6 +42,7 @@ use crate::profiler::ProfileSummary;
 use crate::report::table::TextTable;
 use crate::sweep::SweepRunner;
 use crate::util::bytes::fmt_gib_paper;
+use crate::util::schema;
 
 /// One simulated candidate's verdict — the surrogate search only ever
 /// materializes outcomes it actually simulated.
@@ -375,7 +376,8 @@ impl SurrogatePlanReport {
     /// budget (both emit [`frontier_line_json`] lines; `rust/tests/
     /// surrogate_soundness.rs` pins the identity, CI `cmp`s the files).
     pub fn frontier_jsonl(&self) -> String {
-        let mut out = String::new();
+        let mut out = schema::header_line("planner");
+        out.push('\n');
         for o in self.outcomes.iter().filter(|o| o.on_frontier) {
             out.push_str(
                 &frontier_line_json(&o.candidate, &o.summary, o.overhead_pct, o.feasible, true)

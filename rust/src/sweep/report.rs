@@ -6,6 +6,7 @@ use crate::obs::Telemetry;
 use crate::report::paper::StrategyRow;
 use crate::report::table::TextTable;
 use crate::util::bytes::fmt_gib_paper;
+use crate::util::schema;
 
 /// All cell results of one sweep, in input (grid enumeration) order.
 pub struct SweepReport {
@@ -17,10 +18,12 @@ pub struct SweepReport {
 }
 
 impl SweepReport {
-    /// Deterministic JSON-lines dump: one line per cell, index order.
-    /// Byte-identical for the same grid whatever `jobs` was.
+    /// Deterministic JSON-lines dump: the versioned schema header, then
+    /// one line per cell, index order. Byte-identical for the same grid
+    /// whatever `jobs` was.
     pub fn jsonl(&self) -> String {
-        let mut out = String::new();
+        let mut out = schema::header_line("sweep");
+        out.push('\n');
         for c in &self.cells {
             out.push_str(&c.jsonl_line());
             out.push('\n');
@@ -241,7 +244,9 @@ mod tests {
         let cells = SweepGrid::new().steps(1).build().unwrap();
         let report = SweepRunner::new(1).run(cells);
         assert_eq!(report.to_table().rows.len(), report.cells.len());
-        assert_eq!(report.jsonl().lines().count(), report.cells.len());
+        // Schema header + one line per cell.
+        assert_eq!(report.jsonl().lines().count(), report.cells.len() + 1);
+        assert!(report.jsonl().starts_with("{\"schema\":\"rlhf-mem-sweep-v1\"}"));
         assert!(report.get("DeepSpeed-Chat/OPT/None/full/never").is_some());
         assert!(report.summary_line().contains("1 cell"));
     }

@@ -97,9 +97,7 @@ impl SweepRunner {
 
     /// Number of workers to default to on this machine.
     pub fn default_jobs() -> usize {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
+        crate::util::cli::default_jobs()
     }
 
     /// Keep each cell's full [`MemoryProfiler`] (timeline, phase peaks,

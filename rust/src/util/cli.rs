@@ -104,6 +104,56 @@ pub fn split_list(s: &str) -> impl Iterator<Item = &str> {
     s.split(',').map(str::trim).filter(|x| !x.is_empty())
 }
 
+/// Default worker count: every core the OS reports, one when it won't
+/// say. The shared default behind every `--jobs` flag.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Default `--tolerance-gib` for the paper-comparison gates: the gate
+/// trips when any compared cell deviates from the paper's bar chart by
+/// more than this many GiB.
+pub const DEFAULT_TOLERANCE_GIB: f64 = 2.0;
+
+/// The flags every artifact-producing subcommand shares, parsed once.
+///
+/// Spellings are the crate-wide contract: `--jobs N`, `--seed N`,
+/// `--jsonl FILE`, `--json FILE`, `--trace-out FILE`,
+/// `--tolerance-gib T`. Commands read the parsed struct instead of
+/// re-spelling the flag names, so a typo can't fork the CLI surface.
+#[derive(Debug, Clone)]
+pub struct CommonArgs {
+    /// `--jobs N` — worker threads (default: all cores).
+    pub jobs: usize,
+    /// `--seed N` — base RNG seed (command-specific default).
+    pub seed: u64,
+    /// `--jsonl FILE` — deterministic JSON-lines artifact path.
+    pub jsonl: Option<String>,
+    /// `--json FILE` — single-document JSON artifact path.
+    pub json: Option<String>,
+    /// `--trace-out FILE` — Perfetto trace path.
+    pub trace_out: Option<String>,
+    /// `--tolerance-gib T` — paper-comparison gate width.
+    pub tolerance_gib: f64,
+}
+
+impl CommonArgs {
+    /// Parse the shared flags out of `args`. `seed_default` is the
+    /// command's seed when `--seed` is absent.
+    pub fn parse(args: &Args, seed_default: u64) -> Result<CommonArgs, String> {
+        Ok(CommonArgs {
+            jobs: args.get_usize("jobs", default_jobs())?,
+            seed: args.get_u64("seed", seed_default)?,
+            jsonl: args.flag("jsonl").map(String::from),
+            json: args.flag("json").map(String::from),
+            trace_out: args.flag("trace-out").map(String::from),
+            tolerance_gib: args.get_f64("tolerance-gib", DEFAULT_TOLERANCE_GIB)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,5 +211,35 @@ mod tests {
         let v: Vec<&str> = split_list(" a, b ,,c ").collect();
         assert_eq!(v, vec!["a", "b", "c"]);
         assert_eq!(split_list("").count(), 0);
+    }
+
+    #[test]
+    fn common_args_defaults_and_overrides() {
+        let a = args("serve");
+        let c = CommonArgs::parse(&a, 0xC0FFEE).unwrap();
+        assert_eq!(c.jobs, default_jobs());
+        assert_eq!(c.seed, 0xC0FFEE);
+        assert_eq!(c.jsonl, None);
+        assert_eq!(c.tolerance_gib, DEFAULT_TOLERANCE_GIB);
+
+        let a = args(
+            "sweep --jobs 3 --seed 9 --jsonl out.jsonl --json out.json \
+             --trace-out t.json --tolerance-gib 1.5",
+        );
+        let c = CommonArgs::parse(&a, 0x5EED).unwrap();
+        assert_eq!(c.jobs, 3);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.jsonl.as_deref(), Some("out.jsonl"));
+        assert_eq!(c.json.as_deref(), Some("out.json"));
+        assert_eq!(c.trace_out.as_deref(), Some("t.json"));
+        assert_eq!(c.tolerance_gib, 1.5);
+    }
+
+    #[test]
+    fn common_args_reports_bad_values() {
+        let a = args("sweep --jobs abc");
+        assert!(CommonArgs::parse(&a, 0).is_err());
+        let a = args("sweep --tolerance-gib wide");
+        assert!(CommonArgs::parse(&a, 0).is_err());
     }
 }

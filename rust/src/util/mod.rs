@@ -6,4 +6,5 @@ pub mod fasthash;
 pub mod cli;
 pub mod json;
 pub mod prng;
+pub mod schema;
 pub mod stats;

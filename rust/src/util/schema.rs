@@ -1,0 +1,78 @@
+//! Versioned JSONL artifact headers. Every multi-line artifact the CLI
+//! writes (sweep / planner / cluster / serve cells, telemetry footers)
+//! starts with a header line `{"schema":"rlhf-mem-<kind>-v1"}` mirroring
+//! `SURROGATE.json`'s scheme, so readers can refuse files written by an
+//! incompatible binary instead of mis-parsing them. See DESIGN.md §18.
+
+use super::json::{parse, Json};
+
+/// Current artifact-format version, shared by every JSONL kind. Bump when
+/// a line format changes incompatibly; readers reject other versions.
+pub const VERSION: u32 = 1;
+
+/// The full schema tag for an artifact kind, e.g. `rlhf-mem-sweep-v1`.
+pub fn tag(kind: &str) -> String {
+    format!("rlhf-mem-{kind}-v{VERSION}")
+}
+
+/// The header line (no trailing newline) that must open a `kind` artifact.
+pub fn header_line(kind: &str) -> String {
+    Json::obj(vec![("schema", Json::str(tag(kind)))]).to_string()
+}
+
+/// Validate that `text` (a whole JSONL artifact) opens with the versioned
+/// header for `kind`. Returns an actionable error on any mismatch: missing
+/// header, wrong kind, or wrong version.
+pub fn check_jsonl(kind: &str, text: &str) -> Result<(), String> {
+    let want = tag(kind);
+    let first = text
+        .lines()
+        .next()
+        .ok_or_else(|| format!("empty artifact: expected a '{want}' schema header line"))?;
+    let parsed = parse(first)
+        .map_err(|e| format!("artifact header is not JSON ({e}): {first}"))?;
+    match parsed.get("schema").and_then(Json::as_str) {
+        None => Err(format!(
+            "artifact has no schema header (first line: {first}); \
+             it predates the versioned-artifact scheme — regenerate it \
+             with this binary (expected '{want}')"
+        )),
+        Some(got) if got == want => Ok(()),
+        Some(got) => Err(format!(
+            "artifact schema '{got}' does not match expected '{want}'; \
+             regenerate the artifact with this binary or use a matching \
+             rlhf-mem version"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_round_trips_through_check() {
+        let text = format!("{}\n{{\"cell\":1}}\n", header_line("sweep"));
+        assert!(check_jsonl("sweep", &text).is_ok());
+    }
+
+    #[test]
+    fn wrong_kind_and_version_are_rejected_with_context() {
+        let text = format!("{}\n", header_line("sweep"));
+        let err = check_jsonl("serve", &text).unwrap_err();
+        assert!(err.contains("rlhf-mem-sweep-v1"), "{err}");
+        assert!(err.contains("rlhf-mem-serve-v1"), "{err}");
+
+        let future = "{\"schema\":\"rlhf-mem-sweep-v9\"}\n";
+        let err = check_jsonl("sweep", future).unwrap_err();
+        assert!(err.contains("rlhf-mem-sweep-v9"), "{err}");
+    }
+
+    #[test]
+    fn missing_header_and_empty_file_are_actionable() {
+        let err = check_jsonl("sweep", "{\"cell\":1}\n").unwrap_err();
+        assert!(err.contains("no schema header"), "{err}");
+        let err = check_jsonl("sweep", "").unwrap_err();
+        assert!(err.contains("empty artifact"), "{err}");
+    }
+}

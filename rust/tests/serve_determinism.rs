@@ -1,0 +1,127 @@
+//! Serve-subsystem gates (DESIGN.md §18): the grid runner and the serve
+//! planner must produce byte-identical artifacts for any `--jobs`, the
+//! paged discipline must never fragment worse than best-fit reservation
+//! under concurrency pressure, seeded streams must replay exactly, and
+//! artifact readers must reject foreign or missing schema headers.
+
+use rlhf_mem::planner::Budget;
+use rlhf_mem::rlhf::GpuSpec;
+use rlhf_mem::serve::{plan_serve, run_cells, ServeSpec};
+use rlhf_mem::util::schema;
+
+/// A small but non-trivial grid: (2 page sizes + best-fit) × 2 ceilings.
+fn spec() -> ServeSpec {
+    ServeSpec {
+        requests: 32,
+        arrival_rps: 40.0,
+        prompt_len: 128,
+        prompt_jitter: 32,
+        max_new: 64,
+        response_jitter: 16,
+        page_tokens: vec![16, 32],
+        max_concurrency: vec![4, 8],
+        ..ServeSpec::default()
+    }
+}
+
+#[test]
+fn grid_artifact_is_jobs_invariant_and_versioned() {
+    let cells = spec().cells("rtx3090", GpuSpec::rtx3090()).unwrap();
+    assert_eq!(cells.len(), 6, "(paged×2 + best-fit) × 2 concurrencies");
+    let a = run_cells(&cells, 1);
+    let b = run_cells(&cells, 4);
+    assert_eq!(
+        a.jsonl_with_telemetry(),
+        b.jsonl_with_telemetry(),
+        "serve artifact must not depend on worker count"
+    );
+    schema::check_jsonl("serve", &a.jsonl()).unwrap();
+    assert_eq!(a.jsonl().lines().count(), cells.len() + 1);
+}
+
+#[test]
+fn planner_artifact_is_jobs_invariant_and_recommends() {
+    let mut budget = Budget::rtx3090_table1();
+    budget.serve = Some(spec());
+    let a = plan_serve(&budget, 1).unwrap();
+    let b = plan_serve(&budget, 4).unwrap();
+    assert_eq!(a.jsonl_with_telemetry(), b.jsonl_with_telemetry());
+    schema::check_jsonl("serve", &a.jsonl()).unwrap();
+    // 8 GiB of KV against ≤ 8 concurrent short requests: nothing drops,
+    // so the planner must land on a recommendation.
+    let rec = a.recommendation().expect("grid has a feasible cell");
+    assert_eq!(rec.outcome.failed, 0);
+}
+
+#[test]
+fn paged_never_fragments_worse_than_best_fit_under_pressure() {
+    // Pile up requests behind a high concurrency ceiling with large
+    // response budgets: best-fit reserves prompt+max_new per admission
+    // while pages waste at most page_tokens-1 slots per active request.
+    let spec = ServeSpec {
+        requests: 64,
+        arrival_rps: 200.0,
+        prompt_len: 128,
+        prompt_jitter: 32,
+        max_new: 128,
+        response_jitter: 16,
+        page_tokens: vec![8],
+        max_concurrency: vec![16],
+        ..ServeSpec::default()
+    };
+    let cells = spec.cells("rtx3090", GpuSpec::rtx3090()).unwrap();
+    let report = run_cells(&cells, 2);
+    let frag_of = |name: &str| -> u64 {
+        report
+            .cells
+            .iter()
+            .filter(|c| c.discipline == name)
+            .map(rlhf_mem::serve::ServeCellResult::kv_frag_bytes)
+            .max()
+            .expect("discipline present in grid")
+    };
+    let (paged, best_fit) = (frag_of("paged"), frag_of("best-fit"));
+    assert!(
+        paged <= best_fit,
+        "paged frag {paged} B must not exceed best-fit frag {best_fit} B"
+    );
+    assert!(best_fit > 0, "worst-case reservation must strand KV at peak");
+}
+
+#[test]
+fn seeded_stream_replays_byte_identically_and_seed_matters() {
+    let cells = spec().cells("rtx3090", GpuSpec::rtx3090()).unwrap();
+    let a = run_cells(&cells, 2);
+    let b = run_cells(&cells, 2);
+    assert_eq!(a.jsonl(), b.jsonl(), "same seed must replay exactly");
+
+    let reseeded = ServeSpec { seed: 1, ..spec() };
+    let cells2 = reseeded.cells("rtx3090", GpuSpec::rtx3090()).unwrap();
+    let c = run_cells(&cells2, 2);
+    assert_ne!(
+        a.jsonl(),
+        c.jsonl(),
+        "a different stream seed must change the artifact"
+    );
+}
+
+#[test]
+fn serve_reader_rejects_foreign_and_missing_schemas() {
+    // A training-sweep artifact handed to the serve reader fails loud,
+    // naming both the found and the expected tag.
+    let sweep = format!("{}\n{{\"cell\":0}}\n", schema::header_line("sweep"));
+    let err = schema::check_jsonl("serve", &sweep).unwrap_err();
+    assert!(err.contains("rlhf-mem-sweep-v1"), "{err}");
+    assert!(err.contains("rlhf-mem-serve-v1"), "{err}");
+
+    // Headerless (pre-versioning) and empty artifacts are both actionable.
+    let err = schema::check_jsonl("serve", "{\"cell\":0}\n").unwrap_err();
+    assert!(err.contains("no schema header"), "{err}");
+    let err = schema::check_jsonl("serve", "").unwrap_err();
+    assert!(err.contains("empty artifact"), "{err}");
+
+    // A future format version is rejected rather than mis-parsed.
+    let future = "{\"schema\":\"rlhf-mem-serve-v9\"}\n";
+    let err = schema::check_jsonl("serve", future).unwrap_err();
+    assert!(err.contains("rlhf-mem-serve-v9"), "{err}");
+}

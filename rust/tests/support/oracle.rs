@@ -61,7 +61,9 @@ impl OraclePool {
     }
 
     pub fn best_fit_bounded(&self, want: u64, max: u64) -> Option<(u64, BlockId)> {
-        self.best_fit(want).filter(|(sz, _)| *sz <= max)
+        // Exclusive bound: a block of exactly max_split_size is oversized
+        // (PyTorch's `size >= max_split_size` test) and must be refused.
+        self.best_fit(want).filter(|(sz, _)| *sz < max)
     }
 
     pub fn len(&self) -> usize {

@@ -89,8 +89,13 @@ fn sharing_axis_grid_is_jobs_deterministic() {
         pooled.jsonl(),
         "the sharing axis must not break --jobs determinism"
     );
-    // The JSONL carries the placement for every cell.
-    assert!(serial.jsonl().lines().all(|l| l.contains("\"sharing\":")));
+    // The JSONL carries the placement for every cell (line 0 is the
+    // schema header).
+    assert!(serial
+        .jsonl()
+        .lines()
+        .skip(1)
+        .all(|l| l.contains("\"sharing\":")));
 }
 
 #[test]
@@ -108,6 +113,11 @@ fn algo_axis_grid_is_jobs_deterministic() {
         pooled.jsonl(),
         "the algo axis must not break --jobs determinism"
     );
-    // The JSONL carries the algo for every cell.
-    assert!(serial.jsonl().lines().all(|l| l.contains("\"algo\":")));
+    // The JSONL carries the algo for every cell (line 0 is the schema
+    // header).
+    assert!(serial
+        .jsonl()
+        .lines()
+        .skip(1)
+        .all(|l| l.contains("\"algo\":")));
 }
